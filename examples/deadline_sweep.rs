@@ -1,0 +1,68 @@
+//! Deadline sweep: miss rates and slot allocations as completion-time
+//! goals tighten — exercising the Resource Predictor (Eq. 10) end to end.
+//!
+//!     cargo run --release --offline --example deadline_sweep
+//!
+//! Pass --xla to drive the sweep through the PJRT artifacts instead of
+//! the native predictor.
+
+use vcsched::config::SimConfig;
+use vcsched::coordinator;
+use vcsched::predictor::{demand_from_spec, NativePredictor, Predictor};
+use vcsched::runtime::XlaPredictor;
+use vcsched::scheduler::SchedulerKind;
+use vcsched::util::args::Args;
+use vcsched::util::benchkit::Table;
+use vcsched::workloads::trace::JobTrace;
+use vcsched::workloads::{JobSpec, JobType};
+
+fn main() {
+    vcsched::util::logger::init();
+    let args = Args::parse();
+    let cfg = SimConfig::paper();
+
+    let mut predictor: Box<dyn Predictor> = if args.flag("xla") {
+        println!("predictor backend: XLA artifacts (PJRT)");
+        Box::new(XlaPredictor::load_default().expect("run `make artifacts`"))
+    } else {
+        Box::new(NativePredictor::new())
+    };
+
+    println!("== Eq. 10 slot demand vs deadline (sort, 4 GB) ==\n");
+    let mut t = Table::new(&["deadline", "map slots", "reduce slots", "feasible"]);
+    for d in [120.0f64, 180.0, 240.0, 360.0, 600.0, 1200.0] {
+        let spec = JobSpec::new(JobType::Sort, 4096.0).with_deadline(d);
+        let s = predictor.solve_slots(&[demand_from_spec(&cfg, &spec)])[0];
+        t.row(&[
+            format!("{d:.0}s"),
+            s.map_slots.to_string(),
+            s.reduce_slots.to_string(),
+            (!s.infeasible).to_string(),
+        ]);
+    }
+    t.print();
+    println!("\n(the tighter the goal, the more slots Eq. 10 demands; past the\n shuffle bound C<=0 the deadline is infeasible at any allocation)");
+
+    println!("\n== miss rate vs deadline tightness (25-job mix) ==\n");
+    let mut t = Table::new(&["deadline factor", "scheduler", "misses", "mean_ct", "locality"]);
+    for factor in [1.1f64, 1.5, 2.0, 3.0, 5.0] {
+        let trace = JobTrace::poisson(&cfg, 25, 8.0, factor..(factor + 0.01), 13);
+        for kind in [SchedulerKind::Edf, SchedulerKind::DeadlineVc] {
+            let r = coordinator::run_simulation(&cfg, kind, &trace);
+            t.row(&[
+                format!("{factor:.1}x ideal"),
+                kind.name().to_string(),
+                format!("{:.0}%", r.miss_rate() * 100.0),
+                format!("{:.1}s", r.mean_completion_s()),
+                format!("{:.1}%", r.locality_pct()),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nReading: EDF ordering alone (edf) cannot hold tight deadlines under \
+         load;\nthe proposed scheduler's Eq. 10 allocations + locality routing \
+         cut both misses\nand completion times (ablation of the paper's two \
+         mechanisms)."
+    );
+}

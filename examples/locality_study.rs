@@ -1,0 +1,67 @@
+//! Locality study: how replication factor and cluster load shape data
+//! locality and completion time across schedulers — the design space the
+//! paper's intro motivates (locality vs deadline tension).
+//!
+//!     cargo run --release --offline --example locality_study
+
+use vcsched::config::SimConfig;
+use vcsched::coordinator;
+use vcsched::scheduler::SchedulerKind;
+use vcsched::util::benchkit::Table;
+use vcsched::workloads::trace::JobTrace;
+
+fn main() {
+    vcsched::util::logger::init();
+
+    println!("== locality vs replication factor (25-job backlogged mix) ==\n");
+    let mut t = Table::new(&[
+        "replication", "scheduler", "locality", "mean_ct", "thpt/h", "hotplugs",
+    ]);
+    for repl in [1usize, 2, 3, 5] {
+        let cfg = SimConfig {
+            replication: repl,
+            ..SimConfig::paper()
+        };
+        let trace = JobTrace::paper_mix(&cfg, 7);
+        for kind in [SchedulerKind::Fair, SchedulerKind::Delay, SchedulerKind::DeadlineVc] {
+            let r = coordinator::run_simulation(&cfg, kind, &trace);
+            t.row(&[
+                format!("{repl}x"),
+                kind.name().to_string(),
+                format!("{:.1}%", r.locality_pct()),
+                format!("{:.1}s", r.mean_completion_s()),
+                format!("{:.1}", r.throughput_jobs_per_hour()),
+                r.hotplugs.to_string(),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n== locality vs cluster load (arrival rate sweep, 3x repl) ==\n");
+    let cfg = SimConfig::paper();
+    let mut t = Table::new(&[
+        "mean gap", "scheduler", "locality", "mean_ct", "thpt/h", "misses",
+    ]);
+    for gap in [2.0f64, 5.0, 15.0, 40.0] {
+        let trace = JobTrace::poisson(&cfg, 25, gap, 1.6..3.0, 11);
+        for kind in [SchedulerKind::Fair, SchedulerKind::DeadlineVc] {
+            let r = coordinator::run_simulation(&cfg, kind, &trace);
+            t.row(&[
+                format!("{gap:.0}s"),
+                kind.name().to_string(),
+                format!("{:.1}%", r.locality_pct()),
+                format!("{:.1}s", r.mean_completion_s()),
+                format!("{:.1}", r.throughput_jobs_per_hour()),
+                format!("{:.0}%", r.miss_rate() * 100.0),
+            ]);
+        }
+    }
+    t.print();
+
+    println!(
+        "\nReading: the proposed scheduler holds ~100% locality regardless of \
+         replication,\nbecause non-local work is routed (or hot-plugged) to \
+         replica nodes — the gain over\nFair/Delay grows as replication drops \
+         and as load rises (paper §1, §5)."
+    );
+}

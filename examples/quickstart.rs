@@ -1,0 +1,63 @@
+//! Quickstart: build a small virtual cluster, submit three deadlined jobs,
+//! run the paper's scheduler, and inspect the results.
+//!
+//!     cargo run --release --offline --example quickstart
+
+use vcsched::config::SimConfig;
+use vcsched::coordinator;
+use vcsched::scheduler::SchedulerKind;
+use vcsched::workloads::trace::JobTrace;
+use vcsched::workloads::{JobSpec, JobType};
+
+fn main() {
+    vcsched::util::logger::init();
+
+    // An 8-node virtual cluster on 4 physical machines (2 VMs each,
+    // 2 map + 2 reduce slots per VM) — `SimConfig::paper()` gives the
+    // full 20-machine testbed.
+    let cfg = SimConfig::small();
+
+    // Three jobs with completion-time goals, arriving 10 s apart.
+    let trace = JobTrace::new(vec![
+        JobSpec::new(JobType::WordCount, 512.0).with_deadline(300.0),
+        JobSpec::new(JobType::Sort, 768.0).with_deadline(400.0).at(10.0),
+        JobSpec::new(JobType::Grep, 512.0).with_deadline(250.0).at(20.0),
+    ]);
+
+    // Run under the proposed deadline+reconfiguration scheduler.
+    let report = coordinator::run_simulation(&cfg, SchedulerKind::DeadlineVc, &trace);
+
+    println!("scheduler      : {}", report.scheduler);
+    println!("jobs completed : {}", report.completed_jobs());
+    println!("makespan       : {:.1}s", report.makespan_s);
+    println!("map locality   : {:.1}%", report.locality_pct());
+    println!("vCPU hot-plugs : {}", report.hotplugs);
+    println!();
+    for j in &report.jobs {
+        println!(
+            "  job {:>2} {:<14} {:>6.0} MB  completed in {:>6.1}s  \
+             deadline {}  local maps {}/{}",
+            j.id.0,
+            j.job_type.name(),
+            j.input_mb,
+            j.completion_s,
+            match j.met_deadline {
+                Some(true) => "MET   ",
+                Some(false) => "MISSED",
+                None => "  -   ",
+            },
+            j.local_maps,
+            j.maps,
+        );
+    }
+
+    // The same trace under the Fair baseline, for contrast.
+    let fair = coordinator::run_simulation(&cfg, SchedulerKind::Fair, &trace);
+    println!(
+        "\nfair baseline  : makespan {:.1}s, locality {:.1}%  (proposed: {:.1}s, {:.1}%)",
+        fair.makespan_s,
+        fair.locality_pct(),
+        report.makespan_s,
+        report.locality_pct()
+    );
+}

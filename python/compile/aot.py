@@ -1,0 +1,109 @@
+"""AOT lowering: JAX -> HLO **text** artifacts for the Rust PJRT runtime.
+
+HLO text (NOT lowered.compile()/.serialize()) is the interchange format: the
+xla crate links xla_extension 0.5.1 whose proto loader rejects jax >= 0.5's
+64-bit instruction ids; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md and gen_hlo.py.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+Emits:  slot_solver.hlo.txt, locality.hlo.txt, estimator.hlo.txt and a
+        manifest (artifacts/MANIFEST.txt) recording shapes + argument order.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_predict_slots():
+    j = model.job_spec()
+    return jax.jit(model.predict_slots).lower(j, j, j, j)
+
+
+def lower_score_placement():
+    f32 = jnp.float32
+    hd = jax.ShapeDtypeStruct((model.MAX_TASKS, model.MAX_NODES), f32)
+    nodes = jax.ShapeDtypeStruct((model.MAX_NODES,), f32)
+    tasks = jax.ShapeDtypeStruct((model.MAX_TASKS,), f32)
+    w = jax.ShapeDtypeStruct((2,), f32)
+    return jax.jit(model.score_placement).lower(hd, nodes, nodes, tasks, nodes, w)
+
+
+def lower_estimate_completion():
+    j = model.job_spec()
+    return jax.jit(model.estimate_completion).lower(*([j] * 11))
+
+
+def lower_estimate_completion_wave():
+    j = model.job_spec()
+    return jax.jit(model.estimate_completion_wave).lower(*([j] * 11))
+
+
+ARTIFACTS = {
+    "slot_solver.hlo.txt": (
+        lower_predict_slots,
+        "predict_slots(a,b,c,mask) f32[%d]x4 -> (n_m, n_r) f32[%d]x2"
+        % (model.MAX_JOBS, model.MAX_JOBS),
+    ),
+    "locality.hlo.txt": (
+        lower_score_placement,
+        "score_placement(has_data f32[%d,%d], rq f32[%d], aq f32[%d], "
+        "task_mask f32[%d], node_mask f32[%d], weights f32[2]) -> "
+        "(best_node i32[%d], best_score f32[%d])"
+        % (
+            model.MAX_TASKS, model.MAX_NODES, model.MAX_NODES, model.MAX_NODES,
+            model.MAX_TASKS, model.MAX_NODES, model.MAX_TASKS, model.MAX_TASKS,
+        ),
+    ),
+    "estimator.hlo.txt": (
+        lower_estimate_completion,
+        "estimate_completion(rem_map,rem_red,t_m,t_r,t_s,n_m,n_r,v_r,"
+        "deadline,elapsed,mask) f32[%d]x11 -> (eta, urgency) f32[%d]x2"
+        % (model.MAX_JOBS, model.MAX_JOBS),
+    ),
+    "wave_estimator.hlo.txt": (
+        lower_estimate_completion_wave,
+        "estimate_completion_wave(...) f32[%d]x11 -> (eta, urgency) f32[%d]x2"
+        % (model.MAX_JOBS, model.MAX_JOBS),
+    ),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = [
+        "# vcsched AOT artifacts — HLO text for xla crate (PJRT CPU)",
+        f"# MAX_JOBS={model.MAX_JOBS} MAX_TASKS={model.MAX_TASKS} "
+        f"MAX_NODES={model.MAX_NODES}",
+    ]
+    for name, (lower, sig) in ARTIFACTS.items():
+        text = to_hlo_text(lower())
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name}: {sig}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "MANIFEST.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

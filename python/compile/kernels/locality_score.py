@@ -1,0 +1,72 @@
+"""Pallas kernel: Algorithm 1 placement scoring.
+
+For each pending non-local map task t and each candidate node n the score is
+
+    score[t, n] = has_data[t,n] ? (w_rq * RQ[n] - w_aq * AQ[n]) : -inf
+
+with node/task padding masked to -inf. The scheduler reduces with an arg-max
+over nodes: a node holding the task's data whose physical machine has the
+deepest release queue wins (Alg. 1 lines 4-6); with all release queues empty
+the weights make the shallowest assign queue win (lines 7-9).
+
+The (tasks x nodes) matrix is tiled in (BLOCK_T, BLOCK_N) VMEM blocks — the
+same HBM<->VMEM schedule a threadblock-tiled GPU kernel would use, expressed
+with a BlockSpec grid. VPU elementwise; no MXU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -3.0e38  # plain float: a jnp scalar would be a captured constant
+
+BLOCK_T = 128  # tasks per tile (sublane-major)
+BLOCK_N = 128  # nodes per tile (lane-major)
+
+
+def _score_kernel(hd_ref, rq_ref, aq_ref, tmask_ref, nmask_ref, w_ref, out_ref):
+    hd = hd_ref[...]                     # [BLOCK_T, BLOCK_N]
+    rq = rq_ref[...]                     # [BLOCK_N]
+    aq = aq_ref[...]                     # [BLOCK_N]
+    tmask = tmask_ref[...]               # [BLOCK_T]
+    nmask = nmask_ref[...]               # [BLOCK_N]
+    w_rq = w_ref[0]
+    w_aq = w_ref[1]
+
+    base = w_rq * rq[None, :] - w_aq * aq[None, :]
+    score = jnp.where(hd > 0.5, base, NEG_INF)
+    score = jnp.where(nmask[None, :] > 0.5, score, NEG_INF)
+    score = jnp.where(tmask[:, None] > 0.5, score, NEG_INF)
+    out_ref[...] = score
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_n"))
+def locality_score(
+    has_data, rq, aq, task_mask, node_mask, weights,
+    *, block_t=BLOCK_T, block_n=BLOCK_N,
+):
+    """Score matrix for Alg. 1.
+
+    has_data f32[T,N]; rq, aq, node_mask f32[N]; task_mask f32[T];
+    weights f32[2] = (w_rq, w_aq). T % block_t == 0, N % block_n == 0.
+    """
+    t, n = has_data.shape
+    assert t % block_t == 0 and n % block_n == 0
+    grid = (t // block_t, n // block_n)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_t,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=True,
+    )(has_data, rq, aq, task_mask, node_mask, weights)

@@ -1,0 +1,121 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the Pallas kernels (and transitively the AOT
+artifacts executed from Rust) are validated against. Everything here follows
+the paper's equations directly:
+
+  Eq. 1   mean completed map-task time (aggregated in Rust; inputs here are
+          the already-aggregated A, B, C terms)
+  Eq. 7   completion-time bound:  u_m*t_m/n_m + v_r*t_r/n_r + u_m*v_r*t_s <= D
+  Eq. 10  Lagrange closed form:   n_m = sqrt(A)(sqrt(A)+sqrt(B))/C
+                                  n_r = sqrt(B)(sqrt(A)+sqrt(B))/C
+          with A = u_m*t_m, B = v_r*t_r, C = D - u_m*v_r*t_s
+
+Algorithm 1's node choice is expressed as a dense score matrix over
+(tasks x nodes); the scheduler takes the arg-max per task.
+"""
+
+import jax.numpy as jnp
+
+# Sentinel for "no feasible node" in the placement scores.
+NEG_INF = jnp.float32(-3.0e38)
+
+
+def slot_solver_ref(a, b, c, mask):
+    """Batched Eq. 10.
+
+    a, b, c : f32[jobs] -- the A, B, C terms per job.
+    mask    : f32[jobs] -- 1.0 for live entries, 0.0 for padding.
+
+    Returns (n_m, n_r) as f32[jobs], each the *minimum whole* number of
+    slots (ceil of the closed form), clamped to >= 1 for live jobs whose
+    deadline is still feasible (c > 0); infeasible or padded entries get 0.
+    """
+    a = jnp.maximum(a, 0.0)
+    b = jnp.maximum(b, 0.0)
+    feasible = (c > 0.0) & (mask > 0.5)
+    safe_c = jnp.where(feasible, c, 1.0)
+    ra, rb = jnp.sqrt(a), jnp.sqrt(b)
+    s = ra + rb
+    n_m = jnp.ceil(ra * s / safe_c)
+    n_r = jnp.ceil(rb * s / safe_c)
+    # A job with zero map work needs 0 map slots; otherwise >= 1.
+    n_m = jnp.where(a > 0.0, jnp.maximum(n_m, 1.0), 0.0)
+    n_r = jnp.where(b > 0.0, jnp.maximum(n_r, 1.0), 0.0)
+    zero = jnp.zeros_like(n_m)
+    return (
+        jnp.where(feasible, n_m, zero),
+        jnp.where(feasible, n_r, zero),
+    )
+
+
+def locality_score_ref(has_data, rq, aq, task_mask, node_mask, w_rq, w_aq):
+    """Algorithm 1 node scoring.
+
+    has_data  : f32[tasks, nodes] -- 1.0 where the task's input block is
+                resident on the node.
+    rq, aq    : f32[nodes] -- release-queue / assign-queue depths of each
+                node's physical machine.
+    task_mask : f32[tasks], node_mask : f32[nodes] -- padding masks.
+    w_rq,w_aq : python floats -- queue weights (paper: prefer nodes whose PM
+                has a deep release queue, Alg. 1 line 4; fall back to the
+                shallowest assign queue, line 8).
+
+    Returns f32[tasks, nodes] scores; masked or data-less entries are NEG_INF
+    so an arg-max over nodes implements Alg. 1 lines 4-9.
+    """
+    base = w_rq * rq[None, :] - w_aq * aq[None, :]
+    score = jnp.where(has_data > 0.5, base, NEG_INF)
+    score = jnp.where(node_mask[None, :] > 0.5, score, NEG_INF)
+    score = jnp.where(task_mask[:, None] > 0.5, score, NEG_INF)
+    return score
+
+
+def completion_estimator_ref(
+    rem_map, rem_red, t_m, t_r, t_s, n_m, n_r, v_r, deadline, elapsed, mask
+):
+    """Batched Eq. 7 with progress.
+
+    rem_map, rem_red : f32[jobs] -- tasks not yet finished per phase.
+    t_m, t_r, t_s    : f32[jobs] -- per-task times (Eq. 1 estimates).
+    n_m, n_r         : f32[jobs] -- slots currently allocated.
+    v_r              : f32[jobs] -- total reduce tasks (for the shuffle term).
+    deadline, elapsed: f32[jobs] -- goal D and time since submission.
+    mask             : f32[jobs].
+
+    Returns (eta, urgency): estimated remaining time until completion, and
+    slack = D - elapsed - eta (negative => projected miss). Padded entries
+    yield eta = 0 and a huge slack so they sort last under EDF.
+    """
+    safe_nm = jnp.maximum(n_m, 1.0)
+    safe_nr = jnp.maximum(n_r, 1.0)
+    map_time = rem_map * t_m / safe_nm
+    red_time = rem_red * t_r / safe_nr
+    shuffle = rem_map * v_r * t_s
+    eta = map_time + red_time + shuffle
+    urgency = deadline - elapsed - eta
+    live = mask > 0.5
+    return (
+        jnp.where(live, eta, 0.0),
+        jnp.where(live, urgency, 3.0e38),
+    )
+
+
+def wave_estimator_ref(
+    rem_map, rem_red, t_m, t_r, t_s, n_m, n_r, v_r, deadline, elapsed, mask
+):
+    """Wave-based variant of Eq. 7: discrete waves, ceil(rem/n)*t per
+    phase, instead of the fluid rem*t/n. Always >= the fluid estimate."""
+    safe_nm = jnp.maximum(n_m, 1.0)
+    safe_nr = jnp.maximum(n_r, 1.0)
+    eta = (
+        jnp.ceil(rem_map / safe_nm) * t_m
+        + jnp.ceil(rem_red / safe_nr) * t_r
+        + rem_map * v_r * t_s
+    )
+    urgency = deadline - elapsed - eta
+    live = mask > 0.5
+    return (
+        jnp.where(live, eta, 0.0),
+        jnp.where(live, urgency, 3.0e38),
+    )

@@ -1,0 +1,62 @@
+"""Pallas kernel: batched Eq. 10 slot solver.
+
+Given per-job terms A = u_m*t_m, B = v_r*t_r, C = D - u_m*v_r*t_s, compute
+the Lagrange-minimal map/reduce slot counts
+
+    n_m = ceil( sqrt(A) (sqrt(A)+sqrt(B)) / C )
+    n_r = ceil( sqrt(B) (sqrt(A)+sqrt(B)) / C )
+
+clamped to >= 1 for live feasible jobs and 0 for padding / infeasible
+(C <= 0) entries. Pure VPU elementwise work; blocked over the job axis in
+lane-multiple tiles so the batch maps onto (8, 128)-shaped vregs on real TPU.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, and the AOT artifact must run inside the Rust coordinator.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Job-axis tile. 128 = one TPU lane row; the padded batch is a multiple.
+BLOCK_JOBS = 128
+
+
+def _slot_kernel(a_ref, b_ref, c_ref, mask_ref, nm_ref, nr_ref):
+    a = jnp.maximum(a_ref[...], 0.0)
+    b = jnp.maximum(b_ref[...], 0.0)
+    c = c_ref[...]
+    mask = mask_ref[...]
+
+    feasible = (c > 0.0) & (mask > 0.5)
+    safe_c = jnp.where(feasible, c, 1.0)
+    ra = jnp.sqrt(a)
+    rb = jnp.sqrt(b)
+    s = ra + rb
+    n_m = jnp.ceil(ra * s / safe_c)
+    n_r = jnp.ceil(rb * s / safe_c)
+    n_m = jnp.where(a > 0.0, jnp.maximum(n_m, 1.0), 0.0)
+    n_r = jnp.where(b > 0.0, jnp.maximum(n_r, 1.0), 0.0)
+    zero = jnp.zeros_like(n_m)
+    nm_ref[...] = jnp.where(feasible, n_m, zero)
+    nr_ref[...] = jnp.where(feasible, n_r, zero)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def slot_solver(a, b, c, mask, *, block=BLOCK_JOBS):
+    """Batched Eq. 10. All inputs f32[jobs]; jobs % block == 0 required."""
+    (jobs,) = a.shape
+    assert jobs % block == 0, f"jobs={jobs} not a multiple of block={block}"
+    grid = (jobs // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out_shape = jax.ShapeDtypeStruct((jobs,), jnp.float32)
+    return pl.pallas_call(
+        _slot_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[out_shape, out_shape],
+        interpret=True,
+    )(a, b, c, mask)

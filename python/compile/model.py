@@ -1,0 +1,79 @@
+"""L2: the Resource Predictor's compute graph, composed from Pallas kernels.
+
+Three exported entry points, each a single fused XLA module with fixed padded
+shapes so the Rust coordinator never triggers a retrace/recompile:
+
+  predict_slots        -- Eq. 10 batched over MAX_JOBS
+  score_placement      -- Alg. 1 scoring over MAX_TASKS x MAX_NODES,
+                          reduced to (best_node, best_score) per task
+  estimate_completion  -- Eq. 7 + slack over MAX_JOBS
+
+Padding contract (shared with rust/src/runtime/):
+  * job/task/node axes are padded to the MAX_* constants below;
+  * mask vectors carry 1.0 for live entries, 0.0 for padding;
+  * padded outputs are 0 (slots/eta), 3e38 (slack) or -1 (best_node).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.completion_estimator import completion_estimator
+from .kernels.locality_score import locality_score
+from .kernels.slot_solver import slot_solver
+from .kernels.wave_estimator import wave_estimator
+
+# Fixed padded shapes — must match rust/src/runtime/predictor.rs.
+MAX_JOBS = 128
+MAX_TASKS = 256
+MAX_NODES = 128
+
+
+def predict_slots(a, b, c, mask):
+    """Eq. 10 over a padded job batch. f32[MAX_JOBS] each -> (n_m, n_r)."""
+    n_m, n_r = slot_solver(a, b, c, mask)
+    return n_m, n_r
+
+
+def score_placement(has_data, rq, aq, task_mask, node_mask, weights):
+    """Alg. 1: per-task best node.
+
+    has_data f32[MAX_TASKS, MAX_NODES], rq/aq/node_mask f32[MAX_NODES],
+    task_mask f32[MAX_TASKS], weights f32[2].
+
+    Returns (best_node i32[MAX_TASKS], best_score f32[MAX_TASKS]); tasks with
+    no feasible node (or padding) get best_node = -1.
+    """
+    scores = locality_score(has_data, rq, aq, task_mask, node_mask, weights)
+    best = jnp.argmax(scores, axis=1).astype(jnp.int32)
+    best_score = jnp.max(scores, axis=1)
+    feasible = best_score > jnp.float32(-1.0e38)
+    best = jnp.where(feasible, best, jnp.int32(-1))
+    return best, best_score
+
+
+def estimate_completion(
+    rem_map, rem_red, t_m, t_r, t_s, n_m, n_r, v_r, deadline, elapsed, mask
+):
+    """Eq. 7 + slack over a padded job batch. Returns (eta, urgency)."""
+    eta, urgency = completion_estimator(
+        rem_map, rem_red, t_m, t_r, t_s, n_m, n_r, v_r, deadline, elapsed, mask
+    )
+    return eta, urgency
+
+
+def estimate_completion_wave(
+    rem_map, rem_red, t_m, t_r, t_s, n_m, n_r, v_r, deadline, elapsed, mask
+):
+    """Wave-based Eq. 7 variant (discrete task waves). See
+    kernels/wave_estimator.py; ablated against the fluid estimator in
+    EXPERIMENTS.md §Ablations."""
+    eta, urgency = wave_estimator(
+        rem_map, rem_red, t_m, t_r, t_s, n_m, n_r, v_r, deadline, elapsed, mask
+    )
+    return eta, urgency
+
+
+def job_spec(n=MAX_JOBS):
+    """ShapeDtypeStruct for one f32 job-axis input."""
+    import jax
+
+    return jax.ShapeDtypeStruct((n,), jnp.float32)

@@ -1,0 +1,62 @@
+"""AOT lowering sanity: each entry point lowers to parseable HLO text with
+the expected parameter/result shapes, and the lowered module reproduces the
+eager outputs when recompiled locally."""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_all_artifacts_lower():
+    for name, (lower, _sig) in aot.ARTIFACTS.items():
+        text = aot.to_hlo_text(lower())
+        assert "ENTRY" in text, name
+        assert "parameter(0)" in text, name
+
+
+def test_slot_solver_hlo_shapes():
+    text = aot.to_hlo_text(aot.lower_predict_slots())
+    assert f"f32[{model.MAX_JOBS}]" in text
+    # tuple of two f32[J] results
+    assert re.search(
+        r"ROOT .*tuple\(.*f32\[%d\].*f32\[%d\]" % (model.MAX_JOBS, model.MAX_JOBS),
+        text,
+    ) or "tuple" in text
+
+
+def test_locality_hlo_shapes():
+    text = aot.to_hlo_text(aot.lower_score_placement())
+    assert f"f32[{model.MAX_TASKS},{model.MAX_NODES}]" in text
+    assert f"s32[{model.MAX_TASKS}]" in text
+
+
+def test_estimator_hlo_shapes():
+    text = aot.to_hlo_text(aot.lower_estimate_completion())
+    assert f"f32[{model.MAX_JOBS}]" in text
+
+
+def test_lowered_matches_eager_slot_solver():
+    """Compile the lowered StableHLO locally and compare with eager."""
+    j = model.job_spec()
+    lowered = jax.jit(model.predict_slots).lower(j, j, j, j)
+    compiled = lowered.compile()
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.uniform(0, 300, model.MAX_JOBS).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0, 300, model.MAX_JOBS).astype(np.float32))
+    c = jnp.asarray(rng.uniform(-5, 60, model.MAX_JOBS).astype(np.float32))
+    m = jnp.ones(model.MAX_JOBS, dtype=jnp.float32)
+    got = compiled(a, b, c, m)
+    want = model.predict_slots(a, b, c, m)
+    np.testing.assert_allclose(got[0], want[0])
+    np.testing.assert_allclose(got[1], want[1])
+
+
+def test_manifest_constants_match_model():
+    # The rust runtime hard-codes these; keep them honest.
+    assert model.MAX_JOBS == 128
+    assert model.MAX_TASKS == 256
+    assert model.MAX_NODES == 128

@@ -1,0 +1,107 @@
+"""completion_estimator Pallas kernel vs oracle + Eq. 7 semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels.completion_estimator import completion_estimator
+from compile.kernels.ref import completion_estimator_ref
+
+J = model.MAX_JOBS
+NAMES = (
+    "rem_map rem_red t_m t_r t_s n_m n_r v_r deadline elapsed mask".split()
+)
+
+
+def mk(**kw):
+    out = []
+    for name in NAMES:
+        v = np.zeros(J, dtype=np.float32)
+        val = kw.get(name)
+        if val is not None:
+            v[: len(val)] = val
+        out.append(jnp.asarray(v))
+    return out
+
+
+def run_both(args):
+    got = completion_estimator(*args)
+    want = completion_estimator_ref(*args)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-3)
+    # urgency = D - elapsed - eta suffers catastrophic cancellation near 0;
+    # f32 kernel-vs-ref op ordering differs, so allow small absolute slack.
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-4, atol=0.25)
+    return got
+
+
+class TestEq7:
+    def test_fresh_job(self):
+        # 10 maps @2s on 2 slots + 4 reduces @2s on 2 slots + 10*4 copies @0.1
+        args = mk(rem_map=[10], rem_red=[4], t_m=[2], t_r=[2], t_s=[0.1],
+                  n_m=[2], n_r=[2], v_r=[4], deadline=[30], elapsed=[0],
+                  mask=[1])
+        eta, urg = run_both(args)
+        assert abs(float(eta[0]) - (10.0 + 4.0 + 4.0)) < 1e-4
+        assert abs(float(urg[0]) - (30.0 - 18.0)) < 1e-4
+
+    def test_finished_map_phase_drops_shuffle(self):
+        args = mk(rem_map=[0], rem_red=[4], t_m=[2], t_r=[2], t_s=[0.5],
+                  n_m=[2], n_r=[2], v_r=[4], deadline=[30], elapsed=[10],
+                  mask=[1])
+        eta, _ = run_both(args)
+        assert abs(float(eta[0]) - 4.0) < 1e-4
+
+    def test_projected_miss_is_negative(self):
+        args = mk(rem_map=[100], rem_red=[0], t_m=[5], t_r=[0], t_s=[0],
+                  n_m=[1], n_r=[1], v_r=[0], deadline=[60], elapsed=[0],
+                  mask=[1])
+        _, urg = run_both(args)
+        assert float(urg[0]) < 0
+
+    def test_zero_slots_clamped(self):
+        args = mk(rem_map=[10], rem_red=[2], t_m=[1], t_r=[1], t_s=[0],
+                  n_m=[0], n_r=[0], v_r=[2], deadline=[100], elapsed=[0],
+                  mask=[1])
+        eta, _ = run_both(args)  # must not produce inf/nan
+        assert np.isfinite(float(eta[0]))
+
+    def test_padding(self):
+        args = mk(mask=[1], rem_map=[1], t_m=[1], n_m=[1], deadline=[10])
+        eta, urg = run_both(args)
+        assert float(eta[1]) == 0.0
+        assert float(urg[1]) > 1e37
+
+
+class TestProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_matches_ref_random(self, seed):
+        rng = np.random.default_rng(seed)
+        args = [
+            jnp.asarray(rng.uniform(lo, hi, J).astype(np.float32))
+            for lo, hi in [
+                (0, 200), (0, 50), (0.1, 120), (0.1, 120), (0, 2),
+                (0, 30), (0, 30), (0, 50), (1, 5000), (0, 5000), (0, 1),
+            ]
+        ]
+        args[10] = jnp.asarray(
+            (rng.uniform(size=J) > 0.4).astype(np.float32))
+        run_both(args)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.floats(1, 100), st.floats(1, 100), st.floats(0.1, 60),
+        st.floats(0.1, 60), st.floats(1, 16), st.floats(1, 16),
+    )
+    def test_more_slots_never_slower(self, rm, rr, tm, tr, nm, nr):
+        base = mk(rem_map=[rm], rem_red=[rr], t_m=[tm], t_r=[tr], t_s=[0.01],
+                  n_m=[nm], n_r=[nr], v_r=[rr], deadline=[1e4], elapsed=[0],
+                  mask=[1])
+        more = mk(rem_map=[rm], rem_red=[rr], t_m=[tm], t_r=[tr], t_s=[0.01],
+                  n_m=[nm * 2], n_r=[nr * 2], v_r=[rr], deadline=[1e4],
+                  elapsed=[0], mask=[1])
+        eta1, _ = run_both(base)
+        eta2, _ = run_both(more)
+        assert float(eta2[0]) <= float(eta1[0]) + 1e-4

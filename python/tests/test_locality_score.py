@@ -1,0 +1,133 @@
+"""locality_score Pallas kernel vs oracle + Algorithm 1 semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels.locality_score import locality_score
+from compile.kernels.ref import locality_score_ref
+
+T, N = model.MAX_TASKS, model.MAX_NODES
+W = jnp.array([1.0, 0.5], dtype=jnp.float32)
+
+
+def mk(hd_rows, rq=None, aq=None, live_tasks=1, live_nodes=N):
+    hd = np.zeros((T, N), dtype=np.float32)
+    for t, cols in enumerate(hd_rows):
+        for n in cols:
+            hd[t, n] = 1.0
+    rq_v = np.zeros(N, dtype=np.float32)
+    aq_v = np.zeros(N, dtype=np.float32)
+    for k, v in (rq or {}).items():
+        rq_v[k] = v
+    for k, v in (aq or {}).items():
+        aq_v[k] = v
+    tm = np.zeros(T, dtype=np.float32)
+    tm[:live_tasks] = 1.0
+    nm = np.zeros(N, dtype=np.float32)
+    nm[:live_nodes] = 1.0
+    return (
+        jnp.asarray(hd), jnp.asarray(rq_v), jnp.asarray(aq_v),
+        jnp.asarray(tm), jnp.asarray(nm),
+    )
+
+
+def run_both(hd, rq, aq, tm, nm, w=W):
+    got = locality_score(hd, rq, aq, tm, nm, w)
+    want = locality_score_ref(hd, rq, aq, tm, nm, float(w[0]), float(w[1]))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4
+    )
+    return got
+
+
+class TestAlgorithm1:
+    def test_deepest_release_queue_wins(self):
+        # Alg. 1 line 4: replicas on nodes 3 and 9; node 9's PM has deeper RQ.
+        args = mk([(3, 9)], rq={3: 1.0, 9: 4.0})
+        s = run_both(*args)
+        assert int(jnp.argmax(s[0])) == 9
+
+    def test_fallback_shallowest_assign_queue(self):
+        # Alg. 1 lines 7-9: all RQs empty -> prefer the shallowest AQ.
+        args = mk([(3, 9)], aq={3: 1.0, 9: 4.0})
+        s = run_both(*args)
+        assert int(jnp.argmax(s[0])) == 3
+
+    def test_non_replica_nodes_excluded(self):
+        args = mk([(5,)], rq={0: 100.0})
+        s = run_both(*args)
+        # node 0 has huge RQ but no data: must not be chosen.
+        assert int(jnp.argmax(s[0])) == 5
+
+    def test_masked_node_excluded(self):
+        args = mk([(5, 90)], rq={90: 10.0}, live_nodes=64)
+        s = run_both(*args)
+        assert int(jnp.argmax(s[0])) == 5
+
+    def test_masked_task_all_neg_inf(self):
+        args = mk([(5,)], live_tasks=1)
+        s = run_both(*args)
+        assert float(jnp.max(s[1])) < -1e38
+
+    def test_no_replica_anywhere(self):
+        args = mk([()])
+        s = run_both(*args)
+        assert float(jnp.max(s[0])) < -1e38
+
+
+class TestModelArgmax:
+    def test_best_node_matches_score_argmax(self):
+        hd, rq, aq, tm, nm = mk([(2, 7), (7,)], rq={2: 1.0, 7: 5.0},
+                                live_tasks=2)
+        bn, bs = model.score_placement(hd, rq, aq, tm, nm, W)
+        assert int(bn[0]) == 7 and int(bn[1]) == 7
+        assert int(bn[2]) == -1  # masked task
+
+    def test_infeasible_task_gets_minus_one(self):
+        hd, rq, aq, tm, nm = mk([()], live_tasks=1)
+        bn, _ = model.score_placement(hd, rq, aq, tm, nm, W)
+        assert int(bn[0]) == -1
+
+
+class TestProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def test_matches_ref_random(self, data):
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+        hd = (rng.uniform(size=(T, N)) > 0.8).astype(np.float32)
+        rq = rng.uniform(0, 8, N).astype(np.float32)
+        aq = rng.uniform(0, 8, N).astype(np.float32)
+        tm = (rng.uniform(size=T) > 0.3).astype(np.float32)
+        nm = (rng.uniform(size=N) > 0.2).astype(np.float32)
+        w = np.array(
+            [data.draw(st.floats(0.1, 4.0)), data.draw(st.floats(0.1, 4.0))],
+            dtype=np.float32,
+        )
+        run_both(
+            jnp.asarray(hd), jnp.asarray(rq), jnp.asarray(aq),
+            jnp.asarray(tm), jnp.asarray(nm), jnp.asarray(w),
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_chosen_node_always_has_data(self, seed):
+        """Invariant: score_placement never picks a node without the block."""
+        rng = np.random.default_rng(seed)
+        hd = (rng.uniform(size=(T, N)) > 0.9).astype(np.float32)
+        rq = rng.uniform(0, 8, N).astype(np.float32)
+        aq = rng.uniform(0, 8, N).astype(np.float32)
+        tm = np.ones(T, dtype=np.float32)
+        nm = np.ones(N, dtype=np.float32)
+        bn, _ = model.score_placement(
+            jnp.asarray(hd), jnp.asarray(rq), jnp.asarray(aq),
+            jnp.asarray(tm), jnp.asarray(nm), W,
+        )
+        bn = np.asarray(bn)
+        for t in range(T):
+            if bn[t] >= 0:
+                assert hd[t, bn[t]] == 1.0
+            else:
+                assert hd[t].sum() == 0.0

@@ -1,0 +1,67 @@
+"""Model-level (L2) tests: entry-point shapes, dtypes and composition."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def test_constants():
+    assert model.MAX_JOBS % 128 == 0
+    assert model.MAX_TASKS % 128 == 0
+    assert model.MAX_NODES % 128 == 0
+
+
+def test_predict_slots_shapes_and_dtypes():
+    j = jnp.zeros(model.MAX_JOBS, jnp.float32)
+    nm, nr = model.predict_slots(j, j, j, j)
+    assert nm.shape == (model.MAX_JOBS,)
+    assert nm.dtype == jnp.float32
+    assert nr.shape == (model.MAX_JOBS,)
+
+
+def test_score_placement_shapes_and_dtypes():
+    hd = jnp.zeros((model.MAX_TASKS, model.MAX_NODES), jnp.float32)
+    n = jnp.zeros(model.MAX_NODES, jnp.float32)
+    t = jnp.zeros(model.MAX_TASKS, jnp.float32)
+    w = jnp.zeros(2, jnp.float32)
+    best, score = model.score_placement(hd, n, n, t, n, w)
+    assert best.shape == (model.MAX_TASKS,)
+    assert best.dtype == jnp.int32
+    assert score.dtype == jnp.float32
+    # fully masked -> everything infeasible
+    assert np.all(np.asarray(best) == -1)
+
+
+def test_estimators_shapes():
+    j = jnp.ones(model.MAX_JOBS, jnp.float32)
+    args = [j] * 11
+    eta_f, urg_f = model.estimate_completion(*args)
+    eta_w, urg_w = model.estimate_completion_wave(*args)
+    for x in (eta_f, urg_f, eta_w, urg_w):
+        assert x.shape == (model.MAX_JOBS,)
+        assert x.dtype == jnp.float32
+    # wave >= fluid pointwise
+    assert np.all(np.asarray(eta_w) >= np.asarray(eta_f) - 1e-3)
+
+
+def test_entry_points_jit_without_retrace():
+    """Fixed shapes => a second call must hit the jit cache."""
+    f = jax.jit(model.predict_slots)
+    j = jnp.zeros(model.MAX_JOBS, jnp.float32)
+    f(j, j, j, j)
+    n0 = f._cache_size()
+    f(j + 1.0, j, j, j)
+    assert f._cache_size() == n0, "retrace on same shapes"
+
+
+def test_predict_slots_respects_mask_rows():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(1, 100, model.MAX_JOBS).astype(np.float32))
+    mask = np.zeros(model.MAX_JOBS, dtype=np.float32)
+    mask[:10] = 1.0
+    nm, _ = model.predict_slots(a, a, a, jnp.asarray(mask))
+    nm = np.asarray(nm)
+    assert np.all(nm[10:] == 0.0)
+    assert np.all(nm[:10] >= 1.0)

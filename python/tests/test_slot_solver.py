@@ -1,0 +1,154 @@
+"""slot_solver Pallas kernel vs pure-jnp oracle + paper Table 2 values."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ref import slot_solver_ref
+from compile.kernels.slot_solver import slot_solver
+
+BLOCK = 128
+
+
+def pad(x, n=BLOCK):
+    out = np.zeros(n, dtype=np.float32)
+    out[: len(x)] = x
+    return jnp.asarray(out)
+
+
+def run_both(a, b, c, mask):
+    got = slot_solver(a, b, c, mask)
+    want = slot_solver_ref(a, b, c, mask)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-6)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-6)
+    return got
+
+
+class TestBasics:
+    def test_simple_case(self):
+        # A=100, B=50, C=10 -> n_m = 10*(10+7.071)/10 = 17.07 -> 18
+        nm, nr = run_both(pad([100.0]), pad([50.0]), pad([10.0]), pad([1.0]))
+        assert nm[0] == 18.0
+        assert nr[0] == 13.0
+
+    def test_padding_is_zero(self):
+        nm, nr = run_both(pad([100.0]), pad([50.0]), pad([10.0]), pad([1.0]))
+        assert float(jnp.sum(nm[1:])) == 0.0
+        assert float(jnp.sum(nr[1:])) == 0.0
+
+    def test_infeasible_deadline(self):
+        # C <= 0: deadline already consumed by the shuffle term.
+        nm, nr = run_both(pad([100.0]), pad([50.0]), pad([-5.0]), pad([1.0]))
+        assert nm[0] == 0.0 and nr[0] == 0.0
+
+    def test_zero_map_work(self):
+        nm, nr = run_both(pad([0.0]), pad([50.0]), pad([10.0]), pad([1.0]))
+        assert nm[0] == 0.0
+        assert nr[0] >= 1.0
+
+    def test_zero_reduce_work(self):
+        nm, nr = run_both(pad([80.0]), pad([0.0]), pad([10.0]), pad([1.0]))
+        assert nr[0] == 0.0
+        assert nm[0] == math.ceil(80.0 / 10.0)
+
+    def test_min_one_slot(self):
+        # Tiny work, generous deadline: still at least one slot each.
+        nm, nr = run_both(pad([0.1]), pad([0.1]), pad([1000.0]), pad([1.0]))
+        assert nm[0] == 1.0 and nr[0] == 1.0
+
+    def test_multi_block_batch(self):
+        n = 2 * BLOCK
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.uniform(0, 500, n).astype(np.float32))
+        b = jnp.asarray(rng.uniform(0, 500, n).astype(np.float32))
+        c = jnp.asarray(rng.uniform(-10, 100, n).astype(np.float32))
+        m = jnp.asarray((rng.uniform(size=n) > 0.3).astype(np.float32))
+        run_both(a, b, c, m)
+
+
+class TestPaperTable2:
+    """Table 2 of the paper: slot demands for the five evaluation jobs.
+
+    The paper reports (job, D, size, map slots, reduce slots). We reverse a
+    consistent parameterization: the pairs must satisfy Eq. 10's closed form,
+    i.e. n_m/n_r = sqrt(A/B), and feeding (A, B, C) back through the solver
+    reproduces the reported counts. See rust/benches/table2_slots.rs for the
+    forward reproduction from workload models.
+    """
+
+    CASES = [
+        # (name, n_m, n_r)
+        ("grep", 24, 8),
+        ("wordcount", 14, 7),
+        ("sort", 20, 11),
+        ("permutation", 15, 16),
+        ("inverted_index", 12, 9),
+    ]
+
+    @pytest.mark.parametrize("name,n_m,n_r", CASES)
+    def test_roundtrip(self, name, n_m, n_r):
+        # Construct (A, B, C) consistent with the reported slot pair:
+        # pick C, then A = (n_m~ * C)^2 / s, B = (n_r~ * C)^2 / s ... simpler:
+        # from Eq.10, n_m*C = sqrt(A)*s and n_r*C = sqrt(B)*s with
+        # s = sqrt(A)+sqrt(B); so sqrt(A)/sqrt(B) = n_m/n_r and
+        # (n_m+n_r)*C = s^2. Choose C=100 -> s = sqrt((n_m+n_r)*C).
+        # Target the midpoints (n_m - 0.5, n_r - 0.5) so the f32 ceil is
+        # robust to rounding at exact-integer boundaries.
+        c = 100.0
+        tm, tr = n_m - 0.5, n_r - 0.5
+        s = math.sqrt((tm + tr) * c)
+        ra = s * tm / (tm + tr)
+        rb = s * tr / (tm + tr)
+        a, b = ra * ra, rb * rb
+        nm, nr = run_both(pad([a]), pad([b]), pad([c]), pad([1.0]))
+        assert nm[0] == n_m, f"{name}: map slots {nm[0]} != {n_m}"
+        assert nr[0] == n_r, f"{name}: reduce slots {nr[0]} != {n_r}"
+
+
+class TestProperties:
+    @settings(max_examples=60, deadline=None)
+    @given(
+        st.lists(
+            st.tuples(
+                st.floats(0.0, 1e4),        # A
+                st.floats(0.0, 1e4),        # B
+                st.floats(-100.0, 1e4),     # C
+                st.booleans(),              # mask
+            ),
+            min_size=1,
+            max_size=BLOCK,
+        )
+    )
+    def test_matches_ref(self, rows):
+        a = pad([r[0] for r in rows])
+        b = pad([r[1] for r in rows])
+        c = pad([r[2] for r in rows])
+        m = pad([1.0 if r[3] else 0.0 for r in rows])
+        run_both(a, b, c, m)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        st.floats(1.0, 1e4), st.floats(1.0, 1e4), st.floats(0.5, 1e3)
+    )
+    def test_allocation_meets_deadline(self, a, b, c):
+        """The defining property: Eq. 7 holds under the Eq. 10 allocation.
+
+        A/n_m + B/n_r <= C must hold for the returned (integral) slots.
+        """
+        nm, nr = run_both(pad([a]), pad([b]), pad([c]), pad([1.0]))
+        n_m, n_r = float(nm[0]), float(nr[0])
+        assert n_m >= 1 and n_r >= 1
+        assert a / n_m + b / n_r <= c * (1 + 1e-5)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.floats(1.0, 1e4), st.floats(1.0, 1e4), st.floats(0.5, 500.0))
+    def test_monotone_in_deadline(self, a, b, c):
+        """Looser deadline (larger C) never needs more slots."""
+        nm1, nr1 = run_both(pad([a]), pad([b]), pad([c]), pad([1.0]))
+        nm2, nr2 = run_both(pad([a]), pad([b]), pad([c * 2]), pad([1.0]))
+        assert float(nm2[0]) <= float(nm1[0])
+        assert float(nr2[0]) <= float(nr1[0])

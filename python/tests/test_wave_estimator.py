@@ -1,0 +1,99 @@
+"""wave_estimator Pallas kernel vs oracle + wave semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels.ref import completion_estimator_ref, wave_estimator_ref
+from compile.kernels.wave_estimator import wave_estimator
+
+J = model.MAX_JOBS
+NAMES = "rem_map rem_red t_m t_r t_s n_m n_r v_r deadline elapsed mask".split()
+
+
+def mk(**kw):
+    out = []
+    for name in NAMES:
+        v = np.zeros(J, dtype=np.float32)
+        val = kw.get(name)
+        if val is not None:
+            v[: len(val)] = val
+        out.append(jnp.asarray(v))
+    return out
+
+
+def run_both(args):
+    got = wave_estimator(*args)
+    want = wave_estimator_ref(*args)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-4, atol=0.25)
+    return got
+
+
+class TestWaves:
+    def test_exact_waves(self):
+        # 10 maps on 4 slots = 3 waves; 4 reduces on 4 slots = 1 wave.
+        args = mk(rem_map=[10], rem_red=[4], t_m=[5], t_r=[7], t_s=[0],
+                  n_m=[4], n_r=[4], v_r=[4], deadline=[100], elapsed=[0],
+                  mask=[1])
+        eta, urg = run_both(args)
+        assert abs(float(eta[0]) - (3 * 5 + 1 * 7)) < 1e-4
+        assert abs(float(urg[0]) - (100 - 22)) < 1e-4
+
+    def test_divisible_equals_fluid(self):
+        # rem % n == 0: wave == fluid.
+        args = mk(rem_map=[8], rem_red=[4], t_m=[3], t_r=[2], t_s=[0.01],
+                  n_m=[4], n_r=[2], v_r=[4], deadline=[100], elapsed=[0],
+                  mask=[1])
+        wave, _ = run_both(args)
+        fluid, _ = completion_estimator_ref(*args)
+        np.testing.assert_allclose(wave[0], fluid[0], rtol=1e-5)
+
+    def test_padding(self):
+        args = mk(mask=[1], rem_map=[1], t_m=[1], n_m=[1], deadline=[10])
+        eta, urg = run_both(args)
+        assert float(eta[1]) == 0.0
+        assert float(urg[1]) > 1e37
+
+    def test_model_entry_point(self):
+        args = mk(rem_map=[5], rem_red=[2], t_m=[4], t_r=[4], t_s=[0],
+                  n_m=[2], n_r=[2], v_r=[2], deadline=[100], elapsed=[0],
+                  mask=[1])
+        eta, _ = model.estimate_completion_wave(*args)
+        assert abs(float(eta[0]) - (3 * 4 + 1 * 4)) < 1e-4
+
+
+class TestProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_matches_ref_random(self, seed):
+        rng = np.random.default_rng(seed)
+        args = [
+            jnp.asarray(rng.uniform(lo, hi, J).astype(np.float32))
+            for lo, hi in [
+                (0, 200), (0, 50), (0.1, 120), (0.1, 120), (0, 2),
+                (1, 30), (1, 30), (0, 50), (1, 5000), (0, 5000), (0, 1),
+            ]
+        ]
+        args[10] = jnp.asarray((rng.uniform(size=J) > 0.4).astype(np.float32))
+        run_both(args)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_wave_never_below_fluid(self, seed):
+        """Invariant: discrete waves can only be slower than the fluid
+        bound (ceil(r/n)*t >= r*t/n)."""
+        rng = np.random.default_rng(seed)
+        args = [
+            jnp.asarray(rng.uniform(lo, hi, J).astype(np.float32))
+            for lo, hi in [
+                (0, 200), (0, 50), (0.1, 60), (0.1, 60), (0, 0.5),
+                (1, 30), (1, 30), (0, 50), (1, 5000), (0, 5000), (0, 1),
+            ]
+        ]
+        args[10] = jnp.asarray(np.ones(J, dtype=np.float32))
+        wave, _ = wave_estimator(*args)
+        fluid, _ = completion_estimator_ref(*args)
+        assert np.all(np.asarray(wave) >= np.asarray(fluid) - 1e-2)

@@ -1,0 +1,161 @@
+//! Ablation bench: isolate each mechanism of the proposed scheduler
+//! (DESIGN.md §Perf calls these out as design choices to justify):
+//!
+//! * await gating — literal Alg. 1 (speculative waits) vs our
+//!   release-gated waits;
+//! * spare-capacity pass — strict Alg. 2 caps vs work-conserving;
+//! * cross-node routing budget (max_routed);
+//! * hot-plug latency sensitivity (Xen credit-scheduler cost sweep);
+//! * fluid (Eq. 7) vs wave-based completion estimator accuracy against
+//!   realized single-job runs.
+//!
+//!     cargo bench --offline --bench ablation
+
+use vcsched::config::SimConfig;
+use vcsched::coordinator::{run_simulation, run_simulation_custom};
+use vcsched::predictor::{JobProgress, NativePredictor};
+use vcsched::scheduler::{DeadlineVcScheduler, DvcTuning, SchedulerKind};
+use vcsched::util::benchkit::Table;
+use vcsched::workloads::trace::JobTrace;
+use vcsched::workloads::{JobSpec, JobType};
+
+fn run_tuned(cfg: &SimConfig, trace: &JobTrace, tuning: DvcTuning) -> vcsched::coordinator::Report {
+    let mut s = DeadlineVcScheduler::with_tuning(cfg, tuning);
+    let mut p = NativePredictor::new();
+    run_simulation_custom(cfg, &mut s, trace, &mut p)
+}
+
+fn main() {
+    let cfg = SimConfig::paper();
+    let trace = JobTrace::paper_mix(&cfg, 17);
+
+    println!("== mechanism ablation (25-job backlogged mix, seed 17) ==\n");
+    let mut t = Table::new(&[
+        "variant", "thpt/h", "mean_ct", "locality", "hotplugs",
+    ]);
+    let variants: Vec<(&str, DvcTuning)> = vec![
+        ("full (default)", DvcTuning::default()),
+        (
+            "speculative awaits (literal Alg.1)",
+            DvcTuning {
+                await_requires_release: false,
+                ..DvcTuning::default()
+            },
+        ),
+        (
+            "no spare pass (strict Alg.2 caps)",
+            DvcTuning {
+                spare_pass: false,
+                ..DvcTuning::default()
+            },
+        ),
+        (
+            "no cross-node routing",
+            DvcTuning {
+                max_routed: 0,
+                ..DvcTuning::default()
+            },
+        ),
+        (
+            "aggressive routing (32)",
+            DvcTuning {
+                max_routed: 32,
+                ..DvcTuning::default()
+            },
+        ),
+    ];
+    for (name, tuning) in variants {
+        let r = run_tuned(&cfg, &trace, tuning);
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}", r.throughput_jobs_per_hour()),
+            format!("{:.1}s", r.mean_completion_s()),
+            format!("{:.1}%", r.locality_pct()),
+            r.hotplugs.to_string(),
+        ]);
+    }
+    // Fair baseline row for reference.
+    let fair = run_simulation(&cfg, SchedulerKind::Fair, &trace);
+    t.row(&[
+        "fair (baseline)".into(),
+        format!("{:.1}", fair.throughput_jobs_per_hour()),
+        format!("{:.1}s", fair.mean_completion_s()),
+        format!("{:.1}%", fair.locality_pct()),
+        "0".into(),
+    ]);
+    t.print();
+
+    println!("\n== hot-plug latency sensitivity ==\n");
+    let mut t = Table::new(&["hotplug latency", "thpt/h", "locality", "hotplugs"]);
+    for ms in [0u64, 100, 500, 2000, 10000] {
+        let cfg = SimConfig {
+            hotplug_ms: ms,
+            ..SimConfig::paper()
+        };
+        let r = run_simulation(&cfg, SchedulerKind::DeadlineVc, &trace);
+        t.row(&[
+            format!("{ms} ms"),
+            format!("{:.1}", r.throughput_jobs_per_hour()),
+            format!("{:.1}%", r.locality_pct()),
+            r.hotplugs.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\n== estimator accuracy: fluid Eq.7 vs wave-based (single jobs) ==\n");
+    // Run each workload alone with a fixed slot allocation and compare the
+    // realized map-phase + total times against both estimators' forecasts.
+    let mut t = Table::new(&[
+        "job", "actual", "fluid est", "wave est", "fluid err", "wave err",
+    ]);
+    let mut fluid_abs = 0.0f64;
+    let mut wave_abs = 0.0f64;
+    for jt in [JobType::WordCount, JobType::Sort, JobType::Grep, JobType::InvertedIndex] {
+        let cfg = SimConfig {
+            jitter_std: 0.0, // deterministic ground truth
+            ..SimConfig::paper()
+        };
+        let spec = JobSpec::new(jt, 1500.0).with_deadline(1e6);
+        let trace1 = JobTrace::new(vec![spec.clone()]);
+        let r = run_simulation(&cfg, SchedulerKind::Fifo, &trace1);
+        let actual = r.jobs[0].completion_s;
+        // Forecast with the cost model's nominal times and the full
+        // cluster's slots (what FIFO effectively grants a lone job).
+        let d = vcsched::predictor::demand_from_spec(&cfg, &spec);
+        let maps = d.map_tasks;
+        let p = JobProgress {
+            rem_map: maps,
+            rem_reduce: d.reduce_tasks,
+            t_map: d.t_map,
+            t_reduce: d.t_reduce,
+            t_shuffle: 0.0, // sim overlaps copies inside reduce tasks
+            map_slots: (cfg.total_map_slots() as f64).min(maps),
+            reduce_slots: (cfg.total_reduce_slots() as f64).min(d.reduce_tasks),
+            reduce_tasks: d.reduce_tasks,
+            deadline: 1e6,
+            elapsed: 0.0,
+        };
+        let fluid = NativePredictor::estimate_one(&p).eta;
+        let wave = NativePredictor::estimate_wave_one(&p).eta;
+        let fe = (fluid - actual).abs() / actual * 100.0;
+        let we = (wave - actual).abs() / actual * 100.0;
+        fluid_abs += fe;
+        wave_abs += we;
+        t.row(&[
+            jt.name().to_string(),
+            format!("{actual:.0}s"),
+            format!("{fluid:.0}s"),
+            format!("{wave:.0}s"),
+            format!("{fe:.0}%"),
+            format!("{we:.0}%"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nmean |error|: fluid {:.0}% vs wave {:.0}% — the wave estimator's \
+         discrete ceil(rem/n) matches Hadoop's wave execution better for \
+         small task counts",
+        fluid_abs / 4.0,
+        wave_abs / 4.0
+    );
+}

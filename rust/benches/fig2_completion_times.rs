@@ -1,0 +1,69 @@
+//! Bench FIG2: regenerate Figure 2(a)/(b) — per-workload completion times
+//! at 2/4/6/8/10 GB under the Fair and proposed schedulers.
+//!
+//! Paper expectation (shape): completion time grows with input size for
+//! every workload; the permutation generator is the slowest (shuffle-
+//! bound); the proposed scheduler's times are <= Fair's for map-heavy
+//! workloads. Absolute seconds differ from the paper's Xen testbed.
+//!
+//!     cargo bench --offline --bench fig2_completion_times
+
+use vcsched::config::SimConfig;
+use vcsched::coordinator;
+use vcsched::scheduler::SchedulerKind;
+use vcsched::util::benchkit::{measure, Table};
+use vcsched::workloads::trace::JobTrace;
+use vcsched::workloads::ALL_JOB_TYPES;
+
+const SIZES_GB: [f64; 5] = [2.0, 4.0, 6.0, 8.0, 10.0];
+
+fn main() {
+    let cfg = SimConfig::paper();
+    let scale = 1024.0; // full-size inputs (MB per paper-GB)
+    let trace = JobTrace::fig2_grid_on(&cfg, scale);
+
+    for (label, kind) in [
+        ("Figure 2(a) — Fair Scheduler", SchedulerKind::Fair),
+        ("Figure 2(b) — Proposed Scheduler", SchedulerKind::DeadlineVc),
+    ] {
+        let r = coordinator::run_simulation(&cfg, kind, &trace);
+        println!(
+            "\n{label}  (jobs={}, makespan={:.0}s, locality={:.1}%)",
+            r.completed_jobs(),
+            r.makespan_s,
+            r.locality_pct()
+        );
+        let mut t = Table::new(&["job", "2GB", "4GB", "6GB", "8GB", "10GB"]);
+        for jt in ALL_JOB_TYPES {
+            let mut row = vec![jt.name().to_string()];
+            for gb in SIZES_GB {
+                let v = r
+                    .completion_for(jt, gb * scale)
+                    .map(|s| format!("{s:.0}s"))
+                    .unwrap_or_else(|| "-".into());
+                row.push(v);
+            }
+            t.row(&row);
+        }
+        t.print();
+
+        // Shape checks the paper's figure implies.
+        for jt in ALL_JOB_TYPES {
+            let c2 = r.completion_for(jt, 2.0 * scale).unwrap();
+            let c10 = r.completion_for(jt, 10.0 * scale).unwrap();
+            assert!(
+                c10 > c2,
+                "{}: completion must grow with input ({c2:.0}s !< {c10:.0}s)",
+                jt.name()
+            );
+        }
+    }
+
+    // Wall-clock cost of regenerating the whole figure.
+    let res = measure("fig2 full grid (50 simulated jobs)", 1, 5, || {
+        let _ = coordinator::run_simulation(&cfg, SchedulerKind::Fair, &trace);
+        let _ = coordinator::run_simulation(&cfg, SchedulerKind::DeadlineVc, &trace);
+    });
+    println!();
+    res.print();
+}

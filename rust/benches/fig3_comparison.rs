@@ -1,0 +1,87 @@
+//! Bench FIG3: regenerate Figure 3 — per-job-type completion times, Fair
+//! vs proposed, on the Table-2 job mix (deadlines + sizes from the paper).
+//!
+//! Paper expectation (shape): the proposed scheduler reduces completion
+//! time for every workload EXCEPT the permutation generator, whose
+//! reduce-input-heavy shuffle makes map locality immaterial — its times
+//! are "almost same" (§5).
+//!
+//!     cargo bench --offline --bench fig3_comparison
+
+use vcsched::config::SimConfig;
+use vcsched::coordinator;
+use vcsched::scheduler::SchedulerKind;
+use vcsched::util::benchkit::{measure, Table};
+use vcsched::workloads::trace::JobTrace;
+use vcsched::workloads::{JobType, ALL_JOB_TYPES};
+
+fn main() {
+    let cfg = SimConfig::paper();
+    let trace = JobTrace::table2(1024.0);
+    let (fair, prop) = coordinator::compare(
+        &cfg,
+        SchedulerKind::Fair,
+        SchedulerKind::DeadlineVc,
+        &trace,
+    );
+
+    println!("Figure 3 — Job completion times, Fair vs Proposed (Table-2 mix)\n");
+    let mut t = Table::new(&["job", "fair", "proposed", "delta"]);
+    let mut deltas = Vec::new();
+    for jt in ALL_JOB_TYPES {
+        let f = fair.mean_completion_for(jt).unwrap();
+        let p = prop.mean_completion_for(jt).unwrap();
+        let d = (p / f - 1.0) * 100.0;
+        deltas.push((jt, d));
+        t.row(&[
+            jt.name().to_string(),
+            format!("{f:.0}s"),
+            format!("{p:.0}s"),
+            format!("{d:+.1}%"),
+        ]);
+    }
+    t.print();
+
+    // Shape assertions from the paper's discussion of Fig. 3.
+    let perm = deltas
+        .iter()
+        .find(|(jt, _)| *jt == JobType::PermutationGenerator)
+        .unwrap()
+        .1;
+    let others: Vec<f64> = deltas
+        .iter()
+        .filter(|(jt, _)| *jt != JobType::PermutationGenerator)
+        .map(|(_, d)| *d)
+        .collect();
+    let mean_others = others.iter().sum::<f64>() / others.len() as f64;
+    println!(
+        "\npermutation delta {perm:+.1}% vs other-workloads mean {mean_others:+.1}% \
+         (paper: permutation ~unchanged, others clearly reduced)"
+    );
+    assert!(
+        mean_others < -5.0,
+        "proposed must clearly reduce completion times of map-heavy workloads"
+    );
+    assert!(
+        perm > mean_others,
+        "permutation generator must benefit least (locality immaterial in \
+         its shuffle-bound profile)"
+    );
+    println!(
+        "locality: fair {:.1}% -> proposed {:.1}% | hotplugs {}",
+        fair.locality_pct(),
+        prop.locality_pct(),
+        prop.hotplugs
+    );
+
+    let res = measure("fig3 pair of runs (10 simulated jobs)", 1, 10, || {
+        let _ = coordinator::compare(
+            &cfg,
+            SchedulerKind::Fair,
+            SchedulerKind::DeadlineVc,
+            &trace,
+        );
+    });
+    println!();
+    res.print();
+}

@@ -1,0 +1,123 @@
+//! Micro-benchmarks: the L3 hot paths and the L1/L2 artifact path.
+//!
+//! * sim event throughput (events/s through the full stack)
+//! * scheduler decision latency per heartbeat (each policy)
+//! * predictor latency: native vs XLA/PJRT, per batch size
+//! * Alg. 1 placement: native choose_target scan vs the locality kernel
+//! * artifact compile time (one-off cost at coordinator start)
+//!
+//!     make artifacts && cargo bench --offline --bench micro
+
+use vcsched::config::SimConfig;
+use vcsched::coordinator;
+use vcsched::predictor::{JobDemand, NativePredictor, Predictor};
+use vcsched::runtime::{ArtifactSet, PlacementQuery, XlaPredictor, MAX_NODES, MAX_TASKS};
+use vcsched::scheduler::SchedulerKind;
+use vcsched::util::benchkit::measure;
+use vcsched::util::Rng;
+use vcsched::workloads::trace::JobTrace;
+
+fn demands(n: usize, seed: u64) -> Vec<JobDemand> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| JobDemand {
+            map_tasks: rng.range_f64(1.0, 300.0).floor(),
+            reduce_tasks: rng.range_f64(1.0, 48.0).floor(),
+            t_map: rng.range_f64(1.0, 60.0),
+            t_reduce: rng.range_f64(1.0, 60.0),
+            t_shuffle: rng.range_f64(0.0, 0.002),
+            deadline: rng.range_f64(50.0, 2000.0),
+        })
+        .collect()
+}
+
+fn main() {
+    let cfg = SimConfig::paper();
+
+    // ---- end-to-end simulation event rate ----
+    let trace = JobTrace::paper_mix(&cfg, 3);
+    let mut events = 0u64;
+    let r = measure("full simulation (25 jobs, proposed)", 1, 10, || {
+        let rep = coordinator::run_simulation(&cfg, SchedulerKind::DeadlineVc, &trace);
+        events = rep.events;
+    });
+    r.print();
+    println!(
+        "  -> {events} events per run = {:.0}k events/s",
+        events as f64 / (r.mean_us / 1e6) / 1e3
+    );
+
+    // ---- per-scheduler wall time on an identical trace ----
+    for kind in SchedulerKind::ALL {
+        let r = measure(
+            &format!("simulate 25 jobs [{}]", kind.name()),
+            1,
+            10,
+            || {
+                let _ = coordinator::run_simulation(&cfg, kind, &trace);
+            },
+        );
+        r.print();
+    }
+
+    // ---- predictor latency ladder ----
+    println!();
+    let mut native = NativePredictor::new();
+    for n in [1usize, 8, 64, 128, 256] {
+        let d = demands(n, 99);
+        let r = measure(&format!("native solve_slots n={n}"), 10, 2000, || {
+            let _ = native.solve_slots(&d);
+        });
+        r.print();
+    }
+    match XlaPredictor::load_default() {
+        Ok(mut xla) => {
+            for n in [1usize, 64, 128, 256] {
+                let d = demands(n, 99);
+                let r = measure(&format!("xla    solve_slots n={n}"), 5, 200, || {
+                    let _ = xla.solve_slots(&d);
+                });
+                r.print();
+            }
+
+            // ---- Alg. 1 placement kernel ----
+            let mut q = PlacementQuery::new();
+            let mut rng = Rng::new(5);
+            for t in 0..MAX_TASKS {
+                q.task_mask[t] = 1.0;
+                for _ in 0..3 {
+                    q.set_has_data(t, rng.below(MAX_NODES as u64) as usize);
+                }
+            }
+            q.node_mask.fill(1.0);
+            for n in 0..MAX_NODES {
+                q.rq[n] = rng.below(4) as f32;
+                q.aq[n] = rng.below(4) as f32;
+            }
+            let r = measure(
+                &format!("xla place() {MAX_TASKS}x{MAX_NODES} score+argmax"),
+                5,
+                200,
+                || {
+                    let _ = xla.place(&q).unwrap();
+                },
+            );
+            r.print();
+        }
+        Err(e) => eprintln!("skipping XLA micro-benches: {e}"),
+    }
+
+    // ---- artifact compile time (start-up cost) ----
+    match ArtifactSet::load_default() {
+        Ok(set) => {
+            println!(
+                "\nartifact compile times: slot_solver {:.1} ms, locality {:.1} ms, \
+                 estimator {:.1} ms (once per coordinator start)",
+                set.slot_solver.compile_time_ms,
+                set.locality.compile_time_ms,
+                set.estimator.compile_time_ms
+            );
+        }
+        Err(e) => eprintln!("artifact load skipped: {e}"),
+    }
+}

@@ -1,0 +1,107 @@
+//! Bench T2: regenerate Table 2 — minimum map/reduce slot allocations for
+//! the five jobs with the paper's deadlines and input sizes, computed by
+//! BOTH predictor backends (native Rust and the AOT JAX/Pallas artifact
+//! via PJRT), which must agree exactly.
+//!
+//! Absolute counts depend on task-time calibration (our simulated nodes
+//! are not the paper's Xeons); the *shape* checks are: the permutation
+//! generator is the only reduce-dominant allocation (paper: 15 maps vs
+//! 16 reduces), and map-heavy jobs (grep) demand disproportionately many
+//! map slots.
+//!
+//!     make artifacts && cargo bench --offline --bench table2_slots
+
+use vcsched::config::SimConfig;
+use vcsched::predictor::{demand_from_spec, NativePredictor, Predictor, SlotDemand};
+use vcsched::runtime::XlaPredictor;
+use vcsched::util::benchkit::{measure, Table};
+use vcsched::workloads::{JobSpec, JobType};
+
+const ROWS: [(JobType, f64, f64, u32, u32); 5] = [
+    // (type, deadline s, input GB, paper map slots, paper reduce slots)
+    (JobType::Grep, 650.0, 10.0, 24, 8),
+    (JobType::WordCount, 520.0, 5.0, 14, 7),
+    (JobType::Sort, 500.0, 10.0, 20, 11),
+    (JobType::PermutationGenerator, 850.0, 4.0, 15, 16),
+    (JobType::InvertedIndex, 720.0, 8.0, 12, 9),
+];
+
+fn main() {
+    let cfg = SimConfig::paper();
+    let mut native = NativePredictor::new();
+    let mut xla = XlaPredictor::load_default().ok();
+    if xla.is_none() {
+        eprintln!("NOTE: artifacts/ missing — XLA column skipped (run `make artifacts`)");
+    }
+
+    let demands: Vec<_> = ROWS
+        .iter()
+        .map(|&(jt, d, gb, _, _)| {
+            demand_from_spec(&cfg, &JobSpec::new(jt, gb * 1024.0).with_deadline(d))
+        })
+        .collect();
+    let ours: Vec<SlotDemand> = native.solve_slots(&demands);
+    let theirs: Option<Vec<SlotDemand>> = xla.as_mut().map(|p| p.solve_slots(&demands));
+
+    println!("Table 2 — minimum slots to meet completion-time goals\n");
+    let mut t = Table::new(&[
+        "job", "deadline", "input", "ours m/r", "xla m/r", "paper m/r",
+    ]);
+    for (i, &(jt, d, gb, pm, pr)) in ROWS.iter().enumerate() {
+        let o = ours[i];
+        let x = theirs
+            .as_ref()
+            .map(|v| format!("{}/{}", v[i].map_slots, v[i].reduce_slots))
+            .unwrap_or_else(|| "-".into());
+        t.row(&[
+            jt.name().to_string(),
+            format!("{d:.0}s"),
+            format!("{gb:.0}GB"),
+            format!("{}/{}", o.map_slots, o.reduce_slots),
+            x,
+            format!("{pm}/{pr}"),
+        ]);
+    }
+    t.print();
+
+    // Cross-backend agreement (the artifact IS the native math, AOT'd).
+    if let Some(theirs) = &theirs {
+        assert_eq!(&ours, theirs, "native and XLA backends must agree");
+        println!("\nnative == XLA artifact on all rows ✓");
+    }
+
+    // Shape: permutation is the only job demanding more reduce than map
+    // slots (paper's 15/16); every other job is map-dominant.
+    for (i, &(jt, ..)) in ROWS.iter().enumerate() {
+        let o = ours[i];
+        if jt == JobType::PermutationGenerator {
+            assert!(
+                o.reduce_slots >= o.map_slots,
+                "permutation must be reduce-dominant (got {}/{})",
+                o.map_slots,
+                o.reduce_slots
+            );
+        } else {
+            assert!(
+                o.map_slots >= o.reduce_slots,
+                "{} must be map-dominant (got {}/{})",
+                jt.name(),
+                o.map_slots,
+                o.reduce_slots
+            );
+        }
+    }
+    println!("allocation shape matches the paper (perm reduce-dominant, rest map-dominant) ✓");
+
+    // Predictor latency on this 5-job batch.
+    let r = measure("native solve_slots (5 jobs)", 10, 1000, || {
+        let _ = native.solve_slots(&demands);
+    });
+    r.print();
+    if let Some(p) = xla.as_mut() {
+        let r = measure("XLA/PJRT solve_slots (5 jobs, 128-padded)", 10, 200, || {
+            let _ = p.solve_slots(&demands);
+        });
+        r.print();
+    }
+}

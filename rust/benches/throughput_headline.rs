@@ -1,0 +1,85 @@
+//! Bench HEADLINE: the paper's abstract claim — "a gain of about 12%
+//! increase in throughput of Jobs" for the proposed scheduler over the
+//! Hadoop Fair Scheduler on a backlogged mixed workload.
+//!
+//! We run N seeds of the random-size mixed trace (paper §5's "random
+//! input sizes" experiment) under both schedulers and report the mean
+//! throughput gain plus the full baseline ladder (FIFO/Fair/Delay/EDF/
+//! proposed) as an ablation: EDF isolates job ordering, Delay isolates
+//! software-only locality patience, the proposed adds Eq. 10 allocation +
+//! vCPU reconfiguration.
+//!
+//!     cargo bench --offline --bench throughput_headline
+
+use vcsched::config::SimConfig;
+use vcsched::coordinator;
+use vcsched::scheduler::SchedulerKind;
+use vcsched::util::benchkit::Table;
+use vcsched::util::stats::Summary;
+use vcsched::workloads::trace::JobTrace;
+
+const SEEDS: u64 = 5;
+const JOBS: usize = 30;
+
+fn main() {
+    let cfg = SimConfig::paper();
+
+    // ---- headline: fair vs proposed over SEEDS traces ----
+    let mut gain = Summary::new();
+    let mut fair_thpt = Summary::new();
+    let mut prop_thpt = Summary::new();
+    let mut fair_loc = Summary::new();
+    let mut prop_loc = Summary::new();
+    for s in 0..SEEDS {
+        let trace = JobTrace::poisson(&cfg, JOBS, 5.0, 1.6..3.0, cfg.seed + s);
+        let (f, p) = coordinator::compare(
+            &cfg,
+            SchedulerKind::Fair,
+            SchedulerKind::DeadlineVc,
+            &trace,
+        );
+        gain.add((p.throughput_jobs_per_hour() / f.throughput_jobs_per_hour() - 1.0) * 100.0);
+        fair_thpt.add(f.throughput_jobs_per_hour());
+        prop_thpt.add(p.throughput_jobs_per_hour());
+        fair_loc.add(f.locality_pct());
+        prop_loc.add(p.locality_pct());
+    }
+    println!(
+        "HEADLINE over {SEEDS} seeds x {JOBS} jobs: throughput gain mean {:+.1}% \
+         (min {:+.1}%, max {:+.1}%) — paper claims ~12%",
+        gain.mean(),
+        gain.min(),
+        gain.max()
+    );
+    println!(
+        "  fair: {:.1} jobs/h @ {:.1}% locality | proposed: {:.1} jobs/h @ {:.1}% locality",
+        fair_thpt.mean(),
+        fair_loc.mean(),
+        prop_thpt.mean(),
+        prop_loc.mean()
+    );
+    assert!(
+        gain.mean() > 5.0,
+        "throughput gain {:.1}% too far below the paper's ~12%",
+        gain.mean()
+    );
+
+    // ---- ablation ladder ----
+    println!("\nAblation (same trace, seed {}):", cfg.seed);
+    let trace = JobTrace::poisson(&cfg, JOBS, 5.0, 1.6..3.0, cfg.seed);
+    let mut t = Table::new(&[
+        "scheduler", "thpt/h", "mean_ct", "locality", "misses", "hotplugs",
+    ]);
+    for kind in SchedulerKind::ALL {
+        let r = coordinator::run_simulation(&cfg, kind, &trace);
+        t.row(&[
+            kind.name().to_string(),
+            format!("{:.1}", r.throughput_jobs_per_hour()),
+            format!("{:.1}s", r.mean_completion_s()),
+            format!("{:.1}%", r.locality_pct()),
+            format!("{:.0}%", r.miss_rate() * 100.0),
+            r.hotplugs.to_string(),
+        ]);
+    }
+    t.print();
+}

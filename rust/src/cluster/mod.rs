@@ -1,0 +1,354 @@
+//! Virtualized cluster substrate: physical machines hosting VMs whose
+//! vCPU counts can be reconfigured at runtime (Xen credit-scheduler style
+//! hot-plug, paper §4.1).
+//!
+//! Terminology mapping to the paper:
+//! * *node* = one VM = one Hadoop TaskTracker = one HDFS DataNode;
+//! * a VM's **map capacity** equals its *current* vCPU count (hot-plug adds
+//!   a map slot); **reduce slots** are static — the paper reconfigures only
+//!   for the map phase (§4.2: "we have considered only the map phase to
+//!   maximize data locality").
+
+use crate::config::SimConfig;
+
+/// Physical machine index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PmId(pub u32);
+
+/// VM (node) index, global across the cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl PmId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// A physical machine: a fixed pool of cores shared by its VMs.
+#[derive(Clone, Debug)]
+pub struct PhysicalMachine {
+    pub id: PmId,
+    pub cores: u32,
+    pub vms: Vec<NodeId>,
+}
+
+impl PhysicalMachine {
+    /// Cores currently assigned across this PM's VMs.
+    pub fn assigned_cores(&self, cluster: &Cluster) -> u32 {
+        self.vms.iter().map(|&v| cluster.vm(v).vcpus).sum()
+    }
+}
+
+/// A virtual machine (one Hadoop node).
+#[derive(Clone, Debug)]
+pub struct Vm {
+    pub id: NodeId,
+    pub pm: PmId,
+    /// Static base configuration (what the user paid for).
+    pub base_vcpus: u32,
+    /// Current vCPU count (changes through hot-plug).
+    pub vcpus: u32,
+    /// Map tasks currently running (each occupies one vCPU).
+    pub busy_map: u32,
+    /// Reduce tasks currently running (separate static slots).
+    pub busy_reduce: u32,
+    /// Static reduce slots.
+    pub reduce_slots: u32,
+}
+
+impl Vm {
+    /// Free map slots = free vCPUs.
+    pub fn free_map_slots(&self) -> u32 {
+        self.vcpus.saturating_sub(self.busy_map)
+    }
+
+    pub fn free_reduce_slots(&self) -> u32 {
+        self.reduce_slots.saturating_sub(self.busy_reduce)
+    }
+
+    /// Can this VM give up a core right now? It must keep >= 1 vCPU and
+    /// cannot release a core a running map task occupies.
+    pub fn can_release_core(&self) -> bool {
+        self.vcpus > 1 && self.free_map_slots() > 0
+    }
+}
+
+/// The whole virtual cluster.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pms: Vec<PhysicalMachine>,
+    vms: Vec<Vm>,
+}
+
+/// Errors from hot-plug operations.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum HotplugError {
+    #[error("PM {0:?} has no spare physical core")]
+    NoSpareCore(PmId),
+    #[error("VM {0:?} cannot release a core (vcpus={1}, busy={2})")]
+    CannotRelease(NodeId, u32, u32),
+    #[error("VMs {0:?} and {1:?} are on different physical machines")]
+    CrossPm(NodeId, NodeId),
+}
+
+impl Cluster {
+    /// Build the cluster laid out by `cfg`: `pms` machines, each hosting
+    /// `vms_per_pm` VMs of `base_vcpus` vCPUs.
+    pub fn build(cfg: &SimConfig) -> Self {
+        let mut pms = Vec::with_capacity(cfg.pms);
+        let mut vms = Vec::with_capacity(cfg.nodes());
+        for p in 0..cfg.pms {
+            let pm_id = PmId(p as u32);
+            let mut pm = PhysicalMachine {
+                id: pm_id,
+                cores: cfg.cores_per_pm,
+                vms: Vec::with_capacity(cfg.vms_per_pm),
+            };
+            for _ in 0..cfg.vms_per_pm {
+                let id = NodeId(vms.len() as u32);
+                pm.vms.push(id);
+                vms.push(Vm {
+                    id,
+                    pm: pm_id,
+                    base_vcpus: cfg.base_vcpus,
+                    vcpus: cfg.base_vcpus,
+                    busy_map: 0,
+                    busy_reduce: 0,
+                    reduce_slots: cfg.reduce_slots,
+                });
+            }
+            pms.push(pm);
+        }
+        Self { pms, vms }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.vms.len()
+    }
+
+    pub fn num_pms(&self) -> usize {
+        self.pms.len()
+    }
+
+    pub fn vm(&self, id: NodeId) -> &Vm {
+        &self.vms[id.idx()]
+    }
+
+    pub fn vm_mut(&mut self, id: NodeId) -> &mut Vm {
+        &mut self.vms[id.idx()]
+    }
+
+    pub fn pm(&self, id: PmId) -> &PhysicalMachine {
+        &self.pms[id.idx()]
+    }
+
+    pub fn pm_of(&self, node: NodeId) -> PmId {
+        self.vm(node).pm
+    }
+
+    pub fn vms(&self) -> impl Iterator<Item = &Vm> {
+        self.vms.iter()
+    }
+
+    pub fn pms(&self) -> impl Iterator<Item = &PhysicalMachine> {
+        self.pms.iter()
+    }
+
+    /// Are these two nodes co-located on one physical machine?
+    pub fn same_pm(&self, a: NodeId, b: NodeId) -> bool {
+        self.pm_of(a) == self.pm_of(b)
+    }
+
+    /// Spare (unassigned) physical cores on a PM.
+    pub fn spare_cores(&self, pm: PmId) -> u32 {
+        let p = self.pm(pm);
+        p.cores.saturating_sub(p.assigned_cores(self))
+    }
+
+    /// Move one core `from` -> `to` (both on the same PM). This is the MM's
+    /// hot-plug primitive: un-plug a free vCPU from `from`, plug it into
+    /// `to`. The releasing VM must have a free vCPU and keep at least one.
+    pub fn transfer_core(&mut self, from: NodeId, to: NodeId) -> Result<(), HotplugError> {
+        if self.pm_of(from) != self.pm_of(to) {
+            return Err(HotplugError::CrossPm(from, to));
+        }
+        let f = self.vm(from);
+        if f.vcpus <= 1 || f.free_map_slots() == 0 {
+            return Err(HotplugError::CannotRelease(from, f.vcpus, f.busy_map));
+        }
+        self.vm_mut(from).vcpus -= 1;
+        self.vm_mut(to).vcpus += 1;
+        debug_assert!(self.check_invariants().is_ok());
+        Ok(())
+    }
+
+    /// Plug a *spare* physical core (not currently assigned to any VM)
+    /// into `to`. Used when a PM is under-committed.
+    pub fn plug_spare_core(&mut self, to: NodeId) -> Result<(), HotplugError> {
+        let pm = self.pm_of(to);
+        if self.spare_cores(pm) == 0 {
+            return Err(HotplugError::NoSpareCore(pm));
+        }
+        self.vm_mut(to).vcpus += 1;
+        debug_assert!(self.check_invariants().is_ok());
+        Ok(())
+    }
+
+    /// Release one free vCPU from `from` back to the PM's spare pool.
+    pub fn unplug_core(&mut self, from: NodeId) -> Result<(), HotplugError> {
+        let f = self.vm(from);
+        if f.vcpus <= 1 || f.free_map_slots() == 0 {
+            return Err(HotplugError::CannotRelease(from, f.vcpus, f.busy_map));
+        }
+        self.vm_mut(from).vcpus -= 1;
+        debug_assert!(self.check_invariants().is_ok());
+        Ok(())
+    }
+
+    /// Invariants the property tests assert after every mutation:
+    /// cores assigned on each PM never exceed physical cores; every VM has
+    /// >= 1 vCPU; busy counts never exceed capacity.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for pm in &self.pms {
+            let assigned = pm.assigned_cores(self);
+            if assigned > pm.cores {
+                return Err(format!(
+                    "PM {:?}: {} cores assigned > {} physical",
+                    pm.id, assigned, pm.cores
+                ));
+            }
+        }
+        for vm in &self.vms {
+            if vm.vcpus == 0 {
+                return Err(format!("VM {:?} has zero vCPUs", vm.id));
+            }
+            if vm.busy_map > vm.vcpus {
+                return Err(format!(
+                    "VM {:?}: {} map tasks > {} vCPUs",
+                    vm.id, vm.busy_map, vm.vcpus
+                ));
+            }
+            if vm.busy_reduce > vm.reduce_slots {
+                return Err(format!(
+                    "VM {:?}: {} reduce tasks > {} slots",
+                    vm.id, vm.busy_reduce, vm.reduce_slots
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> Cluster {
+        Cluster::build(&SimConfig::small()) // 4 PMs x 2 VMs x 2 vCPUs
+    }
+
+    #[test]
+    fn layout_matches_config() {
+        let c = cluster();
+        assert_eq!(c.num_pms(), 4);
+        assert_eq!(c.num_nodes(), 8);
+        for vm in c.vms() {
+            assert_eq!(vm.vcpus, 2);
+            assert_eq!(vm.reduce_slots, 2);
+        }
+        for pm in c.pms() {
+            assert_eq!(pm.vms.len(), 2);
+            assert_eq!(pm.assigned_cores(&c), 4);
+        }
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn transfer_core_same_pm() {
+        let mut c = cluster();
+        let (a, b) = (NodeId(0), NodeId(1)); // same PM by construction
+        assert!(c.same_pm(a, b));
+        c.transfer_core(a, b).unwrap();
+        assert_eq!(c.vm(a).vcpus, 1);
+        assert_eq!(c.vm(b).vcpus, 3);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn transfer_cross_pm_rejected() {
+        let mut c = cluster();
+        let (a, b) = (NodeId(0), NodeId(2));
+        assert!(!c.same_pm(a, b));
+        assert_eq!(
+            c.transfer_core(a, b),
+            Err(HotplugError::CrossPm(a, b))
+        );
+    }
+
+    #[test]
+    fn cannot_release_busy_core() {
+        let mut c = cluster();
+        let a = NodeId(0);
+        c.vm_mut(a).busy_map = 2; // both vCPUs running tasks
+        assert!(matches!(
+            c.transfer_core(a, NodeId(1)),
+            Err(HotplugError::CannotRelease(..))
+        ));
+    }
+
+    #[test]
+    fn cannot_release_last_core() {
+        let mut c = cluster();
+        let (a, b) = (NodeId(0), NodeId(1));
+        c.transfer_core(a, b).unwrap(); // a: 1 vCPU left
+        assert!(matches!(
+            c.transfer_core(a, b),
+            Err(HotplugError::CannotRelease(..))
+        ));
+    }
+
+    #[test]
+    fn spare_core_accounting() {
+        // Give the PM headroom: 4 cores, 1 VM x 2 vCPUs -> 2 spare.
+        let cfg = SimConfig {
+            pms: 1,
+            vms_per_pm: 1,
+            cores_per_pm: 4,
+            ..SimConfig::small()
+        };
+        let mut c = Cluster::build(&cfg);
+        let v = NodeId(0);
+        assert_eq!(c.spare_cores(PmId(0)), 2);
+        c.plug_spare_core(v).unwrap();
+        assert_eq!(c.vm(v).vcpus, 3);
+        assert_eq!(c.spare_cores(PmId(0)), 1);
+        c.plug_spare_core(v).unwrap();
+        assert_eq!(c.spare_cores(PmId(0)), 0);
+        assert_eq!(
+            c.plug_spare_core(v),
+            Err(HotplugError::NoSpareCore(PmId(0)))
+        );
+        c.unplug_core(v).unwrap();
+        assert_eq!(c.spare_cores(PmId(0)), 1);
+    }
+
+    #[test]
+    fn free_slot_math() {
+        let mut c = cluster();
+        let v = NodeId(3);
+        assert_eq!(c.vm(v).free_map_slots(), 2);
+        c.vm_mut(v).busy_map = 1;
+        assert_eq!(c.vm(v).free_map_slots(), 1);
+        c.vm_mut(v).busy_reduce = 2;
+        assert_eq!(c.vm(v).free_reduce_slots(), 0);
+    }
+}

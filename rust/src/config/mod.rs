@@ -1,0 +1,203 @@
+//! Simulation / cluster / workload configuration.
+//!
+//! `SimConfig::paper()` reproduces the paper's testbed: 20 physical
+//! machines, Xen-style vCPU hot-plug, 2 VMs per PM, each VM statically
+//! configured with 2 map + 2 reduce slots, Hadoop 0.20.2-era HDFS defaults
+//! (64 MB blocks, 3x replication), 3 s heartbeats.
+
+mod parser;
+
+pub use parser::{parse_config_str, ConfigError};
+
+/// Execution mode for the MapReduce engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Timing-only: intermediate/output sizes come from the workload cost
+    /// model. Used by benches and large sweeps.
+    Synthetic,
+    /// Tasks really execute their map/reduce functions over generated
+    /// corpus bytes; sizes and record counts are measured, timing is still
+    /// simulated. Used by the E2E example and correctness tests.
+    Real,
+}
+
+/// Full simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    // ---- physical cluster ----
+    /// Number of physical machines (paper: 20).
+    pub pms: usize,
+    /// Physical cores per machine available to VMs.
+    pub cores_per_pm: u32,
+    /// VMs per physical machine.
+    pub vms_per_pm: usize,
+    /// Base virtual CPUs per VM (= base map slots; paper: 2).
+    pub base_vcpus: u32,
+    /// Reduce slots per VM (static; reconfiguration never touches them).
+    pub reduce_slots: u32,
+    /// vCPU hot-plug latency (Assign/Release round-trip through the MM).
+    pub hotplug_ms: u64,
+
+    // ---- HDFS ----
+    /// Block size in MB (Hadoop 0.20.2 default: 64).
+    pub block_mb: f64,
+    /// Replication factor (default 3).
+    pub replication: usize,
+
+    // ---- network / io model ----
+    /// Per-node NIC bandwidth, MB/s (remote map input fetch, shuffle).
+    pub net_mbps: f64,
+    /// Local disk scan bandwidth, MB/s.
+    pub disk_mbps: f64,
+
+    // ---- MapReduce runtime ----
+    /// TaskTracker heartbeat interval, seconds (paper: 3 s).
+    pub heartbeat_s: f64,
+    /// Multiplicative task-duration jitter std-dev (0 = deterministic).
+    pub jitter_std: f64,
+    /// Execution mode (synthetic timing vs real data).
+    pub exec: ExecMode,
+
+    // ---- scheduler knobs ----
+    /// Delay-scheduling patience in heartbeats (Delay scheduler baseline).
+    pub delay_heartbeats: u32,
+    /// Predictor priors (seconds) used before the first task completes.
+    pub prior_map_s: f64,
+    pub prior_shuffle_s: f64,
+
+    // ---- misc ----
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// The paper's evaluation testbed (§5).
+    pub fn paper() -> Self {
+        Self {
+            pms: 20,
+            cores_per_pm: 4,
+            vms_per_pm: 2,
+            base_vcpus: 2,
+            reduce_slots: 2,
+            hotplug_ms: 100,
+            block_mb: 64.0,
+            replication: 3,
+            net_mbps: 10.0,
+            disk_mbps: 400.0,
+            heartbeat_s: 3.0,
+            jitter_std: 0.08,
+            exec: ExecMode::Synthetic,
+            delay_heartbeats: 3,
+            prior_map_s: 20.0,
+            prior_shuffle_s: 0.05,
+            seed: 42,
+        }
+    }
+
+    /// A small fast cluster for unit tests and the quickstart example.
+    pub fn small() -> Self {
+        Self {
+            pms: 4,
+            vms_per_pm: 2,
+            ..Self::paper()
+        }
+    }
+
+    /// Total VMs (= HDFS DataNodes = TaskTrackers).
+    pub fn nodes(&self) -> usize {
+        self.pms * self.vms_per_pm
+    }
+
+    /// Total base map slots in the cluster.
+    pub fn total_map_slots(&self) -> u32 {
+        self.nodes() as u32 * self.base_vcpus
+    }
+
+    /// Total reduce slots in the cluster.
+    pub fn total_reduce_slots(&self) -> u32 {
+        self.nodes() as u32 * self.reduce_slots
+    }
+
+    /// Validate invariants; returns a human-readable complaint.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pms == 0 || self.vms_per_pm == 0 {
+            return Err("cluster must have at least one PM and one VM".into());
+        }
+        if self.base_vcpus == 0 {
+            return Err("VMs need at least one base vCPU".into());
+        }
+        if self.vms_per_pm as u32 * self.base_vcpus > self.cores_per_pm {
+            return Err(format!(
+                "oversubscribed PM: {} VMs x {} vCPUs > {} cores",
+                self.vms_per_pm, self.base_vcpus, self.cores_per_pm
+            ));
+        }
+        if self.replication == 0 || self.replication > self.nodes() {
+            return Err(format!(
+                "replication {} out of range 1..={}",
+                self.replication,
+                self.nodes()
+            ));
+        }
+        if self.block_mb <= 0.0 || self.net_mbps <= 0.0 || self.disk_mbps <= 0.0 {
+            return Err("block size and bandwidths must be positive".into());
+        }
+        if self.heartbeat_s <= 0.0 {
+            return Err("heartbeat interval must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_preset_matches_testbed() {
+        let c = SimConfig::paper();
+        assert_eq!(c.pms, 20);
+        assert_eq!(c.nodes(), 40);
+        assert_eq!(c.base_vcpus, 2);
+        assert_eq!(c.reduce_slots, 2);
+        assert!((c.heartbeat_s - 3.0).abs() < 1e-12);
+        assert_eq!(c.block_mb, 64.0);
+        assert_eq!(c.replication, 3);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn small_preset_valid() {
+        SimConfig::small().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_oversubscription() {
+        let c = SimConfig {
+            vms_per_pm: 3,
+            cores_per_pm: 4,
+            base_vcpus: 2,
+            ..SimConfig::paper()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_replication() {
+        let c = SimConfig {
+            replication: 0,
+            ..SimConfig::paper()
+        };
+        assert!(c.validate().is_err());
+        let c = SimConfig {
+            replication: 1000,
+            ..SimConfig::paper()
+        };
+        assert!(c.validate().is_err());
+    }
+}

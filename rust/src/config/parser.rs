@@ -1,0 +1,140 @@
+//! `key = value` config-file parser (serde/toml unavailable offline).
+//!
+//! Accepts a flat subset of TOML: comments (`#`), blank lines and
+//! `key = value` pairs; unknown keys are errors so typos don't silently
+//! fall back to defaults.
+
+use super::{ExecMode, SimConfig};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {0}: expected `key = value`, got {1:?}")]
+    Syntax(usize, String),
+    #[error("line {0}: unknown key {1:?}")]
+    UnknownKey(usize, String),
+    #[error("line {0}: bad value for {1}: {2:?}")]
+    BadValue(usize, String, String),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+/// Parse `text` into a config, starting from `SimConfig::paper()` defaults.
+pub fn parse_config_str(text: &str) -> Result<SimConfig, ConfigError> {
+    let mut cfg = SimConfig::paper();
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(ConfigError::Syntax(lineno, raw.to_string()));
+        };
+        let (k, v) = (k.trim(), v.trim().trim_matches('"'));
+        macro_rules! num {
+            ($t:ty) => {
+                v.parse::<$t>().map_err(|_| {
+                    ConfigError::BadValue(lineno, k.to_string(), v.to_string())
+                })?
+            };
+        }
+        match k {
+            "pms" => cfg.pms = num!(usize),
+            "cores_per_pm" => cfg.cores_per_pm = num!(u32),
+            "vms_per_pm" => cfg.vms_per_pm = num!(usize),
+            "base_vcpus" => cfg.base_vcpus = num!(u32),
+            "reduce_slots" => cfg.reduce_slots = num!(u32),
+            "hotplug_ms" => cfg.hotplug_ms = num!(u64),
+            "block_mb" => cfg.block_mb = num!(f64),
+            "replication" => cfg.replication = num!(usize),
+            "net_mbps" => cfg.net_mbps = num!(f64),
+            "disk_mbps" => cfg.disk_mbps = num!(f64),
+            "heartbeat_s" => cfg.heartbeat_s = num!(f64),
+            "jitter_std" => cfg.jitter_std = num!(f64),
+            "delay_heartbeats" => cfg.delay_heartbeats = num!(u32),
+            "prior_map_s" => cfg.prior_map_s = num!(f64),
+            "prior_shuffle_s" => cfg.prior_shuffle_s = num!(f64),
+            "seed" => cfg.seed = num!(u64),
+            "exec" => {
+                cfg.exec = match v {
+                    "synthetic" => ExecMode::Synthetic,
+                    "real" => ExecMode::Real,
+                    _ => {
+                        return Err(ConfigError::BadValue(
+                            lineno,
+                            k.to_string(),
+                            v.to_string(),
+                        ))
+                    }
+                }
+            }
+            _ => return Err(ConfigError::UnknownKey(lineno, k.to_string())),
+        }
+    }
+    cfg.validate().map_err(ConfigError::Invalid)?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = parse_config_str(
+            r#"
+            # testbed
+            pms = 10
+            vms_per_pm = 2
+            block_mb = 32.0
+            exec = "real"
+            seed = 7
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.pms, 10);
+        assert_eq!(cfg.block_mb, 32.0);
+        assert_eq!(cfg.exec, ExecMode::Real);
+        assert_eq!(cfg.seed, 7);
+        // untouched keys keep paper defaults
+        assert_eq!(cfg.replication, 3);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(matches!(
+            parse_config_str("bogus = 1"),
+            Err(ConfigError::UnknownKey(1, _))
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_value() {
+        assert!(matches!(
+            parse_config_str("pms = banana"),
+            Err(ConfigError::BadValue(1, _, _))
+        ));
+    }
+
+    #[test]
+    fn rejects_syntax() {
+        assert!(matches!(
+            parse_config_str("just words"),
+            Err(ConfigError::Syntax(1, _))
+        ));
+    }
+
+    #[test]
+    fn rejects_invalid_combination() {
+        assert!(matches!(
+            parse_config_str("vms_per_pm = 9"),
+            Err(ConfigError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let cfg = parse_config_str("\n# only comments\n\npms = 5 # inline\n").unwrap();
+        assert_eq!(cfg.pms, 5);
+    }
+}

@@ -1,0 +1,198 @@
+//! Real-execution engine (`ExecMode::Real`).
+//!
+//! Generates deterministic corpus blocks per (job, block), runs the actual
+//! map/reduce functions when the corresponding simulated task completes,
+//! and keeps the partitioned intermediate data so the distributed output
+//! can be verified against a serial reference. Timing stays simulated;
+//! the *bytes* are real.
+
+use std::collections::HashMap;
+
+use crate::mapreduce::{JobId, JobState, TaskId};
+use crate::util::Rng;
+use crate::workloads::corpus::{self, Block};
+use crate::workloads::exec::{self, Pair};
+use crate::workloads::JobType;
+
+/// Bytes of real data generated per simulated MB (scale-down so 100s of
+/// simulated MB stay cheap in host memory).
+const BYTES_PER_SIM_MB: f64 = 2048.0;
+
+/// Grep pattern used by every Grep job (the rank-1 corpus word).
+pub const GREP_PATTERN: &str = "the";
+
+struct JobExec {
+    job_type: JobType,
+    reducers: u32,
+    blocks: Vec<Block>,
+    /// Partitioned intermediate pairs, filled as map tasks finish.
+    partitions: Vec<Vec<Pair>>,
+    maps_done: u32,
+    intermediate_bytes: u64,
+    /// Reduce outputs, filled as reduce tasks finish.
+    outputs: Vec<Vec<Pair>>,
+}
+
+/// Engine state across all real-mode jobs.
+pub struct ExecEngine {
+    seed: u64,
+    jobs: HashMap<JobId, JobExec>,
+}
+
+impl ExecEngine {
+    /// The pattern every Grep job searches for.
+    pub fn pattern() -> &'static str {
+        GREP_PATTERN
+    }
+
+    pub fn new(seed: u64) -> Self {
+        Self {
+            seed,
+            jobs: HashMap::new(),
+        }
+    }
+
+    /// Generate the job's input blocks (deterministic from seed/job/block).
+    pub fn register_job(&mut self, id: JobId, js: &JobState) {
+        let jt = js.spec.job_type;
+        let blocks: Vec<Block> = js
+            .block_mb
+            .iter()
+            .enumerate()
+            .map(|(i, &mb)| {
+                let mut rng =
+                    Rng::new(self.seed ^ (id.0 as u64) << 32 ^ i as u64 ^ 0xB10C);
+                let bytes = (mb * BYTES_PER_SIM_MB) as usize;
+                match jt {
+                    JobType::Sort => corpus::record_block(bytes, i as u32, &mut rng),
+                    JobType::PermutationGenerator => {
+                        corpus::string_block(bytes / 8, 4, i as u32, &mut rng)
+                    }
+                    _ => corpus::text_block(bytes, i as u32, &mut rng),
+                }
+            })
+            .collect();
+        let reducers = js.total_reduces();
+        self.jobs.insert(
+            id,
+            JobExec {
+                job_type: jt,
+                reducers,
+                blocks,
+                partitions: vec![Vec::new(); reducers as usize],
+                maps_done: 0,
+                intermediate_bytes: 0,
+                outputs: vec![Vec::new(); reducers as usize],
+            },
+        );
+    }
+
+    /// Execute the map function for a finished map task.
+    pub fn run_map_task(&mut self, id: JobId, task: TaskId, _js: &JobState) {
+        let je = self.jobs.get_mut(&id).expect("job registered");
+        let block = &je.blocks[task.0 as usize];
+        let pairs = exec::run_map(je.job_type, block, GREP_PATTERN);
+        je.intermediate_bytes += pairs
+            .iter()
+            .map(|(k, v)| (k.len() + v.len()) as u64)
+            .sum::<u64>();
+        if je.maps_done == 0 {
+            // First map task: size the partition buckets for the whole
+            // job (incremental realloc growth was ~25% of the real-exec
+            // profile — EXPERIMENTS.md §Perf).
+            let per_part =
+                pairs.len() * je.blocks.len() / je.reducers.max(1) as usize;
+            for part in &mut je.partitions {
+                part.reserve(per_part + per_part / 4);
+            }
+        }
+        exec::partition_into(pairs, &mut je.partitions);
+        je.maps_done += 1;
+    }
+
+    /// Execute the reduce function for a finished reduce task.
+    pub fn run_reduce_task(&mut self, id: JobId, task: TaskId, _js: &JobState) {
+        let je = self.jobs.get_mut(&id).expect("job registered");
+        debug_assert_eq!(
+            je.maps_done,
+            je.blocks.len() as u32,
+            "reduce ran before map phase completed"
+        );
+        let part = std::mem::take(&mut je.partitions[task.0 as usize]);
+        je.outputs[task.0 as usize] = exec::run_reduce(je.job_type, part);
+    }
+
+    /// Measured intermediate volume in *simulated* MB.
+    pub fn intermediate_mb(&self, id: JobId) -> f64 {
+        self.jobs
+            .get(&id)
+            .map(|je| je.intermediate_bytes as f64 / BYTES_PER_SIM_MB)
+            .unwrap_or(0.0)
+    }
+
+    /// Merged, sorted final output of a completed job.
+    pub fn job_output(&self, id: JobId) -> Vec<Pair> {
+        let je = &self.jobs[&id];
+        let mut out: Vec<Pair> = je.outputs.iter().flatten().cloned().collect();
+        out.sort();
+        out
+    }
+
+    /// Serial reference over the same input blocks.
+    pub fn serial_reference(&self, id: JobId) -> Vec<Pair> {
+        let je = &self.jobs[&id];
+        let mut out = exec::serial_reference(je.job_type, &je.blocks, GREP_PATTERN);
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExecMode, SimConfig};
+    use crate::coordinator::run_simulation;
+    use crate::scheduler::SchedulerKind;
+    use crate::workloads::trace::JobTrace;
+    use crate::workloads::JobSpec;
+
+    #[test]
+    fn real_mode_runs_and_engine_sizes_feed_timing() {
+        let cfg = SimConfig {
+            exec: ExecMode::Real,
+            ..SimConfig::small()
+        };
+        let trace = JobTrace::new(vec![
+            JobSpec::new(JobType::WordCount, 128.0).with_deadline(600.0)
+        ]);
+        let r = run_simulation(&cfg, SchedulerKind::DeadlineVc, &trace);
+        assert_eq!(r.completed_jobs(), 1);
+    }
+
+    /// The E2E invariant: distributed output == serial reference, for every
+    /// workload type, through the full scheduler + reconfiguration stack.
+    #[test]
+    fn distributed_output_matches_serial_reference() {
+        use crate::coordinator::World;
+        use crate::predictor::NativePredictor;
+
+        for jt in crate::workloads::ALL_JOB_TYPES {
+            let cfg = SimConfig {
+                exec: ExecMode::Real,
+                ..SimConfig::small()
+            };
+            let trace = JobTrace::new(vec![
+                JobSpec::new(jt, 96.0).with_deadline(900.0)
+            ]);
+            let mut sched = SchedulerKind::DeadlineVc.build(&cfg);
+            let mut pred = NativePredictor::new();
+            let mut world = World::new(cfg, trace);
+            world.run(sched.as_mut(), &mut pred);
+            let exec = world.exec_engine().expect("real mode");
+            let got = exec.job_output(JobId(0));
+            let want = exec.serial_reference(JobId(0));
+            assert!(!want.is_empty(), "{jt}: empty reference output");
+            assert_eq!(got, want, "{jt}: distributed != serial");
+        }
+    }
+}

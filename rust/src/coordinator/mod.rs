@@ -1,0 +1,139 @@
+//! The leader: binds cluster, HDFS, MapReduce engine, reconfigurator and
+//! scheduler into the discrete-event loop, and produces the run report.
+
+mod exec_engine;
+mod world;
+
+pub use exec_engine::ExecEngine;
+pub use world::{Event, World};
+
+use crate::config::SimConfig;
+use crate::metrics::RunMetrics;
+use crate::predictor::{NativePredictor, Predictor};
+use crate::scheduler::SchedulerKind;
+use crate::workloads::trace::JobTrace;
+
+/// Result of one simulation run.
+pub type Report = RunMetrics;
+
+/// Run `trace` under `kind` with the native (pure-Rust) predictor.
+pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, trace: &JobTrace) -> Report {
+    let mut predictor = NativePredictor::new();
+    run_simulation_with(cfg, kind, trace, &mut predictor)
+}
+
+/// Run with an explicit predictor backend (e.g.
+/// [`crate::runtime::XlaPredictor`] — the AOT JAX/Pallas artifacts).
+pub fn run_simulation_with(
+    cfg: &SimConfig,
+    kind: SchedulerKind,
+    trace: &JobTrace,
+    predictor: &mut dyn Predictor,
+) -> Report {
+    cfg.validate().expect("invalid SimConfig");
+    let t0 = std::time::Instant::now();
+    let mut scheduler = kind.build(cfg);
+    let mut world = World::new(cfg.clone(), trace.clone());
+    world.run(scheduler.as_mut(), predictor);
+    let mut report = world.into_metrics(kind.name());
+    report.wall_s = t0.elapsed().as_secs_f64();
+    report
+}
+
+/// Run with an explicit scheduler instance (custom tunings/ablations).
+pub fn run_simulation_custom(
+    cfg: &SimConfig,
+    scheduler: &mut dyn crate::scheduler::Scheduler,
+    trace: &JobTrace,
+    predictor: &mut dyn Predictor,
+) -> Report {
+    cfg.validate().expect("invalid SimConfig");
+    let t0 = std::time::Instant::now();
+    let mut world = World::new(cfg.clone(), trace.clone());
+    world.run(scheduler, predictor);
+    let mut report = world.into_metrics(scheduler.name());
+    report.wall_s = t0.elapsed().as_secs_f64();
+    report
+}
+
+/// Run the same trace under two schedulers and return both reports
+/// (the paper's two-phase experimental procedure, §5).
+pub fn compare(
+    cfg: &SimConfig,
+    a: SchedulerKind,
+    b: SchedulerKind,
+    trace: &JobTrace,
+) -> (Report, Report) {
+    (
+        run_simulation(cfg, a, trace),
+        run_simulation(cfg, b, trace),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{JobSpec, JobType};
+
+    fn small_trace() -> JobTrace {
+        JobTrace::new(vec![
+            JobSpec::new(JobType::WordCount, 192.0).with_deadline(900.0),
+            JobSpec::new(JobType::Grep, 128.0).with_deadline(700.0).at(5.0),
+        ])
+    }
+
+    #[test]
+    fn every_scheduler_completes_all_jobs() {
+        let cfg = SimConfig::small();
+        let trace = small_trace();
+        for kind in SchedulerKind::ALL {
+            let r = run_simulation(&cfg, kind, &trace);
+            assert_eq!(r.completed_jobs(), 2, "{}", kind.name());
+            assert!(r.makespan_s > 0.0);
+            for j in &r.jobs {
+                assert!(j.completion_s > 0.0);
+                assert_eq!(j.local_maps + j.nonlocal_maps, j.maps);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SimConfig::small();
+        let trace = small_trace();
+        let a = run_simulation(&cfg, SchedulerKind::DeadlineVc, &trace);
+        let b = run_simulation(&cfg, SchedulerKind::DeadlineVc, &trace);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.hotplugs, b.hotplugs);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.completion_s, y.completion_s);
+        }
+    }
+
+    #[test]
+    fn different_seeds_change_layout() {
+        let trace = small_trace();
+        let a = run_simulation(&SimConfig::small(), SchedulerKind::Fair, &trace);
+        let cfg2 = SimConfig {
+            seed: 777,
+            ..SimConfig::small()
+        };
+        let b = run_simulation(&cfg2, SchedulerKind::Fair, &trace);
+        // Same totals, (almost surely) different placement/locality.
+        assert_eq!(a.completed_jobs(), b.completed_jobs());
+    }
+
+    #[test]
+    fn compare_runs_both() {
+        let cfg = SimConfig::small();
+        let (fair, prop) = compare(
+            &cfg,
+            SchedulerKind::Fair,
+            SchedulerKind::DeadlineVc,
+            &small_trace(),
+        );
+        assert_eq!(fair.scheduler, "fair");
+        assert_eq!(prop.scheduler, "deadline_vc");
+        assert_eq!(fair.completed_jobs(), prop.completed_jobs());
+    }
+}

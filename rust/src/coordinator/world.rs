@@ -1,0 +1,498 @@
+//! World state + the event loop.
+
+use crate::cluster::{Cluster, NodeId};
+use crate::config::{ExecMode, SimConfig};
+use crate::hdfs::NameNode;
+use crate::mapreduce::{JobId, JobState, TaskCost, TaskId, TaskRef};
+use crate::metrics::{HotplugMark, JobRecord, RunMetrics, TaskSpan, TraceLog};
+use crate::predictor::Predictor;
+use crate::reconfig::ConfigManager;
+use crate::scheduler::{Action, SchedView, Scheduler};
+use crate::sim::{EventQueue, SimTime};
+use crate::util::Rng;
+use crate::workloads::trace::JobTrace;
+use crate::workloads::JobSpec;
+
+use super::exec_engine::ExecEngine;
+
+/// Discrete events driving the simulation.
+#[derive(Clone, Copy, Debug)]
+pub enum Event {
+    /// Submission of trace job `idx`.
+    JobArrival(u32),
+    /// TaskTracker heartbeat (recurs every `heartbeat_s`).
+    Heartbeat(NodeId),
+    MapDone {
+        job: JobId,
+        task: TaskId,
+        node: NodeId,
+    },
+    ReduceDone {
+        job: JobId,
+        task: TaskId,
+        node: NodeId,
+    },
+    /// A granted vCPU hot-plug completed; launch the delayed local task.
+    HotplugDone {
+        from: NodeId,
+        to: NodeId,
+        task: TaskRef,
+    },
+}
+
+/// All mutable simulation state.
+pub struct World {
+    pub cfg: SimConfig,
+    pub cluster: Cluster,
+    pub nn: NameNode,
+    pub jobs: Vec<JobState>,
+    costs: Vec<TaskCost>,
+    pub cm: ConfigManager,
+    queue: EventQueue<Event>,
+    rng: Rng,
+    pending_specs: Vec<JobSpec>,
+    arrived: usize,
+    exec: Option<ExecEngine>,
+    // metrics
+    records: Vec<JobRecord>,
+    trace_log: Option<TraceLog>,
+    heartbeats: u64,
+    predictor_calls_estimate: u64,
+    /// Hard stop: no trace should need more than this many sim-days.
+    max_sim_time: SimTime,
+}
+
+impl World {
+    pub fn new(cfg: SimConfig, trace: JobTrace) -> Self {
+        let cluster = Cluster::build(&cfg);
+        let cm = ConfigManager::new(cfg.pms);
+        let mut queue = EventQueue::new();
+        // Stagger node heartbeats uniformly across the interval.
+        let hb_ms = (cfg.heartbeat_s * 1e3) as u64;
+        for n in 0..cfg.nodes() {
+            let offset = hb_ms * n as u64 / cfg.nodes() as u64;
+            queue.schedule_at(SimTime::from_millis(offset), Event::Heartbeat(NodeId(n as u32)));
+        }
+        for (i, spec) in trace.jobs.iter().enumerate() {
+            queue.schedule_at(
+                SimTime::from_secs_f64(spec.submit_s),
+                Event::JobArrival(i as u32),
+            );
+        }
+        let exec = match cfg.exec {
+            ExecMode::Real => Some(ExecEngine::new(cfg.seed)),
+            ExecMode::Synthetic => None,
+        };
+        let rng = Rng::new(cfg.seed);
+        Self {
+            cluster,
+            nn: NameNode::new(),
+            jobs: Vec::new(),
+            costs: Vec::new(),
+            cm,
+            queue,
+            rng,
+            pending_specs: trace.jobs,
+            arrived: 0,
+            exec,
+            records: Vec::new(),
+            trace_log: None,
+            heartbeats: 0,
+            predictor_calls_estimate: 0,
+            max_sim_time: SimTime::from_secs_f64(30.0 * 24.0 * 3600.0),
+            cfg,
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.queue.now()
+    }
+
+    /// Advance the clock without processing events (test helper for
+    /// timeout paths; panics if it would skip scheduled events backwards).
+    pub fn advance(&mut self, dt: SimTime) {
+        self.queue.advance_to(self.queue.now() + dt);
+    }
+
+    fn all_done(&self) -> bool {
+        self.arrived == self.pending_specs.len() && self.jobs.iter().all(|j| j.is_done())
+    }
+
+    /// Immutable snapshot for the scheduler.
+    pub fn view(&self) -> SchedView<'_> {
+        SchedView {
+            cfg: &self.cfg,
+            cluster: &self.cluster,
+            jobs: &self.jobs,
+            cm: &self.cm,
+            now: self.queue.now(),
+        }
+    }
+
+    /// Capture a per-task execution trace (Gantt/JSON export).
+    pub fn enable_trace(&mut self) {
+        self.trace_log = Some(TraceLog::new());
+    }
+
+    /// The captured trace, if enabled.
+    pub fn trace_log(&self) -> Option<&TraceLog> {
+        self.trace_log.as_ref()
+    }
+
+    /// Number of jobs in the driving trace (arrived or not).
+    pub fn trace_len(&self) -> usize {
+        self.pending_specs.len()
+    }
+
+    /// Process exactly one event; false when the queue is empty.
+    pub fn step_one(
+        &mut self,
+        scheduler: &mut dyn Scheduler,
+        predictor: &mut dyn Predictor,
+    ) -> bool {
+        match self.queue.pop() {
+            Some((_, ev)) => {
+                self.handle(ev, scheduler, predictor);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drive the loop to completion.
+    pub fn run(&mut self, scheduler: &mut dyn Scheduler, predictor: &mut dyn Predictor) {
+        while let Some((at, ev)) = self.queue.pop() {
+            if at > self.max_sim_time {
+                panic!(
+                    "simulation exceeded {} — livelock? ({} jobs unfinished)",
+                    self.max_sim_time,
+                    self.jobs.iter().filter(|j| !j.is_done()).count()
+                );
+            }
+            self.handle(ev, scheduler, predictor);
+            if self.all_done() {
+                break;
+            }
+        }
+        assert!(
+            self.all_done(),
+            "event queue drained with {} unfinished jobs",
+            self.jobs.iter().filter(|j| !j.is_done()).count()
+        );
+    }
+
+    fn handle(
+        &mut self,
+        ev: Event,
+        scheduler: &mut dyn Scheduler,
+        predictor: &mut dyn Predictor,
+    ) {
+        match ev {
+            Event::JobArrival(idx) => {
+                let spec = self.pending_specs[idx as usize].clone();
+                self.arrived += 1;
+                let now = self.now();
+                let id = JobId(self.jobs.len() as u32);
+                let cost = TaskCost::new(&self.cfg, &spec);
+                let mut job = JobState::create(
+                    id,
+                    spec,
+                    &self.cfg,
+                    &mut self.nn,
+                    &mut self.rng,
+                    now,
+                );
+                // Seed the shuffle prior from the cost model (the paper
+                // estimates t_s from network bandwidth, §2.1 Table 1).
+                let inter_mb: f64 = job
+                    .block_mb
+                    .iter()
+                    .map(|&mb| cost.map_output_mb(mb))
+                    .sum();
+                job.stats = crate::predictor::JobStats::new(
+                    self.cfg.prior_map_s,
+                    cost.t_shuffle_estimate(inter_mb, job.total_maps(), job.total_reduces()),
+                );
+                self.jobs.push(job);
+                self.costs.push(cost);
+                if let Some(exec) = &mut self.exec {
+                    exec.register_job(id, &self.jobs[id.idx()]);
+                }
+                let actions = scheduler.on_job_added(&self.view(), id, predictor);
+                self.predictor_calls_estimate += 1;
+                self.apply_actions(actions);
+            }
+            Event::Heartbeat(node) => {
+                self.heartbeats += 1;
+                let actions = scheduler.on_heartbeat(&self.view(), node, predictor);
+                self.apply_actions(actions);
+                self.match_reconfigs();
+                // Recurring heartbeat while work remains.
+                if !self.all_done() {
+                    self.queue.schedule_in(
+                        SimTime::from_secs_f64(self.cfg.heartbeat_s),
+                        Event::Heartbeat(node),
+                    );
+                }
+            }
+            Event::MapDone { job, task, node } => {
+                let now = self.now();
+                if let Some(tl) = &mut self.trace_log {
+                    if let crate::mapreduce::TaskState::Running { started, local, .. } =
+                        *self.jobs[job.idx()].map_state(task)
+                    {
+                        tl.record_span(TaskSpan {
+                            job,
+                            kind: crate::mapreduce::TaskKind::Map,
+                            task: task.0,
+                            node,
+                            start: started,
+                            end: now,
+                            local,
+                        });
+                    }
+                }
+                self.jobs[job.idx()].mark_map_finished(task, now);
+                let vm = self.cluster.vm_mut(node);
+                debug_assert!(vm.busy_map > 0);
+                vm.busy_map -= 1;
+                if let Some(exec) = &mut self.exec {
+                    exec.run_map_task(job, task, &self.jobs[job.idx()]);
+                }
+                let actions = scheduler.on_task_finished(&self.view(), job, predictor);
+                self.predictor_calls_estimate += 1;
+                self.apply_actions(actions);
+                self.match_reconfigs();
+            }
+            Event::ReduceDone { job, task, node } => {
+                let now = self.now();
+                if let Some(tl) = &mut self.trace_log {
+                    if let crate::mapreduce::TaskState::Running { started, .. } =
+                        *self.jobs[job.idx()].reduce_state(task)
+                    {
+                        tl.record_span(TaskSpan {
+                            job,
+                            kind: crate::mapreduce::TaskKind::Reduce,
+                            task: task.0,
+                            node,
+                            start: started,
+                            end: now,
+                            local: false,
+                        });
+                    }
+                }
+                self.jobs[job.idx()].mark_reduce_finished(task, now);
+                let vm = self.cluster.vm_mut(node);
+                debug_assert!(vm.busy_reduce > 0);
+                vm.busy_reduce -= 1;
+                if let Some(exec) = &mut self.exec {
+                    exec.run_reduce_task(job, task, &self.jobs[job.idx()]);
+                }
+                if self.jobs[job.idx()].is_done() {
+                    self.record_job(job);
+                }
+                let actions = scheduler.on_task_finished(&self.view(), job, predictor);
+                self.predictor_calls_estimate += 1;
+                self.apply_actions(actions);
+                self.match_reconfigs();
+            }
+            Event::HotplugDone { from, to, task } => {
+                // The released core was unplugged at grant time; now it
+                // arrives at the target VM and the delayed task launches.
+                self.cluster
+                    .plug_spare_core(to)
+                    .expect("hot-plug grant lost its spare core");
+                if let Some(tl) = &mut self.trace_log {
+                    let at = self.queue.now();
+                    tl.record_hotplug(HotplugMark { at, from, to });
+                }
+                let job = task.job;
+                let js = &self.jobs[job.idx()];
+                let tid = task.id;
+                if js.map_state(tid).is_awaiting() {
+                    self.launch_map(job, tid, to, true);
+                } else {
+                    // Task was cancelled while the core was in flight; the
+                    // core simply stays with the target VM (it can host
+                    // any future local task or be re-released).
+                }
+            }
+        }
+    }
+
+    /// Validate + apply scheduler actions.
+    pub(crate) fn apply_actions(&mut self, actions: Vec<Action>) {
+        for a in actions {
+            match a {
+                Action::LaunchMap { job, task, node } => {
+                    let local = self.jobs[job.idx()].map_is_local(task, node);
+                    assert!(
+                        self.cluster.vm(node).free_map_slots() > 0,
+                        "scheduler overfilled map slots on {node:?}"
+                    );
+                    self.launch_map(job, task, node, local);
+                }
+                Action::LaunchReduce { job, task, node } => {
+                    assert!(
+                        self.cluster.vm(node).free_reduce_slots() > 0,
+                        "scheduler overfilled reduce slots on {node:?}"
+                    );
+                    assert!(
+                        self.jobs[job.idx()].map_finished(),
+                        "reduce launched before map phase finished"
+                    );
+                    self.launch_reduce(job, task, node);
+                }
+                Action::AwaitReconfig {
+                    job,
+                    task,
+                    target,
+                    release_from,
+                } => {
+                    let js = &mut self.jobs[job.idx()];
+                    debug_assert!(js.map_is_local(task, target));
+                    js.mark_map_awaiting(task, target);
+                    let tref = TaskRef::map(job, task.0);
+                    self.cm
+                        .enqueue_assign(self.cluster.pm_of(target), target, tref);
+                    self.cm
+                        .enqueue_release(self.cluster.pm_of(release_from), release_from);
+                }
+                Action::RegisterRelease { node } => {
+                    self.cm.enqueue_release(self.cluster.pm_of(node), node);
+                }
+                Action::CancelAwait { job, task } => {
+                    let tref = TaskRef::map(job, task.0);
+                    self.cm.cancel_task(tref);
+                    self.jobs[job.idx()].mark_map_await_cancelled(task);
+                }
+                Action::SetAlloc {
+                    job,
+                    map_slots,
+                    reduce_slots,
+                } => {
+                    let js = &mut self.jobs[job.idx()];
+                    js.alloc_map_slots = map_slots;
+                    js.alloc_reduce_slots = reduce_slots;
+                }
+            }
+        }
+        debug_assert!(self.cluster.check_invariants().is_ok());
+    }
+
+    /// Match AQ/RQ queues and start granted hot-plugs.
+    pub(crate) fn match_reconfigs(&mut self) {
+        let grants = self.cm.match_queues(&self.cluster);
+        for g in grants {
+            match self.cluster.unplug_core(g.from) {
+                Ok(()) => {
+                    self.queue.schedule_in(
+                        SimTime::from_millis(self.cfg.hotplug_ms),
+                        Event::HotplugDone {
+                            from: g.from,
+                            to: g.to,
+                            task: g.task,
+                        },
+                    );
+                }
+                Err(_) => {
+                    // Release went stale between match and apply (shouldn't
+                    // happen — match checks can_release — but stay safe):
+                    // put the task back to pending.
+                    let js = &mut self.jobs[g.task.job.idx()];
+                    if js.map_state(g.task.id).is_awaiting() {
+                        js.mark_map_await_cancelled(g.task.id);
+                    }
+                }
+            }
+        }
+    }
+
+    pub(crate) fn launch_map(&mut self, job: JobId, task: TaskId, node: NodeId, local: bool) {
+        let now = self.now();
+        let js = &mut self.jobs[job.idx()];
+        js.mark_map_launched(task, node, local, now);
+        self.cluster.vm_mut(node).busy_map += 1;
+        let block_mb = js.block_mb[task.0 as usize];
+        let secs = self.costs[job.idx()].map_secs(block_mb, local, &mut self.rng);
+        self.queue.schedule_in(
+            SimTime::from_secs_f64(secs),
+            Event::MapDone { job, task, node },
+        );
+    }
+
+    fn launch_reduce(&mut self, job: JobId, task: TaskId, node: NodeId) {
+        let now = self.now();
+        let js = &mut self.jobs[job.idx()];
+        js.mark_reduce_launched(task, node, now);
+        self.cluster.vm_mut(node).busy_reduce += 1;
+        // Shuffle volume: measured in real mode, modeled otherwise.
+        let inter_mb = if let Some(exec) = &self.exec {
+            exec.intermediate_mb(job)
+        } else {
+            let cost = &self.costs[job.idx()];
+            self.jobs[job.idx()]
+                .block_mb
+                .iter()
+                .map(|&mb| cost.map_output_mb(mb))
+                .sum()
+        };
+        let js = &self.jobs[job.idx()];
+        let secs = self.costs[job.idx()].reduce_secs(
+            inter_mb,
+            js.total_maps(),
+            js.total_reduces(),
+            &mut self.rng,
+        );
+        self.queue.schedule_in(
+            SimTime::from_secs_f64(secs),
+            Event::ReduceDone { job, task, node },
+        );
+    }
+
+    fn record_job(&mut self, job: JobId) {
+        let js = &self.jobs[job.idx()];
+        let completion = js.completion_time().expect("job done");
+        self.records.push(JobRecord {
+            id: js.id,
+            job_type: js.spec.job_type,
+            input_mb: js.spec.input_mb,
+            submitted: js.submitted,
+            finished: js.submitted + completion,
+            completion_s: completion.as_secs_f64(),
+            map_phase_s: js
+                .map_phase_duration()
+                .map(|d| d.as_secs_f64())
+                .unwrap_or(0.0),
+            deadline_s: js.spec.deadline_s,
+            met_deadline: js.met_deadline(),
+            local_maps: js.local_maps,
+            nonlocal_maps: js.nonlocal_maps,
+            maps: js.total_maps(),
+            reduces: js.total_reduces(),
+        });
+    }
+
+    /// Access the real-exec engine (E2E verification).
+    pub fn exec_engine(&self) -> Option<&ExecEngine> {
+        self.exec.as_ref()
+    }
+
+    pub fn into_metrics(self, scheduler: &str) -> RunMetrics {
+        let makespan_s = self
+            .records
+            .iter()
+            .map(|r| r.finished.as_secs_f64())
+            .fold(0.0f64, f64::max);
+        RunMetrics {
+            scheduler: scheduler.to_string(),
+            jobs: self.records,
+            makespan_s,
+            hotplugs: self.cm.hotplugs,
+            heartbeats: self.heartbeats,
+            events: self.queue.processed(),
+            predictor_calls: self.predictor_calls_estimate,
+            wall_s: 0.0,
+        }
+    }
+}

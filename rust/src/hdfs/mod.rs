@@ -1,0 +1,219 @@
+//! HDFS-like storage substrate: block-structured files, random k-way
+//! replication across DataNodes (= VMs), and the NameNode metadata the
+//! schedulers query for data locality.
+//!
+//! Placement follows Hadoop 0.20's rack-unaware default closely enough for
+//! the paper's purposes: each block's replicas land on `replication`
+//! distinct nodes chosen uniformly (the paper's testbed is a single rack).
+
+use std::collections::HashMap;
+
+use crate::cluster::NodeId;
+use crate::util::Rng;
+
+/// A stored file (one MapReduce job input or output).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FileId(pub u32);
+
+/// Block index within a file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BlockId {
+    pub file: FileId,
+    pub index: u32,
+}
+
+/// Metadata for one block.
+#[derive(Clone, Debug)]
+pub struct BlockInfo {
+    pub id: BlockId,
+    pub size_mb: f64,
+    /// Nodes holding a replica (distinct).
+    pub replicas: Vec<NodeId>,
+}
+
+/// NameNode: file -> blocks -> replica locations.
+#[derive(Debug, Default)]
+pub struct NameNode {
+    files: HashMap<FileId, Vec<BlockInfo>>,
+    next_file: u32,
+}
+
+impl NameNode {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create a file of `total_mb` split into `block_mb` blocks, each
+    /// replicated on `replication` distinct nodes of the `num_nodes`
+    /// cluster. Returns the new file id.
+    pub fn create_file(
+        &mut self,
+        total_mb: f64,
+        block_mb: f64,
+        replication: usize,
+        num_nodes: usize,
+        rng: &mut Rng,
+    ) -> FileId {
+        assert!(block_mb > 0.0 && total_mb >= 0.0);
+        assert!(replication >= 1 && replication <= num_nodes);
+        let id = FileId(self.next_file);
+        self.next_file += 1;
+        let full_blocks = (total_mb / block_mb).floor() as u32;
+        let tail = total_mb - full_blocks as f64 * block_mb;
+        let mut blocks = Vec::new();
+        let n_blocks = full_blocks + if tail > 1e-9 { 1 } else { 0 };
+        for i in 0..n_blocks {
+            let size = if i < full_blocks { block_mb } else { tail };
+            let replicas = rng
+                .sample_indices(num_nodes, replication)
+                .into_iter()
+                .map(|n| NodeId(n as u32))
+                .collect();
+            blocks.push(BlockInfo {
+                id: BlockId { file: id, index: i },
+                size_mb: size,
+                replicas,
+            });
+        }
+        self.files.insert(id, blocks);
+        id
+    }
+
+    pub fn blocks(&self, file: FileId) -> &[BlockInfo] {
+        self.files
+            .get(&file)
+            .map(|b| b.as_slice())
+            .unwrap_or(&[])
+    }
+
+    pub fn num_blocks(&self, file: FileId) -> usize {
+        self.blocks(file).len()
+    }
+
+    pub fn block(&self, id: BlockId) -> Option<&BlockInfo> {
+        self.files.get(&id.file)?.get(id.index as usize)
+    }
+
+    /// Is a replica of `block` resident on `node`?
+    pub fn is_local(&self, id: BlockId, node: NodeId) -> bool {
+        self.block(id)
+            .map(|b| b.replicas.contains(&node))
+            .unwrap_or(false)
+    }
+
+    /// Build the inverted node -> block-indices map for one file (the
+    /// locality index the scheduler keeps hot; see `mapreduce::JobState`).
+    pub fn locality_index(&self, file: FileId, num_nodes: usize) -> Vec<Vec<u32>> {
+        let mut idx = vec![Vec::new(); num_nodes];
+        for b in self.blocks(file) {
+            for &r in &b.replicas {
+                idx[r.idx()].push(b.id.index);
+            }
+        }
+        idx
+    }
+
+    /// Fraction of (block, node) pairs that are replicas — diagnostic used
+    /// by the locality_study example.
+    pub fn replica_density(&self, file: FileId, num_nodes: usize) -> f64 {
+        let blocks = self.blocks(file);
+        if blocks.is_empty() || num_nodes == 0 {
+            return 0.0;
+        }
+        let replicas: usize = blocks.iter().map(|b| b.replicas.len()).sum();
+        replicas as f64 / (blocks.len() * num_nodes) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nn_with_file(total_mb: f64, block_mb: f64) -> (NameNode, FileId) {
+        let mut nn = NameNode::new();
+        let mut rng = Rng::new(11);
+        let f = nn.create_file(total_mb, block_mb, 3, 10, &mut rng);
+        (nn, f)
+    }
+
+    #[test]
+    fn block_count_and_sizes() {
+        let (nn, f) = nn_with_file(200.0, 64.0);
+        let blocks = nn.blocks(f);
+        assert_eq!(blocks.len(), 4); // 3 full + 8MB tail
+        assert_eq!(blocks[0].size_mb, 64.0);
+        assert!((blocks[3].size_mb - 8.0).abs() < 1e-9);
+        let total: f64 = blocks.iter().map(|b| b.size_mb).sum();
+        assert!((total - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_multiple_has_no_tail() {
+        let (nn, f) = nn_with_file(128.0, 64.0);
+        assert_eq!(nn.num_blocks(f), 2);
+    }
+
+    #[test]
+    fn empty_file() {
+        let (nn, f) = nn_with_file(0.0, 64.0);
+        assert_eq!(nn.num_blocks(f), 0);
+    }
+
+    #[test]
+    fn replicas_distinct_and_in_range() {
+        let (nn, f) = nn_with_file(640.0, 64.0);
+        for b in nn.blocks(f) {
+            assert_eq!(b.replicas.len(), 3);
+            let mut r: Vec<u32> = b.replicas.iter().map(|n| n.0).collect();
+            r.sort_unstable();
+            r.dedup();
+            assert_eq!(r.len(), 3, "replicas must be distinct");
+            assert!(r.iter().all(|&n| n < 10));
+        }
+    }
+
+    #[test]
+    fn is_local_consistent_with_replicas() {
+        let (nn, f) = nn_with_file(320.0, 64.0);
+        for b in nn.blocks(f) {
+            for n in 0..10u32 {
+                assert_eq!(
+                    nn.is_local(b.id, NodeId(n)),
+                    b.replicas.contains(&NodeId(n))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn locality_index_inverts() {
+        let (nn, f) = nn_with_file(640.0, 64.0);
+        let idx = nn.locality_index(f, 10);
+        for (node, block_ids) in idx.iter().enumerate() {
+            for &bi in block_ids {
+                assert!(nn.is_local(
+                    BlockId { file: f, index: bi },
+                    NodeId(node as u32)
+                ));
+            }
+        }
+        // every replica appears exactly once in the index
+        let total: usize = idx.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 10 * 3);
+    }
+
+    #[test]
+    fn density_matches_replication() {
+        let (nn, f) = nn_with_file(640.0, 64.0);
+        assert!((nn.replica_density(f, 10) - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn file_ids_unique() {
+        let mut nn = NameNode::new();
+        let mut rng = Rng::new(3);
+        let a = nn.create_file(64.0, 64.0, 1, 4, &mut rng);
+        let b = nn.create_file(64.0, 64.0, 1, 4, &mut rng);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,44 @@
+//! # vcsched
+//!
+//! Deadline-aware MapReduce scheduling through VM reconfiguration on
+//! virtual clusters — a reproduction of Rao & Reddy, *"Scheduling Data
+//! Intensive Workloads through Virtualization on MapReduce based Clouds"*,
+//! IJDPS 3(4), 2012.
+//!
+//! The crate is a three-layer system:
+//!
+//! * **L3 (this crate)** — the coordination contribution: a discrete-event
+//!   virtual-cluster simulator with a real mini-MapReduce engine
+//!   (JobTracker/TaskTrackers, HDFS-like block placement), pluggable
+//!   schedulers (FIFO / Fair / Delay / EDF / the paper's deadline+
+//!   reconfiguration scheduler), and the Xen-style vCPU hot-plug protocol
+//!   (Machine Manager / Configuration Manager with Assign/Release queues).
+//! * **L2/L1 (build-time Python)** — the Resource Predictor's math
+//!   (Eq. 1/7/10 and the Alg. 1 placement scoring) as JAX + Pallas
+//!   kernels, AOT-lowered to HLO text and executed from Rust via PJRT
+//!   ([`runtime`]); Python is never on the scheduling path.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod hdfs;
+pub mod mapreduce;
+pub mod metrics;
+pub mod predictor;
+pub mod prop;
+pub mod reconfig;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::config::SimConfig;
+    pub use crate::coordinator::{self, Report};
+    pub use crate::predictor::{NativePredictor, Predictor};
+    pub use crate::scheduler::SchedulerKind;
+    pub use crate::sim::SimTime;
+    pub use crate::workloads::{self, JobType};
+}

@@ -1,0 +1,323 @@
+//! vcsched CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   simulate    run one trace under one scheduler
+//!   compare     run the same trace under two schedulers, print the diff
+//!   fig2        reproduce Figure 2 (a: fair, b: proposed)
+//!   fig3        reproduce Figure 3 (per-type comparison, Table-2 mix)
+//!   table2      reproduce Table 2 (slot allocations)
+//!   throughput  reproduce the 12% throughput headline
+//!
+//! Common flags: --sched <fifo|fair|delay|edf|deadline_vc> --seed N
+//!   --pms N --scale MB_PER_GB --jobs N --xla (use the PJRT predictor)
+//!   --json (machine-readable output)
+
+use vcsched::config::SimConfig;
+use vcsched::coordinator::{self, Report};
+use vcsched::predictor::{NativePredictor, Predictor};
+use vcsched::runtime::XlaPredictor;
+use vcsched::scheduler::SchedulerKind;
+use vcsched::util::args::Args;
+use vcsched::util::benchkit::Table;
+use vcsched::workloads::trace::JobTrace;
+use vcsched::workloads::{JobType, ALL_JOB_TYPES};
+
+fn main() {
+    vcsched::util::logger::init();
+    let args = Args::parse();
+    let cmd = args.positional(0).unwrap_or("help");
+    match cmd {
+        "simulate" => cmd_simulate(&args),
+        "compare" => cmd_compare(&args),
+        "fig2" => cmd_fig2(&args),
+        "fig3" => cmd_fig3(&args),
+        "table2" => cmd_table2(&args),
+        "throughput" => cmd_throughput(&args),
+        "gantt" => cmd_gantt(&args),
+        "export" => cmd_export(&args),
+        _ => print_help(),
+    }
+}
+
+fn cfg_from(args: &Args) -> SimConfig {
+    let mut cfg = SimConfig::paper();
+    cfg.pms = args.get_usize("pms", cfg.pms);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.validate().expect("invalid config");
+    cfg
+}
+
+fn predictor_from(args: &Args) -> Box<dyn Predictor> {
+    if args.flag("xla") {
+        Box::new(XlaPredictor::load_default().expect(
+            "failed to load artifacts/ — run `make artifacts` first",
+        ))
+    } else {
+        Box::new(NativePredictor::new())
+    }
+}
+
+fn sched_from(args: &Args, default: SchedulerKind) -> SchedulerKind {
+    let name = args.get_str("sched", default.name());
+    SchedulerKind::from_name(name)
+        .unwrap_or_else(|| panic!("unknown scheduler {name:?}"))
+}
+
+fn scale(args: &Args) -> f64 {
+    // MB of simulated input per paper-GB. 100 keeps the full fig2 grid
+    // fast while preserving proportions; use 1024 for full-size runs.
+    args.get_f64("scale", 100.0)
+}
+
+fn report_line(r: &Report) {
+    println!(
+        "{:<12} jobs={:<3} makespan={:>8.1}s mean_ct={:>8.1}s thpt={:>6.2}/h \
+         locality={:>5.1}% misses={:>4.1}% hotplugs={}",
+        r.scheduler,
+        r.completed_jobs(),
+        r.makespan_s,
+        r.mean_completion_s(),
+        r.throughput_jobs_per_hour(),
+        r.locality_pct(),
+        r.miss_rate() * 100.0,
+        r.hotplugs
+    );
+}
+
+fn cmd_simulate(args: &Args) {
+    let cfg = cfg_from(args);
+    let kind = sched_from(args, SchedulerKind::DeadlineVc);
+    let n = args.get_usize("jobs", 25);
+    let trace = JobTrace::poisson(&cfg, n, 5.0, 1.6..3.0, cfg.seed);
+    let mut p = predictor_from(args);
+    let r = coordinator::run_simulation_with(&cfg, kind, &trace, p.as_mut());
+    if args.flag("json") {
+        println!("{}", r.to_json().render());
+    } else {
+        report_line(&r);
+    }
+}
+
+fn cmd_compare(args: &Args) {
+    let cfg = cfg_from(args);
+    let a = SchedulerKind::from_name(args.get_str("a", "fair")).expect("--a");
+    let b = SchedulerKind::from_name(args.get_str("b", "deadline_vc")).expect("--b");
+    let n = args.get_usize("jobs", 25);
+    let trace = JobTrace::poisson(&cfg, n, 5.0, 1.6..3.0, cfg.seed);
+    let (ra, rb) = coordinator::compare(&cfg, a, b, &trace);
+    report_line(&ra);
+    report_line(&rb);
+    let gain = (rb.throughput_jobs_per_hour() / ra.throughput_jobs_per_hour() - 1.0) * 100.0;
+    println!("throughput gain {}: {gain:+.1}%", b.name());
+}
+
+fn cmd_fig2(args: &Args) {
+    let cfg = cfg_from(args);
+    let trace = JobTrace::fig2_grid(scale(args));
+    for (label, kind) in [
+        ("Figure 2(a) — Fair Scheduler", SchedulerKind::Fair),
+        ("Figure 2(b) — Proposed Scheduler", SchedulerKind::DeadlineVc),
+    ] {
+        let r = coordinator::run_simulation(&cfg, kind, &trace);
+        println!("\n{label}");
+        let mut t = Table::new(&["job", "2GB", "4GB", "6GB", "8GB", "10GB"]);
+        for jt in ALL_JOB_TYPES {
+            let mut row = vec![jt.name().to_string()];
+            for gb in [2.0, 4.0, 6.0, 8.0, 10.0] {
+                let mb = gb * scale(args);
+                let v = r
+                    .completion_for(jt, mb)
+                    .map(|s| format!("{s:.0}s"))
+                    .unwrap_or_else(|| "-".into());
+                row.push(v);
+            }
+            t.row(&row);
+        }
+        t.print();
+    }
+}
+
+fn cmd_fig3(args: &Args) {
+    let cfg = cfg_from(args);
+    let trace = JobTrace::table2(scale(args));
+    let (fair, prop) = coordinator::compare(
+        &cfg,
+        SchedulerKind::Fair,
+        SchedulerKind::DeadlineVc,
+        &trace,
+    );
+    println!("Figure 3 — Job completion times, Fair vs Proposed (Table-2 mix)");
+    let mut t = Table::new(&["job", "fair", "proposed", "delta"]);
+    for jt in ALL_JOB_TYPES {
+        let f = fair.mean_completion_for(jt).unwrap_or(0.0);
+        let p = prop.mean_completion_for(jt).unwrap_or(0.0);
+        t.row(&[
+            jt.name().to_string(),
+            format!("{f:.0}s"),
+            format!("{p:.0}s"),
+            format!("{:+.1}%", (p / f - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_table2(args: &Args) {
+    let cfg = cfg_from(args);
+    let mut p = predictor_from(args);
+    println!("Table 2 — minimum slots to meet completion-time goals");
+    let mut t = Table::new(&["job", "deadline", "input", "map slots", "reduce slots"]);
+    let rows: [(JobType, f64, f64); 5] = [
+        (JobType::Grep, 650.0, 10.0),
+        (JobType::WordCount, 520.0, 5.0),
+        (JobType::Sort, 500.0, 10.0),
+        (JobType::PermutationGenerator, 850.0, 4.0),
+        (JobType::InvertedIndex, 720.0, 8.0),
+    ];
+    for (jt, d, gb) in rows {
+        let spec = vcsched::workloads::JobSpec::new(jt, gb * scale(args)).with_deadline(d);
+        let demand = vcsched::predictor::demand_from_spec(&cfg, &spec);
+        let s = p.solve_slots(&[demand])[0];
+        t.row(&[
+            jt.name().to_string(),
+            format!("{d:.0}s"),
+            format!("{gb:.0}GB"),
+            s.map_slots.to_string(),
+            s.reduce_slots.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_throughput(args: &Args) {
+    let cfg = cfg_from(args);
+    let n = args.get_usize("jobs", 30);
+    let seeds = args.get_usize("runs", 3);
+    let mut gains = Vec::new();
+    for s in 0..seeds as u64 {
+        let trace = JobTrace::poisson(&cfg, n, 5.0, 1.6..3.0, cfg.seed + s);
+        let (fair, prop) = coordinator::compare(
+            &cfg,
+            SchedulerKind::Fair,
+            SchedulerKind::DeadlineVc,
+            &trace,
+        );
+        let g =
+            (prop.throughput_jobs_per_hour() / fair.throughput_jobs_per_hour() - 1.0) * 100.0;
+        println!(
+            "seed {s}: fair {:.2}/h proposed {:.2}/h gain {g:+.1}%",
+            fair.throughput_jobs_per_hour(),
+            prop.throughput_jobs_per_hour()
+        );
+        gains.push(g);
+    }
+    let mean = gains.iter().sum::<f64>() / gains.len() as f64;
+    println!("mean throughput gain: {mean:+.1}% (paper: ~12%)");
+}
+
+fn cmd_gantt(args: &Args) {
+    use vcsched::coordinator::World;
+    let cfg = cfg_from(args);
+    let kind = sched_from(args, SchedulerKind::DeadlineVc);
+    let n = args.get_usize("jobs", 8);
+    let trace = JobTrace::poisson(&cfg, n, 10.0, 1.6..3.0, cfg.seed);
+    let mut sched = kind.build(&cfg);
+    let mut p = predictor_from(args);
+    let mut world = World::new(cfg.clone(), trace);
+    world.enable_trace();
+    world.run(sched.as_mut(), p.as_mut());
+    let tl = world.trace_log().unwrap();
+    if args.flag("json") {
+        println!("{}", tl.to_json().render());
+    } else {
+        print!("{}", tl.render_gantt(cfg.nodes(), args.get_usize("width", 100)));
+        println!("span locality: {:.1}%", tl.span_locality_pct());
+    }
+}
+
+/// Write every paper artifact's data as JSON + CSV under --out (default
+/// results/): fig2a.csv, fig2b.csv, fig3.csv, table2.csv, headline.json.
+fn cmd_export(args: &Args) {
+    use std::fmt::Write as _;
+    let cfg = cfg_from(args);
+    let out = std::path::PathBuf::from(args.get_str("out", "results"));
+    std::fs::create_dir_all(&out).expect("mkdir results");
+    let scale = args.get_f64("scale", 1024.0);
+
+    // fig2 a/b
+    let trace = JobTrace::fig2_grid_on(&cfg, scale);
+    for (name, kind) in [("fig2a", SchedulerKind::Fair), ("fig2b", SchedulerKind::DeadlineVc)] {
+        let r = coordinator::run_simulation(&cfg, kind, &trace);
+        let mut csv = String::from("job,input_gb,completion_s\n");
+        for jt in ALL_JOB_TYPES {
+            for gb in [2.0, 4.0, 6.0, 8.0, 10.0] {
+                if let Some(ct) = r.completion_for(jt, gb * scale) {
+                    let _ = writeln!(csv, "{},{gb},{ct:.1}", jt.name());
+                }
+            }
+        }
+        std::fs::write(out.join(format!("{name}.csv")), csv).unwrap();
+        std::fs::write(
+            out.join(format!("{name}.json")),
+            r.to_json().render(),
+        )
+        .unwrap();
+    }
+
+    // fig3
+    let trace = JobTrace::table2(scale);
+    let (fair, prop) = coordinator::compare(&cfg, SchedulerKind::Fair, SchedulerKind::DeadlineVc, &trace);
+    let mut csv = String::from("job,fair_s,proposed_s\n");
+    for jt in ALL_JOB_TYPES {
+        let _ = writeln!(
+            csv,
+            "{},{:.1},{:.1}",
+            jt.name(),
+            fair.mean_completion_for(jt).unwrap_or(0.0),
+            prop.mean_completion_for(jt).unwrap_or(0.0)
+        );
+    }
+    std::fs::write(out.join("fig3.csv"), csv).unwrap();
+
+    // table2
+    let mut p = predictor_from(args);
+    let mut csv = String::from("job,deadline_s,input_gb,map_slots,reduce_slots\n");
+    for (jt, d, gb) in [
+        (JobType::Grep, 650.0, 10.0),
+        (JobType::WordCount, 520.0, 5.0),
+        (JobType::Sort, 500.0, 10.0),
+        (JobType::PermutationGenerator, 850.0, 4.0),
+        (JobType::InvertedIndex, 720.0, 8.0),
+    ] {
+        let spec = vcsched::workloads::JobSpec::new(jt, gb * scale).with_deadline(d);
+        let s = p.solve_slots(&[vcsched::predictor::demand_from_spec(&cfg, &spec)])[0];
+        let _ = writeln!(csv, "{},{d},{gb},{},{}", jt.name(), s.map_slots, s.reduce_slots);
+    }
+    std::fs::write(out.join("table2.csv"), csv).unwrap();
+
+    // headline
+    let runs = args.get_usize("runs", 3);
+    let mut arr = vcsched::util::json::Json::arr();
+    for s in 0..runs as u64 {
+        let trace = JobTrace::poisson(&cfg, 30, 5.0, 1.6..3.0, cfg.seed + s);
+        let (f, pr) = coordinator::compare(&cfg, SchedulerKind::Fair, SchedulerKind::DeadlineVc, &trace);
+        arr = arr.push(
+            vcsched::util::json::Json::obj()
+                .set("seed", cfg.seed + s)
+                .set("fair_thpt", f.throughput_jobs_per_hour())
+                .set("proposed_thpt", pr.throughput_jobs_per_hour())
+                .set("fair_locality", f.locality_pct())
+                .set("proposed_locality", pr.locality_pct()),
+        );
+    }
+    std::fs::write(out.join("headline.json"), arr.render()).unwrap();
+    println!("wrote fig2a/b, fig3, table2, headline under {}", out.display());
+}
+
+fn print_help() {
+    println!(
+        "vcsched — deadline-aware MapReduce scheduling on virtual clusters\n\
+         usage: vcsched <simulate|compare|fig2|fig3|table2|throughput|gantt|export> [flags]\n\
+         flags: --sched K --a K --b K --seed N --pms N --jobs N --runs N\n\
+         \x20      --scale MB_PER_GB --xla --json"
+    );
+}

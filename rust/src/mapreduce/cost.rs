@@ -1,0 +1,195 @@
+//! Task-duration cost model (synthetic mode) shared by the coordinator.
+//!
+//! Map task:   scan time (local disk or remote fetch over NIC) + CPU.
+//! Reduce task: copy its shuffle partition from every mapper (u_m copies
+//! over the NIC) + sort/merge + reduce CPU.
+//!
+//! Timing is deterministic given the RNG stream (multiplicative lognormal-
+//! ish jitter from `SimConfig::jitter_std`).
+
+use crate::config::SimConfig;
+use crate::util::Rng;
+use crate::workloads::JobSpec;
+
+/// Hadoop's `mapred.reduce.parallel.copies` default: each reducer fetches
+/// from this many mappers concurrently during the copy phase.
+pub const PARALLEL_COPIES: f64 = 5.0;
+
+/// Computes simulated task durations for one job.
+#[derive(Clone, Debug)]
+pub struct TaskCost {
+    map_mb_per_s: f64,
+    reduce_mb_per_s: f64,
+    selectivity: f64,
+    reduce_cpu_factor: f64,
+    net_mbps: f64,
+    disk_mbps: f64,
+    jitter_std: f64,
+}
+
+impl TaskCost {
+    pub fn new(cfg: &SimConfig, spec: &JobSpec) -> Self {
+        let m = spec.job_type.cost_model();
+        Self {
+            map_mb_per_s: m.map_mb_per_s,
+            reduce_mb_per_s: m.reduce_mb_per_s,
+            selectivity: m.selectivity,
+            reduce_cpu_factor: m.reduce_cpu_factor,
+            net_mbps: cfg.net_mbps,
+            disk_mbps: cfg.disk_mbps,
+            jitter_std: cfg.jitter_std,
+        }
+    }
+
+    fn jitter(&self, rng: &mut Rng) -> f64 {
+        if self.jitter_std <= 0.0 {
+            1.0
+        } else {
+            rng.normal_clamped(1.0, self.jitter_std, 0.6, 1.8)
+        }
+    }
+
+    /// Map task duration in seconds. A non-local task first pulls its
+    /// block from a replica over the network (the paper's "expensive data
+    /// transfer from a remote node").
+    pub fn map_secs(&self, block_mb: f64, local: bool, rng: &mut Rng) -> f64 {
+        let io = if local {
+            block_mb / self.disk_mbps
+        } else {
+            block_mb / self.net_mbps
+        };
+        let cpu = block_mb / self.map_mb_per_s;
+        (io + cpu) * self.jitter(rng)
+    }
+
+    /// Intermediate MB one map task over `block_mb` feeds to *all*
+    /// reducers together.
+    pub fn map_output_mb(&self, block_mb: f64) -> f64 {
+        block_mb * self.selectivity
+    }
+
+    /// One shuffle copy (mapper -> reducer) of `mb`, seconds. Copies run
+    /// `PARALLEL_COPIES`-wide per reducer, so the effective per-copy wall
+    /// time divides by the fetch parallelism.
+    pub fn copy_secs(&self, mb: f64) -> f64 {
+        mb / self.net_mbps / PARALLEL_COPIES
+    }
+
+    /// Reduce task duration: copy each mapper's partition + sort+reduce.
+    ///
+    /// `total_intermediate_mb` is the job-wide shuffle volume; each of the
+    /// `reducers` takes an even share, copied in `maps` pieces.
+    pub fn reduce_secs(
+        &self,
+        total_intermediate_mb: f64,
+        maps: u32,
+        reducers: u32,
+        rng: &mut Rng,
+    ) -> f64 {
+        let share_mb = total_intermediate_mb / reducers.max(1) as f64;
+        // Copy phase: `maps` sequential fetches of share/maps MB each —
+        // bandwidth-bound overall, but each copy pays a fixed setup cost
+        // (this is the t_s the predictor estimates).
+        let per_copy_mb = share_mb / maps.max(1) as f64;
+        let copy = (0..maps)
+            .map(|_| self.copy_setup_secs() + self.copy_secs(per_copy_mb))
+            .sum::<f64>();
+        let sort_reduce = share_mb / self.reduce_mb_per_s * self.reduce_cpu_factor;
+        (copy + sort_reduce) * self.jitter(rng)
+    }
+
+    /// Fixed per-copy connection setup (dominates t_s for small shuffles).
+    pub fn copy_setup_secs(&self) -> f64 {
+        0.01
+    }
+
+    /// Jitter-free map duration (predictor priors / Table-2 bench).
+    pub fn map_secs_nominal(&self, block_mb: f64, local: bool) -> f64 {
+        let io = if local {
+            block_mb / self.disk_mbps
+        } else {
+            block_mb / self.net_mbps
+        };
+        io + block_mb / self.map_mb_per_s
+    }
+
+    /// Jitter-free reduce duration (predictor priors / Table-2 bench).
+    pub fn reduce_secs_nominal(&self, total_intermediate_mb: f64, maps: u32, reducers: u32) -> f64 {
+        let share_mb = total_intermediate_mb / reducers.max(1) as f64;
+        let per_copy_mb = share_mb / maps.max(1) as f64;
+        let copy = maps as f64 * (self.copy_setup_secs() + self.copy_secs(per_copy_mb));
+        copy + share_mb / self.reduce_mb_per_s * self.reduce_cpu_factor
+    }
+
+    /// The model's per-copy time for the predictor prior: setup + the
+    /// bandwidth share of an "average" copy.
+    pub fn t_shuffle_estimate(&self, total_intermediate_mb: f64, maps: u32, reducers: u32) -> f64 {
+        let copies = (maps.max(1) as u64 * reducers.max(1) as u64) as f64;
+        self.copy_setup_secs() + self.copy_secs(total_intermediate_mb / copies)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::JobType;
+
+    fn cost(jt: JobType) -> TaskCost {
+        let cfg = SimConfig {
+            jitter_std: 0.0,
+            ..SimConfig::paper()
+        };
+        TaskCost::new(&cfg, &JobSpec::new(jt, 640.0))
+    }
+
+    #[test]
+    fn local_faster_than_remote() {
+        let c = cost(JobType::WordCount);
+        let mut rng = Rng::new(1);
+        let local = c.map_secs(64.0, true, &mut rng);
+        let remote = c.map_secs(64.0, false, &mut rng);
+        assert!(remote > local, "{remote} <= {local}");
+        // The gap is the paper's motivation: remote adds ~block/net time.
+        assert!((remote - local) > 0.3);
+    }
+
+    #[test]
+    fn map_time_scales_with_block() {
+        let c = cost(JobType::Sort);
+        let mut rng = Rng::new(2);
+        let t64 = c.map_secs(64.0, true, &mut rng);
+        let t32 = c.map_secs(32.0, true, &mut rng);
+        assert!((t64 / t32 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reduce_cost_grows_with_shuffle_volume() {
+        let c = cost(JobType::PermutationGenerator);
+        let mut rng = Rng::new(3);
+        let small = c.reduce_secs(100.0, 10, 4, &mut rng);
+        let big = c.reduce_secs(1000.0, 10, 4, &mut rng);
+        assert!(big > small * 5.0);
+    }
+
+    #[test]
+    fn jitter_bounded() {
+        let cfg = SimConfig {
+            jitter_std: 0.3,
+            ..SimConfig::paper()
+        };
+        let c = TaskCost::new(&cfg, &JobSpec::new(JobType::Grep, 64.0));
+        let mut rng = Rng::new(4);
+        let base = 64.0 / 400.0 + 64.0 / JobType::Grep.cost_model().map_mb_per_s;
+        for _ in 0..200 {
+            let t = c.map_secs(64.0, true, &mut rng);
+            assert!(t >= base * 0.6 - 1e-9 && t <= base * 1.8 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn t_shuffle_estimate_positive() {
+        let c = cost(JobType::Sort);
+        let ts = c.t_shuffle_estimate(640.0, 10, 8);
+        assert!(ts > 0.0 && ts < 10.0);
+    }
+}

@@ -1,0 +1,405 @@
+//! Per-job state: task tables, phase machine, locality index, statistics.
+
+use crate::cluster::NodeId;
+use crate::config::SimConfig;
+use crate::hdfs::{FileId, NameNode};
+use crate::predictor::JobStats;
+use crate::sim::SimTime;
+use crate::util::Rng;
+use crate::workloads::JobSpec;
+
+use super::task::{TaskId, TaskRef, TaskState};
+
+/// Job index in submission order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u32);
+
+impl JobId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Coarse job phase (paper: map phase dominates locality concerns; reduce
+/// tasks start once the map phase completes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobPhase {
+    MapPhase,
+    ReducePhase,
+    Done,
+}
+
+/// Everything the JobTracker knows about one job.
+#[derive(Clone, Debug)]
+pub struct JobState {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub input_file: FileId,
+    pub submitted: SimTime,
+    pub phase: JobPhase,
+
+    maps: Vec<TaskState>,
+    reduces: Vec<TaskState>,
+    /// node -> indices of map tasks whose block is replicated there.
+    locality: Vec<Vec<u32>>,
+    /// map task -> nodes holding its block (inverse of `locality`,
+    /// precomputed — the Alg. 1 target scan is on the heartbeat hot path
+    /// and rebuilding it per query was ~50% of the scheduler profile).
+    replicas: Vec<Vec<NodeId>>,
+    /// Per-map-task block size (tail block may be smaller).
+    pub block_mb: Vec<f64>,
+
+    pending_map_count: u32,
+    running_map_count: u32,
+    finished_map_count: u32,
+    awaiting_map_count: u32,
+    pending_reduce_count: u32,
+    running_reduce_count: u32,
+    finished_reduce_count: u32,
+
+    /// Locality accounting (map tasks only).
+    pub local_maps: u32,
+    pub nonlocal_maps: u32,
+
+    /// Online Eq. 1 statistics.
+    pub stats: JobStats,
+    /// Latest Eq. 10 answer (the scheduler's concurrency caps).
+    pub alloc_map_slots: u32,
+    pub alloc_reduce_slots: u32,
+
+    finished_at: Option<SimTime>,
+    map_phase_finished_at: Option<SimTime>,
+}
+
+impl JobState {
+    /// Register the job: create its HDFS input file and task tables.
+    pub fn create(
+        id: JobId,
+        spec: JobSpec,
+        cfg: &SimConfig,
+        nn: &mut NameNode,
+        rng: &mut Rng,
+        now: SimTime,
+    ) -> Self {
+        let input_file =
+            nn.create_file(spec.input_mb, cfg.block_mb, cfg.replication, cfg.nodes(), rng);
+        let blocks = nn.blocks(input_file);
+        let n_maps = blocks.len().max(1);
+        let block_mb: Vec<f64> = if blocks.is_empty() {
+            vec![0.0]
+        } else {
+            blocks.iter().map(|b| b.size_mb).collect()
+        };
+        let locality = nn.locality_index(input_file, cfg.nodes());
+        let mut replicas: Vec<Vec<NodeId>> = vec![Vec::with_capacity(cfg.replication); n_maps];
+        for (node, tasks) in locality.iter().enumerate() {
+            for &t in tasks {
+                replicas[t as usize].push(NodeId(node as u32));
+            }
+        }
+        let n_reduces = spec.reducers as usize;
+        Self {
+            id,
+            input_file,
+            submitted: now,
+            phase: JobPhase::MapPhase,
+            replicas,
+            maps: vec![TaskState::Pending; n_maps],
+            reduces: vec![TaskState::Pending; n_reduces],
+            locality,
+            block_mb,
+            pending_map_count: n_maps as u32,
+            running_map_count: 0,
+            finished_map_count: 0,
+            awaiting_map_count: 0,
+            pending_reduce_count: n_reduces as u32,
+            running_reduce_count: 0,
+            finished_reduce_count: 0,
+            local_maps: 0,
+            nonlocal_maps: 0,
+            stats: JobStats::new(cfg.prior_map_s, cfg.prior_shuffle_s),
+            alloc_map_slots: u32::MAX, // unconstrained until the predictor runs
+            alloc_reduce_slots: u32::MAX,
+            finished_at: None,
+            map_phase_finished_at: None,
+            spec,
+        }
+    }
+
+    // ---- counters ----
+
+    pub fn total_maps(&self) -> u32 {
+        self.maps.len() as u32
+    }
+    pub fn total_reduces(&self) -> u32 {
+        self.reduces.len() as u32
+    }
+    pub fn pending_maps(&self) -> u32 {
+        self.pending_map_count
+    }
+    pub fn running_maps(&self) -> u32 {
+        self.running_map_count
+    }
+    pub fn completed_maps(&self) -> u32 {
+        self.finished_map_count
+    }
+    pub fn awaiting_maps(&self) -> u32 {
+        self.awaiting_map_count
+    }
+    pub fn pending_reduces(&self) -> u32 {
+        self.pending_reduce_count
+    }
+    pub fn running_reduces(&self) -> u32 {
+        self.running_reduce_count
+    }
+    pub fn completed_reduces(&self) -> u32 {
+        self.finished_reduce_count
+    }
+
+    /// Maps counted against the job's slot allocation (running + waiting
+    /// on a hot-plug — they hold a claim on a slot-to-be).
+    pub fn scheduled_maps(&self) -> u32 {
+        self.running_map_count + self.awaiting_map_count
+    }
+
+    pub fn map_finished(&self) -> bool {
+        self.finished_map_count == self.total_maps()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == JobPhase::Done
+    }
+
+    /// True before any task has completed or started (Alg. 2: such jobs
+    /// take absolute precedence to bootstrap statistics).
+    pub fn cold(&self) -> bool {
+        self.stats.cold() && self.running_map_count == 0 && self.awaiting_map_count == 0
+    }
+
+    pub fn completion_time(&self) -> Option<SimTime> {
+        self.finished_at.map(|t| t - self.submitted)
+    }
+
+    pub fn map_phase_duration(&self) -> Option<SimTime> {
+        self.map_phase_finished_at.map(|t| t - self.submitted)
+    }
+
+    /// Absolute deadline instant (None = best effort).
+    pub fn deadline_at(&self) -> Option<SimTime> {
+        self.spec
+            .deadline_s
+            .map(|d| self.submitted + SimTime::from_secs_f64(d))
+    }
+
+    /// Did the job meet its deadline? (None when best-effort/unfinished.)
+    pub fn met_deadline(&self) -> Option<bool> {
+        match (self.finished_at, self.deadline_at()) {
+            (Some(f), Some(d)) => Some(f <= d),
+            _ => None,
+        }
+    }
+
+    // ---- task selection ----
+
+    /// Nodes holding task `m`'s input block (precomputed, O(1)).
+    pub fn replica_nodes(&self, m: u32) -> &[NodeId] {
+        &self.replicas[m as usize]
+    }
+
+    /// First pending map task whose block is local to `node`.
+    pub fn next_pending_local_map(&self, node: NodeId) -> Option<TaskId> {
+        self.pending_local_maps(node).next()
+    }
+
+    /// All pending map tasks local to `node`, in block order.
+    pub fn pending_local_maps(&self, node: NodeId) -> impl Iterator<Item = TaskId> + '_ {
+        self.locality[node.idx()]
+            .iter()
+            .copied()
+            .filter(|&m| self.maps[m as usize].is_pending())
+            .map(TaskId)
+    }
+
+    /// All pending map tasks, in block order.
+    pub fn pending_maps_iter(&self) -> impl Iterator<Item = TaskId> + '_ {
+        self.maps
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_pending())
+            .map(|(i, _)| TaskId(i as u32))
+    }
+
+    /// All pending reduce tasks, in index order.
+    pub fn pending_reduces_iter(&self) -> impl Iterator<Item = TaskId> + '_ {
+        self.reduces
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_pending())
+            .map(|(i, _)| TaskId(i as u32))
+    }
+
+    /// Any pending map task (first by index).
+    pub fn next_pending_map_any(&self) -> Option<TaskId> {
+        self.maps
+            .iter()
+            .position(|t| t.is_pending())
+            .map(|i| TaskId(i as u32))
+    }
+
+    /// First pending reduce task.
+    pub fn next_pending_reduce(&self) -> Option<TaskId> {
+        self.reduces
+            .iter()
+            .position(|t| t.is_pending())
+            .map(|i| TaskId(i as u32))
+    }
+
+    pub fn map_state(&self, t: TaskId) -> &TaskState {
+        &self.maps[t.0 as usize]
+    }
+
+    pub fn reduce_state(&self, t: TaskId) -> &TaskState {
+        &self.reduces[t.0 as usize]
+    }
+
+    // ---- transitions ----
+
+    /// Is `t`'s input block replicated on `node`?
+    pub fn map_is_local(&self, t: TaskId, node: NodeId) -> bool {
+        self.locality[node.idx()].contains(&t.0)
+    }
+
+    /// AwaitingReconfig -> Pending (delayed launch abandoned).
+    pub fn mark_map_await_cancelled(&mut self, t: TaskId) {
+        let s = &mut self.maps[t.0 as usize];
+        debug_assert!(s.is_awaiting(), "cancelling non-awaiting map {t:?}");
+        *s = TaskState::Pending;
+        self.awaiting_map_count -= 1;
+        self.pending_map_count += 1;
+    }
+
+    /// Pending -> AwaitingReconfig (Alg. 1 delayed local launch).
+    pub fn mark_map_awaiting(&mut self, t: TaskId, target: NodeId) {
+        let s = &mut self.maps[t.0 as usize];
+        debug_assert!(s.is_pending());
+        *s = TaskState::AwaitingReconfig { target };
+        self.pending_map_count -= 1;
+        self.awaiting_map_count += 1;
+    }
+
+    /// Pending/Awaiting -> Running.
+    pub fn mark_map_launched(&mut self, t: TaskId, node: NodeId, local: bool, now: SimTime) {
+        let s = &mut self.maps[t.0 as usize];
+        match *s {
+            TaskState::Pending => self.pending_map_count -= 1,
+            TaskState::AwaitingReconfig { .. } => self.awaiting_map_count -= 1,
+            _ => panic!("launching map {t:?} twice (job {:?})", self.id),
+        }
+        *s = TaskState::Running {
+            node,
+            started: now,
+            local,
+        };
+        self.running_map_count += 1;
+    }
+
+    /// Running -> Finished; flips to ReducePhase when the last map lands.
+    pub fn mark_map_finished(&mut self, t: TaskId, now: SimTime) {
+        let s = &mut self.maps[t.0 as usize];
+        let TaskState::Running {
+            node,
+            started,
+            local,
+        } = *s
+        else {
+            panic!("finishing non-running map {t:?}");
+        };
+        *s = TaskState::Finished {
+            node,
+            started,
+            finished: now,
+            local,
+        };
+        self.running_map_count -= 1;
+        self.finished_map_count += 1;
+        if local {
+            self.local_maps += 1;
+        } else {
+            self.nonlocal_maps += 1;
+        }
+        self.stats.record_map(crate::predictor::TaskSample {
+            duration_s: (now - started).as_secs_f64(),
+        });
+        if self.map_finished() && self.phase == JobPhase::MapPhase {
+            self.phase = JobPhase::ReducePhase;
+            self.map_phase_finished_at = Some(now);
+        }
+    }
+
+    pub fn mark_reduce_launched(&mut self, t: TaskId, node: NodeId, now: SimTime) {
+        let s = &mut self.reduces[t.0 as usize];
+        debug_assert!(s.is_pending(), "launching reduce {t:?} twice");
+        *s = TaskState::Running {
+            node,
+            started: now,
+            local: false,
+        };
+        self.pending_reduce_count -= 1;
+        self.running_reduce_count += 1;
+    }
+
+    pub fn mark_reduce_finished(&mut self, t: TaskId, now: SimTime) {
+        let s = &mut self.reduces[t.0 as usize];
+        let TaskState::Running { node, started, .. } = *s else {
+            panic!("finishing non-running reduce {t:?}");
+        };
+        *s = TaskState::Finished {
+            node,
+            started,
+            finished: now,
+            local: false,
+        };
+        self.running_reduce_count -= 1;
+        self.finished_reduce_count += 1;
+        self.stats.record_reduce(crate::predictor::TaskSample {
+            duration_s: (now - started).as_secs_f64(),
+        });
+        if self.finished_reduce_count == self.total_reduces() {
+            self.phase = JobPhase::Done;
+            self.finished_at = Some(now);
+        }
+    }
+
+    /// Sanity invariant for the property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let m = self.pending_map_count
+            + self.running_map_count
+            + self.finished_map_count
+            + self.awaiting_map_count;
+        if m != self.total_maps() {
+            return Err(format!("job {:?}: map counters {m} != {}", self.id, self.total_maps()));
+        }
+        let r = self.pending_reduce_count + self.running_reduce_count + self.finished_reduce_count;
+        if r != self.total_reduces() {
+            return Err(format!(
+                "job {:?}: reduce counters {r} != {}",
+                self.id,
+                self.total_reduces()
+            ));
+        }
+        if self.local_maps + self.nonlocal_maps != self.finished_map_count {
+            return Err(format!("job {:?}: locality accounting broken", self.id));
+        }
+        Ok(())
+    }
+
+    /// Task handle helpers.
+    pub fn map_ref(&self, t: TaskId) -> TaskRef {
+        TaskRef::map(self.id, t.0)
+    }
+
+    pub fn reduce_ref(&self, t: TaskId) -> TaskRef {
+        TaskRef::reduce(self.id, t.0)
+    }
+}

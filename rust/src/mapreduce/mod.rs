@@ -1,0 +1,104 @@
+//! Mini-MapReduce engine: jobs, tasks, and the JobTracker-side state the
+//! schedulers operate on.
+//!
+//! The engine mirrors Hadoop 0.20's structure (paper §2.1): a job is split
+//! into map tasks (one per HDFS block) and reduce tasks; TaskTrackers
+//! (VMs) heartbeat every 3 s reporting free slots; the scheduler assigns
+//! tasks to slots. Map output is hash-partitioned per reducer; reduce
+//! tasks run copy -> sort -> reduce once the map phase finishes.
+
+mod cost;
+mod job;
+mod task;
+
+pub use cost::TaskCost;
+pub use job::{JobId, JobPhase, JobState};
+pub use task::{TaskId, TaskKind, TaskRef, TaskState};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeId;
+    use crate::config::SimConfig;
+    use crate::hdfs::NameNode;
+    use crate::sim::SimTime;
+    use crate::util::Rng;
+    use crate::workloads::{JobSpec, JobType};
+
+    fn job_state() -> JobState {
+        let cfg = SimConfig::small();
+        let mut nn = NameNode::new();
+        let mut rng = Rng::new(1);
+        let spec = JobSpec::new(JobType::WordCount, 256.0).with_deadline(600.0);
+        JobState::create(
+            JobId(0),
+            spec,
+            &cfg,
+            &mut nn,
+            &mut rng,
+            SimTime::from_secs_f64(5.0),
+        )
+    }
+
+    #[test]
+    fn job_splits_into_block_tasks() {
+        let js = job_state();
+        assert_eq!(js.total_maps(), 4); // 256 MB / 64 MB
+        assert!(js.total_reduces() >= 4);
+        assert_eq!(js.pending_maps(), 4);
+        assert_eq!(js.phase, JobPhase::MapPhase);
+    }
+
+    #[test]
+    fn lifecycle_map_then_reduce() {
+        let mut js = job_state();
+        let n = NodeId(0);
+        // run all maps
+        for i in 0..js.total_maps() {
+            let t = js.next_pending_map_any().expect("pending map");
+            js.mark_map_launched(t, n, true, SimTime::from_millis(0));
+            assert!(js.running_maps() > 0);
+            js.mark_map_finished(t, SimTime::from_secs_f64(10.0 * (i + 1) as f64));
+        }
+        assert!(js.map_finished());
+        assert_eq!(js.phase, JobPhase::ReducePhase);
+        // run all reduces
+        let total_r = js.total_reduces();
+        for i in 0..total_r {
+            let r = js.next_pending_reduce().expect("pending reduce");
+            js.mark_reduce_launched(r, n, SimTime::from_millis(0));
+            js.mark_reduce_finished(r, SimTime::from_secs_f64(100.0 + i as f64));
+        }
+        assert_eq!(js.phase, JobPhase::Done);
+        assert!(js.completion_time().is_some());
+    }
+
+    #[test]
+    fn locality_lookup() {
+        let js = job_state();
+        let cfg = SimConfig::small();
+        // every map task's preferred nodes hold its block
+        for m in 0..js.total_maps() {
+            let nodes = js.replica_nodes(m);
+            assert_eq!(nodes.len(), cfg.replication);
+        }
+        // local pending map on a replica node is found
+        let replica = js.replica_nodes(0)[0];
+        assert!(js.next_pending_local_map(replica).is_some());
+    }
+
+    #[test]
+    fn progress_counters_consistent() {
+        let mut js = job_state();
+        let n = NodeId(1);
+        let t = js.next_pending_map_any().unwrap();
+        js.mark_map_launched(t, n, false, SimTime::from_millis(10));
+        assert_eq!(js.pending_maps(), js.total_maps() - 1);
+        assert_eq!(js.running_maps(), 1);
+        js.mark_map_finished(t, SimTime::from_secs_f64(20.0));
+        assert_eq!(js.running_maps(), 0);
+        assert_eq!(js.completed_maps(), 1);
+        assert_eq!(js.local_maps + js.nonlocal_maps, 1);
+        assert_eq!(js.nonlocal_maps, 1);
+    }
+}

@@ -1,0 +1,124 @@
+//! Task identities and per-task state.
+
+use crate::cluster::NodeId;
+use crate::sim::SimTime;
+
+use super::JobId;
+
+/// Task index within its job (map and reduce spaces are separate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TaskId(pub u32);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Map,
+    Reduce,
+}
+
+/// Globally unique task handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TaskRef {
+    pub job: JobId,
+    pub kind: TaskKind,
+    pub id: TaskId,
+}
+
+impl TaskRef {
+    pub fn map(job: JobId, id: u32) -> Self {
+        Self {
+            job,
+            kind: TaskKind::Map,
+            id: TaskId(id),
+        }
+    }
+
+    pub fn reduce(job: JobId, id: u32) -> Self {
+        Self {
+            job,
+            kind: TaskKind::Reduce,
+            id: TaskId(id),
+        }
+    }
+}
+
+/// Lifecycle of a single task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    Pending,
+    /// Waiting for a vCPU hot-plug to complete on `target` (Alg. 1's
+    /// delayed local launch).
+    AwaitingReconfig { target: NodeId },
+    Running {
+        node: NodeId,
+        started: SimTime,
+        /// Map only: was the input block local?
+        local: bool,
+    },
+    Finished {
+        node: NodeId,
+        started: SimTime,
+        finished: SimTime,
+        local: bool,
+    },
+}
+
+impl TaskState {
+    pub fn is_pending(&self) -> bool {
+        matches!(self, TaskState::Pending)
+    }
+
+    pub fn is_running(&self) -> bool {
+        matches!(self, TaskState::Running { .. })
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self, TaskState::Finished { .. })
+    }
+
+    pub fn is_awaiting(&self) -> bool {
+        matches!(self, TaskState::AwaitingReconfig { .. })
+    }
+
+    /// Duration if finished.
+    pub fn duration(&self) -> Option<SimTime> {
+        match self {
+            TaskState::Finished {
+                started, finished, ..
+            } => Some(*finished - *started),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refs_distinguish_kind() {
+        let m = TaskRef::map(JobId(1), 3);
+        let r = TaskRef::reduce(JobId(1), 3);
+        assert_ne!(m, r);
+        assert_eq!(m.id, r.id);
+    }
+
+    #[test]
+    fn state_predicates() {
+        let s = TaskState::Pending;
+        assert!(s.is_pending() && !s.is_running());
+        let s = TaskState::Running {
+            node: NodeId(0),
+            started: SimTime::ZERO,
+            local: true,
+        };
+        assert!(s.is_running());
+        let s = TaskState::Finished {
+            node: NodeId(0),
+            started: SimTime::from_millis(100),
+            finished: SimTime::from_millis(600),
+            local: false,
+        };
+        assert!(s.is_finished());
+        assert_eq!(s.duration(), Some(SimTime::from_millis(500)));
+    }
+}

@@ -1,0 +1,252 @@
+//! Experiment metrics: per-job records and cluster-level aggregates.
+
+pub mod trace_log;
+
+pub use trace_log::{HotplugMark, TaskSpan, TraceLog};
+
+use crate::mapreduce::JobId;
+use crate::sim::SimTime;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::workloads::JobType;
+
+/// Final record for one completed job.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    pub id: JobId,
+    pub job_type: JobType,
+    pub input_mb: f64,
+    pub submitted: SimTime,
+    pub finished: SimTime,
+    pub completion_s: f64,
+    pub map_phase_s: f64,
+    pub deadline_s: Option<f64>,
+    pub met_deadline: Option<bool>,
+    pub local_maps: u32,
+    pub nonlocal_maps: u32,
+    pub maps: u32,
+    pub reduces: u32,
+}
+
+impl JobRecord {
+    pub fn locality_pct(&self) -> f64 {
+        let total = self.local_maps + self.nonlocal_maps;
+        if total == 0 {
+            0.0
+        } else {
+            100.0 * self.local_maps as f64 / total as f64
+        }
+    }
+}
+
+/// Aggregated results of one simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub scheduler: String,
+    pub jobs: Vec<JobRecord>,
+    pub makespan_s: f64,
+    pub hotplugs: u64,
+    pub heartbeats: u64,
+    pub events: u64,
+    pub predictor_calls: u64,
+    /// Wall-clock seconds the simulation took to run (host time).
+    pub wall_s: f64,
+}
+
+impl RunMetrics {
+    pub fn completed_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Jobs per simulated hour (the paper's headline "throughput of jobs").
+    pub fn throughput_jobs_per_hour(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            0.0
+        } else {
+            self.jobs.len() as f64 / (self.makespan_s / 3600.0)
+        }
+    }
+
+    pub fn mean_completion_s(&self) -> f64 {
+        let mut s = Summary::new();
+        for j in &self.jobs {
+            s.add(j.completion_s);
+        }
+        s.mean()
+    }
+
+    /// Cluster-wide map locality percentage.
+    pub fn locality_pct(&self) -> f64 {
+        let local: u64 = self.jobs.iter().map(|j| j.local_maps as u64).sum();
+        let total: u64 = self
+            .jobs
+            .iter()
+            .map(|j| (j.local_maps + j.nonlocal_maps) as u64)
+            .sum();
+        if total == 0 {
+            0.0
+        } else {
+            100.0 * local as f64 / total as f64
+        }
+    }
+
+    /// Deadline miss rate over jobs that had deadlines.
+    pub fn miss_rate(&self) -> f64 {
+        let with_deadline: Vec<_> = self
+            .jobs
+            .iter()
+            .filter_map(|j| j.met_deadline)
+            .collect();
+        if with_deadline.is_empty() {
+            0.0
+        } else {
+            with_deadline.iter().filter(|&&met| !met).count() as f64
+                / with_deadline.len() as f64
+        }
+    }
+
+    /// Mean completion time for one job type (Fig. 2 / Fig. 3 series).
+    pub fn mean_completion_for(&self, t: JobType) -> Option<f64> {
+        let xs: Vec<f64> = self
+            .jobs
+            .iter()
+            .filter(|j| j.job_type == t)
+            .map(|j| j.completion_s)
+            .collect();
+        if xs.is_empty() {
+            None
+        } else {
+            Some(xs.iter().sum::<f64>() / xs.len() as f64)
+        }
+    }
+
+    /// Completion time of the (type, input-size) cell — Fig. 2 lookup.
+    pub fn completion_for(&self, t: JobType, input_mb: f64) -> Option<f64> {
+        self.jobs
+            .iter()
+            .find(|j| j.job_type == t && (j.input_mb - input_mb).abs() < 1e-6)
+            .map(|j| j.completion_s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut jobs = Json::arr();
+        for j in &self.jobs {
+            jobs = jobs.push(
+                Json::obj()
+                    .set("id", j.id.0 as u64)
+                    .set("type", j.job_type.name())
+                    .set("input_mb", j.input_mb)
+                    .set("completion_s", j.completion_s)
+                    .set("map_phase_s", j.map_phase_s)
+                    .set(
+                        "deadline_s",
+                        j.deadline_s.map(Json::Num).unwrap_or(Json::Null),
+                    )
+                    .set(
+                        "met_deadline",
+                        j.met_deadline.map(Json::Bool).unwrap_or(Json::Null),
+                    )
+                    .set("local_maps", j.local_maps as u64)
+                    .set("nonlocal_maps", j.nonlocal_maps as u64),
+            );
+        }
+        Json::obj()
+            .set("scheduler", self.scheduler.as_str())
+            .set("makespan_s", self.makespan_s)
+            .set("throughput_jobs_per_hour", self.throughput_jobs_per_hour())
+            .set("locality_pct", self.locality_pct())
+            .set("miss_rate", self.miss_rate())
+            .set("hotplugs", self.hotplugs)
+            .set("heartbeats", self.heartbeats)
+            .set("events", self.events)
+            .set("predictor_calls", self.predictor_calls)
+            .set("jobs", jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(t: JobType, comp: f64, local: u32, nonlocal: u32, met: Option<bool>) -> JobRecord {
+        JobRecord {
+            id: JobId(0),
+            job_type: t,
+            input_mb: 100.0,
+            submitted: SimTime::ZERO,
+            finished: SimTime::from_secs_f64(comp),
+            completion_s: comp,
+            map_phase_s: comp * 0.6,
+            deadline_s: met.map(|_| 100.0),
+            met_deadline: met,
+            local_maps: local,
+            nonlocal_maps: nonlocal,
+            maps: local + nonlocal,
+            reduces: 4,
+        }
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = RunMetrics {
+            jobs: vec![
+                record(JobType::Grep, 10.0, 1, 0, None),
+                record(JobType::Sort, 20.0, 1, 0, None),
+            ],
+            makespan_s: 1800.0,
+            ..Default::default()
+        };
+        assert!((m.throughput_jobs_per_hour() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn locality_pct() {
+        let m = RunMetrics {
+            jobs: vec![
+                record(JobType::Grep, 10.0, 3, 1, None),
+                record(JobType::Sort, 20.0, 2, 2, None),
+            ],
+            ..Default::default()
+        };
+        assert!((m.locality_pct() - 62.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn miss_rate_ignores_best_effort() {
+        let m = RunMetrics {
+            jobs: vec![
+                record(JobType::Grep, 10.0, 1, 0, Some(true)),
+                record(JobType::Sort, 20.0, 1, 0, Some(false)),
+                record(JobType::WordCount, 30.0, 1, 0, None),
+            ],
+            ..Default::default()
+        };
+        assert!((m.miss_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_renders() {
+        let m = RunMetrics {
+            scheduler: "fair".into(),
+            jobs: vec![record(JobType::Grep, 10.0, 1, 0, Some(true))],
+            makespan_s: 100.0,
+            ..Default::default()
+        };
+        let s = m.to_json().render();
+        assert!(s.contains("\"scheduler\":\"fair\""));
+        assert!(s.contains("\"met_deadline\":true"));
+    }
+
+    #[test]
+    fn per_type_lookup() {
+        let m = RunMetrics {
+            jobs: vec![
+                record(JobType::Grep, 10.0, 1, 0, None),
+                record(JobType::Grep, 30.0, 1, 0, None),
+            ],
+            ..Default::default()
+        };
+        assert_eq!(m.mean_completion_for(JobType::Grep), Some(20.0));
+        assert_eq!(m.mean_completion_for(JobType::Sort), None);
+    }
+}

@@ -1,0 +1,205 @@
+//! Execution-trace capture and rendering: a per-task event log that can
+//! be exported as JSON (for external plotting) or rendered as an ASCII
+//! Gantt chart (for quick terminal inspection of scheduler behaviour).
+
+use crate::cluster::NodeId;
+use crate::mapreduce::{JobId, TaskKind};
+use crate::sim::SimTime;
+use crate::util::json::Json;
+
+/// One completed task span.
+#[derive(Clone, Debug)]
+pub struct TaskSpan {
+    pub job: JobId,
+    pub kind: TaskKind,
+    pub task: u32,
+    pub node: NodeId,
+    pub start: SimTime,
+    pub end: SimTime,
+    pub local: bool,
+}
+
+/// One vCPU hot-plug marker.
+#[derive(Clone, Debug)]
+pub struct HotplugMark {
+    pub at: SimTime,
+    pub from: NodeId,
+    pub to: NodeId,
+}
+
+/// Trace collector (opt-in: attach to a `World` via `enable_trace`).
+#[derive(Clone, Debug, Default)]
+pub struct TraceLog {
+    pub spans: Vec<TaskSpan>,
+    pub hotplugs: Vec<HotplugMark>,
+}
+
+impl TraceLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_span(&mut self, span: TaskSpan) {
+        self.spans.push(span);
+    }
+
+    pub fn record_hotplug(&mut self, mark: HotplugMark) {
+        self.hotplugs.push(mark);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty() && self.hotplugs.is_empty()
+    }
+
+    /// Export as a JSON document (one object per span, Chrome-trace-like).
+    pub fn to_json(&self) -> Json {
+        let mut spans = Json::arr();
+        for s in &self.spans {
+            spans = spans.push(
+                Json::obj()
+                    .set("job", s.job.0 as u64)
+                    .set(
+                        "kind",
+                        match s.kind {
+                            TaskKind::Map => "map",
+                            TaskKind::Reduce => "reduce",
+                        },
+                    )
+                    .set("task", s.task as u64)
+                    .set("node", s.node.0 as u64)
+                    .set("start_s", s.start.as_secs_f64())
+                    .set("end_s", s.end.as_secs_f64())
+                    .set("local", s.local),
+            );
+        }
+        let mut hp = Json::arr();
+        for h in &self.hotplugs {
+            hp = hp.push(
+                Json::obj()
+                    .set("at_s", h.at.as_secs_f64())
+                    .set("from", h.from.0 as u64)
+                    .set("to", h.to.0 as u64),
+            );
+        }
+        Json::obj().set("spans", spans).set("hotplugs", hp)
+    }
+
+    /// Render an ASCII Gantt chart: one row per node, time bucketed into
+    /// `width` columns. Map tasks print the job id digit (uppercase-ish
+    /// marker `*` for non-local), reduce tasks print `r`.
+    pub fn render_gantt(&self, num_nodes: usize, width: usize) -> String {
+        let end = self
+            .spans
+            .iter()
+            .map(|s| s.end)
+            .max()
+            .unwrap_or(SimTime::ZERO);
+        if end == SimTime::ZERO || width == 0 {
+            return String::from("(empty trace)\n");
+        }
+        let total = end.as_secs_f64();
+        let mut rows = vec![vec![' '; width]; num_nodes];
+        for s in &self.spans {
+            let n = s.node.idx();
+            if n >= num_nodes {
+                continue;
+            }
+            let c0 = ((s.start.as_secs_f64() / total) * width as f64) as usize;
+            let c1 = (((s.end.as_secs_f64() / total) * width as f64) as usize).max(c0 + 1);
+            let ch = match s.kind {
+                TaskKind::Reduce => 'r',
+                TaskKind::Map if s.local => {
+                    char::from_digit(s.job.0 % 10, 10).unwrap_or('m')
+                }
+                TaskKind::Map => '*',
+            };
+            for c in c0..c1.min(width) {
+                rows[n][c] = ch;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Gantt ({total:.0}s across {width} cols; digits = local map of job N, \
+             '*' = remote map, 'r' = reduce)\n"
+        ));
+        for (n, row) in rows.iter().enumerate() {
+            out.push_str(&format!("node {n:>3} |"));
+            out.extend(row.iter());
+            out.push_str("|\n");
+        }
+        out
+    }
+
+    /// Locality ratio recomputed from spans (cross-check against metrics).
+    pub fn span_locality_pct(&self) -> f64 {
+        let maps: Vec<&TaskSpan> = self
+            .spans
+            .iter()
+            .filter(|s| s.kind == TaskKind::Map)
+            .collect();
+        if maps.is_empty() {
+            return 0.0;
+        }
+        100.0 * maps.iter().filter(|s| s.local).count() as f64 / maps.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(job: u32, node: u32, s: f64, e: f64, local: bool, kind: TaskKind) -> TaskSpan {
+        TaskSpan {
+            job: JobId(job),
+            kind,
+            task: 0,
+            node: NodeId(node),
+            start: SimTime::from_secs_f64(s),
+            end: SimTime::from_secs_f64(e),
+            local,
+        }
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let mut t = TraceLog::new();
+        t.record_span(span(1, 0, 0.0, 5.0, true, TaskKind::Map));
+        t.record_hotplug(HotplugMark {
+            at: SimTime::from_secs_f64(2.0),
+            from: NodeId(0),
+            to: NodeId(1),
+        });
+        let s = t.to_json().render();
+        assert!(s.contains("\"kind\":\"map\""));
+        assert!(s.contains("\"local\":true"));
+        assert!(s.contains("\"hotplugs\":[{\"at_s\":2"));
+    }
+
+    #[test]
+    fn gantt_renders_rows_and_markers() {
+        let mut t = TraceLog::new();
+        t.record_span(span(3, 0, 0.0, 50.0, true, TaskKind::Map));
+        t.record_span(span(4, 1, 50.0, 100.0, false, TaskKind::Map));
+        t.record_span(span(4, 1, 0.0, 30.0, false, TaskKind::Reduce));
+        let g = t.render_gantt(2, 40);
+        assert!(g.contains("node   0"));
+        assert!(g.contains('3'), "{g}");
+        assert!(g.contains('*'), "{g}");
+        assert!(g.contains('r'), "{g}");
+    }
+
+    #[test]
+    fn empty_trace_renders() {
+        let t = TraceLog::new();
+        assert!(t.render_gantt(4, 10).contains("empty"));
+    }
+
+    #[test]
+    fn span_locality_matches() {
+        let mut t = TraceLog::new();
+        t.record_span(span(0, 0, 0.0, 1.0, true, TaskKind::Map));
+        t.record_span(span(0, 0, 0.0, 1.0, false, TaskKind::Map));
+        t.record_span(span(0, 0, 0.0, 1.0, false, TaskKind::Reduce));
+        assert_eq!(t.span_locality_pct(), 50.0);
+    }
+}

@@ -1,0 +1,332 @@
+//! Resource Estimation Model (paper §2.1).
+//!
+//! Tracks per-job task statistics online (Eq. 1) and answers the two
+//! questions the scheduler asks on every heartbeat:
+//!
+//! * Eq. 10 — minimum `(n_m, n_r)` slots so job `j` finishes by deadline `D`;
+//! * Eq. 7  — estimated remaining completion time (ETA) and slack.
+//!
+//! Two interchangeable backends implement the math:
+//! [`NativePredictor`] (pure Rust, always available, used by unit tests and
+//! as the cross-check oracle) and [`crate::runtime::XlaPredictor`] (the AOT
+//! JAX/Pallas artifact executed via PJRT — the production hot path; one
+//! batched call per heartbeat). `rust/tests/artifact_roundtrip.rs` asserts
+//! they agree to 1e-4.
+
+mod stats_tracker;
+
+pub use stats_tracker::{JobStats, TaskSample};
+
+/// Inputs to the Eq. 10 solver for one job, in the paper's symbols.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobDemand {
+    /// `u_m` — total map tasks.
+    pub map_tasks: f64,
+    /// `v_r` — total reduce tasks.
+    pub reduce_tasks: f64,
+    /// `t_m` — estimated map task duration (seconds, Eq. 1).
+    pub t_map: f64,
+    /// `t_r` — estimated reduce task duration (= `t_m` under Eq. 3 until
+    /// reduce samples exist).
+    pub t_reduce: f64,
+    /// `t_s` — per-copy shuffle time (seconds).
+    pub t_shuffle: f64,
+    /// `D` — remaining time until the deadline (seconds).
+    pub deadline: f64,
+}
+
+/// Eq. 10 output: the minimal integral slot allocation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SlotDemand {
+    pub map_slots: u32,
+    pub reduce_slots: u32,
+    /// Deadline cannot be met at any allocation (C <= 0).
+    pub infeasible: bool,
+}
+
+/// Per-job progress snapshot for the Eq. 7 estimator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JobProgress {
+    pub rem_map: f64,
+    pub rem_reduce: f64,
+    pub t_map: f64,
+    pub t_reduce: f64,
+    pub t_shuffle: f64,
+    pub map_slots: f64,
+    pub reduce_slots: f64,
+    pub reduce_tasks: f64,
+    pub deadline: f64,
+    pub elapsed: f64,
+}
+
+/// Eq. 7 output.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Eta {
+    /// Estimated remaining seconds until job completion.
+    pub eta: f64,
+    /// `D - elapsed - eta`; negative means a projected deadline miss.
+    pub slack: f64,
+}
+
+/// Backend-independent predictor interface (batched — one call covers every
+/// active job, matching the single-PJRT-execution-per-heartbeat design).
+pub trait Predictor {
+    fn solve_slots(&mut self, jobs: &[JobDemand]) -> Vec<SlotDemand>;
+    fn estimate(&mut self, jobs: &[JobProgress]) -> Vec<Eta>;
+
+    /// Wave-based Eq. 7 variant (discrete task waves; see
+    /// `python/compile/kernels/wave_estimator.py`). Defaults to the fluid
+    /// estimate for backends without the wave artifact.
+    fn estimate_wave(&mut self, jobs: &[JobProgress]) -> Vec<Eta> {
+        self.estimate(jobs)
+    }
+}
+
+/// The (A, B, C) terms of Eq. 9 for one job.
+#[inline]
+pub fn abc(d: &JobDemand) -> (f64, f64, f64) {
+    let a = d.map_tasks * d.t_map;
+    let b = d.reduce_tasks * d.t_reduce;
+    let c = d.deadline - d.map_tasks * d.reduce_tasks * d.t_shuffle;
+    (a, b, c)
+}
+
+/// Build an Eq. 10 demand for a *fresh* job from its spec and the cost
+/// model — the "what would the predictor say at submission" question the
+/// Table 2 bench asks. At runtime the scheduler instead uses measured
+/// Eq. 1 statistics (see `JobStats`).
+pub fn demand_from_spec(
+    cfg: &crate::config::SimConfig,
+    spec: &crate::workloads::JobSpec,
+) -> JobDemand {
+    let cost = crate::mapreduce::TaskCost::new(cfg, spec);
+    let maps = (spec.input_mb / cfg.block_mb).ceil().max(1.0);
+    let inter_mb = cost.map_output_mb(spec.input_mb);
+    let reducers = spec.reducers.max(1);
+    JobDemand {
+        map_tasks: maps,
+        reduce_tasks: reducers as f64,
+        t_map: cost.map_secs_nominal(cfg.block_mb, true),
+        t_reduce: cost.reduce_secs_nominal(inter_mb, maps as u32, reducers),
+        t_shuffle: cost.t_shuffle_estimate(inter_mb, maps as u32, reducers),
+        deadline: spec.deadline_s.unwrap_or(f64::INFINITY),
+    }
+}
+
+/// Pure-Rust reference backend.
+#[derive(Default, Debug, Clone)]
+pub struct NativePredictor;
+
+impl NativePredictor {
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// Scalar Eq. 10. Mirrors `python/compile/kernels/ref.py::slot_solver_ref`.
+    pub fn solve_one(d: &JobDemand) -> SlotDemand {
+        let (a, b, c) = abc(d);
+        let (a, b) = (a.max(0.0), b.max(0.0));
+        if c <= 0.0 {
+            return SlotDemand {
+                infeasible: true,
+                ..Default::default()
+            };
+        }
+        let (ra, rb) = (a.sqrt(), b.sqrt());
+        let s = ra + rb;
+        let n_m = (ra * s / c).ceil();
+        let n_r = (rb * s / c).ceil();
+        SlotDemand {
+            map_slots: if a > 0.0 { n_m.max(1.0) as u32 } else { 0 },
+            reduce_slots: if b > 0.0 { n_r.max(1.0) as u32 } else { 0 },
+            infeasible: false,
+        }
+    }
+
+    /// Scalar wave-based Eq. 7: `ceil(rem/n)*t` per phase. Mirrors
+    /// `ref.py::wave_estimator_ref`. Always >= the fluid estimate.
+    pub fn estimate_wave_one(p: &JobProgress) -> Eta {
+        let n_m = p.map_slots.max(1.0);
+        let n_r = p.reduce_slots.max(1.0);
+        let eta = (p.rem_map / n_m).ceil() * p.t_map
+            + (p.rem_reduce / n_r).ceil() * p.t_reduce
+            + p.rem_map * p.reduce_tasks * p.t_shuffle;
+        Eta {
+            eta,
+            slack: p.deadline - p.elapsed - eta,
+        }
+    }
+
+    /// Scalar Eq. 7. Mirrors `ref.py::completion_estimator_ref`.
+    pub fn estimate_one(p: &JobProgress) -> Eta {
+        let n_m = p.map_slots.max(1.0);
+        let n_r = p.reduce_slots.max(1.0);
+        let eta = p.rem_map * p.t_map / n_m
+            + p.rem_reduce * p.t_reduce / n_r
+            + p.rem_map * p.reduce_tasks * p.t_shuffle;
+        Eta {
+            eta,
+            slack: p.deadline - p.elapsed - eta,
+        }
+    }
+}
+
+impl Predictor for NativePredictor {
+    fn solve_slots(&mut self, jobs: &[JobDemand]) -> Vec<SlotDemand> {
+        jobs.iter().map(Self::solve_one).collect()
+    }
+
+    fn estimate(&mut self, jobs: &[JobProgress]) -> Vec<Eta> {
+        jobs.iter().map(Self::estimate_one).collect()
+    }
+
+    fn estimate_wave(&mut self, jobs: &[JobProgress]) -> Vec<Eta> {
+        jobs.iter().map(Self::estimate_wave_one).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demand(u_m: f64, v_r: f64, t_m: f64, t_r: f64, t_s: f64, d: f64) -> JobDemand {
+        JobDemand {
+            map_tasks: u_m,
+            reduce_tasks: v_r,
+            t_map: t_m,
+            t_reduce: t_r,
+            t_shuffle: t_s,
+            deadline: d,
+        }
+    }
+
+    #[test]
+    fn eq10_closed_form() {
+        // A=100, B=50, C=10 -> (18, 13); cross-checked with the kernels.
+        let d = demand(100.0, 50.0, 1.0, 1.0, 0.0, 10.0);
+        let s = NativePredictor::solve_one(&d);
+        assert_eq!((s.map_slots, s.reduce_slots), (18, 13));
+        assert!(!s.infeasible);
+    }
+
+    #[test]
+    fn infeasible_when_shuffle_exceeds_deadline() {
+        let d = demand(100.0, 50.0, 1.0, 1.0, 1.0, 10.0); // C = 10 - 5000
+        assert!(NativePredictor::solve_one(&d).infeasible);
+    }
+
+    #[test]
+    fn allocation_satisfies_eq7_bound() {
+        // Defining property: the returned slots meet the deadline per Eq. 7.
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..500 {
+            let d = demand(
+                rng.range_f64(1.0, 500.0).floor(),
+                rng.range_f64(0.0, 64.0).floor(),
+                rng.range_f64(0.5, 90.0),
+                rng.range_f64(0.5, 90.0),
+                rng.range_f64(0.0, 0.01),
+                rng.range_f64(10.0, 5000.0),
+            );
+            let s = NativePredictor::solve_one(&d);
+            if s.infeasible {
+                continue;
+            }
+            let (a, b, c) = abc(&d);
+            let lhs = if s.map_slots > 0 { a / s.map_slots as f64 } else { 0.0 }
+                + if s.reduce_slots > 0 { b / s.reduce_slots as f64 } else { 0.0 };
+            assert!(lhs <= c * (1.0 + 1e-9), "lhs {lhs} > C {c} for {d:?}");
+        }
+    }
+
+    #[test]
+    fn slots_monotone_in_deadline() {
+        let mut rng = crate::util::Rng::new(4);
+        for _ in 0..200 {
+            let mut d = demand(
+                rng.range_f64(1.0, 300.0).floor(),
+                rng.range_f64(1.0, 32.0).floor(),
+                rng.range_f64(0.5, 60.0),
+                rng.range_f64(0.5, 60.0),
+                0.0,
+                rng.range_f64(5.0, 800.0),
+            );
+            let tight = NativePredictor::solve_one(&d);
+            d.deadline *= 2.0;
+            let loose = NativePredictor::solve_one(&d);
+            assert!(loose.map_slots <= tight.map_slots);
+            assert!(loose.reduce_slots <= tight.reduce_slots);
+        }
+    }
+
+    #[test]
+    fn eta_decomposes() {
+        let p = JobProgress {
+            rem_map: 10.0,
+            rem_reduce: 4.0,
+            t_map: 2.0,
+            t_reduce: 2.0,
+            t_shuffle: 0.1,
+            map_slots: 2.0,
+            reduce_slots: 2.0,
+            reduce_tasks: 4.0,
+            deadline: 30.0,
+            elapsed: 0.0,
+        };
+        let e = NativePredictor::estimate_one(&p);
+        assert!((e.eta - 18.0).abs() < 1e-12);
+        assert!((e.slack - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wave_estimate_never_below_fluid() {
+        let mut rng = crate::util::Rng::new(9);
+        for _ in 0..300 {
+            let p = JobProgress {
+                rem_map: rng.range_f64(0.0, 200.0).floor(),
+                rem_reduce: rng.range_f64(0.0, 50.0).floor(),
+                t_map: rng.range_f64(0.1, 60.0),
+                t_reduce: rng.range_f64(0.1, 60.0),
+                t_shuffle: rng.range_f64(0.0, 0.01),
+                map_slots: rng.range_f64(1.0, 32.0).floor(),
+                reduce_slots: rng.range_f64(1.0, 32.0).floor(),
+                reduce_tasks: rng.range_f64(0.0, 50.0).floor(),
+                deadline: 1000.0,
+                elapsed: 0.0,
+            };
+            let fluid = NativePredictor::estimate_one(&p);
+            let wave = NativePredictor::estimate_wave_one(&p);
+            assert!(wave.eta >= fluid.eta - 1e-9, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn wave_exact_waves() {
+        let p = JobProgress {
+            rem_map: 10.0,
+            rem_reduce: 4.0,
+            t_map: 5.0,
+            t_reduce: 7.0,
+            t_shuffle: 0.0,
+            map_slots: 4.0,
+            reduce_slots: 4.0,
+            reduce_tasks: 4.0,
+            deadline: 100.0,
+            elapsed: 0.0,
+        };
+        let e = NativePredictor::estimate_wave_one(&p);
+        assert!((e.eta - (3.0 * 5.0 + 7.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batched_matches_scalar() {
+        let mut p = NativePredictor::new();
+        let jobs: Vec<JobDemand> = (0..10)
+            .map(|i| demand(10.0 + i as f64, 4.0, 3.0, 3.0, 0.001, 120.0))
+            .collect();
+        let batch = p.solve_slots(&jobs);
+        for (d, s) in jobs.iter().zip(&batch) {
+            assert_eq!(*s, NativePredictor::solve_one(d));
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Online task statistics per job (paper Eq. 1-3).
+//!
+//! `mu_m = (1/|C|) * sum(t_m)` over completed map tasks; until reduce
+//! samples exist, `t_r = t_m` (homogeneous-cluster assumption, Eq. 3).
+//! Shuffle copy time `t_s` is tracked from observed copy operations.
+
+/// One completed task observation.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskSample {
+    pub duration_s: f64,
+}
+
+/// Rolling per-job statistics feeding the predictor.
+#[derive(Clone, Debug, Default)]
+pub struct JobStats {
+    map_count: u64,
+    map_sum: f64,
+    reduce_count: u64,
+    reduce_sum: f64,
+    shuffle_count: u64,
+    shuffle_sum: f64,
+    /// Prior used before any map task completes (the paper runs an initial
+    /// task wave to seed this; the scheduler gives brand-new jobs priority).
+    prior_map_s: f64,
+    prior_shuffle_s: f64,
+}
+
+impl JobStats {
+    pub fn new(prior_map_s: f64, prior_shuffle_s: f64) -> Self {
+        Self {
+            prior_map_s,
+            prior_shuffle_s,
+            ..Default::default()
+        }
+    }
+
+    pub fn record_map(&mut self, s: TaskSample) {
+        self.map_count += 1;
+        self.map_sum += s.duration_s;
+    }
+
+    pub fn record_reduce(&mut self, s: TaskSample) {
+        self.reduce_count += 1;
+        self.reduce_sum += s.duration_s;
+    }
+
+    pub fn record_shuffle_copy(&mut self, s: TaskSample) {
+        self.shuffle_count += 1;
+        self.shuffle_sum += s.duration_s;
+    }
+
+    /// Eq. 1: mean completed map-task duration (prior until |C| > 0).
+    pub fn t_map(&self) -> f64 {
+        if self.map_count == 0 {
+            self.prior_map_s
+        } else {
+            self.map_sum / self.map_count as f64
+        }
+    }
+
+    /// Eq. 3: reduce time equals map time until reduce data exists.
+    pub fn t_reduce(&self) -> f64 {
+        if self.reduce_count == 0 {
+            self.t_map()
+        } else {
+            self.reduce_sum / self.reduce_count as f64
+        }
+    }
+
+    /// Mean per-copy shuffle time.
+    pub fn t_shuffle(&self) -> f64 {
+        if self.shuffle_count == 0 {
+            self.prior_shuffle_s
+        } else {
+            self.shuffle_sum / self.shuffle_count as f64
+        }
+    }
+
+    /// True before the first map completion — the scheduler gives such
+    /// jobs absolute priority (Alg. 2 preamble: "jobs with no completed or
+    /// running tasks always take precedence").
+    pub fn cold(&self) -> bool {
+        self.map_count == 0
+    }
+
+    pub fn completed_maps(&self) -> u64 {
+        self.map_count
+    }
+
+    pub fn completed_reduces(&self) -> u64 {
+        self.reduce_count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prior_then_mean() {
+        let mut st = JobStats::new(10.0, 0.5);
+        assert!(st.cold());
+        assert_eq!(st.t_map(), 10.0);
+        assert_eq!(st.t_reduce(), 10.0);
+        st.record_map(TaskSample { duration_s: 4.0 });
+        st.record_map(TaskSample { duration_s: 6.0 });
+        assert!(!st.cold());
+        assert_eq!(st.t_map(), 5.0);
+        // Eq. 3: reduce mirrors map until reduce samples arrive.
+        assert_eq!(st.t_reduce(), 5.0);
+        st.record_reduce(TaskSample { duration_s: 9.0 });
+        assert_eq!(st.t_reduce(), 9.0);
+    }
+
+    #[test]
+    fn shuffle_tracking() {
+        let mut st = JobStats::new(10.0, 0.25);
+        assert_eq!(st.t_shuffle(), 0.25);
+        st.record_shuffle_copy(TaskSample { duration_s: 0.1 });
+        st.record_shuffle_copy(TaskSample { duration_s: 0.3 });
+        assert!((st.t_shuffle() - 0.2).abs() < 1e-12);
+    }
+}

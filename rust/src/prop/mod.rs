@@ -1,0 +1,87 @@
+//! In-tree randomized property-testing helper (proptest is unavailable
+//! offline). No shrinking — instead every failure prints the case index
+//! and seed so `check_seeded` replays it exactly.
+//!
+//! ```
+//! vcsched::prop::check(100, |rng| {
+//!     let x = rng.below(1000);
+//!     assert!(x < 1000);
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Base seed; override with `VCSCHED_PROP_SEED` to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("VCSCHED_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `f` for `cases` independently-seeded cases. Panics (with replay
+/// instructions) on the first failing case.
+pub fn check<F: FnMut(&mut Rng)>(cases: u64, f: F) {
+    check_seeded(base_seed(), cases, f)
+}
+
+/// Like [`check`] with an explicit base seed.
+pub fn check_seeded<F: FnMut(&mut Rng)>(base: u64, cases: u64, mut f: F) {
+    for i in 0..cases {
+        let case_seed = base ^ (i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "property failed at case {i}/{cases} (case seed {case_seed:#x}).\n\
+                 Replay with: VCSCHED_PROP_SEED={base} and case index {i}."
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(50, |rng| {
+            let a = rng.below(100);
+            let b = rng.below(100);
+            assert!(a + b < 200);
+        });
+    }
+
+    #[test]
+    fn failure_replays_with_same_seed() {
+        // Find a failing case under one seed, confirm determinism by
+        // catching it twice with identical draws.
+        let mut first: Option<u64> = None;
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check_seeded(7, 50, |rng| {
+                let x = rng.next_u64();
+                if x % 5 == 0 {
+                    first = Some(x);
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        let mut second: Option<u64> = None;
+        let r2 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check_seeded(7, 50, |rng| {
+                let x = rng.next_u64();
+                if x % 5 == 0 {
+                    second = Some(x);
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r2.is_err());
+        assert_eq!(first, second);
+    }
+}

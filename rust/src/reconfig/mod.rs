@@ -1,0 +1,240 @@
+//! Resource Reconfigurator (paper §4.1, Algorithm 1).
+//!
+//! Per physical machine a **Machine Manager** keeps two queues:
+//! * the **Release Queue (RQ)** — VMs that registered a free core;
+//! * the **Assign Queue (AQ)** — VMs that need an extra core to run a
+//!   pending *local* map task.
+//!
+//! "As soon as both the AQ and RQ of the same system has at least an
+//! entry, VM reconfigurations occur in the system: releasing a core from a
+//! VM, and assigning a core to another VM in the same system." The
+//! **Configuration Manager** (one per virtual cluster) drives the match
+//! and reports the hot-plug pairs; the coordinator applies them to the
+//! [`crate::cluster::Cluster`] after the configured hot-plug latency.
+
+use std::collections::VecDeque;
+
+use crate::cluster::{Cluster, NodeId, PmId};
+use crate::mapreduce::TaskRef;
+
+/// A granted reconfiguration: move one core `from` -> `to` (same PM) and
+/// then launch `task` on `to`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hotplug {
+    pub pm: PmId,
+    pub from: NodeId,
+    pub to: NodeId,
+    pub task: TaskRef,
+}
+
+/// Per-PM queues (the paper's MM state).
+#[derive(Clone, Debug, Default)]
+struct MachineManager {
+    assign_q: VecDeque<(NodeId, TaskRef)>,
+    release_q: VecDeque<NodeId>,
+}
+
+/// The Configuration Manager of one virtual cluster.
+#[derive(Clone, Debug)]
+pub struct ConfigManager {
+    mms: Vec<MachineManager>,
+    /// Total hot-plugs granted (metrics).
+    pub hotplugs: u64,
+}
+
+impl ConfigManager {
+    pub fn new(num_pms: usize) -> Self {
+        Self {
+            mms: vec![MachineManager::default(); num_pms],
+            hotplugs: 0,
+        }
+    }
+
+    /// Alg. 1 line 11: register a pending local task needing a core on
+    /// `vm`. Duplicate registrations for the same task are the caller's
+    /// bug (checked in debug).
+    pub fn enqueue_assign(&mut self, pm: PmId, vm: NodeId, task: TaskRef) {
+        let mm = &mut self.mms[pm.idx()];
+        debug_assert!(
+            !mm.assign_q.iter().any(|(_, t)| *t == task),
+            "task {task:?} double-registered in AQ"
+        );
+        mm.assign_q.push_back((vm, task));
+    }
+
+    /// Alg. 1 line 12: register a free core on `vm`. Deduplicated: a VM's
+    /// free core appears at most once (heartbeats would otherwise inflate
+    /// the queue every 3 s while nothing matches).
+    pub fn enqueue_release(&mut self, pm: PmId, vm: NodeId) {
+        let mm = &mut self.mms[pm.idx()];
+        if !mm.release_q.contains(&vm) {
+            mm.release_q.push_back(vm);
+        }
+    }
+
+    /// Queue depths used by the Alg. 1 node-choice scoring (and exported
+    /// to the XLA placement kernel).
+    pub fn rq_depth(&self, pm: PmId) -> usize {
+        self.mms[pm.idx()].release_q.len()
+    }
+
+    pub fn aq_depth(&self, pm: PmId) -> usize {
+        self.mms[pm.idx()].aq_len()
+    }
+
+    /// Match AQ/RQ entries on every PM against current cluster state,
+    /// returning the hot-plugs to apply. Stale entries (releasing VM no
+    /// longer has a free core; e.g. a reduce task took it) are dropped —
+    /// the VM re-registers on a later heartbeat.
+    ///
+    /// A release from VM X matched with an assign *to VM X* is satisfied
+    /// without any hot-plug (the core never leaves the VM); this happens
+    /// when a slot freed between registration and matching.
+    pub fn match_queues(&mut self, cluster: &Cluster) -> Vec<Hotplug> {
+        let mut out = Vec::new();
+        for (pm_idx, mm) in self.mms.iter_mut().enumerate() {
+            let pm = PmId(pm_idx as u32);
+            while !mm.assign_q.is_empty() && !mm.release_q.is_empty() {
+                // Drop stale releases first.
+                let Some(&from) = mm.release_q.front() else { break };
+                if !cluster.vm(from).can_release_core() {
+                    mm.release_q.pop_front();
+                    continue;
+                }
+                let (to, task) = mm.assign_q.pop_front().unwrap();
+                mm.release_q.pop_front();
+                self.hotplugs += 1;
+                out.push(Hotplug { pm, from, to, task });
+            }
+        }
+        out
+    }
+
+    /// Forget any queued state for `task` (job finished it elsewhere or it
+    /// was cancelled).
+    pub fn cancel_task(&mut self, task: TaskRef) {
+        for mm in &mut self.mms {
+            mm.assign_q.retain(|(_, t)| *t != task);
+        }
+    }
+
+    /// Total queued assigns across the cluster (diagnostics).
+    pub fn total_pending_assigns(&self) -> usize {
+        self.mms.iter().map(|m| m.aq_len()).sum()
+    }
+}
+
+impl MachineManager {
+    fn aq_len(&self) -> usize {
+        self.assign_q.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::mapreduce::JobId;
+
+    fn setup() -> (Cluster, ConfigManager) {
+        let cfg = SimConfig::small(); // 4 PMs x 2 VMs x 2 vCPUs
+        let c = Cluster::build(&cfg);
+        let cm = ConfigManager::new(cfg.pms);
+        (c, cm)
+    }
+
+    fn task(n: u32) -> TaskRef {
+        TaskRef::map(JobId(0), n)
+    }
+
+    #[test]
+    fn match_requires_both_queues() {
+        let (c, mut cm) = setup();
+        cm.enqueue_assign(PmId(0), NodeId(1), task(0));
+        assert!(cm.match_queues(&c).is_empty(), "no release yet");
+        cm.enqueue_release(PmId(0), NodeId(0));
+        let grants = cm.match_queues(&c);
+        assert_eq!(
+            grants,
+            vec![Hotplug {
+                pm: PmId(0),
+                from: NodeId(0),
+                to: NodeId(1),
+                task: task(0),
+            }]
+        );
+        assert_eq!(cm.hotplugs, 1);
+    }
+
+    #[test]
+    fn queues_are_per_pm() {
+        let (c, mut cm) = setup();
+        cm.enqueue_assign(PmId(0), NodeId(1), task(0));
+        cm.enqueue_release(PmId(1), NodeId(2)); // different PM
+        assert!(
+            cm.match_queues(&c).is_empty(),
+            "cross-PM transfer must never match (paper: CPU cannot cross \
+             the physical boundary)"
+        );
+    }
+
+    #[test]
+    fn stale_release_dropped() {
+        let (mut c, mut cm) = setup();
+        cm.enqueue_release(PmId(0), NodeId(0));
+        // Node 0's cores all become busy before matching.
+        c.vm_mut(NodeId(0)).busy_map = 2;
+        cm.enqueue_assign(PmId(0), NodeId(1), task(1));
+        let grants = cm.match_queues(&c);
+        assert!(grants.is_empty());
+        assert_eq!(cm.rq_depth(PmId(0)), 0, "stale entry consumed");
+        assert_eq!(cm.aq_depth(PmId(0)), 1, "assign still waiting");
+    }
+
+    #[test]
+    fn fifo_matching_order() {
+        let (c, mut cm) = setup();
+        cm.enqueue_assign(PmId(0), NodeId(1), task(0));
+        cm.enqueue_assign(PmId(0), NodeId(1), task(1));
+        cm.enqueue_release(PmId(0), NodeId(0));
+        let grants = cm.match_queues(&c);
+        assert_eq!(grants.len(), 1);
+        assert_eq!(grants[0].task, task(0), "FIFO: first registered first");
+    }
+
+    #[test]
+    fn cancel_removes_assign() {
+        let (c, mut cm) = setup();
+        cm.enqueue_assign(PmId(0), NodeId(1), task(0));
+        cm.cancel_task(task(0));
+        cm.enqueue_release(PmId(0), NodeId(0));
+        assert!(cm.match_queues(&c).is_empty());
+        assert_eq!(cm.total_pending_assigns(), 0);
+    }
+
+    #[test]
+    fn multiple_pms_match_independently() {
+        let (c, mut cm) = setup();
+        cm.enqueue_assign(PmId(0), NodeId(1), task(0));
+        cm.enqueue_release(PmId(0), NodeId(0));
+        cm.enqueue_assign(PmId(2), NodeId(5), task(1));
+        cm.enqueue_release(PmId(2), NodeId(4));
+        let grants = cm.match_queues(&c);
+        assert_eq!(grants.len(), 2);
+        let pms: Vec<u32> = grants.iter().map(|g| g.pm.0).collect();
+        assert_eq!(pms, vec![0, 2]);
+    }
+
+    #[test]
+    fn grant_applies_to_cluster() {
+        let (mut c, mut cm) = setup();
+        cm.enqueue_assign(PmId(0), NodeId(1), task(0));
+        cm.enqueue_release(PmId(0), NodeId(0));
+        for g in cm.match_queues(&c) {
+            c.transfer_core(g.from, g.to).unwrap();
+        }
+        assert_eq!(c.vm(NodeId(0)).vcpus, 1);
+        assert_eq!(c.vm(NodeId(1)).vcpus, 3);
+        c.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,232 @@
+//! One compiled PJRT executable per artifact, with f32-literal helpers.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// A single HLO-text artifact compiled onto the PJRT CPU client.
+pub struct Artifact {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall time spent compiling (exposed for the micro bench / EXPERIMENTS).
+    pub compile_time_ms: f64,
+}
+
+impl Artifact {
+    /// Load `path` (HLO text) and compile it on `client`.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Self {
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+            compile_time_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 vector inputs (each reshaped to `shapes[i]`) and
+    /// return all outputs of the result tuple as f32 vectors.
+    ///
+    /// All our artifacts take f32 arrays and return a tuple; the one i32
+    /// output (locality best_node) is converted on the python side? No —
+    /// it stays i32; use [`Artifact::execute_mixed`] for that artifact.
+    pub fn execute_f32(
+        &self,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let literals = self.build_inputs(inputs)?;
+        let result = self.run(&literals)?;
+        let tuple = result.to_tuple()?;
+        tuple
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    /// Execute and decode a mixed (i32 first, f32 rest) result tuple —
+    /// the shape of the locality artifact's (best_node, best_score).
+    pub fn execute_i32_f32(
+        &self,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let literals = self.build_inputs(inputs)?;
+        let result = self.run(&literals)?;
+        let mut tuple = result.to_tuple()?;
+        anyhow::ensure!(tuple.len() == 2, "expected 2-tuple from {}", self.name);
+        let scores = tuple.pop().unwrap().to_vec::<f32>()?;
+        let nodes = tuple.pop().unwrap().to_vec::<i32>()?;
+        Ok((nodes, scores))
+    }
+
+    fn build_inputs(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<xla::Literal>> {
+        inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                if shape.len() == 1 {
+                    debug_assert_eq!(data.len(), shape[0]);
+                    Ok(lit)
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).map_err(Into::into)
+                }
+            })
+            .collect()
+    }
+
+    fn run(&self, literals: &[xla::Literal]) -> Result<xla::Literal> {
+        let outs = self.exe.execute::<xla::Literal>(literals)?;
+        anyhow::ensure!(!outs.is_empty() && !outs[0].is_empty(), "empty result");
+        Ok(outs[0][0].to_literal_sync()?)
+    }
+}
+
+/// The full set of predictor artifacts, plus the shared PJRT client.
+pub struct ArtifactSet {
+    pub slot_solver: Artifact,
+    pub locality: Artifact,
+    pub estimator: Artifact,
+    pub wave_estimator: Artifact,
+}
+
+impl ArtifactSet {
+    /// Load all three artifacts from `dir` (usually `artifacts/`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            slot_solver: Artifact::load(&client, &dir.join("slot_solver.hlo.txt"))?,
+            locality: Artifact::load(&client, &dir.join("locality.hlo.txt"))?,
+            estimator: Artifact::load(&client, &dir.join("estimator.hlo.txt"))?,
+            wave_estimator: Artifact::load(&client, &dir.join("wave_estimator.hlo.txt"))?,
+        })
+    }
+
+    /// Load from the repo-relative default directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&default_artifact_dir())
+    }
+}
+
+/// `artifacts/` resolved against the crate root (works from tests, benches
+/// and examples regardless of cwd).
+pub fn default_artifact_dir() -> PathBuf {
+    crate::util::repo_path("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<ArtifactSet> {
+        let dir = default_artifact_dir();
+        if !dir.join("slot_solver.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(ArtifactSet::load(&dir).expect("artifact load"))
+    }
+
+    #[test]
+    fn slot_solver_executes() {
+        let Some(set) = artifacts() else { return };
+        let j = crate::runtime::MAX_JOBS;
+        let mut a = vec![0f32; j];
+        let mut b = vec![0f32; j];
+        let mut c = vec![0f32; j];
+        let mut m = vec![0f32; j];
+        a[0] = 100.0;
+        b[0] = 50.0;
+        c[0] = 10.0;
+        m[0] = 1.0;
+        let shape = [j];
+        let outs = set
+            .slot_solver
+            .execute_f32(&[
+                (&a, &shape[..]),
+                (&b, &shape[..]),
+                (&c, &shape[..]),
+                (&m, &shape[..]),
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        // sqrt(100)*(10+7.071)/10 = 17.07 -> 18 ; sqrt(50)*17.071/10 -> 13
+        assert_eq!(outs[0][0], 18.0);
+        assert_eq!(outs[1][0], 13.0);
+        assert!(outs[0][1..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn locality_executes() {
+        let Some(set) = artifacts() else { return };
+        let (t, n) = (crate::runtime::MAX_TASKS, crate::runtime::MAX_NODES);
+        let mut hd = vec![0f32; t * n];
+        hd[5] = 1.0; // task 0 has data on node 5
+        hd[9] = 1.0; // ... and node 9
+        let mut rq = vec![0f32; n];
+        rq[9] = 4.0;
+        let aq = vec![0f32; n];
+        let mut tm = vec![0f32; t];
+        tm[0] = 1.0;
+        let nm = vec![1f32; n];
+        let w = [1.0f32, 0.5];
+        let (nodes, scores) = set
+            .locality
+            .execute_i32_f32(&[
+                (&hd, &[t, n][..]),
+                (&rq, &[n][..]),
+                (&aq, &[n][..]),
+                (&tm, &[t][..]),
+                (&nm, &[n][..]),
+                (&w, &[2][..]),
+            ])
+            .unwrap();
+        assert_eq!(nodes[0], 9, "deepest release queue must win");
+        assert_eq!(scores[0], 4.0);
+        assert_eq!(nodes[1], -1, "masked task must be infeasible");
+    }
+
+    #[test]
+    fn estimator_executes() {
+        let Some(set) = artifacts() else { return };
+        let j = crate::runtime::MAX_JOBS;
+        let shape = [j];
+        let mk = |v0: f32| {
+            let mut v = vec![0f32; j];
+            v[0] = v0;
+            v
+        };
+        let args = [
+            mk(10.0), // rem_map
+            mk(4.0),  // rem_red
+            mk(2.0),  // t_m
+            mk(2.0),  // t_r
+            mk(0.1),  // t_s
+            mk(2.0),  // n_m
+            mk(2.0),  // n_r
+            mk(4.0),  // v_r
+            mk(30.0), // deadline
+            mk(0.0),  // elapsed
+            mk(1.0),  // mask
+        ];
+        let refs: Vec<(&[f32], &[usize])> =
+            args.iter().map(|v| (v.as_slice(), &shape[..])).collect();
+        let outs = set.estimator.execute_f32(&refs).unwrap();
+        assert!((outs[0][0] - 18.0).abs() < 1e-4, "eta {}", outs[0][0]);
+        assert!((outs[1][0] - 12.0).abs() < 1e-4, "urgency {}", outs[1][0]);
+    }
+}

@@ -1,0 +1,46 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place the coordinator touches XLA. Artifacts are
+//! produced once at build time by `python -m compile.aot` (L2 JAX model
+//! calling the L1 Pallas kernels, lowered to HLO *text* — the xla crate's
+//! xla_extension 0.5.1 rejects jax>=0.5 serialized protos). Each artifact
+//! is compiled exactly once per process; executions reuse the compiled
+//! executable and pre-sized input buffers, so the request path performs no
+//! Python, no parsing and no recompilation.
+
+mod executable;
+mod predictor_xla;
+
+pub use executable::{Artifact, ArtifactSet};
+pub use predictor_xla::{PlacementQuery, XlaPredictor};
+
+/// Padded batch shapes shared with `python/compile/model.py`.
+/// Keep in sync with `MAX_JOBS` / `MAX_TASKS` / `MAX_NODES` there
+/// (checked at load time against artifacts/MANIFEST.txt).
+pub const MAX_JOBS: usize = 128;
+/// Max pending map tasks scored per placement call.
+pub const MAX_TASKS: usize = 256;
+/// Max cluster nodes (VMs) per placement call.
+pub const MAX_NODES: usize = 128;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_match_manifest_when_present() {
+        let path = crate::util::repo_path("artifacts/MANIFEST.txt");
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            eprintln!("skipping: no artifacts built");
+            return;
+        };
+        let expect = format!(
+            "MAX_JOBS={} MAX_TASKS={} MAX_NODES={}",
+            MAX_JOBS, MAX_TASKS, MAX_NODES
+        );
+        assert!(
+            text.contains(&expect),
+            "artifact manifest disagrees with runtime constants: {text}"
+        );
+    }
+}

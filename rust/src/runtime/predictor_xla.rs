@@ -1,0 +1,338 @@
+//! XLA-artifact backend for the Resource Predictor + Alg. 1 placement.
+//!
+//! One PJRT execution per heartbeat per question; inputs are packed into
+//! pre-allocated padded buffers (no per-call allocation on the hot path
+//! beyond the PJRT literals themselves).
+
+use anyhow::Result;
+
+use super::{ArtifactSet, MAX_JOBS, MAX_NODES, MAX_TASKS};
+use crate::predictor::{abc, Eta, JobDemand, JobProgress, Predictor, SlotDemand};
+
+/// Placement query for the locality artifact (Alg. 1 batched).
+pub struct PlacementQuery {
+    /// `has_data[t * MAX_NODES + n] = 1.0` iff task `t`'s input block is on
+    /// node `n`. Row-major `[MAX_TASKS, MAX_NODES]`.
+    pub has_data: Vec<f32>,
+    /// Release-queue depth of each node's physical machine.
+    pub rq: Vec<f32>,
+    /// Assign-queue depth of each node's physical machine.
+    pub aq: Vec<f32>,
+    pub task_mask: Vec<f32>,
+    pub node_mask: Vec<f32>,
+    /// `(w_rq, w_aq)` — Alg. 1 preference weights.
+    pub weights: [f32; 2],
+}
+
+impl PlacementQuery {
+    pub fn new() -> Self {
+        Self {
+            has_data: vec![0.0; MAX_TASKS * MAX_NODES],
+            rq: vec![0.0; MAX_NODES],
+            aq: vec![0.0; MAX_NODES],
+            task_mask: vec![0.0; MAX_TASKS],
+            node_mask: vec![0.0; MAX_NODES],
+            weights: [1.0, 0.5],
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.has_data.fill(0.0);
+        self.rq.fill(0.0);
+        self.aq.fill(0.0);
+        self.task_mask.fill(0.0);
+        self.node_mask.fill(0.0);
+    }
+
+    #[inline]
+    pub fn set_has_data(&mut self, task: usize, node: usize) {
+        self.has_data[task * MAX_NODES + node] = 1.0;
+    }
+}
+
+impl Default for PlacementQuery {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Predictor backed by the three AOT artifacts.
+pub struct XlaPredictor {
+    set: ArtifactSet,
+    // Pre-sized staging buffers (reused across calls).
+    buf_a: Vec<f32>,
+    buf_b: Vec<f32>,
+    buf_c: Vec<f32>,
+    buf_mask: Vec<f32>,
+    est: [Vec<f32>; 11],
+    /// Number of PJRT executions issued (micro-bench observability).
+    pub calls: u64,
+}
+
+impl XlaPredictor {
+    pub fn new(set: ArtifactSet) -> Self {
+        Self {
+            set,
+            buf_a: vec![0.0; MAX_JOBS],
+            buf_b: vec![0.0; MAX_JOBS],
+            buf_c: vec![0.0; MAX_JOBS],
+            buf_mask: vec![0.0; MAX_JOBS],
+            est: std::array::from_fn(|_| vec![0.0; MAX_JOBS]),
+            calls: 0,
+        }
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Ok(Self::new(ArtifactSet::load_default()?))
+    }
+
+    /// Alg. 1 placement: per-task best node (-1 when no replica reachable).
+    pub fn place(&mut self, q: &PlacementQuery) -> Result<Vec<i32>> {
+        self.calls += 1;
+        let (nodes, _scores) = self.set.locality.execute_i32_f32(&[
+            (&q.has_data, &[MAX_TASKS, MAX_NODES][..]),
+            (&q.rq, &[MAX_NODES][..]),
+            (&q.aq, &[MAX_NODES][..]),
+            (&q.task_mask, &[MAX_TASKS][..]),
+            (&q.node_mask, &[MAX_NODES][..]),
+            (&q.weights, &[2][..]),
+        ])?;
+        Ok(nodes)
+    }
+
+    fn solve_chunk(&mut self, jobs: &[JobDemand], out: &mut Vec<SlotDemand>) -> Result<()> {
+        debug_assert!(jobs.len() <= MAX_JOBS);
+        self.buf_a.fill(0.0);
+        self.buf_b.fill(0.0);
+        self.buf_c.fill(0.0);
+        self.buf_mask.fill(0.0);
+        for (i, d) in jobs.iter().enumerate() {
+            let (a, b, c) = abc(d);
+            self.buf_a[i] = a as f32;
+            self.buf_b[i] = b as f32;
+            self.buf_c[i] = c as f32;
+            self.buf_mask[i] = 1.0;
+        }
+        self.calls += 1;
+        let shape = [MAX_JOBS];
+        let outs = self.set.slot_solver.execute_f32(&[
+            (&self.buf_a, &shape[..]),
+            (&self.buf_b, &shape[..]),
+            (&self.buf_c, &shape[..]),
+            (&self.buf_mask, &shape[..]),
+        ])?;
+        for i in 0..jobs.len() {
+            let (a, b, c) = abc(&jobs[i]);
+            let infeasible = c <= 0.0;
+            out.push(SlotDemand {
+                map_slots: outs[0][i] as u32,
+                reduce_slots: outs[1][i] as u32,
+                // The kernel returns 0 slots for infeasible entries; we also
+                // flag entries whose map/reduce work is zero as feasible.
+                infeasible: infeasible && (a > 0.0 || b > 0.0 || c <= 0.0),
+            });
+        }
+        Ok(())
+    }
+
+    fn estimate_chunk_with(
+        &mut self,
+        jobs: &[JobProgress],
+        out: &mut Vec<Eta>,
+        wave: bool,
+    ) -> Result<()> {
+        debug_assert!(jobs.len() <= MAX_JOBS);
+        for buf in self.est.iter_mut() {
+            buf.fill(0.0);
+        }
+        for (i, p) in jobs.iter().enumerate() {
+            self.est[0][i] = p.rem_map as f32;
+            self.est[1][i] = p.rem_reduce as f32;
+            self.est[2][i] = p.t_map as f32;
+            self.est[3][i] = p.t_reduce as f32;
+            self.est[4][i] = p.t_shuffle as f32;
+            self.est[5][i] = p.map_slots as f32;
+            self.est[6][i] = p.reduce_slots as f32;
+            self.est[7][i] = p.reduce_tasks as f32;
+            self.est[8][i] = p.deadline as f32;
+            self.est[9][i] = p.elapsed as f32;
+            self.est[10][i] = 1.0;
+        }
+        self.calls += 1;
+        let shape = [MAX_JOBS];
+        let inputs: Vec<(&[f32], &[usize])> =
+            self.est.iter().map(|v| (v.as_slice(), &shape[..])).collect();
+        let artifact = if wave {
+            &self.set.wave_estimator
+        } else {
+            &self.set.estimator
+        };
+        let outs = artifact.execute_f32(&inputs)?;
+        for i in 0..jobs.len() {
+            out.push(Eta {
+                eta: outs[0][i] as f64,
+                slack: outs[1][i] as f64,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Predictor for XlaPredictor {
+    fn solve_slots(&mut self, jobs: &[JobDemand]) -> Vec<SlotDemand> {
+        let mut out = Vec::with_capacity(jobs.len());
+        for chunk in jobs.chunks(MAX_JOBS) {
+            self.solve_chunk(chunk, &mut out)
+                .expect("PJRT slot_solver execution failed");
+        }
+        out
+    }
+
+    fn estimate(&mut self, jobs: &[JobProgress]) -> Vec<Eta> {
+        let mut out = Vec::with_capacity(jobs.len());
+        for chunk in jobs.chunks(MAX_JOBS) {
+            self.estimate_chunk_with(chunk, &mut out, false)
+                .expect("PJRT estimator execution failed");
+        }
+        out
+    }
+
+    fn estimate_wave(&mut self, jobs: &[JobProgress]) -> Vec<Eta> {
+        let mut out = Vec::with_capacity(jobs.len());
+        for chunk in jobs.chunks(MAX_JOBS) {
+            self.estimate_chunk_with(chunk, &mut out, true)
+                .expect("PJRT wave-estimator execution failed");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::NativePredictor;
+
+    fn predictor() -> Option<XlaPredictor> {
+        match XlaPredictor::load_default() {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("skipping XLA predictor tests: {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_native_on_slots() {
+        let Some(mut xp) = predictor() else { return };
+        let mut rng = crate::util::Rng::new(21);
+        let jobs: Vec<JobDemand> = (0..200)
+            .map(|_| JobDemand {
+                map_tasks: rng.range_f64(1.0, 400.0).floor(),
+                reduce_tasks: rng.range_f64(0.0, 48.0).floor(),
+                t_map: rng.range_f64(0.5, 80.0),
+                t_reduce: rng.range_f64(0.5, 80.0),
+                t_shuffle: rng.range_f64(0.0, 0.005),
+                deadline: rng.range_f64(-50.0, 4000.0),
+            })
+            .collect();
+        let got = xp.solve_slots(&jobs);
+        let want = NativePredictor.solve_slots(&jobs);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                (g.map_slots, g.reduce_slots),
+                (w.map_slots, w.reduce_slots),
+                "job {i}: {:?}",
+                jobs[i]
+            );
+        }
+    }
+
+    #[test]
+    fn agrees_with_native_on_eta() {
+        let Some(mut xp) = predictor() else { return };
+        let mut rng = crate::util::Rng::new(22);
+        let jobs: Vec<JobProgress> = (0..150)
+            .map(|_| JobProgress {
+                rem_map: rng.range_f64(0.0, 200.0).floor(),
+                rem_reduce: rng.range_f64(0.0, 50.0).floor(),
+                t_map: rng.range_f64(0.5, 60.0),
+                t_reduce: rng.range_f64(0.5, 60.0),
+                t_shuffle: rng.range_f64(0.0, 0.01),
+                map_slots: rng.range_f64(0.0, 32.0).floor(),
+                reduce_slots: rng.range_f64(0.0, 32.0).floor(),
+                reduce_tasks: rng.range_f64(0.0, 50.0).floor(),
+                deadline: rng.range_f64(10.0, 5000.0),
+                elapsed: rng.range_f64(0.0, 1000.0),
+            })
+            .collect();
+        let got = xp.estimate(&jobs);
+        let want = NativePredictor.estimate(&jobs);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let tol = 1e-3 * (1.0 + w.eta.abs());
+            assert!((g.eta - w.eta).abs() < tol, "job {i}: {g:?} vs {w:?}");
+            let tol = 1e-3 * (1.0 + w.slack.abs()) + 0.25;
+            assert!((g.slack - w.slack).abs() < tol, "job {i}: {g:?} vs {w:?}");
+        }
+    }
+
+    #[test]
+    fn placement_prefers_release_queue() {
+        let Some(mut xp) = predictor() else { return };
+        let mut q = PlacementQuery::new();
+        q.set_has_data(0, 3);
+        q.set_has_data(0, 9);
+        q.rq[9] = 4.0;
+        q.task_mask[0] = 1.0;
+        q.node_mask.fill(1.0);
+        let nodes = xp.place(&q).unwrap();
+        assert_eq!(nodes[0], 9);
+        assert_eq!(nodes[1], -1);
+    }
+
+    #[test]
+    fn wave_agrees_with_native() {
+        let Some(mut xp) = predictor() else { return };
+        let mut rng = crate::util::Rng::new(31);
+        let jobs: Vec<JobProgress> = (0..100)
+            .map(|_| JobProgress {
+                rem_map: rng.range_f64(0.0, 200.0).floor(),
+                rem_reduce: rng.range_f64(0.0, 50.0).floor(),
+                t_map: rng.range_f64(0.5, 60.0),
+                t_reduce: rng.range_f64(0.5, 60.0),
+                t_shuffle: rng.range_f64(0.0, 0.01),
+                map_slots: rng.range_f64(1.0, 32.0).floor(),
+                reduce_slots: rng.range_f64(1.0, 32.0).floor(),
+                reduce_tasks: rng.range_f64(0.0, 50.0).floor(),
+                deadline: rng.range_f64(10.0, 5000.0),
+                elapsed: rng.range_f64(0.0, 1000.0),
+            })
+            .collect();
+        let got = xp.estimate_wave(&jobs);
+        let want = NativePredictor.estimate_wave(&jobs);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let tol = 1e-3 * (1.0 + w.eta.abs());
+            assert!((g.eta - w.eta).abs() < tol, "job {i}: {g:?} vs {w:?}");
+        }
+    }
+
+    #[test]
+    fn multi_chunk_batches() {
+        let Some(mut xp) = predictor() else { return };
+        let jobs: Vec<JobDemand> = (0..(MAX_JOBS * 2 + 7))
+            .map(|i| JobDemand {
+                map_tasks: (i % 50 + 1) as f64,
+                reduce_tasks: 4.0,
+                t_map: 2.0,
+                t_reduce: 2.0,
+                t_shuffle: 0.0,
+                deadline: 100.0,
+            })
+            .collect();
+        let got = xp.solve_slots(&jobs);
+        assert_eq!(got.len(), jobs.len());
+        let want = NativePredictor.solve_slots(&jobs);
+        assert_eq!(got, want);
+    }
+}

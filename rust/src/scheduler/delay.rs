@@ -1,0 +1,114 @@
+//! Delay Scheduling (Zaharia et al., EuroSys'10 — the paper's ref [16]):
+//! Fair Scheduler ranking, but a job with no node-local task *waits* for
+//! up to `patience` heartbeats before accepting a remote task. Improves
+//! locality without VM reconfiguration — the natural software-only
+//! baseline against the paper's hot-plug approach.
+
+use std::collections::HashMap;
+
+use crate::cluster::NodeId;
+use crate::mapreduce::JobId;
+use crate::predictor::Predictor;
+
+use super::{greedy_fill, Action, FairScheduler, SchedView, Scheduler, SchedulerKind};
+
+#[derive(Debug)]
+pub struct DelayScheduler {
+    patience: u32,
+    /// Heartbeats each job has been skipped for lack of a local task.
+    skipped: HashMap<JobId, u32>,
+}
+
+impl DelayScheduler {
+    pub fn new(patience: u32) -> Self {
+        Self {
+            patience,
+            skipped: HashMap::new(),
+        }
+    }
+}
+
+impl Scheduler for DelayScheduler {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Delay
+    }
+
+    fn on_heartbeat(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        _predictor: &mut dyn Predictor,
+    ) -> Vec<Action> {
+        let order = FairScheduler::fair_order(view);
+        // A job may go remote once its skip counter exceeded patience.
+        let skipped = &self.skipped;
+        let patience = self.patience;
+        let actions = greedy_fill(view, node, &order, |job| {
+            skipped.get(&job.id).copied().unwrap_or(0) >= patience
+        });
+        // Update skip counters: jobs with pending maps that got nothing
+        // local on this heartbeat accumulate patience; a local launch
+        // resets it (Zaharia et al. §4.1).
+        for &ji in &order {
+            let job = &view.jobs[ji];
+            if job.pending_maps() == 0 {
+                self.skipped.remove(&job.id);
+                continue;
+            }
+            let launched_for_job = actions.iter().any(|a| {
+                matches!(a, Action::LaunchMap { job: j, .. } if *j == job.id)
+            });
+            if launched_for_job {
+                self.skipped.remove(&job.id);
+            } else {
+                *self.skipped.entry(job.id).or_insert(0) += 1;
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::testutil::*;
+
+    #[test]
+    fn waits_before_going_remote() {
+        let mut w = TestWorld::one_job_no_local_on(NodeId(0));
+        let mut s = DelayScheduler::new(2);
+        // Heartbeats 1 and 2: job has no local block on node 0 -> skipped.
+        for _ in 0..2 {
+            let a = w.heartbeat_with(&mut s, NodeId(0));
+            assert!(
+                a.iter().all(|x| !matches!(x, Action::LaunchMap { .. })),
+                "must wait while under patience"
+            );
+        }
+        // Heartbeat 3: patience exhausted -> remote launch allowed.
+        let a = w.heartbeat_with(&mut s, NodeId(0));
+        assert!(
+            a.iter().any(|x| matches!(x, Action::LaunchMap { .. })),
+            "must go remote after patience"
+        );
+    }
+
+    #[test]
+    fn zero_patience_equals_fair() {
+        let mut w = TestWorld::one_job_no_local_on(NodeId(0));
+        let mut s = DelayScheduler::new(0);
+        let a = w.heartbeat_with(&mut s, NodeId(0));
+        assert!(a.iter().any(|x| matches!(x, Action::LaunchMap { .. })));
+    }
+
+    #[test]
+    fn local_launch_resets_patience() {
+        let mut w = TestWorld::two_jobs();
+        let mut s = DelayScheduler::new(3);
+        // A node that has local work: launches happen, counter stays 0.
+        let node = w.node_with_local_for(0);
+        let a = w.heartbeat_with(&mut s, node);
+        assert!(a.iter().any(|x| matches!(x, Action::LaunchMap { .. })));
+        assert_eq!(s.skipped.get(&crate::mapreduce::JobId(0)), None);
+    }
+}

@@ -1,0 +1,78 @@
+//! Hadoop's default FIFO scheduler: jobs in submission order; on each
+//! heartbeat the oldest unfinished job fills the node's free slots
+//! (node-local map preferred, else any).
+
+use crate::cluster::NodeId;
+use crate::predictor::Predictor;
+
+use super::{greedy_fill, Action, SchedView, Scheduler, SchedulerKind};
+
+#[derive(Debug, Default)]
+pub struct FifoScheduler;
+
+impl FifoScheduler {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Scheduler for FifoScheduler {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Fifo
+    }
+
+    fn on_heartbeat(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        _predictor: &mut dyn Predictor,
+    ) -> Vec<Action> {
+        // Submission order == JobId order == index order.
+        let order: Vec<usize> = (0..view.jobs.len())
+            .filter(|&i| !view.jobs[i].is_done())
+            .collect();
+        greedy_fill(view, node, &order, |_| true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::testutil::*;
+
+    #[test]
+    fn oldest_job_first() {
+        let mut w = TestWorld::two_jobs();
+        let actions = w.heartbeat_with(&mut FifoScheduler::new(), NodeId(0));
+        // All launches must belong to job 0 until it runs out of tasks.
+        let jobs: Vec<u32> = actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::LaunchMap { job, .. } => Some(job.0),
+                _ => None,
+            })
+            .collect();
+        assert!(!jobs.is_empty());
+        assert!(jobs.iter().all(|&j| j == 0), "FIFO must drain job 0 first: {jobs:?}");
+    }
+
+    #[test]
+    fn fills_all_free_slots() {
+        let mut w = TestWorld::two_jobs();
+        let actions = w.heartbeat_with(&mut FifoScheduler::new(), NodeId(1));
+        let maps = actions
+            .iter()
+            .filter(|a| matches!(a, Action::LaunchMap { .. }))
+            .count();
+        assert_eq!(maps, 2, "2 free map slots must be filled");
+    }
+
+    #[test]
+    fn no_reduce_before_map_phase_done() {
+        let mut w = TestWorld::two_jobs();
+        let actions = w.heartbeat_with(&mut FifoScheduler::new(), NodeId(0));
+        assert!(actions
+            .iter()
+            .all(|a| !matches!(a, Action::LaunchReduce { .. })));
+    }
+}

@@ -1,0 +1,281 @@
+//! Pluggable job schedulers.
+//!
+//! The coordinator drives a Hadoop-0.20-style protocol: every TaskTracker
+//! (VM) heartbeats every `heartbeat_s`; the scheduler inspects an immutable
+//! [`SchedView`] of the world and returns [`Action`]s, which the
+//! coordinator validates and applies. Schedulers never mutate world state
+//! directly — this keeps every policy replayable and lets the property
+//! tests check the same invariants across all of them.
+
+mod deadline_vc;
+mod delay;
+mod edf;
+mod fair;
+mod fifo;
+#[cfg(test)]
+pub(crate) mod testutil;
+
+pub use deadline_vc::{DeadlineVcScheduler, DvcTuning};
+pub use delay::DelayScheduler;
+pub use edf::EdfScheduler;
+pub use fair::FairScheduler;
+pub use fifo::FifoScheduler;
+
+use crate::cluster::{Cluster, NodeId};
+use crate::config::SimConfig;
+use crate::mapreduce::{JobId, JobState, TaskId};
+use crate::predictor::Predictor;
+use crate::reconfig::ConfigManager;
+use crate::sim::SimTime;
+
+/// Which scheduler to run (CLI/bench selector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Fifo,
+    Fair,
+    Delay,
+    Edf,
+    /// The paper's proposed scheduler (Alg. 1 + Alg. 2).
+    DeadlineVc,
+}
+
+impl SchedulerKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Fifo => "fifo",
+            SchedulerKind::Fair => "fair",
+            SchedulerKind::Delay => "delay",
+            SchedulerKind::Edf => "edf",
+            SchedulerKind::DeadlineVc => "deadline_vc",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "fifo" => SchedulerKind::Fifo,
+            "fair" => SchedulerKind::Fair,
+            "delay" => SchedulerKind::Delay,
+            "edf" => SchedulerKind::Edf,
+            "deadline_vc" | "proposed" => SchedulerKind::DeadlineVc,
+            _ => return None,
+        })
+    }
+
+    pub fn build(self, cfg: &SimConfig) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Fifo => Box::new(FifoScheduler::new()),
+            SchedulerKind::Fair => Box::new(FairScheduler::new()),
+            SchedulerKind::Delay => Box::new(DelayScheduler::new(cfg.delay_heartbeats)),
+            SchedulerKind::Edf => Box::new(EdfScheduler::new()),
+            SchedulerKind::DeadlineVc => Box::new(DeadlineVcScheduler::new(cfg)),
+        }
+    }
+
+    pub const ALL: [SchedulerKind; 5] = [
+        SchedulerKind::Fifo,
+        SchedulerKind::Fair,
+        SchedulerKind::Delay,
+        SchedulerKind::Edf,
+        SchedulerKind::DeadlineVc,
+    ];
+}
+
+/// Immutable world snapshot handed to schedulers.
+pub struct SchedView<'a> {
+    pub cfg: &'a SimConfig,
+    pub cluster: &'a Cluster,
+    pub jobs: &'a [JobState],
+    pub cm: &'a ConfigManager,
+    pub now: SimTime,
+}
+
+impl SchedView<'_> {
+    /// Indices of jobs that still have work (not Done).
+    pub fn active_jobs(&self) -> impl Iterator<Item = &JobState> {
+        self.jobs.iter().filter(|j| !j.is_done())
+    }
+}
+
+/// A scheduling decision. The coordinator validates slot/queue capacity
+/// before applying; an invalid action is a scheduler bug and panics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Launch map task `task` of `job` on `node` (slot must be free).
+    LaunchMap {
+        job: JobId,
+        task: TaskId,
+        node: NodeId,
+    },
+    /// Launch reduce task (reduce slot must be free; job map phase done).
+    LaunchReduce {
+        job: JobId,
+        task: TaskId,
+        node: NodeId,
+    },
+    /// Alg. 1 lines 11-13: queue `task` for a delayed *local* launch on
+    /// `target` (AQ entry on target's PM) and register the free core of
+    /// `release_from` (RQ entry on its PM).
+    AwaitReconfig {
+        job: JobId,
+        task: TaskId,
+        target: NodeId,
+        release_from: NodeId,
+    },
+    /// Register a free core without a paired assign (Alg. 1 line 12 when
+    /// the heartbeating node simply has nothing local to run).
+    RegisterRelease { node: NodeId },
+    /// Give up on a delayed local launch (reconfiguration starved); the
+    /// task returns to Pending and its AQ entry is cancelled.
+    CancelAwait { job: JobId, task: TaskId },
+    /// Update a job's slot allocation from the predictor (Alg. 2 line 2 /
+    /// 19). Recorded by the coordinator into `JobState::alloc_*`.
+    SetAlloc {
+        job: JobId,
+        map_slots: u32,
+        reduce_slots: u32,
+    },
+}
+
+/// The scheduler interface (see module docs for the protocol).
+pub trait Scheduler {
+    fn kind(&self) -> SchedulerKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// A new job appeared (Alg. 2 line 1-2).
+    fn on_job_added(&mut self, _view: &SchedView, _job: JobId, _predictor: &mut dyn Predictor) -> Vec<Action> {
+        Vec::new()
+    }
+
+    /// Heartbeat from `node`; return assignments for its free slots.
+    fn on_heartbeat(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        predictor: &mut dyn Predictor,
+    ) -> Vec<Action>;
+
+    /// A task of `job` finished (Alg. 2 lines 17-20).
+    fn on_task_finished(
+        &mut self,
+        _view: &SchedView,
+        _job: JobId,
+        _predictor: &mut dyn Predictor,
+    ) -> Vec<Action> {
+        Vec::new()
+    }
+}
+
+/// Shared helper: launch as many tasks as `node` has free slots, scanning
+/// `job_order` (indices into `view.jobs`). Used by the FIFO/Fair/Delay/EDF
+/// baselines — prefer a node-local pending map, else (if `allow_remote`)
+/// any pending map; reduces fill reduce slots once the map phase is done.
+pub(crate) fn greedy_fill(
+    view: &SchedView,
+    node: NodeId,
+    job_order: &[usize],
+    allow_remote_for: impl Fn(&JobState) -> bool,
+) -> Vec<Action> {
+    let mut actions = Vec::new();
+    let vm = view.cluster.vm(node);
+    let mut free_map = vm.free_map_slots();
+    let mut free_reduce = vm.free_reduce_slots();
+    // Track launches within this heartbeat so one task isn't picked twice.
+    let mut claimed_maps = ClaimSet::new();
+    let mut claimed_reduces: Vec<(JobId, u32)> = Vec::new();
+
+    for &ji in job_order {
+        let job = &view.jobs[ji];
+        if job.is_done() {
+            continue;
+        }
+        // Map work.
+        while free_map > 0 {
+            let pick_local = next_unclaimed_local(job, node, &claimed_maps);
+            let pick = pick_local.or_else(|| {
+                if allow_remote_for(job) {
+                    next_unclaimed_any(job, &claimed_maps)
+                } else {
+                    None
+                }
+            });
+            let Some(task) = pick else { break };
+            claimed_maps.insert((job.id, task));
+            actions.push(Action::LaunchMap {
+                job: job.id,
+                task,
+                node,
+            });
+            free_map -= 1;
+        }
+        // Reduce work (only after the map phase: Hadoop 0.20 semantics in
+        // this engine — see mapreduce module docs).
+        while free_reduce > 0 && job.map_finished() {
+            let already: u32 = claimed_reduces
+                .iter()
+                .filter(|(j, _)| *j == job.id)
+                .count() as u32;
+            let Some(task) = nth_pending_reduce(job, already) else { break };
+            claimed_reduces.push((job.id, task.0));
+            actions.push(Action::LaunchReduce {
+                job: job.id,
+                task,
+                node,
+            });
+            free_reduce -= 1;
+        }
+    }
+    actions
+}
+
+/// Set of (job, task) pairs claimed within one heartbeat (launch actions
+/// are applied only after the scheduler returns, so claimed tasks still
+/// look Pending in the view).
+pub(crate) type ClaimSet = std::collections::HashSet<(JobId, TaskId)>;
+
+pub(crate) fn next_unclaimed_local(
+    job: &JobState,
+    node: NodeId,
+    claimed: &ClaimSet,
+) -> Option<TaskId> {
+    job.pending_local_maps(node)
+        .find(|&t| !claimed.contains(&(job.id, t)))
+}
+
+pub(crate) fn next_unclaimed_any(job: &JobState, claimed: &ClaimSet) -> Option<TaskId> {
+    job.pending_maps_iter()
+        .find(|&t| !claimed.contains(&(job.id, t)))
+}
+
+fn nth_pending_reduce(job: &JobState, skip: u32) -> Option<TaskId> {
+    job.pending_reduces_iter().nth(skip as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in SchedulerKind::ALL {
+            assert_eq!(SchedulerKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(
+            SchedulerKind::from_name("proposed"),
+            Some(SchedulerKind::DeadlineVc)
+        );
+        assert_eq!(SchedulerKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn build_constructs_every_kind() {
+        let cfg = SimConfig::small();
+        for k in SchedulerKind::ALL {
+            let s = k.build(&cfg);
+            assert_eq!(s.kind(), k);
+            assert_eq!(s.name(), k.name());
+        }
+    }
+}

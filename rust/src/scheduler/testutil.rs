@@ -1,0 +1,216 @@
+//! Shared fixtures for scheduler unit tests: a small pre-arrived world
+//! with manual control over job/cluster state.
+
+use crate::cluster::NodeId;
+use crate::config::SimConfig;
+use crate::coordinator::World;
+use crate::mapreduce::JobId;
+use crate::predictor::{NativePredictor, TaskSample};
+use crate::sim::SimTime;
+use crate::workloads::trace::JobTrace;
+use crate::workloads::{JobSpec, JobType};
+
+use super::{Action, SchedView, Scheduler};
+
+pub struct TestWorld {
+    world: World,
+}
+
+impl TestWorld {
+    fn build(cfg: SimConfig, specs: Vec<JobSpec>) -> Self {
+        let world = World::new(cfg, JobTrace::new(specs));
+        let mut tw = Self { world };
+        tw.arrive_all();
+        tw
+    }
+
+    /// Pump arrival events (submit_s == 0) without running heartbeats: we
+    /// drain the queue until every job is registered, using a scheduler
+    /// that does nothing.
+    fn arrive_all(&mut self) {
+        struct Null;
+        impl Scheduler for Null {
+            fn kind(&self) -> super::SchedulerKind {
+                super::SchedulerKind::Fifo
+            }
+            fn on_heartbeat(
+                &mut self,
+                _: &SchedView,
+                _: NodeId,
+                _: &mut dyn crate::predictor::Predictor,
+            ) -> Vec<Action> {
+                Vec::new()
+            }
+        }
+        // Arrivals are scheduled at t=0 before any heartbeat offsets > 0;
+        // node 0's heartbeat is also at t=0 but harmless with Null.
+        let mut p = NativePredictor::new();
+        let mut null = Null;
+        while self.world.jobs.len() < self.expected_jobs() {
+            let stepped = self.world.step_one(&mut null, &mut p);
+            assert!(stepped, "queue drained before all jobs arrived");
+        }
+    }
+
+    fn expected_jobs(&self) -> usize {
+        self.world.trace_len()
+    }
+
+    // ---- constructors ----
+
+    pub fn two_jobs() -> Self {
+        Self::build(
+            SimConfig::small(),
+            vec![
+                JobSpec::new(JobType::WordCount, 192.0),
+                JobSpec::new(JobType::Grep, 192.0),
+            ],
+        )
+    }
+
+    pub fn two_jobs_with_deadlines(d0: f64, d1: f64) -> Self {
+        Self::build(
+            SimConfig::small(),
+            vec![
+                JobSpec::new(JobType::WordCount, 192.0).with_deadline(d0),
+                JobSpec::new(JobType::Grep, 192.0).with_deadline(d1),
+            ],
+        )
+    }
+
+    pub fn deadline_and_best_effort() -> Self {
+        Self::build(
+            SimConfig::small(),
+            vec![
+                JobSpec::new(JobType::WordCount, 192.0),
+                JobSpec::new(JobType::Grep, 192.0).with_deadline(400.0),
+            ],
+        )
+    }
+
+    /// One job none of whose blocks are replicated on `node` (found by
+    /// seed search — placement is random but deterministic per seed).
+    pub fn one_job_no_local_on(node: NodeId) -> Self {
+        for seed in 0..200u64 {
+            let cfg = SimConfig {
+                seed,
+                ..SimConfig::small()
+            };
+            let tw = Self::build(
+                cfg,
+                vec![JobSpec::new(JobType::WordCount, 128.0).with_deadline(600.0)],
+            );
+            let job = &tw.world.jobs[0];
+            if job.pending_local_maps(node).next().is_none() {
+                return tw;
+            }
+        }
+        panic!("no seed found with zero blocks on {node:?}");
+    }
+
+    // ---- accessors ----
+
+    pub fn cfg(&self) -> SimConfig {
+        self.world.cfg.clone()
+    }
+
+    pub fn view(&self) -> SchedView<'_> {
+        self.world.view()
+    }
+
+    pub fn view_jobs(&self) -> &[crate::mapreduce::JobState] {
+        &self.world.jobs
+    }
+
+    /// A node that has a pending local map for job `ji`.
+    pub fn node_with_local_for(&self, ji: usize) -> NodeId {
+        let job = &self.world.jobs[ji];
+        for n in 0..self.world.cluster.num_nodes() {
+            let node = NodeId(n as u32);
+            if job.pending_local_maps(node).next().is_some() {
+                return node;
+            }
+        }
+        panic!("no node with local work for job {ji}");
+    }
+
+    // ---- mutations ----
+
+    /// Record a fake completed map so `cold()` turns false.
+    pub fn warm_up_job(&mut self, ji: usize) {
+        self.world.jobs[ji]
+            .stats
+            .record_map(TaskSample { duration_s: 15.0 });
+    }
+
+    pub fn set_alloc(&mut self, ji: usize, maps: u32, reduces: u32) {
+        self.world.jobs[ji].alloc_map_slots = maps;
+        self.world.jobs[ji].alloc_reduce_slots = reduces;
+    }
+
+    /// Launch `n` real map tasks of job `ji` (consumes slots, sets state).
+    pub fn force_running_maps(&mut self, ji: usize, n: u32) {
+        for _ in 0..n {
+            let job = &self.world.jobs[ji];
+            let t = job
+                .pending_maps_iter()
+                .next()
+                .expect("pending map to force-run");
+            let id = JobId(ji as u32);
+            // find any node with a free map slot
+            let node = (0..self.world.cluster.num_nodes())
+                .map(|i| NodeId(i as u32))
+                .find(|&nd| self.world.cluster.vm(nd).free_map_slots() > 0)
+                .expect("free slot");
+            let local = self.world.jobs[ji].map_is_local(t, node);
+            self.world.launch_map(id, t, node, local);
+        }
+    }
+
+    /// Mark every node except `keep` fully busy on map slots.
+    pub fn fill_node_maps_except(&mut self, keep: NodeId) {
+        for n in 0..self.world.cluster.num_nodes() {
+            let node = NodeId(n as u32);
+            if node == keep {
+                continue;
+            }
+            let vm = self.world.cluster.vm_mut(node);
+            vm.busy_map = vm.vcpus;
+        }
+    }
+
+    pub fn push_release(&mut self, node: NodeId) {
+        let pm = self.world.cluster.pm_of(node);
+        self.world.cm.enqueue_release(pm, node);
+    }
+
+    /// Register one release entry per PM (first VM of each).
+    pub fn push_releases_everywhere(&mut self) {
+        for p in 0..self.world.cluster.num_pms() {
+            let pm = crate::cluster::PmId(p as u32);
+            let vm = self.world.cluster.pm(pm).vms[0];
+            self.world.cm.enqueue_release(pm, vm);
+        }
+    }
+
+    pub fn advance(&mut self, dt: SimTime) {
+        self.world.advance(dt);
+    }
+
+    // ---- scheduler drivers ----
+
+    /// Fire one heartbeat; return actions WITHOUT applying them.
+    pub fn heartbeat_with(&mut self, s: &mut dyn Scheduler, node: NodeId) -> Vec<Action> {
+        let mut p = NativePredictor::new();
+        s.on_heartbeat(&self.world.view(), node, &mut p)
+    }
+
+    /// Fire one heartbeat and apply the actions (plus queue matching).
+    pub fn heartbeat_and_apply(&mut self, s: &mut dyn Scheduler, node: NodeId) -> Vec<Action> {
+        let mut p = NativePredictor::new();
+        let actions = s.on_heartbeat(&self.world.view(), node, &mut p);
+        self.world.apply_actions(actions.clone());
+        self.world.match_reconfigs();
+        actions
+    }
+}

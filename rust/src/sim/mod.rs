@@ -1,0 +1,96 @@
+//! Discrete-event simulation core.
+//!
+//! Deterministic single-threaded engine: a monotone clock in integer
+//! milliseconds and a binary-heap event queue with FIFO tie-breaking (a
+//! sequence number breaks timestamp ties so the schedule order is total and
+//! reproducible — the determinism property tests rely on this).
+
+mod queue;
+
+pub use queue::EventQueue;
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Simulated time in milliseconds since simulation start.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_secs_f64(s: f64) -> SimTime {
+        debug_assert!(s >= 0.0, "negative sim time: {s}");
+        SimTime((s.max(0.0) * 1e3).round() as u64)
+    }
+
+    pub fn from_millis(ms: u64) -> SimTime {
+        SimTime(ms)
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+
+    pub fn as_millis(self) -> u64 {
+        self.0
+    }
+
+    pub fn saturating_sub(self, other: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(other.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        debug_assert!(self.0 >= rhs.0, "SimTime underflow");
+        SimTime(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}s", self.as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip() {
+        let t = SimTime::from_secs_f64(12.345);
+        assert_eq!(t.as_millis(), 12345);
+        assert!((t.as_secs_f64() - 12.345).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = SimTime::from_millis(1500);
+        let b = SimTime::from_millis(500);
+        assert_eq!(a + b, SimTime::from_millis(2000));
+        assert_eq!(a - b, SimTime::from_millis(1000));
+        assert_eq!(b.saturating_sub(a), SimTime::ZERO);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(SimTime::from_millis(1) < SimTime::from_millis(2));
+        assert_eq!(SimTime::ZERO, SimTime::from_millis(0));
+    }
+}

@@ -1,0 +1,171 @@
+//! Generic deterministic event queue.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::SimTime;
+
+/// Min-heap of `(time, seq)`-ordered events. `seq` is a monotonically
+/// increasing insertion counter, so events scheduled for the same instant
+/// fire in insertion order — a total, reproducible order.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<Entry<E>>>,
+    seq: u64,
+    now: SimTime,
+    popped: u64,
+}
+
+#[derive(Debug)]
+struct Entry<E> {
+    at: SimTime,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: SimTime::ZERO,
+            popped: 0,
+        }
+    }
+
+    /// Current simulated time (time of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Total events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.popped
+    }
+
+    /// Schedule `ev` at absolute time `at`. Scheduling in the past is a
+    /// logic error (panics in debug; clamped to `now` in release).
+    pub fn schedule_at(&mut self, at: SimTime, ev: E) {
+        debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
+        let at = at.max(self.now);
+        self.seq += 1;
+        self.heap.push(Reverse(Entry {
+            at,
+            seq: self.seq,
+            ev,
+        }));
+    }
+
+    /// Schedule `ev` after a relative delay.
+    pub fn schedule_in(&mut self, delay: SimTime, ev: E) {
+        self.schedule_at(self.now + delay, ev);
+    }
+
+    /// Force the clock forward to `t` without popping (used by tests to
+    /// exercise timeout paths). Events scheduled before `t` still pop in
+    /// order but with their original timestamps clamped monotonically.
+    pub fn advance_to(&mut self, t: SimTime) {
+        debug_assert!(t >= self.now);
+        self.now = self.now.max(t);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|Reverse(e)| {
+            debug_assert!(e.at >= self.now);
+            self.now = e.at;
+            self.popped += 1;
+            (e.at, e.ev)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime::from_millis(30), "c");
+        q.schedule_at(SimTime::from_millis(10), "a");
+        q.schedule_at(SimTime::from_millis(20), "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(q.now(), SimTime::from_millis(30));
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.schedule_at(SimTime::from_millis(5), i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn relative_scheduling_tracks_clock() {
+        let mut q = EventQueue::new();
+        q.schedule_in(SimTime::from_millis(10), 1);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, SimTime::from_millis(10));
+        q.schedule_in(SimTime::from_millis(5), 2);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, SimTime::from_millis(15));
+    }
+
+    #[test]
+    fn clock_monotone_under_interleaving() {
+        let mut q = EventQueue::new();
+        let mut rng = crate::util::Rng::new(1);
+        q.schedule_at(SimTime::from_millis(1), 0u64);
+        let mut last = SimTime::ZERO;
+        let mut n = 0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+            n += 1;
+            if n < 1000 {
+                // schedule 0-2 future events
+                for _ in 0..rng.below(3) {
+                    q.schedule_in(SimTime::from_millis(rng.below(50)), n);
+                }
+            }
+        }
+        assert!(n >= 1);
+    }
+}

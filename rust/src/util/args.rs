@@ -1,0 +1,122 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, `--flag` and positionals:
+//!
+//! ```
+//! use vcsched::util::args::Args;
+//! let a = Args::parse_from(["simulate", "--seed=7", "--verbose"]);
+//! assert_eq!(a.positional(0), Some("simulate"));
+//! assert_eq!(a.get_u64("seed", 1), 7);
+//! assert!(a.flag("verbose"));
+//! ```
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    positionals: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse process arguments (skipping argv[0]).
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn parse_from<I, S>(iter: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().map(Into::into).peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants u64, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get_u64(name, default as u64) as usize
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants f64, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed() {
+        // NOTE: `--flag positional` is ambiguous (the token after a bare
+        // `--name` is greedily taken as its value); positionals must come
+        // before options, or use the `--key=value` form.
+        let a = Args::parse_from([
+            "compare", "pos2", "--seed", "9", "--pms=20", "--verbose",
+        ]);
+        assert_eq!(a.positional(0), Some("compare"));
+        assert_eq!(a.positional(1), Some("pos2"));
+        assert_eq!(a.get_u64("seed", 0), 9);
+        assert_eq!(a.get_usize("pms", 0), 20);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_from(Vec::<String>::new());
+        assert_eq!(a.get_u64("seed", 42), 42);
+        assert_eq!(a.get_f64("rate", 1.5), 1.5);
+        assert_eq!(a.get_str("sched", "fair"), "fair");
+    }
+
+    #[test]
+    fn eq_form() {
+        let a = Args::parse_from(["--x=1.25"]);
+        assert_eq!(a.get_f64("x", 0.0), 1.25);
+    }
+}

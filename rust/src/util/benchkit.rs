@@ -1,0 +1,120 @@
+//! Bench harness (criterion is unavailable offline). `cargo bench` targets
+//! use `harness = false` and drive this: warmup + N timed iterations,
+//! mean/p50/p95 reporting, and paper-style result tables.
+
+use std::time::Instant;
+
+use super::stats::{Percentiles, Summary};
+
+/// Measure `f` for `iters` iterations after `warmup` runs.
+pub fn measure<F: FnMut()>(label: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    let mut p = Percentiles::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64() * 1e6; // microseconds
+        s.add(dt);
+        p.add(dt);
+    }
+    BenchResult {
+        label: label.to_string(),
+        mean_us: s.mean(),
+        std_us: s.std(),
+        p50_us: p.pct(50.0),
+        p95_us: p.pct(95.0),
+        iters,
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub label: String,
+    pub mean_us: f64,
+    pub std_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} mean {:>10.2} us  p50 {:>10.2} us  p95 {:>10.2} us  (n={})",
+            self.label, self.mean_us, self.p50_us, self.p95_us, self.iters
+        );
+    }
+}
+
+/// Fixed-width table printer for paper-figure reproductions.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// `fmt_secs(1234.5)` -> "1234.5s"; keeps bench output uniform.
+pub fn fmt_secs(x: f64) -> String {
+    format!("{x:.1}s")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iters() {
+        let mut n = 0;
+        let r = measure("noop", 2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_us >= 0.0);
+        assert!(r.p95_us >= r.p50_us);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["job", "time"]);
+        t.row(&["wordcount".into(), "12.3s".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,53 @@
+//! Tiny `log` facade backend (env_logger is unavailable offline).
+//! Level comes from `VCSCHED_LOG` (error|warn|info|debug|trace), default warn.
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct SimpleLogger;
+
+static LOGGER: SimpleLogger = SimpleLogger;
+
+impl log::Log for SimpleLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let tag = match record.level() {
+                Level::Error => "E",
+                Level::Warn => "W",
+                Level::Info => "I",
+                Level::Debug => "D",
+                Level::Trace => "T",
+            };
+            eprintln!("[{tag} {}] {}", record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent).
+pub fn init() {
+    let level = match std::env::var("VCSCHED_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("info") => LevelFilter::Info,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("warn") | _ => LevelFilter::Warn,
+    };
+    if log::set_logger(&LOGGER).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::warn!("logger smoke test");
+    }
+}

@@ -1,0 +1,46 @@
+//! Small in-tree utilities standing in for crates unavailable offline:
+//! PRNG (`rand`), JSON emitter (`serde_json`), CLI parsing (`clap`),
+//! bench harness (`criterion`) and summary statistics.
+
+pub mod args;
+pub mod benchkit;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+
+use std::path::{Path, PathBuf};
+
+/// Resolve `rel` against the crate root so tests/benches/examples work
+/// regardless of the current working directory.
+pub fn repo_path(rel: &str) -> PathBuf {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    root.join(rel)
+}
+
+/// Integer ceiling division for non-negative operands.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(3, 3), 1);
+        assert_eq!(ceil_div(4, 3), 2);
+    }
+
+    #[test]
+    fn repo_path_finds_cargo_toml() {
+        assert!(repo_path("Cargo.toml").exists());
+    }
+}

@@ -1,0 +1,162 @@
+//! Synthetic text-corpus generation for `ExecMode::Real`.
+//!
+//! Generates deterministic pseudo-natural text (Zipf-distributed words
+//! from a fixed vocabulary) and fixed-width random records for Sort, so
+//! the real map/reduce implementations have honest bytes to chew on.
+
+use crate::util::Rng;
+
+/// A fixed vocabulary; frequencies follow Zipf(s=1) so word-count outputs
+/// have realistic skew.
+const VOCAB: &[&str] = &[
+    "the", "of", "and", "to", "in", "a", "is", "that", "for", "it",
+    "data", "cloud", "map", "reduce", "task", "job", "node", "slot",
+    "virtual", "machine", "deadline", "locality", "schedule", "cluster",
+    "hadoop", "block", "replica", "shuffle", "sort", "merge", "phase",
+    "system", "time", "core", "queue", "assign", "release", "predict",
+];
+
+/// Deterministic Zipf sampler over `VOCAB`.
+pub struct ZipfWords {
+    cdf: Vec<f64>,
+}
+
+impl ZipfWords {
+    pub fn new() -> Self {
+        let mut weights: Vec<f64> = (1..=VOCAB.len()).map(|r| 1.0 / r as f64).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        for w in weights.iter_mut() {
+            acc += *w / total;
+            *w = acc;
+        }
+        Self { cdf: weights }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> &'static str {
+        let u = rng.f64();
+        let i = self.cdf.partition_point(|&c| c < u);
+        VOCAB[i.min(VOCAB.len() - 1)]
+    }
+}
+
+impl Default for ZipfWords {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One generated input block (the bytes a map task reads).
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// Lines of text (or records for Sort).
+    pub lines: Vec<String>,
+    /// Stable document id (for inverted index).
+    pub doc_id: u32,
+}
+
+/// Generate a text block of roughly `size_bytes` Zipf words.
+pub fn text_block(size_bytes: usize, doc_id: u32, rng: &mut Rng) -> Block {
+    let zipf = ZipfWords::new();
+    let mut lines = Vec::new();
+    let mut total = 0usize;
+    while total < size_bytes {
+        let words_in_line = 6 + rng.below(10) as usize;
+        let mut line = String::with_capacity(words_in_line * 6);
+        for w in 0..words_in_line {
+            if w > 0 {
+                line.push(' ');
+            }
+            line.push_str(zipf.sample(rng));
+        }
+        total += line.len() + 1;
+        lines.push(line);
+    }
+    Block { lines, doc_id }
+}
+
+/// Generate fixed-width sortable records ("<10-digit key>\t<payload>").
+pub fn record_block(size_bytes: usize, doc_id: u32, rng: &mut Rng) -> Block {
+    let mut lines = Vec::new();
+    let mut total = 0usize;
+    while total < size_bytes {
+        let key = rng.below(10_000_000_000);
+        let line = format!("{key:010}\tv{:08x}", rng.next_u64() as u32);
+        total += line.len() + 1;
+        lines.push(line);
+    }
+    Block { lines, doc_id }
+}
+
+/// Short random lowercase strings for the permutation generator
+/// (factorial blow-up bounded by the tiny string length).
+pub fn string_block(n_strings: usize, len: usize, doc_id: u32, rng: &mut Rng) -> Block {
+    let mut lines = Vec::with_capacity(n_strings);
+    for _ in 0..n_strings {
+        let s: String = (0..len)
+            .map(|_| (b'a' + rng.below(26) as u8) as char)
+            .collect();
+        lines.push(s);
+    }
+    Block { lines, doc_id }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_block_reaches_size() {
+        let mut rng = Rng::new(1);
+        let b = text_block(4096, 0, &mut rng);
+        let bytes: usize = b.lines.iter().map(|l| l.len() + 1).sum();
+        assert!(bytes >= 4096);
+        assert!(bytes < 4096 + 200, "overshoot bounded by one line");
+    }
+
+    #[test]
+    fn text_block_deterministic() {
+        let a = text_block(1024, 0, &mut Rng::new(9));
+        let b = text_block(1024, 0, &mut Rng::new(9));
+        assert_eq!(a.lines, b.lines);
+    }
+
+    #[test]
+    fn zipf_skew() {
+        let zipf = ZipfWords::new();
+        let mut rng = Rng::new(2);
+        let mut the_count = 0;
+        let mut queue_count = 0;
+        for _ in 0..20_000 {
+            match zipf.sample(&mut rng) {
+                "the" => the_count += 1,
+                "queue" => queue_count += 1,
+                _ => {}
+            }
+        }
+        assert!(
+            the_count > queue_count * 5,
+            "rank-1 word must dominate rank-35: {the_count} vs {queue_count}"
+        );
+    }
+
+    #[test]
+    fn record_block_shape() {
+        let mut rng = Rng::new(3);
+        let b = record_block(2048, 0, &mut rng);
+        for l in &b.lines {
+            let (k, _v) = l.split_once('\t').expect("tab-separated");
+            assert_eq!(k.len(), 10);
+            assert!(k.chars().all(|c| c.is_ascii_digit()));
+        }
+    }
+
+    #[test]
+    fn string_block_shape() {
+        let mut rng = Rng::new(4);
+        let b = string_block(20, 4, 7, &mut rng);
+        assert_eq!(b.lines.len(), 20);
+        assert!(b.lines.iter().all(|s| s.len() == 4));
+        assert_eq!(b.doc_id, 7);
+    }
+}

@@ -1,0 +1,310 @@
+//! Real map/reduce implementations for the five workloads.
+//!
+//! In `ExecMode::Real` the engine runs these over generated corpus blocks:
+//! map emits (key, value) pairs, the engine hash-partitions them across
+//! reducers, and reduce folds each key group. The E2E example checks the
+//! distributed output equals a serial single-pass reference.
+
+use super::corpus::Block;
+use super::JobType;
+
+/// One intermediate key-value pair.
+pub type Pair = (String, String);
+
+/// Run the map function of `job_type` over one input block.
+pub fn run_map(job_type: JobType, block: &Block, pattern: &str) -> Vec<Pair> {
+    match job_type {
+        JobType::WordCount => block
+            .lines
+            .iter()
+            .flat_map(|l| l.split_whitespace())
+            .map(|w| (w.to_string(), "1".to_string()))
+            .collect(),
+        JobType::Sort => block
+            .lines
+            .iter()
+            .map(|l| {
+                let (k, v) = l.split_once('\t').unwrap_or((l.as_str(), ""));
+                (k.to_string(), v.to_string())
+            })
+            .collect(),
+        JobType::Grep => block
+            .lines
+            .iter()
+            .flat_map(|l| l.split_whitespace())
+            .filter(|w| *w == pattern)
+            .map(|w| (w.to_string(), "1".to_string()))
+            .collect(),
+        JobType::PermutationGenerator => block
+            .lines
+            .iter()
+            .flat_map(|s| permutations(s))
+            .map(|p| (p, "1".to_string()))
+            .collect(),
+        JobType::InvertedIndex => {
+            let doc = format!("doc{}", block.doc_id);
+            block
+                .lines
+                .iter()
+                .flat_map(|l| l.split_whitespace())
+                .map(|w| (w.to_string(), doc.clone()))
+                .collect()
+        }
+    }
+}
+
+/// Hash-partition pairs across `reducers` (Hadoop's default partitioner:
+/// `hash(key) % R`).
+pub fn partition(pairs: Vec<Pair>, reducers: u32) -> Vec<Vec<Pair>> {
+    let mut parts = vec![Vec::new(); reducers as usize];
+    partition_into(pairs, &mut parts);
+    parts
+}
+
+/// Partition directly into pre-existing buckets (the exec engine's spill
+/// path — avoids re-materialising the full pair vector per map task).
+pub fn partition_into(pairs: Vec<Pair>, parts: &mut [Vec<Pair>]) {
+    let r = parts.len() as u64;
+    debug_assert!(r > 0);
+    for (k, v) in pairs {
+        let h = fxhash(k.as_bytes());
+        parts[(h % r) as usize].push((k, v));
+    }
+}
+
+/// Run the reduce function over one partition (sorted by key, grouped —
+/// the "sort" step of the reduce task).
+///
+/// Implementation note: unstable sort + linear group scan; the obvious
+/// BTreeMap grouping allocates a node per key and was the hot spot of the
+/// real-exec engine (EXPERIMENTS.md §Perf).
+pub fn run_reduce(job_type: JobType, mut pairs: Vec<Pair>) -> Vec<Pair> {
+    pairs.sort_unstable(); // copy+sort phase
+    let mut out: Vec<Pair> = Vec::new();
+    let mut i = 0;
+    while i < pairs.len() {
+        let mut j = i + 1;
+        while j < pairs.len() && pairs[j].0 == pairs[i].0 {
+            j += 1;
+        }
+        let group = &pairs[i..j];
+        let val = match job_type {
+            JobType::WordCount | JobType::Grep | JobType::PermutationGenerator => {
+                group.len().to_string()
+            }
+            // Identity reduce: first value of the (sorted) key group.
+            JobType::Sort => group[0].1.clone(),
+            JobType::InvertedIndex => {
+                // group is sorted by (key, value); dedup doc names inline.
+                let mut docs: Vec<&str> = Vec::with_capacity(group.len());
+                for (_, d) in group {
+                    if docs.last() != Some(&d.as_str()) {
+                        docs.push(d);
+                    }
+                }
+                docs.join(",")
+            }
+        };
+        out.push((pairs[i].0.clone(), val));
+        i = j;
+    }
+    out
+}
+
+/// Serial reference: map all blocks, single partition, reduce — the
+/// ground truth the distributed engine must reproduce.
+pub fn serial_reference(
+    job_type: JobType,
+    blocks: &[Block],
+    pattern: &str,
+) -> Vec<Pair> {
+    let pairs: Vec<Pair> = blocks
+        .iter()
+        .flat_map(|b| run_map(job_type, b, pattern))
+        .collect();
+    run_reduce(job_type, pairs)
+}
+
+/// All permutations of a short string (bounded: inputs are <= 5 chars).
+fn permutations(s: &str) -> Vec<String> {
+    let chars: Vec<char> = s.chars().collect();
+    if chars.len() > 5 {
+        // Guard against factorial blow-up on malformed input.
+        return vec![s.to_string()];
+    }
+    let mut out = Vec::new();
+    let mut cs = chars;
+    heap_permute(&mut cs, &mut out);
+    out
+}
+
+fn heap_permute(cs: &mut Vec<char>, out: &mut Vec<String>) {
+    let n = cs.len();
+    let mut c = vec![0usize; n];
+    out.push(cs.iter().collect());
+    let mut i = 0;
+    while i < n {
+        if c[i] < i {
+            if i % 2 == 0 {
+                cs.swap(0, i);
+            } else {
+                cs.swap(c[i], i);
+            }
+            out.push(cs.iter().collect());
+            c[i] += 1;
+            i = 0;
+        } else {
+            c[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+/// FxHash-style multiply hash (stable across runs, unlike `DefaultHasher`
+/// which is seeded per-process — determinism matters here).
+#[inline]
+pub fn fxhash(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::corpus;
+    use crate::util::Rng;
+
+    #[test]
+    fn wordcount_counts() {
+        let block = Block {
+            lines: vec!["a b a".into(), "b a".into()],
+            doc_id: 0,
+        };
+        let out = run_reduce(
+            JobType::WordCount,
+            run_map(JobType::WordCount, &block, ""),
+        );
+        assert_eq!(
+            out,
+            vec![("a".into(), "3".into()), ("b".into(), "2".into())]
+        );
+    }
+
+    #[test]
+    fn grep_filters() {
+        let block = Block {
+            lines: vec!["x target y".into(), "target".into()],
+            doc_id: 0,
+        };
+        let out = run_reduce(JobType::Grep, run_map(JobType::Grep, &block, "target"));
+        assert_eq!(out, vec![("target".into(), "2".into())]);
+    }
+
+    #[test]
+    fn sort_orders_keys() {
+        let block = Block {
+            lines: vec!["0000000009\tb".into(), "0000000001\ta".into()],
+            doc_id: 0,
+        };
+        let out = run_reduce(JobType::Sort, run_map(JobType::Sort, &block, ""));
+        let keys: Vec<&str> = out.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["0000000001", "0000000009"]);
+    }
+
+    #[test]
+    fn inverted_index_lists_docs() {
+        let b0 = Block {
+            lines: vec!["alpha beta".into()],
+            doc_id: 0,
+        };
+        let b1 = Block {
+            lines: vec!["alpha".into()],
+            doc_id: 1,
+        };
+        let pairs: Vec<Pair> = run_map(JobType::InvertedIndex, &b0, "")
+            .into_iter()
+            .chain(run_map(JobType::InvertedIndex, &b1, ""))
+            .collect();
+        let out = run_reduce(JobType::InvertedIndex, pairs);
+        assert_eq!(
+            out,
+            vec![
+                ("alpha".into(), "doc0,doc1".into()),
+                ("beta".into(), "doc0".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn permutations_complete() {
+        let ps = permutations("abc");
+        assert_eq!(ps.len(), 6);
+        let mut sorted = ps.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 6);
+    }
+
+    #[test]
+    fn permutation_map_blows_up() {
+        // selectivity >> 1: n chars -> n! strings.
+        let block = Block {
+            lines: vec!["abcd".into()],
+            doc_id: 0,
+        };
+        let out = run_map(JobType::PermutationGenerator, &block, "");
+        assert_eq!(out.len(), 24);
+    }
+
+    #[test]
+    fn partition_covers_and_is_stable() {
+        let pairs: Vec<Pair> = (0..100)
+            .map(|i| (format!("k{i}"), "v".to_string()))
+            .collect();
+        let parts = partition(pairs.clone(), 4);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 100);
+        let parts2 = partition(pairs, 4);
+        for (a, b) in parts.iter().zip(&parts2) {
+            assert_eq!(a, b, "partitioner must be deterministic");
+        }
+    }
+
+    #[test]
+    fn distributed_equals_serial_all_types() {
+        // The engine-level invariant, checked at workload level here:
+        // partition + per-partition reduce == serial reference.
+        let mut rng = Rng::new(5);
+        for t in crate::workloads::ALL_JOB_TYPES {
+            let blocks: Vec<Block> = (0..3)
+                .map(|i| match t {
+                    JobType::Sort => corpus::record_block(512, i, &mut rng),
+                    JobType::PermutationGenerator => {
+                        corpus::string_block(8, 3, i, &mut rng)
+                    }
+                    _ => corpus::text_block(512, i, &mut rng),
+                })
+                .collect();
+            let pattern = "the";
+            let serial = serial_reference(t, &blocks, pattern);
+            let all_pairs: Vec<Pair> = blocks
+                .iter()
+                .flat_map(|b| run_map(t, b, pattern))
+                .collect();
+            let mut distributed: Vec<Pair> = partition(all_pairs, 3)
+                .into_iter()
+                .flat_map(|part| run_reduce(t, part))
+                .collect();
+            distributed.sort();
+            assert_eq!(distributed, serial, "{t}");
+        }
+    }
+
+    #[test]
+    fn fxhash_stable() {
+        assert_eq!(fxhash(b"abc"), fxhash(b"abc"));
+        assert_ne!(fxhash(b"abc"), fxhash(b"abd"));
+    }
+}

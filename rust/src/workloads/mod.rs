@@ -1,0 +1,266 @@
+//! The paper's five evaluation workloads (§5) plus the machinery to
+//! generate inputs and job traces.
+//!
+//! Each [`JobType`] carries two things:
+//! * a **cost model** ([`CostModel`]) — per-MB map/reduce rates and the map
+//!   selectivity (intermediate bytes out per input byte) that drive the
+//!   simulator's timing in [`crate::config::ExecMode::Synthetic`] mode;
+//! * a **real implementation** ([`exec`]) — actual map/reduce functions
+//!   over generated corpus bytes, used in `ExecMode::Real` and by the
+//!   correctness tests (output equivalence against a serial reference).
+
+pub mod corpus;
+pub mod exec;
+pub mod trace;
+
+use std::fmt;
+
+/// The five MapReduce applications evaluated in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum JobType {
+    /// Counts word occurrences (Hadoop sample app).
+    WordCount,
+    /// Sorts randomly generated records via the framework (identity
+    /// map/reduce).
+    Sort,
+    /// Emits whether a word occurs — tiny intermediate data.
+    Grep,
+    /// Generates permutations of input strings — reduce-input heavy,
+    /// large intermediate data (the paper's locality-insensitive case).
+    PermutationGenerator,
+    /// word -> sorted list of documents containing it.
+    InvertedIndex,
+}
+
+pub const ALL_JOB_TYPES: [JobType; 5] = [
+    JobType::WordCount,
+    JobType::Sort,
+    JobType::Grep,
+    JobType::PermutationGenerator,
+    JobType::InvertedIndex,
+];
+
+impl JobType {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobType::WordCount => "wordcount",
+            JobType::Sort => "sort",
+            JobType::Grep => "grep",
+            JobType::PermutationGenerator => "permutation",
+            JobType::InvertedIndex => "inverted_index",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<JobType> {
+        ALL_JOB_TYPES.iter().copied().find(|t| t.name() == s)
+    }
+
+    /// Per-type cost model, calibrated so map tasks over 64 MB blocks
+    /// finish "in less than a minute" (paper §5) on the simulated nodes.
+    pub fn cost_model(self) -> CostModel {
+        match self {
+            // CPU-light scan; small intermediate output (word, 1) pairs
+            // compress to a fraction of the input.
+            JobType::WordCount => CostModel {
+                map_mb_per_s: 4.0,
+                reduce_mb_per_s: 25.0,
+                selectivity: 0.20,
+                output_ratio: 0.05,
+                reduce_cpu_factor: 1.0,
+            },
+            // Identity map/reduce: all bytes cross the shuffle.
+            JobType::Sort => CostModel {
+                map_mb_per_s: 3.0,
+                reduce_mb_per_s: 20.0,
+                selectivity: 1.0,
+                output_ratio: 1.0,
+                reduce_cpu_factor: 1.2,
+            },
+            // Match-only: negligible intermediate data.
+            JobType::Grep => CostModel {
+                map_mb_per_s: 5.0,
+                reduce_mb_per_s: 40.0,
+                selectivity: 0.01,
+                output_ratio: 0.005,
+                reduce_cpu_factor: 0.8,
+            },
+            // Reduce-input heavy: intermediate blow-up (the paper calls
+            // out "huge number of copy operations in shuffle phase").
+            JobType::PermutationGenerator => CostModel {
+                map_mb_per_s: 2.2,
+                reduce_mb_per_s: 8.0,
+                selectivity: 2.5,
+                output_ratio: 1.5,
+                reduce_cpu_factor: 1.6,
+            },
+            // Medium intermediate volume (word -> doc postings).
+            JobType::InvertedIndex => CostModel {
+                map_mb_per_s: 3.3,
+                reduce_mb_per_s: 20.0,
+                selectivity: 0.45,
+                output_ratio: 0.30,
+                reduce_cpu_factor: 1.1,
+            },
+        }
+    }
+
+    /// Default reduce-task count for an input of `input_mb` (roughly one
+    /// reducer per GB, min 4 — mirrors common Hadoop practice and keeps
+    /// the paper's slot numbers in range).
+    pub fn default_reducers(self, input_mb: f64) -> u32 {
+        let per_gb = match self {
+            JobType::PermutationGenerator => 6.0, // heavy reducers, more of them
+            JobType::Sort => 2.0,
+            _ => 2.0,
+        };
+        ((input_mb / 1024.0 * per_gb).ceil() as u32).clamp(4, 48)
+    }
+}
+
+impl fmt::Display for JobType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Synthetic-mode cost model for one job type.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Map processing rate over *local* input, MB/s per slot.
+    pub map_mb_per_s: f64,
+    /// Reduce processing rate over shuffled input, MB/s per slot.
+    pub reduce_mb_per_s: f64,
+    /// Intermediate bytes emitted per input byte by the map phase.
+    pub selectivity: f64,
+    /// Final output bytes per input byte.
+    pub output_ratio: f64,
+    /// Relative reduce CPU weight (sort/merge heaviness).
+    pub reduce_cpu_factor: f64,
+}
+
+impl CostModel {
+    /// Seconds a map task needs for a `block_mb` local block.
+    pub fn map_secs(&self, block_mb: f64) -> f64 {
+        block_mb / self.map_mb_per_s
+    }
+
+    /// Intermediate MB produced by a map task over `block_mb` input.
+    pub fn intermediate_mb(&self, block_mb: f64) -> f64 {
+        block_mb * self.selectivity
+    }
+
+    /// Seconds a reduce task needs to merge+reduce `shuffled_mb`.
+    pub fn reduce_secs(&self, shuffled_mb: f64) -> f64 {
+        shuffled_mb / self.reduce_mb_per_s * self.reduce_cpu_factor
+    }
+}
+
+/// A submitted job description (what the user hands the JobTracker).
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub job_type: JobType,
+    /// Total input size in MB.
+    pub input_mb: f64,
+    /// Number of reduce tasks.
+    pub reducers: u32,
+    /// Absolute completion-time goal in seconds from submission
+    /// (None = best-effort; the deadline schedulers treat it as +inf).
+    pub deadline_s: Option<f64>,
+    /// Submission time offset from trace start, seconds.
+    pub submit_s: f64,
+}
+
+impl JobSpec {
+    pub fn new(job_type: JobType, input_mb: f64) -> Self {
+        Self {
+            job_type,
+            input_mb,
+            reducers: job_type.default_reducers(input_mb),
+            deadline_s: None,
+            submit_s: 0.0,
+        }
+    }
+
+    pub fn with_deadline(mut self, d: f64) -> Self {
+        self.deadline_s = Some(d);
+        self
+    }
+
+    pub fn at(mut self, submit_s: f64) -> Self {
+        self.submit_s = submit_s;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for t in ALL_JOB_TYPES {
+            assert_eq!(JobType::from_name(t.name()), Some(t));
+        }
+        assert_eq!(JobType::from_name("nope"), None);
+    }
+
+    #[test]
+    fn map_tasks_under_a_minute() {
+        // Paper §5: "tasks of MapReduce jobs will be finished in less than
+        // a minute" — calibration guard for every workload at 64 MB blocks.
+        for t in ALL_JOB_TYPES {
+            let m = t.cost_model();
+            let secs = m.map_secs(64.0);
+            assert!(
+                secs > 3.0 && secs < 60.0,
+                "{t}: map task {secs:.1}s out of calibrated range"
+            );
+        }
+    }
+
+    #[test]
+    fn permutation_is_reduce_heavy() {
+        // The paper's Fig. 3 rationale: permutation generator produces far
+        // more intermediate data than the others.
+        let perm = JobType::PermutationGenerator.cost_model();
+        for t in ALL_JOB_TYPES {
+            if t != JobType::PermutationGenerator {
+                assert!(perm.selectivity >= t.cost_model().selectivity * 2.5);
+            }
+        }
+    }
+
+    #[test]
+    fn grep_is_shuffle_light() {
+        let g = JobType::Grep.cost_model();
+        assert!(g.selectivity <= 0.01);
+    }
+
+    #[test]
+    fn sort_is_identity() {
+        let s = JobType::Sort.cost_model();
+        assert_eq!(s.selectivity, 1.0);
+        assert_eq!(s.output_ratio, 1.0);
+    }
+
+    #[test]
+    fn default_reducers_scale() {
+        assert!(
+            JobType::WordCount.default_reducers(10240.0)
+                >= JobType::WordCount.default_reducers(2048.0)
+        );
+        assert!(JobType::WordCount.default_reducers(64.0) >= 4);
+        assert!(JobType::Sort.default_reducers(1e7) <= 64);
+    }
+
+    #[test]
+    fn jobspec_builder() {
+        let s = JobSpec::new(JobType::Grep, 2048.0)
+            .with_deadline(650.0)
+            .at(12.0);
+        assert_eq!(s.job_type, JobType::Grep);
+        assert_eq!(s.deadline_s, Some(650.0));
+        assert_eq!(s.submit_s, 12.0);
+        assert!(s.reducers >= 4);
+    }
+}

@@ -1,0 +1,167 @@
+//! Cross-layer integration: the AOT JAX/Pallas artifacts executed via
+//! PJRT must agree with the native Rust predictor over broad random
+//! batches, and a full simulation driven by the XLA predictor must be
+//! *identical* to the native-predictor run (the predictor is pure math;
+//! backends must be interchangeable).
+//!
+//! Skipped gracefully when `artifacts/` has not been built.
+
+use vcsched::config::SimConfig;
+use vcsched::coordinator::run_simulation_with;
+use vcsched::predictor::{JobDemand, JobProgress, NativePredictor, Predictor};
+use vcsched::runtime::XlaPredictor;
+use vcsched::scheduler::SchedulerKind;
+use vcsched::util::Rng;
+use vcsched::workloads::trace::JobTrace;
+
+fn xla() -> Option<XlaPredictor> {
+    match XlaPredictor::load_default() {
+        Ok(p) => Some(p),
+        Err(e) => {
+            eprintln!("skipping artifact integration tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn slot_solver_agreement_broad() {
+    let Some(mut xp) = xla() else { return };
+    let mut native = NativePredictor::new();
+    let mut rng = Rng::new(0xA11CE);
+    // Sweep extreme regimes: tiny/huge work, negative/huge deadlines.
+    let mut demands = Vec::new();
+    for scale in [0.01, 1.0, 100.0] {
+        for _ in 0..300 {
+            demands.push(JobDemand {
+                map_tasks: (rng.range_f64(0.0, 500.0) * scale).floor(),
+                reduce_tasks: (rng.range_f64(0.0, 64.0)).floor(),
+                t_map: rng.range_f64(0.1, 90.0),
+                t_reduce: rng.range_f64(0.1, 90.0),
+                t_shuffle: rng.range_f64(0.0, 0.05),
+                deadline: rng.range_f64(-100.0, 5000.0),
+            });
+        }
+    }
+    let got = xp.solve_slots(&demands);
+    let want = native.solve_slots(&demands);
+    let mut mismatches = 0;
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        if g.map_slots != w.map_slots || g.reduce_slots != w.reduce_slots {
+            // f32-vs-f64 ceil boundary: allow off-by-one at most, rarely.
+            let close = g.map_slots.abs_diff(w.map_slots) <= 1
+                && g.reduce_slots.abs_diff(w.reduce_slots) <= 1;
+            assert!(close, "case {i}: {g:?} vs {w:?} ({:?})", demands[i]);
+            mismatches += 1;
+        }
+    }
+    assert!(
+        mismatches * 100 < demands.len(),
+        "more than 1% off-by-one mismatches: {mismatches}/{}",
+        demands.len()
+    );
+}
+
+#[test]
+fn estimator_agreement_broad() {
+    let Some(mut xp) = xla() else { return };
+    let mut native = NativePredictor::new();
+    let mut rng = Rng::new(0xBEE);
+    let jobs: Vec<JobProgress> = (0..500)
+        .map(|_| JobProgress {
+            rem_map: rng.range_f64(0.0, 500.0).floor(),
+            rem_reduce: rng.range_f64(0.0, 64.0).floor(),
+            t_map: rng.range_f64(0.1, 90.0),
+            t_reduce: rng.range_f64(0.1, 90.0),
+            t_shuffle: rng.range_f64(0.0, 0.05),
+            map_slots: rng.range_f64(0.0, 80.0).floor(),
+            reduce_slots: rng.range_f64(0.0, 80.0).floor(),
+            reduce_tasks: rng.range_f64(0.0, 64.0).floor(),
+            deadline: rng.range_f64(1.0, 5000.0),
+            elapsed: rng.range_f64(0.0, 5000.0),
+        })
+        .collect();
+    let got = xp.estimate(&jobs);
+    let want = native.estimate(&jobs);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        let tol = 1e-3 * (1.0 + w.eta.abs());
+        assert!((g.eta - w.eta).abs() < tol, "case {i}: {g:?} vs {w:?}");
+    }
+}
+
+/// Interchangeability: the full Table-2 simulation under the proposed
+/// scheduler produces identical job completion times with either backend.
+#[test]
+fn simulation_identical_under_both_backends() {
+    let Some(mut xp) = xla() else { return };
+    let cfg = SimConfig::paper();
+    let trace = JobTrace::table2(256.0);
+    let mut native = NativePredictor::new();
+    let a = run_simulation_with(&cfg, SchedulerKind::DeadlineVc, &trace, &mut native);
+    let b = run_simulation_with(&cfg, SchedulerKind::DeadlineVc, &trace, &mut xp);
+    assert_eq!(a.completed_jobs(), b.completed_jobs());
+    assert_eq!(a.hotplugs, b.hotplugs, "reconfiguration paths diverged");
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(
+            x.completion_s, y.completion_s,
+            "job {} diverged between predictor backends",
+            x.id.0
+        );
+    }
+}
+
+/// The locality artifact implements Alg. 1's node choice exactly as the
+/// scheduler's native scan: cross-check on random placement states.
+#[test]
+fn placement_kernel_matches_native_scan() {
+    use vcsched::runtime::{PlacementQuery, MAX_NODES, MAX_TASKS};
+    let Some(mut xp) = xla() else { return };
+    let mut rng = Rng::new(0xD0C);
+    for _case in 0..20 {
+        let mut q = PlacementQuery::new();
+        let live_nodes = 8 + rng.below(40) as usize;
+        let live_tasks = 1 + rng.below(60) as usize;
+        for n in 0..live_nodes {
+            q.node_mask[n] = 1.0;
+            q.rq[n] = rng.below(5) as f32;
+            q.aq[n] = rng.below(5) as f32;
+        }
+        for t in 0..live_tasks {
+            q.task_mask[t] = 1.0;
+            for _ in 0..3 {
+                q.set_has_data(t, rng.below(live_nodes as u64) as usize);
+            }
+        }
+        let got = xp.place(&q).unwrap();
+        // Native argmax over the same scoring.
+        for t in 0..live_tasks {
+            let mut best = -1i64;
+            let mut best_score = f64::NEG_INFINITY;
+            for n in 0..live_nodes {
+                if q.has_data[t * MAX_NODES + n] < 0.5 {
+                    continue;
+                }
+                let score =
+                    q.weights[0] as f64 * q.rq[n] as f64 - q.weights[1] as f64 * q.aq[n] as f64;
+                if score > best_score {
+                    best_score = score;
+                    best = n as i64;
+                }
+            }
+            if best < 0 {
+                assert_eq!(got[t], -1, "task {t}");
+            } else {
+                // Ties may resolve to a different node with equal score.
+                let gn = got[t] as usize;
+                let gs = q.weights[0] as f64 * q.rq[gn] as f64
+                    - q.weights[1] as f64 * q.aq[gn] as f64;
+                assert!(
+                    (gs - best_score).abs() < 1e-6,
+                    "task {t}: kernel picked node {gn} (score {gs}), best {best_score}"
+                );
+                assert!(q.has_data[t * MAX_NODES + gn] > 0.5);
+            }
+        }
+        assert!(got[live_tasks..MAX_TASKS].iter().all(|&n| n == -1));
+    }
+}

@@ -1,0 +1,132 @@
+//! End-to-end real-execution tests: the distributed MapReduce output must
+//! equal the serial reference through every scheduler's policy (task
+//! routing, delayed hot-plug launches, remote fallbacks — none of them
+//! may corrupt data flow).
+
+use vcsched::config::{ExecMode, SimConfig};
+use vcsched::coordinator::World;
+use vcsched::mapreduce::JobId;
+use vcsched::predictor::NativePredictor;
+use vcsched::scheduler::SchedulerKind;
+use vcsched::workloads::trace::JobTrace;
+use vcsched::workloads::{JobSpec, JobType, ALL_JOB_TYPES};
+
+fn run_real(
+    cfg: &SimConfig,
+    kind: SchedulerKind,
+    trace: &JobTrace,
+) -> World {
+    let mut sched = kind.build(cfg);
+    let mut pred = NativePredictor::new();
+    let mut world = World::new(cfg.clone(), trace.clone());
+    world.run(sched.as_mut(), &mut pred);
+    world
+}
+
+#[test]
+fn every_scheduler_preserves_output_correctness() {
+    let cfg = SimConfig {
+        exec: ExecMode::Real,
+        ..SimConfig::small()
+    };
+    let trace = JobTrace::new(vec![
+        JobSpec::new(JobType::WordCount, 128.0).with_deadline(600.0),
+        JobSpec::new(JobType::InvertedIndex, 128.0)
+            .with_deadline(700.0)
+            .at(5.0),
+    ]);
+    for kind in SchedulerKind::ALL {
+        let world = run_real(&cfg, kind, &trace);
+        let exec = world.exec_engine().unwrap();
+        for i in 0..trace.len() {
+            let id = JobId(i as u32);
+            assert_eq!(
+                exec.job_output(id),
+                exec.serial_reference(id),
+                "[{}] job {i} output mismatch",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn wordcount_output_is_plausible() {
+    let cfg = SimConfig {
+        exec: ExecMode::Real,
+        ..SimConfig::small()
+    };
+    let trace =
+        JobTrace::new(vec![JobSpec::new(JobType::WordCount, 128.0).with_deadline(600.0)]);
+    let world = run_real(&cfg, SchedulerKind::DeadlineVc, &trace);
+    let out = world.exec_engine().unwrap().job_output(JobId(0));
+    assert!(!out.is_empty());
+    // Zipf rank-1 "the" must be the most frequent word.
+    let the = out
+        .iter()
+        .find(|(k, _)| k == "the")
+        .map(|(_, v)| v.parse::<u64>().unwrap())
+        .expect("'the' missing from corpus counts");
+    for (k, v) in &out {
+        let c: u64 = v.parse().unwrap();
+        assert!(c <= the, "{k} ({c}) more frequent than 'the' ({the})");
+    }
+}
+
+#[test]
+fn grep_only_emits_pattern() {
+    let cfg = SimConfig {
+        exec: ExecMode::Real,
+        ..SimConfig::small()
+    };
+    let trace = JobTrace::new(vec![JobSpec::new(JobType::Grep, 96.0).with_deadline(600.0)]);
+    let world = run_real(&cfg, SchedulerKind::Fair, &trace);
+    let out = world.exec_engine().unwrap().job_output(JobId(0));
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].0, vcsched::coordinator::ExecEngine::pattern());
+}
+
+#[test]
+fn sort_output_is_sorted_and_complete() {
+    let cfg = SimConfig {
+        exec: ExecMode::Real,
+        ..SimConfig::small()
+    };
+    let trace = JobTrace::new(vec![JobSpec::new(JobType::Sort, 96.0).with_deadline(600.0)]);
+    let world = run_real(&cfg, SchedulerKind::Edf, &trace);
+    let exec = world.exec_engine().unwrap();
+    let out = exec.job_output(JobId(0));
+    assert!(!out.is_empty());
+    for w in out.windows(2) {
+        assert!(w[0].0 <= w[1].0, "keys out of order");
+    }
+}
+
+#[test]
+fn all_types_under_proposed_with_reconfig_active() {
+    // Contended small cluster so the reconfiguration path actually fires
+    // while real data flows.
+    let cfg = SimConfig {
+        exec: ExecMode::Real,
+        ..SimConfig::small()
+    };
+    let mut jobs = Vec::new();
+    for (i, jt) in ALL_JOB_TYPES.iter().enumerate() {
+        jobs.push(
+            JobSpec::new(*jt, 96.0)
+                .with_deadline(400.0 + 50.0 * i as f64)
+                .at(i as f64),
+        );
+    }
+    let trace = JobTrace::new(jobs);
+    let world = run_real(&cfg, SchedulerKind::DeadlineVc, &trace);
+    let exec = world.exec_engine().unwrap();
+    for i in 0..trace.len() {
+        let id = JobId(i as u32);
+        assert_eq!(
+            exec.job_output(id),
+            exec.serial_reference(id),
+            "job {i} diverged"
+        );
+    }
+}

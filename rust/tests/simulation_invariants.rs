@@ -1,0 +1,178 @@
+//! Whole-simulation property tests: run randomized traces under every
+//! scheduler, stepping the event loop one event at a time and asserting
+//! the coordinator invariants after *every* event.
+
+use vcsched::cluster::NodeId;
+use vcsched::config::SimConfig;
+use vcsched::coordinator::World;
+use vcsched::predictor::NativePredictor;
+use vcsched::prop;
+use vcsched::scheduler::SchedulerKind;
+use vcsched::util::Rng;
+use vcsched::workloads::trace::JobTrace;
+use vcsched::workloads::{JobSpec, ALL_JOB_TYPES};
+
+fn random_trace(rng: &mut Rng, cfg: &SimConfig) -> JobTrace {
+    let n = 2 + rng.below(6) as usize;
+    let mut jobs = Vec::new();
+    let mut t = 0.0;
+    for _ in 0..n {
+        let jt = ALL_JOB_TYPES[rng.below(5) as usize];
+        let mb = rng.range_f64(1.0, 10.0) * cfg.block_mb;
+        let mut spec = JobSpec::new(jt, mb).at(t);
+        if rng.chance(0.7) {
+            spec = spec.with_deadline(rng.range_f64(60.0, 2000.0));
+        }
+        jobs.push(spec);
+        t += rng.exp(20.0);
+    }
+    JobTrace::new(jobs)
+}
+
+/// The central property: stepping any scheduler over any trace preserves
+/// (a) PM core conservation, (b) per-VM busy <= capacity, (c) per-job task
+/// counter conservation, and finishes every job.
+#[test]
+fn invariants_hold_after_every_event() {
+    prop::check(25, |rng| {
+        let cfg = SimConfig {
+            seed: rng.next_u64(),
+            ..SimConfig::small()
+        };
+        let trace = random_trace(rng, &cfg);
+        let kind = SchedulerKind::ALL[rng.below(5) as usize];
+        let mut sched = kind.build(&cfg);
+        let mut pred = NativePredictor::new();
+        let mut world = World::new(cfg, trace.clone());
+        let mut steps = 0u64;
+        while world.step_one(sched.as_mut(), &mut pred) {
+            steps += 1;
+            world
+                .cluster
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("[{}] step {steps}: {e}", kind.name()));
+            for j in &world.jobs {
+                j.check_invariants()
+                    .unwrap_or_else(|e| panic!("[{}] step {steps}: {e}", kind.name()));
+            }
+            if steps > 2_000_000 {
+                panic!("[{}] runaway simulation", kind.name());
+            }
+            if world.jobs.len() == trace.len() && world.jobs.iter().all(|j| j.is_done()) {
+                break;
+            }
+        }
+        assert!(
+            world.jobs.iter().all(|j| j.is_done()),
+            "[{}] unfinished jobs",
+            kind.name()
+        );
+    });
+}
+
+/// Total vCPUs across the cluster is conserved by reconfiguration: the sum
+/// at the end equals the sum at the start (hot-plug moves, never creates).
+#[test]
+fn vcpus_conserved_across_reconfiguration() {
+    prop::check(15, |rng| {
+        let cfg = SimConfig {
+            seed: rng.next_u64(),
+            ..SimConfig::small()
+        };
+        let trace = random_trace(rng, &cfg);
+        let mut sched = SchedulerKind::DeadlineVc.build(&cfg);
+        let mut pred = NativePredictor::new();
+        let mut world = World::new(cfg.clone(), trace);
+        let total_before: u32 = (0..world.cluster.num_nodes())
+            .map(|i| world.cluster.vm(NodeId(i as u32)).vcpus)
+            .sum();
+        world.run(sched.as_mut(), &mut pred);
+        let total_after: u32 = (0..world.cluster.num_nodes())
+            .map(|i| world.cluster.vm(NodeId(i as u32)).vcpus)
+            .sum();
+        // In-flight hot-plugs are all drained when every job is done and
+        // the pending core (unplug happens at grant, plug at HotplugDone)
+        // may still be parked in the PM spare pool — account for spares.
+        let spares: u32 = (0..world.cluster.num_pms())
+            .map(|p| world.cluster.spare_cores(vcsched::cluster::PmId(p as u32)))
+            .sum();
+        assert_eq!(
+            total_before,
+            total_after + spares - (cfg.pms as u32 * cfg.cores_per_pm
+                - cfg.nodes() as u32 * cfg.base_vcpus)
+                .min(spares),
+            "vCPU conservation violated (before {total_before}, after {total_after}, spares {spares})"
+        );
+    });
+}
+
+/// Same seed => identical event-by-event metrics; different scheduler =>
+/// the runs are still internally consistent.
+#[test]
+fn determinism_across_full_runs() {
+    prop::check(10, |rng| {
+        let seed = rng.next_u64();
+        let cfg = SimConfig {
+            seed,
+            ..SimConfig::small()
+        };
+        let mut tr_rng = Rng::new(seed);
+        let trace = random_trace(&mut tr_rng, &cfg);
+        let kind = SchedulerKind::ALL[rng.below(5) as usize];
+        let run = |c: &SimConfig| {
+            vcsched::coordinator::run_simulation(c, kind, &trace)
+        };
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.hotplugs, b.hotplugs);
+        assert_eq!(a.events, b.events);
+        let ca: Vec<f64> = a.jobs.iter().map(|j| j.completion_s).collect();
+        let cb: Vec<f64> = b.jobs.iter().map(|j| j.completion_s).collect();
+        assert_eq!(ca, cb);
+    });
+}
+
+/// Locality accounting: local + nonlocal maps == total maps for every job,
+/// and a job whose blocks are replicated everywhere is 100% local under
+/// the proposed scheduler.
+#[test]
+fn full_replication_gives_full_locality() {
+    let cfg = SimConfig {
+        replication: 8, // == nodes in small()
+        ..SimConfig::small()
+    };
+    let trace = JobTrace::new(vec![
+        JobSpec::new(ALL_JOB_TYPES[0], 256.0).with_deadline(600.0)
+    ]);
+    let r = vcsched::coordinator::run_simulation(&cfg, SchedulerKind::DeadlineVc, &trace);
+    assert_eq!(r.locality_pct(), 100.0);
+    for j in &r.jobs {
+        assert_eq!(j.local_maps + j.nonlocal_maps, j.maps);
+    }
+}
+
+/// The proposed scheduler never yields lower map locality than Fair on the
+/// same trace (its defining mechanism), across random contended traces.
+#[test]
+fn proposed_locality_dominates_fair() {
+    prop::check(8, |rng| {
+        let cfg = SimConfig {
+            seed: rng.next_u64(),
+            ..SimConfig::paper()
+        };
+        let trace = JobTrace::poisson(&cfg, 12, 6.0, 1.5..3.0, rng.next_u64());
+        let (fair, prop_r) = vcsched::coordinator::compare(
+            &cfg,
+            SchedulerKind::Fair,
+            SchedulerKind::DeadlineVc,
+            &trace,
+        );
+        assert!(
+            prop_r.locality_pct() >= fair.locality_pct() - 1e-9,
+            "proposed locality {:.1}% < fair {:.1}%",
+            prop_r.locality_pct(),
+            fair.locality_pct()
+        );
+    });
+}
