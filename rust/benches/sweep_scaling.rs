@@ -1,0 +1,107 @@
+//! Bench SWEEP: wall-clock of the parallel scenario-sweep harness on a
+//! small grid at 1 thread vs all available cores, so future PRs can track
+//! harness overhead. Writes `BENCH_sweep_scaling.json` next to Cargo.toml
+//! and asserts the determinism contract (artifacts byte-identical across
+//! thread counts) while it is at it.
+//!
+//!     cargo bench --offline --bench sweep_scaling
+
+use std::time::Instant;
+
+use vcsched::harness::{aggregate, run_sweep, sweep_json, ScenarioGrid};
+use vcsched::util::benchkit::Table;
+use vcsched::util::json::Json;
+
+fn grid() -> ScenarioGrid {
+    let mut g = ScenarioGrid::quick();
+    // Enough replicates that the 8-core case has work to spread.
+    g.seed_replicates = 8;
+    g.jobs_per_scenario = 10;
+    g
+}
+
+fn timed_sweep(g: &ScenarioGrid, threads: usize) -> (f64, String) {
+    let t0 = Instant::now();
+    let results = run_sweep(g, threads);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let artifact = sweep_json(g, &results, &aggregate(&results)).render();
+    (wall_s, artifact)
+}
+
+fn main() {
+    let g = grid();
+    let max_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "sweep_scaling: {} scenarios x {} jobs, 1 vs {max_threads} threads",
+        g.len(),
+        g.jobs_per_scenario
+    );
+
+    // Warm-up (page in code paths, steady-state allocator).
+    let _ = timed_sweep(&g, max_threads);
+
+    let (serial_s, serial_artifact) = timed_sweep(&g, 1);
+    let mut rows = vec![(1usize, serial_s)];
+    let mut thread_points = vec![2usize, 4];
+    if !thread_points.contains(&max_threads) && max_threads > 1 {
+        thread_points.push(max_threads);
+    }
+    for &threads in thread_points.iter().filter(|&&t| t <= max_threads) {
+        let (wall_s, artifact) = timed_sweep(&g, threads);
+        assert_eq!(
+            serial_artifact, artifact,
+            "determinism violated at {threads} threads"
+        );
+        rows.push((threads, wall_s));
+    }
+
+    let mut t = Table::new(&["threads", "wall", "speedup"]);
+    for &(threads, wall_s) in &rows {
+        t.row(&[
+            threads.to_string(),
+            format!("{:.3}s", wall_s),
+            format!("x{:.2}", serial_s / wall_s.max(1e-9)),
+        ]);
+    }
+    t.print();
+
+    let mut points = Json::arr();
+    for &(threads, wall_s) in &rows {
+        points = points.push(
+            Json::obj()
+                .set("threads", threads)
+                .set("wall_s", wall_s)
+                .set("speedup", serial_s / wall_s.max(1e-9)),
+        );
+    }
+    let doc = Json::obj()
+        .set("bench", "sweep_scaling")
+        .set("scenarios", g.len())
+        .set("jobs_per_scenario", g.jobs_per_scenario)
+        .set("points", points)
+        .render();
+    let out = vcsched::util::repo_path("BENCH_sweep_scaling.json");
+    std::fs::write(&out, doc).expect("write BENCH_sweep_scaling.json");
+    println!("\nwrote {}", out.display());
+
+    // Soft gate: available_parallelism() counts logical CPUs (SMT) and
+    // shared runners may be loaded, so a miss is a warning, not a panic —
+    // the determinism assertions above are the hard contract.
+    if max_threads >= 4 {
+        let best = rows
+            .iter()
+            .map(|&(_, w)| w)
+            .fold(f64::INFINITY, f64::min);
+        let speedup = serial_s / best.max(1e-9);
+        if speedup >= 2.0 {
+            println!("speedup gate passed: x{speedup:.2} >= x2.0");
+        } else {
+            eprintln!(
+                "WARNING: only x{speedup:.2} speedup on {max_threads} logical \
+                 CPUs (expected >= x2.0 on 4+ physical cores)"
+            );
+        }
+    }
+}

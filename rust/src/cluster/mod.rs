@@ -89,16 +89,32 @@ pub struct Cluster {
     vms: Vec<Vm>,
 }
 
-/// Errors from hot-plug operations.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+/// Errors from hot-plug operations (hand-rolled Display/Error impls —
+/// `thiserror` is unavailable offline).
+#[derive(Debug, PartialEq, Eq)]
 pub enum HotplugError {
-    #[error("PM {0:?} has no spare physical core")]
     NoSpareCore(PmId),
-    #[error("VM {0:?} cannot release a core (vcpus={1}, busy={2})")]
     CannotRelease(NodeId, u32, u32),
-    #[error("VMs {0:?} and {1:?} are on different physical machines")]
     CrossPm(NodeId, NodeId),
 }
+
+impl std::fmt::Display for HotplugError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HotplugError::NoSpareCore(pm) => {
+                write!(f, "PM {pm:?} has no spare physical core")
+            }
+            HotplugError::CannotRelease(vm, vcpus, busy) => {
+                write!(f, "VM {vm:?} cannot release a core (vcpus={vcpus}, busy={busy})")
+            }
+            HotplugError::CrossPm(a, b) => {
+                write!(f, "VMs {a:?} and {b:?} are on different physical machines")
+            }
+        }
+    }
+}
+
+impl std::error::Error for HotplugError {}
 
 impl Cluster {
     /// Build the cluster laid out by `cfg`: `pms` machines, each hosting

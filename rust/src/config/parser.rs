@@ -6,17 +6,34 @@
 
 use super::{ExecMode, SimConfig};
 
-#[derive(Debug, thiserror::Error)]
+/// Parse errors (hand-rolled Display/Error impls — `thiserror` is
+/// unavailable offline).
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("line {0}: expected `key = value`, got {1:?}")]
     Syntax(usize, String),
-    #[error("line {0}: unknown key {1:?}")]
     UnknownKey(usize, String),
-    #[error("line {0}: bad value for {1}: {2:?}")]
     BadValue(usize, String, String),
-    #[error("invalid config: {0}")]
     Invalid(String),
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Syntax(line, got) => {
+                write!(f, "line {line}: expected `key = value`, got {got:?}")
+            }
+            ConfigError::UnknownKey(line, key) => {
+                write!(f, "line {line}: unknown key {key:?}")
+            }
+            ConfigError::BadValue(line, key, val) => {
+                write!(f, "line {line}: bad value for {key}: {val:?}")
+            }
+            ConfigError::Invalid(msg) => write!(f, "invalid config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// Parse `text` into a config, starting from `SimConfig::paper()` defaults.
 pub fn parse_config_str(text: &str) -> Result<SimConfig, ConfigError> {

@@ -1,5 +1,16 @@
 //! The leader: binds cluster, HDFS, MapReduce engine, reconfigurator and
 //! scheduler into the discrete-event loop, and produces the run report.
+//!
+//! **Purity contract** (the sweep harness depends on this): a simulation
+//! run is a pure function `(SimConfig, SchedulerKind, JobTrace) -> Report`.
+//! Every piece of mutable state — cluster, NameNode, job tables, event
+//! queue, RNG — lives inside the per-run [`World`]; nothing is process
+//! global, and all randomness derives from `cfg.seed`. Runs may therefore
+//! execute concurrently on any threads in any order and still produce
+//! bitwise-identical reports (only `Report::wall_s`, the host wall-clock,
+//! varies). `harness::run_sweep` spreads scenarios across a thread pool on
+//! the strength of this contract; the `parallel_run_bitwise_equals_serial`
+//! test below holds it in place.
 
 mod exec_engine;
 mod world;
@@ -107,6 +118,29 @@ mod tests {
         assert_eq!(a.hotplugs, b.hotplugs);
         for (x, y) in a.jobs.iter().zip(&b.jobs) {
             assert_eq!(x.completion_s, y.completion_s);
+        }
+    }
+
+    #[test]
+    fn parallel_run_bitwise_equals_serial() {
+        // The harness's purity contract: the same (cfg, kind, trace) on a
+        // different thread yields a bitwise-identical report.
+        let cfg = SimConfig::small();
+        let trace = small_trace();
+        let serial = run_simulation(&cfg, SchedulerKind::DeadlineVc, &trace);
+        let threaded = std::thread::spawn({
+            let cfg = cfg.clone();
+            let trace = trace.clone();
+            move || run_simulation(&cfg, SchedulerKind::DeadlineVc, &trace)
+        })
+        .join()
+        .expect("threaded run panicked");
+        assert_eq!(serial.makespan_s, threaded.makespan_s);
+        assert_eq!(serial.hotplugs, threaded.hotplugs);
+        assert_eq!(serial.events, threaded.events);
+        for (a, b) in serial.jobs.iter().zip(&threaded.jobs) {
+            assert_eq!(a.completion_s, b.completion_s);
+            assert_eq!(a.local_maps, b.local_maps);
         }
     }
 

@@ -1,0 +1,287 @@
+//! Sweep aggregation: group scenario results by grid cell (scheduler x
+//! mix x PMs x scale), fold the seed replicates into summary statistics,
+//! and render the JSON/CSV artifacts.
+//!
+//! Everything here is deterministic: groups are keyed through a `BTreeMap`
+//! (sorted iteration), statistics fold results in scenario-index order,
+//! and host-dependent values (wall-clock) are deliberately excluded — the
+//! artifacts are byte-identical across thread counts and runs.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+use crate::util::stats::{Percentiles, Summary};
+
+use super::grid::ScenarioGrid;
+use super::runner::ScenarioResult;
+
+/// Aggregated statistics of one grid cell across its seed replicates.
+#[derive(Clone, Debug)]
+pub struct GroupStats {
+    pub scheduler: String,
+    pub mix: String,
+    pub pms: usize,
+    pub scale: f64,
+    /// Seed replicates folded into this cell.
+    pub seeds: usize,
+    /// Jobs completed across all replicates.
+    pub total_jobs: usize,
+    /// Mean/stddev of per-replicate mean job completion time (seconds).
+    pub mean_completion_s: f64,
+    pub std_completion_s: f64,
+    /// Percentiles over all job completion times pooled across replicates.
+    pub p50_completion_s: f64,
+    pub p99_completion_s: f64,
+    /// Mean/stddev of per-replicate throughput (jobs per simulated hour).
+    pub mean_throughput_jph: f64,
+    pub std_throughput_jph: f64,
+    /// Mean/stddev of per-replicate map locality (percent).
+    pub mean_locality_pct: f64,
+    pub std_locality_pct: f64,
+    /// Mean per-replicate deadline-miss rate (0..1).
+    pub mean_miss_rate: f64,
+    /// Mean per-replicate makespan (seconds).
+    pub mean_makespan_s: f64,
+    /// Total vCPU hot-plugs across replicates.
+    pub hotplugs: u64,
+}
+
+/// Fold `results` into per-cell statistics, sorted by (scheduler, mix,
+/// pms, scale).
+pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
+    // Key through the f64 bit pattern: scales come verbatim from the grid
+    // axis, so identical cells have identical bits.
+    let mut cells: BTreeMap<(String, String, usize, u64), Vec<usize>> = BTreeMap::new();
+    for (i, r) in results.iter().enumerate() {
+        let key = (
+            r.scenario.scheduler.name().to_string(),
+            r.scenario.mix.name().to_string(),
+            r.scenario.pms,
+            r.scenario.scale.to_bits(),
+        );
+        cells.entry(key).or_default().push(i);
+    }
+
+    let mut out = Vec::with_capacity(cells.len());
+    for ((scheduler, mix, pms, scale_bits), members) in cells {
+        let mut completion = Summary::new();
+        let mut throughput = Summary::new();
+        let mut locality = Summary::new();
+        let mut miss = Summary::new();
+        let mut makespan = Summary::new();
+        let mut pooled = Percentiles::new();
+        let mut hotplugs = 0u64;
+        let mut total_jobs = 0usize;
+        for &i in &members {
+            let rep = &results[i].report;
+            completion.add(rep.mean_completion_s());
+            throughput.add(rep.throughput_jobs_per_hour());
+            locality.add(rep.locality_pct());
+            miss.add(rep.miss_rate());
+            makespan.add(rep.makespan_s);
+            hotplugs += rep.hotplugs;
+            total_jobs += rep.completed_jobs();
+            for j in &rep.jobs {
+                pooled.add(j.completion_s);
+            }
+        }
+        out.push(GroupStats {
+            scheduler,
+            mix,
+            pms,
+            scale: f64::from_bits(scale_bits),
+            seeds: members.len(),
+            total_jobs,
+            mean_completion_s: completion.mean(),
+            std_completion_s: completion.std(),
+            p50_completion_s: pooled.pct(50.0),
+            p99_completion_s: pooled.pct(99.0),
+            mean_throughput_jph: throughput.mean(),
+            std_throughput_jph: throughput.std(),
+            mean_locality_pct: locality.mean(),
+            std_locality_pct: locality.std(),
+            mean_miss_rate: miss.mean(),
+            mean_makespan_s: makespan.mean(),
+            hotplugs,
+        });
+    }
+    out
+}
+
+/// The sweep's JSON artifact: grid echo + per-scenario rows + aggregates.
+/// Deliberately excludes wall-clock (host-dependent) so the document is
+/// byte-identical for a given grid at any `--threads` setting.
+pub fn sweep_json(
+    grid: &ScenarioGrid,
+    results: &[ScenarioResult],
+    groups: &[GroupStats],
+) -> Json {
+    let mut grid_obj = Json::obj()
+        .set("name", grid.name.as_str())
+        .set("grid_seed", grid.grid_seed)
+        .set(
+            "schedulers",
+            grid.schedulers
+                .iter()
+                .map(|s| s.name().to_string())
+                .collect::<Vec<_>>(),
+        )
+        .set(
+            "mixes",
+            grid.mixes
+                .iter()
+                .map(|m| m.name().to_string())
+                .collect::<Vec<_>>(),
+        )
+        .set(
+            "pm_counts",
+            grid.pm_counts.iter().map(|&p| p as u64).collect::<Vec<_>>(),
+        )
+        .set("scales", grid.scales.clone())
+        .set("seed_replicates", grid.seed_replicates)
+        .set("jobs_per_scenario", grid.jobs_per_scenario)
+        .set("mean_gap_s", grid.mean_gap_s);
+    grid_obj = grid_obj.set(
+        "deadline_factor",
+        vec![grid.deadline_factor.0, grid.deadline_factor.1],
+    );
+    grid_obj = grid_obj.set("scenarios", results.len());
+
+    let mut rows = Json::arr();
+    for r in results {
+        let rep = &r.report;
+        rows = rows.push(
+            Json::obj()
+                .set("index", r.scenario.index)
+                .set("scheduler", r.scenario.scheduler.name())
+                .set("mix", r.scenario.mix.name())
+                .set("pms", r.scenario.pms)
+                .set("scale", r.scenario.scale)
+                .set("replicate", r.scenario.replicate)
+                .set("stream_seed", format!("{:#018x}", r.scenario.stream_seed))
+                .set("jobs", rep.completed_jobs())
+                .set("makespan_s", rep.makespan_s)
+                .set("mean_completion_s", rep.mean_completion_s())
+                .set("throughput_jobs_per_hour", rep.throughput_jobs_per_hour())
+                .set("locality_pct", rep.locality_pct())
+                .set("miss_rate", rep.miss_rate())
+                .set("hotplugs", rep.hotplugs)
+                .set("events", rep.events),
+        );
+    }
+
+    let mut aggs = Json::arr();
+    for g in groups {
+        aggs = aggs.push(
+            Json::obj()
+                .set("scheduler", g.scheduler.as_str())
+                .set("mix", g.mix.as_str())
+                .set("pms", g.pms)
+                .set("scale", g.scale)
+                .set("seeds", g.seeds)
+                .set("total_jobs", g.total_jobs)
+                .set("mean_completion_s", g.mean_completion_s)
+                .set("std_completion_s", g.std_completion_s)
+                .set("p50_completion_s", g.p50_completion_s)
+                .set("p99_completion_s", g.p99_completion_s)
+                .set("mean_throughput_jph", g.mean_throughput_jph)
+                .set("std_throughput_jph", g.std_throughput_jph)
+                .set("mean_locality_pct", g.mean_locality_pct)
+                .set("std_locality_pct", g.std_locality_pct)
+                .set("mean_miss_rate", g.mean_miss_rate)
+                .set("mean_makespan_s", g.mean_makespan_s)
+                .set("hotplugs", g.hotplugs),
+        );
+    }
+
+    Json::obj()
+        .set("grid", grid_obj)
+        .set("scenarios", rows)
+        .set("aggregates", aggs)
+}
+
+/// Aggregates as CSV (one row per grid cell).
+pub fn aggregates_csv(groups: &[GroupStats]) -> String {
+    let mut out = String::from(
+        "scheduler,mix,pms,scale,seeds,total_jobs,mean_completion_s,\
+         std_completion_s,p50_completion_s,p99_completion_s,\
+         mean_throughput_jph,std_throughput_jph,mean_locality_pct,\
+         std_locality_pct,mean_miss_rate,mean_makespan_s,hotplugs\n",
+    );
+    for g in groups {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            g.scheduler,
+            g.mix,
+            g.pms,
+            g.scale,
+            g.seeds,
+            g.total_jobs,
+            g.mean_completion_s,
+            g.std_completion_s,
+            g.p50_completion_s,
+            g.p99_completion_s,
+            g.mean_throughput_jph,
+            g.std_throughput_jph,
+            g.mean_locality_pct,
+            g.std_locality_pct,
+            g.mean_miss_rate,
+            g.mean_makespan_s,
+            g.hotplugs
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::runner::run_sweep;
+
+    fn tiny_results() -> (ScenarioGrid, Vec<ScenarioResult>) {
+        let mut g = ScenarioGrid::quick();
+        g.jobs_per_scenario = 3;
+        let results = run_sweep(&g, 2);
+        (g, results)
+    }
+
+    #[test]
+    fn groups_fold_seed_replicates() {
+        let (g, results) = tiny_results();
+        let groups = aggregate(&results);
+        // quick(): 2 schedulers x 2 mixes x 1 pm x 1 scale = 4 cells.
+        assert_eq!(groups.len(), 4);
+        for grp in &groups {
+            assert_eq!(grp.seeds, g.seed_replicates);
+            assert_eq!(grp.total_jobs, g.seed_replicates * g.jobs_per_scenario);
+            assert!(grp.mean_completion_s > 0.0);
+            assert!(grp.p99_completion_s >= grp.p50_completion_s);
+        }
+        // Sorted by key: schedulers alphabetical.
+        assert!(groups.windows(2).all(|w| w[0].scheduler <= w[1].scheduler));
+    }
+
+    #[test]
+    fn json_and_csv_render_deterministically() {
+        let (g, results) = tiny_results();
+        let groups = aggregate(&results);
+        let a = sweep_json(&g, &results, &groups).render();
+        let b = sweep_json(&g, &results, &aggregate(&results)).render();
+        assert_eq!(a, b);
+        assert!(a.contains("\"aggregates\":["));
+        assert!(a.contains("\"stream_seed\":\"0x"));
+        let csv = aggregates_csv(&groups);
+        assert_eq!(csv.lines().count(), groups.len() + 1);
+        assert!(csv.starts_with("scheduler,mix,"));
+    }
+
+    #[test]
+    fn artifacts_exclude_wall_clock() {
+        let (g, results) = tiny_results();
+        let groups = aggregate(&results);
+        let json = sweep_json(&g, &results, &groups).render();
+        assert!(!json.contains("wall"), "artifacts must stay host-independent");
+    }
+}

@@ -1,0 +1,280 @@
+//! Declarative scenario grids: the cartesian product of scheduler kind x
+//! job mix x PM count x input scale x seed replicate, expanded into a flat,
+//! deterministically ordered scenario list.
+//!
+//! Each scenario derives its RNG stream seed from `(grid_seed,
+//! scenario_index)` via [`crate::util::rng::derive_stream_seed`], so the
+//! full `(SimConfig, JobTrace, SchedulerKind)` input of a run is a pure
+//! function of the grid — independent of worker threads and execution
+//! order.
+
+use crate::config::SimConfig;
+use crate::scheduler::SchedulerKind;
+use crate::util::rng::derive_stream_seed;
+use crate::util::Rng;
+use crate::workloads::trace::{ideal_completion_estimate, JobTrace};
+use crate::workloads::{JobSpec, JobType, ALL_JOB_TYPES};
+
+/// What kind of jobs one scenario submits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobMix {
+    /// Poisson trace over all five workload types (the paper's "random
+    /// input sizes" regime).
+    Mixed,
+    /// Every job is this single workload type, input sizes cycling through
+    /// the paper's 2/4/6/8/10 GB ladder (scaled by the scenario's scale).
+    Single(JobType),
+}
+
+impl JobMix {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobMix::Mixed => "mixed",
+            JobMix::Single(t) => t.name(),
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<JobMix> {
+        if s == "mixed" {
+            return Some(JobMix::Mixed);
+        }
+        JobType::from_name(s).map(JobMix::Single)
+    }
+}
+
+/// The declarative grid: every combination of the axis vectors becomes one
+/// scenario per seed replicate. Axis vectors are public so callers apply
+/// per-axis overrides before expansion (`vcsched sweep --pms 10 ...`).
+#[derive(Clone, Debug)]
+pub struct ScenarioGrid {
+    /// Grid label carried into artifacts.
+    pub name: String,
+    /// Axis: scheduler under test.
+    pub schedulers: Vec<SchedulerKind>,
+    /// Axis: job mix.
+    pub mixes: Vec<JobMix>,
+    /// Axis: physical machine count.
+    pub pm_counts: Vec<usize>,
+    /// Axis: MB of simulated input per paper-GB (100 = fast, 1024 = full).
+    pub scales: Vec<f64>,
+    /// Axis: seed replicate ids (only their count and position matter; the
+    /// actual RNG stream comes from `(grid_seed, scenario_index)`).
+    pub seed_replicates: usize,
+    /// Jobs submitted per scenario.
+    pub jobs_per_scenario: usize,
+    /// Mean inter-arrival gap in seconds (Poisson arrivals).
+    pub mean_gap_s: f64,
+    /// Deadline factor range, multiplied onto the ideal-parallel estimate.
+    pub deadline_factor: (f64, f64),
+    /// Root seed of the whole sweep.
+    pub grid_seed: u64,
+}
+
+impl ScenarioGrid {
+    /// The default evaluation grid: all 5 schedulers x all 5 single-type
+    /// mixes x the paper's 20-PM cluster x fast scale x 10 seed replicates
+    /// = 250 scenarios.
+    pub fn default_grid() -> Self {
+        Self {
+            name: "default".to_string(),
+            schedulers: SchedulerKind::ALL.to_vec(),
+            mixes: ALL_JOB_TYPES.iter().copied().map(JobMix::Single).collect(),
+            pm_counts: vec![20],
+            scales: vec![100.0],
+            seed_replicates: 10,
+            jobs_per_scenario: 15,
+            mean_gap_s: 5.0,
+            deadline_factor: (1.6, 3.0),
+            grid_seed: 42,
+        }
+    }
+
+    /// A small smoke grid for tests and the scaling bench: 2 schedulers x
+    /// 2 mixes x small cluster x 2 seed replicates = 8 quick scenarios.
+    pub fn quick() -> Self {
+        Self {
+            name: "quick".to_string(),
+            schedulers: vec![SchedulerKind::Fair, SchedulerKind::DeadlineVc],
+            mixes: vec![JobMix::Mixed, JobMix::Single(JobType::WordCount)],
+            pm_counts: vec![4],
+            scales: vec![32.0],
+            seed_replicates: 2,
+            jobs_per_scenario: 5,
+            mean_gap_s: 5.0,
+            deadline_factor: (1.6, 3.0),
+            grid_seed: 42,
+        }
+    }
+
+    /// Total number of scenarios the grid expands to.
+    pub fn len(&self) -> usize {
+        self.schedulers.len()
+            * self.mixes.len()
+            * self.pm_counts.len()
+            * self.scales.len()
+            * self.seed_replicates
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the cartesian product in a fixed order (scheduler-major,
+    /// seed-minor). The position in this list is the scenario index the
+    /// RNG stream derives from, so the order is part of the grid contract.
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.len());
+        for &scheduler in &self.schedulers {
+            for &mix in &self.mixes {
+                for &pms in &self.pm_counts {
+                    for &scale in &self.scales {
+                        for replicate in 0..self.seed_replicates {
+                            let index = out.len();
+                            out.push(Scenario {
+                                index,
+                                scheduler,
+                                mix,
+                                pms,
+                                scale,
+                                replicate,
+                                stream_seed: derive_stream_seed(
+                                    self.grid_seed,
+                                    index as u64,
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One fully resolved cell of the grid.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Position in the grid's expansion order.
+    pub index: usize,
+    pub scheduler: SchedulerKind,
+    pub mix: JobMix,
+    pub pms: usize,
+    pub scale: f64,
+    /// Seed replicate number within the cell (for grouping/aggregation).
+    pub replicate: usize,
+    /// Derived RNG stream seed (`derive_stream_seed(grid_seed, index)`).
+    pub stream_seed: u64,
+}
+
+impl Scenario {
+    /// Cluster configuration for this scenario: the paper testbed with the
+    /// PM-count axis applied and the derived stream seed installed (the
+    /// seed drives HDFS placement and task jitter inside the run).
+    pub fn sim_config(&self) -> SimConfig {
+        let mut cfg = SimConfig::paper();
+        cfg.pms = self.pms;
+        cfg.seed = self.stream_seed;
+        cfg
+    }
+
+    /// The job trace this scenario submits — a pure function of the
+    /// scenario (grid parameters + derived stream seed).
+    pub fn job_trace(&self, grid: &ScenarioGrid, cfg: &SimConfig) -> JobTrace {
+        let n = grid.jobs_per_scenario;
+        let (flo, fhi) = grid.deadline_factor;
+        match self.mix {
+            JobMix::Mixed => {
+                JobTrace::poisson(cfg, n, grid.mean_gap_s, flo..fhi, self.stream_seed)
+            }
+            JobMix::Single(jt) => {
+                let mut rng = Rng::new(self.stream_seed ^ 0x51_41_6C);
+                let sizes_gb = [2.0, 4.0, 6.0, 8.0, 10.0];
+                let mut jobs = Vec::with_capacity(n);
+                let mut t = 0.0f64;
+                for i in 0..n {
+                    let gb = sizes_gb[i % sizes_gb.len()];
+                    let mut spec = JobSpec::new(jt, gb * self.scale).at(t);
+                    let est = ideal_completion_estimate(cfg, &spec);
+                    let factor = rng.range_f64(flo, fhi);
+                    spec = spec.with_deadline(est * factor);
+                    jobs.push(spec);
+                    t += rng.exp(grid.mean_gap_s);
+                }
+                JobTrace::new(jobs)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_shape_matches_acceptance() {
+        let g = ScenarioGrid::default_grid();
+        assert_eq!(g.schedulers.len(), 5);
+        assert_eq!(g.mixes.len(), 5);
+        assert!(g.seed_replicates >= 10);
+        assert_eq!(g.len(), 250);
+        assert_eq!(g.scenarios().len(), 250);
+    }
+
+    #[test]
+    fn scenario_indices_and_seeds_are_stable() {
+        let g = ScenarioGrid::quick();
+        let a = g.scenarios();
+        let b = g.scenarios();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.index, y.index);
+            assert_eq!(x.stream_seed, y.stream_seed);
+        }
+        // Indices are dense and seeds unique.
+        let mut seeds = std::collections::HashSet::new();
+        for (i, sc) in a.iter().enumerate() {
+            assert_eq!(sc.index, i);
+            assert!(seeds.insert(sc.stream_seed));
+        }
+    }
+
+    #[test]
+    fn grid_seed_shifts_every_stream() {
+        let g = ScenarioGrid::quick();
+        let mut g2 = ScenarioGrid::quick();
+        g2.grid_seed = 77;
+        for (a, b) in g.scenarios().iter().zip(&g2.scenarios()) {
+            assert_ne!(a.stream_seed, b.stream_seed);
+        }
+    }
+
+    #[test]
+    fn traces_are_pure_functions_of_the_scenario() {
+        let g = ScenarioGrid::quick();
+        for sc in g.scenarios() {
+            let cfg = sc.sim_config();
+            cfg.validate().unwrap();
+            let a = sc.job_trace(&g, &cfg);
+            let b = sc.job_trace(&g, &cfg);
+            assert_eq!(a.len(), g.jobs_per_scenario);
+            for (x, y) in a.jobs.iter().zip(&b.jobs) {
+                assert_eq!(x.job_type, y.job_type);
+                assert_eq!(x.input_mb, y.input_mb);
+                assert_eq!(x.submit_s, y.submit_s);
+                assert_eq!(x.deadline_s, y.deadline_s);
+            }
+        }
+    }
+
+    #[test]
+    fn mix_names_roundtrip() {
+        assert_eq!(JobMix::from_name("mixed"), Some(JobMix::Mixed));
+        assert_eq!(
+            JobMix::from_name("sort"),
+            Some(JobMix::Single(JobType::Sort))
+        );
+        assert_eq!(JobMix::from_name("bogus"), None);
+        for m in [JobMix::Mixed, JobMix::Single(JobType::Grep)] {
+            assert_eq!(JobMix::from_name(m.name()), Some(m));
+        }
+    }
+}

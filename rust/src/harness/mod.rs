@@ -1,0 +1,30 @@
+//! Parallel scenario-sweep harness: declarative experiment grids over the
+//! simulator, executed on a std-thread pool with bitwise-reproducible
+//! results and aggregated into JSON/CSV artifacts.
+//!
+//! The paper's headline comparison (§5) is one cell of a much larger
+//! design space — scheduler x workload mix x cluster size x input scale x
+//! seed. This module turns the repo from a one-shot figure reproducer into
+//! a grid-evaluation engine:
+//!
+//! * [`grid`] — [`ScenarioGrid`] declares the axes; expansion assigns each
+//!   scenario a dense index and derives its RNG stream from
+//!   `(grid_seed, scenario_index)`;
+//! * [`runner`] — [`run_sweep`] executes scenarios as pure
+//!   `(SimConfig, JobTrace, SchedulerKind) -> Report` functions across N
+//!   worker threads, results ordered by scenario index;
+//! * [`agg`] — [`aggregate`] folds seed replicates into per-cell stats
+//!   (mean/std, pooled p50/p99, locality, miss rate, throughput) and
+//!   renders artifacts that are byte-identical at any thread count.
+//!
+//! Driven by `vcsched sweep` (see `main.rs`) and the
+//! `benches/sweep_scaling.rs` smoke bench; the determinism contract is
+//! enforced by `tests/sweep_determinism.rs`.
+
+pub mod agg;
+pub mod grid;
+pub mod runner;
+
+pub use agg::{aggregate, aggregates_csv, sweep_json, GroupStats};
+pub use grid::{JobMix, Scenario, ScenarioGrid};
+pub use runner::{run_scenario, run_scenarios, run_sweep, ScenarioResult};

@@ -1,0 +1,145 @@
+//! Parallel sweep executor: a self-scheduling thread pool over the
+//! scenario list (std threads only — no external crates).
+//!
+//! Work distribution is a single shared atomic cursor: every idle worker
+//! claims the next unclaimed scenario, so no worker ever sits idle while
+//! scenarios remain — the work-conservation property work-stealing deques
+//! buy, collapsed to one global deque (optimal here because scenarios are
+//! coarse-grained: each is a whole simulation, microseconds of claim
+//! overhead against milliseconds-to-seconds of work).
+//!
+//! Determinism: each scenario is a pure function
+//! `(SimConfig, JobTrace, SchedulerKind) -> Report` — the simulation owns
+//! all of its mutable state ([`crate::coordinator::World`]) and draws its
+//! randomness from the scenario's derived stream seed — and results are
+//! written into a slot indexed by scenario index. The returned vector is
+//! therefore bitwise identical at any thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator;
+use crate::metrics::RunMetrics;
+
+use super::grid::{Scenario, ScenarioGrid};
+
+/// One scenario's outcome: the resolved cell plus the full run report.
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub scenario: Scenario,
+    pub report: RunMetrics,
+}
+
+/// Run one scenario. Pure: the result depends only on `(grid, scenario)`.
+pub fn run_scenario(grid: &ScenarioGrid, scenario: &Scenario) -> ScenarioResult {
+    let cfg = scenario.sim_config();
+    cfg.validate().unwrap_or_else(|e| {
+        panic!("scenario {} has an invalid config: {e}", scenario.index)
+    });
+    let trace = scenario.job_trace(grid, &cfg);
+    let report = coordinator::run_simulation(&cfg, scenario.scheduler, &trace);
+    ScenarioResult {
+        scenario: scenario.clone(),
+        report,
+    }
+}
+
+/// Expand `grid` and run every scenario on `threads` workers. Results come
+/// back in scenario-index order regardless of which worker ran what.
+pub fn run_sweep(grid: &ScenarioGrid, threads: usize) -> Vec<ScenarioResult> {
+    let scenarios = grid.scenarios();
+    run_scenarios(grid, &scenarios, threads)
+}
+
+/// Run an explicit scenario list on `threads` workers (the `run_sweep`
+/// core, exposed for partial/filtered sweeps).
+pub fn run_scenarios(
+    grid: &ScenarioGrid,
+    scenarios: &[Scenario],
+    threads: usize,
+) -> Vec<ScenarioResult> {
+    let n = scenarios.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads == 1 {
+        return scenarios.iter().map(|sc| run_scenario(grid, sc)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<ScenarioResult>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let result = run_scenario(grid, &scenarios[i]);
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| {
+            slot.into_inner()
+                .unwrap()
+                .unwrap_or_else(|| panic!("scenario {i} produced no result"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_grid() -> ScenarioGrid {
+        let mut g = ScenarioGrid::quick();
+        g.jobs_per_scenario = 3;
+        g
+    }
+
+    #[test]
+    fn single_thread_runs_every_scenario_in_order() {
+        let g = tiny_grid();
+        let results = run_sweep(&g, 1);
+        assert_eq!(results.len(), g.len());
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.scenario.index, i);
+            assert_eq!(r.report.completed_jobs(), g.jobs_per_scenario);
+        }
+    }
+
+    #[test]
+    fn parallel_results_match_serial_bitwise() {
+        let g = tiny_grid();
+        let serial = run_sweep(&g, 1);
+        for threads in [2usize, 4] {
+            let parallel = run_sweep(&g, threads);
+            assert_eq!(serial.len(), parallel.len());
+            for (a, b) in serial.iter().zip(&parallel) {
+                assert_eq!(a.scenario.index, b.scenario.index);
+                assert_eq!(a.report.makespan_s, b.report.makespan_s);
+                assert_eq!(a.report.hotplugs, b.report.hotplugs);
+                assert_eq!(a.report.events, b.report.events);
+                let ca: Vec<f64> =
+                    a.report.jobs.iter().map(|j| j.completion_s).collect();
+                let cb: Vec<f64> =
+                    b.report.jobs.iter().map(|j| j.completion_s).collect();
+                let idx = a.scenario.index;
+                assert_eq!(ca, cb, "scenario {idx} diverged at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_thread_count_is_clamped() {
+        let mut g = tiny_grid();
+        g.seed_replicates = 1;
+        g.mixes.truncate(1);
+        g.schedulers.truncate(1); // 1 scenario
+        let results = run_sweep(&g, 64);
+        assert_eq!(results.len(), 1);
+    }
+}

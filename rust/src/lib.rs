@@ -21,6 +21,7 @@
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod harness;
 pub mod hdfs;
 pub mod mapreduce;
 pub mod metrics;
@@ -37,6 +38,7 @@ pub mod workloads;
 pub mod prelude {
     pub use crate::config::SimConfig;
     pub use crate::coordinator::{self, Report};
+    pub use crate::harness::{run_sweep, JobMix, ScenarioGrid};
     pub use crate::predictor::{NativePredictor, Predictor};
     pub use crate::scheduler::SchedulerKind;
     pub use crate::sim::SimTime;

@@ -7,10 +7,13 @@
 //!   fig3        reproduce Figure 3 (per-type comparison, Table-2 mix)
 //!   table2      reproduce Table 2 (slot allocations)
 //!   throughput  reproduce the 12% throughput headline
+//!   sweep       run a scenario grid in parallel (harness::run_sweep)
 //!
 //! Common flags: --sched <fifo|fair|delay|edf|deadline_vc> --seed N
 //!   --pms N --scale MB_PER_GB --jobs N --xla (use the PJRT predictor)
 //!   --json (machine-readable output)
+//! Sweep flags: --grid <default|quick> --threads N --seeds N --mix M
+//!   --out DIR (artifact directory, default results/)
 
 use vcsched::config::SimConfig;
 use vcsched::coordinator::{self, Report};
@@ -33,6 +36,7 @@ fn main() {
         "fig3" => cmd_fig3(&args),
         "table2" => cmd_table2(&args),
         "throughput" => cmd_throughput(&args),
+        "sweep" => cmd_sweep(&args),
         "gantt" => cmd_gantt(&args),
         "export" => cmd_export(&args),
         _ => print_help(),
@@ -214,6 +218,106 @@ fn cmd_throughput(args: &Args) {
     println!("mean throughput gain: {mean:+.1}% (paper: ~12%)");
 }
 
+/// `vcsched sweep`: expand a scenario grid, run it across worker threads,
+/// print the per-cell aggregate table, and write `sweep.json` /
+/// `sweep.csv` artifacts under `--out` (default `results/`). The JSON is
+/// byte-identical at any `--threads` setting (see `harness` docs).
+fn cmd_sweep(args: &Args) {
+    use vcsched::harness::{aggregate, aggregates_csv, run_sweep, sweep_json, JobMix, ScenarioGrid};
+
+    let grid_name = args.get_str("grid", "default");
+    let mut grid = match grid_name {
+        "default" => ScenarioGrid::default_grid(),
+        "quick" => ScenarioGrid::quick(),
+        other => panic!("unknown grid {other:?} (expected default|quick)"),
+    };
+
+    // Per-axis overrides.
+    grid.grid_seed = args.get_u64("seed", grid.grid_seed);
+    grid.seed_replicates = args.get_usize("seeds", grid.seed_replicates);
+    grid.jobs_per_scenario = args.get_usize("jobs", grid.jobs_per_scenario);
+    if let Some(v) = args.get("pms") {
+        let pms = v
+            .parse::<usize>()
+            .unwrap_or_else(|_| panic!("--pms wants usize, got {v:?}"));
+        grid.pm_counts = vec![pms];
+    }
+    if let Some(v) = args.get("scale") {
+        let scale = v
+            .parse::<f64>()
+            .unwrap_or_else(|_| panic!("--scale wants f64, got {v:?}"));
+        grid.scales = vec![scale];
+    }
+    if let Some(name) = args.get("sched") {
+        let kind = SchedulerKind::from_name(name)
+            .unwrap_or_else(|| panic!("unknown scheduler {name:?}"));
+        grid.schedulers = vec![kind];
+    }
+    if let Some(name) = args.get("mix") {
+        let mix = JobMix::from_name(name)
+            .unwrap_or_else(|| panic!("unknown mix {name:?} (mixed or a job type)"));
+        grid.mixes = vec![mix];
+    }
+
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let threads = args.get_usize("threads", default_threads);
+
+    println!(
+        "sweep {:?}: {} scenarios ({} schedulers x {} mixes x {} PM counts x \
+         {} scales x {} seeds), {} jobs each, {threads} threads",
+        grid.name,
+        grid.len(),
+        grid.schedulers.len(),
+        grid.mixes.len(),
+        grid.pm_counts.len(),
+        grid.scales.len(),
+        grid.seed_replicates,
+        grid.jobs_per_scenario,
+    );
+
+    let t0 = std::time::Instant::now();
+    let results = run_sweep(&grid, threads);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let groups = aggregate(&results);
+
+    let mut t = Table::new(&[
+        "scheduler", "mix", "pms", "mean_ct", "p50", "p99", "thpt/h", "locality", "misses",
+    ]);
+    for g in &groups {
+        t.row(&[
+            g.scheduler.clone(),
+            g.mix.clone(),
+            g.pms.to_string(),
+            format!("{:.1}±{:.1}s", g.mean_completion_s, g.std_completion_s),
+            format!("{:.1}s", g.p50_completion_s),
+            format!("{:.1}s", g.p99_completion_s),
+            format!("{:.2}±{:.2}", g.mean_throughput_jph, g.std_throughput_jph),
+            format!("{:.1}%", g.mean_locality_pct),
+            format!("{:.0}%", g.mean_miss_rate * 100.0),
+        ]);
+    }
+    t.print();
+
+    let out = std::path::PathBuf::from(args.get_str("out", "results"));
+    std::fs::create_dir_all(&out).expect("mkdir artifact dir");
+    let json = sweep_json(&grid, &results, &groups).render();
+    std::fs::write(out.join("sweep.json"), &json).expect("write sweep.json");
+    std::fs::write(out.join("sweep.csv"), aggregates_csv(&groups)).expect("write sweep.csv");
+
+    let sim_wall: f64 = results.iter().map(|r| r.report.wall_s).sum();
+    println!(
+        "\n{} scenarios in {wall_s:.2}s wall on {threads} threads \
+         (sum of per-scenario sim time {sim_wall:.2}s, speedup x{:.2}); \
+         artifacts: {}/sweep.json, {}/sweep.csv",
+        results.len(),
+        sim_wall / wall_s.max(1e-9),
+        out.display(),
+        out.display()
+    );
+}
+
 fn cmd_gantt(args: &Args) {
     use vcsched::coordinator::World;
     let cfg = cfg_from(args);
@@ -316,8 +420,10 @@ fn cmd_export(args: &Args) {
 fn print_help() {
     println!(
         "vcsched — deadline-aware MapReduce scheduling on virtual clusters\n\
-         usage: vcsched <simulate|compare|fig2|fig3|table2|throughput|gantt|export> [flags]\n\
+         usage: vcsched <simulate|compare|fig2|fig3|table2|throughput|sweep|gantt|export> [flags]\n\
          flags: --sched K --a K --b K --seed N --pms N --jobs N --runs N\n\
-         \x20      --scale MB_PER_GB --xla --json"
+         \x20      --scale MB_PER_GB --xla --json\n\
+         sweep: --grid <default|quick> --threads N --seeds N --mix <mixed|TYPE>\n\
+         \x20      --out DIR"
     );
 }

@@ -7,12 +7,26 @@
 //! is compiled exactly once per process; executions reuse the compiled
 //! executable and pre-sized input buffers, so the request path performs no
 //! Python, no parsing and no recompilation.
+//!
+//! The real PJRT path needs the `xla` (and `anyhow`) crates, which are not
+//! available in the offline build environment; it is gated behind the
+//! `xla` cargo feature. Without the feature an API-compatible [`stub`] is
+//! compiled instead: artifact loading returns `Err`, so every caller takes
+//! its existing native-predictor fallback path.
 
+#[cfg(feature = "xla")]
 mod executable;
+#[cfg(feature = "xla")]
 mod predictor_xla;
+#[cfg(not(feature = "xla"))]
+mod stub;
 
+#[cfg(feature = "xla")]
 pub use executable::{Artifact, ArtifactSet};
+#[cfg(feature = "xla")]
 pub use predictor_xla::{PlacementQuery, XlaPredictor};
+#[cfg(not(feature = "xla"))]
+pub use stub::{Artifact, ArtifactSet, PlacementQuery, RuntimeError, XlaPredictor};
 
 /// Padded batch shapes shared with `python/compile/model.py`.
 /// Keep in sync with `MAX_JOBS` / `MAX_TASKS` / `MAX_NODES` there

@@ -1,0 +1,179 @@
+//! Offline stand-in for the PJRT runtime, compiled when the `xla` cargo
+//! feature is off (the `xla`/`anyhow` crates are unavailable offline).
+//!
+//! Mirrors the public API of `executable.rs` / `predictor_xla.rs` exactly,
+//! but every artifact load returns `Err`, so benches, examples and tests
+//! that probe `XlaPredictor::load_default()` take their documented
+//! native-predictor fallback path. Because an [`ArtifactSet`] can only be
+//! obtained through the failing loaders, the `Predictor` methods are
+//! unreachable by construction.
+
+use std::path::Path;
+
+use super::{MAX_NODES, MAX_TASKS};
+use crate::predictor::{Eta, JobDemand, JobProgress, Predictor, SlotDemand};
+
+/// Error produced by every stubbed load/execute entry point.
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn unavailable(what: &str) -> RuntimeError {
+    RuntimeError(format!(
+        "{what} requires the `xla` cargo feature (PJRT runtime not compiled \
+         into this build; using the native predictor instead)"
+    ))
+}
+
+/// Placeholder for one compiled artifact. Never constructed in stub builds
+/// (the only constructor, [`ArtifactSet::load`], always fails).
+pub struct Artifact {
+    name: String,
+    /// Wall time spent compiling (micro-bench observability parity).
+    pub compile_time_ms: f64,
+}
+
+impl Artifact {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// The full set of predictor artifacts (stub: never loadable).
+pub struct ArtifactSet {
+    pub slot_solver: Artifact,
+    pub locality: Artifact,
+    pub estimator: Artifact,
+    pub wave_estimator: Artifact,
+}
+
+impl ArtifactSet {
+    pub fn load(dir: &Path) -> Result<Self> {
+        Err(unavailable(&format!(
+            "loading artifacts from {}",
+            dir.display()
+        )))
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(&crate::util::repo_path("artifacts"))
+    }
+}
+
+/// Placement query for the locality artifact (Alg. 1 batched). Identical
+/// layout to the real implementation so callers compile unchanged.
+pub struct PlacementQuery {
+    /// `has_data[t * MAX_NODES + n] = 1.0` iff task `t`'s input block is on
+    /// node `n`. Row-major `[MAX_TASKS, MAX_NODES]`.
+    pub has_data: Vec<f32>,
+    /// Release-queue depth of each node's physical machine.
+    pub rq: Vec<f32>,
+    /// Assign-queue depth of each node's physical machine.
+    pub aq: Vec<f32>,
+    pub task_mask: Vec<f32>,
+    pub node_mask: Vec<f32>,
+    /// `(w_rq, w_aq)` — Alg. 1 preference weights.
+    pub weights: [f32; 2],
+}
+
+impl PlacementQuery {
+    pub fn new() -> Self {
+        Self {
+            has_data: vec![0.0; MAX_TASKS * MAX_NODES],
+            rq: vec![0.0; MAX_NODES],
+            aq: vec![0.0; MAX_NODES],
+            task_mask: vec![0.0; MAX_TASKS],
+            node_mask: vec![0.0; MAX_NODES],
+            weights: [1.0, 0.5],
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.has_data.fill(0.0);
+        self.rq.fill(0.0);
+        self.aq.fill(0.0);
+        self.task_mask.fill(0.0);
+        self.node_mask.fill(0.0);
+    }
+
+    #[inline]
+    pub fn set_has_data(&mut self, task: usize, node: usize) {
+        self.has_data[task * MAX_NODES + node] = 1.0;
+    }
+}
+
+impl Default for PlacementQuery {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Predictor backed by the AOT artifacts (stub: never constructible, since
+/// the only path to an [`ArtifactSet`] fails).
+pub struct XlaPredictor {
+    _set: ArtifactSet,
+    /// Number of PJRT executions issued (micro-bench observability parity).
+    pub calls: u64,
+}
+
+impl XlaPredictor {
+    pub fn new(set: ArtifactSet) -> Self {
+        Self { _set: set, calls: 0 }
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Ok(Self::new(ArtifactSet::load_default()?))
+    }
+
+    /// Alg. 1 placement: per-task best node (-1 when no replica reachable).
+    pub fn place(&mut self, _q: &PlacementQuery) -> Result<Vec<i32>> {
+        Err(unavailable("XlaPredictor::place"))
+    }
+}
+
+impl Predictor for XlaPredictor {
+    fn solve_slots(&mut self, _jobs: &[JobDemand]) -> Vec<SlotDemand> {
+        unreachable!("stub XlaPredictor cannot be constructed (load always fails)")
+    }
+
+    fn estimate(&mut self, _jobs: &[JobProgress]) -> Vec<Eta> {
+        unreachable!("stub XlaPredictor cannot be constructed (load always fails)")
+    }
+
+    fn estimate_wave(&mut self, _jobs: &[JobProgress]) -> Vec<Eta> {
+        unreachable!("stub XlaPredictor cannot be constructed (load always fails)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_fail_gracefully() {
+        assert!(ArtifactSet::load_default().is_err());
+        let err = XlaPredictor::load_default().err().expect("stub must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("xla"), "{msg}");
+    }
+
+    #[test]
+    fn placement_query_layout_matches_constants() {
+        let mut q = PlacementQuery::new();
+        assert_eq!(q.has_data.len(), MAX_TASKS * MAX_NODES);
+        assert_eq!(q.rq.len(), MAX_NODES);
+        q.set_has_data(1, 2);
+        assert_eq!(q.has_data[MAX_NODES + 2], 1.0);
+        q.clear();
+        assert!(q.has_data.iter().all(|&x| x == 0.0));
+    }
+}

@@ -23,14 +23,9 @@ pub struct ZipfWords {
 
 impl ZipfWords {
     pub fn new() -> Self {
-        let mut weights: Vec<f64> = (1..=VOCAB.len()).map(|r| 1.0 / r as f64).collect();
-        let total: f64 = weights.iter().sum();
-        let mut acc = 0.0;
-        for w in weights.iter_mut() {
-            acc += *w / total;
-            *w = acc;
+        Self {
+            cdf: zipf_cdf(VOCAB.len()),
         }
-        Self { cdf: weights }
     }
 
     pub fn sample(&self, rng: &mut Rng) -> &'static str {
@@ -44,6 +39,23 @@ impl Default for ZipfWords {
     fn default() -> Self {
         Self::new()
     }
+}
+
+/// Normalized Zipf(s=1) CDF over ranks `1..=n`: `cdf[i]` is the
+/// probability of drawing a rank `<= i + 1`. Kept as its own function
+/// (weights and CDF are separate values, not one vector mutated in place)
+/// so the construction is checkable in isolation: the result is strictly
+/// increasing and ends at 1.0 up to float rounding.
+fn zipf_cdf(n: usize) -> Vec<f64> {
+    debug_assert!(n > 0);
+    let harmonic: f64 = (1..=n).map(|rank| 1.0 / rank as f64).sum();
+    let mut cdf = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for rank in 1..=n {
+        acc += 1.0 / rank as f64 / harmonic;
+        cdf.push(acc);
+    }
+    cdf
 }
 
 /// One generated input block (the bytes a map task reads).
@@ -119,6 +131,20 @@ mod tests {
         let a = text_block(1024, 0, &mut Rng::new(9));
         let b = text_block(1024, 0, &mut Rng::new(9));
         assert_eq!(a.lines, b.lines);
+    }
+
+    #[test]
+    fn zipf_cdf_monotone_and_normalized() {
+        for n in [1usize, 2, 10, VOCAB.len()] {
+            let cdf = zipf_cdf(n);
+            assert_eq!(cdf.len(), n);
+            assert!(cdf[0] > 0.0);
+            for w in cdf.windows(2) {
+                assert!(w[1] > w[0], "CDF must be strictly increasing: {cdf:?}");
+            }
+            let last = *cdf.last().unwrap();
+            assert!((last - 1.0).abs() < 1e-9, "CDF must end at 1.0, got {last}");
+        }
     }
 
     #[test]

@@ -1,0 +1,76 @@
+//! The sweep harness's headline guarantee: the same `ScenarioGrid` + grid
+//! seed produces a byte-identical aggregated JSON artifact at 1, 2 and 8
+//! worker threads, and a different grid seed changes the results.
+
+use vcsched::harness::{
+    aggregate, aggregates_csv, run_scenarios, run_sweep, sweep_json, ScenarioGrid,
+};
+
+/// Small but non-trivial grid: 2 schedulers x 2 mixes x 2 seeds = 8
+/// scenarios on the 4-PM cluster with tiny inputs, so the full test stays
+/// fast in debug builds.
+fn test_grid() -> ScenarioGrid {
+    let mut g = ScenarioGrid::quick();
+    g.jobs_per_scenario = 4;
+    g.scales = vec![16.0];
+    g
+}
+
+fn artifact_bytes(grid: &ScenarioGrid, threads: usize) -> (String, String) {
+    let results = run_sweep(grid, threads);
+    let groups = aggregate(&results);
+    (
+        sweep_json(grid, &results, &groups).render(),
+        aggregates_csv(&groups),
+    )
+}
+
+#[test]
+fn json_artifact_byte_identical_at_1_2_and_8_threads() {
+    let grid = test_grid();
+    let (json1, csv1) = artifact_bytes(&grid, 1);
+    assert!(!json1.is_empty());
+    for threads in [2usize, 8] {
+        let (json_n, csv_n) = artifact_bytes(&grid, threads);
+        assert_eq!(
+            json1, json_n,
+            "sweep JSON diverged between 1 and {threads} threads"
+        );
+        assert_eq!(
+            csv1, csv_n,
+            "sweep CSV diverged between 1 and {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn repeated_runs_identical_at_fixed_thread_count() {
+    let grid = test_grid();
+    let (a, _) = artifact_bytes(&grid, 4);
+    let (b, _) = artifact_bytes(&grid, 4);
+    assert_eq!(a, b, "same grid + thread count must replay exactly");
+}
+
+#[test]
+fn grid_seed_changes_the_artifact() {
+    let grid = test_grid();
+    let mut reseeded = test_grid();
+    reseeded.grid_seed = grid.grid_seed + 1;
+    let (a, _) = artifact_bytes(&grid, 2);
+    let (b, _) = artifact_bytes(&reseeded, 2);
+    assert_ne!(a, b, "a new grid seed must produce new scenario streams");
+}
+
+#[test]
+fn explicit_scenario_list_matches_grid_expansion() {
+    let grid = test_grid();
+    let scenarios = grid.scenarios();
+    let via_grid = run_sweep(&grid, 2);
+    let via_list = run_scenarios(&grid, &scenarios, 2);
+    assert_eq!(via_grid.len(), via_list.len());
+    for (a, b) in via_grid.iter().zip(&via_list) {
+        assert_eq!(a.scenario.index, b.scenario.index);
+        assert_eq!(a.report.makespan_s, b.report.makespan_s);
+        assert_eq!(a.report.events, b.report.events);
+    }
+}
