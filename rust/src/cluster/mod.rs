@@ -8,6 +8,32 @@
 //!   a map slot); **reduce slots** are static — the paper reconfigures only
 //!   for the map phase (§4.2: "we have considered only the map phase to
 //!   maximize data locality").
+//!
+//! # Heterogeneity
+//!
+//! Since the `pm_profile` axis (see [`crate::config::PmProfile`]) the
+//! cluster is not necessarily homogeneous: each PM takes its core count
+//! and relative speed from the profile at build time. Every VM inherits
+//! its host PM's speed; the coordinator divides simulated task durations
+//! by it, and the per-PM core count bounds how many vCPUs the
+//! reconfigurator's Machine Managers can hot-plug onto that machine
+//! ([`Cluster::check_invariants`] enforces `assigned <= cores` per PM).
+//!
+//! ```
+//! use vcsched::cluster::Cluster;
+//! use vcsched::config::{PmProfile, SimConfig};
+//!
+//! let cfg = SimConfig {
+//!     pm_profile: PmProfile::Split2x,
+//!     ..SimConfig::small() // 4 PMs x 2 VMs x 2 vCPUs, 4 cores each
+//! };
+//! let c = Cluster::build(&cfg);
+//! // Even PMs are "big": twice the cores, so they start with spare
+//! // cores the reconfigurator can plug into either resident VM.
+//! assert_eq!(c.pm(vcsched::cluster::PmId(0)).cores, 8);
+//! assert_eq!(c.pm(vcsched::cluster::PmId(1)).cores, 4);
+//! assert_eq!(c.spare_cores(vcsched::cluster::PmId(0)), 4);
+//! ```
 
 use crate::config::SimConfig;
 
@@ -38,6 +64,9 @@ impl PmId {
 pub struct PhysicalMachine {
     pub id: PmId,
     pub cores: u32,
+    /// Relative machine speed (1.0 = baseline; see
+    /// [`crate::config::PmProfile`]).
+    pub speed: f64,
     pub vms: Vec<NodeId>,
 }
 
@@ -63,6 +92,10 @@ pub struct Vm {
     pub busy_reduce: u32,
     /// Static reduce slots.
     pub reduce_slots: u32,
+    /// Host PM's relative speed, inherited at build time. Task durations
+    /// on this VM divide by it (a 0.5-speed straggler takes twice as
+    /// long).
+    pub speed: f64,
 }
 
 impl Vm {
@@ -124,9 +157,11 @@ impl Cluster {
         let mut vms = Vec::with_capacity(cfg.nodes());
         for p in 0..cfg.pms {
             let pm_id = PmId(p as u32);
+            let speed = cfg.pm_speed(p);
             let mut pm = PhysicalMachine {
                 id: pm_id,
-                cores: cfg.cores_per_pm,
+                cores: cfg.pm_cores(p),
+                speed,
                 vms: Vec::with_capacity(cfg.vms_per_pm),
             };
             for _ in 0..cfg.vms_per_pm {
@@ -140,6 +175,7 @@ impl Cluster {
                     busy_map: 0,
                     busy_reduce: 0,
                     reduce_slots: cfg.reduce_slots,
+                    speed,
                 });
             }
             pms.push(pm);
@@ -247,6 +283,9 @@ impl Cluster {
             if vm.vcpus == 0 {
                 return Err(format!("VM {:?} has zero vCPUs", vm.id));
             }
+            if vm.speed <= 0.0 {
+                return Err(format!("VM {:?} has non-positive speed", vm.id));
+            }
             if vm.busy_map > vm.vcpus {
                 return Err(format!(
                     "VM {:?}: {} map tasks > {} vCPUs",
@@ -284,6 +323,35 @@ mod tests {
         for pm in c.pms() {
             assert_eq!(pm.vms.len(), 2);
             assert_eq!(pm.assigned_cores(&c), 4);
+        }
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn heterogeneous_layout_follows_profile() {
+        use crate::config::PmProfile;
+        // split-2x: even PMs have 2x cores and spare capacity at build.
+        let cfg = SimConfig {
+            pm_profile: PmProfile::Split2x,
+            ..SimConfig::small()
+        };
+        let c = Cluster::build(&cfg);
+        assert_eq!(c.pm(PmId(0)).cores, 8);
+        assert_eq!(c.pm(PmId(1)).cores, 4);
+        assert_eq!(c.spare_cores(PmId(0)), 4);
+        assert_eq!(c.spare_cores(PmId(1)), 0);
+        c.check_invariants().unwrap();
+
+        // long-tail: every fourth PM is a half-speed straggler and its
+        // VMs inherit the speed.
+        let cfg = SimConfig {
+            pm_profile: PmProfile::LongTail,
+            ..SimConfig::small()
+        };
+        let c = Cluster::build(&cfg);
+        assert_eq!(c.pm(PmId(3)).speed, 0.5);
+        for vm in c.vms() {
+            assert_eq!(vm.speed, c.pm(vm.pm).speed);
         }
         c.check_invariants().unwrap();
     }

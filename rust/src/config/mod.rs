@@ -9,6 +9,83 @@ mod parser;
 
 pub use parser::{parse_config_str, ConfigError};
 
+/// Per-PM capacity/speed heterogeneity profile (a `vcsched sweep` axis).
+///
+/// The seed reproduction assumed a homogeneous cluster; real virtualized
+/// testbeds mix machine generations, and per-node heterogeneity materially
+/// changes the locality/deadline trade-offs (arXiv:1808.08040). A profile
+/// maps each physical-machine index to a core count and a relative speed:
+///
+/// * `uniform`   — every PM has `cores_per_pm` cores at speed 1.0 (the
+///   paper's §5 testbed; the default);
+/// * `split-2x`  — every second PM (even index) is a "big" machine with
+///   twice the physical cores. VM layout is unchanged, so big PMs start
+///   with spare cores the reconfigurator's Machine Managers can hot-plug;
+/// * `long-tail` — every fourth PM (index % 4 == 3) is a half-speed
+///   straggler: all task durations on its VMs double.
+///
+/// Speeds scale simulated task durations (a task on a speed-`s` machine
+/// takes `nominal / s` seconds); core counts bound the per-PM hot-plug
+/// budget through [`crate::cluster::Cluster`] invariants.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PmProfile {
+    #[default]
+    Uniform,
+    Split2x,
+    LongTail,
+}
+
+impl PmProfile {
+    pub const ALL: [PmProfile; 3] =
+        [PmProfile::Uniform, PmProfile::Split2x, PmProfile::LongTail];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PmProfile::Uniform => "uniform",
+            PmProfile::Split2x => "split-2x",
+            PmProfile::LongTail => "long-tail",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PmProfile> {
+        Some(match s {
+            "uniform" => PmProfile::Uniform,
+            "split-2x" | "split2x" => PmProfile::Split2x,
+            "long-tail" | "longtail" => PmProfile::LongTail,
+            _ => return None,
+        })
+    }
+
+    /// Physical cores of PM `idx` given the baseline `base` core count.
+    pub fn cores(self, idx: usize, base: u32) -> u32 {
+        match self {
+            PmProfile::Uniform | PmProfile::LongTail => base,
+            PmProfile::Split2x => {
+                if idx % 2 == 0 {
+                    base * 2
+                } else {
+                    base
+                }
+            }
+        }
+    }
+
+    /// Relative machine speed of PM `idx` (1.0 = baseline; task durations
+    /// divide by this).
+    pub fn speed(self, idx: usize) -> f64 {
+        match self {
+            PmProfile::Uniform | PmProfile::Split2x => 1.0,
+            PmProfile::LongTail => {
+                if idx % 4 == 3 {
+                    0.5
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+}
+
 /// Execution mode for the MapReduce engine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecMode {
@@ -27,8 +104,12 @@ pub struct SimConfig {
     // ---- physical cluster ----
     /// Number of physical machines (paper: 20).
     pub pms: usize,
-    /// Physical cores per machine available to VMs.
+    /// Physical cores per machine available to VMs (the baseline; the
+    /// per-PM count is `pm_cores(idx)` under the active `pm_profile`).
     pub cores_per_pm: u32,
+    /// Per-PM capacity/speed heterogeneity profile (paper testbed:
+    /// uniform).
+    pub pm_profile: PmProfile,
     /// VMs per physical machine.
     pub vms_per_pm: usize,
     /// Base virtual CPUs per VM (= base map slots; paper: 2).
@@ -75,6 +156,7 @@ impl SimConfig {
         Self {
             pms: 20,
             cores_per_pm: 4,
+            pm_profile: PmProfile::Uniform,
             vms_per_pm: 2,
             base_vcpus: 2,
             reduce_slots: 2,
@@ -107,6 +189,39 @@ impl SimConfig {
         self.pms * self.vms_per_pm
     }
 
+    /// Physical cores of PM `idx` under the active heterogeneity profile.
+    pub fn pm_cores(&self, idx: usize) -> u32 {
+        self.pm_profile.cores(idx, self.cores_per_pm)
+    }
+
+    /// Relative speed of PM `idx` under the active heterogeneity profile.
+    pub fn pm_speed(&self, idx: usize) -> f64 {
+        self.pm_profile.speed(idx)
+    }
+
+    /// Mean PM speed across the cluster (1.0 when homogeneous).
+    pub fn mean_pm_speed(&self) -> f64 {
+        if self.pms == 0 {
+            return 1.0;
+        }
+        (0..self.pms).map(|p| self.pm_speed(p)).sum::<f64>() / self.pms as f64
+    }
+
+    /// Speed-weighted base map slots: `Σ_pm vms_per_pm · base_vcpus ·
+    /// speed(pm)`. This is the honest parallel-work capacity of a
+    /// heterogeneous cluster (a half-speed node's slot retires work at
+    /// half rate); equals `total_map_slots()` when homogeneous.
+    pub fn effective_map_slots(&self) -> f64 {
+        let per_pm = (self.vms_per_pm as u32 * self.base_vcpus) as f64;
+        (0..self.pms).map(|p| self.pm_speed(p) * per_pm).sum()
+    }
+
+    /// Speed-weighted reduce slots (see [`Self::effective_map_slots`]).
+    pub fn effective_reduce_slots(&self) -> f64 {
+        let per_pm = (self.vms_per_pm as u32 * self.reduce_slots) as f64;
+        (0..self.pms).map(|p| self.pm_speed(p) * per_pm).sum()
+    }
+
     /// Total base map slots in the cluster.
     pub fn total_map_slots(&self) -> u32 {
         self.nodes() as u32 * self.base_vcpus
@@ -125,11 +240,20 @@ impl SimConfig {
         if self.base_vcpus == 0 {
             return Err("VMs need at least one base vCPU".into());
         }
-        if self.vms_per_pm as u32 * self.base_vcpus > self.cores_per_pm {
-            return Err(format!(
-                "oversubscribed PM: {} VMs x {} vCPUs > {} cores",
-                self.vms_per_pm, self.base_vcpus, self.cores_per_pm
-            ));
+        for p in 0..self.pms {
+            let cores = self.pm_cores(p);
+            if self.vms_per_pm as u32 * self.base_vcpus > cores {
+                return Err(format!(
+                    "oversubscribed PM {p} ({} profile): {} VMs x {} vCPUs > {} cores",
+                    self.pm_profile.name(),
+                    self.vms_per_pm,
+                    self.base_vcpus,
+                    cores
+                ));
+            }
+            if self.pm_speed(p) <= 0.0 {
+                return Err(format!("PM {p} has non-positive speed"));
+            }
         }
         if self.replication == 0 || self.replication > self.nodes() {
             return Err(format!(
@@ -182,6 +306,58 @@ mod tests {
             vms_per_pm: 3,
             cores_per_pm: 4,
             base_vcpus: 2,
+            ..SimConfig::paper()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn profile_names_roundtrip() {
+        for p in PmProfile::ALL {
+            assert_eq!(PmProfile::from_name(p.name()), Some(p));
+        }
+        assert_eq!(PmProfile::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn split2x_doubles_even_pm_cores() {
+        let c = SimConfig {
+            pm_profile: PmProfile::Split2x,
+            ..SimConfig::paper()
+        };
+        c.validate().unwrap();
+        assert_eq!(c.pm_cores(0), 8);
+        assert_eq!(c.pm_cores(1), 4);
+        assert_eq!(c.pm_speed(0), 1.0);
+        // Slots don't grow with cores (VM layout fixed), so effective
+        // capacity matches the uniform cluster.
+        assert_eq!(c.effective_map_slots(), c.total_map_slots() as f64);
+    }
+
+    #[test]
+    fn long_tail_slows_every_fourth_pm() {
+        let c = SimConfig {
+            pm_profile: PmProfile::LongTail,
+            ..SimConfig::paper()
+        };
+        c.validate().unwrap();
+        assert_eq!(c.pm_speed(3), 0.5);
+        assert_eq!(c.pm_speed(0), 1.0);
+        // 20 PMs: 5 stragglers at half speed.
+        assert!((c.mean_pm_speed() - (15.0 + 2.5) / 20.0).abs() < 1e-12);
+        assert!(c.effective_map_slots() < c.total_map_slots() as f64);
+        assert!(c.effective_reduce_slots() < c.total_reduce_slots() as f64);
+    }
+
+    #[test]
+    fn heterogeneous_validation_checks_every_pm() {
+        // A PM profile cannot rescue an oversubscribed baseline: odd PMs
+        // under split-2x still have only `cores_per_pm` cores.
+        let c = SimConfig {
+            vms_per_pm: 3,
+            cores_per_pm: 4,
+            base_vcpus: 2,
+            pm_profile: PmProfile::Split2x,
             ..SimConfig::paper()
         };
         assert!(c.validate().is_err());

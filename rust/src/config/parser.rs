@@ -4,7 +4,7 @@
 //! `key = value` pairs; unknown keys are errors so typos don't silently
 //! fall back to defaults.
 
-use super::{ExecMode, SimConfig};
+use super::{ExecMode, PmProfile, SimConfig};
 
 /// Parse errors (hand-rolled Display/Error impls — `thiserror` is
 /// unavailable offline).
@@ -58,6 +58,11 @@ pub fn parse_config_str(text: &str) -> Result<SimConfig, ConfigError> {
         match k {
             "pms" => cfg.pms = num!(usize),
             "cores_per_pm" => cfg.cores_per_pm = num!(u32),
+            "pm_profile" => {
+                cfg.pm_profile = PmProfile::from_name(v).ok_or_else(|| {
+                    ConfigError::BadValue(lineno, k.to_string(), v.to_string())
+                })?
+            }
             "vms_per_pm" => cfg.vms_per_pm = num!(usize),
             "base_vcpus" => cfg.base_vcpus = num!(u32),
             "reduce_slots" => cfg.reduce_slots = num!(u32),
@@ -115,6 +120,16 @@ mod tests {
         assert_eq!(cfg.seed, 7);
         // untouched keys keep paper defaults
         assert_eq!(cfg.replication, 3);
+    }
+
+    #[test]
+    fn parses_pm_profile() {
+        let cfg = parse_config_str("pm_profile = \"long-tail\"").unwrap();
+        assert_eq!(cfg.pm_profile, PmProfile::LongTail);
+        assert!(matches!(
+            parse_config_str("pm_profile = \"warped\""),
+            Err(ConfigError::BadValue(1, _, _))
+        ));
     }
 
     #[test]

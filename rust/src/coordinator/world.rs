@@ -414,7 +414,9 @@ impl World {
         js.mark_map_launched(task, node, local, now);
         self.cluster.vm_mut(node).busy_map += 1;
         let block_mb = js.block_mb[task.0 as usize];
-        let secs = self.costs[job.idx()].map_secs(block_mb, local, &mut self.rng);
+        // Heterogeneity: a task on a speed-s machine takes nominal/s time.
+        let speed = self.cluster.vm(node).speed;
+        let secs = self.costs[job.idx()].map_secs(block_mb, local, &mut self.rng) / speed;
         self.queue.schedule_in(
             SimTime::from_secs_f64(secs),
             Event::MapDone { job, task, node },
@@ -438,12 +440,13 @@ impl World {
                 .sum()
         };
         let js = &self.jobs[job.idx()];
+        let speed = self.cluster.vm(node).speed;
         let secs = self.costs[job.idx()].reduce_secs(
             inter_mb,
             js.total_maps(),
             js.total_reduces(),
             &mut self.rng,
-        );
+        ) / speed;
         self.queue.schedule_in(
             SimTime::from_secs_f64(secs),
             Event::ReduceDone { job, task, node },

@@ -22,6 +22,10 @@ pub struct GroupStats {
     pub scheduler: String,
     pub mix: String,
     pub pms: usize,
+    /// PM heterogeneity profile label (`uniform`, `split-2x`, ...).
+    pub profile: String,
+    /// Arrival-pattern label (`steady`, `burst`, `steady-x2`, ...).
+    pub arrival: String,
     pub scale: f64,
     /// Seed replicates folded into this cell.
     pub seeds: usize,
@@ -48,23 +52,26 @@ pub struct GroupStats {
 }
 
 /// Fold `results` into per-cell statistics, sorted by (scheduler, mix,
-/// pms, scale).
+/// pms, profile, arrival, scale).
 pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
     // Key through the f64 bit pattern: scales come verbatim from the grid
     // axis, so identical cells have identical bits.
-    let mut cells: BTreeMap<(String, String, usize, u64), Vec<usize>> = BTreeMap::new();
+    type CellKey = (String, String, usize, String, String, u64);
+    let mut cells: BTreeMap<CellKey, Vec<usize>> = BTreeMap::new();
     for (i, r) in results.iter().enumerate() {
         let key = (
             r.scenario.scheduler.name().to_string(),
             r.scenario.mix.name().to_string(),
             r.scenario.pms,
+            r.scenario.profile.name().to_string(),
+            r.scenario.arrival.label(),
             r.scenario.scale.to_bits(),
         );
         cells.entry(key).or_default().push(i);
     }
 
     let mut out = Vec::with_capacity(cells.len());
-    for ((scheduler, mix, pms, scale_bits), members) in cells {
+    for ((scheduler, mix, pms, profile, arrival, scale_bits), members) in cells {
         let mut completion = Summary::new();
         let mut throughput = Summary::new();
         let mut locality = Summary::new();
@@ -90,6 +97,8 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             scheduler,
             mix,
             pms,
+            profile,
+            arrival,
             scale: f64::from_bits(scale_bits),
             seeds: members.len(),
             total_jobs,
@@ -138,6 +147,17 @@ pub fn sweep_json(
             "pm_counts",
             grid.pm_counts.iter().map(|&p| p as u64).collect::<Vec<_>>(),
         )
+        .set(
+            "profiles",
+            grid.profiles
+                .iter()
+                .map(|p| p.name().to_string())
+                .collect::<Vec<_>>(),
+        )
+        .set(
+            "arrivals",
+            grid.arrivals.iter().map(|a| a.label()).collect::<Vec<_>>(),
+        )
         .set("scales", grid.scales.clone())
         .set("seed_replicates", grid.seed_replicates)
         .set("jobs_per_scenario", grid.jobs_per_scenario)
@@ -157,6 +177,8 @@ pub fn sweep_json(
                 .set("scheduler", r.scenario.scheduler.name())
                 .set("mix", r.scenario.mix.name())
                 .set("pms", r.scenario.pms)
+                .set("profile", r.scenario.profile.name())
+                .set("arrival", r.scenario.arrival.label())
                 .set("scale", r.scenario.scale)
                 .set("replicate", r.scenario.replicate)
                 .set("stream_seed", format!("{:#018x}", r.scenario.stream_seed))
@@ -178,6 +200,8 @@ pub fn sweep_json(
                 .set("scheduler", g.scheduler.as_str())
                 .set("mix", g.mix.as_str())
                 .set("pms", g.pms)
+                .set("profile", g.profile.as_str())
+                .set("arrival", g.arrival.as_str())
                 .set("scale", g.scale)
                 .set("seeds", g.seeds)
                 .set("total_jobs", g.total_jobs)
@@ -204,7 +228,7 @@ pub fn sweep_json(
 /// Aggregates as CSV (one row per grid cell).
 pub fn aggregates_csv(groups: &[GroupStats]) -> String {
     let mut out = String::from(
-        "scheduler,mix,pms,scale,seeds,total_jobs,mean_completion_s,\
+        "scheduler,mix,pms,profile,arrival,scale,seeds,total_jobs,mean_completion_s,\
          std_completion_s,p50_completion_s,p99_completion_s,\
          mean_throughput_jph,std_throughput_jph,mean_locality_pct,\
          std_locality_pct,mean_miss_rate,mean_makespan_s,hotplugs\n",
@@ -212,10 +236,12 @@ pub fn aggregates_csv(groups: &[GroupStats]) -> String {
     for g in groups {
         let _ = writeln!(
             out,
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             g.scheduler,
             g.mix,
             g.pms,
+            g.profile,
+            g.arrival,
             g.scale,
             g.seeds,
             g.total_jobs,

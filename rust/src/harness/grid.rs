@@ -1,18 +1,22 @@
 //! Declarative scenario grids: the cartesian product of scheduler kind x
-//! job mix x PM count x input scale x seed replicate, expanded into a flat,
-//! deterministically ordered scenario list.
+//! job mix x PM count x PM heterogeneity profile x arrival pattern x
+//! input scale x seed replicate, expanded into a flat, deterministically
+//! ordered scenario list.
 //!
 //! Each scenario derives its RNG stream seed from `(grid_seed,
 //! scenario_index)` via [`crate::util::rng::derive_stream_seed`], so the
 //! full `(SimConfig, JobTrace, SchedulerKind)` input of a run is a pure
 //! function of the grid — independent of worker threads and execution
-//! order.
+//! order. Because the stream seed folds in the scenario *index*, editing
+//! an axis re-keys every scenario after the edit point; the resume
+//! journal (see [`super::journal`]) keys results by a content hash of the
+//! resolved scenario, so unchanged cells are still reused.
 
-use crate::config::SimConfig;
+use crate::config::{PmProfile, SimConfig};
 use crate::scheduler::SchedulerKind;
 use crate::util::rng::derive_stream_seed;
 use crate::util::Rng;
-use crate::workloads::trace::{ideal_completion_estimate, JobTrace};
+use crate::workloads::trace::{ideal_completion_estimate, Arrival, JobTrace};
 use crate::workloads::{JobSpec, JobType, ALL_JOB_TYPES};
 
 /// What kind of jobs one scenario submits.
@@ -55,6 +59,10 @@ pub struct ScenarioGrid {
     pub mixes: Vec<JobMix>,
     /// Axis: physical machine count.
     pub pm_counts: Vec<usize>,
+    /// Axis: per-PM capacity/speed heterogeneity profile.
+    pub profiles: Vec<PmProfile>,
+    /// Axis: arrival pattern (Poisson λ multiplier + steady/burst regime).
+    pub arrivals: Vec<Arrival>,
     /// Axis: MB of simulated input per paper-GB (100 = fast, 1024 = full).
     pub scales: Vec<f64>,
     /// Axis: seed replicate ids (only their count and position matter; the
@@ -80,6 +88,8 @@ impl ScenarioGrid {
             schedulers: SchedulerKind::ALL.to_vec(),
             mixes: ALL_JOB_TYPES.iter().copied().map(JobMix::Single).collect(),
             pm_counts: vec![20],
+            profiles: vec![PmProfile::Uniform],
+            arrivals: vec![Arrival::STEADY],
             scales: vec![100.0],
             seed_replicates: 10,
             jobs_per_scenario: 15,
@@ -97,6 +107,8 @@ impl ScenarioGrid {
             schedulers: vec![SchedulerKind::Fair, SchedulerKind::DeadlineVc],
             mixes: vec![JobMix::Mixed, JobMix::Single(JobType::WordCount)],
             pm_counts: vec![4],
+            profiles: vec![PmProfile::Uniform],
+            arrivals: vec![Arrival::STEADY],
             scales: vec![32.0],
             seed_replicates: 2,
             jobs_per_scenario: 5,
@@ -111,6 +123,8 @@ impl ScenarioGrid {
         self.schedulers.len()
             * self.mixes.len()
             * self.pm_counts.len()
+            * self.profiles.len()
+            * self.arrivals.len()
             * self.scales.len()
             * self.seed_replicates
     }
@@ -127,21 +141,27 @@ impl ScenarioGrid {
         for &scheduler in &self.schedulers {
             for &mix in &self.mixes {
                 for &pms in &self.pm_counts {
-                    for &scale in &self.scales {
-                        for replicate in 0..self.seed_replicates {
-                            let index = out.len();
-                            out.push(Scenario {
-                                index,
-                                scheduler,
-                                mix,
-                                pms,
-                                scale,
-                                replicate,
-                                stream_seed: derive_stream_seed(
-                                    self.grid_seed,
-                                    index as u64,
-                                ),
-                            });
+                    for &profile in &self.profiles {
+                        for &arrival in &self.arrivals {
+                            for &scale in &self.scales {
+                                for replicate in 0..self.seed_replicates {
+                                    let index = out.len();
+                                    out.push(Scenario {
+                                        index,
+                                        scheduler,
+                                        mix,
+                                        pms,
+                                        profile,
+                                        arrival,
+                                        scale,
+                                        replicate,
+                                        stream_seed: derive_stream_seed(
+                                            self.grid_seed,
+                                            index as u64,
+                                        ),
+                                    });
+                                }
+                            }
                         }
                     }
                 }
@@ -159,6 +179,8 @@ pub struct Scenario {
     pub scheduler: SchedulerKind,
     pub mix: JobMix,
     pub pms: usize,
+    pub profile: PmProfile,
+    pub arrival: Arrival,
     pub scale: f64,
     /// Seed replicate number within the cell (for grouping/aggregation).
     pub replicate: usize,
@@ -168,37 +190,44 @@ pub struct Scenario {
 
 impl Scenario {
     /// Cluster configuration for this scenario: the paper testbed with the
-    /// PM-count axis applied and the derived stream seed installed (the
-    /// seed drives HDFS placement and task jitter inside the run).
+    /// PM-count and heterogeneity axes applied and the derived stream seed
+    /// installed (the seed drives HDFS placement and task jitter inside
+    /// the run).
     pub fn sim_config(&self) -> SimConfig {
         let mut cfg = SimConfig::paper();
         cfg.pms = self.pms;
+        cfg.pm_profile = self.profile;
         cfg.seed = self.stream_seed;
         cfg
     }
 
     /// The job trace this scenario submits — a pure function of the
-    /// scenario (grid parameters + derived stream seed).
+    /// scenario (grid parameters + derived stream seed). Submission times
+    /// come from the scenario's [`Arrival`] axis point.
     pub fn job_trace(&self, grid: &ScenarioGrid, cfg: &SimConfig) -> JobTrace {
         let n = grid.jobs_per_scenario;
         let (flo, fhi) = grid.deadline_factor;
         match self.mix {
-            JobMix::Mixed => {
-                JobTrace::poisson(cfg, n, grid.mean_gap_s, flo..fhi, self.stream_seed)
-            }
+            JobMix::Mixed => JobTrace::poisson_arrivals(
+                cfg,
+                n,
+                grid.mean_gap_s,
+                self.arrival,
+                flo..fhi,
+                self.stream_seed,
+            ),
             JobMix::Single(jt) => {
                 let mut rng = Rng::new(self.stream_seed ^ 0x51_41_6C);
+                let times = self.arrival.times(n, grid.mean_gap_s, &mut rng);
                 let sizes_gb = [2.0, 4.0, 6.0, 8.0, 10.0];
                 let mut jobs = Vec::with_capacity(n);
-                let mut t = 0.0f64;
-                for i in 0..n {
+                for (i, &t) in times.iter().enumerate() {
                     let gb = sizes_gb[i % sizes_gb.len()];
                     let mut spec = JobSpec::new(jt, gb * self.scale).at(t);
                     let est = ideal_completion_estimate(cfg, &spec);
                     let factor = rng.range_f64(flo, fhi);
                     spec = spec.with_deadline(est * factor);
                     jobs.push(spec);
-                    t += rng.exp(grid.mean_gap_s);
                 }
                 JobTrace::new(jobs)
             }
@@ -218,6 +247,33 @@ mod tests {
         assert!(g.seed_replicates >= 10);
         assert_eq!(g.len(), 250);
         assert_eq!(g.scenarios().len(), 250);
+    }
+
+    #[test]
+    fn profile_and_arrival_axes_multiply_the_grid() {
+        let mut g = ScenarioGrid::quick();
+        g.profiles = vec![PmProfile::Uniform, PmProfile::Split2x, PmProfile::LongTail];
+        g.arrivals = vec![Arrival::STEADY, Arrival::burst(1.0)];
+        assert_eq!(g.len(), ScenarioGrid::quick().len() * 6);
+        let scenarios = g.scenarios();
+        assert_eq!(scenarios.len(), g.len());
+        // Every (profile, arrival) combination appears, and each
+        // scenario's config/trace reflects its cell.
+        for p in &g.profiles {
+            for a in &g.arrivals {
+                assert!(scenarios
+                    .iter()
+                    .any(|s| s.profile == *p && s.arrival == *a));
+            }
+        }
+        let sc = scenarios
+            .iter()
+            .find(|s| s.profile == PmProfile::LongTail)
+            .unwrap();
+        let cfg = sc.sim_config();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.pm_profile, PmProfile::LongTail);
+        assert!(cfg.effective_map_slots() < cfg.total_map_slots() as f64);
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! Append-only result journal: the persistence layer behind resumable
+//! sweeps.
+//!
+//! Every completed scenario is appended as one line keyed by a **content
+//! hash of the resolved scenario** (axes + derived stream seed + the trace
+//! parameters that shape the run) — not by grid position. An interrupted
+//! or *extended* grid therefore re-runs only the cells whose inputs
+//! actually changed: cells whose hash is already journaled are loaded
+//! back instead of re-simulated.
+//!
+//! The serialized report round-trips **exactly**: Rust's `{}` formatting
+//! of `f64` emits the shortest string that parses back to the identical
+//! bit pattern, so aggregates computed from resumed results are
+//! byte-identical to an uninterrupted run (`tests/sweep_resume.rs` holds
+//! this in place). Torn trailing lines from a killed process are ignored
+//! on load.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::mapreduce::JobId;
+use crate::metrics::{JobRecord, RunMetrics};
+use crate::sim::SimTime;
+use crate::workloads::JobType;
+
+use super::grid::{Scenario, ScenarioGrid};
+
+/// Journal format version tag; bump on any line-format change so stale
+/// journals are skipped instead of mis-parsed.
+const VERSION: &str = "v1";
+
+/// FNV-1a 64-bit over a byte string (stable across platforms/runs).
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Content hash identifying one scenario's full simulation input. Folds
+/// in every axis value, the derived stream seed, the grid's trace
+/// parameters — everything `run_scenario` depends on — plus the crate
+/// version, so journals written by an older simulator are invalidated on
+/// release bumps rather than silently replayed. (Within one version,
+/// behavior-changing source edits still require `--fresh`; see the
+/// README's resumable-sweeps section.)
+pub fn scenario_key(grid: &ScenarioGrid, sc: &Scenario) -> u64 {
+    let canon = format!(
+        "{}|{}|{}|{}|{:016x}|{}|{}|{}|{}|{:016x}|{:016x}|{:016x}|{:016x}",
+        env!("CARGO_PKG_VERSION"),
+        sc.scheduler.name(),
+        sc.mix.name(),
+        sc.pms,
+        sc.scale.to_bits(),
+        sc.profile.name(),
+        sc.arrival.label(),
+        sc.replicate,
+        grid.jobs_per_scenario,
+        sc.stream_seed,
+        grid.mean_gap_s.to_bits(),
+        grid.deadline_factor.0.to_bits(),
+        grid.deadline_factor.1.to_bits(),
+    );
+    fnv64(canon.as_bytes())
+}
+
+/// Handle on a journal file. The file need not exist until the first
+/// append; loads of a missing file return an empty map.
+#[derive(Clone, Debug)]
+pub struct Journal {
+    path: PathBuf,
+}
+
+impl Journal {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into() }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Load every parseable entry. Later duplicates win; malformed lines
+    /// (e.g. a torn final line from a killed sweep) are skipped.
+    pub fn load(&self) -> BTreeMap<u64, RunMetrics> {
+        let mut out = BTreeMap::new();
+        let Ok(text) = std::fs::read_to_string(&self.path) else {
+            return out;
+        };
+        for line in text.lines() {
+            if let Some((key, report)) = parse_line(line) {
+                out.insert(key, report);
+            }
+        }
+        out
+    }
+
+    /// Append one completed scenario. The line is written with a single
+    /// `write_all` so concurrent appenders (worker threads serialized by
+    /// the runner) never interleave partial lines.
+    pub fn append(&self, key: u64, report: &RunMetrics) -> std::io::Result<()> {
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)?;
+        f.write_all(render_line(key, report).as_bytes())
+    }
+
+    /// Delete the journal file (the `--fresh` path). Missing file is ok.
+    pub fn clear(&self) -> std::io::Result<()> {
+        match std::fs::remove_file(&self.path) {
+            Err(e) if e.kind() != std::io::ErrorKind::NotFound => Err(e),
+            _ => Ok(()),
+        }
+    }
+}
+
+fn render_line(key: u64, r: &RunMetrics) -> String {
+    let mut jobs = String::new();
+    for (i, j) in r.jobs.iter().enumerate() {
+        if i > 0 {
+            jobs.push(';');
+        }
+        let _ = write!(
+            jobs,
+            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            j.id.0,
+            j.job_type.name(),
+            j.input_mb,
+            j.submitted.as_millis(),
+            j.finished.as_millis(),
+            j.completion_s,
+            j.map_phase_s,
+            opt_f64(j.deadline_s),
+            opt_bool(j.met_deadline),
+            j.local_maps,
+            j.nonlocal_maps,
+            j.maps,
+            j.reduces
+        );
+    }
+    // The explicit job count plus the terminal "ok" sentinel reject lines
+    // truncated by a mid-write kill even when the cut lands exactly on a
+    // record boundary (every field before the sentinel would still parse).
+    format!(
+        "{VERSION}\t{key:016x}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{jobs}\tok\n",
+        r.scheduler,
+        r.makespan_s,
+        r.hotplugs,
+        r.heartbeats,
+        r.events,
+        r.predictor_calls,
+        r.jobs.len()
+    )
+}
+
+fn opt_f64(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x}"),
+        None => "-".to_string(),
+    }
+}
+
+fn opt_bool(v: Option<bool>) -> String {
+    match v {
+        Some(true) => "1".to_string(),
+        Some(false) => "0".to_string(),
+        None => "-".to_string(),
+    }
+}
+
+fn parse_line(line: &str) -> Option<(u64, RunMetrics)> {
+    let mut parts = line.split('\t');
+    if parts.next()? != VERSION {
+        return None;
+    }
+    let key = u64::from_str_radix(parts.next()?, 16).ok()?;
+    let scheduler = parts.next()?.to_string();
+    let makespan_s: f64 = parts.next()?.parse().ok()?;
+    let hotplugs: u64 = parts.next()?.parse().ok()?;
+    let heartbeats: u64 = parts.next()?.parse().ok()?;
+    let events: u64 = parts.next()?.parse().ok()?;
+    let predictor_calls: u64 = parts.next()?.parse().ok()?;
+    let njobs: usize = parts.next()?.parse().ok()?;
+    let jobs_field = parts.next()?;
+    if parts.next()? != "ok" || parts.next().is_some() {
+        return None; // truncated mid-write or trailing garbage
+    }
+    let mut jobs = Vec::new();
+    if !jobs_field.is_empty() {
+        for rec in jobs_field.split(';') {
+            jobs.push(parse_job(rec)?);
+        }
+    }
+    if jobs.len() != njobs {
+        return None; // torn exactly on a record boundary
+    }
+    Some((
+        key,
+        RunMetrics {
+            scheduler,
+            jobs,
+            makespan_s,
+            hotplugs,
+            heartbeats,
+            events,
+            predictor_calls,
+            // Host wall-clock is deliberately not journaled (artifacts
+            // exclude it; see harness::agg docs).
+            wall_s: 0.0,
+        },
+    ))
+}
+
+fn parse_job(rec: &str) -> Option<JobRecord> {
+    let f: Vec<&str> = rec.split(',').collect();
+    if f.len() != 13 {
+        return None;
+    }
+    Some(JobRecord {
+        id: JobId(f[0].parse().ok()?),
+        job_type: JobType::from_name(f[1])?,
+        input_mb: f[2].parse().ok()?,
+        submitted: SimTime::from_millis(f[3].parse().ok()?),
+        finished: SimTime::from_millis(f[4].parse().ok()?),
+        completion_s: f[5].parse().ok()?,
+        map_phase_s: f[6].parse().ok()?,
+        deadline_s: parse_opt_f64(f[7])?,
+        met_deadline: parse_opt_bool(f[8])?,
+        local_maps: f[9].parse().ok()?,
+        nonlocal_maps: f[10].parse().ok()?,
+        maps: f[11].parse().ok()?,
+        reduces: f[12].parse().ok()?,
+    })
+}
+
+fn parse_opt_f64(s: &str) -> Option<Option<f64>> {
+    if s == "-" {
+        Some(None)
+    } else {
+        s.parse().ok().map(Some)
+    }
+}
+
+fn parse_opt_bool(s: &str) -> Option<Option<bool>> {
+    match s {
+        "-" => Some(None),
+        "1" => Some(Some(true)),
+        "0" => Some(Some(false)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::{run_scenario, ScenarioGrid};
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("vcsched-journal-{}-{name}", std::process::id()));
+        p
+    }
+
+    fn one_result() -> (ScenarioGrid, u64, RunMetrics) {
+        let mut g = ScenarioGrid::quick();
+        g.jobs_per_scenario = 3;
+        let sc = g.scenarios().remove(0);
+        let key = scenario_key(&g, &sc);
+        let r = run_scenario(&g, &sc);
+        (g, key, r.report)
+    }
+
+    #[test]
+    fn report_roundtrips_exactly() {
+        let (_g, key, report) = one_result();
+        let line = render_line(key, &report);
+        let (k2, parsed) = parse_line(line.trim_end()).expect("parse back");
+        assert_eq!(k2, key);
+        assert_eq!(parsed.scheduler, report.scheduler);
+        assert_eq!(parsed.makespan_s.to_bits(), report.makespan_s.to_bits());
+        assert_eq!(parsed.events, report.events);
+        assert_eq!(parsed.jobs.len(), report.jobs.len());
+        for (a, b) in parsed.jobs.iter().zip(&report.jobs) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.job_type, b.job_type);
+            assert_eq!(a.completion_s.to_bits(), b.completion_s.to_bits());
+            assert_eq!(a.map_phase_s.to_bits(), b.map_phase_s.to_bits());
+            assert_eq!(a.deadline_s.map(f64::to_bits), b.deadline_s.map(f64::to_bits));
+            assert_eq!(a.met_deadline, b.met_deadline);
+            assert_eq!(a.submitted, b.submitted);
+            assert_eq!(a.finished, b.finished);
+            assert_eq!(
+                (a.local_maps, a.nonlocal_maps, a.maps, a.reduces),
+                (b.local_maps, b.nonlocal_maps, b.maps, b.reduces)
+            );
+        }
+    }
+
+    #[test]
+    fn load_skips_torn_and_foreign_lines() {
+        let (_g, key, report) = one_result();
+        let path = tmp("torn");
+        let j = Journal::new(&path);
+        let _ = j.clear();
+        j.append(key, &report).unwrap();
+        // Simulate a kill mid-write: torn lines and noise. The nastiest
+        // tear lands exactly on a job-record boundary — every field still
+        // parses, so only the count/sentinel checks can reject it.
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"v1\tdeadbeef\tfair\t12.5").unwrap(); // truncated early
+            f.write_all(b"\nnot a journal line\n").unwrap();
+            let full = render_line(0xfeed_f00d, &report);
+            let boundary = full.rfind(';').expect("multi-job line");
+            f.write_all(full[..boundary].as_bytes()).unwrap(); // torn on ';'
+            f.write_all(b"\n").unwrap();
+        }
+        let loaded = j.load();
+        assert_eq!(loaded.len(), 1, "only the intact line survives");
+        assert!(loaded.contains_key(&key));
+        j.clear().unwrap();
+        assert!(j.load().is_empty());
+    }
+
+    #[test]
+    fn key_depends_on_every_axis() {
+        let mut g = ScenarioGrid::quick();
+        g.jobs_per_scenario = 3;
+        let scenarios = g.scenarios();
+        let keys: std::collections::HashSet<u64> =
+            scenarios.iter().map(|sc| scenario_key(&g, sc)).collect();
+        assert_eq!(keys.len(), scenarios.len(), "keys must be distinct");
+        // Changing a grid trace parameter re-keys everything.
+        let mut g2 = g.clone();
+        g2.mean_gap_s = 9.0;
+        for sc in &scenarios {
+            assert_ne!(scenario_key(&g, sc), scenario_key(&g2, sc));
+        }
+        // ...but the key is position-independent content: the same
+        // resolved scenario hashes identically regardless of grid object.
+        assert_eq!(
+            scenario_key(&g, &scenarios[1]),
+            scenario_key(&g.clone(), &scenarios[1])
+        );
+    }
+}

@@ -1,30 +1,89 @@
 //! Parallel scenario-sweep harness: declarative experiment grids over the
 //! simulator, executed on a std-thread pool with bitwise-reproducible
-//! results and aggregated into JSON/CSV artifacts.
+//! results, resumable through an append-only journal, and aggregated into
+//! JSON/CSV artifacts.
 //!
 //! The paper's headline comparison (§5) is one cell of a much larger
-//! design space — scheduler x workload mix x cluster size x input scale x
-//! seed. This module turns the repo from a one-shot figure reproducer into
-//! a grid-evaluation engine:
+//! design space — scheduler x workload mix x cluster size x **PM
+//! heterogeneity profile** x **arrival pattern** x input scale x seed.
+//! This module turns the repo from a one-shot figure reproducer into a
+//! grid-evaluation engine:
 //!
 //! * [`grid`] — [`ScenarioGrid`] declares the axes; expansion assigns each
 //!   scenario a dense index and derives its RNG stream from
 //!   `(grid_seed, scenario_index)`;
+//! * [`preset`] — named grids (`fig4-throughput`, `fig5-locality`,
+//!   `fig6-deadline-miss`) that pin the axes to reproduce each paper
+//!   figure and emit a baseline-vs-candidate comparison table tracking
+//!   the paper's 12% throughput-gain headline;
 //! * [`runner`] — [`run_sweep`] executes scenarios as pure
 //!   `(SimConfig, JobTrace, SchedulerKind) -> Report` functions across N
-//!   worker threads, results ordered by scenario index;
+//!   worker threads; [`run_sweep_resumable`] consults the journal first
+//!   and re-runs only missing cells;
+//! * [`journal`] — append-only result log keyed by a content hash of the
+//!   resolved scenario; reports round-trip exactly, so resumed aggregates
+//!   are byte-identical to an uninterrupted run;
 //! * [`agg`] — [`aggregate`] folds seed replicates into per-cell stats
 //!   (mean/std, pooled p50/p99, locality, miss rate, throughput) and
 //!   renders artifacts that are byte-identical at any thread count.
 //!
 //! Driven by `vcsched sweep` (see `main.rs`) and the
 //! `benches/sweep_scaling.rs` smoke bench; the determinism contract is
-//! enforced by `tests/sweep_determinism.rs`.
+//! enforced by `tests/sweep_determinism.rs` and the resume contract by
+//! `tests/sweep_resume.rs`.
+//!
+//! # Examples
+//!
+//! Build a paper-figure preset and inspect its pinned grid:
+//!
+//! ```
+//! use vcsched::harness::{preset::preset, ScenarioGrid};
+//!
+//! let (grid, spec) = preset("fig4-throughput").unwrap();
+//! // 2 schedulers x 1 mix x 3 heterogeneity profiles x 5 seed
+//! // replicates on the paper's 20-PM testbed.
+//! assert_eq!(grid.len(), 30);
+//! assert_eq!(grid.pm_counts, vec![20]);
+//! assert_eq!(spec.baseline.name(), "fair");
+//! assert_eq!(spec.candidate.name(), "deadline_vc");
+//!
+//! // Custom grids compose the same axes directly:
+//! use vcsched::config::PmProfile;
+//! use vcsched::workloads::trace::Arrival;
+//! let mut g = ScenarioGrid::quick();
+//! g.profiles = vec![PmProfile::Uniform, PmProfile::LongTail];
+//! g.arrivals = vec![Arrival::STEADY, Arrival::burst(1.0)];
+//! assert_eq!(g.len(), ScenarioGrid::quick().len() * 4);
+//! ```
+//!
+//! Run a tiny sweep and aggregate it (deterministic at any thread count):
+//!
+//! ```
+//! use vcsched::harness::{aggregate, run_sweep, ScenarioGrid};
+//!
+//! let mut g = ScenarioGrid::quick();
+//! g.jobs_per_scenario = 2;
+//! g.seed_replicates = 1;
+//! let results = run_sweep(&g, 2);
+//! assert_eq!(results.len(), g.len());
+//! let groups = aggregate(&results);
+//! assert!(groups.iter().all(|c| c.total_jobs == 2));
+//! ```
 
 pub mod agg;
 pub mod grid;
+pub mod journal;
+pub mod preset;
 pub mod runner;
 
 pub use agg::{aggregate, aggregates_csv, sweep_json, GroupStats};
 pub use grid::{JobMix, Scenario, ScenarioGrid};
-pub use runner::{run_scenario, run_scenarios, run_sweep, ScenarioResult};
+pub use journal::{scenario_key, Journal};
+pub use preset::{
+    compare_cells, comparison_json, headline_gain, preset as figure_preset, ComparisonRow,
+    HeadlineMetric, Preset, PRESET_NAMES,
+};
+pub use runner::{
+    run_scenario, run_scenarios, run_scenarios_with, run_sweep, run_sweep_resumable,
+    ScenarioResult,
+};

@@ -1,0 +1,338 @@
+//! Named grid presets that pin the sweep axes to reproduce each paper
+//! figure, plus the baseline-vs-candidate comparison tables they emit.
+//!
+//! The paper's evaluation (§5) compares the proposed deadline/VC
+//! scheduler against Fair on a 20-machine virtual cluster. Each preset is
+//! one figure's slice of the full design space, extended along the axes
+//! the paper could not vary on real hardware (PM heterogeneity, arrival
+//! regime):
+//!
+//! | preset               | headline metric      | axes swept                          |
+//! |----------------------|----------------------|-------------------------------------|
+//! | `fig4-throughput`    | jobs/hour            | profile ∈ {uniform, split-2x, long-tail} |
+//! | `fig5-locality`      | map locality %       | profile ∈ {uniform, long-tail} × arrival ∈ {steady, burst} |
+//! | `fig6-deadline-miss` | deadline-miss rate   | profile ∈ {uniform, split-2x} × arrival ∈ {steady, steady-x2, burst} |
+//!
+//! Every preset pins `baseline = fair` and `candidate = deadline_vc`, so
+//! the comparison table tracks the paper's 12% throughput-gain headline
+//! as a first-class metric.
+
+use crate::config::PmProfile;
+use crate::scheduler::SchedulerKind;
+use crate::workloads::trace::Arrival;
+
+use super::agg::GroupStats;
+use super::grid::{JobMix, ScenarioGrid};
+
+/// The per-cell metric a preset's comparison table is about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadlineMetric {
+    /// Mean throughput in jobs per simulated hour (higher is better).
+    ThroughputJph,
+    /// Mean map locality percentage (higher is better).
+    LocalityPct,
+    /// Mean deadline-miss rate in percent (lower is better).
+    MissRatePct,
+}
+
+impl HeadlineMetric {
+    pub fn name(self) -> &'static str {
+        match self {
+            HeadlineMetric::ThroughputJph => "throughput_jph",
+            HeadlineMetric::LocalityPct => "locality_pct",
+            HeadlineMetric::MissRatePct => "miss_rate_pct",
+        }
+    }
+
+    /// Extract the metric from one aggregated grid cell.
+    pub fn value(self, g: &GroupStats) -> f64 {
+        match self {
+            HeadlineMetric::ThroughputJph => g.mean_throughput_jph,
+            HeadlineMetric::LocalityPct => g.mean_locality_pct,
+            HeadlineMetric::MissRatePct => g.mean_miss_rate * 100.0,
+        }
+    }
+
+    /// Candidate-vs-baseline gain. For ratio metrics (throughput) this is
+    /// the relative gain in percent; for percentage metrics (locality,
+    /// miss rate) it is the difference in percentage points, signed so
+    /// positive always means "candidate better".
+    pub fn gain(self, baseline: f64, candidate: f64) -> f64 {
+        match self {
+            HeadlineMetric::ThroughputJph => {
+                if baseline <= 0.0 {
+                    0.0
+                } else {
+                    (candidate / baseline - 1.0) * 100.0
+                }
+            }
+            HeadlineMetric::LocalityPct => candidate - baseline,
+            HeadlineMetric::MissRatePct => baseline - candidate,
+        }
+    }
+
+    /// Unit suffix for the gain column (`%` relative vs `pp` points).
+    pub fn gain_unit(self) -> &'static str {
+        match self {
+            HeadlineMetric::ThroughputJph => "%",
+            HeadlineMetric::LocalityPct | HeadlineMetric::MissRatePct => "pp",
+        }
+    }
+}
+
+/// A named paper-figure preset: the pinned grid plus what its comparison
+/// table reports.
+#[derive(Clone, Debug)]
+pub struct Preset {
+    pub name: &'static str,
+    /// One-line description printed above the comparison table.
+    pub describes: &'static str,
+    pub metric: HeadlineMetric,
+    pub baseline: SchedulerKind,
+    pub candidate: SchedulerKind,
+    /// The paper's headline number for this comparison, if it states one
+    /// (tracked in the artifact so drift is visible PR-over-PR).
+    pub paper_gain: Option<f64>,
+}
+
+/// Every preset name, for help text and error messages.
+pub const PRESET_NAMES: [&str; 3] =
+    ["fig4-throughput", "fig5-locality", "fig6-deadline-miss"];
+
+/// Resolve a preset by name into its pinned grid and comparison spec.
+pub fn preset(name: &str) -> Option<(ScenarioGrid, Preset)> {
+    let base = |n: &str| ScenarioGrid {
+        name: n.to_string(),
+        schedulers: vec![SchedulerKind::Fair, SchedulerKind::DeadlineVc],
+        mixes: vec![JobMix::Mixed],
+        pm_counts: vec![20],
+        profiles: vec![PmProfile::Uniform],
+        arrivals: vec![Arrival::STEADY],
+        scales: vec![100.0],
+        seed_replicates: 5,
+        jobs_per_scenario: 15,
+        mean_gap_s: 5.0,
+        deadline_factor: (1.6, 3.0),
+        grid_seed: 42,
+    };
+    match name {
+        "fig4-throughput" => {
+            let mut g = base(name);
+            g.profiles = vec![PmProfile::Uniform, PmProfile::Split2x, PmProfile::LongTail];
+            Some((
+                g,
+                Preset {
+                    name: "fig4-throughput",
+                    describes: "deadline_vc vs fair job throughput across PM \
+                                heterogeneity profiles (paper §5 headline)",
+                    metric: HeadlineMetric::ThroughputJph,
+                    baseline: SchedulerKind::Fair,
+                    candidate: SchedulerKind::DeadlineVc,
+                    paper_gain: Some(12.0),
+                },
+            ))
+        }
+        "fig5-locality" => {
+            let mut g = base(name);
+            g.schedulers = vec![
+                SchedulerKind::Fair,
+                SchedulerKind::Delay,
+                SchedulerKind::DeadlineVc,
+            ];
+            g.profiles = vec![PmProfile::Uniform, PmProfile::LongTail];
+            g.arrivals = vec![Arrival::STEADY, Arrival::burst(1.0)];
+            Some((
+                g,
+                Preset {
+                    name: "fig5-locality",
+                    describes: "map locality: reconfiguration-based local \
+                                launches vs fair/delay baselines",
+                    metric: HeadlineMetric::LocalityPct,
+                    baseline: SchedulerKind::Fair,
+                    candidate: SchedulerKind::DeadlineVc,
+                    paper_gain: None,
+                },
+            ))
+        }
+        "fig6-deadline-miss" => {
+            let mut g = base(name);
+            g.schedulers = vec![
+                SchedulerKind::Fair,
+                SchedulerKind::Edf,
+                SchedulerKind::DeadlineVc,
+            ];
+            g.profiles = vec![PmProfile::Uniform, PmProfile::Split2x];
+            g.arrivals = vec![Arrival::STEADY, Arrival::steady(2.0), Arrival::burst(1.0)];
+            Some((
+                g,
+                Preset {
+                    name: "fig6-deadline-miss",
+                    describes: "deadline-miss rate under load (λ multiplier + \
+                                bursts) and heterogeneity",
+                    metric: HeadlineMetric::MissRatePct,
+                    baseline: SchedulerKind::Fair,
+                    candidate: SchedulerKind::DeadlineVc,
+                    paper_gain: None,
+                },
+            ))
+        }
+        _ => None,
+    }
+}
+
+/// One row of a preset's comparison table: a non-scheduler grid cell with
+/// the baseline and candidate metric values side by side.
+#[derive(Clone, Debug)]
+pub struct ComparisonRow {
+    pub mix: String,
+    pub pms: usize,
+    pub profile: String,
+    pub arrival: String,
+    pub scale: f64,
+    pub baseline: f64,
+    pub candidate: f64,
+    pub gain: f64,
+}
+
+/// Pair up baseline/candidate cells of the aggregated sweep and compute
+/// the per-cell gain. Cells missing either scheduler are skipped (e.g.
+/// when `--sched` collapsed the axis).
+pub fn compare_cells(groups: &[GroupStats], preset: &Preset) -> Vec<ComparisonRow> {
+    use std::collections::BTreeMap;
+    // Key: everything but the scheduler axis.
+    type CellKey = (String, usize, String, String, u64);
+    let mut cells: BTreeMap<CellKey, (Option<f64>, Option<f64>)> = BTreeMap::new();
+    for g in groups {
+        let key = (
+            g.mix.clone(),
+            g.pms,
+            g.profile.clone(),
+            g.arrival.clone(),
+            g.scale.to_bits(),
+        );
+        let entry = cells.entry(key).or_insert((None, None));
+        if g.scheduler == preset.baseline.name() {
+            entry.0 = Some(preset.metric.value(g));
+        } else if g.scheduler == preset.candidate.name() {
+            entry.1 = Some(preset.metric.value(g));
+        }
+    }
+    cells
+        .into_iter()
+        .filter_map(|((mix, pms, profile, arrival, scale_bits), (b, c))| {
+            let (baseline, candidate) = (b?, c?);
+            Some(ComparisonRow {
+                mix,
+                pms,
+                profile,
+                arrival,
+                scale: f64::from_bits(scale_bits),
+                baseline,
+                candidate,
+                gain: preset.metric.gain(baseline, candidate),
+            })
+        })
+        .collect()
+}
+
+/// Mean gain across all comparison cells — the preset's tracked headline
+/// (fig4: the paper's ~12% throughput number).
+pub fn headline_gain(rows: &[ComparisonRow]) -> f64 {
+    if rows.is_empty() {
+        return 0.0;
+    }
+    rows.iter().map(|r| r.gain).sum::<f64>() / rows.len() as f64
+}
+
+/// The `comparison` section of a preset sweep's JSON artifact: per-cell
+/// rows plus the tracked headline (and the paper's number when stated).
+pub fn comparison_json(preset: &Preset, rows: &[ComparisonRow]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut arr = Json::arr();
+    for r in rows {
+        arr = arr.push(
+            Json::obj()
+                .set("mix", r.mix.as_str())
+                .set("pms", r.pms)
+                .set("profile", r.profile.as_str())
+                .set("arrival", r.arrival.as_str())
+                .set("scale", r.scale)
+                .set(preset.baseline.name(), r.baseline)
+                .set(preset.candidate.name(), r.candidate)
+                .set("gain", r.gain),
+        );
+    }
+    let mut obj = Json::obj()
+        .set("preset", preset.name)
+        .set("metric", preset.metric.name())
+        .set("baseline", preset.baseline.name())
+        .set("candidate", preset.candidate.name())
+        .set("gain_unit", preset.metric.gain_unit())
+        .set("headline_gain", headline_gain(rows));
+    if let Some(p) = preset.paper_gain {
+        obj = obj.set("paper_gain", p);
+    }
+    obj.set("cells", arr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_preset_resolves_and_validates() {
+        for name in PRESET_NAMES {
+            let (grid, p) = preset(name).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(grid.name, name);
+            assert_eq!(p.name, name);
+            assert!(grid.len() > 0);
+            assert!(grid.schedulers.contains(&p.baseline));
+            assert!(grid.schedulers.contains(&p.candidate));
+            for sc in grid.scenarios() {
+                sc.sim_config().validate().unwrap();
+            }
+        }
+        assert!(preset("fig9-nope").is_none());
+    }
+
+    #[test]
+    fn fig4_sweeps_heterogeneity_on_the_paper_testbed() {
+        let (grid, p) = preset("fig4-throughput").unwrap();
+        assert_eq!(grid.pm_counts, vec![20]);
+        assert_eq!(grid.profiles.len(), 3);
+        assert_eq!(p.metric, HeadlineMetric::ThroughputJph);
+        assert_eq!(p.paper_gain, Some(12.0));
+        // 2 schedulers x 1 mix x 3 profiles x 5 seeds.
+        assert_eq!(grid.len(), 30);
+    }
+
+    #[test]
+    fn gain_sign_means_candidate_better() {
+        assert!(HeadlineMetric::ThroughputJph.gain(10.0, 11.2) > 0.0);
+        assert!(HeadlineMetric::LocalityPct.gain(80.0, 90.0) > 0.0);
+        // Lower miss rate is better, so a drop is a positive gain.
+        assert!(HeadlineMetric::MissRatePct.gain(30.0, 10.0) > 0.0);
+        assert!(HeadlineMetric::MissRatePct.gain(10.0, 30.0) < 0.0);
+    }
+
+    #[test]
+    fn compare_pairs_cells_and_headlines() {
+        let (grid, p) = preset("fig4-throughput").unwrap();
+        let mut quick = grid.clone();
+        quick.seed_replicates = 1;
+        quick.jobs_per_scenario = 3;
+        quick.scales = vec![8.0];
+        quick.profiles.truncate(2);
+        let results = crate::harness::run_sweep(&quick, 2);
+        let groups = crate::harness::aggregate(&results);
+        let rows = compare_cells(&groups, &p);
+        // One row per (mix, pms, profile, arrival, scale) cell.
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.baseline > 0.0);
+            assert!(r.candidate > 0.0);
+        }
+        let h = headline_gain(&rows);
+        assert!(h.is_finite());
+    }
+}

@@ -22,6 +22,7 @@ use crate::coordinator;
 use crate::metrics::RunMetrics;
 
 use super::grid::{Scenario, ScenarioGrid};
+use super::journal::{scenario_key, Journal};
 
 /// One scenario's outcome: the resolved cell plus the full run report.
 #[derive(Clone, Debug)]
@@ -58,13 +59,37 @@ pub fn run_scenarios(
     scenarios: &[Scenario],
     threads: usize,
 ) -> Vec<ScenarioResult> {
+    run_scenarios_with(grid, scenarios, threads, |_| {})
+}
+
+/// [`run_scenarios`] with a completion hook: `on_done` fires once per
+/// scenario *as it finishes* (in completion order, serialized across
+/// workers), which is what lets the resumable runner journal progress a
+/// mid-sweep kill cannot lose. The returned vector is still ordered by
+/// position in `scenarios`.
+pub fn run_scenarios_with(
+    grid: &ScenarioGrid,
+    scenarios: &[Scenario],
+    threads: usize,
+    on_done: impl Fn(&ScenarioResult) + Sync,
+) -> Vec<ScenarioResult> {
     let n = scenarios.len();
     let threads = threads.clamp(1, n.max(1));
     if threads == 1 {
-        return scenarios.iter().map(|sc| run_scenario(grid, sc)).collect();
+        return scenarios
+            .iter()
+            .map(|sc| {
+                let result = run_scenario(grid, sc);
+                on_done(&result);
+                result
+            })
+            .collect();
     }
 
     let cursor = AtomicUsize::new(0);
+    // One lock serializes the hook (journal appends must not interleave);
+    // results land in per-slot cells so ordering stays by index.
+    let hook_lock = Mutex::new(());
     let slots: Vec<Mutex<Option<ScenarioResult>>> =
         (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
@@ -75,6 +100,10 @@ pub fn run_scenarios(
                     break;
                 }
                 let result = run_scenario(grid, &scenarios[i]);
+                {
+                    let _serialized = hook_lock.lock().unwrap();
+                    on_done(&result);
+                }
                 *slots[i].lock().unwrap() = Some(result);
             });
         }
@@ -88,6 +117,58 @@ pub fn run_scenarios(
                 .unwrap_or_else(|| panic!("scenario {i} produced no result"))
         })
         .collect()
+}
+
+/// Resumable sweep: load previously journaled results, run only the
+/// missing cells (journaling each as it completes), and return the full
+/// result list in scenario-index order.
+///
+/// Because journaled reports round-trip exactly (see
+/// [`super::journal`]), aggregates over the returned results are
+/// byte-identical to an uninterrupted [`run_sweep`] of the same grid —
+/// the contract `tests/sweep_resume.rs` enforces. Returns the results
+/// plus how many cells were reused from the journal.
+pub fn run_sweep_resumable(
+    grid: &ScenarioGrid,
+    threads: usize,
+    journal: &Journal,
+) -> (Vec<ScenarioResult>, usize) {
+    let scenarios = grid.scenarios();
+    let done = journal.load();
+    let mut results: Vec<Option<ScenarioResult>> = scenarios
+        .iter()
+        .map(|sc| {
+            done.get(&scenario_key(grid, sc)).map(|report| ScenarioResult {
+                scenario: sc.clone(),
+                report: report.clone(),
+            })
+        })
+        .collect();
+    let reused = results.iter().filter(|r| r.is_some()).count();
+    let missing: Vec<Scenario> = scenarios
+        .iter()
+        .zip(&results)
+        .filter(|(_, r)| r.is_none())
+        .map(|(sc, _)| sc.clone())
+        .collect();
+    let fresh = run_scenarios_with(grid, &missing, threads, |r| {
+        journal
+            .append(scenario_key(grid, &r.scenario), &r.report)
+            .unwrap_or_else(|e| {
+                panic!("journal append failed at {}: {e}", journal.path().display())
+            });
+    });
+    for r in fresh {
+        let slot = &mut results[r.scenario.index];
+        debug_assert!(slot.is_none());
+        *slot = Some(r);
+    }
+    let results = results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.unwrap_or_else(|| panic!("scenario {i} unresolved")))
+        .collect();
+    (results, reused)
 }
 
 #[cfg(test)]

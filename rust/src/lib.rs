@@ -36,11 +36,12 @@ pub mod workloads;
 
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
-    pub use crate::config::SimConfig;
+    pub use crate::config::{PmProfile, SimConfig};
     pub use crate::coordinator::{self, Report};
-    pub use crate::harness::{run_sweep, JobMix, ScenarioGrid};
+    pub use crate::harness::{run_sweep, run_sweep_resumable, JobMix, Journal, ScenarioGrid};
     pub use crate::predictor::{NativePredictor, Predictor};
     pub use crate::scheduler::SchedulerKind;
     pub use crate::sim::SimTime;
+    pub use crate::workloads::trace::Arrival;
     pub use crate::workloads::{self, JobType};
 }

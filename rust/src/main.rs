@@ -12,7 +12,10 @@
 //! Common flags: --sched <fifo|fair|delay|edf|deadline_vc> --seed N
 //!   --pms N --scale MB_PER_GB --jobs N --xla (use the PJRT predictor)
 //!   --json (machine-readable output)
-//! Sweep flags: --grid <default|quick> --threads N --seeds N --mix M
+//! Sweep flags: --grid <default|quick> --preset <fig4-throughput|
+//!   fig5-locality|fig6-deadline-miss> --threads N --seeds N --mix M
+//!   --profile <uniform|split-2x|long-tail>[,..] --arrival
+//!   <steady|burst[-xRATE]>[,..] --fresh (ignore the journal)
 //!   --out DIR (artifact directory, default results/)
 
 use vcsched::config::SimConfig;
@@ -218,21 +221,37 @@ fn cmd_throughput(args: &Args) {
     println!("mean throughput gain: {mean:+.1}% (paper: ~12%)");
 }
 
-/// `vcsched sweep`: expand a scenario grid, run it across worker threads,
-/// print the per-cell aggregate table, and write `sweep.json` /
-/// `sweep.csv` artifacts under `--out` (default `results/`). The JSON is
-/// byte-identical at any `--threads` setting (see `harness` docs).
+/// `vcsched sweep`: expand a scenario grid (named preset or ad-hoc), run
+/// it across worker threads — reusing journaled cells unless `--fresh` —
+/// print the per-cell aggregate table (plus the baseline-vs-candidate
+/// comparison for presets), and write `sweep.json` / `sweep.csv` /
+/// `sweep.journal` artifacts under `--out` (default `results/`). The
+/// JSON is byte-identical at any `--threads` setting and across
+/// interrupt/resume cycles (see `harness` docs).
 fn cmd_sweep(args: &Args) {
-    use vcsched::harness::{aggregate, aggregates_csv, run_sweep, sweep_json, JobMix, ScenarioGrid};
+    use vcsched::config::PmProfile;
+    use vcsched::harness::{
+        aggregate, aggregates_csv, compare_cells, comparison_json, figure_preset,
+        run_sweep_resumable, sweep_json, JobMix, Journal, ScenarioGrid, PRESET_NAMES,
+    };
+    use vcsched::workloads::trace::Arrival;
 
-    let grid_name = args.get_str("grid", "default");
-    let mut grid = match grid_name {
-        "default" => ScenarioGrid::default_grid(),
-        "quick" => ScenarioGrid::quick(),
-        other => panic!("unknown grid {other:?} (expected default|quick)"),
+    let (mut grid, preset) = if let Some(name) = args.get("preset") {
+        let (g, p) = figure_preset(name).unwrap_or_else(|| {
+            panic!("unknown preset {name:?} (expected one of {PRESET_NAMES:?})")
+        });
+        (g, Some(p))
+    } else {
+        let grid_name = args.get_str("grid", "default");
+        let g = match grid_name {
+            "default" => ScenarioGrid::default_grid(),
+            "quick" => ScenarioGrid::quick(),
+            other => panic!("unknown grid {other:?} (expected default|quick)"),
+        };
+        (g, None)
     };
 
-    // Per-axis overrides.
+    // Per-axis overrides (each collapses its axis to the given values).
     grid.grid_seed = args.get_u64("seed", grid.grid_seed);
     grid.seed_replicates = args.get_usize("seeds", grid.seed_replicates);
     grid.jobs_per_scenario = args.get_usize("jobs", grid.jobs_per_scenario);
@@ -248,15 +267,34 @@ fn cmd_sweep(args: &Args) {
             .unwrap_or_else(|_| panic!("--scale wants f64, got {v:?}"));
         grid.scales = vec![scale];
     }
-    if let Some(name) = args.get("sched") {
-        let kind = SchedulerKind::from_name(name)
-            .unwrap_or_else(|| panic!("unknown scheduler {name:?}"));
-        grid.schedulers = vec![kind];
+    if let Some(names) = args.get("sched") {
+        grid.schedulers = SchedulerKind::parse_list(names)
+            .unwrap_or_else(|| panic!("unknown scheduler in {names:?}"));
     }
     if let Some(name) = args.get("mix") {
         let mix = JobMix::from_name(name)
             .unwrap_or_else(|| panic!("unknown mix {name:?} (mixed or a job type)"));
         grid.mixes = vec![mix];
+    }
+    if let Some(names) = args.get("profile") {
+        grid.profiles = names
+            .split(',')
+            .map(|p| {
+                PmProfile::from_name(p.trim()).unwrap_or_else(|| {
+                    panic!("unknown profile {p:?} (uniform|split-2x|long-tail)")
+                })
+            })
+            .collect();
+    }
+    if let Some(labels) = args.get("arrival") {
+        grid.arrivals = labels
+            .split(',')
+            .map(|a| {
+                Arrival::from_label(a.trim()).unwrap_or_else(|| {
+                    panic!("unknown arrival {a:?} (steady|burst[-xRATE])")
+                })
+            })
+            .collect();
     }
 
     let default_threads = std::thread::available_parallelism()
@@ -266,30 +304,51 @@ fn cmd_sweep(args: &Args) {
 
     println!(
         "sweep {:?}: {} scenarios ({} schedulers x {} mixes x {} PM counts x \
-         {} scales x {} seeds), {} jobs each, {threads} threads",
+         {} profiles x {} arrivals x {} scales x {} seeds), {} jobs each, \
+         {threads} threads",
         grid.name,
         grid.len(),
         grid.schedulers.len(),
         grid.mixes.len(),
         grid.pm_counts.len(),
+        grid.profiles.len(),
+        grid.arrivals.len(),
         grid.scales.len(),
         grid.seed_replicates,
         grid.jobs_per_scenario,
     );
 
+    let out = std::path::PathBuf::from(args.get_str("out", "results"));
+    std::fs::create_dir_all(&out).expect("mkdir artifact dir");
+    let journal = Journal::new(out.join("sweep.journal"));
+    if args.flag("fresh") {
+        journal.clear().expect("clear sweep.journal");
+    }
+
     let t0 = std::time::Instant::now();
-    let results = run_sweep(&grid, threads);
+    let (results, reused) = run_sweep_resumable(&grid, threads, &journal);
     let wall_s = t0.elapsed().as_secs_f64();
+    if reused > 0 {
+        println!(
+            "resumed from {}: {reused}/{} cells reused, {} run fresh",
+            journal.path().display(),
+            results.len(),
+            results.len() - reused
+        );
+    }
     let groups = aggregate(&results);
 
     let mut t = Table::new(&[
-        "scheduler", "mix", "pms", "mean_ct", "p50", "p99", "thpt/h", "locality", "misses",
+        "scheduler", "mix", "pms", "profile", "arrival", "mean_ct", "p50", "p99", "thpt/h",
+        "locality", "misses",
     ]);
     for g in &groups {
         t.row(&[
             g.scheduler.clone(),
             g.mix.clone(),
             g.pms.to_string(),
+            g.profile.clone(),
+            g.arrival.clone(),
             format!("{:.1}±{:.1}s", g.mean_completion_s, g.std_completion_s),
             format!("{:.1}s", g.p50_completion_s),
             format!("{:.1}s", g.p99_completion_s),
@@ -300,22 +359,93 @@ fn cmd_sweep(args: &Args) {
     }
     t.print();
 
-    let out = std::path::PathBuf::from(args.get_str("out", "results"));
-    std::fs::create_dir_all(&out).expect("mkdir artifact dir");
-    let json = sweep_json(&grid, &results, &groups).render();
+    let mut doc = sweep_json(&grid, &results, &groups);
+    if let Some(p) = &preset {
+        let rows = compare_cells(&groups, p);
+        if rows.is_empty() {
+            // Overrides can collapse away one side of the comparison
+            // (e.g. --sched deadline_vc); don't fabricate a 0.0 headline.
+            println!(
+                "\n{}: comparison unavailable — the sweep must include both \
+                 {} and {} (drop --sched or list both)",
+                p.name,
+                p.baseline.name(),
+                p.candidate.name()
+            );
+        } else {
+            print_comparison(p, &rows);
+            doc = doc.set("comparison", comparison_json(p, &rows));
+        }
+    }
+
+    let json = doc.render();
     std::fs::write(out.join("sweep.json"), &json).expect("write sweep.json");
     std::fs::write(out.join("sweep.csv"), aggregates_csv(&groups)).expect("write sweep.csv");
 
-    let sim_wall: f64 = results.iter().map(|r| r.report.wall_s).sum();
-    println!(
-        "\n{} scenarios in {wall_s:.2}s wall on {threads} threads \
-         (sum of per-scenario sim time {sim_wall:.2}s, speedup x{:.2}); \
-         artifacts: {}/sweep.json, {}/sweep.csv",
-        results.len(),
-        sim_wall / wall_s.max(1e-9),
-        out.display(),
-        out.display()
-    );
+    // Journaled cells carry no wall-clock, so the speedup figure is only
+    // meaningful when everything ran fresh this invocation.
+    if reused == 0 {
+        let sim_wall: f64 = results.iter().map(|r| r.report.wall_s).sum();
+        println!(
+            "\n{} scenarios in {wall_s:.2}s wall on {threads} threads \
+             (sum of per-scenario sim time {sim_wall:.2}s, speedup x{:.2}); \
+             artifacts: {}/sweep.json, {}/sweep.csv, {}/sweep.journal",
+            results.len(),
+            sim_wall / wall_s.max(1e-9),
+            out.display(),
+            out.display(),
+            out.display()
+        );
+    } else {
+        println!(
+            "\n{} scenarios ({} fresh, {reused} from journal) in {wall_s:.2}s \
+             wall on {threads} threads; artifacts: {}/sweep.json, \
+             {}/sweep.csv, {}/sweep.journal",
+            results.len(),
+            results.len() - reused,
+            out.display(),
+            out.display(),
+            out.display()
+        );
+    }
+}
+
+/// Print a preset's per-cell comparison table and tracked headline gain.
+fn print_comparison(p: &vcsched::harness::Preset, rows: &[vcsched::harness::ComparisonRow]) {
+    let unit = p.metric.gain_unit();
+    println!("\n{} — {}", p.name, p.describes);
+    let mut t = Table::new(&[
+        "mix",
+        "profile",
+        "arrival",
+        p.baseline.name(),
+        p.candidate.name(),
+        "gain",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.mix.clone(),
+            r.profile.clone(),
+            r.arrival.clone(),
+            format!("{:.2}", r.baseline),
+            format!("{:.2}", r.candidate),
+            format!("{:+.1}{unit}", r.gain),
+        ]);
+    }
+    t.print();
+    let headline = vcsched::harness::headline_gain(rows);
+    match p.paper_gain {
+        Some(paper) => println!(
+            "headline {} gain {}: {headline:+.1}{unit} (paper: ~{paper:+.0}%)",
+            p.metric.name(),
+            p.candidate.name()
+        ),
+        None => println!(
+            "headline {} gain {}: {headline:+.1}{unit}",
+            p.metric.name(),
+            p.candidate.name()
+        ),
+    }
 }
 
 fn cmd_gantt(args: &Args) {
@@ -423,7 +553,9 @@ fn print_help() {
          usage: vcsched <simulate|compare|fig2|fig3|table2|throughput|sweep|gantt|export> [flags]\n\
          flags: --sched K --a K --b K --seed N --pms N --jobs N --runs N\n\
          \x20      --scale MB_PER_GB --xla --json\n\
-         sweep: --grid <default|quick> --threads N --seeds N --mix <mixed|TYPE>\n\
-         \x20      --out DIR"
+         sweep: --grid <default|quick> --preset <fig4-throughput|fig5-locality|\n\
+         \x20      fig6-deadline-miss> --threads N --seeds N --mix <mixed|TYPE>\n\
+         \x20      --sched K[,K..] --profile <uniform|split-2x|long-tail>[,..]\n\
+         \x20      --arrival <steady|burst[-xRATE]>[,..] --fresh --out DIR"
     );
 }

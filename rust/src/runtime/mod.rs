@@ -10,9 +10,9 @@
 //!
 //! The real PJRT path needs the `xla` (and `anyhow`) crates, which are not
 //! available in the offline build environment; it is gated behind the
-//! `xla` cargo feature. Without the feature an API-compatible [`stub`] is
-//! compiled instead: artifact loading returns `Err`, so every caller takes
-//! its existing native-predictor fallback path.
+//! `xla` cargo feature. Without the feature an API-compatible `stub`
+//! module is compiled instead: artifact loading returns `Err`, so every
+//! caller takes its existing native-predictor fallback path.
 
 #[cfg(feature = "xla")]
 mod executable;

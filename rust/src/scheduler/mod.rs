@@ -61,6 +61,16 @@ impl SchedulerKind {
         })
     }
 
+    /// Parse a comma-separated scheduler list (`"fair,deadline_vc"`) —
+    /// the `vcsched sweep --sched` axis override. `None` if any name is
+    /// unknown; duplicates are preserved (the grid would double-count,
+    /// which the caller surfaces as a user error in row counts).
+    pub fn parse_list(s: &str) -> Option<Vec<SchedulerKind>> {
+        s.split(',')
+            .map(|part| SchedulerKind::from_name(part.trim()))
+            .collect()
+    }
+
     pub fn build(self, cfg: &SimConfig) -> Box<dyn Scheduler> {
         match self {
             SchedulerKind::Fifo => Box::new(FifoScheduler::new()),
@@ -267,6 +277,19 @@ mod tests {
             Some(SchedulerKind::DeadlineVc)
         );
         assert_eq!(SchedulerKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn parse_list_accepts_commas_and_rejects_typos() {
+        assert_eq!(
+            SchedulerKind::parse_list("fair, deadline_vc"),
+            Some(vec![SchedulerKind::Fair, SchedulerKind::DeadlineVc])
+        );
+        assert_eq!(
+            SchedulerKind::parse_list("edf"),
+            Some(vec![SchedulerKind::Edf])
+        );
+        assert_eq!(SchedulerKind::parse_list("fair,bogus"), None);
     }
 
     #[test]

@@ -8,6 +8,26 @@
 //! * a **real implementation** ([`exec`]) — actual map/reduce functions
 //!   over generated corpus bytes, used in `ExecMode::Real` and by the
 //!   correctness tests (output equivalence against a serial reference).
+//!
+//! [`trace`] additionally hosts the sweep harness's **arrival-rate axis**
+//! ([`trace::Arrival`]): a Poisson λ multiplier plus a `burst` regime
+//! that clusters submissions while preserving the long-run rate, and the
+//! heterogeneity-aware [`trace::ideal_completion_estimate`] that keeps
+//! generated deadlines honest under the `pm_profile` axis.
+//!
+//! ```
+//! use vcsched::workloads::trace::Arrival;
+//! use vcsched::util::Rng;
+//!
+//! // Doubling λ halves the mean inter-arrival gap; labels round-trip
+//! // as stable artifact keys.
+//! let a = Arrival::from_label("burst-x2").unwrap();
+//! assert_eq!(a.rate, 2.0);
+//! assert_eq!(a.label(), "burst-x2");
+//! let times = a.times(10, 5.0, &mut Rng::new(42));
+//! assert_eq!(times.len(), 10);
+//! assert!(times.windows(2).all(|w| w[0] <= w[1]));
+//! ```
 
 pub mod corpus;
 pub mod exec;

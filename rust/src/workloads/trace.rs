@@ -1,9 +1,123 @@
-//! Job-trace generation: the paper's experiment mixes plus Poisson traces
-//! for the throughput experiments.
+//! Job-trace generation: the paper's experiment mixes, Poisson traces for
+//! the throughput experiments, and the sweep harness's arrival-rate axis
+//! (rate-multiplied Poisson plus a bursty regime).
 
 use super::{JobSpec, JobType, ALL_JOB_TYPES};
 use crate::config::SimConfig;
 use crate::util::Rng;
+
+/// Jobs per burst under [`ArrivalRegime::Burst`].
+const BURST_SIZE: usize = 5;
+/// Intra-burst gaps are this fraction of the steady mean gap (bursts are
+/// near-simultaneous submissions; the inter-burst gap re-balances so the
+/// long-run arrival rate still matches the λ multiplier).
+const BURST_INTRA_FRACTION: f64 = 0.05;
+
+/// Shape of the arrival process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalRegime {
+    /// Plain Poisson arrivals (exponential inter-arrival gaps).
+    Steady,
+    /// Arrivals come in bursts of `BURST_SIZE` (5) near-simultaneous
+    /// jobs separated by long gaps, at the same long-run rate — the
+    /// regime where slot contention (and the deadline scheduler's
+    /// advantage) peaks.
+    Burst,
+}
+
+/// One point on the sweep harness's arrival-rate axis: a Poisson λ
+/// multiplier plus a regime.
+///
+/// `rate` multiplies the base arrival rate, so `rate = 2.0` halves the
+/// mean inter-arrival gap. Labels are stable artifact keys: `steady`,
+/// `steady-x2`, `burst`, `burst-x1.5`, ...
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arrival {
+    /// λ multiplier on the base arrival rate (must be > 0).
+    pub rate: f64,
+    pub regime: ArrivalRegime,
+}
+
+impl Arrival {
+    /// The default axis point: plain Poisson at the base rate.
+    pub const STEADY: Arrival = Arrival {
+        rate: 1.0,
+        regime: ArrivalRegime::Steady,
+    };
+
+    pub fn steady(rate: f64) -> Arrival {
+        Arrival {
+            rate,
+            regime: ArrivalRegime::Steady,
+        }
+    }
+
+    pub fn burst(rate: f64) -> Arrival {
+        Arrival {
+            rate,
+            regime: ArrivalRegime::Burst,
+        }
+    }
+
+    /// Stable label used in artifacts, CSV keys and the CLI.
+    pub fn label(&self) -> String {
+        let base = match self.regime {
+            ArrivalRegime::Steady => "steady",
+            ArrivalRegime::Burst => "burst",
+        };
+        if (self.rate - 1.0).abs() < 1e-12 {
+            base.to_string()
+        } else {
+            format!("{base}-x{}", self.rate)
+        }
+    }
+
+    /// Parse a label produced by [`Arrival::label`] (`steady`, `burst`,
+    /// `steady-x2`, `burst-x1.5`).
+    pub fn from_label(s: &str) -> Option<Arrival> {
+        let (base, rate) = match s.split_once("-x") {
+            Some((b, r)) => (b, r.parse::<f64>().ok()?),
+            None => (s, 1.0),
+        };
+        if !(rate > 0.0 && rate.is_finite()) {
+            return None;
+        }
+        match base {
+            "steady" => Some(Arrival::steady(rate)),
+            "burst" => Some(Arrival::burst(rate)),
+            _ => None,
+        }
+    }
+
+    /// Draw `n` non-decreasing submission times with base mean gap
+    /// `base_gap_s` (seconds). Deterministic given `rng`.
+    pub fn times(&self, n: usize, base_gap_s: f64, rng: &mut Rng) -> Vec<f64> {
+        let gap = base_gap_s / self.rate;
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0f64;
+        for i in 0..n {
+            if i > 0 {
+                let mean = match self.regime {
+                    ArrivalRegime::Steady => gap,
+                    ArrivalRegime::Burst => {
+                        if i % BURST_SIZE == 0 {
+                            // Inter-burst gap sized so the long-run rate
+                            // matches λ: BURST_SIZE jobs per
+                            // BURST_SIZE * gap expected seconds.
+                            gap * (BURST_SIZE as f64
+                                - BURST_INTRA_FRACTION * (BURST_SIZE - 1) as f64)
+                        } else {
+                            gap * BURST_INTRA_FRACTION
+                        }
+                    }
+                };
+                t += rng.exp(mean);
+            }
+            out.push(t);
+        }
+        out
+    }
+}
 
 /// An ordered set of job submissions.
 #[derive(Clone, Debug, Default)]
@@ -107,21 +221,55 @@ impl JobTrace {
         }
         Self::new(jobs)
     }
+
+    /// Like [`JobTrace::poisson`] but with an explicit [`Arrival`] axis
+    /// point: the λ multiplier scales the base rate and the `burst`
+    /// regime clusters submissions. Used by the sweep harness's
+    /// arrival-rate axis.
+    pub fn poisson_arrivals(
+        cfg: &SimConfig,
+        n: usize,
+        base_gap_s: f64,
+        arrival: Arrival,
+        deadline_factor: std::ops::Range<f64>,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed ^ 0x7ace);
+        let times = arrival.times(n, base_gap_s, &mut rng);
+        let mut jobs = Vec::with_capacity(n);
+        for &t in &times {
+            let jt = ALL_JOB_TYPES[rng.below(ALL_JOB_TYPES.len() as u64) as usize];
+            let input_mb = rng.range_f64(16.0, 96.0) * cfg.block_mb;
+            let mut spec = JobSpec::new(jt, input_mb).at(t);
+            let est = ideal_completion_estimate(cfg, &spec);
+            let f = rng.range_f64(deadline_factor.start, deadline_factor.end);
+            spec = spec.with_deadline(est * f);
+            jobs.push(spec);
+        }
+        Self::new(jobs)
+    }
 }
 
 /// Crude ideal-parallelism completion estimate used only to draw sane
 /// deadlines for generated traces (NOT the paper's predictor).
+///
+/// Heterogeneity-aware: map-phase parallelism uses the *speed-weighted*
+/// slot count ([`SimConfig::effective_map_slots`] — a half-speed
+/// straggler's slot retires work at half rate), and reduce CPU time
+/// divides by the mean PM speed. Under the uniform profile both collapse
+/// to the homogeneous formula, so deadline-miss metrics stay comparable
+/// across the `pm_profile` sweep axis.
 pub fn ideal_completion_estimate(cfg: &SimConfig, spec: &JobSpec) -> f64 {
     let m = spec.job_type.cost_model();
     let maps = (spec.input_mb / cfg.block_mb).ceil().max(1.0);
-    let map_slots = cfg.total_map_slots() as f64;
+    let map_slots = cfg.effective_map_slots();
     let red_slots = cfg.total_reduce_slots() as f64;
     let inter_mb = m.intermediate_mb(spec.input_mb);
     let reducers = (spec.reducers as f64).max(1.0);
     let map_time = maps * m.map_secs(cfg.block_mb) / map_slots.min(maps);
     let shuffle_time = inter_mb / cfg.net_mbps / reducers.min(red_slots);
     let waves = (reducers / red_slots.min(reducers)).ceil();
-    let red_time = m.reduce_secs(inter_mb / reducers) * waves;
+    let red_time = m.reduce_secs(inter_mb / reducers) * waves / cfg.mean_pm_speed();
     map_time + shuffle_time + red_time
 }
 
@@ -184,5 +332,101 @@ mod tests {
         let large = ideal_completion_estimate(&cfg, &JobSpec::new(JobType::Sort, 2560.0));
         assert!(small > 0.0);
         assert!(large > small);
+    }
+
+    #[test]
+    fn estimate_respects_pm_profile() {
+        use crate::config::PmProfile;
+        // Regression: the estimate used to assume homogeneous node speed,
+        // which made deadlines too tight under slow-tail hardware (every
+        // generated deadline was ~25% optimistic on a long-tail cluster,
+        // inflating miss rates for reasons unrelated to the scheduler).
+        let uniform = SimConfig::paper();
+        let tail = SimConfig {
+            pm_profile: PmProfile::LongTail,
+            ..SimConfig::paper()
+        };
+        let split = SimConfig {
+            pm_profile: PmProfile::Split2x,
+            ..SimConfig::paper()
+        };
+        for mb in [256.0, 2560.0] {
+            let spec = JobSpec::new(JobType::Sort, mb);
+            let e_uni = ideal_completion_estimate(&uniform, &spec);
+            let e_tail = ideal_completion_estimate(&tail, &spec);
+            let e_split = ideal_completion_estimate(&split, &spec);
+            // A straggler tail strictly slows the ideal estimate...
+            assert!(e_tail > e_uni, "{e_tail} <= {e_uni} at {mb} MB");
+            // ...while split-2x only adds spare cores (VM slots and
+            // speeds unchanged), so the base-slot estimate is identical.
+            assert!((e_split - e_uni).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn arrival_labels_roundtrip() {
+        for a in [
+            Arrival::STEADY,
+            Arrival::steady(2.0),
+            Arrival::burst(1.0),
+            Arrival::burst(1.5),
+        ] {
+            assert_eq!(Arrival::from_label(&a.label()), Some(a));
+        }
+        assert_eq!(Arrival::STEADY.label(), "steady");
+        assert_eq!(Arrival::burst(1.0).label(), "burst");
+        assert_eq!(Arrival::steady(2.0).label(), "steady-x2");
+        assert_eq!(Arrival::from_label("warp"), None);
+        assert_eq!(Arrival::from_label("steady-x0"), None);
+    }
+
+    #[test]
+    fn arrival_times_sorted_and_rate_scaled() {
+        let mut rng = Rng::new(3);
+        let t1 = Arrival::STEADY.times(400, 10.0, &mut rng);
+        assert_eq!(t1.len(), 400);
+        assert!(t1.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(t1[0], 0.0);
+        // Doubling λ roughly halves the span.
+        let mut rng = Rng::new(3);
+        let t2 = Arrival::steady(2.0).times(400, 10.0, &mut rng);
+        let (s1, s2) = (t1[399], t2[399]);
+        assert!(s2 < s1 * 0.7, "span {s2} not ~half of {s1}");
+    }
+
+    #[test]
+    fn burst_regime_clusters_arrivals_at_matched_rate() {
+        let mut rng = Rng::new(9);
+        let steady = Arrival::STEADY.times(500, 10.0, &mut rng);
+        let mut rng = Rng::new(9);
+        let burst = Arrival::burst(1.0).times(500, 10.0, &mut rng);
+        // Long-run rate matches within sampling noise...
+        let (ss, sb) = (steady[499], burst[499]);
+        assert!(
+            (sb / ss - 1.0).abs() < 0.25,
+            "burst span {sb} vs steady span {ss}"
+        );
+        // ...but the gap distribution is far more dispersed: most gaps
+        // tiny (intra-burst), a few huge (inter-burst).
+        let gaps: Vec<f64> = burst.windows(2).map(|w| w[1] - w[0]).collect();
+        let tiny = gaps.iter().filter(|&&g| g < 2.0).count();
+        let huge = gaps.iter().filter(|&&g| g > 20.0).count();
+        assert!(tiny > gaps.len() / 2, "only {tiny} intra-burst gaps");
+        assert!(huge > 20, "only {huge} inter-burst gaps");
+    }
+
+    #[test]
+    fn poisson_arrivals_deterministic_and_deadlined() {
+        let cfg = SimConfig::paper();
+        let a = JobTrace::poisson_arrivals(&cfg, 20, 5.0, Arrival::burst(2.0), 1.6..3.0, 7);
+        let b = JobTrace::poisson_arrivals(&cfg, 20, 5.0, Arrival::burst(2.0), 1.6..3.0, 7);
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.job_type, y.job_type);
+            assert_eq!(x.input_mb, y.input_mb);
+            assert_eq!(x.submit_s, y.submit_s);
+            assert_eq!(x.deadline_s, y.deadline_s);
+            assert!(x.deadline_s.unwrap() > 0.0);
+        }
     }
 }

@@ -6,6 +6,9 @@ use vcsched::harness::{
     aggregate, aggregates_csv, run_scenarios, run_sweep, sweep_json, ScenarioGrid,
 };
 
+use vcsched::config::PmProfile;
+use vcsched::workloads::trace::Arrival;
+
 /// Small but non-trivial grid: 2 schedulers x 2 mixes x 2 seeds = 8
 /// scenarios on the 4-PM cluster with tiny inputs, so the full test stays
 /// fast in debug builds.
@@ -13,6 +16,16 @@ fn test_grid() -> ScenarioGrid {
     let mut g = ScenarioGrid::quick();
     g.jobs_per_scenario = 4;
     g.scales = vec![16.0];
+    g
+}
+
+/// The same grid stretched along the heterogeneity and arrival axes (the
+/// determinism contract must hold for every axis combination).
+fn heterogeneous_grid() -> ScenarioGrid {
+    let mut g = test_grid();
+    g.mixes.truncate(1);
+    g.profiles = vec![PmProfile::Uniform, PmProfile::Split2x, PmProfile::LongTail];
+    g.arrivals = vec![Arrival::STEADY, Arrival::burst(2.0)];
     g
 }
 
@@ -41,6 +54,20 @@ fn json_artifact_byte_identical_at_1_2_and_8_threads() {
             "sweep CSV diverged between 1 and {threads} threads"
         );
     }
+}
+
+#[test]
+fn heterogeneous_axes_byte_identical_across_thread_counts() {
+    let grid = heterogeneous_grid();
+    assert_eq!(grid.len(), 24, "2 scheds x 1 mix x 3 profiles x 2 arrivals x 2 seeds");
+    let (json1, csv1) = artifact_bytes(&grid, 1);
+    let (json4, csv4) = artifact_bytes(&grid, 4);
+    assert_eq!(json1, json4, "heterogeneous sweep diverged across threads");
+    assert_eq!(csv1, csv4);
+    // The axes actually reach the artifacts.
+    assert!(json1.contains("\"profile\":\"long-tail\""));
+    assert!(json1.contains("\"arrival\":\"burst-x2\""));
+    assert!(csv1.lines().any(|l| l.contains("split-2x")));
 }
 
 #[test]

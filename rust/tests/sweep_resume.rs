@@ -1,0 +1,116 @@
+//! The resume contract: a sweep killed mid-grid (journal holds only some
+//! cells) and then resumed must produce byte-identical JSON/CSV artifacts
+//! to a single uninterrupted run — and must not re-run journaled cells.
+
+use std::path::PathBuf;
+
+use vcsched::config::PmProfile;
+use vcsched::harness::{
+    aggregate, aggregates_csv, run_scenarios_with, run_sweep, run_sweep_resumable,
+    scenario_key, sweep_json, Journal, ScenarioGrid,
+};
+use vcsched::workloads::trace::Arrival;
+
+/// Small grid that still exercises the heterogeneity and arrival axes:
+/// 2 schedulers x 1 mix x 2 profiles x 2 arrivals x 2 seeds = 16 cells.
+fn grid() -> ScenarioGrid {
+    let mut g = ScenarioGrid::quick();
+    g.jobs_per_scenario = 3;
+    g.scales = vec![16.0];
+    g.mixes.truncate(1);
+    g.profiles = vec![PmProfile::Uniform, PmProfile::LongTail];
+    g.arrivals = vec![Arrival::STEADY, Arrival::burst(1.0)];
+    g
+}
+
+fn tmp_journal(name: &str) -> Journal {
+    let mut p: PathBuf = std::env::temp_dir();
+    p.push(format!("vcsched-resume-{}-{name}.journal", std::process::id()));
+    let j = Journal::new(p);
+    j.clear().expect("clean slate");
+    j
+}
+
+fn artifacts(
+    grid: &ScenarioGrid,
+    results: &[vcsched::harness::ScenarioResult],
+) -> (String, String) {
+    let groups = aggregate(results);
+    (
+        sweep_json(grid, results, &groups).render(),
+        aggregates_csv(&groups),
+    )
+}
+
+#[test]
+fn interrupted_then_resumed_sweep_is_byte_identical() {
+    let g = grid();
+    let scenarios = g.scenarios();
+    assert_eq!(scenarios.len(), 16);
+
+    // Reference: one uninterrupted run.
+    let full = run_sweep(&g, 2);
+    let (json_ref, csv_ref) = artifacts(&g, &full);
+
+    // "Kill" a sweep mid-grid: journal only the first half of the cells.
+    let j = tmp_journal("halfway");
+    let half = &scenarios[..scenarios.len() / 2];
+    run_scenarios_with(&g, half, 2, |r| {
+        j.append(scenario_key(&g, &r.scenario), &r.report).unwrap();
+    });
+    assert_eq!(j.load().len(), half.len(), "half the grid journaled");
+
+    // Resume: only the missing half may run; artifacts must match the
+    // uninterrupted reference byte for byte.
+    let (resumed, reused) = run_sweep_resumable(&g, 2, &j);
+    assert_eq!(reused, half.len(), "journaled cells must be reused, not re-run");
+    assert_eq!(resumed.len(), scenarios.len());
+    let (json_res, csv_res) = artifacts(&g, &resumed);
+    assert_eq!(json_ref, json_res, "resumed JSON diverged from uninterrupted run");
+    assert_eq!(csv_ref, csv_res, "resumed CSV diverged from uninterrupted run");
+
+    // The journal now covers the whole grid; a second resume runs nothing
+    // and still reproduces the same bytes.
+    assert_eq!(j.load().len(), scenarios.len());
+    let (replayed, reused2) = run_sweep_resumable(&g, 2, &j);
+    assert_eq!(reused2, scenarios.len());
+    let (json_replay, _) = artifacts(&g, &replayed);
+    assert_eq!(json_ref, json_replay);
+    j.clear().unwrap();
+}
+
+#[test]
+fn extending_the_grid_reuses_unchanged_cells() {
+    // Run a 1-profile grid to completion, then extend the profile axis:
+    // the old cells' content hashes only survive where the expansion
+    // indices (and thus stream seeds) are unchanged — for the
+    // scheduler-major order that is every cell of the first scheduler
+    // block... but regardless of how many survive, the artifacts must be
+    // identical to a fresh full run of the extended grid.
+    let mut small = grid();
+    small.profiles.truncate(1);
+    let j = tmp_journal("extend");
+    let (_r, reused0) = run_sweep_resumable(&small, 2, &j);
+    assert_eq!(reused0, 0);
+
+    let extended = grid();
+    let (resumed, reused) = run_sweep_resumable(&extended, 2, &j);
+    // At least the leading block of the first scheduler keeps its indices
+    // (profiles is an inner axis, so the first profile's cells of the
+    // first scheduler/mix/pm block keep index 0..N).
+    assert!(reused > 0, "no cell reused after axis extension");
+    let fresh = run_sweep(&extended, 2);
+    let (json_a, csv_a) = artifacts(&extended, &resumed);
+    let (json_b, csv_b) = artifacts(&extended, &fresh);
+    assert_eq!(json_a, json_b);
+    assert_eq!(csv_a, csv_b);
+    j.clear().unwrap();
+}
+
+#[test]
+fn fresh_journal_of_missing_file_is_empty() {
+    let j = tmp_journal("missing");
+    assert!(j.load().is_empty());
+    // clear() on a missing file is fine (the CLI --fresh path).
+    j.clear().unwrap();
+}
