@@ -1,21 +1,35 @@
-//! Locality study: how replication factor and cluster load shape data
-//! locality and completion time across schedulers — the design space the
-//! paper's intro motivates (locality vs deadline tension).
+//! Locality study: how replication factor, cluster load and **network
+//! topology** shape data locality and completion time across schedulers —
+//! the design space the paper's intro motivates (locality vs deadline
+//! tension). Locality is reported as the three-tier node/rack/remote
+//! split the delay-scheduling literature uses; on the flat (single-rack)
+//! topology the rack column is structurally 0.
 //!
 //!     cargo run --release --offline --example locality_study
 
+use vcsched::cluster::Topology;
 use vcsched::config::SimConfig;
-use vcsched::coordinator;
+use vcsched::coordinator::{self, Report};
 use vcsched::scheduler::SchedulerKind;
 use vcsched::util::benchkit::Table;
 use vcsched::workloads::trace::JobTrace;
+
+/// `node/rack/remote` percentage triple for one run.
+fn tier_split(r: &Report) -> String {
+    format!(
+        "{:.1}/{:.1}/{:.1}%",
+        r.locality_pct(),
+        r.rack_pct(),
+        r.remote_pct()
+    )
+}
 
 fn main() {
     vcsched::util::logger::init();
 
     println!("== locality vs replication factor (25-job backlogged mix) ==\n");
     let mut t = Table::new(&[
-        "replication", "scheduler", "locality", "mean_ct", "thpt/h", "hotplugs",
+        "replication", "scheduler", "node/rack/remote", "mean_ct", "thpt/h", "hotplugs",
     ]);
     for repl in [1usize, 2, 3, 5] {
         let cfg = SimConfig {
@@ -28,7 +42,7 @@ fn main() {
             t.row(&[
                 format!("{repl}x"),
                 kind.name().to_string(),
-                format!("{:.1}%", r.locality_pct()),
+                tier_split(&r),
                 format!("{:.1}s", r.mean_completion_s()),
                 format!("{:.1}", r.throughput_jobs_per_hour()),
                 r.hotplugs.to_string(),
@@ -37,10 +51,42 @@ fn main() {
     }
     t.print();
 
-    println!("\n== locality vs cluster load (arrival rate sweep, 3x repl) ==\n");
-    let cfg = SimConfig::paper();
+    println!("\n== locality vs network topology (3x repl, backlogged mix) ==\n");
     let mut t = Table::new(&[
-        "mean gap", "scheduler", "locality", "mean_ct", "thpt/h", "misses",
+        "topology", "scheduler", "node/rack/remote", "mean_ct", "thpt/h", "misses",
+    ]);
+    for topology in [
+        Topology::Flat,
+        Topology::Racks(2),
+        Topology::Racks(4),
+        Topology::FatTree(4),
+    ] {
+        let cfg = SimConfig {
+            topology,
+            ..SimConfig::paper()
+        };
+        let trace = JobTrace::paper_mix(&cfg, 7);
+        for kind in [SchedulerKind::Fair, SchedulerKind::Delay, SchedulerKind::DeadlineVc] {
+            let r = coordinator::run_simulation(&cfg, kind, &trace);
+            t.row(&[
+                topology.label(),
+                kind.name().to_string(),
+                tier_split(&r),
+                format!("{:.1}s", r.mean_completion_s()),
+                format!("{:.1}", r.throughput_jobs_per_hour()),
+                format!("{:.0}%", r.miss_rate() * 100.0),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n== locality vs cluster load (arrival rate sweep, racks-4) ==\n");
+    let cfg = SimConfig {
+        topology: Topology::Racks(4),
+        ..SimConfig::paper()
+    };
+    let mut t = Table::new(&[
+        "mean gap", "scheduler", "node/rack/remote", "mean_ct", "thpt/h", "misses",
     ]);
     for gap in [2.0f64, 5.0, 15.0, 40.0] {
         let trace = JobTrace::poisson(&cfg, 25, gap, 1.6..3.0, 11);
@@ -49,7 +95,7 @@ fn main() {
             t.row(&[
                 format!("{gap:.0}s"),
                 kind.name().to_string(),
-                format!("{:.1}%", r.locality_pct()),
+                tier_split(&r),
                 format!("{:.1}s", r.mean_completion_s()),
                 format!("{:.1}", r.throughput_jobs_per_hour()),
                 format!("{:.0}%", r.miss_rate() * 100.0),
@@ -59,9 +105,14 @@ fn main() {
     t.print();
 
     println!(
-        "\nReading: the proposed scheduler holds ~100% locality regardless of \
-         replication,\nbecause non-local work is routed (or hot-plugged) to \
-         replica nodes — the gain over\nFair/Delay grows as replication drops \
-         and as load rises (paper §1, §5)."
+        "\nReading: the proposed scheduler holds ~100% node locality regardless \
+         of replication\nor topology, because non-local work is routed (or \
+         hot-plugged) to replica nodes.\nFor Fair/Delay the racked topologies \
+         convert part of the remote column into the\ncheaper rack column \
+         (HDFS rack-aware placement keeps 2 of 3 replicas in one rack),\nbut \
+         the residual off-rack reads now contend for the shared core uplink — \
+         the gap\nto the reconfiguration-based scheduler widens as the core \
+         oversubscription grows\n(racks-4 -> fat-tree-4) and as load rises \
+         (paper §1, §5)."
     );
 }

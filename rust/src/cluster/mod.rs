@@ -19,6 +19,16 @@
 //! reconfigurator's Machine Managers can hot-plug onto that machine
 //! ([`Cluster::check_invariants`] enforces `assigned <= cores` per PM).
 //!
+//! # Network topology
+//!
+//! Since the `topology` axis (see [`topology::Topology`]) the cluster is
+//! not necessarily a single rack either: PMs group into racks, every VM
+//! inherits its host PM's rack, and [`Cluster::tier`] classifies a
+//! (task node, data node) pair as node-local / rack-local / off-rack.
+//! Schedulers score placements through that classification and the
+//! coordinator charges tier-dependent input-fetch bandwidth (cross-rack
+//! fetches share the topology's core link).
+//!
 //! ```
 //! use vcsched::cluster::Cluster;
 //! use vcsched::config::{PmProfile, SimConfig};
@@ -34,6 +44,10 @@
 //! assert_eq!(c.pm(vcsched::cluster::PmId(1)).cores, 4);
 //! assert_eq!(c.spare_cores(vcsched::cluster::PmId(0)), 4);
 //! ```
+
+pub mod topology;
+
+pub use topology::{LocalityTier, Topology};
 
 use crate::config::SimConfig;
 
@@ -67,6 +81,8 @@ pub struct PhysicalMachine {
     /// Relative machine speed (1.0 = baseline; see
     /// [`crate::config::PmProfile`]).
     pub speed: f64,
+    /// Rack this machine lives in (always 0 under [`Topology::Flat`]).
+    pub rack: u32,
     pub vms: Vec<NodeId>,
 }
 
@@ -120,6 +136,9 @@ impl Vm {
 pub struct Cluster {
     pms: Vec<PhysicalMachine>,
     vms: Vec<Vm>,
+    /// Network shape the cluster was built with (rack assignment and
+    /// cross-rack bandwidth model).
+    topology: Topology,
 }
 
 /// Errors from hot-plug operations (hand-rolled Display/Error impls —
@@ -162,6 +181,7 @@ impl Cluster {
                 id: pm_id,
                 cores: cfg.pm_cores(p),
                 speed,
+                rack: cfg.topology.rack_of_pm(p),
                 vms: Vec::with_capacity(cfg.vms_per_pm),
             };
             for _ in 0..cfg.vms_per_pm {
@@ -180,7 +200,11 @@ impl Cluster {
             }
             pms.push(pm);
         }
-        Self { pms, vms }
+        Self {
+            pms,
+            vms,
+            topology: cfg.topology,
+        }
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -218,6 +242,40 @@ impl Cluster {
     /// Are these two nodes co-located on one physical machine?
     pub fn same_pm(&self, a: NodeId, b: NodeId) -> bool {
         self.pm_of(a) == self.pm_of(b)
+    }
+
+    /// The topology the cluster was built with.
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    /// Number of racks in the cluster (1 under [`Topology::Flat`]).
+    pub fn num_racks(&self) -> u32 {
+        self.topology.racks()
+    }
+
+    /// Rack of `node` (inherited from its host PM).
+    pub fn rack_of(&self, node: NodeId) -> u32 {
+        self.pm(self.pm_of(node)).rack
+    }
+
+    /// Are these two nodes in the same rack?
+    pub fn same_rack(&self, a: NodeId, b: NodeId) -> bool {
+        self.rack_of(a) == self.rack_of(b)
+    }
+
+    /// Classify the locality tier of a map task running on `node` whose
+    /// input block lives on `data`. The flat topology has no rack tier:
+    /// every off-node read is [`LocalityTier::Remote`], exactly the seed
+    /// model's binary local/remote split.
+    pub fn tier(&self, node: NodeId, data: NodeId) -> LocalityTier {
+        if node == data {
+            LocalityTier::NodeLocal
+        } else if self.topology.is_racked() && self.same_rack(node, data) {
+            LocalityTier::RackLocal
+        } else {
+            LocalityTier::Remote
+        }
     }
 
     /// Spare (unassigned) physical cores on a PM.
@@ -354,6 +412,45 @@ mod tests {
             assert_eq!(vm.speed, c.pm(vm.pm).speed);
         }
         c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn racked_layout_classifies_tiers() {
+        use crate::config::SimConfig;
+        let cfg = SimConfig {
+            topology: Topology::Racks(2),
+            ..SimConfig::small() // 4 PMs x 2 VMs
+        };
+        let c = Cluster::build(&cfg);
+        assert_eq!(c.num_racks(), 2);
+        // PM i -> rack i % 2; nodes inherit their PM's rack.
+        assert_eq!(c.rack_of(NodeId(0)), 0);
+        assert_eq!(c.rack_of(NodeId(1)), 0);
+        assert_eq!(c.rack_of(NodeId(2)), 1);
+        assert_eq!(c.rack_of(NodeId(4)), 0);
+        assert!(c.same_rack(NodeId(0), NodeId(5)));
+        assert!(!c.same_rack(NodeId(0), NodeId(2)));
+        assert_eq!(c.tier(NodeId(3), NodeId(3)), LocalityTier::NodeLocal);
+        assert_eq!(c.tier(NodeId(0), NodeId(4)), LocalityTier::RackLocal);
+        assert_eq!(c.tier(NodeId(0), NodeId(3)), LocalityTier::Remote);
+    }
+
+    #[test]
+    fn flat_layout_has_no_rack_tier() {
+        let c = cluster(); // SimConfig::small() defaults to Topology::Flat
+        assert_eq!(c.topology(), Topology::Flat);
+        assert_eq!(c.num_racks(), 1);
+        for a in 0..c.num_nodes() {
+            for b in 0..c.num_nodes() {
+                let (a, b) = (NodeId(a as u32), NodeId(b as u32));
+                let t = c.tier(a, b);
+                if a == b {
+                    assert_eq!(t, LocalityTier::NodeLocal);
+                } else {
+                    assert_eq!(t, LocalityTier::Remote, "flat must be binary");
+                }
+            }
+        }
     }
 
     #[test]

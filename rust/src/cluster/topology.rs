@@ -1,0 +1,330 @@
+//! Rack-aware network topology: the tiered locality model behind the
+//! `--topology` sweep axis.
+//!
+//! The paper's motivation is that meeting a deadline may force a task onto
+//! a node "without local input data for that task causing expensive data
+//! transfer from a remote node" — but its §5 testbed is a single rack, so
+//! the seed reproduction modelled exactly two costs: local disk scan vs
+//! one flat NIC fetch. Real Hadoop deployments (and the delay-scheduling
+//! line of work `scheduler/delay.rs` follows, arXiv:1506.00425) see a
+//! *three*-tier hierarchy:
+//!
+//! 1. **node-local** — the block is on the task's own DataNode: read at
+//!    disk bandwidth;
+//! 2. **rack-local** — a replica sits on another node of the same rack:
+//!    one hop through a non-blocking top-of-rack switch, at NIC speed;
+//! 3. **remote** (off-rack) — the fetch crosses the rack uplink into the
+//!    cluster core, a *shared* link every concurrent cross-rack fetch
+//!    divides between itself and its peers.
+//!
+//! A [`Topology`] names the shape of that hierarchy:
+//!
+//! * [`Topology::Flat`] — the seed model: one implicit rack, no rack tier,
+//!   every non-local read pays exactly `block / net_mbps`. This variant
+//!   reproduces the pre-topology simulator *byte for byte* (placement RNG
+//!   draws, task timings, metrics), which the regression tests pin down.
+//! * [`Topology::Racks`]`(n)` — `n` equal racks (`n >= 2`; PM `i` lands
+//!   in rack `i % n`), full bisection inside a rack, and a shared
+//!   cross-rack core of one 2-NIC uplink per rack (~5:1 oversubscription
+//!   against aggregate NIC demand on the paper's 10-node racks).
+//! * [`Topology::FatTree`]`(n)` — same rack structure but a "fat-tree-ish"
+//!   budget core of one 1-NIC uplink per rack (~10:1 on the paper
+//!   testbed), the regime where off-rack reads hurt most.
+//!
+//! Bandwidth sharing uses the simplest defensible model: a cross-rack
+//! fetch starting while `f` cross-rack fetches (itself included) are in
+//! flight gets `min(net_mbps, core_capacity / f)` for its whole duration.
+//! There is no per-flow re-fairing when neighbours finish — that keeps
+//! the event loop untouched and every run a pure function of its inputs.
+//!
+//! # Example
+//!
+//! Build a racks-2 topology over a 4-PM / 8-node cluster and classify
+//! locality tiers between nodes:
+//!
+//! ```
+//! use vcsched::cluster::{Cluster, LocalityTier, NodeId, Topology};
+//! use vcsched::config::SimConfig;
+//!
+//! let cfg = SimConfig {
+//!     topology: Topology::Racks(2),
+//!     ..SimConfig::small() // 4 PMs x 2 VMs
+//! };
+//! let c = Cluster::build(&cfg);
+//! // PM i -> rack i % 2, and a node inherits its PM's rack:
+//! // nodes 0,1 (PM 0) and 4,5 (PM 2) are rack 0; 2,3,6,7 are rack 1.
+//! assert_eq!(c.rack_of(NodeId(0)), 0);
+//! assert_eq!(c.rack_of(NodeId(2)), 1);
+//! assert_eq!(c.rack_of(NodeId(4)), 0);
+//!
+//! // Tier classification: same node < same rack < cross rack.
+//! assert_eq!(c.tier(NodeId(0), NodeId(0)), LocalityTier::NodeLocal);
+//! assert_eq!(c.tier(NodeId(0), NodeId(4)), LocalityTier::RackLocal);
+//! assert_eq!(c.tier(NodeId(0), NodeId(2)), LocalityTier::Remote);
+//!
+//! // Under the flat topology there is no rack tier at all.
+//! let flat = Cluster::build(&SimConfig::small());
+//! assert_eq!(flat.tier(NodeId(0), NodeId(2)), LocalityTier::Remote);
+//! ```
+
+/// How close a map task runs to its input block. Ordered best-first so
+/// `min()` over a replica set yields the best achievable tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LocalityTier {
+    /// Input block resident on the task's own node (DataNode).
+    NodeLocal,
+    /// A replica on another node of the same rack (racked topologies
+    /// only — the flat topology never produces this tier).
+    RackLocal,
+    /// Off-rack: the fetch crosses the shared cluster core.
+    Remote,
+}
+
+impl LocalityTier {
+    pub const ALL: [LocalityTier; 3] = [
+        LocalityTier::NodeLocal,
+        LocalityTier::RackLocal,
+        LocalityTier::Remote,
+    ];
+
+    /// Stable label used in artifacts and tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            LocalityTier::NodeLocal => "node",
+            LocalityTier::RackLocal => "rack",
+            LocalityTier::Remote => "remote",
+        }
+    }
+}
+
+/// The cluster's network shape: how PMs group into racks and how much the
+/// cross-rack core is oversubscribed. One point on the `vcsched sweep`
+/// `--topology` axis; labels (`flat`, `racks-4`, `fat-tree-4`) are stable
+/// artifact keys.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// Single implicit rack (the paper's §5 testbed; the default). No
+    /// rack tier, no uplink contention — byte-identical to the
+    /// pre-topology simulator.
+    #[default]
+    Flat,
+    /// `n >= 2` equal racks; shared core of one 2-NIC uplink per rack.
+    Racks(u32),
+    /// `n >= 2` equal racks; "fat-tree-ish" budget core of one 1-NIC
+    /// uplink per rack (off-rack reads degrade twice as fast as
+    /// [`Topology::Racks`]).
+    FatTree(u32),
+}
+
+impl Topology {
+    /// Does this topology have a rack tier at all?
+    pub fn is_racked(self) -> bool {
+        !matches!(self, Topology::Flat)
+    }
+
+    /// Number of racks (1 for flat).
+    pub fn racks(self) -> u32 {
+        match self {
+            Topology::Flat => 1,
+            Topology::Racks(n) | Topology::FatTree(n) => n,
+        }
+    }
+
+    /// Rack of physical machine `pm_idx` (round-robin assignment, so
+    /// every rack holds within one PM of the same count).
+    pub fn rack_of_pm(self, pm_idx: usize) -> u32 {
+        (pm_idx % self.racks().max(1) as usize) as u32
+    }
+
+    /// Stable label used in artifacts, CSV keys and the CLI.
+    pub fn label(self) -> String {
+        match self {
+            Topology::Flat => "flat".to_string(),
+            Topology::Racks(n) => format!("racks-{n}"),
+            Topology::FatTree(n) => format!("fat-tree-{n}"),
+        }
+    }
+
+    /// Parse a label produced by [`Topology::label`] (`flat`, `racks-N`,
+    /// `fat-tree-N`; N >= 2 — a one-rack "racked" cluster would be the
+    /// flat topology wearing a different label while classifying every
+    /// off-node read as rack-local, so it is rejected rather than
+    /// silently contradicting `flat`'s metrics).
+    pub fn from_label(s: &str) -> Option<Topology> {
+        if s == "flat" {
+            return Some(Topology::Flat);
+        }
+        if let Some(n) = s.strip_prefix("racks-") {
+            let n: u32 = n.parse().ok()?;
+            return (n >= 2).then_some(Topology::Racks(n));
+        }
+        if let Some(n) = s.strip_prefix("fat-tree-") {
+            let n: u32 = n.parse().ok()?;
+            return (n >= 2).then_some(Topology::FatTree(n));
+        }
+        None
+    }
+
+    /// Parse a comma-separated topology list (`"flat,racks-4"`) — the
+    /// `vcsched sweep --topology` axis override. `None` if any label is
+    /// unknown.
+    pub fn parse_list(s: &str) -> Option<Vec<Topology>> {
+        s.split(',')
+            .map(|part| Topology::from_label(part.trim()))
+            .collect()
+    }
+
+    /// Intra-rack (rack-local) fetch bandwidth: the top-of-rack switch is
+    /// non-blocking, so the node NIC is the bottleneck.
+    pub fn rack_mbps(self, net_mbps: f64) -> f64 {
+        net_mbps
+    }
+
+    /// Aggregate cross-rack core capacity in MB/s — the shared link every
+    /// off-rack fetch draws from: one uplink per rack, provisioned as a
+    /// multiple of the node NIC. Flat has no core link (remote reads see
+    /// the full NIC, as in the seed model).
+    pub fn core_capacity_mbps(self, net_mbps: f64) -> f64 {
+        match self {
+            Topology::Flat => f64::INFINITY,
+            // One 2-NIC uplink per rack (~5:1 oversubscription against
+            // the paper testbed's 10 NICs per rack).
+            Topology::Racks(n) => net_mbps * 2.0 * n as f64,
+            // Budget fabric: one 1-NIC uplink per rack (~10:1).
+            Topology::FatTree(n) => net_mbps * n as f64,
+        }
+    }
+
+    /// Effective bandwidth of one cross-rack fetch when `flows` fetches
+    /// (this one included) share the core: the fair share, capped by the
+    /// fetching node's NIC.
+    pub fn cross_rack_mbps(self, net_mbps: f64, flows: u32) -> f64 {
+        let share = self.core_capacity_mbps(net_mbps) / flows.max(1) as f64;
+        share.min(net_mbps)
+    }
+
+    /// Validate against a cluster of `pms` physical machines.
+    pub fn validate(self, pms: usize) -> Result<(), String> {
+        let n = self.racks() as usize;
+        if self.is_racked() && n < 2 {
+            return Err(format!(
+                "topology {} needs at least 2 racks (use `flat` for a \
+                 single-rack cluster)",
+                self.label()
+            ));
+        }
+        if self.is_racked() && n > pms {
+            return Err(format!(
+                "topology {} has more racks ({n}) than PMs ({pms})",
+                self.label()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_roundtrip() {
+        for t in [
+            Topology::Flat,
+            Topology::Racks(2),
+            Topology::Racks(4),
+            Topology::FatTree(4),
+        ] {
+            assert_eq!(Topology::from_label(&t.label()), Some(t));
+        }
+        assert_eq!(Topology::Flat.label(), "flat");
+        assert_eq!(Topology::Racks(4).label(), "racks-4");
+        assert_eq!(Topology::FatTree(8).label(), "fat-tree-8");
+        assert_eq!(Topology::from_label("racks-0"), None);
+        assert_eq!(Topology::from_label("fat-tree-0"), None);
+        // One rack == flat; the alias is rejected so identical physical
+        // systems can't report contradictory tier splits.
+        assert_eq!(Topology::from_label("racks-1"), None);
+        assert_eq!(Topology::from_label("fat-tree-1"), None);
+        assert_eq!(Topology::from_label("mesh-3"), None);
+        assert_eq!(Topology::from_label("racks-"), None);
+    }
+
+    #[test]
+    fn parse_list_accepts_commas_and_rejects_typos() {
+        assert_eq!(
+            Topology::parse_list("flat, racks-4"),
+            Some(vec![Topology::Flat, Topology::Racks(4)])
+        );
+        assert_eq!(
+            Topology::parse_list("fat-tree-2"),
+            Some(vec![Topology::FatTree(2)])
+        );
+        assert_eq!(Topology::parse_list("flat,bogus"), None);
+    }
+
+    #[test]
+    fn rack_assignment_round_robin() {
+        let t = Topology::Racks(4);
+        assert_eq!(t.racks(), 4);
+        for pm in 0..20 {
+            assert_eq!(t.rack_of_pm(pm), (pm % 4) as u32);
+        }
+        assert_eq!(Topology::Flat.racks(), 1);
+        assert_eq!(Topology::Flat.rack_of_pm(13), 0);
+    }
+
+    #[test]
+    fn tier_order_best_first() {
+        assert!(LocalityTier::NodeLocal < LocalityTier::RackLocal);
+        assert!(LocalityTier::RackLocal < LocalityTier::Remote);
+        assert_eq!(
+            [LocalityTier::Remote, LocalityTier::NodeLocal]
+                .iter()
+                .min(),
+            Some(&LocalityTier::NodeLocal)
+        );
+    }
+
+    #[test]
+    fn cross_rack_bandwidth_shares_the_core() {
+        let net = 10.0;
+        let t = Topology::Racks(4); // 4 uplinks x 2 NICs = 80 MB/s core
+        assert_eq!(t.core_capacity_mbps(net), 80.0);
+        // Quiet core: the NIC is the bottleneck.
+        assert_eq!(t.cross_rack_mbps(net, 1), 10.0);
+        assert_eq!(t.cross_rack_mbps(net, 8), 10.0);
+        // Contended: fair share of the core.
+        assert_eq!(t.cross_rack_mbps(net, 16), 5.0);
+        assert_eq!(t.cross_rack_mbps(net, 40), 2.0);
+        // More racks mean more uplinks, so core capacity grows with n.
+        assert!(Topology::Racks(8).core_capacity_mbps(net) > t.core_capacity_mbps(net));
+        // Fat-tree degrades twice as fast (core = 40 MB/s).
+        let ft = Topology::FatTree(4);
+        assert_eq!(ft.core_capacity_mbps(net), 40.0);
+        assert_eq!(ft.cross_rack_mbps(net, 4), 10.0);
+        assert_eq!(ft.cross_rack_mbps(net, 8), 5.0);
+        assert_eq!(ft.cross_rack_mbps(net, 16), 2.5);
+        // Flat never throttles a remote read (the seed model).
+        assert_eq!(Topology::Flat.cross_rack_mbps(net, 1000), net);
+    }
+
+    #[test]
+    fn validation_bounds_racks_by_pms() {
+        Topology::Flat.validate(1).unwrap();
+        Topology::Racks(4).validate(4).unwrap();
+        Topology::Racks(4).validate(20).unwrap();
+        assert!(Topology::Racks(8).validate(4).is_err());
+        assert!(Topology::FatTree(21).validate(20).is_err());
+        // A racked topology needs a real rack structure.
+        assert!(Topology::Racks(1).validate(20).is_err());
+        assert!(Topology::FatTree(1).validate(20).is_err());
+    }
+
+    #[test]
+    fn tier_names_stable() {
+        assert_eq!(LocalityTier::NodeLocal.name(), "node");
+        assert_eq!(LocalityTier::RackLocal.name(), "rack");
+        assert_eq!(LocalityTier::Remote.name(), "remote");
+    }
+}

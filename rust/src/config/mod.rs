@@ -9,6 +9,8 @@ mod parser;
 
 pub use parser::{parse_config_str, ConfigError};
 
+use crate::cluster::Topology;
+
 /// Per-PM capacity/speed heterogeneity profile (a `vcsched sweep` axis).
 ///
 /// The seed reproduction assumed a homogeneous cluster; real virtualized
@@ -110,6 +112,9 @@ pub struct SimConfig {
     /// Per-PM capacity/speed heterogeneity profile (paper testbed:
     /// uniform).
     pub pm_profile: PmProfile,
+    /// Network topology: how PMs group into racks and how oversubscribed
+    /// the cross-rack core is (paper testbed: a single flat rack).
+    pub topology: Topology,
     /// VMs per physical machine.
     pub vms_per_pm: usize,
     /// Base virtual CPUs per VM (= base map slots; paper: 2).
@@ -157,6 +162,7 @@ impl SimConfig {
             pms: 20,
             cores_per_pm: 4,
             pm_profile: PmProfile::Uniform,
+            topology: Topology::Flat,
             vms_per_pm: 2,
             base_vcpus: 2,
             reduce_slots: 2,
@@ -197,6 +203,22 @@ impl SimConfig {
     /// Relative speed of PM `idx` under the active heterogeneity profile.
     pub fn pm_speed(&self, idx: usize) -> f64 {
         self.pm_profile.speed(idx)
+    }
+
+    /// Rack of PM `idx` under the active topology (0 when flat).
+    pub fn pm_rack(&self, idx: usize) -> u32 {
+        self.topology.rack_of_pm(idx)
+    }
+
+    /// Rack of node (VM) `idx`: a VM inherits its host PM's rack.
+    pub fn node_rack(&self, idx: usize) -> u32 {
+        self.pm_rack(idx / self.vms_per_pm.max(1))
+    }
+
+    /// Rack of every node, in node order (the layout HDFS placement and
+    /// the per-job rack locality index are built from).
+    pub fn node_racks(&self) -> Vec<u32> {
+        (0..self.nodes()).map(|n| self.node_rack(n)).collect()
     }
 
     /// Mean PM speed across the cluster (1.0 when homogeneous).
@@ -255,6 +277,7 @@ impl SimConfig {
                 return Err(format!("PM {p} has non-positive speed"));
             }
         }
+        self.topology.validate(self.pms)?;
         if self.replication == 0 || self.replication > self.nodes() {
             return Err(format!(
                 "replication {} out of range 1..={}",
@@ -361,6 +384,42 @@ mod tests {
             ..SimConfig::paper()
         };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn node_racks_follow_topology() {
+        let c = SimConfig {
+            topology: Topology::Racks(4),
+            ..SimConfig::paper() // 20 PMs x 2 VMs
+        };
+        c.validate().unwrap();
+        // PM i -> rack i % 4; nodes 2i, 2i+1 live on PM i.
+        assert_eq!(c.node_rack(0), 0);
+        assert_eq!(c.node_rack(1), 0);
+        assert_eq!(c.node_rack(2), 1);
+        assert_eq!(c.node_rack(9), 0); // PM 4 -> rack 0
+        let racks = c.node_racks();
+        assert_eq!(racks.len(), 40);
+        // Equal racks: 10 nodes each.
+        for r in 0..4u32 {
+            assert_eq!(racks.iter().filter(|&&x| x == r).count(), 10);
+        }
+        // Flat: everything in rack 0.
+        assert!(SimConfig::paper().node_racks().iter().all(|&r| r == 0));
+    }
+
+    #[test]
+    fn validation_catches_bad_topology() {
+        let c = SimConfig {
+            topology: Topology::Racks(40),
+            ..SimConfig::paper() // only 20 PMs
+        };
+        assert!(c.validate().is_err());
+        let c = SimConfig {
+            topology: Topology::Racks(4),
+            ..SimConfig::paper()
+        };
+        c.validate().unwrap();
     }
 
     #[test]

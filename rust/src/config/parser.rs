@@ -5,6 +5,7 @@
 //! fall back to defaults.
 
 use super::{ExecMode, PmProfile, SimConfig};
+use crate::cluster::Topology;
 
 /// Parse errors (hand-rolled Display/Error impls — `thiserror` is
 /// unavailable offline).
@@ -60,6 +61,11 @@ pub fn parse_config_str(text: &str) -> Result<SimConfig, ConfigError> {
             "cores_per_pm" => cfg.cores_per_pm = num!(u32),
             "pm_profile" => {
                 cfg.pm_profile = PmProfile::from_name(v).ok_or_else(|| {
+                    ConfigError::BadValue(lineno, k.to_string(), v.to_string())
+                })?
+            }
+            "topology" => {
+                cfg.topology = Topology::from_label(v).ok_or_else(|| {
                     ConfigError::BadValue(lineno, k.to_string(), v.to_string())
                 })?
             }
@@ -129,6 +135,23 @@ mod tests {
         assert!(matches!(
             parse_config_str("pm_profile = \"warped\""),
             Err(ConfigError::BadValue(1, _, _))
+        ));
+    }
+
+    #[test]
+    fn parses_topology() {
+        let cfg = parse_config_str("topology = \"racks-4\"").unwrap();
+        assert_eq!(cfg.topology, Topology::Racks(4));
+        let cfg = parse_config_str("topology = \"fat-tree-2\"").unwrap();
+        assert_eq!(cfg.topology, Topology::FatTree(2));
+        assert!(matches!(
+            parse_config_str("topology = \"hypercube\""),
+            Err(ConfigError::BadValue(1, _, _))
+        ));
+        // Validation still applies to the parsed combination.
+        assert!(matches!(
+            parse_config_str("pms = 2\ntopology = \"racks-4\""),
+            Err(ConfigError::Invalid(_))
         ));
     }
 

@@ -103,7 +103,7 @@ mod tests {
             assert!(r.makespan_s > 0.0);
             for j in &r.jobs {
                 assert!(j.completion_s > 0.0);
-                assert_eq!(j.local_maps + j.nonlocal_maps, j.maps);
+                assert_eq!(j.local_maps + j.rack_maps + j.remote_maps, j.maps);
             }
         }
     }
@@ -141,6 +141,53 @@ mod tests {
         for (a, b) in serial.jobs.iter().zip(&threaded.jobs) {
             assert_eq!(a.completion_s, b.completion_s);
             assert_eq!(a.local_maps, b.local_maps);
+        }
+    }
+
+    #[test]
+    fn flat_topology_reproduces_binary_locality() {
+        use crate::cluster::Topology;
+        // The `--topology flat` regression contract: an explicit flat
+        // topology is the default, draws the identical RNG stream and
+        // yields bitwise-equal reports — and never produces a rack tier.
+        let trace = small_trace();
+        for kind in SchedulerKind::ALL {
+            let default_cfg = SimConfig::small();
+            let explicit = SimConfig {
+                topology: Topology::Flat,
+                ..SimConfig::small()
+            };
+            let a = run_simulation(&default_cfg, kind, &trace);
+            let b = run_simulation(&explicit, kind, &trace);
+            assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+            assert_eq!(a.events, b.events);
+            for (x, y) in a.jobs.iter().zip(&b.jobs) {
+                assert_eq!(x.completion_s.to_bits(), y.completion_s.to_bits());
+                assert_eq!(x.local_maps, y.local_maps);
+                assert_eq!(x.remote_maps, y.remote_maps);
+                assert_eq!(x.rack_maps, 0, "flat runs must have no rack tier");
+            }
+            assert_eq!(a.rack_pct(), 0.0);
+        }
+    }
+
+    #[test]
+    fn racked_topology_splits_three_tiers() {
+        use crate::cluster::Topology;
+        let cfg = SimConfig {
+            topology: Topology::Racks(2),
+            ..SimConfig::small()
+        };
+        // Enough backlogged jobs that some maps go rack-local/off-rack.
+        let trace = crate::workloads::trace::JobTrace::poisson(&cfg, 8, 2.0, 1.6..3.0, 5);
+        for kind in SchedulerKind::ALL {
+            let r = run_simulation(&cfg, kind, &trace);
+            assert_eq!(r.completed_jobs(), 8, "{}", kind.name());
+            for j in &r.jobs {
+                assert_eq!(j.local_maps + j.rack_maps + j.remote_maps, j.maps);
+            }
+            let total = r.locality_pct() + r.rack_pct() + r.remote_pct();
+            assert!((total - 100.0).abs() < 1e-9, "{}: {total}", kind.name());
         }
     }
 

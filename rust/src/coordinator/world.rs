@@ -1,6 +1,6 @@
 //! World state + the event loop.
 
-use crate::cluster::{Cluster, NodeId};
+use crate::cluster::{Cluster, LocalityTier, NodeId};
 use crate::config::{ExecMode, SimConfig};
 use crate::hdfs::NameNode;
 use crate::mapreduce::{JobId, JobState, TaskCost, TaskId, TaskRef};
@@ -53,6 +53,12 @@ pub struct World {
     pending_specs: Vec<JobSpec>,
     arrived: usize,
     exec: Option<ExecEngine>,
+    /// Cross-rack map-input fetches currently in flight — the load on the
+    /// topology's shared core link. A fetch starting while `f` flows are
+    /// active (itself included) gets `Topology::cross_rack_mbps(net, f)`
+    /// for its whole duration (no re-fairing mid-flight; see
+    /// `cluster::topology` docs). Always 0 on the flat topology.
+    cross_rack_flows: u32,
     // metrics
     records: Vec<JobRecord>,
     trace_log: Option<TraceLog>,
@@ -95,6 +101,7 @@ impl World {
             pending_specs: trace.jobs,
             arrived: 0,
             exec,
+            cross_rack_flows: 0,
             records: Vec::new(),
             trace_log: None,
             heartbeats: 0,
@@ -237,10 +244,10 @@ impl World {
             }
             Event::MapDone { job, task, node } => {
                 let now = self.now();
-                if let Some(tl) = &mut self.trace_log {
-                    if let crate::mapreduce::TaskState::Running { started, local, .. } =
-                        *self.jobs[job.idx()].map_state(task)
-                    {
+                if let crate::mapreduce::TaskState::Running { started, tier, .. } =
+                    *self.jobs[job.idx()].map_state(task)
+                {
+                    if let Some(tl) = &mut self.trace_log {
                         tl.record_span(TaskSpan {
                             job,
                             kind: crate::mapreduce::TaskKind::Map,
@@ -248,8 +255,13 @@ impl World {
                             node,
                             start: started,
                             end: now,
-                            local,
+                            tier,
                         });
+                    }
+                    // The task's cross-rack fetch has left the shared core.
+                    if tier == LocalityTier::Remote && self.cfg.topology.is_racked() {
+                        debug_assert!(self.cross_rack_flows > 0);
+                        self.cross_rack_flows = self.cross_rack_flows.saturating_sub(1);
                     }
                 }
                 self.jobs[job.idx()].mark_map_finished(task, now);
@@ -277,7 +289,7 @@ impl World {
                             node,
                             start: started,
                             end: now,
-                            local: false,
+                            tier: LocalityTier::Remote,
                         });
                     }
                 }
@@ -310,7 +322,7 @@ impl World {
                 let js = &self.jobs[job.idx()];
                 let tid = task.id;
                 if js.map_state(tid).is_awaiting() {
-                    self.launch_map(job, tid, to, true);
+                    self.launch_map(job, tid, to, LocalityTier::NodeLocal);
                 } else {
                     // Task was cancelled while the core was in flight; the
                     // core simply stays with the target VM (it can host
@@ -325,12 +337,12 @@ impl World {
         for a in actions {
             match a {
                 Action::LaunchMap { job, task, node } => {
-                    let local = self.jobs[job.idx()].map_is_local(task, node);
+                    let tier = self.jobs[job.idx()].map_tier(task, node, &self.cluster);
                     assert!(
                         self.cluster.vm(node).free_map_slots() > 0,
                         "scheduler overfilled map slots on {node:?}"
                     );
-                    self.launch_map(job, task, node, local);
+                    self.launch_map(job, task, node, tier);
                 }
                 Action::LaunchReduce { job, task, node } => {
                     assert!(
@@ -408,15 +420,38 @@ impl World {
         }
     }
 
-    pub(crate) fn launch_map(&mut self, job: JobId, task: TaskId, node: NodeId, local: bool) {
+    pub(crate) fn launch_map(
+        &mut self,
+        job: JobId,
+        task: TaskId,
+        node: NodeId,
+        tier: LocalityTier,
+    ) {
         let now = self.now();
         let js = &mut self.jobs[job.idx()];
-        js.mark_map_launched(task, node, local, now);
+        js.mark_map_launched(task, node, tier, now);
         self.cluster.vm_mut(node).busy_map += 1;
         let block_mb = js.block_mb[task.0 as usize];
+        // Tiered input fetch: local disk scan, rack-local NIC read, or a
+        // contended share of the topology's cross-rack core. On the flat
+        // topology the remote tier reads at full NIC speed — the seed
+        // model, byte for byte.
+        let topo = self.cfg.topology;
+        let io_mbps = match tier {
+            LocalityTier::NodeLocal => self.cfg.disk_mbps,
+            LocalityTier::RackLocal => topo.rack_mbps(self.cfg.net_mbps),
+            LocalityTier::Remote => {
+                if topo.is_racked() {
+                    self.cross_rack_flows += 1;
+                    topo.cross_rack_mbps(self.cfg.net_mbps, self.cross_rack_flows)
+                } else {
+                    self.cfg.net_mbps
+                }
+            }
+        };
         // Heterogeneity: a task on a speed-s machine takes nominal/s time.
         let speed = self.cluster.vm(node).speed;
-        let secs = self.costs[job.idx()].map_secs(block_mb, local, &mut self.rng) / speed;
+        let secs = self.costs[job.idx()].map_secs_at(block_mb, io_mbps, &mut self.rng) / speed;
         self.queue.schedule_in(
             SimTime::from_secs_f64(secs),
             Event::MapDone { job, task, node },
@@ -470,7 +505,8 @@ impl World {
             deadline_s: js.spec.deadline_s,
             met_deadline: js.met_deadline(),
             local_maps: js.local_maps,
-            nonlocal_maps: js.nonlocal_maps,
+            rack_maps: js.rack_maps,
+            remote_maps: js.remote_maps,
             maps: js.total_maps(),
             reduces: js.total_reduces(),
         });

@@ -1,6 +1,6 @@
 //! Sweep aggregation: group scenario results by grid cell (scheduler x
-//! mix x PMs x scale), fold the seed replicates into summary statistics,
-//! and render the JSON/CSV artifacts.
+//! mix x PMs x profile x topology x arrival x scale), fold the seed
+//! replicates into summary statistics, and render the JSON/CSV artifacts.
 //!
 //! Everything here is deterministic: groups are keyed through a `BTreeMap`
 //! (sorted iteration), statistics fold results in scenario-index order,
@@ -24,6 +24,8 @@ pub struct GroupStats {
     pub pms: usize,
     /// PM heterogeneity profile label (`uniform`, `split-2x`, ...).
     pub profile: String,
+    /// Network topology label (`flat`, `racks-4`, `fat-tree-4`, ...).
+    pub topology: String,
     /// Arrival-pattern label (`steady`, `burst`, `steady-x2`, ...).
     pub arrival: String,
     pub scale: f64,
@@ -40,9 +42,13 @@ pub struct GroupStats {
     /// Mean/stddev of per-replicate throughput (jobs per simulated hour).
     pub mean_throughput_jph: f64,
     pub std_throughput_jph: f64,
-    /// Mean/stddev of per-replicate map locality (percent).
+    /// Mean/stddev of per-replicate *node-local* map percentage.
     pub mean_locality_pct: f64,
     pub std_locality_pct: f64,
+    /// Mean per-replicate *rack-local* map percentage (0 when flat).
+    pub mean_rack_pct: f64,
+    /// Mean per-replicate *off-rack* map percentage.
+    pub mean_remote_pct: f64,
     /// Mean per-replicate deadline-miss rate (0..1).
     pub mean_miss_rate: f64,
     /// Mean per-replicate makespan (seconds).
@@ -52,11 +58,11 @@ pub struct GroupStats {
 }
 
 /// Fold `results` into per-cell statistics, sorted by (scheduler, mix,
-/// pms, profile, arrival, scale).
+/// pms, profile, topology, arrival, scale).
 pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
     // Key through the f64 bit pattern: scales come verbatim from the grid
     // axis, so identical cells have identical bits.
-    type CellKey = (String, String, usize, String, String, u64);
+    type CellKey = (String, String, usize, String, String, String, u64);
     let mut cells: BTreeMap<CellKey, Vec<usize>> = BTreeMap::new();
     for (i, r) in results.iter().enumerate() {
         let key = (
@@ -64,6 +70,7 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             r.scenario.mix.name().to_string(),
             r.scenario.pms,
             r.scenario.profile.name().to_string(),
+            r.scenario.topology.label(),
             r.scenario.arrival.label(),
             r.scenario.scale.to_bits(),
         );
@@ -71,10 +78,12 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
     }
 
     let mut out = Vec::with_capacity(cells.len());
-    for ((scheduler, mix, pms, profile, arrival, scale_bits), members) in cells {
+    for ((scheduler, mix, pms, profile, topology, arrival, scale_bits), members) in cells {
         let mut completion = Summary::new();
         let mut throughput = Summary::new();
         let mut locality = Summary::new();
+        let mut rack = Summary::new();
+        let mut remote = Summary::new();
         let mut miss = Summary::new();
         let mut makespan = Summary::new();
         let mut pooled = Percentiles::new();
@@ -85,6 +94,8 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             completion.add(rep.mean_completion_s());
             throughput.add(rep.throughput_jobs_per_hour());
             locality.add(rep.locality_pct());
+            rack.add(rep.rack_pct());
+            remote.add(rep.remote_pct());
             miss.add(rep.miss_rate());
             makespan.add(rep.makespan_s);
             hotplugs += rep.hotplugs;
@@ -98,6 +109,7 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             mix,
             pms,
             profile,
+            topology,
             arrival,
             scale: f64::from_bits(scale_bits),
             seeds: members.len(),
@@ -110,6 +122,8 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             std_throughput_jph: throughput.std(),
             mean_locality_pct: locality.mean(),
             std_locality_pct: locality.std(),
+            mean_rack_pct: rack.mean(),
+            mean_remote_pct: remote.mean(),
             mean_miss_rate: miss.mean(),
             mean_makespan_s: makespan.mean(),
             hotplugs,
@@ -155,6 +169,13 @@ pub fn sweep_json(
                 .collect::<Vec<_>>(),
         )
         .set(
+            "topologies",
+            grid.topologies
+                .iter()
+                .map(|t| t.label())
+                .collect::<Vec<_>>(),
+        )
+        .set(
             "arrivals",
             grid.arrivals.iter().map(|a| a.label()).collect::<Vec<_>>(),
         )
@@ -178,6 +199,7 @@ pub fn sweep_json(
                 .set("mix", r.scenario.mix.name())
                 .set("pms", r.scenario.pms)
                 .set("profile", r.scenario.profile.name())
+                .set("topology", r.scenario.topology.label())
                 .set("arrival", r.scenario.arrival.label())
                 .set("scale", r.scenario.scale)
                 .set("replicate", r.scenario.replicate)
@@ -187,6 +209,8 @@ pub fn sweep_json(
                 .set("mean_completion_s", rep.mean_completion_s())
                 .set("throughput_jobs_per_hour", rep.throughput_jobs_per_hour())
                 .set("locality_pct", rep.locality_pct())
+                .set("rack_pct", rep.rack_pct())
+                .set("remote_pct", rep.remote_pct())
                 .set("miss_rate", rep.miss_rate())
                 .set("hotplugs", rep.hotplugs)
                 .set("events", rep.events),
@@ -201,6 +225,7 @@ pub fn sweep_json(
                 .set("mix", g.mix.as_str())
                 .set("pms", g.pms)
                 .set("profile", g.profile.as_str())
+                .set("topology", g.topology.as_str())
                 .set("arrival", g.arrival.as_str())
                 .set("scale", g.scale)
                 .set("seeds", g.seeds)
@@ -213,6 +238,8 @@ pub fn sweep_json(
                 .set("std_throughput_jph", g.std_throughput_jph)
                 .set("mean_locality_pct", g.mean_locality_pct)
                 .set("std_locality_pct", g.std_locality_pct)
+                .set("mean_rack_pct", g.mean_rack_pct)
+                .set("mean_remote_pct", g.mean_remote_pct)
                 .set("mean_miss_rate", g.mean_miss_rate)
                 .set("mean_makespan_s", g.mean_makespan_s)
                 .set("hotplugs", g.hotplugs),
@@ -228,19 +255,21 @@ pub fn sweep_json(
 /// Aggregates as CSV (one row per grid cell).
 pub fn aggregates_csv(groups: &[GroupStats]) -> String {
     let mut out = String::from(
-        "scheduler,mix,pms,profile,arrival,scale,seeds,total_jobs,mean_completion_s,\
-         std_completion_s,p50_completion_s,p99_completion_s,\
+        "scheduler,mix,pms,profile,topology,arrival,scale,seeds,total_jobs,\
+         mean_completion_s,std_completion_s,p50_completion_s,p99_completion_s,\
          mean_throughput_jph,std_throughput_jph,mean_locality_pct,\
-         std_locality_pct,mean_miss_rate,mean_makespan_s,hotplugs\n",
+         std_locality_pct,mean_rack_pct,mean_remote_pct,mean_miss_rate,\
+         mean_makespan_s,hotplugs\n",
     );
     for g in groups {
         let _ = writeln!(
             out,
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             g.scheduler,
             g.mix,
             g.pms,
             g.profile,
+            g.topology,
             g.arrival,
             g.scale,
             g.seeds,
@@ -253,6 +282,8 @@ pub fn aggregates_csv(groups: &[GroupStats]) -> String {
             g.std_throughput_jph,
             g.mean_locality_pct,
             g.std_locality_pct,
+            g.mean_rack_pct,
+            g.mean_remote_pct,
             g.mean_miss_rate,
             g.mean_makespan_s,
             g.hotplugs

@@ -1,7 +1,7 @@
 //! Declarative scenario grids: the cartesian product of scheduler kind x
-//! job mix x PM count x PM heterogeneity profile x arrival pattern x
-//! input scale x seed replicate, expanded into a flat, deterministically
-//! ordered scenario list.
+//! job mix x PM count x PM heterogeneity profile x network topology x
+//! arrival pattern x input scale x seed replicate, expanded into a flat,
+//! deterministically ordered scenario list.
 //!
 //! Each scenario derives its RNG stream seed from `(grid_seed,
 //! scenario_index)` via [`crate::util::rng::derive_stream_seed`], so the
@@ -12,6 +12,7 @@
 //! journal (see [`super::journal`]) keys results by a content hash of the
 //! resolved scenario, so unchanged cells are still reused.
 
+use crate::cluster::Topology;
 use crate::config::{PmProfile, SimConfig};
 use crate::scheduler::SchedulerKind;
 use crate::util::rng::derive_stream_seed;
@@ -61,6 +62,8 @@ pub struct ScenarioGrid {
     pub pm_counts: Vec<usize>,
     /// Axis: per-PM capacity/speed heterogeneity profile.
     pub profiles: Vec<PmProfile>,
+    /// Axis: network topology (rack layout + cross-rack oversubscription).
+    pub topologies: Vec<Topology>,
     /// Axis: arrival pattern (Poisson λ multiplier + steady/burst regime).
     pub arrivals: Vec<Arrival>,
     /// Axis: MB of simulated input per paper-GB (100 = fast, 1024 = full).
@@ -89,6 +92,7 @@ impl ScenarioGrid {
             mixes: ALL_JOB_TYPES.iter().copied().map(JobMix::Single).collect(),
             pm_counts: vec![20],
             profiles: vec![PmProfile::Uniform],
+            topologies: vec![Topology::Flat],
             arrivals: vec![Arrival::STEADY],
             scales: vec![100.0],
             seed_replicates: 10,
@@ -108,6 +112,7 @@ impl ScenarioGrid {
             mixes: vec![JobMix::Mixed, JobMix::Single(JobType::WordCount)],
             pm_counts: vec![4],
             profiles: vec![PmProfile::Uniform],
+            topologies: vec![Topology::Flat],
             arrivals: vec![Arrival::STEADY],
             scales: vec![32.0],
             seed_replicates: 2,
@@ -124,6 +129,7 @@ impl ScenarioGrid {
             * self.mixes.len()
             * self.pm_counts.len()
             * self.profiles.len()
+            * self.topologies.len()
             * self.arrivals.len()
             * self.scales.len()
             * self.seed_replicates
@@ -142,24 +148,27 @@ impl ScenarioGrid {
             for &mix in &self.mixes {
                 for &pms in &self.pm_counts {
                     for &profile in &self.profiles {
-                        for &arrival in &self.arrivals {
-                            for &scale in &self.scales {
-                                for replicate in 0..self.seed_replicates {
-                                    let index = out.len();
-                                    out.push(Scenario {
-                                        index,
-                                        scheduler,
-                                        mix,
-                                        pms,
-                                        profile,
-                                        arrival,
-                                        scale,
-                                        replicate,
-                                        stream_seed: derive_stream_seed(
-                                            self.grid_seed,
-                                            index as u64,
-                                        ),
-                                    });
+                        for &topology in &self.topologies {
+                            for &arrival in &self.arrivals {
+                                for &scale in &self.scales {
+                                    for replicate in 0..self.seed_replicates {
+                                        let index = out.len();
+                                        out.push(Scenario {
+                                            index,
+                                            scheduler,
+                                            mix,
+                                            pms,
+                                            profile,
+                                            topology,
+                                            arrival,
+                                            scale,
+                                            replicate,
+                                            stream_seed: derive_stream_seed(
+                                                self.grid_seed,
+                                                index as u64,
+                                            ),
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -180,6 +189,7 @@ pub struct Scenario {
     pub mix: JobMix,
     pub pms: usize,
     pub profile: PmProfile,
+    pub topology: Topology,
     pub arrival: Arrival,
     pub scale: f64,
     /// Seed replicate number within the cell (for grouping/aggregation).
@@ -197,6 +207,7 @@ impl Scenario {
         let mut cfg = SimConfig::paper();
         cfg.pms = self.pms;
         cfg.pm_profile = self.profile;
+        cfg.topology = self.topology;
         cfg.seed = self.stream_seed;
         cfg
     }
@@ -274,6 +285,26 @@ mod tests {
         cfg.validate().unwrap();
         assert_eq!(cfg.pm_profile, PmProfile::LongTail);
         assert!(cfg.effective_map_slots() < cfg.total_map_slots() as f64);
+    }
+
+    #[test]
+    fn topology_axis_multiplies_the_grid() {
+        let mut g = ScenarioGrid::quick();
+        g.topologies = vec![Topology::Flat, Topology::Racks(2), Topology::FatTree(2)];
+        assert_eq!(g.len(), ScenarioGrid::quick().len() * 3);
+        let scenarios = g.scenarios();
+        assert_eq!(scenarios.len(), g.len());
+        for t in &g.topologies {
+            assert!(scenarios.iter().any(|s| s.topology == *t));
+        }
+        let sc = scenarios
+            .iter()
+            .find(|s| s.topology == Topology::Racks(2))
+            .unwrap();
+        let cfg = sc.sim_config();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.topology, Topology::Racks(2));
+        assert_eq!(cfg.node_racks().iter().filter(|&&r| r == 1).count(), cfg.nodes() / 2);
     }
 
     #[test]

@@ -28,8 +28,9 @@ use crate::workloads::JobType;
 use super::grid::{Scenario, ScenarioGrid};
 
 /// Journal format version tag; bump on any line-format change so stale
-/// journals are skipped instead of mis-parsed.
-const VERSION: &str = "v1";
+/// journals are skipped instead of mis-parsed. (v2: tiered locality —
+/// per-job `local,rack,remote` counts replaced `local,nonlocal`.)
+const VERSION: &str = "v2";
 
 /// FNV-1a 64-bit over a byte string (stable across platforms/runs).
 fn fnv64(bytes: &[u8]) -> u64 {
@@ -50,13 +51,14 @@ fn fnv64(bytes: &[u8]) -> u64 {
 /// README's resumable-sweeps section.)
 pub fn scenario_key(grid: &ScenarioGrid, sc: &Scenario) -> u64 {
     let canon = format!(
-        "{}|{}|{}|{}|{:016x}|{}|{}|{}|{}|{:016x}|{:016x}|{:016x}|{:016x}",
+        "{}|{}|{}|{}|{:016x}|{}|{}|{}|{}|{}|{:016x}|{:016x}|{:016x}|{:016x}",
         env!("CARGO_PKG_VERSION"),
         sc.scheduler.name(),
         sc.mix.name(),
         sc.pms,
         sc.scale.to_bits(),
         sc.profile.name(),
+        sc.topology.label(),
         sc.arrival.label(),
         sc.replicate,
         grid.jobs_per_scenario,
@@ -132,7 +134,7 @@ fn render_line(key: u64, r: &RunMetrics) -> String {
         }
         let _ = write!(
             jobs,
-            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             j.id.0,
             j.job_type.name(),
             j.input_mb,
@@ -143,7 +145,8 @@ fn render_line(key: u64, r: &RunMetrics) -> String {
             opt_f64(j.deadline_s),
             opt_bool(j.met_deadline),
             j.local_maps,
-            j.nonlocal_maps,
+            j.rack_maps,
+            j.remote_maps,
             j.maps,
             j.reduces
         );
@@ -223,7 +226,7 @@ fn parse_line(line: &str) -> Option<(u64, RunMetrics)> {
 
 fn parse_job(rec: &str) -> Option<JobRecord> {
     let f: Vec<&str> = rec.split(',').collect();
-    if f.len() != 13 {
+    if f.len() != 14 {
         return None;
     }
     Some(JobRecord {
@@ -237,9 +240,10 @@ fn parse_job(rec: &str) -> Option<JobRecord> {
         deadline_s: parse_opt_f64(f[7])?,
         met_deadline: parse_opt_bool(f[8])?,
         local_maps: f[9].parse().ok()?,
-        nonlocal_maps: f[10].parse().ok()?,
-        maps: f[11].parse().ok()?,
-        reduces: f[12].parse().ok()?,
+        rack_maps: f[10].parse().ok()?,
+        remote_maps: f[11].parse().ok()?,
+        maps: f[12].parse().ok()?,
+        reduces: f[13].parse().ok()?,
     })
 }
 
@@ -300,8 +304,8 @@ mod tests {
             assert_eq!(a.submitted, b.submitted);
             assert_eq!(a.finished, b.finished);
             assert_eq!(
-                (a.local_maps, a.nonlocal_maps, a.maps, a.reduces),
-                (b.local_maps, b.nonlocal_maps, b.maps, b.reduces)
+                (a.local_maps, a.rack_maps, a.remote_maps, a.maps, a.reduces),
+                (b.local_maps, b.rack_maps, b.remote_maps, b.maps, b.reduces)
             );
         }
     }
@@ -319,7 +323,7 @@ mod tests {
         {
             use std::io::Write as _;
             let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
-            f.write_all(b"v1\tdeadbeef\tfair\t12.5").unwrap(); // truncated early
+            f.write_all(b"v2\tdeadbeef\tfair\t12.5").unwrap(); // truncated early
             f.write_all(b"\nnot a journal line\n").unwrap();
             let full = render_line(0xfeed_f00d, &report);
             let boundary = full.rfind(';').expect("multi-job line");
@@ -346,6 +350,13 @@ mod tests {
         g2.mean_gap_s = 9.0;
         for sc in &scenarios {
             assert_ne!(scenario_key(&g, sc), scenario_key(&g2, sc));
+        }
+        // The topology axis enters the content hash: the same cell under
+        // a different topology must re-run, not replay journaled numbers.
+        for sc in &scenarios {
+            let mut racked = sc.clone();
+            racked.topology = crate::cluster::Topology::Racks(2);
+            assert_ne!(scenario_key(&g, sc), scenario_key(&g, &racked));
         }
         // ...but the key is position-independent content: the same
         // resolved scenario hashes identically regardless of grid object.

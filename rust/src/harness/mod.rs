@@ -5,9 +5,9 @@
 //!
 //! The paper's headline comparison (§5) is one cell of a much larger
 //! design space — scheduler x workload mix x cluster size x **PM
-//! heterogeneity profile** x **arrival pattern** x input scale x seed.
-//! This module turns the repo from a one-shot figure reproducer into a
-//! grid-evaluation engine:
+//! heterogeneity profile** x **network topology** x **arrival pattern** x
+//! input scale x seed. This module turns the repo from a one-shot figure
+//! reproducer into a grid-evaluation engine:
 //!
 //! * [`grid`] — [`ScenarioGrid`] declares the axes; expansion assigns each
 //!   scenario a dense index and derives its RNG stream from
@@ -48,12 +48,14 @@
 //! assert_eq!(spec.candidate.name(), "deadline_vc");
 //!
 //! // Custom grids compose the same axes directly:
+//! use vcsched::cluster::Topology;
 //! use vcsched::config::PmProfile;
 //! use vcsched::workloads::trace::Arrival;
 //! let mut g = ScenarioGrid::quick();
 //! g.profiles = vec![PmProfile::Uniform, PmProfile::LongTail];
+//! g.topologies = vec![Topology::Flat, Topology::Racks(2)];
 //! g.arrivals = vec![Arrival::STEADY, Arrival::burst(1.0)];
-//! assert_eq!(g.len(), ScenarioGrid::quick().len() * 4);
+//! assert_eq!(g.len(), ScenarioGrid::quick().len() * 8);
 //! ```
 //!
 //! Run a tiny sweep and aggregate it (deterministic at any thread count):

@@ -10,13 +10,19 @@
 //! | preset               | headline metric      | axes swept                          |
 //! |----------------------|----------------------|-------------------------------------|
 //! | `fig4-throughput`    | jobs/hour            | profile ∈ {uniform, split-2x, long-tail} |
-//! | `fig5-locality`      | map locality %       | profile ∈ {uniform, long-tail} × arrival ∈ {steady, burst} |
+//! | `fig5-locality`      | map locality %       | profile ∈ {uniform, long-tail} × topology ∈ {flat, racks-4} × arrival ∈ {steady, burst} |
 //! | `fig6-deadline-miss` | deadline-miss rate   | profile ∈ {uniform, split-2x} × arrival ∈ {steady, steady-x2, burst} |
+//!
+//! `fig5-locality` sweeps the network-topology axis because that is the
+//! figure the three-tier locality split (node/rack/remote %) belongs to:
+//! under `racks-4` the delay-scheduling literature's rack-local tier
+//! appears between node-local and off-rack reads.
 //!
 //! Every preset pins `baseline = fair` and `candidate = deadline_vc`, so
 //! the comparison table tracks the paper's 12% throughput-gain headline
 //! as a first-class metric.
 
+use crate::cluster::Topology;
 use crate::config::PmProfile;
 use crate::scheduler::SchedulerKind;
 use crate::workloads::trace::Arrival;
@@ -107,6 +113,7 @@ pub fn preset(name: &str) -> Option<(ScenarioGrid, Preset)> {
         mixes: vec![JobMix::Mixed],
         pm_counts: vec![20],
         profiles: vec![PmProfile::Uniform],
+        topologies: vec![Topology::Flat],
         arrivals: vec![Arrival::STEADY],
         scales: vec![100.0],
         seed_replicates: 5,
@@ -140,6 +147,7 @@ pub fn preset(name: &str) -> Option<(ScenarioGrid, Preset)> {
                 SchedulerKind::DeadlineVc,
             ];
             g.profiles = vec![PmProfile::Uniform, PmProfile::LongTail];
+            g.topologies = vec![Topology::Flat, Topology::Racks(4)];
             g.arrivals = vec![Arrival::STEADY, Arrival::burst(1.0)];
             Some((
                 g,
@@ -187,6 +195,7 @@ pub struct ComparisonRow {
     pub mix: String,
     pub pms: usize,
     pub profile: String,
+    pub topology: String,
     pub arrival: String,
     pub scale: f64,
     pub baseline: f64,
@@ -200,13 +209,14 @@ pub struct ComparisonRow {
 pub fn compare_cells(groups: &[GroupStats], preset: &Preset) -> Vec<ComparisonRow> {
     use std::collections::BTreeMap;
     // Key: everything but the scheduler axis.
-    type CellKey = (String, usize, String, String, u64);
+    type CellKey = (String, usize, String, String, String, u64);
     let mut cells: BTreeMap<CellKey, (Option<f64>, Option<f64>)> = BTreeMap::new();
     for g in groups {
         let key = (
             g.mix.clone(),
             g.pms,
             g.profile.clone(),
+            g.topology.clone(),
             g.arrival.clone(),
             g.scale.to_bits(),
         );
@@ -219,19 +229,22 @@ pub fn compare_cells(groups: &[GroupStats], preset: &Preset) -> Vec<ComparisonRo
     }
     cells
         .into_iter()
-        .filter_map(|((mix, pms, profile, arrival, scale_bits), (b, c))| {
-            let (baseline, candidate) = (b?, c?);
-            Some(ComparisonRow {
-                mix,
-                pms,
-                profile,
-                arrival,
-                scale: f64::from_bits(scale_bits),
-                baseline,
-                candidate,
-                gain: preset.metric.gain(baseline, candidate),
-            })
-        })
+        .filter_map(
+            |((mix, pms, profile, topology, arrival, scale_bits), (b, c))| {
+                let (baseline, candidate) = (b?, c?);
+                Some(ComparisonRow {
+                    mix,
+                    pms,
+                    profile,
+                    topology,
+                    arrival,
+                    scale: f64::from_bits(scale_bits),
+                    baseline,
+                    candidate,
+                    gain: preset.metric.gain(baseline, candidate),
+                })
+            },
+        )
         .collect()
 }
 
@@ -255,6 +268,7 @@ pub fn comparison_json(preset: &Preset, rows: &[ComparisonRow]) -> crate::util::
                 .set("mix", r.mix.as_str())
                 .set("pms", r.pms)
                 .set("profile", r.profile.as_str())
+                .set("topology", r.topology.as_str())
                 .set("arrival", r.arrival.as_str())
                 .set("scale", r.scale)
                 .set(preset.baseline.name(), r.baseline)
@@ -304,6 +318,24 @@ mod tests {
         assert_eq!(p.paper_gain, Some(12.0));
         // 2 schedulers x 1 mix x 3 profiles x 5 seeds.
         assert_eq!(grid.len(), 30);
+    }
+
+    #[test]
+    fn fig5_sweeps_the_topology_axis() {
+        let (grid, p) = preset("fig5-locality").unwrap();
+        assert_eq!(
+            grid.topologies,
+            vec![Topology::Flat, Topology::Racks(4)]
+        );
+        assert_eq!(p.metric, HeadlineMetric::LocalityPct);
+        // 3 schedulers x 1 mix x 2 profiles x 2 topologies x 2 arrivals
+        // x 5 seeds.
+        assert_eq!(grid.len(), 120);
+        // The other presets stay on the flat (paper-testbed) topology.
+        for name in ["fig4-throughput", "fig6-deadline-miss"] {
+            let (g, _) = preset(name).unwrap();
+            assert_eq!(g.topologies, vec![Topology::Flat]);
+        }
     }
 
     #[test]

@@ -1,10 +1,19 @@
-//! HDFS-like storage substrate: block-structured files, random k-way
-//! replication across DataNodes (= VMs), and the NameNode metadata the
-//! schedulers query for data locality.
+//! HDFS-like storage substrate: block-structured files, k-way replication
+//! across DataNodes (= VMs), and the NameNode metadata the schedulers
+//! query for data locality.
 //!
-//! Placement follows Hadoop 0.20's rack-unaware default closely enough for
-//! the paper's purposes: each block's replicas land on `replication`
-//! distinct nodes chosen uniformly (the paper's testbed is a single rack).
+//! Placement is topology-aware ([`NameNode::create_file_placed`]):
+//!
+//! * on a **flat** (single-rack) layout each block's replicas land on
+//!   `replication` distinct nodes chosen uniformly — Hadoop 0.20's
+//!   rack-unaware default, byte-identical to the seed reproduction (the
+//!   paper's testbed is a single rack);
+//! * on a **racked** layout the default HDFS rack-aware policy applies:
+//!   first replica on a uniformly chosen node, second on a node in a
+//!   *different* rack, third on a different node of the *second* replica's
+//!   rack, any further replicas uniform over the remaining nodes. A block
+//!   therefore spans at least two racks (fault tolerance) while two of
+//!   three replicas share a rack (read locality).
 
 use std::collections::HashMap;
 
@@ -45,7 +54,8 @@ impl NameNode {
 
     /// Create a file of `total_mb` split into `block_mb` blocks, each
     /// replicated on `replication` distinct nodes of the `num_nodes`
-    /// cluster. Returns the new file id.
+    /// cluster, rack-unaware (single implicit rack). Returns the new
+    /// file id.
     pub fn create_file(
         &mut self,
         total_mb: f64,
@@ -54,8 +64,26 @@ impl NameNode {
         num_nodes: usize,
         rng: &mut Rng,
     ) -> FileId {
+        self.create_file_placed(total_mb, block_mb, replication, &vec![0; num_nodes], rng)
+    }
+
+    /// Like [`NameNode::create_file`] but with an explicit node -> rack
+    /// layout (`node_racks[i]` is node `i`'s rack). A single-rack layout
+    /// takes the legacy uniform-sampling path — drawing exactly the same
+    /// RNG sequence as the pre-topology simulator — while a multi-rack
+    /// layout applies the HDFS rack-aware policy (see module docs).
+    pub fn create_file_placed(
+        &mut self,
+        total_mb: f64,
+        block_mb: f64,
+        replication: usize,
+        node_racks: &[u32],
+        rng: &mut Rng,
+    ) -> FileId {
+        let num_nodes = node_racks.len();
         assert!(block_mb > 0.0 && total_mb >= 0.0);
         assert!(replication >= 1 && replication <= num_nodes);
+        let racked = node_racks.iter().any(|&r| r != node_racks[0]);
         let id = FileId(self.next_file);
         self.next_file += 1;
         let full_blocks = (total_mb / block_mb).floor() as u32;
@@ -64,11 +92,14 @@ impl NameNode {
         let n_blocks = full_blocks + if tail > 1e-9 { 1 } else { 0 };
         for i in 0..n_blocks {
             let size = if i < full_blocks { block_mb } else { tail };
-            let replicas = rng
-                .sample_indices(num_nodes, replication)
-                .into_iter()
-                .map(|n| NodeId(n as u32))
-                .collect();
+            let replicas = if racked {
+                place_rack_aware(node_racks, replication, rng)
+            } else {
+                rng.sample_indices(num_nodes, replication)
+                    .into_iter()
+                    .map(|n| NodeId(n as u32))
+                    .collect()
+            };
             blocks.push(BlockInfo {
                 id: BlockId { file: id, index: i },
                 size_mb: size,
@@ -123,6 +154,50 @@ impl NameNode {
         let replicas: usize = blocks.iter().map(|b| b.replicas.len()).sum();
         replicas as f64 / (blocks.len() * num_nodes) as f64
     }
+}
+
+/// One block's replicas under the default HDFS rack-aware policy:
+/// replica 1 on a uniform node (the "writer"), replica 2 off-rack,
+/// replica 3 on a different node of replica 2's rack, the rest uniform
+/// over unchosen nodes. Every step falls back to "any unchosen node"
+/// when its candidate set is empty (degenerate layouts).
+fn place_rack_aware(node_racks: &[u32], replication: usize, rng: &mut Rng) -> Vec<NodeId> {
+    fn pick(cands: &[usize], rng: &mut Rng) -> usize {
+        debug_assert!(!cands.is_empty());
+        cands[rng.below(cands.len() as u64) as usize]
+    }
+    fn unchosen(n: usize, chosen: &[usize], keep: impl Fn(usize) -> bool) -> Vec<usize> {
+        (0..n).filter(|&i| !chosen.contains(&i) && keep(i)).collect()
+    }
+
+    let n = node_racks.len();
+    let mut chosen: Vec<usize> = Vec::with_capacity(replication);
+    let all: Vec<usize> = (0..n).collect();
+    chosen.push(pick(&all, rng));
+    if replication >= 2 {
+        let first_rack = node_racks[chosen[0]];
+        let mut cands = unchosen(n, &chosen, |i| node_racks[i] != first_rack);
+        if cands.is_empty() {
+            cands = unchosen(n, &chosen, |_| true);
+        }
+        let c = pick(&cands, rng);
+        chosen.push(c);
+    }
+    if replication >= 3 {
+        let second_rack = node_racks[chosen[1]];
+        let mut cands = unchosen(n, &chosen, |i| node_racks[i] == second_rack);
+        if cands.is_empty() {
+            cands = unchosen(n, &chosen, |_| true);
+        }
+        let c = pick(&cands, rng);
+        chosen.push(c);
+    }
+    while chosen.len() < replication {
+        let cands = unchosen(n, &chosen, |_| true);
+        let c = pick(&cands, rng);
+        chosen.push(c);
+    }
+    chosen.into_iter().map(|i| NodeId(i as u32)).collect()
 }
 
 #[cfg(test)]
@@ -206,6 +281,71 @@ mod tests {
     fn density_matches_replication() {
         let (nn, f) = nn_with_file(640.0, 64.0);
         assert!((nn.replica_density(f, 10) - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flat_placement_matches_legacy_sampling() {
+        // Regression guard for the `--topology flat` byte-identity
+        // contract: a single-rack layout must draw exactly the RNG
+        // sequence the pre-topology simulator drew (one
+        // `sample_indices(n, k)` per block), so every flat run's
+        // placement — and therefore its locality numbers — is unchanged.
+        let mut nn = NameNode::new();
+        let mut rng = Rng::new(11);
+        let f = nn.create_file_placed(640.0, 64.0, 3, &[0; 10], &mut rng);
+        let mut legacy = Rng::new(11);
+        for b in nn.blocks(f) {
+            let want: Vec<NodeId> = legacy
+                .sample_indices(10, 3)
+                .into_iter()
+                .map(|n| NodeId(n as u32))
+                .collect();
+            assert_eq!(b.replicas, want);
+        }
+        // And create_file is exactly the flat wrapper.
+        let mut nn2 = NameNode::new();
+        let mut rng2 = Rng::new(11);
+        let f2 = nn2.create_file(640.0, 64.0, 3, 10, &mut rng2);
+        for (a, b) in nn.blocks(f).iter().zip(nn2.blocks(f2)) {
+            assert_eq!(a.replicas, b.replicas);
+        }
+    }
+
+    #[test]
+    fn rack_aware_placement_spans_two_racks() {
+        // 2 racks x 5 nodes: nodes 0-4 rack 0, nodes 5-9 rack 1.
+        let racks: Vec<u32> = (0..10).map(|i| (i / 5) as u32).collect();
+        let mut nn = NameNode::new();
+        let mut rng = Rng::new(23);
+        let f = nn.create_file_placed(64.0 * 40.0, 64.0, 3, &racks, &mut rng);
+        for b in nn.blocks(f) {
+            assert_eq!(b.replicas.len(), 3);
+            let mut ids: Vec<u32> = b.replicas.iter().map(|n| n.0).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), 3, "replicas must be distinct");
+            let r: Vec<u32> = b.replicas.iter().map(|n| racks[n.idx()]).collect();
+            // HDFS default: replica 2 off replica 1's rack, replica 3 on
+            // replica 2's rack — exactly two racks, split 1 + 2.
+            assert_ne!(r[0], r[1], "second replica must be off-rack");
+            assert_eq!(r[1], r[2], "third replica shares the second's rack");
+        }
+    }
+
+    #[test]
+    fn rack_aware_degenerate_layouts_still_place() {
+        // More replicas than the off-rack / same-rack candidate sets can
+        // serve: fallbacks keep replicas distinct and complete.
+        let racks = vec![0, 0, 0, 1]; // rack 1 has a single node
+        let mut nn = NameNode::new();
+        let mut rng = Rng::new(5);
+        let f = nn.create_file_placed(256.0, 64.0, 4, &racks, &mut rng);
+        for b in nn.blocks(f) {
+            let mut ids: Vec<u32> = b.replicas.iter().map(|n| n.0).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), 4);
+        }
     }
 
     #[test]

@@ -36,6 +36,7 @@ pub mod workloads;
 
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
+    pub use crate::cluster::{LocalityTier, Topology};
     pub use crate::config::{PmProfile, SimConfig};
     pub use crate::coordinator::{self, Report};
     pub use crate::harness::{run_sweep, run_sweep_resumable, JobMix, Journal, ScenarioGrid};

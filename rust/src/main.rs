@@ -14,7 +14,8 @@
 //!   --json (machine-readable output)
 //! Sweep flags: --grid <default|quick> --preset <fig4-throughput|
 //!   fig5-locality|fig6-deadline-miss> --threads N --seeds N --mix M
-//!   --profile <uniform|split-2x|long-tail>[,..] --arrival
+//!   --profile <uniform|split-2x|long-tail>[,..] --topology
+//!   <flat|racks-N|fat-tree-N>[,..] --arrival
 //!   <steady|burst[-xRATE]>[,..] --fresh (ignore the journal)
 //!   --out DIR (artifact directory, default results/)
 
@@ -229,6 +230,7 @@ fn cmd_throughput(args: &Args) {
 /// JSON is byte-identical at any `--threads` setting and across
 /// interrupt/resume cycles (see `harness` docs).
 fn cmd_sweep(args: &Args) {
+    use vcsched::cluster::Topology;
     use vcsched::config::PmProfile;
     use vcsched::harness::{
         aggregate, aggregates_csv, compare_cells, comparison_json, figure_preset,
@@ -286,6 +288,11 @@ fn cmd_sweep(args: &Args) {
             })
             .collect();
     }
+    if let Some(labels) = args.get("topology") {
+        grid.topologies = Topology::parse_list(labels).unwrap_or_else(|| {
+            panic!("unknown topology in {labels:?} (flat|racks-N|fat-tree-N)")
+        });
+    }
     if let Some(labels) = args.get("arrival") {
         grid.arrivals = labels
             .split(',')
@@ -304,14 +311,15 @@ fn cmd_sweep(args: &Args) {
 
     println!(
         "sweep {:?}: {} scenarios ({} schedulers x {} mixes x {} PM counts x \
-         {} profiles x {} arrivals x {} scales x {} seeds), {} jobs each, \
-         {threads} threads",
+         {} profiles x {} topologies x {} arrivals x {} scales x {} seeds), \
+         {} jobs each, {threads} threads",
         grid.name,
         grid.len(),
         grid.schedulers.len(),
         grid.mixes.len(),
         grid.pm_counts.len(),
         grid.profiles.len(),
+        grid.topologies.len(),
         grid.arrivals.len(),
         grid.scales.len(),
         grid.seed_replicates,
@@ -339,8 +347,8 @@ fn cmd_sweep(args: &Args) {
     let groups = aggregate(&results);
 
     let mut t = Table::new(&[
-        "scheduler", "mix", "pms", "profile", "arrival", "mean_ct", "p50", "p99", "thpt/h",
-        "locality", "misses",
+        "scheduler", "mix", "pms", "profile", "topology", "arrival", "mean_ct", "p50",
+        "p99", "thpt/h", "node/rack/remote", "misses",
     ]);
     for g in &groups {
         t.row(&[
@@ -348,12 +356,16 @@ fn cmd_sweep(args: &Args) {
             g.mix.clone(),
             g.pms.to_string(),
             g.profile.clone(),
+            g.topology.clone(),
             g.arrival.clone(),
             format!("{:.1}±{:.1}s", g.mean_completion_s, g.std_completion_s),
             format!("{:.1}s", g.p50_completion_s),
             format!("{:.1}s", g.p99_completion_s),
             format!("{:.2}±{:.2}", g.mean_throughput_jph, g.std_throughput_jph),
-            format!("{:.1}%", g.mean_locality_pct),
+            format!(
+                "{:.1}/{:.1}/{:.1}%",
+                g.mean_locality_pct, g.mean_rack_pct, g.mean_remote_pct
+            ),
             format!("{:.0}%", g.mean_miss_rate * 100.0),
         ]);
     }
@@ -417,6 +429,7 @@ fn print_comparison(p: &vcsched::harness::Preset, rows: &[vcsched::harness::Comp
     let mut t = Table::new(&[
         "mix",
         "profile",
+        "topology",
         "arrival",
         p.baseline.name(),
         p.candidate.name(),
@@ -426,6 +439,7 @@ fn print_comparison(p: &vcsched::harness::Preset, rows: &[vcsched::harness::Comp
         t.row(&[
             r.mix.clone(),
             r.profile.clone(),
+            r.topology.clone(),
             r.arrival.clone(),
             format!("{:.2}", r.baseline),
             format!("{:.2}", r.candidate),
@@ -556,6 +570,7 @@ fn print_help() {
          sweep: --grid <default|quick> --preset <fig4-throughput|fig5-locality|\n\
          \x20      fig6-deadline-miss> --threads N --seeds N --mix <mixed|TYPE>\n\
          \x20      --sched K[,K..] --profile <uniform|split-2x|long-tail>[,..]\n\
+         \x20      --topology <flat|racks-N|fat-tree-N>[,..]\n\
          \x20      --arrival <steady|burst[-xRATE]>[,..] --fresh --out DIR"
     );
 }

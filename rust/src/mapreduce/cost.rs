@@ -53,11 +53,19 @@ impl TaskCost {
     /// block from a replica over the network (the paper's "expensive data
     /// transfer from a remote node").
     pub fn map_secs(&self, block_mb: f64, local: bool, rng: &mut Rng) -> f64 {
-        let io = if local {
-            block_mb / self.disk_mbps
-        } else {
-            block_mb / self.net_mbps
-        };
+        let io_mbps = if local { self.disk_mbps } else { self.net_mbps };
+        self.map_secs_at(block_mb, io_mbps, rng)
+    }
+
+    /// Map task duration with an explicit input-scan bandwidth — the
+    /// tiered-topology entry point. The coordinator picks `io_mbps` from
+    /// the fetch tier: local disk (node-local), the NIC (rack-local), or
+    /// the contended share of the cross-rack core (off-rack; see
+    /// [`crate::cluster::Topology::cross_rack_mbps`]). Draws exactly one
+    /// jitter sample, like [`TaskCost::map_secs`], so flat-topology runs
+    /// consume an identical RNG stream.
+    pub fn map_secs_at(&self, block_mb: f64, io_mbps: f64, rng: &mut Rng) -> f64 {
+        let io = block_mb / io_mbps;
         let cpu = block_mb / self.map_mb_per_s;
         (io + cpu) * self.jitter(rng)
     }
@@ -151,6 +159,26 @@ mod tests {
         assert!(remote > local, "{remote} <= {local}");
         // The gap is the paper's motivation: remote adds ~block/net time.
         assert!((remote - local) > 0.3);
+    }
+
+    #[test]
+    fn map_secs_at_matches_bool_variant() {
+        // The tiered entry point with NIC bandwidth must equal the legacy
+        // remote path draw-for-draw (the flat byte-identity contract).
+        let c = cost(JobType::Sort);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        for _ in 0..50 {
+            let legacy = c.map_secs(64.0, false, &mut r1);
+            let tiered = c.map_secs_at(64.0, 10.0, &mut r2);
+            assert_eq!(legacy.to_bits(), tiered.to_bits());
+        }
+        // A throttled cross-rack share is strictly slower.
+        let mut r = Rng::new(1);
+        let full = c.map_secs_at(64.0, 10.0, &mut r);
+        let mut r = Rng::new(1);
+        let contended = c.map_secs_at(64.0, 2.5, &mut r);
+        assert!(contended > full);
     }
 
     #[test]

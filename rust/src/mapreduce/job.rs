@@ -1,6 +1,6 @@
 //! Per-job state: task tables, phase machine, locality index, statistics.
 
-use crate::cluster::NodeId;
+use crate::cluster::{Cluster, LocalityTier, NodeId};
 use crate::config::SimConfig;
 use crate::hdfs::{FileId, NameNode};
 use crate::predictor::JobStats;
@@ -43,6 +43,10 @@ pub struct JobState {
     reduces: Vec<TaskState>,
     /// node -> indices of map tasks whose block is replicated there.
     locality: Vec<Vec<u32>>,
+    /// rack -> indices of map tasks with >= 1 replica in that rack (the
+    /// rack-tier analogue of `locality`; all-empty under the flat
+    /// topology, where no rack tier exists).
+    rack_locality: Vec<Vec<u32>>,
     /// map task -> nodes holding its block (inverse of `locality`,
     /// precomputed — the Alg. 1 target scan is on the heartbeat hot path
     /// and rebuilding it per query was ~50% of the scheduler profile).
@@ -58,9 +62,12 @@ pub struct JobState {
     running_reduce_count: u32,
     finished_reduce_count: u32,
 
-    /// Locality accounting (map tasks only).
+    /// Tiered locality accounting (finished map tasks only): node-local,
+    /// rack-local and off-rack counts. `rack_maps` is always 0 under the
+    /// flat topology, collapsing to the seed's binary split.
     pub local_maps: u32,
-    pub nonlocal_maps: u32,
+    pub rack_maps: u32,
+    pub remote_maps: u32,
 
     /// Online Eq. 1 statistics.
     pub stats: JobStats,
@@ -82,8 +89,14 @@ impl JobState {
         rng: &mut Rng,
         now: SimTime,
     ) -> Self {
-        let input_file =
-            nn.create_file(spec.input_mb, cfg.block_mb, cfg.replication, cfg.nodes(), rng);
+        let node_racks = cfg.node_racks();
+        let input_file = nn.create_file_placed(
+            spec.input_mb,
+            cfg.block_mb,
+            cfg.replication,
+            &node_racks,
+            rng,
+        );
         let blocks = nn.blocks(input_file);
         let n_maps = blocks.len().max(1);
         let block_mb: Vec<f64> = if blocks.is_empty() {
@@ -98,6 +111,21 @@ impl JobState {
                 replicas[t as usize].push(NodeId(node as u32));
             }
         }
+        // Rack index (racked topologies only): task t appears once per
+        // rack holding >= 1 of its replicas, in task order per rack.
+        let mut rack_locality: Vec<Vec<u32>> =
+            vec![Vec::new(); cfg.topology.racks() as usize];
+        if cfg.topology.is_racked() {
+            for (t, reps) in replicas.iter().enumerate() {
+                let mut racks: Vec<u32> =
+                    reps.iter().map(|r| node_racks[r.idx()]).collect();
+                racks.sort_unstable();
+                racks.dedup();
+                for rk in racks {
+                    rack_locality[rk as usize].push(t as u32);
+                }
+            }
+        }
         let n_reduces = spec.reducers as usize;
         Self {
             id,
@@ -108,6 +136,7 @@ impl JobState {
             maps: vec![TaskState::Pending; n_maps],
             reduces: vec![TaskState::Pending; n_reduces],
             locality,
+            rack_locality,
             block_mb,
             pending_map_count: n_maps as u32,
             running_map_count: 0,
@@ -117,7 +146,8 @@ impl JobState {
             running_reduce_count: 0,
             finished_reduce_count: 0,
             local_maps: 0,
-            nonlocal_maps: 0,
+            rack_maps: 0,
+            remote_maps: 0,
             stats: JobStats::new(cfg.prior_map_s, cfg.prior_shuffle_s),
             alloc_map_slots: u32::MAX, // unconstrained until the predictor runs
             alloc_reduce_slots: u32::MAX,
@@ -221,6 +251,36 @@ impl JobState {
             .map(TaskId)
     }
 
+    /// All pending map tasks with a replica in `rack`, in block order.
+    /// Always empty under the flat topology (no rack index is built).
+    pub fn pending_rack_maps(&self, rack: u32) -> impl Iterator<Item = TaskId> + '_ {
+        self.rack_locality
+            .get(rack as usize)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+            .iter()
+            .copied()
+            .filter(|&m| self.maps[m as usize].is_pending())
+            .map(TaskId)
+    }
+
+    /// Best achievable locality tier for map task `t` running on `node`:
+    /// the minimum tier over the task's replica set.
+    pub fn map_tier(&self, t: TaskId, node: NodeId, cluster: &Cluster) -> LocalityTier {
+        self.replica_nodes(t.0)
+            .iter()
+            .map(|&r| cluster.tier(node, r))
+            .min()
+            .unwrap_or(LocalityTier::Remote)
+    }
+
+    /// Locality accounting shorthand: finished maps that were *not*
+    /// node-local (rack-local + off-rack) — the seed metrics' "nonlocal"
+    /// bucket.
+    pub fn nonlocal_maps(&self) -> u32 {
+        self.rack_maps + self.remote_maps
+    }
+
     /// All pending map tasks, in block order.
     pub fn pending_maps_iter(&self) -> impl Iterator<Item = TaskId> + '_ {
         self.maps
@@ -289,7 +349,13 @@ impl JobState {
     }
 
     /// Pending/Awaiting -> Running.
-    pub fn mark_map_launched(&mut self, t: TaskId, node: NodeId, local: bool, now: SimTime) {
+    pub fn mark_map_launched(
+        &mut self,
+        t: TaskId,
+        node: NodeId,
+        tier: LocalityTier,
+        now: SimTime,
+    ) {
         let s = &mut self.maps[t.0 as usize];
         match *s {
             TaskState::Pending => self.pending_map_count -= 1,
@@ -299,7 +365,7 @@ impl JobState {
         *s = TaskState::Running {
             node,
             started: now,
-            local,
+            tier,
         };
         self.running_map_count += 1;
     }
@@ -310,7 +376,7 @@ impl JobState {
         let TaskState::Running {
             node,
             started,
-            local,
+            tier,
         } = *s
         else {
             panic!("finishing non-running map {t:?}");
@@ -319,14 +385,14 @@ impl JobState {
             node,
             started,
             finished: now,
-            local,
+            tier,
         };
         self.running_map_count -= 1;
         self.finished_map_count += 1;
-        if local {
-            self.local_maps += 1;
-        } else {
-            self.nonlocal_maps += 1;
+        match tier {
+            LocalityTier::NodeLocal => self.local_maps += 1,
+            LocalityTier::RackLocal => self.rack_maps += 1,
+            LocalityTier::Remote => self.remote_maps += 1,
         }
         self.stats.record_map(crate::predictor::TaskSample {
             duration_s: (now - started).as_secs_f64(),
@@ -343,7 +409,7 @@ impl JobState {
         *s = TaskState::Running {
             node,
             started: now,
-            local: false,
+            tier: LocalityTier::Remote,
         };
         self.pending_reduce_count -= 1;
         self.running_reduce_count += 1;
@@ -358,7 +424,7 @@ impl JobState {
             node,
             started,
             finished: now,
-            local: false,
+            tier: LocalityTier::Remote,
         };
         self.running_reduce_count -= 1;
         self.finished_reduce_count += 1;
@@ -388,7 +454,7 @@ impl JobState {
                 self.total_reduces()
             ));
         }
-        if self.local_maps + self.nonlocal_maps != self.finished_map_count {
+        if self.local_maps + self.rack_maps + self.remote_maps != self.finished_map_count {
             return Err(format!("job {:?}: locality accounting broken", self.id));
         }
         Ok(())

@@ -18,7 +18,7 @@ pub use task::{TaskId, TaskKind, TaskRef, TaskState};
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::NodeId;
+    use crate::cluster::{Cluster, LocalityTier, NodeId, Topology};
     use crate::config::SimConfig;
     use crate::hdfs::NameNode;
     use crate::sim::SimTime;
@@ -56,7 +56,7 @@ mod tests {
         // run all maps
         for i in 0..js.total_maps() {
             let t = js.next_pending_map_any().expect("pending map");
-            js.mark_map_launched(t, n, true, SimTime::from_millis(0));
+            js.mark_map_launched(t, n, LocalityTier::NodeLocal, SimTime::from_millis(0));
             assert!(js.running_maps() > 0);
             js.mark_map_finished(t, SimTime::from_secs_f64(10.0 * (i + 1) as f64));
         }
@@ -92,13 +92,63 @@ mod tests {
         let mut js = job_state();
         let n = NodeId(1);
         let t = js.next_pending_map_any().unwrap();
-        js.mark_map_launched(t, n, false, SimTime::from_millis(10));
+        js.mark_map_launched(t, n, LocalityTier::Remote, SimTime::from_millis(10));
         assert_eq!(js.pending_maps(), js.total_maps() - 1);
         assert_eq!(js.running_maps(), 1);
         js.mark_map_finished(t, SimTime::from_secs_f64(20.0));
         assert_eq!(js.running_maps(), 0);
         assert_eq!(js.completed_maps(), 1);
-        assert_eq!(js.local_maps + js.nonlocal_maps, 1);
-        assert_eq!(js.nonlocal_maps, 1);
+        assert_eq!(js.local_maps + js.nonlocal_maps(), 1);
+        assert_eq!(js.remote_maps, 1);
+        assert_eq!(js.rack_maps, 0);
+    }
+
+    #[test]
+    fn tier_accounting_splits_rack_from_remote() {
+        let mut js = job_state();
+        let n = NodeId(2);
+        let t = js.next_pending_map_any().unwrap();
+        js.mark_map_launched(t, n, LocalityTier::RackLocal, SimTime::from_millis(0));
+        js.mark_map_finished(t, SimTime::from_secs_f64(9.0));
+        assert_eq!(js.rack_maps, 1);
+        assert_eq!(js.remote_maps, 0);
+        assert_eq!(js.nonlocal_maps(), 1);
+        js.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rack_index_and_map_tier_consistent() {
+        let cfg = SimConfig {
+            topology: Topology::Racks(2),
+            ..SimConfig::small()
+        };
+        let cluster = Cluster::build(&cfg);
+        let mut nn = NameNode::new();
+        let mut rng = Rng::new(3);
+        let spec = JobSpec::new(JobType::Sort, 512.0).with_deadline(900.0);
+        let js = JobState::create(JobId(0), spec, &cfg, &mut nn, &mut rng, SimTime::ZERO);
+        for m in 0..js.total_maps() {
+            let t = TaskId(m);
+            // A replica node sees NodeLocal; a same-rack non-replica node
+            // sees RackLocal; and the pending rack index agrees.
+            let reps = js.replica_nodes(m).to_vec();
+            assert_eq!(js.map_tier(t, reps[0], &cluster), LocalityTier::NodeLocal);
+            for n in 0..cfg.nodes() {
+                let node = NodeId(n as u32);
+                let tier = js.map_tier(t, node, &cluster);
+                let in_rack_index = js.pending_rack_maps(cluster.rack_of(node)).any(|x| x == t);
+                match tier {
+                    LocalityTier::NodeLocal | LocalityTier::RackLocal => {
+                        assert!(in_rack_index, "task {m} missing from rack index")
+                    }
+                    LocalityTier::Remote => {
+                        assert!(!in_rack_index, "task {m} wrongly rack-indexed")
+                    }
+                }
+            }
+        }
+        // Flat jobs build no rack index at all.
+        let flat = job_state();
+        assert_eq!(flat.pending_rack_maps(0).count(), 0);
     }
 }

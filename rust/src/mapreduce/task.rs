@@ -1,6 +1,6 @@
 //! Task identities and per-task state.
 
-use crate::cluster::NodeId;
+use crate::cluster::{LocalityTier, NodeId};
 use crate::sim::SimTime;
 
 use super::JobId;
@@ -51,14 +51,16 @@ pub enum TaskState {
     Running {
         node: NodeId,
         started: SimTime,
-        /// Map only: was the input block local?
-        local: bool,
+        /// Map only: input-fetch locality tier (node/rack/remote).
+        /// Reduces record [`LocalityTier::Remote`] — their shuffle reads
+        /// every mapper regardless of placement (paper §4.2).
+        tier: LocalityTier,
     },
     Finished {
         node: NodeId,
         started: SimTime,
         finished: SimTime,
-        local: bool,
+        tier: LocalityTier,
     },
 }
 
@@ -109,14 +111,14 @@ mod tests {
         let s = TaskState::Running {
             node: NodeId(0),
             started: SimTime::ZERO,
-            local: true,
+            tier: LocalityTier::NodeLocal,
         };
         assert!(s.is_running());
         let s = TaskState::Finished {
             node: NodeId(0),
             started: SimTime::from_millis(100),
             finished: SimTime::from_millis(600),
-            local: false,
+            tier: LocalityTier::Remote,
         };
         assert!(s.is_finished());
         assert_eq!(s.duration(), Some(SimTime::from_millis(500)));

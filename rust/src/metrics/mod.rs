@@ -22,15 +22,25 @@ pub struct JobRecord {
     pub map_phase_s: f64,
     pub deadline_s: Option<f64>,
     pub met_deadline: Option<bool>,
+    /// Tiered map-locality split: node-local, rack-local, off-rack.
+    /// `rack_maps` is always 0 under the flat topology, collapsing the
+    /// split to the seed's binary local/remote accounting.
     pub local_maps: u32,
-    pub nonlocal_maps: u32,
+    pub rack_maps: u32,
+    pub remote_maps: u32,
     pub maps: u32,
     pub reduces: u32,
 }
 
 impl JobRecord {
+    /// Maps that were not node-local (rack-local + off-rack) — the seed
+    /// metrics' "nonlocal" bucket.
+    pub fn nonlocal_maps(&self) -> u32 {
+        self.rack_maps + self.remote_maps
+    }
+
     pub fn locality_pct(&self) -> f64 {
-        let total = self.local_maps + self.nonlocal_maps;
+        let total = self.local_maps + self.nonlocal_maps();
         if total == 0 {
             0.0
         } else {
@@ -75,19 +85,39 @@ impl RunMetrics {
         s.mean()
     }
 
-    /// Cluster-wide map locality percentage.
-    pub fn locality_pct(&self) -> f64 {
-        let local: u64 = self.jobs.iter().map(|j| j.local_maps as u64).sum();
-        let total: u64 = self
-            .jobs
+    fn total_maps_finished(&self) -> u64 {
+        self.jobs
             .iter()
-            .map(|j| (j.local_maps + j.nonlocal_maps) as u64)
-            .sum();
+            .map(|j| (j.local_maps + j.rack_maps + j.remote_maps) as u64)
+            .sum()
+    }
+
+    fn tier_pct(&self, count: impl Fn(&JobRecord) -> u32) -> f64 {
+        let total = self.total_maps_finished();
         if total == 0 {
             0.0
         } else {
-            100.0 * local as f64 / total as f64
+            let c: u64 = self.jobs.iter().map(|j| count(j) as u64).sum();
+            100.0 * c as f64 / total as f64
         }
+    }
+
+    /// Cluster-wide *node-local* map percentage (the seed's headline
+    /// locality metric; see [`RunMetrics::rack_pct`] /
+    /// [`RunMetrics::remote_pct`] for the other two tiers).
+    pub fn locality_pct(&self) -> f64 {
+        self.tier_pct(|j| j.local_maps)
+    }
+
+    /// Cluster-wide *rack-local* map percentage (0 on flat topologies).
+    pub fn rack_pct(&self) -> f64 {
+        self.tier_pct(|j| j.rack_maps)
+    }
+
+    /// Cluster-wide *off-rack* map percentage. The three tier percentages
+    /// sum to 100 (when any map finished).
+    pub fn remote_pct(&self) -> f64 {
+        self.tier_pct(|j| j.remote_maps)
     }
 
     /// Deadline miss rate over jobs that had deadlines.
@@ -147,7 +177,8 @@ impl RunMetrics {
                         j.met_deadline.map(Json::Bool).unwrap_or(Json::Null),
                     )
                     .set("local_maps", j.local_maps as u64)
-                    .set("nonlocal_maps", j.nonlocal_maps as u64),
+                    .set("rack_maps", j.rack_maps as u64)
+                    .set("remote_maps", j.remote_maps as u64),
             );
         }
         Json::obj()
@@ -155,6 +186,8 @@ impl RunMetrics {
             .set("makespan_s", self.makespan_s)
             .set("throughput_jobs_per_hour", self.throughput_jobs_per_hour())
             .set("locality_pct", self.locality_pct())
+            .set("rack_pct", self.rack_pct())
+            .set("remote_pct", self.remote_pct())
             .set("miss_rate", self.miss_rate())
             .set("hotplugs", self.hotplugs)
             .set("heartbeats", self.heartbeats)
@@ -168,7 +201,14 @@ impl RunMetrics {
 mod tests {
     use super::*;
 
-    fn record(t: JobType, comp: f64, local: u32, nonlocal: u32, met: Option<bool>) -> JobRecord {
+    fn record_tiered(
+        t: JobType,
+        comp: f64,
+        local: u32,
+        rack: u32,
+        remote: u32,
+        met: Option<bool>,
+    ) -> JobRecord {
         JobRecord {
             id: JobId(0),
             job_type: t,
@@ -180,10 +220,15 @@ mod tests {
             deadline_s: met.map(|_| 100.0),
             met_deadline: met,
             local_maps: local,
-            nonlocal_maps: nonlocal,
-            maps: local + nonlocal,
+            rack_maps: rack,
+            remote_maps: remote,
+            maps: local + rack + remote,
             reduces: 4,
         }
+    }
+
+    fn record(t: JobType, comp: f64, local: u32, nonlocal: u32, met: Option<bool>) -> JobRecord {
+        record_tiered(t, comp, local, 0, nonlocal, met)
     }
 
     #[test]
@@ -209,6 +254,28 @@ mod tests {
             ..Default::default()
         };
         assert!((m.locality_pct() - 62.5).abs() < 1e-9);
+        // Flat records put everything nonlocal into the remote tier.
+        assert_eq!(m.rack_pct(), 0.0);
+        assert!((m.remote_pct() - 37.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tier_split_sums_to_hundred() {
+        let m = RunMetrics {
+            jobs: vec![
+                record_tiered(JobType::Grep, 10.0, 4, 3, 1, None),
+                record_tiered(JobType::Sort, 20.0, 2, 4, 2, None),
+            ],
+            ..Default::default()
+        };
+        assert!((m.locality_pct() - 37.5).abs() < 1e-9);
+        assert!((m.rack_pct() - 43.75).abs() < 1e-9);
+        assert!((m.remote_pct() - 18.75).abs() < 1e-9);
+        assert!(
+            (m.locality_pct() + m.rack_pct() + m.remote_pct() - 100.0).abs() < 1e-9
+        );
+        // Per-record shorthand still reports the binary split.
+        assert_eq!(m.jobs[0].nonlocal_maps(), 4);
     }
 
     #[test]

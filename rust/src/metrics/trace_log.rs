@@ -2,7 +2,7 @@
 //! be exported as JSON (for external plotting) or rendered as an ASCII
 //! Gantt chart (for quick terminal inspection of scheduler behaviour).
 
-use crate::cluster::NodeId;
+use crate::cluster::{LocalityTier, NodeId};
 use crate::mapreduce::{JobId, TaskKind};
 use crate::sim::SimTime;
 use crate::util::json::Json;
@@ -16,7 +16,18 @@ pub struct TaskSpan {
     pub node: NodeId,
     pub start: SimTime,
     pub end: SimTime,
-    pub local: bool,
+    /// Map only: input-fetch locality tier (reduces record `Remote`; see
+    /// `mapreduce::TaskState`). Keeps the trace able to explain the
+    /// per-tier locality split the run metrics report.
+    pub tier: LocalityTier,
+}
+
+impl TaskSpan {
+    /// Was this map's input node-local? (The seed trace schema's binary
+    /// `local` flag, kept for the Gantt markers and locality cross-check.)
+    pub fn is_local(&self) -> bool {
+        self.tier == LocalityTier::NodeLocal
+    }
 }
 
 /// One vCPU hot-plug marker.
@@ -69,7 +80,8 @@ impl TraceLog {
                     .set("node", s.node.0 as u64)
                     .set("start_s", s.start.as_secs_f64())
                     .set("end_s", s.end.as_secs_f64())
-                    .set("local", s.local),
+                    .set("local", s.is_local())
+                    .set("tier", s.tier.name()),
             );
         }
         let mut hp = Json::arr();
@@ -85,8 +97,8 @@ impl TraceLog {
     }
 
     /// Render an ASCII Gantt chart: one row per node, time bucketed into
-    /// `width` columns. Map tasks print the job id digit (uppercase-ish
-    /// marker `*` for non-local), reduce tasks print `r`.
+    /// `width` columns. Map tasks print the job id digit (`+` for
+    /// rack-local, `*` for off-rack), reduce tasks print `r`.
     pub fn render_gantt(&self, num_nodes: usize, width: usize) -> String {
         let end = self
             .spans
@@ -106,12 +118,13 @@ impl TraceLog {
             }
             let c0 = ((s.start.as_secs_f64() / total) * width as f64) as usize;
             let c1 = (((s.end.as_secs_f64() / total) * width as f64) as usize).max(c0 + 1);
-            let ch = match s.kind {
-                TaskKind::Reduce => 'r',
-                TaskKind::Map if s.local => {
+            let ch = match (s.kind, s.tier) {
+                (TaskKind::Reduce, _) => 'r',
+                (TaskKind::Map, LocalityTier::NodeLocal) => {
                     char::from_digit(s.job.0 % 10, 10).unwrap_or('m')
                 }
-                TaskKind::Map => '*',
+                (TaskKind::Map, LocalityTier::RackLocal) => '+',
+                (TaskKind::Map, LocalityTier::Remote) => '*',
             };
             for c in c0..c1.min(width) {
                 rows[n][c] = ch;
@@ -119,8 +132,8 @@ impl TraceLog {
         }
         let mut out = String::new();
         out.push_str(&format!(
-            "Gantt ({total:.0}s across {width} cols; digits = local map of job N, \
-             '*' = remote map, 'r' = reduce)\n"
+            "Gantt ({total:.0}s across {width} cols; digits = node-local map of \
+             job N, '+' = rack-local map, '*' = off-rack map, 'r' = reduce)\n"
         ));
         for (n, row) in rows.iter().enumerate() {
             out.push_str(&format!("node {n:>3} |"));
@@ -140,7 +153,7 @@ impl TraceLog {
         if maps.is_empty() {
             return 0.0;
         }
-        100.0 * maps.iter().filter(|s| s.local).count() as f64 / maps.len() as f64
+        100.0 * maps.iter().filter(|s| s.is_local()).count() as f64 / maps.len() as f64
     }
 }
 
@@ -148,7 +161,7 @@ impl TraceLog {
 mod tests {
     use super::*;
 
-    fn span(job: u32, node: u32, s: f64, e: f64, local: bool, kind: TaskKind) -> TaskSpan {
+    fn span(job: u32, node: u32, s: f64, e: f64, tier: LocalityTier, kind: TaskKind) -> TaskSpan {
         TaskSpan {
             job: JobId(job),
             kind,
@@ -156,14 +169,14 @@ mod tests {
             node: NodeId(node),
             start: SimTime::from_secs_f64(s),
             end: SimTime::from_secs_f64(e),
-            local,
+            tier,
         }
     }
 
     #[test]
     fn json_export_shape() {
         let mut t = TraceLog::new();
-        t.record_span(span(1, 0, 0.0, 5.0, true, TaskKind::Map));
+        t.record_span(span(1, 0, 0.0, 5.0, LocalityTier::NodeLocal, TaskKind::Map));
         t.record_hotplug(HotplugMark {
             at: SimTime::from_secs_f64(2.0),
             from: NodeId(0),
@@ -172,19 +185,22 @@ mod tests {
         let s = t.to_json().render();
         assert!(s.contains("\"kind\":\"map\""));
         assert!(s.contains("\"local\":true"));
+        assert!(s.contains("\"tier\":\"node\""));
         assert!(s.contains("\"hotplugs\":[{\"at_s\":2"));
     }
 
     #[test]
     fn gantt_renders_rows_and_markers() {
         let mut t = TraceLog::new();
-        t.record_span(span(3, 0, 0.0, 50.0, true, TaskKind::Map));
-        t.record_span(span(4, 1, 50.0, 100.0, false, TaskKind::Map));
-        t.record_span(span(4, 1, 0.0, 30.0, false, TaskKind::Reduce));
+        t.record_span(span(3, 0, 0.0, 50.0, LocalityTier::NodeLocal, TaskKind::Map));
+        t.record_span(span(4, 1, 50.0, 100.0, LocalityTier::Remote, TaskKind::Map));
+        t.record_span(span(5, 1, 30.0, 50.0, LocalityTier::RackLocal, TaskKind::Map));
+        t.record_span(span(4, 1, 0.0, 30.0, LocalityTier::Remote, TaskKind::Reduce));
         let g = t.render_gantt(2, 40);
         assert!(g.contains("node   0"));
         assert!(g.contains('3'), "{g}");
         assert!(g.contains('*'), "{g}");
+        assert!(g.contains('+'), "{g}");
         assert!(g.contains('r'), "{g}");
     }
 
@@ -197,9 +213,9 @@ mod tests {
     #[test]
     fn span_locality_matches() {
         let mut t = TraceLog::new();
-        t.record_span(span(0, 0, 0.0, 1.0, true, TaskKind::Map));
-        t.record_span(span(0, 0, 0.0, 1.0, false, TaskKind::Map));
-        t.record_span(span(0, 0, 0.0, 1.0, false, TaskKind::Reduce));
+        t.record_span(span(0, 0, 0.0, 1.0, LocalityTier::NodeLocal, TaskKind::Map));
+        t.record_span(span(0, 0, 0.0, 1.0, LocalityTier::RackLocal, TaskKind::Map));
+        t.record_span(span(0, 0, 0.0, 1.0, LocalityTier::Remote, TaskKind::Reduce));
         assert_eq!(t.span_locality_pct(), 50.0);
     }
 }

@@ -34,8 +34,8 @@ use crate::predictor::{JobDemand, Predictor};
 use crate::sim::SimTime;
 
 use super::{
-    next_unclaimed_any, next_unclaimed_local, Action, ClaimSet, EdfScheduler, SchedView,
-    Scheduler, SchedulerKind,
+    next_unclaimed_any, next_unclaimed_local, next_unclaimed_rack, Action, ClaimSet,
+    EdfScheduler, SchedView, Scheduler, SchedulerKind,
 };
 
 /// Tunable policy knobs — every mechanism of the proposed scheduler can
@@ -256,6 +256,12 @@ impl Scheduler for DeadlineVcScheduler {
             .map(|i| view.cluster.vm(NodeId(i as u32)).free_map_slots())
             .collect();
         let mut free_reduce = view.cluster.vm(node).free_reduce_slots();
+        // Rack-aware tie-break for the non-local pick: among tasks with no
+        // replica on `n`, prefer one with a replica in n's *rack* — if it
+        // ends up launching remotely on n the fetch stays off the shared
+        // cross-rack core. Inert on the flat topology (no rack index).
+        let racked = view.cluster.topology().is_racked();
+        let my_rack = view.cluster.rack_of(node);
         let mut claimed = ClaimSet::new();
         let mut extra_sched: HashMap<JobId, u32> = HashMap::new();
         let mut released_this_hb = false;
@@ -306,8 +312,21 @@ impl Scheduler for DeadlineVcScheduler {
                             continue;
                         }
                     }
-                    // Alg. 1 lines 3-13: non-local task.
-                    let Some(t) = next_unclaimed_any(job, &claimed) else {
+                    // Alg. 1 lines 3-13: non-local task. Prefer a task
+                    // with a replica in n's rack only when n has a free
+                    // slot — i.e. when the pick could fall back to a
+                    // remote launch *on n*, where rack-nearness keeps the
+                    // fetch off the shared core. In routing-only mode
+                    // (free[n] == 0) keep the block-order pick: a
+                    // rack-near preference there could select an
+                    // unroutable task and skip a routable one.
+                    let rack_pick = if racked && free[node.idx()] > 0 {
+                        next_unclaimed_rack(job, my_rack, &claimed)
+                    } else {
+                        None
+                    };
+                    let Some(t) = rack_pick.or_else(|| next_unclaimed_any(job, &claimed))
+                    else {
                         break;
                     };
                     let Some(target) = self.choose_target(view, job, t) else {

@@ -1,12 +1,22 @@
 //! Delay Scheduling (Zaharia et al., EuroSys'10 — the paper's ref [16]):
 //! Fair Scheduler ranking, but a job with no node-local task *waits* for
-//! up to `patience` heartbeats before accepting a remote task. Improves
+//! up to `patience` heartbeats before degrading its locality. Improves
 //! locality without VM reconfiguration — the natural software-only
 //! baseline against the paper's hot-plug approach.
+//!
+//! On racked topologies the wait is **tiered**, the two-level scheme of
+//! Zaharia et al. §4.2 (and the rack-aware follow-ups, arXiv:1506.00425):
+//! a skipped job first unlocks *rack-local* tasks after `patience`
+//! heartbeats, and only unlocks *off-rack* tasks after `2 * patience`.
+//! On the flat topology there is no rack tier, so the single threshold
+//! degenerates to the original local-then-remote behaviour (byte-
+//! identical to the seed). One skip counter per job is kept; any map
+//! launch for the job resets it (a simplification of the paper's
+//! per-level timers that keeps the state machine one integer).
 
 use std::collections::HashMap;
 
-use crate::cluster::NodeId;
+use crate::cluster::{LocalityTier, NodeId};
 use crate::mapreduce::JobId;
 use crate::predictor::Predictor;
 
@@ -26,6 +36,26 @@ impl DelayScheduler {
             skipped: HashMap::new(),
         }
     }
+
+    /// Worst locality tier `job` may accept after `skipped` fruitless
+    /// heartbeats: node-only below `patience`; then rack-local (racked
+    /// topologies) at `patience`; off-rack at `2 * patience` (or already
+    /// at `patience` when there is no rack tier to wait for).
+    fn tier_cap(patience: u32, skipped: u32, racked: bool) -> LocalityTier {
+        if !racked {
+            if skipped >= patience {
+                LocalityTier::Remote
+            } else {
+                LocalityTier::NodeLocal
+            }
+        } else if skipped >= patience.saturating_mul(2) {
+            LocalityTier::Remote
+        } else if skipped >= patience {
+            LocalityTier::RackLocal
+        } else {
+            LocalityTier::NodeLocal
+        }
+    }
 }
 
 impl Scheduler for DelayScheduler {
@@ -40,11 +70,13 @@ impl Scheduler for DelayScheduler {
         _predictor: &mut dyn Predictor,
     ) -> Vec<Action> {
         let order = FairScheduler::fair_order(view);
-        // A job may go remote once its skip counter exceeded patience.
+        // A job degrades one locality tier per exhausted patience window.
         let skipped = &self.skipped;
         let patience = self.patience;
+        let racked = view.cluster.topology().is_racked();
         let actions = greedy_fill(view, node, &order, |job| {
-            skipped.get(&job.id).copied().unwrap_or(0) >= patience
+            let s = skipped.get(&job.id).copied().unwrap_or(0);
+            Self::tier_cap(patience, s, racked)
         });
         // Update skip counters: jobs with pending maps that got nothing
         // local on this heartbeat accumulate patience; a local launch
@@ -99,6 +131,22 @@ mod tests {
         let mut s = DelayScheduler::new(0);
         let a = w.heartbeat_with(&mut s, NodeId(0));
         assert!(a.iter().any(|x| matches!(x, Action::LaunchMap { .. })));
+    }
+
+    #[test]
+    fn tiered_patience_caps() {
+        use LocalityTier::{NodeLocal, RackLocal, Remote};
+        // Flat: a single threshold, the seed behaviour.
+        assert_eq!(DelayScheduler::tier_cap(3, 2, false), NodeLocal);
+        assert_eq!(DelayScheduler::tier_cap(3, 3, false), Remote);
+        // Racked: rack-local unlocks at patience, off-rack at 2x.
+        assert_eq!(DelayScheduler::tier_cap(3, 2, true), NodeLocal);
+        assert_eq!(DelayScheduler::tier_cap(3, 3, true), RackLocal);
+        assert_eq!(DelayScheduler::tier_cap(3, 5, true), RackLocal);
+        assert_eq!(DelayScheduler::tier_cap(3, 6, true), Remote);
+        // Zero patience goes remote immediately on either topology.
+        assert_eq!(DelayScheduler::tier_cap(0, 0, true), Remote);
+        assert_eq!(DelayScheduler::tier_cap(0, 0, false), Remote);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! mechanism — the ablation between EDF and DeadlineVc measures what the
 //! hot-plug machinery itself buys.
 
-use crate::cluster::NodeId;
+use crate::cluster::{LocalityTier, NodeId};
 use crate::predictor::Predictor;
 use crate::sim::SimTime;
 
@@ -50,7 +50,7 @@ impl Scheduler for EdfScheduler {
         _predictor: &mut dyn Predictor,
     ) -> Vec<Action> {
         let order = Self::edf_order(view);
-        greedy_fill(view, node, &order, |_| true)
+        greedy_fill(view, node, &order, |_| LocalityTier::Remote)
     }
 }
 

@@ -7,7 +7,7 @@
 //! Map tasks prefer node-local blocks but fall back to remote immediately
 //! (locality patience is the Delay variant, `delay.rs`).
 
-use crate::cluster::NodeId;
+use crate::cluster::{LocalityTier, NodeId};
 use crate::mapreduce::JobState;
 use crate::predictor::Predictor;
 
@@ -62,7 +62,7 @@ impl Scheduler for FairScheduler {
         _predictor: &mut dyn Predictor,
     ) -> Vec<Action> {
         let order = Self::fair_order(view);
-        greedy_fill(view, node, &order, |_| true)
+        greedy_fill(view, node, &order, |_| LocalityTier::Remote)
     }
 }
 

@@ -2,7 +2,7 @@
 //! heartbeat the oldest unfinished job fills the node's free slots
 //! (node-local map preferred, else any).
 
-use crate::cluster::NodeId;
+use crate::cluster::{LocalityTier, NodeId};
 use crate::predictor::Predictor;
 
 use super::{greedy_fill, Action, SchedView, Scheduler, SchedulerKind};
@@ -31,7 +31,7 @@ impl Scheduler for FifoScheduler {
         let order: Vec<usize> = (0..view.jobs.len())
             .filter(|&i| !view.jobs[i].is_done())
             .collect();
-        greedy_fill(view, node, &order, |_| true)
+        greedy_fill(view, node, &order, |_| LocalityTier::Remote)
     }
 }
 

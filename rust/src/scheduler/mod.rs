@@ -21,7 +21,7 @@ pub use edf::EdfScheduler;
 pub use fair::FairScheduler;
 pub use fifo::FifoScheduler;
 
-use crate::cluster::{Cluster, NodeId};
+use crate::cluster::{Cluster, LocalityTier, NodeId};
 use crate::config::SimConfig;
 use crate::mapreduce::{JobId, JobState, TaskId};
 use crate::predictor::Predictor;
@@ -180,16 +180,22 @@ pub trait Scheduler {
 
 /// Shared helper: launch as many tasks as `node` has free slots, scanning
 /// `job_order` (indices into `view.jobs`). Used by the FIFO/Fair/Delay/EDF
-/// baselines — prefer a node-local pending map, else (if `allow_remote`)
-/// any pending map; reduces fill reduce slots once the map phase is done.
+/// baselines — pick the best-tier pending map the job's cap admits
+/// (node-local > rack-local > off-rack; `max_tier_for` returns the worst
+/// tier the job may accept on this heartbeat); reduces fill reduce slots
+/// once the map phase is done. Under the flat topology the rack stage is
+/// inert (no rack index exists), so `max_tier_for == Remote` reproduces
+/// the seed's local-else-any behaviour exactly.
 pub(crate) fn greedy_fill(
     view: &SchedView,
     node: NodeId,
     job_order: &[usize],
-    allow_remote_for: impl Fn(&JobState) -> bool,
+    max_tier_for: impl Fn(&JobState) -> LocalityTier,
 ) -> Vec<Action> {
     let mut actions = Vec::new();
     let vm = view.cluster.vm(node);
+    let rack = view.cluster.rack_of(node);
+    let racked = view.cluster.topology().is_racked();
     let mut free_map = vm.free_map_slots();
     let mut free_reduce = vm.free_reduce_slots();
     // Track launches within this heartbeat so one task isn't picked twice.
@@ -203,14 +209,22 @@ pub(crate) fn greedy_fill(
         }
         // Map work.
         while free_map > 0 {
-            let pick_local = next_unclaimed_local(job, node, &claimed_maps);
-            let pick = pick_local.or_else(|| {
-                if allow_remote_for(job) {
-                    next_unclaimed_any(job, &claimed_maps)
-                } else {
-                    None
-                }
-            });
+            let cap = max_tier_for(job);
+            let pick = next_unclaimed_local(job, node, &claimed_maps)
+                .or_else(|| {
+                    if racked && cap >= LocalityTier::RackLocal {
+                        next_unclaimed_rack(job, rack, &claimed_maps)
+                    } else {
+                        None
+                    }
+                })
+                .or_else(|| {
+                    if cap >= LocalityTier::Remote {
+                        next_unclaimed_any(job, &claimed_maps)
+                    } else {
+                        None
+                    }
+                });
             let Some(task) = pick else { break };
             claimed_maps.insert((job.id, task));
             actions.push(Action::LaunchMap {
@@ -251,6 +265,17 @@ pub(crate) fn next_unclaimed_local(
     claimed: &ClaimSet,
 ) -> Option<TaskId> {
     job.pending_local_maps(node)
+        .find(|&t| !claimed.contains(&(job.id, t)))
+}
+
+/// First pending map task with a replica in `rack` not yet claimed this
+/// heartbeat (the rack-local pick; empty under the flat topology).
+pub(crate) fn next_unclaimed_rack(
+    job: &JobState,
+    rack: u32,
+    claimed: &ClaimSet,
+) -> Option<TaskId> {
+    job.pending_rack_maps(rack)
         .find(|&t| !claimed.contains(&(job.id, t)))
 }
 

@@ -162,8 +162,8 @@ impl TestWorld {
                 .map(|i| NodeId(i as u32))
                 .find(|&nd| self.world.cluster.vm(nd).free_map_slots() > 0)
                 .expect("free slot");
-            let local = self.world.jobs[ji].map_is_local(t, node);
-            self.world.launch_map(id, t, node, local);
+            let tier = self.world.jobs[ji].map_tier(t, node, &self.world.cluster);
+            self.world.launch_map(id, t, node, tier);
         }
     }
 

@@ -113,7 +113,33 @@ fn hotplug_storm_conserves_cores() {
     // Invariants were checked after every event inside the run (debug
     // asserts in apply_actions); here we sanity-check the metrics side.
     for j in &r.jobs {
-        assert_eq!(j.local_maps + j.nonlocal_maps, j.maps);
+        assert_eq!(j.local_maps + j.rack_maps + j.remote_maps, j.maps);
+    }
+}
+
+#[test]
+fn one_pm_per_rack_still_completes() {
+    // Degenerate racked layout: as many racks as PMs, so rack-local and
+    // node-local collapse to the same PM and almost everything else is
+    // off-rack through the shared core.
+    use vcsched::cluster::Topology;
+    let cfg = SimConfig {
+        topology: Topology::Racks(4), // small(): exactly 4 PMs
+        ..SimConfig::small()
+    };
+    for kind in SchedulerKind::ALL {
+        let r = run(
+            &cfg,
+            kind,
+            vec![
+                JobSpec::new(JobType::Sort, 512.0).with_deadline(3600.0),
+                JobSpec::new(JobType::Grep, 256.0).with_deadline(3600.0).at(2.0),
+            ],
+        );
+        assert_eq!(r.completed_jobs(), 2, "{}", kind.name());
+        for j in &r.jobs {
+            assert_eq!(j.local_maps + j.rack_maps + j.remote_maps, j.maps);
+        }
     }
 }
 

@@ -148,7 +148,32 @@ fn full_replication_gives_full_locality() {
     let r = vcsched::coordinator::run_simulation(&cfg, SchedulerKind::DeadlineVc, &trace);
     assert_eq!(r.locality_pct(), 100.0);
     for j in &r.jobs {
-        assert_eq!(j.local_maps + j.nonlocal_maps, j.maps);
+        assert_eq!(j.local_maps + j.rack_maps + j.remote_maps, j.maps);
+    }
+}
+
+/// Tiered locality accounting holds on racked topologies too, and the
+/// flat topology never reports a rack tier.
+#[test]
+fn tier_accounting_consistent_across_topologies() {
+    use vcsched::cluster::Topology;
+    for topology in [Topology::Flat, Topology::Racks(2), Topology::FatTree(2)] {
+        let cfg = SimConfig {
+            topology,
+            ..SimConfig::small()
+        };
+        let trace = JobTrace::poisson(&cfg, 6, 3.0, 1.6..3.0, 17);
+        for kind in SchedulerKind::ALL {
+            let r = vcsched::coordinator::run_simulation(&cfg, kind, &trace);
+            for j in &r.jobs {
+                assert_eq!(j.local_maps + j.rack_maps + j.remote_maps, j.maps);
+                if !topology.is_racked() {
+                    assert_eq!(j.rack_maps, 0, "flat run grew a rack tier");
+                }
+            }
+            let split = r.locality_pct() + r.rack_pct() + r.remote_pct();
+            assert!((split - 100.0).abs() < 1e-9);
+        }
     }
 }
 

@@ -19,12 +19,14 @@ fn test_grid() -> ScenarioGrid {
     g
 }
 
-/// The same grid stretched along the heterogeneity and arrival axes (the
-/// determinism contract must hold for every axis combination).
+/// The same grid stretched along the heterogeneity, topology and arrival
+/// axes (the determinism contract must hold for every axis combination).
 fn heterogeneous_grid() -> ScenarioGrid {
+    use vcsched::cluster::Topology;
     let mut g = test_grid();
     g.mixes.truncate(1);
     g.profiles = vec![PmProfile::Uniform, PmProfile::Split2x, PmProfile::LongTail];
+    g.topologies = vec![Topology::Flat, Topology::Racks(2)];
     g.arrivals = vec![Arrival::STEADY, Arrival::burst(2.0)];
     g
 }
@@ -59,15 +61,22 @@ fn json_artifact_byte_identical_at_1_2_and_8_threads() {
 #[test]
 fn heterogeneous_axes_byte_identical_across_thread_counts() {
     let grid = heterogeneous_grid();
-    assert_eq!(grid.len(), 24, "2 scheds x 1 mix x 3 profiles x 2 arrivals x 2 seeds");
+    assert_eq!(
+        grid.len(),
+        48,
+        "2 scheds x 1 mix x 3 profiles x 2 topologies x 2 arrivals x 2 seeds"
+    );
     let (json1, csv1) = artifact_bytes(&grid, 1);
     let (json4, csv4) = artifact_bytes(&grid, 4);
     assert_eq!(json1, json4, "heterogeneous sweep diverged across threads");
     assert_eq!(csv1, csv4);
     // The axes actually reach the artifacts.
     assert!(json1.contains("\"profile\":\"long-tail\""));
+    assert!(json1.contains("\"topology\":\"racks-2\""));
+    assert!(json1.contains("\"rack_pct\""));
     assert!(json1.contains("\"arrival\":\"burst-x2\""));
     assert!(csv1.lines().any(|l| l.contains("split-2x")));
+    assert!(csv1.lines().next().unwrap().contains("mean_rack_pct"));
 }
 
 #[test]

@@ -4,6 +4,7 @@
 
 use std::path::PathBuf;
 
+use vcsched::cluster::Topology;
 use vcsched::config::PmProfile;
 use vcsched::harness::{
     aggregate, aggregates_csv, run_scenarios_with, run_sweep, run_sweep_resumable,
@@ -11,14 +12,16 @@ use vcsched::harness::{
 };
 use vcsched::workloads::trace::Arrival;
 
-/// Small grid that still exercises the heterogeneity and arrival axes:
-/// 2 schedulers x 1 mix x 2 profiles x 2 arrivals x 2 seeds = 16 cells.
+/// Small grid that still exercises the heterogeneity, topology and
+/// arrival axes: 2 schedulers x 1 mix x 2 profiles x 2 topologies x
+/// 2 arrivals x 2 seeds = 32 cells.
 fn grid() -> ScenarioGrid {
     let mut g = ScenarioGrid::quick();
     g.jobs_per_scenario = 3;
     g.scales = vec![16.0];
     g.mixes.truncate(1);
     g.profiles = vec![PmProfile::Uniform, PmProfile::LongTail];
+    g.topologies = vec![Topology::Flat, Topology::Racks(2)];
     g.arrivals = vec![Arrival::STEADY, Arrival::burst(1.0)];
     g
 }
@@ -46,7 +49,7 @@ fn artifacts(
 fn interrupted_then_resumed_sweep_is_byte_identical() {
     let g = grid();
     let scenarios = g.scenarios();
-    assert_eq!(scenarios.len(), 16);
+    assert_eq!(scenarios.len(), 32);
 
     // Reference: one uninterrupted run.
     let full = run_sweep(&g, 2);
@@ -99,6 +102,33 @@ fn extending_the_grid_reuses_unchanged_cells() {
     // (profiles is an inner axis, so the first profile's cells of the
     // first scheduler/mix/pm block keep index 0..N).
     assert!(reused > 0, "no cell reused after axis extension");
+    let fresh = run_sweep(&extended, 2);
+    let (json_a, csv_a) = artifacts(&extended, &resumed);
+    let (json_b, csv_b) = artifacts(&extended, &fresh);
+    assert_eq!(json_a, json_b);
+    assert_eq!(csv_a, csv_b);
+    j.clear().unwrap();
+}
+
+#[test]
+fn extending_the_topology_axis_reuses_unchanged_cells() {
+    // A flat-only sweep completes; adding racks-2 to the topology axis
+    // must (a) reuse at least the leading flat block, (b) never replay a
+    // flat cell's numbers for a racked cell (the content hash folds in
+    // the topology label), and (c) match a fresh full run byte for byte.
+    let mut flat_only = grid();
+    flat_only.topologies = vec![Topology::Flat];
+    let j = tmp_journal("topo-extend");
+    let (_r, reused0) = run_sweep_resumable(&flat_only, 2, &j);
+    assert_eq!(reused0, 0);
+
+    let extended = grid();
+    let (resumed, reused) = run_sweep_resumable(&extended, 2, &j);
+    assert!(reused > 0, "no flat cell reused after topology extension");
+    assert!(
+        reused <= extended.len() / 2,
+        "racked cells must not replay flat results (reused {reused})"
+    );
     let fresh = run_sweep(&extended, 2);
     let (json_a, csv_a) = artifacts(&extended, &resumed);
     let (json_b, csv_b) = artifacts(&extended, &fresh);
