@@ -1,0 +1,157 @@
+//! Bench SIMCORE: events/sec of the simulator hot loop on the `stress`
+//! scenario (200 PMs / 400 nodes / racks-8, saturating Poisson arrivals),
+//! measured for the indexed event loop **and** for the retained pre-index
+//! reference (`scheduler::reference` + the naive O(jobs) `all_done` scan),
+//! so the speedup is a number in the artifact, not a claim in a commit
+//! message. Writes `BENCH_simcore.json` next to Cargo.toml.
+//!
+//!     cargo bench --offline --bench simcore
+//!
+//! Both paths process the exact same event sequence (asserted below via
+//! event counts and bitwise-equal makespans — the optimization changes no
+//! simulated outcome), so events/sec ratios are pure wall-time ratios.
+//!
+//! `SIMCORE_JOBS` truncates the stress trace (default 400 — CI-sized; the
+//! full 2000-job scenario is `SIMCORE_JOBS=2000`, where the naive
+//! baseline's O(jobs × tasks) heartbeats and O(jobs)-per-event `all_done`
+//! scans bite hardest).
+
+use std::time::Instant;
+
+use vcsched::coordinator::World;
+use vcsched::harness::ScenarioGrid;
+use vcsched::predictor::NativePredictor;
+use vcsched::scheduler::reference::build_reference;
+use vcsched::util::benchkit::Table;
+use vcsched::util::json::Json;
+
+fn main() {
+    let jobs: usize = std::env::var("SIMCORE_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let mut grid = ScenarioGrid::stress();
+    grid.jobs_per_scenario = jobs;
+    let scenarios = grid.scenarios();
+    println!(
+        "simcore: stress scenario ({} PMs, {}, {jobs} jobs) — indexed loop vs \
+         retained naive reference",
+        grid.pm_counts[0],
+        grid.topologies[0].label(),
+    );
+
+    let mut t = Table::new(&[
+        "scheduler",
+        "events",
+        "indexed",
+        "reference",
+        "ev/s indexed",
+        "ev/s reference",
+        "speedup",
+    ]);
+    let mut points = Json::arr();
+    let mut headline_speedup = 0.0f64;
+
+    for sc in &scenarios {
+        let cfg = sc.sim_config();
+        let trace = sc.job_trace(&grid, &cfg);
+
+        // Indexed path: the production loop, exactly as `run_simulation`
+        // drives it.
+        let mut sched = sc.scheduler.build(&cfg);
+        let mut pred = NativePredictor::new();
+        let mut world = World::new(cfg.clone(), trace.clone());
+        let t0 = Instant::now();
+        world.run(sched.as_mut(), &mut pred);
+        let indexed_s = t0.elapsed().as_secs_f64();
+        let indexed = world.into_metrics(sc.scheduler.name());
+
+        // Reference path: naive schedulers + the O(jobs)-per-event
+        // `all_done` scan — the pre-index loop.
+        let mut sched = build_reference(sc.scheduler, &cfg);
+        let mut pred = NativePredictor::new();
+        let mut world = World::new(cfg.clone(), trace.clone());
+        world.use_naive_all_done();
+        let t0 = Instant::now();
+        world.run(sched.as_mut(), &mut pred);
+        let reference_s = t0.elapsed().as_secs_f64();
+        let reference = world.into_metrics(sc.scheduler.name());
+
+        // Differential guard: same events, same outcome, bit for bit —
+        // down to every job record, so an indexing bug that only bites at
+        // stress scale cannot hide behind matching totals.
+        let name = sc.scheduler.name();
+        assert_eq!(indexed.events, reference.events, "{name}: events");
+        assert_eq!(indexed.hotplugs, reference.hotplugs, "{name}: hotplugs");
+        assert_eq!(
+            indexed.makespan_s.to_bits(),
+            reference.makespan_s.to_bits(),
+            "{name}: makespan diverged from the reference implementation"
+        );
+        assert_eq!(indexed.jobs.len(), reference.jobs.len(), "{name}: job count");
+        for (a, b) in indexed.jobs.iter().zip(&reference.jobs) {
+            assert_eq!(
+                a.completion_s.to_bits(),
+                b.completion_s.to_bits(),
+                "{name}: job {:?} completion diverged",
+                a.id
+            );
+            assert_eq!(a.local_maps, b.local_maps, "{name}: job {:?} locality", a.id);
+            assert_eq!(a.rack_maps, b.rack_maps, "{name}: job {:?} locality", a.id);
+            assert_eq!(a.remote_maps, b.remote_maps, "{name}: job {:?} locality", a.id);
+        }
+
+        let eps = indexed.events as f64 / indexed_s.max(1e-9);
+        let baseline_eps = reference.events as f64 / reference_s.max(1e-9);
+        let speedup = eps / baseline_eps.max(1e-9);
+        if sc.scheduler == vcsched::scheduler::SchedulerKind::DeadlineVc {
+            headline_speedup = speedup;
+        }
+        t.row(&[
+            sc.scheduler.name().to_string(),
+            indexed.events.to_string(),
+            format!("{indexed_s:.3}s"),
+            format!("{reference_s:.3}s"),
+            format!("{eps:.0}"),
+            format!("{baseline_eps:.0}"),
+            format!("x{speedup:.2}"),
+        ]);
+        points = points.push(
+            Json::obj()
+                .set("scheduler", sc.scheduler.name())
+                .set("events", indexed.events)
+                .set("indexed_wall_s", indexed_s)
+                .set("reference_wall_s", reference_s)
+                .set("events_per_sec", eps)
+                .set("baseline_events_per_sec", baseline_eps)
+                .set("speedup", speedup),
+        );
+    }
+    t.print();
+
+    let doc = Json::obj()
+        .set("bench", "simcore")
+        .set("scenario", "stress")
+        .set("pms", grid.pm_counts[0])
+        .set("topology", grid.topologies[0].label().as_str())
+        .set("jobs", jobs)
+        .set("headline_speedup", headline_speedup)
+        .set("points", points)
+        .render();
+    let out = vcsched::util::repo_path("BENCH_simcore.json");
+    std::fs::write(&out, doc).expect("write BENCH_simcore.json");
+    println!("\nwrote {}", out.display());
+
+    // Soft gate, same policy as sweep_scaling: shared CI runners are
+    // noisy, so a miss warns loudly rather than panicking — the hard
+    // contract is the bitwise-equality assertions above plus the
+    // differential test suite.
+    if headline_speedup >= 2.0 {
+        println!("speedup gate passed: deadline_vc x{headline_speedup:.2} >= x2.0");
+    } else {
+        eprintln!(
+            "WARNING: deadline_vc indexed loop only x{headline_speedup:.2} over \
+             the naive reference (expected >= x2.0 on the stress scenario)"
+        );
+    }
+}

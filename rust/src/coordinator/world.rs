@@ -52,6 +52,19 @@ pub struct World {
     rng: Rng,
     pending_specs: Vec<JobSpec>,
     arrived: usize,
+    /// Jobs that reached `JobPhase::Done` — kept in lockstep with the per-
+    /// job transitions so [`World::all_done`] is O(1) per event instead of
+    /// an O(jobs) scan (the scan is retained behind
+    /// [`World::use_naive_all_done`] for the simcore bench baseline).
+    done_jobs: usize,
+    naive_all_done: bool,
+    /// Per-job total intermediate shuffle MB, computed once at
+    /// `JobArrival` (where it already seeds `JobStats`) and reused by
+    /// every `launch_reduce` — the seed re-summed `block_mb ×
+    /// map_output_mb` per reduce task, O(maps × reduces) per job.
+    inter_mb: Vec<f64>,
+    /// Pooled scheduler action buffer, cleared and reused on every event.
+    action_buf: Vec<Action>,
     exec: Option<ExecEngine>,
     /// Cross-rack map-input fetches currently in flight — the load on the
     /// topology's shared core link. A fetch starting while `f` flows are
@@ -100,6 +113,10 @@ impl World {
             rng,
             pending_specs: trace.jobs,
             arrived: 0,
+            done_jobs: 0,
+            naive_all_done: false,
+            inter_mb: Vec::new(),
+            action_buf: Vec::new(),
             exec,
             cross_rack_flows: 0,
             records: Vec::new(),
@@ -121,8 +138,26 @@ impl World {
         self.queue.advance_to(self.queue.now() + dt);
     }
 
+    /// Every trace job arrived and finished. Checked after *every* event,
+    /// so it runs off the `done_jobs` counter (O(1)) rather than scanning
+    /// the job table — at stress scale the seed's `iter().all(is_done)`
+    /// scan alone was O(jobs) × O(events) of the whole run.
     fn all_done(&self) -> bool {
-        self.arrived == self.pending_specs.len() && self.jobs.iter().all(|j| j.is_done())
+        if self.naive_all_done {
+            return self.arrived == self.pending_specs.len()
+                && self.jobs.iter().all(|j| j.is_done());
+        }
+        debug_assert_eq!(
+            self.done_jobs,
+            self.jobs.iter().filter(|j| j.is_done()).count()
+        );
+        self.arrived == self.pending_specs.len() && self.done_jobs == self.jobs.len()
+    }
+
+    /// Opt back into the seed's O(jobs)-per-event `all_done` scan — the
+    /// pre-index loop `benches/simcore.rs` measures the counter against.
+    pub fn use_naive_all_done(&mut self) {
+        self.naive_all_done = true;
     }
 
     /// Immutable snapshot for the scheduler.
@@ -222,17 +257,25 @@ impl World {
                 );
                 self.jobs.push(job);
                 self.costs.push(cost);
+                // Cache the job-wide shuffle volume for launch_reduce.
+                self.inter_mb.push(inter_mb);
                 if let Some(exec) = &mut self.exec {
                     exec.register_job(id, &self.jobs[id.idx()]);
                 }
-                let actions = scheduler.on_job_added(&self.view(), id, predictor);
+                let mut actions = std::mem::take(&mut self.action_buf);
+                actions.clear();
+                scheduler.on_job_added(&self.view(), id, predictor, &mut actions);
                 self.predictor_calls_estimate += 1;
-                self.apply_actions(actions);
+                self.apply_actions(&actions);
+                self.action_buf = actions;
             }
             Event::Heartbeat(node) => {
                 self.heartbeats += 1;
-                let actions = scheduler.on_heartbeat(&self.view(), node, predictor);
-                self.apply_actions(actions);
+                let mut actions = std::mem::take(&mut self.action_buf);
+                actions.clear();
+                scheduler.on_heartbeat(&self.view(), node, predictor, &mut actions);
+                self.apply_actions(&actions);
+                self.action_buf = actions;
                 self.match_reconfigs();
                 // Recurring heartbeat while work remains.
                 if !self.all_done() {
@@ -271,9 +314,12 @@ impl World {
                 if let Some(exec) = &mut self.exec {
                     exec.run_map_task(job, task, &self.jobs[job.idx()]);
                 }
-                let actions = scheduler.on_task_finished(&self.view(), job, predictor);
+                let mut actions = std::mem::take(&mut self.action_buf);
+                actions.clear();
+                scheduler.on_task_finished(&self.view(), job, predictor, &mut actions);
                 self.predictor_calls_estimate += 1;
-                self.apply_actions(actions);
+                self.apply_actions(&actions);
+                self.action_buf = actions;
                 self.match_reconfigs();
             }
             Event::ReduceDone { job, task, node } => {
@@ -301,11 +347,17 @@ impl World {
                     exec.run_reduce_task(job, task, &self.jobs[job.idx()]);
                 }
                 if self.jobs[job.idx()].is_done() {
+                    // The only transition into `JobPhase::Done` — keep the
+                    // O(1) `all_done` counter in lockstep.
+                    self.done_jobs += 1;
                     self.record_job(job);
                 }
-                let actions = scheduler.on_task_finished(&self.view(), job, predictor);
+                let mut actions = std::mem::take(&mut self.action_buf);
+                actions.clear();
+                scheduler.on_task_finished(&self.view(), job, predictor, &mut actions);
                 self.predictor_calls_estimate += 1;
-                self.apply_actions(actions);
+                self.apply_actions(&actions);
+                self.action_buf = actions;
                 self.match_reconfigs();
             }
             Event::HotplugDone { from, to, task } => {
@@ -333,8 +385,8 @@ impl World {
     }
 
     /// Validate + apply scheduler actions.
-    pub(crate) fn apply_actions(&mut self, actions: Vec<Action>) {
-        for a in actions {
+    pub(crate) fn apply_actions(&mut self, actions: &[Action]) {
+        for &a in actions {
             match a {
                 Action::LaunchMap { job, task, node } => {
                     let tier = self.jobs[job.idx()].map_tier(task, node, &self.cluster);
@@ -463,16 +515,14 @@ impl World {
         let js = &mut self.jobs[job.idx()];
         js.mark_reduce_launched(task, node, now);
         self.cluster.vm_mut(node).busy_reduce += 1;
-        // Shuffle volume: measured in real mode, modeled otherwise.
+        // Shuffle volume: measured in real mode; in synthetic mode the
+        // job-wide sum was computed once at JobArrival (identical fold,
+        // identical f64) and cached — re-summing here was O(maps) per
+        // reduce launch.
         let inter_mb = if let Some(exec) = &self.exec {
             exec.intermediate_mb(job)
         } else {
-            let cost = &self.costs[job.idx()];
-            self.jobs[job.idx()]
-                .block_mb
-                .iter()
-                .map(|&mb| cost.map_output_mb(mb))
-                .sum()
+            self.inter_mb[job.idx()]
         };
         let js = &self.jobs[job.idx()];
         let speed = self.cluster.vm(node).speed;

@@ -103,6 +103,34 @@ impl ScenarioGrid {
         }
     }
 
+    /// The simulator-core stress grid (`--grid stress`, `--preset
+    /// stress`, `benches/simcore.rs`): one scenario per scheduler at
+    /// production-ish scale — 200 PMs (400 nodes, 800 map slots) across
+    /// 8 racks and 2000 Poisson jobs on a 0.5 s mean gap, roughly the
+    /// cluster's sustained service rate, so a standing backlog of
+    /// partially-finished jobs forms. That is exactly the regime where
+    /// the seed's per-heartbeat O(jobs × tasks) scans and O(jobs)
+    /// `all_done` checks dominated the event loop. Fair (the paper
+    /// baseline) vs deadline_vc (the paper scheduler, the hottest code
+    /// path).
+    pub fn stress() -> Self {
+        Self {
+            name: "stress".to_string(),
+            schedulers: vec![SchedulerKind::Fair, SchedulerKind::DeadlineVc],
+            mixes: vec![JobMix::Mixed],
+            pm_counts: vec![200],
+            profiles: vec![PmProfile::Uniform],
+            topologies: vec![Topology::Racks(8)],
+            arrivals: vec![Arrival::STEADY],
+            scales: vec![100.0],
+            seed_replicates: 1,
+            jobs_per_scenario: 2000,
+            mean_gap_s: 0.5,
+            deadline_factor: (1.6, 3.0),
+            grid_seed: 42,
+        }
+    }
+
     /// A small smoke grid for tests and the scaling bench: 2 schedulers x
     /// 2 mixes x small cluster x 2 seed replicates = 8 quick scenarios.
     pub fn quick() -> Self {

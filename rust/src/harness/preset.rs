@@ -102,8 +102,12 @@ pub struct Preset {
 }
 
 /// Every preset name, for help text and error messages.
-pub const PRESET_NAMES: [&str; 3] =
-    ["fig4-throughput", "fig5-locality", "fig6-deadline-miss"];
+pub const PRESET_NAMES: [&str; 4] = [
+    "fig4-throughput",
+    "fig5-locality",
+    "fig6-deadline-miss",
+    "stress",
+];
 
 /// Resolve a preset by name into its pinned grid and comparison spec.
 pub fn preset(name: &str) -> Option<(ScenarioGrid, Preset)> {
@@ -184,6 +188,20 @@ pub fn preset(name: &str) -> Option<(ScenarioGrid, Preset)> {
                 },
             ))
         }
+        "stress" => Some((
+            ScenarioGrid::stress(),
+            Preset {
+                name: "stress",
+                describes: "simulator-core stress: 200 PMs x 8 racks x 2000 \
+                            saturating jobs per scheduler (fair vs \
+                            deadline_vc throughput; events/sec guard — see \
+                            benches/simcore.rs)",
+                metric: HeadlineMetric::ThroughputJph,
+                baseline: SchedulerKind::Fair,
+                candidate: SchedulerKind::DeadlineVc,
+                paper_gain: None,
+            },
+        )),
         _ => None,
     }
 }

@@ -12,8 +12,8 @@
 //! Common flags: --sched <fifo|fair|delay|edf|deadline_vc> --seed N
 //!   --pms N --scale MB_PER_GB --jobs N --xla (use the PJRT predictor)
 //!   --json (machine-readable output)
-//! Sweep flags: --grid <default|quick> --preset <fig4-throughput|
-//!   fig5-locality|fig6-deadline-miss> --threads N --seeds N --mix M
+//! Sweep flags: --grid <default|quick|stress> --preset <fig4-throughput|
+//!   fig5-locality|fig6-deadline-miss|stress> --threads N --seeds N --mix M
 //!   --profile <uniform|split-2x|long-tail>[,..] --topology
 //!   <flat|racks-N|fat-tree-N>[,..] --arrival
 //!   <steady|burst[-xRATE]>[,..] --fresh (ignore the journal)
@@ -248,7 +248,8 @@ fn cmd_sweep(args: &Args) {
         let g = match grid_name {
             "default" => ScenarioGrid::default_grid(),
             "quick" => ScenarioGrid::quick(),
-            other => panic!("unknown grid {other:?} (expected default|quick)"),
+            "stress" => ScenarioGrid::stress(),
+            other => panic!("unknown grid {other:?} (expected default|quick|stress)"),
         };
         (g, None)
     };
@@ -567,8 +568,8 @@ fn print_help() {
          usage: vcsched <simulate|compare|fig2|fig3|table2|throughput|sweep|gantt|export> [flags]\n\
          flags: --sched K --a K --b K --seed N --pms N --jobs N --runs N\n\
          \x20      --scale MB_PER_GB --xla --json\n\
-         sweep: --grid <default|quick> --preset <fig4-throughput|fig5-locality|\n\
-         \x20      fig6-deadline-miss> --threads N --seeds N --mix <mixed|TYPE>\n\
+         sweep: --grid <default|quick|stress> --preset <fig4-throughput|fig5-locality|\n\
+         \x20      fig6-deadline-miss|stress> --threads N --seeds N --mix <mixed|TYPE>\n\
          \x20      --sched K[,K..] --profile <uniform|split-2x|long-tail>[,..]\n\
          \x20      --topology <flat|racks-N|fat-tree-N>[,..]\n\
          \x20      --arrival <steady|burst[-xRATE]>[,..] --fresh --out DIR"

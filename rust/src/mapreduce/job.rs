@@ -1,4 +1,27 @@
 //! Per-job state: task tables, phase machine, locality index, statistics.
+//!
+//! # Pending-task cursors (the scheduler hot path)
+//!
+//! Every scheduler asks, many times per heartbeat, "first pending map in
+//! this node's locality list / this rack's list / block order" and "first
+//! pending reduce". A plain filter-scan re-walks the finished prefix of
+//! each list on every query, which is O(tasks) per query and O(jobs ×
+//! tasks) per heartbeat once the cluster is saturated. Each list therefore
+//! carries a *lazily-pruned cursor* ([`Cell<u32>`]): the position of the
+//! first possibly-pending entry. A query advances the cursor past leading
+//! non-pending entries (each entry is passed at most once over the job's
+//! life, so queries are O(1) amortized) and scans only from there.
+//!
+//! Invariant: **every entry before a cursor is non-pending.** Pending-ness
+//! is monotone except for one transition — `AwaitingReconfig -> Pending`
+//! when a delayed launch is cancelled — so [`JobState::mark_map_await_cancelled`]
+//! rolls the affected cursors back to the cancelled task's position
+//! (binary search; the lists are in ascending task order). The pruning is
+//! memoization only: cursor-accelerated iterators yield exactly the same
+//! task order as the retained `*_scan` variants, which the differential
+//! reference tests (`tests/differential_reference.rs`) pin down.
+
+use std::cell::Cell;
 
 use crate::cluster::{Cluster, LocalityTier, NodeId};
 use crate::config::SimConfig;
@@ -53,6 +76,18 @@ pub struct JobState {
     replicas: Vec<Vec<NodeId>>,
     /// Per-map-task block size (tail block may be smaller).
     pub block_mb: Vec<f64>,
+
+    /// Lazily-pruned pending cursors (see module docs): first possibly-
+    /// pending position in, respectively, each `locality[node]` list,
+    /// each `rack_locality[rack]` list, the dense map array and the dense
+    /// reduce array. Interior mutability because pruning happens during
+    /// `&self` queries on the scheduler's immutable view; a `World` is
+    /// never shared across threads (the purity contract keeps every run's
+    /// state thread-private), so `Cell` is safe here.
+    local_cursors: Vec<Cell<u32>>,
+    rack_cursors: Vec<Cell<u32>>,
+    map_cursor: Cell<u32>,
+    reduce_cursor: Cell<u32>,
 
     pending_map_count: u32,
     running_map_count: u32,
@@ -135,6 +170,10 @@ impl JobState {
             replicas,
             maps: vec![TaskState::Pending; n_maps],
             reduces: vec![TaskState::Pending; n_reduces],
+            local_cursors: vec![Cell::new(0); locality.len()],
+            rack_cursors: vec![Cell::new(0); rack_locality.len()],
+            map_cursor: Cell::new(0),
+            reduce_cursor: Cell::new(0),
             locality,
             rack_locality,
             block_mb,
@@ -242,8 +281,65 @@ impl JobState {
         self.pending_local_maps(node).next()
     }
 
-    /// All pending map tasks local to `node`, in block order.
+    /// Advance `cursor` past the leading non-pending prefix of `list`
+    /// (entries are map-task indices) and return the new position.
+    /// Entries are passed at most once over the job's life (modulo the
+    /// rare await-cancel rollback), so the amortized cost is O(1).
+    fn advance_list_cursor(list: &[u32], cursor: &Cell<u32>, states: &[TaskState]) -> usize {
+        let mut i = cursor.get() as usize;
+        while i < list.len() && !states[list[i] as usize].is_pending() {
+            i += 1;
+        }
+        cursor.set(i as u32);
+        i
+    }
+
+    /// [`Self::advance_list_cursor`] for the dense task arrays, where the
+    /// list is implicitly `0..states.len()`.
+    fn advance_dense_cursor(cursor: &Cell<u32>, states: &[TaskState]) -> usize {
+        let mut i = cursor.get() as usize;
+        while i < states.len() && !states[i].is_pending() {
+            i += 1;
+        }
+        cursor.set(i as u32);
+        i
+    }
+
+    /// All pending map tasks local to `node`, in block order
+    /// (cursor-accelerated; same order as [`Self::pending_local_maps_scan`]).
     pub fn pending_local_maps(&self, node: NodeId) -> impl Iterator<Item = TaskId> + '_ {
+        let list = &self.locality[node.idx()];
+        let start = Self::advance_list_cursor(list, &self.local_cursors[node.idx()], &self.maps);
+        list[start..]
+            .iter()
+            .copied()
+            .filter(|&m| self.maps[m as usize].is_pending())
+            .map(TaskId)
+    }
+
+    /// All pending map tasks with a replica in `rack`, in block order
+    /// (cursor-accelerated). Always empty under the flat topology (no
+    /// rack index is built).
+    pub fn pending_rack_maps(&self, rack: u32) -> impl Iterator<Item = TaskId> + '_ {
+        let (list, start) = match self.rack_locality.get(rack as usize) {
+            Some(list) => (
+                list.as_slice(),
+                Self::advance_list_cursor(list, &self.rack_cursors[rack as usize], &self.maps),
+            ),
+            None => (&[][..], 0),
+        };
+        list[start..]
+            .iter()
+            .copied()
+            .filter(|&m| self.maps[m as usize].is_pending())
+            .map(TaskId)
+    }
+
+    /// The naive filter-scan behind [`Self::pending_local_maps`] — the
+    /// pre-index hot path, retained (with the other `*_scan` variants) as
+    /// the reference the differential tests and `benches/simcore.rs`
+    /// compare the cursors against. Never advances a cursor.
+    pub fn pending_local_maps_scan(&self, node: NodeId) -> impl Iterator<Item = TaskId> + '_ {
         self.locality[node.idx()]
             .iter()
             .copied()
@@ -251,9 +347,8 @@ impl JobState {
             .map(TaskId)
     }
 
-    /// All pending map tasks with a replica in `rack`, in block order.
-    /// Always empty under the flat topology (no rack index is built).
-    pub fn pending_rack_maps(&self, rack: u32) -> impl Iterator<Item = TaskId> + '_ {
+    /// Naive filter-scan behind [`Self::pending_rack_maps`].
+    pub fn pending_rack_maps_scan(&self, rack: u32) -> impl Iterator<Item = TaskId> + '_ {
         self.rack_locality
             .get(rack as usize)
             .map(|v| v.as_slice())
@@ -281,8 +376,30 @@ impl JobState {
         self.rack_maps + self.remote_maps
     }
 
-    /// All pending map tasks, in block order.
+    /// All pending map tasks, in block order (cursor-accelerated).
     pub fn pending_maps_iter(&self) -> impl Iterator<Item = TaskId> + '_ {
+        let start = Self::advance_dense_cursor(&self.map_cursor, &self.maps);
+        self.maps[start..]
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_pending())
+            .map(move |(i, _)| TaskId((start + i) as u32))
+    }
+
+    /// All pending reduce tasks, in index order (cursor-accelerated; the
+    /// reduce cursor is strictly monotone — reduces never return to
+    /// Pending).
+    pub fn pending_reduces_iter(&self) -> impl Iterator<Item = TaskId> + '_ {
+        let start = Self::advance_dense_cursor(&self.reduce_cursor, &self.reduces);
+        self.reduces[start..]
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_pending())
+            .map(move |(i, _)| TaskId((start + i) as u32))
+    }
+
+    /// Naive filter-scan behind [`Self::pending_maps_iter`].
+    pub fn pending_maps_scan(&self) -> impl Iterator<Item = TaskId> + '_ {
         self.maps
             .iter()
             .enumerate()
@@ -290,8 +407,8 @@ impl JobState {
             .map(|(i, _)| TaskId(i as u32))
     }
 
-    /// All pending reduce tasks, in index order.
-    pub fn pending_reduces_iter(&self) -> impl Iterator<Item = TaskId> + '_ {
+    /// Naive filter-scan behind [`Self::pending_reduces_iter`].
+    pub fn pending_reduces_scan(&self) -> impl Iterator<Item = TaskId> + '_ {
         self.reduces
             .iter()
             .enumerate()
@@ -301,18 +418,25 @@ impl JobState {
 
     /// Any pending map task (first by index).
     pub fn next_pending_map_any(&self) -> Option<TaskId> {
-        self.maps
-            .iter()
-            .position(|t| t.is_pending())
-            .map(|i| TaskId(i as u32))
+        self.pending_maps_iter().next()
     }
 
     /// First pending reduce task.
     pub fn next_pending_reduce(&self) -> Option<TaskId> {
+        self.pending_reduces_iter().next()
+    }
+
+    /// First pending reduce with index `>= from` — the incremental form
+    /// of `pending_reduces_iter().nth(k)` the schedulers' reduce cursors
+    /// build on (see `scheduler::ClaimLedger::claim_next_reduce`).
+    pub fn next_pending_reduce_at(&self, from: u32) -> Option<TaskId> {
+        let start = Self::advance_dense_cursor(&self.reduce_cursor, &self.reduces)
+            .max(from as usize);
         self.reduces
+            .get(start..)?
             .iter()
             .position(|t| t.is_pending())
-            .map(|i| TaskId(i as u32))
+            .map(|i| TaskId((start + i) as u32))
     }
 
     pub fn map_state(&self, t: TaskId) -> &TaskState {
@@ -330,13 +454,43 @@ impl JobState {
         self.locality[node.idx()].contains(&t.0)
     }
 
-    /// AwaitingReconfig -> Pending (delayed launch abandoned).
+    /// AwaitingReconfig -> Pending (delayed launch abandoned). The one
+    /// transition that makes a task pending *again*, so every cursor that
+    /// may have passed it is rolled back to its position.
     pub fn mark_map_await_cancelled(&mut self, t: TaskId) {
         let s = &mut self.maps[t.0 as usize];
         debug_assert!(s.is_awaiting(), "cancelling non-awaiting map {t:?}");
         *s = TaskState::Pending;
         self.awaiting_map_count -= 1;
         self.pending_map_count += 1;
+        self.rollback_cursors(t.0);
+    }
+
+    /// Restore the cursor invariant ("everything before a cursor is
+    /// non-pending") after map task `t` returned to Pending. The locality
+    /// and rack lists are in ascending task order, so the task's position
+    /// in each list holding it is found by binary search; cursors only
+    /// ever move back, never forward.
+    fn rollback_cursors(&mut self, t: u32) {
+        if t < self.map_cursor.get() {
+            self.map_cursor.set(t);
+        }
+        for &node in &self.replicas[t as usize] {
+            if let Ok(pos) = self.locality[node.idx()].binary_search(&t) {
+                let cur = &self.local_cursors[node.idx()];
+                if (pos as u32) < cur.get() {
+                    cur.set(pos as u32);
+                }
+            }
+        }
+        for (rk, list) in self.rack_locality.iter().enumerate() {
+            if let Ok(pos) = list.binary_search(&t) {
+                let cur = &self.rack_cursors[rk];
+                if (pos as u32) < cur.get() {
+                    cur.set(pos as u32);
+                }
+            }
+        }
     }
 
     /// Pending -> AwaitingReconfig (Alg. 1 delayed local launch).
@@ -456,6 +610,36 @@ impl JobState {
         }
         if self.local_maps + self.rack_maps + self.remote_maps != self.finished_map_count {
             return Err(format!("job {:?}: locality accounting broken", self.id));
+        }
+        // Cursor invariant: nothing before a pending cursor is pending
+        // (otherwise the indexed iterators would silently skip tasks).
+        if self.maps[..self.map_cursor.get() as usize]
+            .iter()
+            .any(|s| s.is_pending())
+        {
+            return Err(format!("job {:?}: map cursor passed a pending task", self.id));
+        }
+        if self.reduces[..self.reduce_cursor.get() as usize]
+            .iter()
+            .any(|s| s.is_pending())
+        {
+            return Err(format!("job {:?}: reduce cursor passed a pending task", self.id));
+        }
+        for (lists, cursors, what) in [
+            (&self.locality, &self.local_cursors, "locality"),
+            (&self.rack_locality, &self.rack_cursors, "rack"),
+        ] {
+            for (list, cursor) in lists.iter().zip(cursors) {
+                if list[..cursor.get() as usize]
+                    .iter()
+                    .any(|&m| self.maps[m as usize].is_pending())
+                {
+                    return Err(format!(
+                        "job {:?}: {what} cursor passed a pending task",
+                        self.id
+                    ));
+                }
+            }
         }
         Ok(())
     }

@@ -117,6 +117,49 @@ mod tests {
     }
 
     #[test]
+    fn cursors_match_scans_and_roll_back_on_await_cancel() {
+        let mut js = job_state();
+        let n_maps = js.total_maps();
+        assert!(n_maps >= 2);
+        // Exhausting the cursor iterators must agree with the retained
+        // naive scans at every step of a launch sequence.
+        let check_agreement = |js: &JobState| {
+            assert_eq!(
+                js.pending_maps_iter().collect::<Vec<_>>(),
+                js.pending_maps_scan().collect::<Vec<_>>()
+            );
+            assert_eq!(
+                js.pending_reduces_iter().collect::<Vec<_>>(),
+                js.pending_reduces_scan().collect::<Vec<_>>()
+            );
+            for node in 0..8u32 {
+                assert_eq!(
+                    js.pending_local_maps(NodeId(node)).collect::<Vec<_>>(),
+                    js.pending_local_maps_scan(NodeId(node)).collect::<Vec<_>>()
+                );
+            }
+            js.check_invariants().unwrap();
+        };
+        check_agreement(&js);
+        // Launch task 0 so the dense cursor advances past it...
+        let t0 = js.next_pending_map_any().unwrap();
+        js.mark_map_launched(t0, NodeId(0), LocalityTier::Remote, SimTime::ZERO);
+        check_agreement(&js);
+        // ...then push task 1 through awaiting -> cancelled: it becomes
+        // pending again behind the advanced cursor, and the rollback must
+        // re-expose it to every iterator.
+        let t1 = js.next_pending_map_any().unwrap();
+        let target = js.replica_nodes(t1.0)[0];
+        js.mark_map_awaiting(t1, target);
+        assert_ne!(js.next_pending_map_any(), Some(t1));
+        check_agreement(&js);
+        js.mark_map_await_cancelled(t1);
+        assert_eq!(js.next_pending_map_any(), Some(t1));
+        assert!(js.pending_local_maps(target).any(|t| t == t1));
+        check_agreement(&js);
+    }
+
+    #[test]
     fn rack_index_and_map_tier_consistent() {
         let cfg = SimConfig {
             topology: Topology::Racks(2),

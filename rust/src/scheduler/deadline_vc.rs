@@ -25,16 +25,15 @@
 //! recomputed after every task completion (Alg. 2 l.17-20) over the
 //! *remaining* work and *remaining* deadline.
 
-use std::collections::HashMap;
-
 use crate::cluster::NodeId;
 use crate::config::SimConfig;
 use crate::mapreduce::{JobId, JobState, TaskId};
 use crate::predictor::{JobDemand, Predictor};
 use crate::sim::SimTime;
 
+use super::edf::EdfKeys;
 use super::{
-    next_unclaimed_any, next_unclaimed_local, next_unclaimed_rack, Action, ClaimSet,
+    next_unclaimed_any, next_unclaimed_local, next_unclaimed_rack, Action, ClaimLedger,
     EdfScheduler, SchedView, Scheduler, SchedulerKind,
 };
 
@@ -77,11 +76,67 @@ pub struct DeadlineVcScheduler {
     /// a remote slot (guards against reconfiguration starvation; the
     /// paper argues the wait is negligible but a bound keeps liveness).
     reconfig_timeout: SimTime,
-    /// (job, map task) -> when it entered AwaitingReconfig.
-    awaiting_since: HashMap<(JobId, u32), SimTime>,
+    /// `(job, map task, entered-awaiting-at)`, insertion-ordered. The
+    /// seed kept a `HashMap` here; a `Vec` with `retain` keeps the expiry
+    /// scan O(awaiting) while making the CancelAwait emission order
+    /// deterministic (hash-map iteration order is not) — a prerequisite
+    /// for the action-stream differential tests.
+    awaiting_since: Vec<(JobId, u32, SimTime)>,
     /// Clamp predictor answers to the cluster's physical slot totals.
     max_map_slots: u32,
     max_reduce_slots: u32,
+    // ---- pooled per-event buffers (allocation-free at steady state) ----
+    claims: ClaimLedger,
+    keys: EdfKeys,
+    order: Vec<usize>,
+    order_tmp: Vec<usize>,
+    /// Per-node free-map-slot ledger for the current heartbeat.
+    free: Vec<u32>,
+    alloc_ids: Vec<JobId>,
+    alloc_demands: Vec<JobDemand>,
+}
+
+/// Eq. 10 inputs for `job` over its remaining work (Alg. 2 l.19).
+pub(crate) fn job_demand(job: &JobState, now: SimTime) -> Option<JobDemand> {
+    let deadline_at = job.deadline_at()?;
+    let remaining = deadline_at.saturating_sub(now).as_secs_f64();
+    Some(JobDemand {
+        map_tasks: (job.total_maps() - job.completed_maps()) as f64,
+        reduce_tasks: (job.total_reduces() - job.completed_reduces()) as f64,
+        t_map: job.stats.t_map(),
+        t_reduce: job.stats.t_reduce(),
+        t_shuffle: job.stats.t_shuffle(),
+        deadline: remaining,
+    })
+}
+
+/// Alg. 1 lines 4-9: choose the target node among the replicas of
+/// `task`, preferring the deepest release queue, falling back to the
+/// shallowest assign queue. Mirrors the `locality_score` kernel.
+pub(crate) fn choose_target_with(
+    tuning: DvcTuning,
+    view: &SchedView,
+    job: &JobState,
+    task: TaskId,
+) -> Option<NodeId> {
+    let replicas = job.replica_nodes(task.0);
+    if replicas.is_empty() {
+        return None;
+    }
+    let score = |n: NodeId| {
+        let pm = view.cluster.pm_of(n);
+        tuning.w_rq * view.cm.rq_depth(pm) as f64 - tuning.w_aq * view.cm.aq_depth(pm) as f64
+    };
+    replicas
+        .iter()
+        .copied()
+        .max_by(|&a, &b| {
+            score(a)
+                .partial_cmp(&score(b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                // deterministic tie-break: lower node id wins
+                .then(b.0.cmp(&a.0))
+        })
 }
 
 impl DeadlineVcScheduler {
@@ -94,109 +149,96 @@ impl DeadlineVcScheduler {
             reconfig_timeout: SimTime::from_secs_f64(
                 cfg.heartbeat_s * tuning.timeout_heartbeats,
             ),
-            awaiting_since: HashMap::new(),
+            awaiting_since: Vec::new(),
             max_map_slots: cfg.total_map_slots(),
             max_reduce_slots: cfg.total_reduce_slots(),
             tuning,
+            claims: ClaimLedger::new(),
+            keys: Vec::new(),
+            order: Vec::new(),
+            order_tmp: Vec::new(),
+            free: Vec::new(),
+            alloc_ids: Vec::new(),
+            alloc_demands: Vec::new(),
         }
-    }
-
-    /// Eq. 10 inputs for `job` over its remaining work (Alg. 2 l.19).
-    fn demand(&self, job: &JobState, now: SimTime) -> Option<JobDemand> {
-        let deadline_at = job.deadline_at()?;
-        let remaining = deadline_at.saturating_sub(now).as_secs_f64();
-        Some(JobDemand {
-            map_tasks: (job.total_maps() - job.completed_maps()) as f64,
-            reduce_tasks: (job.total_reduces() - job.completed_reduces()) as f64,
-            t_map: job.stats.t_map(),
-            t_reduce: job.stats.t_reduce(),
-            t_shuffle: job.stats.t_shuffle(),
-            deadline: remaining,
-        })
     }
 
     /// Recompute `(n_m, n_r)` for every active deadlined job — one batched
-    /// predictor call (one PJRT execution on the XLA backend).
+    /// predictor call (one PJRT execution on the XLA backend). This runs
+    /// on every job arrival and task completion, so the id/demand staging
+    /// buffers are pooled on the scheduler.
     fn recompute_allocs(
-        &self,
+        &mut self,
         view: &SchedView,
         predictor: &mut dyn Predictor,
-    ) -> Vec<Action> {
-        let mut ids = Vec::new();
-        let mut demands = Vec::new();
+        out: &mut Vec<Action>,
+    ) {
+        self.alloc_ids.clear();
+        self.alloc_demands.clear();
         for job in view.active_jobs() {
-            if let Some(d) = self.demand(job, view.now) {
-                ids.push(job.id);
-                demands.push(d);
+            if let Some(d) = job_demand(job, view.now) {
+                self.alloc_ids.push(job.id);
+                self.alloc_demands.push(d);
             }
         }
-        if demands.is_empty() {
-            return Vec::new();
+        if self.alloc_demands.is_empty() {
+            return;
         }
-        let solved = predictor.solve_slots(&demands);
-        ids.iter()
-            .zip(solved)
-            .map(|(&job, s)| {
-                // An infeasible deadline gets the full cluster: minimize
-                // lateness (the paper leaves this case unspecified).
-                let (m, r) = if s.infeasible {
-                    (self.max_map_slots, self.max_reduce_slots)
-                } else {
-                    (
-                        s.map_slots.min(self.max_map_slots).max(1),
-                        s.reduce_slots.min(self.max_reduce_slots).max(1),
-                    )
-                };
-                Action::SetAlloc {
-                    job,
-                    map_slots: m,
-                    reduce_slots: r,
-                }
-            })
-            .collect()
+        let solved = predictor.solve_slots(&self.alloc_demands);
+        for (&job, s) in self.alloc_ids.iter().zip(solved) {
+            // An infeasible deadline gets the full cluster: minimize
+            // lateness (the paper leaves this case unspecified).
+            let (m, r) = if s.infeasible {
+                (self.max_map_slots, self.max_reduce_slots)
+            } else {
+                (
+                    s.map_slots.min(self.max_map_slots).max(1),
+                    s.reduce_slots.min(self.max_reduce_slots).max(1),
+                )
+            };
+            out.push(Action::SetAlloc {
+                job,
+                map_slots: m,
+                reduce_slots: r,
+            });
+        }
     }
 
-    /// Alg. 1 lines 4-9: choose the target node among the replicas of
-    /// `task`, preferring the deepest release queue, falling back to the
-    /// shallowest assign queue. Mirrors the `locality_score` kernel.
+    /// Test/ablation convenience around [`choose_target_with`].
+    #[cfg(test)]
     fn choose_target(&self, view: &SchedView, job: &JobState, task: TaskId) -> Option<NodeId> {
-        let replicas = job.replica_nodes(task.0);
-        if replicas.is_empty() {
-            return None;
-        }
-        let score = |n: NodeId| {
-            let pm = view.cluster.pm_of(n);
-            self.tuning.w_rq * view.cm.rq_depth(pm) as f64
-                - self.tuning.w_aq * view.cm.aq_depth(pm) as f64
-        };
-        replicas
-            .iter()
-            .copied()
-            .max_by(|&a, &b| {
-                score(a)
-                    .partial_cmp(&score(b))
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    // deterministic tie-break: lower node id wins
-                    .then(b.0.cmp(&a.0))
-            })
+        choose_target_with(self.tuning, view, job, task)
     }
 
-    /// EDF order with cold jobs first (oldest cold job leads).
-    fn job_order(view: &SchedView) -> Vec<usize> {
-        let mut order = EdfScheduler::edf_order(view);
-        order.sort_by_key(|&i| {
-            let j = &view.jobs[i];
-            (!j.cold(), ()) // stable sort: cold jobs float to the front
-        });
+    /// EDF order with cold jobs first (oldest cold job leads), built in
+    /// pooled buffers. The cold partition is stable (== the seed's stable
+    /// sort by `!cold()`).
+    fn job_order_into(
+        view: &SchedView,
+        keys: &mut EdfKeys,
+        order: &mut Vec<usize>,
+        tmp: &mut Vec<usize>,
+    ) {
+        EdfScheduler::edf_order_into(view, keys, order);
+        tmp.clear();
+        tmp.extend(order.iter().copied().filter(|&i| view.jobs[i].cold()));
+        tmp.extend(order.iter().copied().filter(|&i| !view.jobs[i].cold()));
+        std::mem::swap(order, tmp);
+    }
+
+    /// Allocating convenience wrapper around [`Self::job_order_into`]
+    /// (tests and the naive reference implementation).
+    pub(crate) fn job_order(view: &SchedView) -> Vec<usize> {
+        let (mut keys, mut order, mut tmp) = (Vec::new(), Vec::new(), Vec::new());
+        Self::job_order_into(view, &mut keys, &mut order, &mut tmp);
         order
     }
 
     /// Expire AwaitingReconfig tasks that outlived the timeout.
-    fn expire_awaiting(&mut self, view: &SchedView) -> Vec<Action> {
-        let mut out = Vec::new();
+    fn expire_awaiting(&mut self, view: &SchedView, out: &mut Vec<Action>) {
         let now = view.now;
         let timeout = self.reconfig_timeout;
-        self.awaiting_since.retain(|&(job, task), &mut since| {
+        self.awaiting_since.retain(|&(job, task, since)| {
             let js = &view.jobs[job.idx()];
             let state = js.map_state(TaskId(task));
             if !state.is_awaiting() {
@@ -211,7 +253,6 @@ impl DeadlineVcScheduler {
             }
             true
         });
-        out
     }
 }
 
@@ -226,8 +267,9 @@ impl Scheduler for DeadlineVcScheduler {
         view: &SchedView,
         _job: JobId,
         predictor: &mut dyn Predictor,
-    ) -> Vec<Action> {
-        self.recompute_allocs(view, predictor)
+        out: &mut Vec<Action>,
+    ) {
+        self.recompute_allocs(view, predictor, out);
     }
 
     /// Alg. 2 lines 17-20.
@@ -236,8 +278,9 @@ impl Scheduler for DeadlineVcScheduler {
         view: &SchedView,
         _job: JobId,
         predictor: &mut dyn Predictor,
-    ) -> Vec<Action> {
-        self.recompute_allocs(view, predictor)
+        out: &mut Vec<Action>,
+    ) {
+        self.recompute_allocs(view, predictor, out);
     }
 
     fn on_heartbeat(
@@ -245,16 +288,21 @@ impl Scheduler for DeadlineVcScheduler {
         view: &SchedView,
         node: NodeId,
         _predictor: &mut dyn Predictor,
-    ) -> Vec<Action> {
-        let mut actions = self.expire_awaiting(view);
-        let order = Self::job_order(view);
+        out: &mut Vec<Action>,
+    ) {
+        self.expire_awaiting(view, out);
+        Self::job_order_into(view, &mut self.keys, &mut self.order, &mut self.order_tmp);
+        // One claim generation spans the whole heartbeat (both passes and
+        // the reduce phase).
+        self.claims.begin(view.jobs);
 
         // Slot ledger for this heartbeat: free map slots per node, so
         // direct-local routing to other nodes (Alg. 1 l.13) never
         // overfills a VM within one scheduling round.
-        let mut free: Vec<u32> = (0..view.cluster.num_nodes())
-            .map(|i| view.cluster.vm(NodeId(i as u32)).free_map_slots())
-            .collect();
+        self.free.clear();
+        for i in 0..view.cluster.num_nodes() {
+            self.free.push(view.cluster.vm(NodeId(i as u32)).free_map_slots());
+        }
         let mut free_reduce = view.cluster.vm(node).free_reduce_slots();
         // Rack-aware tie-break for the non-local pick: among tasks with no
         // replica on `n`, prefer one with a replica in n's *rack* — if it
@@ -262,13 +310,21 @@ impl Scheduler for DeadlineVcScheduler {
         // cross-rack core. Inert on the flat topology (no rack index).
         let racked = view.cluster.topology().is_racked();
         let my_rack = view.cluster.rack_of(node);
-        let mut claimed = ClaimSet::new();
-        let mut extra_sched: HashMap<JobId, u32> = HashMap::new();
+        let tuning = self.tuning;
+        // Split the pooled state into disjoint field borrows for the
+        // placement loop below.
+        let Self {
+            ref mut claims,
+            ref order,
+            ref mut free,
+            ref mut awaiting_since,
+            ..
+        } = *self;
         let mut released_this_hb = false;
         // Bound cross-node routing per heartbeat (cost control; every
         // node heartbeats every 3 s so global work still spreads fast).
         let mut routed = 0u32;
-        let max_routed = self.tuning.max_routed;
+        let max_routed = tuning.max_routed;
 
         // Two passes over the EDF order:
         //   pass 0 — guaranteed allocations (Alg. 2 caps enforced);
@@ -278,13 +334,13 @@ impl Scheduler for DeadlineVcScheduler {
         //            are *minimums* to meet deadlines — leaving surplus
         //            slots idle would forfeit the Fig. 2(b)/Fig. 3
         //            completion-time gains the paper reports.
-        let passes: u8 = if self.tuning.spare_pass { 2 } else { 1 };
+        let passes: u8 = if tuning.spare_pass { 2 } else { 1 };
         for pass in 0..passes {
             // Each job drains under strict EDF priority: the earliest-
             // deadline job takes every placement it can before the next
             // job is considered. (O(jobs + launches); the naive restart-
             // from-top scan was ~40% of the scheduler profile.)
-            'jobs: for &ji in &order {
+            'jobs: for &ji in order {
                 let job = &view.jobs[ji];
                 if job.is_done() || job.map_finished() {
                     continue;
@@ -295,8 +351,7 @@ impl Scheduler for DeadlineVcScheduler {
                         break 'jobs;
                     }
                     if pass == 0 {
-                        let sched = job.scheduled_maps()
-                            + extra_sched.get(&job.id).copied().unwrap_or(0);
+                        let sched = job.scheduled_maps() + claims.maps_claimed(job.id);
                         // Cold jobs bypass the cap to bootstrap statistics.
                         if !job.cold() && sched >= job.alloc_map_slots {
                             break;
@@ -304,10 +359,9 @@ impl Scheduler for DeadlineVcScheduler {
                     }
                     // Alg. 1 lines 1-2: local task on the heartbeating node.
                     if free[node.idx()] > 0 {
-                        if let Some(t) = next_unclaimed_local(job, node, &claimed) {
-                            claimed.insert((job.id, t));
-                            *extra_sched.entry(job.id).or_insert(0) += 1;
-                            actions.push(Action::LaunchMap { job: job.id, task: t, node });
+                        if let Some(t) = next_unclaimed_local(job, node, claims) {
+                            claims.claim_map(job.id, t);
+                            out.push(Action::LaunchMap { job: job.id, task: t, node });
                             free[node.idx()] -= 1;
                             continue;
                         }
@@ -321,20 +375,19 @@ impl Scheduler for DeadlineVcScheduler {
                     // rack-near preference there could select an
                     // unroutable task and skip a routable one.
                     let rack_pick = if racked && free[node.idx()] > 0 {
-                        next_unclaimed_rack(job, my_rack, &claimed)
+                        next_unclaimed_rack(job, my_rack, claims)
                     } else {
                         None
                     };
-                    let Some(t) = rack_pick.or_else(|| next_unclaimed_any(job, &claimed))
+                    let Some(t) = rack_pick.or_else(|| next_unclaimed_any(job, claims))
                     else {
                         break;
                     };
-                    let Some(target) = self.choose_target(view, job, t) else {
+                    let Some(target) = choose_target_with(tuning, view, job, t) else {
                         // No replica registered (degenerate input): remote.
                         if free[node.idx()] > 0 {
-                            claimed.insert((job.id, t));
-                            *extra_sched.entry(job.id).or_insert(0) += 1;
-                            actions.push(Action::LaunchMap { job: job.id, task: t, node });
+                            claims.claim_map(job.id, t);
+                            out.push(Action::LaunchMap { job: job.id, task: t, node });
                             free[node.idx()] -= 1;
                             continue;
                         }
@@ -343,9 +396,8 @@ impl Scheduler for DeadlineVcScheduler {
                     // Target has spare capacity: immediate *data-local*
                     // launch on it (Alg. 1 line 13).
                     if free[target.idx()] > 0 && routed < max_routed {
-                        claimed.insert((job.id, t));
-                        *extra_sched.entry(job.id).or_insert(0) += 1;
-                        actions.push(Action::LaunchMap { job: job.id, task: t, node: target });
+                        claims.claim_map(job.id, t);
+                        out.push(Action::LaunchMap { job: job.id, task: t, node: target });
                         free[target.idx()] -= 1;
                         routed += 1;
                         continue;
@@ -358,7 +410,7 @@ impl Scheduler for DeadlineVcScheduler {
                     // loses more than the remote-read penalty (releases
                     // are rare when every core has local work), so
                     // otherwise we fall through to a remote launch.
-                    let release_ready = !self.tuning.await_requires_release
+                    let release_ready = !tuning.await_requires_release
                         || view.cm.rq_depth(view.cluster.pm_of(target)) > 0;
                     if pass == 0
                         && release_ready
@@ -366,10 +418,9 @@ impl Scheduler for DeadlineVcScheduler {
                         && free[node.idx()] > 0
                         && view.cluster.vm(node).can_release_core()
                     {
-                        claimed.insert((job.id, t));
-                        *extra_sched.entry(job.id).or_insert(0) += 1;
-                        self.awaiting_since.insert((job.id, t.0), view.now);
-                        actions.push(Action::AwaitReconfig {
+                        claims.claim_map(job.id, t);
+                        awaiting_since.push((job.id, t.0, view.now));
+                        out.push(Action::AwaitReconfig {
                             job: job.id,
                             task: t,
                             target,
@@ -382,12 +433,12 @@ impl Scheduler for DeadlineVcScheduler {
                     // No data-local placement available now: launch
                     // remotely on n (the EDF/Fair behaviour). Idling the
                     // slot instead costs more than the remote read.
+                    // (The claim counts toward `maps_claimed` in either
+                    // pass, but the Alg. 2 cap only reads it in pass 0 —
+                    // same accounting the seed's `extra_sched` map kept.)
                     if free[node.idx()] > 0 {
-                        claimed.insert((job.id, t));
-                        if pass == 0 {
-                            *extra_sched.entry(job.id).or_insert(0) += 1;
-                        }
-                        actions.push(Action::LaunchMap { job: job.id, task: t, node });
+                        claims.claim_map(job.id, t);
+                        out.push(Action::LaunchMap { job: job.id, task: t, node });
                         free[node.idx()] -= 1;
                         continue;
                     }
@@ -397,23 +448,21 @@ impl Scheduler for DeadlineVcScheduler {
         }
 
         // ---- reduce phase (Alg. 2 lines 10-14 + spare pass) ----
-        let mut extra_red: HashMap<JobId, u32> = HashMap::new();
         for pass in 0..passes {
-            for &ji in &order {
+            for &ji in order {
                 let job = &view.jobs[ji];
                 if job.is_done() || !job.map_finished() {
                     continue;
                 }
                 while free_reduce > 0 {
-                    let extra = extra_red.get(&job.id).copied().unwrap_or(0);
+                    let extra = claims.reduces_claimed(job.id);
                     if pass == 0 && job.running_reduces() + extra >= job.alloc_reduce_slots {
                         break;
                     }
-                    let Some(t) = job.pending_reduces_iter().nth(extra as usize) else {
+                    let Some(t) = claims.claim_next_reduce(job) else {
                         break;
                     };
-                    *extra_red.entry(job.id).or_insert(0) += 1;
-                    actions.push(Action::LaunchReduce { job: job.id, task: t, node });
+                    out.push(Action::LaunchReduce { job: job.id, task: t, node });
                     free_reduce -= 1;
                 }
                 if free_reduce == 0 {
@@ -431,10 +480,8 @@ impl Scheduler for DeadlineVcScheduler {
             && !released_this_hb
             && view.cluster.vm(node).can_release_core()
         {
-            actions.push(Action::RegisterRelease { node });
+            out.push(Action::RegisterRelease { node });
         }
-
-        actions
     }
 }
 

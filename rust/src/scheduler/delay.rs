@@ -14,34 +14,40 @@
 //! launch for the job resets it (a simplification of the paper's
 //! per-level timers that keeps the state machine one integer).
 
-use std::collections::HashMap;
-
 use crate::cluster::{LocalityTier, NodeId};
-use crate::mapreduce::JobId;
 use crate::predictor::Predictor;
 
-use super::{greedy_fill, Action, FairScheduler, SchedView, Scheduler, SchedulerKind};
+use super::{greedy_fill, Action, ClaimLedger, FairScheduler, SchedView, Scheduler, SchedulerKind};
 
 #[derive(Debug)]
 pub struct DelayScheduler {
     patience: u32,
-    /// Heartbeats each job has been skipped for lack of a local task.
-    skipped: HashMap<JobId, u32>,
+    /// Heartbeats each job has been skipped for lack of a local task,
+    /// indexed by job (dense — jobs are numbered in arrival order; absent
+    /// == 0, the `HashMap` semantics of the seed without its per-entry
+    /// allocation and hashing).
+    skipped: Vec<u32>,
+    /// Pooled job-order and claim buffers (reused every heartbeat).
+    order: Vec<usize>,
+    claims: ClaimLedger,
 }
 
 impl DelayScheduler {
     pub fn new(patience: u32) -> Self {
         Self {
             patience,
-            skipped: HashMap::new(),
+            skipped: Vec::new(),
+            order: Vec::new(),
+            claims: ClaimLedger::new(),
         }
     }
 
     /// Worst locality tier `job` may accept after `skipped` fruitless
     /// heartbeats: node-only below `patience`; then rack-local (racked
     /// topologies) at `patience`; off-rack at `2 * patience` (or already
-    /// at `patience` when there is no rack tier to wait for).
-    fn tier_cap(patience: u32, skipped: u32, racked: bool) -> LocalityTier {
+    /// at `patience` when there is no rack tier to wait for). Shared with
+    /// the naive reference implementation (`scheduler::reference`).
+    pub(crate) fn tier_cap(patience: u32, skipped: u32, racked: bool) -> LocalityTier {
         if !racked {
             if skipped >= patience {
                 LocalityTier::Remote
@@ -68,35 +74,40 @@ impl Scheduler for DelayScheduler {
         view: &SchedView,
         node: NodeId,
         _predictor: &mut dyn Predictor,
-    ) -> Vec<Action> {
-        let order = FairScheduler::fair_order(view);
+        out: &mut Vec<Action>,
+    ) {
+        FairScheduler::fair_order_into(view, &mut self.order);
+        if self.skipped.len() < view.jobs.len() {
+            self.skipped.resize(view.jobs.len(), 0);
+        }
         // A job degrades one locality tier per exhausted patience window.
         let skipped = &self.skipped;
         let patience = self.patience;
         let racked = view.cluster.topology().is_racked();
-        let actions = greedy_fill(view, node, &order, |job| {
-            let s = skipped.get(&job.id).copied().unwrap_or(0);
-            Self::tier_cap(patience, s, racked)
-        });
+        greedy_fill(
+            view,
+            node,
+            &self.order,
+            &mut self.claims,
+            |job| Self::tier_cap(patience, skipped[job.id.idx()], racked),
+            out,
+        );
         // Update skip counters: jobs with pending maps that got nothing
-        // local on this heartbeat accumulate patience; a local launch
-        // resets it (Zaharia et al. §4.1).
-        for &ji in &order {
+        // local on this heartbeat accumulate patience; a map launch
+        // resets it (Zaharia et al. §4.1). greedy_fill claims every map
+        // it launches in this generation, so "did this job get a map
+        // launch" is an O(1) ledger lookup, not a rescan of the
+        // appended actions.
+        for &ji in &self.order {
             let job = &view.jobs[ji];
             if job.pending_maps() == 0 {
-                self.skipped.remove(&job.id);
-                continue;
-            }
-            let launched_for_job = actions.iter().any(|a| {
-                matches!(a, Action::LaunchMap { job: j, .. } if *j == job.id)
-            });
-            if launched_for_job {
-                self.skipped.remove(&job.id);
+                self.skipped[job.id.idx()] = 0;
+            } else if self.claims.maps_claimed(job.id) > 0 {
+                self.skipped[job.id.idx()] = 0;
             } else {
-                *self.skipped.entry(job.id).or_insert(0) += 1;
+                self.skipped[job.id.idx()] += 1;
             }
         }
-        actions
     }
 }
 
@@ -157,6 +168,6 @@ mod tests {
         let node = w.node_with_local_for(0);
         let a = w.heartbeat_with(&mut s, node);
         assert!(a.iter().any(|x| matches!(x, Action::LaunchMap { .. })));
-        assert_eq!(s.skipped.get(&crate::mapreduce::JobId(0)), None);
+        assert_eq!(s.skipped.first().copied().unwrap_or(0), 0);
     }
 }

@@ -5,35 +5,54 @@
 //! hot-plug machinery itself buys.
 
 use crate::cluster::{LocalityTier, NodeId};
+use crate::mapreduce::JobId;
 use crate::predictor::Predictor;
 use crate::sim::SimTime;
 
-use super::{greedy_fill, Action, SchedView, Scheduler, SchedulerKind};
+use super::{greedy_fill, Action, ClaimLedger, SchedView, Scheduler, SchedulerKind};
+
+/// Pooled `(deadline, submitted, id, index)` sort keys for
+/// [`EdfScheduler::edf_order_into`] — `id` is unique, so sorting the
+/// precomputed tuples unstably reproduces the stable
+/// sort-by-cached-key order without allocating a key cache per heartbeat
+/// (deadline_at() does float math; evaluating it inside the comparator
+/// was ~10% of the scheduler profile).
+pub(crate) type EdfKeys = Vec<(SimTime, SimTime, JobId, u32)>;
 
 #[derive(Debug, Default)]
-pub struct EdfScheduler;
+pub struct EdfScheduler {
+    /// Pooled key/order/claim buffers (reused every heartbeat).
+    keys: EdfKeys,
+    order: Vec<usize>,
+    claims: ClaimLedger,
+}
 
 impl EdfScheduler {
     pub fn new() -> Self {
-        Self
+        Self::default()
     }
 
-    /// Deadline order: earliest absolute deadline first; best-effort jobs
-    /// after all deadlined jobs, oldest first.
+    /// Deadline order into `order` (pooled): earliest absolute deadline
+    /// first; best-effort jobs after all deadlined jobs, oldest first.
+    pub(crate) fn edf_order_into(view: &SchedView, keys: &mut EdfKeys, order: &mut Vec<usize>) {
+        keys.clear();
+        for (i, j) in view.jobs.iter().enumerate() {
+            if j.is_done() {
+                continue;
+            }
+            let deadline = j.deadline_at().unwrap_or(SimTime(u64::MAX));
+            keys.push((deadline, j.submitted, j.id, i as u32));
+        }
+        keys.sort_unstable();
+        order.clear();
+        order.extend(keys.iter().map(|&(_, _, _, i)| i as usize));
+    }
+
+    /// Allocating convenience wrapper around [`Self::edf_order_into`]
+    /// (tests and the naive reference implementations).
     pub(crate) fn edf_order(view: &SchedView) -> Vec<usize> {
-        let mut order: Vec<usize> = (0..view.jobs.len())
-            .filter(|&i| !view.jobs[i].is_done())
-            .collect();
-        // cached: deadline_at() does float math; evaluating it inside the
-        // comparator was ~10% of the scheduler profile.
-        order.sort_by_cached_key(|&i| {
-            let j = &view.jobs[i];
-            (
-                j.deadline_at().unwrap_or(SimTime(u64::MAX)),
-                j.submitted,
-                j.id,
-            )
-        });
+        let (mut keys, mut order) = (Vec::new(), Vec::new());
+        Self::edf_order_into(view, &mut keys, &mut order);
         order
     }
 }
@@ -48,9 +67,10 @@ impl Scheduler for EdfScheduler {
         view: &SchedView,
         node: NodeId,
         _predictor: &mut dyn Predictor,
-    ) -> Vec<Action> {
-        let order = Self::edf_order(view);
-        greedy_fill(view, node, &order, |_| LocalityTier::Remote)
+        out: &mut Vec<Action>,
+    ) {
+        Self::edf_order_into(view, &mut self.keys, &mut self.order);
+        greedy_fill(view, node, &self.order, &mut self.claims, |_| LocalityTier::Remote, out);
     }
 }
 

@@ -11,28 +11,32 @@ use crate::cluster::{LocalityTier, NodeId};
 use crate::mapreduce::JobState;
 use crate::predictor::Predictor;
 
-use super::{greedy_fill, Action, SchedView, Scheduler, SchedulerKind};
+use super::{greedy_fill, Action, ClaimLedger, SchedView, Scheduler, SchedulerKind};
 
 #[derive(Debug, Default)]
-pub struct FairScheduler;
+pub struct FairScheduler {
+    /// Pooled job-order and claim buffers (reused every heartbeat).
+    order: Vec<usize>,
+    claims: ClaimLedger,
+}
 
 impl FairScheduler {
     pub fn new() -> Self {
-        Self
+        Self::default()
     }
 
-    /// Rank active jobs most-starved-first.
-    pub(crate) fn fair_order(view: &SchedView) -> Vec<usize> {
-        let active: Vec<usize> = (0..view.jobs.len())
-            .filter(|&i| !view.jobs[i].is_done())
-            .collect();
-        if active.is_empty() {
-            return active;
+    /// Rank active jobs most-starved-first into `order` (pooled). The
+    /// comparator's final `id` tie-break makes it a total order, so the
+    /// in-place unstable sort yields exactly the stable sort's result
+    /// without its temporary buffer.
+    pub(crate) fn fair_order_into(view: &SchedView, order: &mut Vec<usize>) {
+        order.clear();
+        order.extend((0..view.jobs.len()).filter(|&i| !view.jobs[i].is_done()));
+        if order.is_empty() {
+            return;
         }
-        let share =
-            view.cfg.total_map_slots() as f64 / active.len() as f64;
-        let mut order = active;
-        order.sort_by(|&a, &b| {
+        let share = view.cfg.total_map_slots() as f64 / order.len() as f64;
+        order.sort_unstable_by(|&a, &b| {
             let (ja, jb) = (&view.jobs[a], &view.jobs[b]);
             let da = deficit(ja, share);
             let db = deficit(jb, share);
@@ -41,6 +45,13 @@ impl FairScheduler {
                 .then(ja.submitted.cmp(&jb.submitted))
                 .then(ja.id.cmp(&jb.id))
         });
+    }
+
+    /// Allocating convenience wrapper around [`Self::fair_order_into`]
+    /// (tests and the naive reference implementations).
+    pub(crate) fn fair_order(view: &SchedView) -> Vec<usize> {
+        let mut order = Vec::new();
+        Self::fair_order_into(view, &mut order);
         order
     }
 }
@@ -60,9 +71,10 @@ impl Scheduler for FairScheduler {
         view: &SchedView,
         node: NodeId,
         _predictor: &mut dyn Predictor,
-    ) -> Vec<Action> {
-        let order = Self::fair_order(view);
-        greedy_fill(view, node, &order, |_| LocalityTier::Remote)
+        out: &mut Vec<Action>,
+    ) {
+        Self::fair_order_into(view, &mut self.order);
+        greedy_fill(view, node, &self.order, &mut self.claims, |_| LocalityTier::Remote, out);
     }
 }
 

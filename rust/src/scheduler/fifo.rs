@@ -5,14 +5,18 @@
 use crate::cluster::{LocalityTier, NodeId};
 use crate::predictor::Predictor;
 
-use super::{greedy_fill, Action, SchedView, Scheduler, SchedulerKind};
+use super::{greedy_fill, Action, ClaimLedger, SchedView, Scheduler, SchedulerKind};
 
 #[derive(Debug, Default)]
-pub struct FifoScheduler;
+pub struct FifoScheduler {
+    /// Pooled job-order and claim buffers (reused every heartbeat).
+    order: Vec<usize>,
+    claims: ClaimLedger,
+}
 
 impl FifoScheduler {
     pub fn new() -> Self {
-        Self
+        Self::default()
     }
 }
 
@@ -26,12 +30,12 @@ impl Scheduler for FifoScheduler {
         view: &SchedView,
         node: NodeId,
         _predictor: &mut dyn Predictor,
-    ) -> Vec<Action> {
+        out: &mut Vec<Action>,
+    ) {
         // Submission order == JobId order == index order.
-        let order: Vec<usize> = (0..view.jobs.len())
-            .filter(|&i| !view.jobs[i].is_done())
-            .collect();
-        greedy_fill(view, node, &order, |_| LocalityTier::Remote)
+        self.order.clear();
+        self.order.extend((0..view.jobs.len()).filter(|&i| !view.jobs[i].is_done()));
+        greedy_fill(view, node, &self.order, &mut self.claims, |_| LocalityTier::Remote, out);
     }
 }
 

@@ -2,16 +2,34 @@
 //!
 //! The coordinator drives a Hadoop-0.20-style protocol: every TaskTracker
 //! (VM) heartbeats every `heartbeat_s`; the scheduler inspects an immutable
-//! [`SchedView`] of the world and returns [`Action`]s, which the
-//! coordinator validates and applies. Schedulers never mutate world state
-//! directly — this keeps every policy replayable and lets the property
-//! tests check the same invariants across all of them.
+//! [`SchedView`] of the world and appends [`Action`]s to a pooled buffer,
+//! which the coordinator validates and applies. Schedulers never mutate
+//! world state directly — this keeps every policy replayable and lets the
+//! property tests check the same invariants across all of them.
+//!
+//! # Hot-path bookkeeping
+//!
+//! Scheduler callbacks fire once per event, so their per-call cost *is*
+//! the simulator's throughput. Two shared structures keep that cost O(1)
+//! amortized per decision and allocation-free at steady state:
+//!
+//! * action buffers are owned by the coordinator and reused across events
+//!   (callbacks take `out: &mut Vec<Action>` instead of returning a fresh
+//!   `Vec`);
+//! * within-heartbeat claims live in a generation-stamped `ClaimLedger`
+//!   instead of a per-heartbeat `HashSet<(JobId, TaskId)>`: bumping the
+//!   generation clears every claim in O(1), and the per-job reduce cursor
+//!   replaces the O(claimed²) `pending_reduces_iter().nth(skip)` pattern.
+//!
+//! The pre-index implementations are retained verbatim in [`reference`]
+//! for differential testing and the `benches/simcore.rs` baseline.
 
 mod deadline_vc;
 mod delay;
 mod edf;
 mod fair;
 mod fifo;
+pub mod reference;
 #[cfg(test)]
 pub(crate) mod testutil;
 
@@ -146,7 +164,10 @@ pub enum Action {
     },
 }
 
-/// The scheduler interface (see module docs for the protocol).
+/// The scheduler interface (see module docs for the protocol). Callbacks
+/// append to `out`, a buffer the coordinator owns, clears before each
+/// call and reuses across events — the hot loop allocates no action
+/// vectors at steady state.
 pub trait Scheduler {
     fn kind(&self) -> SchedulerKind;
 
@@ -155,17 +176,23 @@ pub trait Scheduler {
     }
 
     /// A new job appeared (Alg. 2 line 1-2).
-    fn on_job_added(&mut self, _view: &SchedView, _job: JobId, _predictor: &mut dyn Predictor) -> Vec<Action> {
-        Vec::new()
+    fn on_job_added(
+        &mut self,
+        _view: &SchedView,
+        _job: JobId,
+        _predictor: &mut dyn Predictor,
+        _out: &mut Vec<Action>,
+    ) {
     }
 
-    /// Heartbeat from `node`; return assignments for its free slots.
+    /// Heartbeat from `node`; append assignments for its free slots.
     fn on_heartbeat(
         &mut self,
         view: &SchedView,
         node: NodeId,
         predictor: &mut dyn Predictor,
-    ) -> Vec<Action>;
+        out: &mut Vec<Action>,
+    );
 
     /// A task of `job` finished (Alg. 2 lines 17-20).
     fn on_task_finished(
@@ -173,8 +200,128 @@ pub trait Scheduler {
         _view: &SchedView,
         _job: JobId,
         _predictor: &mut dyn Predictor,
-    ) -> Vec<Action> {
-        Vec::new()
+        _out: &mut Vec<Action>,
+    ) {
+    }
+}
+
+/// Within-heartbeat claim bookkeeping, pooled across heartbeats.
+///
+/// Launch actions are applied only after the scheduler returns, so tasks
+/// claimed earlier in the same heartbeat still look Pending in the view
+/// and must be skipped on later picks. The seed kept a per-heartbeat
+/// `HashSet<(JobId, TaskId)>` plus a `Vec` of claimed reduces counted
+/// with a linear filter (O(claimed²) per heartbeat) — both allocating on
+/// the hottest path in the repo. This ledger replaces them with
+/// generation-stamped arrays: a claim is a stamp equal to the current
+/// generation, `begin` bumps the generation (clearing every claim in
+/// O(1)) and the arrays are grown once per job/task, never freed.
+#[derive(Debug, Default)]
+pub(crate) struct ClaimLedger {
+    gen: u64,
+    /// Jobs already sized (high-water mark): a job's task count is fixed
+    /// at creation and the job list is append-only, so `begin` only ever
+    /// sizes the new suffix.
+    covered: usize,
+    /// `[job][map task]` claim stamps; claimed iff `== gen`.
+    map_stamps: Vec<Vec<u64>>,
+    /// Per-job count of maps claimed this generation.
+    map_count: Vec<u32>,
+    map_count_gen: Vec<u64>,
+    /// Per-job scan floor for the next reduce pick this generation — the
+    /// incremental equivalent of `pending_reduces_iter().nth(claimed)`.
+    reduce_from: Vec<u32>,
+    reduce_from_gen: Vec<u64>,
+    /// Per-job count of reduces claimed this generation.
+    reduce_count: Vec<u32>,
+    reduce_count_gen: Vec<u64>,
+}
+
+impl ClaimLedger {
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a scheduling round: invalidate all claims (the O(1)
+    /// generation bump) and size the tables for jobs that arrived since
+    /// the last round — only the new suffix is touched, so the whole call
+    /// is O(1) when no job arrived.
+    pub(crate) fn begin(&mut self, jobs: &[JobState]) {
+        self.gen += 1;
+        if jobs.len() > self.covered {
+            self.map_stamps.resize_with(jobs.len(), Vec::new);
+            self.map_count.resize(jobs.len(), 0);
+            self.map_count_gen.resize(jobs.len(), 0);
+            self.reduce_from.resize(jobs.len(), 0);
+            self.reduce_from_gen.resize(jobs.len(), 0);
+            self.reduce_count.resize(jobs.len(), 0);
+            self.reduce_count_gen.resize(jobs.len(), 0);
+            for (j, job) in jobs.iter().enumerate().skip(self.covered) {
+                self.map_stamps[j].resize(job.total_maps() as usize, 0);
+            }
+            self.covered = jobs.len();
+        }
+    }
+
+    pub(crate) fn claim_map(&mut self, job: JobId, t: TaskId) {
+        let j = job.idx();
+        let count = self.maps_claimed(job) + 1;
+        let stamps = &mut self.map_stamps[j];
+        if stamps.len() <= t.0 as usize {
+            // Self-healing under scheduler reuse across Worlds: a fresh
+            // run restarts job numbering, so the high-water-sized prefix
+            // can be stale. Stale *stamps* are harmless (`gen` is
+            // monotone, so old stamps never equal the current round).
+            stamps.resize(t.0 as usize + 1, 0);
+        }
+        stamps[t.0 as usize] = self.gen;
+        self.map_count[j] = count;
+        self.map_count_gen[j] = self.gen;
+    }
+
+    pub(crate) fn map_claimed(&self, job: JobId, t: TaskId) -> bool {
+        self.map_stamps[job.idx()]
+            .get(t.0 as usize)
+            .is_some_and(|&s| s == self.gen)
+    }
+
+    /// Maps claimed for `job` this round.
+    pub(crate) fn maps_claimed(&self, job: JobId) -> u32 {
+        let j = job.idx();
+        if self.map_count_gen[j] == self.gen {
+            self.map_count[j]
+        } else {
+            0
+        }
+    }
+
+    /// Reduces claimed for `job` this round.
+    pub(crate) fn reduces_claimed(&self, job: JobId) -> u32 {
+        let j = job.idx();
+        if self.reduce_count_gen[j] == self.gen {
+            self.reduce_count[j]
+        } else {
+            0
+        }
+    }
+
+    /// Claim the next pending reduce of `job` not yet claimed this round.
+    /// Claims are made in ascending index order, so "skip the claimed
+    /// ones" is exactly "start after the last claim" — each call is O(1)
+    /// amortized where `nth(claimed)` rescanned the array from the front.
+    pub(crate) fn claim_next_reduce(&mut self, job: &JobState) -> Option<TaskId> {
+        let j = job.id.idx();
+        let from = if self.reduce_from_gen[j] == self.gen {
+            self.reduce_from[j]
+        } else {
+            0
+        };
+        let t = job.next_pending_reduce_at(from)?;
+        self.reduce_from[j] = t.0 + 1;
+        self.reduce_from_gen[j] = self.gen;
+        self.reduce_count[j] = self.reduces_claimed(job.id) + 1;
+        self.reduce_count_gen[j] = self.gen;
+        Some(t)
     }
 }
 
@@ -185,22 +332,22 @@ pub trait Scheduler {
 /// tier the job may accept on this heartbeat); reduces fill reduce slots
 /// once the map phase is done. Under the flat topology the rack stage is
 /// inert (no rack index exists), so `max_tier_for == Remote` reproduces
-/// the seed's local-else-any behaviour exactly.
+/// the seed's local-else-any behaviour exactly. Appends to `out`; the
+/// caller's pooled `claims` ledger makes the whole call allocation-free.
 pub(crate) fn greedy_fill(
     view: &SchedView,
     node: NodeId,
     job_order: &[usize],
+    claims: &mut ClaimLedger,
     max_tier_for: impl Fn(&JobState) -> LocalityTier,
-) -> Vec<Action> {
-    let mut actions = Vec::new();
+    out: &mut Vec<Action>,
+) {
+    claims.begin(view.jobs);
     let vm = view.cluster.vm(node);
     let rack = view.cluster.rack_of(node);
     let racked = view.cluster.topology().is_racked();
     let mut free_map = vm.free_map_slots();
     let mut free_reduce = vm.free_reduce_slots();
-    // Track launches within this heartbeat so one task isn't picked twice.
-    let mut claimed_maps = ClaimSet::new();
-    let mut claimed_reduces: Vec<(JobId, u32)> = Vec::new();
 
     for &ji in job_order {
         let job = &view.jobs[ji];
@@ -210,24 +357,24 @@ pub(crate) fn greedy_fill(
         // Map work.
         while free_map > 0 {
             let cap = max_tier_for(job);
-            let pick = next_unclaimed_local(job, node, &claimed_maps)
+            let pick = next_unclaimed_local(job, node, claims)
                 .or_else(|| {
                     if racked && cap >= LocalityTier::RackLocal {
-                        next_unclaimed_rack(job, rack, &claimed_maps)
+                        next_unclaimed_rack(job, rack, claims)
                     } else {
                         None
                     }
                 })
                 .or_else(|| {
                     if cap >= LocalityTier::Remote {
-                        next_unclaimed_any(job, &claimed_maps)
+                        next_unclaimed_any(job, claims)
                     } else {
                         None
                     }
                 });
             let Some(task) = pick else { break };
-            claimed_maps.insert((job.id, task));
-            actions.push(Action::LaunchMap {
+            claims.claim_map(job.id, task);
+            out.push(Action::LaunchMap {
                 job: job.id,
                 task,
                 node,
@@ -237,13 +384,8 @@ pub(crate) fn greedy_fill(
         // Reduce work (only after the map phase: Hadoop 0.20 semantics in
         // this engine — see mapreduce module docs).
         while free_reduce > 0 && job.map_finished() {
-            let already: u32 = claimed_reduces
-                .iter()
-                .filter(|(j, _)| *j == job.id)
-                .count() as u32;
-            let Some(task) = nth_pending_reduce(job, already) else { break };
-            claimed_reduces.push((job.id, task.0));
-            actions.push(Action::LaunchReduce {
+            let Some(task) = claims.claim_next_reduce(job) else { break };
+            out.push(Action::LaunchReduce {
                 job: job.id,
                 task,
                 node,
@@ -251,21 +393,15 @@ pub(crate) fn greedy_fill(
             free_reduce -= 1;
         }
     }
-    actions
 }
-
-/// Set of (job, task) pairs claimed within one heartbeat (launch actions
-/// are applied only after the scheduler returns, so claimed tasks still
-/// look Pending in the view).
-pub(crate) type ClaimSet = std::collections::HashSet<(JobId, TaskId)>;
 
 pub(crate) fn next_unclaimed_local(
     job: &JobState,
     node: NodeId,
-    claimed: &ClaimSet,
+    claims: &ClaimLedger,
 ) -> Option<TaskId> {
     job.pending_local_maps(node)
-        .find(|&t| !claimed.contains(&(job.id, t)))
+        .find(|&t| !claims.map_claimed(job.id, t))
 }
 
 /// First pending map task with a replica in `rack` not yet claimed this
@@ -273,19 +409,15 @@ pub(crate) fn next_unclaimed_local(
 pub(crate) fn next_unclaimed_rack(
     job: &JobState,
     rack: u32,
-    claimed: &ClaimSet,
+    claims: &ClaimLedger,
 ) -> Option<TaskId> {
     job.pending_rack_maps(rack)
-        .find(|&t| !claimed.contains(&(job.id, t)))
+        .find(|&t| !claims.map_claimed(job.id, t))
 }
 
-pub(crate) fn next_unclaimed_any(job: &JobState, claimed: &ClaimSet) -> Option<TaskId> {
+pub(crate) fn next_unclaimed_any(job: &JobState, claims: &ClaimLedger) -> Option<TaskId> {
     job.pending_maps_iter()
-        .find(|&t| !claimed.contains(&(job.id, t)))
-}
-
-fn nth_pending_reduce(job: &JobState, skip: u32) -> Option<TaskId> {
-    job.pending_reduces_iter().nth(skip as usize)
+        .find(|&t| !claims.map_claimed(job.id, t))
 }
 
 #[cfg(test)]

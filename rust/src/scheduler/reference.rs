@@ -1,0 +1,539 @@
+//! The retained **naive-scan reference schedulers** — the pre-index hot
+//! path, kept verbatim so the optimized loop can be checked and measured
+//! against it.
+//!
+//! The indexed schedulers (`fifo`/`fair`/`delay`/`edf`/`deadline_vc`)
+//! replaced three O(jobs × tasks) patterns with O(1)-amortized ones:
+//! filter-scan pending iterators (now lazily-pruned cursors in
+//! `mapreduce::JobState`), per-heartbeat `HashSet` claim sets and the
+//! `pending_reduces_iter().nth(skip)` reduce pick (now the
+//! generation-stamped `ClaimLedger`), and freshly
+//! allocated action/order vectors (now pooled buffers). This module keeps
+//! the *original* structures — `HashSet` claims, `HashMap` counters,
+//! `*_scan` iterators, per-heartbeat allocation — behind the same
+//! [`Scheduler`] trait, so that:
+//!
+//! * `tests/differential_reference.rs` can run both implementations over
+//!   the full scheduler × topology × seed matrix and assert **identical
+//!   action streams and bitwise-equal reports** (the optimization changes
+//!   no simulated outcome, only wall time);
+//! * `benches/simcore.rs` can report events/sec of the indexed loop
+//!   against this baseline on the `stress` scenario and write the ratio
+//!   into `BENCH_simcore.json`.
+//!
+//! The one deliberate departure from the seed: the DeadlineVc await
+//! ledger is the same insertion-ordered `Vec` the optimized scheduler
+//! uses (the seed's `HashMap` emitted CancelAwait actions in
+//! nondeterministic iteration order — outcome-equivalent, since cancels
+//! commute, but not stream-comparable).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cluster::{LocalityTier, NodeId};
+use crate::config::SimConfig;
+use crate::mapreduce::{JobId, JobState, TaskId};
+use crate::predictor::Predictor;
+use crate::sim::SimTime;
+
+use super::deadline_vc::{choose_target_with, job_demand};
+use super::{
+    Action, DeadlineVcScheduler, DvcTuning, EdfScheduler, FairScheduler, SchedView, Scheduler,
+    SchedulerKind,
+};
+
+/// Build the naive reference implementation of `kind` (same policy, seed
+/// data structures). Pair with [`SchedulerKind::build`] for differential
+/// runs.
+pub fn build_reference(kind: SchedulerKind, cfg: &SimConfig) -> Box<dyn Scheduler> {
+    match kind {
+        SchedulerKind::Fifo | SchedulerKind::Fair | SchedulerKind::Edf => {
+            Box::new(NaiveGreedy { kind })
+        }
+        SchedulerKind::Delay => Box::new(NaiveDelay {
+            patience: cfg.delay_heartbeats,
+            skipped: HashMap::new(),
+        }),
+        SchedulerKind::DeadlineVc => Box::new(NaiveDeadlineVc::new(cfg)),
+    }
+}
+
+/// Per-heartbeat claim set, the seed structure (see module docs).
+type ClaimSet = HashSet<(JobId, TaskId)>;
+
+fn next_unclaimed_local_scan(job: &JobState, node: NodeId, claimed: &ClaimSet) -> Option<TaskId> {
+    job.pending_local_maps_scan(node)
+        .find(|&t| !claimed.contains(&(job.id, t)))
+}
+
+fn next_unclaimed_rack_scan(job: &JobState, rack: u32, claimed: &ClaimSet) -> Option<TaskId> {
+    job.pending_rack_maps_scan(rack)
+        .find(|&t| !claimed.contains(&(job.id, t)))
+}
+
+fn next_unclaimed_any_scan(job: &JobState, claimed: &ClaimSet) -> Option<TaskId> {
+    job.pending_maps_scan()
+        .find(|&t| !claimed.contains(&(job.id, t)))
+}
+
+fn nth_pending_reduce_scan(job: &JobState, skip: u32) -> Option<TaskId> {
+    job.pending_reduces_scan().nth(skip as usize)
+}
+
+/// The seed `greedy_fill`: fresh `HashSet`/`Vec` per heartbeat, linear
+/// claimed-reduce count, naive scans.
+fn greedy_fill_scan(
+    view: &SchedView,
+    node: NodeId,
+    job_order: &[usize],
+    max_tier_for: impl Fn(&JobState) -> LocalityTier,
+) -> Vec<Action> {
+    let mut actions = Vec::new();
+    let vm = view.cluster.vm(node);
+    let rack = view.cluster.rack_of(node);
+    let racked = view.cluster.topology().is_racked();
+    let mut free_map = vm.free_map_slots();
+    let mut free_reduce = vm.free_reduce_slots();
+    let mut claimed_maps = ClaimSet::new();
+    let mut claimed_reduces: Vec<(JobId, u32)> = Vec::new();
+
+    for &ji in job_order {
+        let job = &view.jobs[ji];
+        if job.is_done() {
+            continue;
+        }
+        while free_map > 0 {
+            let cap = max_tier_for(job);
+            let pick = next_unclaimed_local_scan(job, node, &claimed_maps)
+                .or_else(|| {
+                    if racked && cap >= LocalityTier::RackLocal {
+                        next_unclaimed_rack_scan(job, rack, &claimed_maps)
+                    } else {
+                        None
+                    }
+                })
+                .or_else(|| {
+                    if cap >= LocalityTier::Remote {
+                        next_unclaimed_any_scan(job, &claimed_maps)
+                    } else {
+                        None
+                    }
+                });
+            let Some(task) = pick else { break };
+            claimed_maps.insert((job.id, task));
+            actions.push(Action::LaunchMap {
+                job: job.id,
+                task,
+                node,
+            });
+            free_map -= 1;
+        }
+        while free_reduce > 0 && job.map_finished() {
+            let already: u32 = claimed_reduces
+                .iter()
+                .filter(|(j, _)| *j == job.id)
+                .count() as u32;
+            let Some(task) = nth_pending_reduce_scan(job, already) else { break };
+            claimed_reduces.push((job.id, task.0));
+            actions.push(Action::LaunchReduce {
+                job: job.id,
+                task,
+                node,
+            });
+            free_reduce -= 1;
+        }
+    }
+    actions
+}
+
+/// Naive FIFO / Fair / EDF: shared ordering policies (the order functions
+/// are not what the index optimizes), naive greedy fill.
+struct NaiveGreedy {
+    kind: SchedulerKind,
+}
+
+impl Scheduler for NaiveGreedy {
+    fn kind(&self) -> SchedulerKind {
+        self.kind
+    }
+
+    fn on_heartbeat(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        _predictor: &mut dyn Predictor,
+        out: &mut Vec<Action>,
+    ) {
+        let order: Vec<usize> = match self.kind {
+            SchedulerKind::Fifo => (0..view.jobs.len())
+                .filter(|&i| !view.jobs[i].is_done())
+                .collect(),
+            SchedulerKind::Fair => FairScheduler::fair_order(view),
+            SchedulerKind::Edf => EdfScheduler::edf_order(view),
+            _ => unreachable!("NaiveGreedy only wraps fifo/fair/edf"),
+        };
+        out.extend(greedy_fill_scan(view, node, &order, |_| {
+            LocalityTier::Remote
+        }));
+    }
+}
+
+/// Naive Delay scheduling: the seed's `HashMap` skip counters + naive
+/// fill. The tier-cap policy is shared with the optimized scheduler.
+struct NaiveDelay {
+    patience: u32,
+    skipped: HashMap<JobId, u32>,
+}
+
+impl Scheduler for NaiveDelay {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Delay
+    }
+
+    fn on_heartbeat(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        _predictor: &mut dyn Predictor,
+        out: &mut Vec<Action>,
+    ) {
+        let order = FairScheduler::fair_order(view);
+        let skipped = &self.skipped;
+        let patience = self.patience;
+        let racked = view.cluster.topology().is_racked();
+        let actions = greedy_fill_scan(view, node, &order, |job| {
+            let s = skipped.get(&job.id).copied().unwrap_or(0);
+            super::DelayScheduler::tier_cap(patience, s, racked)
+        });
+        for &ji in &order {
+            let job = &view.jobs[ji];
+            if job.pending_maps() == 0 {
+                self.skipped.remove(&job.id);
+                continue;
+            }
+            let launched_for_job = actions
+                .iter()
+                .any(|a| matches!(a, Action::LaunchMap { job: j, .. } if *j == job.id));
+            if launched_for_job {
+                self.skipped.remove(&job.id);
+            } else {
+                *self.skipped.entry(job.id).or_insert(0) += 1;
+            }
+        }
+        out.extend(actions);
+    }
+}
+
+/// Naive DeadlineVc: the seed heartbeat loop — per-heartbeat `HashSet`
+/// claims, `HashMap` schedule counters, `nth(skip)` reduce picks, fresh
+/// per-node slot vector — under the identical Alg. 1 + Alg. 2 policy.
+struct NaiveDeadlineVc {
+    tuning: DvcTuning,
+    reconfig_timeout: SimTime,
+    awaiting_since: Vec<(JobId, u32, SimTime)>,
+    max_map_slots: u32,
+    max_reduce_slots: u32,
+}
+
+impl NaiveDeadlineVc {
+    fn new(cfg: &SimConfig) -> Self {
+        let tuning = DvcTuning::default();
+        Self {
+            reconfig_timeout: SimTime::from_secs_f64(cfg.heartbeat_s * tuning.timeout_heartbeats),
+            awaiting_since: Vec::new(),
+            max_map_slots: cfg.total_map_slots(),
+            max_reduce_slots: cfg.total_reduce_slots(),
+            tuning,
+        }
+    }
+
+    fn recompute_allocs(&self, view: &SchedView, predictor: &mut dyn Predictor) -> Vec<Action> {
+        let mut ids = Vec::new();
+        let mut demands = Vec::new();
+        for job in view.active_jobs() {
+            if let Some(d) = job_demand(job, view.now) {
+                ids.push(job.id);
+                demands.push(d);
+            }
+        }
+        if demands.is_empty() {
+            return Vec::new();
+        }
+        let solved = predictor.solve_slots(&demands);
+        ids.iter()
+            .zip(solved)
+            .map(|(&job, s)| {
+                let (m, r) = if s.infeasible {
+                    (self.max_map_slots, self.max_reduce_slots)
+                } else {
+                    (
+                        s.map_slots.min(self.max_map_slots).max(1),
+                        s.reduce_slots.min(self.max_reduce_slots).max(1),
+                    )
+                };
+                Action::SetAlloc {
+                    job,
+                    map_slots: m,
+                    reduce_slots: r,
+                }
+            })
+            .collect()
+    }
+
+    fn expire_awaiting(&mut self, view: &SchedView) -> Vec<Action> {
+        let mut out = Vec::new();
+        let now = view.now;
+        let timeout = self.reconfig_timeout;
+        self.awaiting_since.retain(|&(job, task, since)| {
+            let js = &view.jobs[job.idx()];
+            if !js.map_state(TaskId(task)).is_awaiting() {
+                return false;
+            }
+            if now.saturating_sub(since) > timeout {
+                out.push(Action::CancelAwait {
+                    job,
+                    task: TaskId(task),
+                });
+                return false;
+            }
+            true
+        });
+        out
+    }
+}
+
+impl Scheduler for NaiveDeadlineVc {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::DeadlineVc
+    }
+
+    fn on_job_added(
+        &mut self,
+        view: &SchedView,
+        _job: JobId,
+        predictor: &mut dyn Predictor,
+        out: &mut Vec<Action>,
+    ) {
+        out.extend(self.recompute_allocs(view, predictor));
+    }
+
+    fn on_task_finished(
+        &mut self,
+        view: &SchedView,
+        _job: JobId,
+        predictor: &mut dyn Predictor,
+        out: &mut Vec<Action>,
+    ) {
+        out.extend(self.recompute_allocs(view, predictor));
+    }
+
+    fn on_heartbeat(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        _predictor: &mut dyn Predictor,
+        out: &mut Vec<Action>,
+    ) {
+        let mut actions = self.expire_awaiting(view);
+        let order = DeadlineVcScheduler::job_order(view);
+
+        let mut free: Vec<u32> = (0..view.cluster.num_nodes())
+            .map(|i| view.cluster.vm(NodeId(i as u32)).free_map_slots())
+            .collect();
+        let mut free_reduce = view.cluster.vm(node).free_reduce_slots();
+        let racked = view.cluster.topology().is_racked();
+        let my_rack = view.cluster.rack_of(node);
+        let mut claimed = ClaimSet::new();
+        let mut extra_sched: HashMap<JobId, u32> = HashMap::new();
+        let mut released_this_hb = false;
+        let mut routed = 0u32;
+        let max_routed = self.tuning.max_routed;
+
+        let passes: u8 = if self.tuning.spare_pass { 2 } else { 1 };
+        for pass in 0..passes {
+            'jobs: for &ji in &order {
+                let job = &view.jobs[ji];
+                if job.is_done() || job.map_finished() {
+                    continue;
+                }
+                loop {
+                    if free[node.idx()] == 0 && routed >= max_routed {
+                        break 'jobs;
+                    }
+                    if pass == 0 {
+                        let sched =
+                            job.scheduled_maps() + extra_sched.get(&job.id).copied().unwrap_or(0);
+                        if !job.cold() && sched >= job.alloc_map_slots {
+                            break;
+                        }
+                    }
+                    if free[node.idx()] > 0 {
+                        if let Some(t) = next_unclaimed_local_scan(job, node, &claimed) {
+                            claimed.insert((job.id, t));
+                            *extra_sched.entry(job.id).or_insert(0) += 1;
+                            actions.push(Action::LaunchMap { job: job.id, task: t, node });
+                            free[node.idx()] -= 1;
+                            continue;
+                        }
+                    }
+                    let rack_pick = if racked && free[node.idx()] > 0 {
+                        next_unclaimed_rack_scan(job, my_rack, &claimed)
+                    } else {
+                        None
+                    };
+                    let Some(t) = rack_pick.or_else(|| next_unclaimed_any_scan(job, &claimed))
+                    else {
+                        break;
+                    };
+                    let Some(target) = choose_target_with(self.tuning, view, job, t) else {
+                        if free[node.idx()] > 0 {
+                            claimed.insert((job.id, t));
+                            *extra_sched.entry(job.id).or_insert(0) += 1;
+                            actions.push(Action::LaunchMap { job: job.id, task: t, node });
+                            free[node.idx()] -= 1;
+                            continue;
+                        }
+                        break;
+                    };
+                    if free[target.idx()] > 0 && routed < max_routed {
+                        claimed.insert((job.id, t));
+                        *extra_sched.entry(job.id).or_insert(0) += 1;
+                        actions.push(Action::LaunchMap { job: job.id, task: t, node: target });
+                        free[target.idx()] -= 1;
+                        routed += 1;
+                        continue;
+                    }
+                    let release_ready = !self.tuning.await_requires_release
+                        || view.cm.rq_depth(view.cluster.pm_of(target)) > 0;
+                    if pass == 0
+                        && release_ready
+                        && !released_this_hb
+                        && free[node.idx()] > 0
+                        && view.cluster.vm(node).can_release_core()
+                    {
+                        claimed.insert((job.id, t));
+                        *extra_sched.entry(job.id).or_insert(0) += 1;
+                        self.awaiting_since.push((job.id, t.0, view.now));
+                        actions.push(Action::AwaitReconfig {
+                            job: job.id,
+                            task: t,
+                            target,
+                            release_from: node,
+                        });
+                        released_this_hb = true;
+                        free[node.idx()] -= 1;
+                        continue;
+                    }
+                    if free[node.idx()] > 0 {
+                        claimed.insert((job.id, t));
+                        if pass == 0 {
+                            *extra_sched.entry(job.id).or_insert(0) += 1;
+                        }
+                        actions.push(Action::LaunchMap { job: job.id, task: t, node });
+                        free[node.idx()] -= 1;
+                        continue;
+                    }
+                    break;
+                }
+            }
+        }
+
+        let mut extra_red: HashMap<JobId, u32> = HashMap::new();
+        for pass in 0..passes {
+            for &ji in &order {
+                let job = &view.jobs[ji];
+                if job.is_done() || !job.map_finished() {
+                    continue;
+                }
+                while free_reduce > 0 {
+                    let extra = extra_red.get(&job.id).copied().unwrap_or(0);
+                    if pass == 0 && job.running_reduces() + extra >= job.alloc_reduce_slots {
+                        break;
+                    }
+                    let Some(t) = nth_pending_reduce_scan(job, extra) else {
+                        break;
+                    };
+                    *extra_red.entry(job.id).or_insert(0) += 1;
+                    actions.push(Action::LaunchReduce { job: job.id, task: t, node });
+                    free_reduce -= 1;
+                }
+                if free_reduce == 0 {
+                    break;
+                }
+            }
+        }
+
+        if free[node.idx()] > 0 && !released_this_hb && view.cluster.vm(node).can_release_core() {
+            actions.push(Action::RegisterRelease { node });
+        }
+
+        out.extend(actions);
+    }
+}
+
+/// Records every action a wrapped scheduler emits, in emission order —
+/// the probe the differential tests compare indexed-vs-reference action
+/// streams with.
+pub struct Recording {
+    inner: Box<dyn Scheduler>,
+    log: Vec<Action>,
+}
+
+impl Recording {
+    pub fn new(inner: Box<dyn Scheduler>) -> Self {
+        Self {
+            inner,
+            log: Vec::new(),
+        }
+    }
+
+    /// The recorded action stream.
+    pub fn log(&self) -> &[Action] {
+        &self.log
+    }
+
+    pub fn into_log(self) -> Vec<Action> {
+        self.log
+    }
+}
+
+impl Scheduler for Recording {
+    fn kind(&self) -> SchedulerKind {
+        self.inner.kind()
+    }
+
+    fn on_job_added(
+        &mut self,
+        view: &SchedView,
+        job: JobId,
+        predictor: &mut dyn Predictor,
+        out: &mut Vec<Action>,
+    ) {
+        let start = out.len();
+        self.inner.on_job_added(view, job, predictor, out);
+        self.log.extend_from_slice(&out[start..]);
+    }
+
+    fn on_heartbeat(
+        &mut self,
+        view: &SchedView,
+        node: NodeId,
+        predictor: &mut dyn Predictor,
+        out: &mut Vec<Action>,
+    ) {
+        let start = out.len();
+        self.inner.on_heartbeat(view, node, predictor, out);
+        self.log.extend_from_slice(&out[start..]);
+    }
+
+    fn on_task_finished(
+        &mut self,
+        view: &SchedView,
+        job: JobId,
+        predictor: &mut dyn Predictor,
+        out: &mut Vec<Action>,
+    ) {
+        let start = out.len();
+        self.inner.on_task_finished(view, job, predictor, out);
+        self.log.extend_from_slice(&out[start..]);
+    }
+}

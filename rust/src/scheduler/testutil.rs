@@ -38,8 +38,8 @@ impl TestWorld {
                 _: &SchedView,
                 _: NodeId,
                 _: &mut dyn crate::predictor::Predictor,
-            ) -> Vec<Action> {
-                Vec::new()
+                _: &mut Vec<Action>,
+            ) {
             }
         }
         // Arrivals are scheduled at t=0 before any heartbeat offsets > 0;
@@ -202,15 +202,18 @@ impl TestWorld {
     /// Fire one heartbeat; return actions WITHOUT applying them.
     pub fn heartbeat_with(&mut self, s: &mut dyn Scheduler, node: NodeId) -> Vec<Action> {
         let mut p = NativePredictor::new();
-        s.on_heartbeat(&self.world.view(), node, &mut p)
+        let mut out = Vec::new();
+        s.on_heartbeat(&self.world.view(), node, &mut p, &mut out);
+        out
     }
 
     /// Fire one heartbeat and apply the actions (plus queue matching).
     pub fn heartbeat_and_apply(&mut self, s: &mut dyn Scheduler, node: NodeId) -> Vec<Action> {
         let mut p = NativePredictor::new();
-        let actions = s.on_heartbeat(&self.world.view(), node, &mut p);
-        self.world.apply_actions(actions.clone());
+        let mut out = Vec::new();
+        s.on_heartbeat(&self.world.view(), node, &mut p, &mut out);
+        self.world.apply_actions(&out);
         self.world.match_reconfigs();
-        actions
+        out
     }
 }

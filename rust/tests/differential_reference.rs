@@ -1,0 +1,152 @@
+//! Differential property test: the indexed schedulers (cursor-pruned
+//! pending lists, generation-stamped claim ledger, pooled buffers) must
+//! be **observationally identical** to the retained naive-scan reference
+//! implementations (`vcsched::scheduler::reference`) — same action
+//! stream, same report, bit for bit. This is the contract that lets the
+//! perf work touch the hottest code in the repo without moving a single
+//! simulated outcome.
+//!
+//! Matrix: every `SchedulerKind` × {flat, racks-4} × 3 seeds.
+
+use vcsched::cluster::Topology;
+use vcsched::config::SimConfig;
+use vcsched::coordinator::World;
+use vcsched::predictor::NativePredictor;
+use vcsched::scheduler::reference::{build_reference, Recording};
+use vcsched::scheduler::{Action, Scheduler, SchedulerKind};
+use vcsched::workloads::trace::JobTrace;
+
+/// Run `trace` under a recording wrapper; return the full action stream
+/// and the run report.
+fn run_recorded(
+    cfg: &SimConfig,
+    sched: Box<dyn Scheduler>,
+    trace: &JobTrace,
+) -> (Vec<Action>, vcsched::coordinator::Report) {
+    let name = sched.kind().name();
+    let mut rec = Recording::new(sched);
+    let mut pred = NativePredictor::new();
+    let mut world = World::new(cfg.clone(), trace.clone());
+    world.run(&mut rec, &mut pred);
+    let report = world.into_metrics(name);
+    (rec.into_log(), report)
+}
+
+#[test]
+fn indexed_path_matches_naive_reference_exactly() {
+    for kind in SchedulerKind::ALL {
+        for topology in [Topology::Flat, Topology::Racks(4)] {
+            for seed in [11u64, 42, 1337] {
+                let cfg = SimConfig {
+                    topology,
+                    seed,
+                    ..SimConfig::paper()
+                };
+                let trace = JobTrace::poisson(&cfg, 10, 4.0, 1.6..3.0, seed);
+                let label = format!("{} / {} / seed {seed}", kind.name(), topology.label());
+
+                let (log_a, rep_a) = run_recorded(&cfg, kind.build(&cfg), &trace);
+                let (log_b, rep_b) = run_recorded(&cfg, build_reference(kind, &cfg), &trace);
+
+                // The action streams are compared wholesale: every launch,
+                // await, cancel, release and alloc, in emission order.
+                assert_eq!(
+                    log_a.len(),
+                    log_b.len(),
+                    "{label}: action stream lengths diverge"
+                );
+                for (i, (a, b)) in log_a.iter().zip(&log_b).enumerate() {
+                    assert_eq!(a, b, "{label}: action {i} diverges");
+                }
+
+                // Reports must be bitwise equal (wall_s is host time and
+                // is set by the caller, not here).
+                assert_eq!(rep_a.events, rep_b.events, "{label}: events");
+                assert_eq!(rep_a.hotplugs, rep_b.hotplugs, "{label}: hotplugs");
+                assert_eq!(rep_a.heartbeats, rep_b.heartbeats, "{label}: heartbeats");
+                assert_eq!(
+                    rep_a.makespan_s.to_bits(),
+                    rep_b.makespan_s.to_bits(),
+                    "{label}: makespan"
+                );
+                assert_eq!(rep_a.jobs.len(), rep_b.jobs.len(), "{label}: job count");
+                for (x, y) in rep_a.jobs.iter().zip(&rep_b.jobs) {
+                    assert_eq!(
+                        x.completion_s.to_bits(),
+                        y.completion_s.to_bits(),
+                        "{label}: job {:?} completion",
+                        x.id
+                    );
+                    assert_eq!(x.local_maps, y.local_maps, "{label}: job {:?}", x.id);
+                    assert_eq!(x.rack_maps, y.rack_maps, "{label}: job {:?}", x.id);
+                    assert_eq!(x.remote_maps, y.remote_maps, "{label}: job {:?}", x.id);
+                    assert_eq!(x.met_deadline, y.met_deadline, "{label}: job {:?}", x.id);
+                }
+            }
+        }
+    }
+}
+
+/// A scheduler instance may be reused across Worlds
+/// (`run_simulation_custom` supports it). Fifo/Fair/Edf were stateless
+/// before the pooled ledger/buffers landed, so reuse must stay exactly
+/// equivalent to a fresh instance — the ledger self-heals when job
+/// numbering restarts. (Delay and DeadlineVc carried genuine cross-run
+/// policy state — skip counters, the await ledger — in the seed as
+/// well, so bitwise fresh-equivalence was never defined for them.)
+#[test]
+fn scheduler_reuse_across_worlds_matches_fresh_instance() {
+    let cfg_a = SimConfig { seed: 3, ..SimConfig::paper() };
+    let cfg_b = SimConfig { seed: 9, ..SimConfig::paper() };
+    // Different traces, different job/task shapes.
+    let trace_a = JobTrace::poisson(&cfg_a, 6, 3.0, 1.6..3.0, 3);
+    let trace_b = JobTrace::poisson(&cfg_b, 9, 2.0, 1.6..3.0, 9);
+    for kind in [SchedulerKind::Fifo, SchedulerKind::Fair, SchedulerKind::Edf] {
+        let mut reused = kind.build(&cfg_a);
+        let mut pred = NativePredictor::new();
+        let mut world = World::new(cfg_a.clone(), trace_a.clone());
+        world.run(reused.as_mut(), &mut pred);
+        // Second run with the SAME scheduler instance...
+        let mut pred = NativePredictor::new();
+        let mut world = World::new(cfg_b.clone(), trace_b.clone());
+        world.run(reused.as_mut(), &mut pred);
+        let rep_reused = world.into_metrics(kind.name());
+        // ...must match a fresh instance bit for bit.
+        let mut fresh = kind.build(&cfg_b);
+        let mut pred = NativePredictor::new();
+        let mut world = World::new(cfg_b.clone(), trace_b.clone());
+        world.run(fresh.as_mut(), &mut pred);
+        let rep_fresh = world.into_metrics(kind.name());
+        assert_eq!(
+            rep_reused.makespan_s.to_bits(),
+            rep_fresh.makespan_s.to_bits(),
+            "{}: reused scheduler diverged from fresh",
+            kind.name()
+        );
+        assert_eq!(rep_reused.events, rep_fresh.events, "{}", kind.name());
+        for (x, y) in rep_reused.jobs.iter().zip(&rep_fresh.jobs) {
+            assert_eq!(x.completion_s.to_bits(), y.completion_s.to_bits(), "{}", kind.name());
+        }
+    }
+}
+
+/// The cursor rollback path (AwaitingReconfig -> Pending) is exercised by
+/// the DeadlineVc cells above whenever an await expires; this pins the
+/// per-scheduler invariants (`JobState::check_invariants` includes the
+/// cursor invariant) over a run that definitely produces awaits.
+#[test]
+fn cursor_invariants_hold_through_await_cancellation() {
+    let cfg = SimConfig {
+        seed: 7,
+        ..SimConfig::paper()
+    };
+    let trace = JobTrace::poisson(&cfg, 8, 2.0, 1.6..3.0, 7);
+    let mut sched = SchedulerKind::DeadlineVc.build(&cfg);
+    let mut pred = NativePredictor::new();
+    let mut world = World::new(cfg, trace);
+    while world.step_one(sched.as_mut(), &mut pred) {
+        for job in &world.jobs {
+            job.check_invariants().unwrap();
+        }
+    }
+}
