@@ -84,6 +84,10 @@ pub struct PhysicalMachine {
     /// Rack this machine lives in (always 0 under [`Topology::Flat`]).
     pub rack: u32,
     pub vms: Vec<NodeId>,
+    /// Fail-stop liveness (failure injection). Dead PMs run nothing:
+    /// their VMs' heartbeats are gated and their slots unschedulable.
+    /// Always `true` when the failure model is off.
+    pub alive: bool,
 }
 
 impl PhysicalMachine {
@@ -183,6 +187,7 @@ impl Cluster {
                 speed,
                 rack: cfg.topology.rack_of_pm(p),
                 vms: Vec::with_capacity(cfg.vms_per_pm),
+                alive: true,
             };
             for _ in 0..cfg.vms_per_pm {
                 let id = NodeId(vms.len() as u32);
@@ -278,6 +283,43 @@ impl Cluster {
         }
     }
 
+    /// Is this PM up? (Always `true` without failure injection.)
+    pub fn pm_alive(&self, pm: PmId) -> bool {
+        self.pm(pm).alive
+    }
+
+    /// Is this node's host PM up? Dead nodes run nothing and take no
+    /// launches.
+    pub fn node_alive(&self, node: NodeId) -> bool {
+        self.pm(self.pm_of(node)).alive
+    }
+
+    /// Fail-stop crash of a PM: mark it dead and wipe its VMs back to the
+    /// base slot layout (running tasks die — the *coordinator* transitions
+    /// their job state before calling this; mid-hotplug cores snap back to
+    /// the base allocation, matching the reset the hypervisor would do on
+    /// reboot).
+    pub fn crash_pm(&mut self, pm: PmId) {
+        debug_assert!(self.pms[pm.idx()].alive, "crashing dead PM {pm:?}");
+        self.pms[pm.idx()].alive = false;
+        let vms = self.pms[pm.idx()].vms.clone();
+        for v in vms {
+            let vm = self.vm_mut(v);
+            vm.vcpus = vm.base_vcpus;
+            vm.busy_map = 0;
+            vm.busy_reduce = 0;
+        }
+        debug_assert!(self.check_invariants().is_ok());
+    }
+
+    /// Recover a crashed PM: it rejoins with freshly-booted VMs at the
+    /// base configuration (all prior state was lost at the crash).
+    pub fn recover_pm(&mut self, pm: PmId) {
+        debug_assert!(!self.pms[pm.idx()].alive, "recovering live PM {pm:?}");
+        self.pms[pm.idx()].alive = true;
+        debug_assert!(self.check_invariants().is_ok());
+    }
+
     /// Spare (unassigned) physical cores on a PM.
     pub fn spare_cores(&self, pm: PmId) -> u32 {
         let p = self.pm(pm);
@@ -367,6 +409,32 @@ mod tests {
 
     fn cluster() -> Cluster {
         Cluster::build(&SimConfig::small()) // 4 PMs x 2 VMs x 2 vCPUs
+    }
+
+    #[test]
+    fn crash_and_recover_reset_vms() {
+        let mut c = cluster();
+        let pm = PmId(1);
+        let nodes = c.pm(pm).vms.clone();
+        // Dirty the PM: busy slots and a hot-plugged core imbalance.
+        c.transfer_core(nodes[1], nodes[0]).unwrap();
+        c.vm_mut(nodes[0]).busy_map = 2;
+        c.vm_mut(nodes[1]).busy_reduce = 1;
+        assert!(c.node_alive(nodes[0]));
+        c.crash_pm(pm);
+        assert!(!c.pm_alive(pm));
+        assert!(!c.node_alive(nodes[0]));
+        for &n in &nodes {
+            let vm = c.vm(n);
+            assert_eq!(vm.vcpus, vm.base_vcpus);
+            assert_eq!(vm.busy_map, 0);
+            assert_eq!(vm.busy_reduce, 0);
+        }
+        // Other PMs untouched.
+        assert!(c.pm_alive(PmId(0)));
+        c.recover_pm(pm);
+        assert!(c.pm_alive(pm));
+        c.check_invariants().unwrap();
     }
 
     #[test]

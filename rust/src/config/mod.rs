@@ -88,6 +88,213 @@ impl PmProfile {
     }
 }
 
+/// Failure-injection model (a `vcsched sweep` axis; see
+/// `docs/FAILURE_MODEL.md` for the full semantics).
+///
+/// Three orthogonal mechanisms, all off by default so the failure-free
+/// configuration reproduces the seed byte for byte:
+///
+/// * **PM crashes** — each physical machine fails after an exponential
+///   up-time with mean `pm_mtbf_s`, stays down for about `pm_repair_s`,
+///   and recovers. The crash/recover trace is pre-generated from a
+///   dedicated per-scenario RNG stream
+///   ([`crate::workloads::trace::failure_trace`]), so it never perturbs
+///   the workload/jitter stream.
+/// * **Stragglers** — with probability `straggler_prob` a launched task
+///   draws a heavy-tailed (Pareto-`straggler_alpha`, capped at
+///   `straggler_cap`) slowdown multiplier
+///   ([`crate::mapreduce::straggler_multiplier`]).
+/// * **Speculation** — LATE-style speculative re-execution of straggling
+///   maps: once a job has `spec_min_finished` finished maps, a running map
+///   whose elapsed time exceeds `spec_slowdown ×` the job's observed mean
+///   map duration is eligible for a backup copy on an idle slot. First
+///   finisher wins; the coordinator kills the loser.
+///
+/// Named presets form the `--failures` sweep axis:
+///
+/// ```
+/// use vcsched::config::FailureModel;
+///
+/// let off = FailureModel::from_name("off").unwrap();
+/// assert!(!off.enabled());
+/// assert_eq!(off.label(), "off");
+///
+/// let m = FailureModel::from_name("crash-low-spec").unwrap();
+/// assert!(m.enabled() && m.speculation && m.pm_mtbf_s > 0.0);
+/// assert_eq!(m.label(), "crash-low-spec");
+///
+/// // Every preset name round-trips through its label.
+/// for name in FailureModel::NAMES {
+///     assert_eq!(FailureModel::from_name(name).unwrap().label(), name);
+/// }
+/// assert!(FailureModel::from_name("bogus").is_none());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureModel {
+    /// Mean PM up-time between crashes, seconds (0 = crashes off).
+    pub pm_mtbf_s: f64,
+    /// Mean PM downtime after a crash, seconds.
+    pub pm_repair_s: f64,
+    /// Horizon over which crash events are generated; a crash already
+    /// injected always gets its matching recovery even past the horizon.
+    pub trace_horizon_s: f64,
+    /// Per-task-launch probability of a straggler slowdown (0 = off).
+    pub straggler_prob: f64,
+    /// Pareto tail shape of the slowdown (smaller = heavier tail).
+    pub straggler_alpha: f64,
+    /// Upper clamp on the slowdown multiplier.
+    pub straggler_cap: f64,
+    /// LATE-style speculative execution of straggling maps.
+    pub speculation: bool,
+    /// Speculation trigger: elapsed > `spec_slowdown ×` observed mean.
+    pub spec_slowdown: f64,
+    /// Minimum finished maps in a job before it may speculate.
+    pub spec_min_finished: u32,
+}
+
+impl FailureModel {
+    /// The named presets, in sweep-axis order.
+    pub const NAMES: [&'static str; 7] = [
+        "off",
+        "stragglers",
+        "stragglers-spec",
+        "crash-low",
+        "crash-low-spec",
+        "crash-high",
+        "crash-high-spec",
+    ];
+
+    /// No failures at all — the seed-identical default.
+    pub fn off() -> Self {
+        Self {
+            pm_mtbf_s: 0.0,
+            pm_repair_s: 0.0,
+            trace_horizon_s: 0.0,
+            straggler_prob: 0.0,
+            straggler_alpha: 0.0,
+            straggler_cap: 1.0,
+            speculation: false,
+            spec_slowdown: 1.8,
+            spec_min_finished: 3,
+        }
+    }
+
+    /// Heavy-tailed stragglers only (no machine failures).
+    pub fn stragglers() -> Self {
+        Self {
+            straggler_prob: 0.08,
+            straggler_alpha: 1.5,
+            straggler_cap: 8.0,
+            ..Self::off()
+        }
+    }
+
+    /// Stragglers + crashes at roughly one failure per machine-hour.
+    pub fn crash_low() -> Self {
+        Self {
+            pm_mtbf_s: 3600.0,
+            pm_repair_s: 180.0,
+            trace_horizon_s: 6.0 * 3600.0,
+            ..Self::stragglers()
+        }
+    }
+
+    /// Stragglers + frequent crashes (one per machine per ~20 min).
+    pub fn crash_high() -> Self {
+        Self {
+            pm_mtbf_s: 1200.0,
+            pm_repair_s: 180.0,
+            straggler_prob: 0.12,
+            ..Self::crash_low()
+        }
+    }
+
+    /// The same model with speculation switched on.
+    pub fn with_speculation(mut self) -> Self {
+        self.speculation = true;
+        self
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "off" => Self::off(),
+            "stragglers" => Self::stragglers(),
+            "stragglers-spec" => Self::stragglers().with_speculation(),
+            "crash-low" => Self::crash_low(),
+            "crash-low-spec" => Self::crash_low().with_speculation(),
+            "crash-high" => Self::crash_high(),
+            "crash-high-spec" => Self::crash_high().with_speculation(),
+            _ => return None,
+        })
+    }
+
+    /// Parse a comma-separated preset list (`"off,crash-low-spec"`) — the
+    /// `vcsched sweep --failures` axis override. `None` on any unknown
+    /// name.
+    pub fn parse_list(s: &str) -> Option<Vec<Self>> {
+        s.split(',').map(|p| Self::from_name(p.trim())).collect()
+    }
+
+    /// Stable axis label: the preset name when the model matches one,
+    /// otherwise an exact field encoding (journal keys depend on this
+    /// being injective over distinct models).
+    pub fn label(&self) -> String {
+        for name in Self::NAMES {
+            if Self::from_name(name).as_ref() == Some(self) {
+                return name.to_string();
+            }
+        }
+        format!(
+            "custom-mtbf{}-rep{}-hz{}-p{}-a{}-cap{}-spec{}-sl{}-mf{}",
+            self.pm_mtbf_s,
+            self.pm_repair_s,
+            self.trace_horizon_s,
+            self.straggler_prob,
+            self.straggler_alpha,
+            self.straggler_cap,
+            self.speculation as u8,
+            self.spec_slowdown,
+            self.spec_min_finished,
+        )
+    }
+
+    /// Does this model inject anything at all? `false` means the run must
+    /// be byte-identical to a failure-free one.
+    pub fn enabled(&self) -> bool {
+        self.pm_mtbf_s > 0.0 || self.straggler_prob > 0.0 || self.speculation
+    }
+
+    /// Are PM crashes on?
+    pub fn crashes(&self) -> bool {
+        self.pm_mtbf_s > 0.0
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.pm_mtbf_s < 0.0 || self.pm_repair_s < 0.0 || self.trace_horizon_s < 0.0 {
+            return Err("failure times must be non-negative".into());
+        }
+        if self.crashes() && (self.pm_repair_s <= 0.0 || self.trace_horizon_s <= 0.0) {
+            return Err("crashes need a positive repair time and trace horizon".into());
+        }
+        if !(0.0..=1.0).contains(&self.straggler_prob) {
+            return Err("straggler_prob must be in [0, 1]".into());
+        }
+        if self.straggler_prob > 0.0 && (self.straggler_alpha <= 0.0 || self.straggler_cap < 1.0) {
+            return Err("stragglers need alpha > 0 and cap >= 1".into());
+        }
+        if self.speculation && (self.spec_slowdown < 1.0 || self.spec_min_finished == 0) {
+            return Err("speculation needs spec_slowdown >= 1 and spec_min_finished >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+impl Default for FailureModel {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
 /// Execution mode for the MapReduce engine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecMode {
@@ -151,6 +358,11 @@ pub struct SimConfig {
     pub prior_map_s: f64,
     pub prior_shuffle_s: f64,
 
+    // ---- failure injection ----
+    /// Failure-injection model (default: [`FailureModel::off`], which is
+    /// byte-identical to the pre-failure simulator).
+    pub failures: FailureModel,
+
     // ---- misc ----
     pub seed: u64,
 }
@@ -177,6 +389,7 @@ impl SimConfig {
             delay_heartbeats: 3,
             prior_map_s: 20.0,
             prior_shuffle_s: 0.05,
+            failures: FailureModel::off(),
             seed: 42,
         }
     }
@@ -291,6 +504,7 @@ impl SimConfig {
         if self.heartbeat_s <= 0.0 {
             return Err("heartbeat interval must be positive".into());
         }
+        self.failures.validate()?;
         Ok(())
     }
 }
@@ -420,6 +634,45 @@ mod tests {
             ..SimConfig::paper()
         };
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn failure_presets_valid_and_distinct() {
+        let mut labels = Vec::new();
+        for name in FailureModel::NAMES {
+            let fm = FailureModel::from_name(name).unwrap();
+            fm.validate().unwrap();
+            let c = SimConfig { failures: fm, ..SimConfig::paper() };
+            c.validate().unwrap();
+            labels.push(fm.label());
+        }
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), FailureModel::NAMES.len(), "labels must be injective");
+        assert!(!FailureModel::off().enabled());
+        assert!(FailureModel::stragglers().enabled());
+        assert!(FailureModel::crash_high().crashes());
+    }
+
+    #[test]
+    fn failure_validation_catches_bad_models() {
+        let bad = FailureModel { pm_mtbf_s: 100.0, pm_repair_s: 0.0, ..FailureModel::off() };
+        assert!(SimConfig { failures: bad, ..SimConfig::paper() }.validate().is_err());
+        let bad = FailureModel { straggler_prob: 1.5, ..FailureModel::off() };
+        assert!(SimConfig { failures: bad, ..SimConfig::paper() }.validate().is_err());
+        let bad = FailureModel { speculation: true, spec_slowdown: 0.5, ..FailureModel::off() };
+        assert!(SimConfig { failures: bad, ..SimConfig::paper() }.validate().is_err());
+        let custom = FailureModel { pm_mtbf_s: 777.0, ..FailureModel::crash_low() };
+        assert!(custom.label().starts_with("custom-"));
+    }
+
+    #[test]
+    fn failure_parse_list_follows_axis_convention() {
+        let v = FailureModel::parse_list("off, crash-low-spec").unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0], FailureModel::off());
+        assert!(v[1].speculation);
+        assert!(FailureModel::parse_list("off,nope").is_none());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! `key = value` pairs; unknown keys are errors so typos don't silently
 //! fall back to defaults.
 
-use super::{ExecMode, PmProfile, SimConfig};
+use super::{ExecMode, FailureModel, PmProfile, SimConfig};
 use crate::cluster::Topology;
 
 /// Parse errors (hand-rolled Display/Error impls — `thiserror` is
@@ -83,6 +83,11 @@ pub fn parse_config_str(text: &str) -> Result<SimConfig, ConfigError> {
             "prior_map_s" => cfg.prior_map_s = num!(f64),
             "prior_shuffle_s" => cfg.prior_shuffle_s = num!(f64),
             "seed" => cfg.seed = num!(u64),
+            "failures" => {
+                cfg.failures = FailureModel::from_name(v).ok_or_else(|| {
+                    ConfigError::BadValue(lineno, k.to_string(), v.to_string())
+                })?
+            }
             "exec" => {
                 cfg.exec = match v {
                     "synthetic" => ExecMode::Synthetic,
@@ -152,6 +157,18 @@ mod tests {
         assert!(matches!(
             parse_config_str("pms = 2\ntopology = \"racks-4\""),
             Err(ConfigError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn parses_failures() {
+        let cfg = parse_config_str("failures = \"crash-low-spec\"").unwrap();
+        assert_eq!(cfg.failures, FailureModel::crash_low().with_speculation());
+        let cfg = parse_config_str("pms = 5").unwrap();
+        assert_eq!(cfg.failures, FailureModel::off());
+        assert!(matches!(
+            parse_config_str("failures = \"meteor-strike\""),
+            Err(ConfigError::BadValue(1, _, _))
         ));
     }
 

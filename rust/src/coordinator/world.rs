@@ -1,16 +1,17 @@
 //! World state + the event loop.
 
-use crate::cluster::{Cluster, LocalityTier, NodeId};
+use crate::cluster::{Cluster, LocalityTier, NodeId, PmId};
 use crate::config::{ExecMode, SimConfig};
 use crate::hdfs::NameNode;
-use crate::mapreduce::{JobId, JobState, TaskCost, TaskId, TaskRef};
-use crate::metrics::{HotplugMark, JobRecord, RunMetrics, TaskSpan, TraceLog};
+use crate::mapreduce::{straggler_multiplier, JobId, JobState, TaskCost, TaskId, TaskRef, TaskState};
+use crate::metrics::{FailureStats, HotplugMark, JobRecord, RunMetrics, TaskSpan, TraceLog};
 use crate::predictor::Predictor;
 use crate::reconfig::ConfigManager;
 use crate::scheduler::{Action, SchedView, Scheduler};
 use crate::sim::{EventQueue, SimTime};
+use crate::util::rng::mix64;
 use crate::util::Rng;
-use crate::workloads::trace::JobTrace;
+use crate::workloads::trace::{failure_trace, JobTrace, FAILURE_STREAM_TAG};
 use crate::workloads::JobSpec;
 
 use super::exec_engine::ExecEngine;
@@ -26,11 +27,21 @@ pub enum Event {
         job: JobId,
         task: TaskId,
         node: NodeId,
+        /// Attempt epoch this completion belongs to (stamped at launch).
+        /// A completion whose epoch no longer matches the task's current
+        /// primary or speculative attempt is *stale* — its launch was
+        /// killed by a PM crash or lost the speculation race — and is
+        /// dropped. With failures off every task launches exactly once,
+        /// so every epoch matches and the handler is the seed path.
+        attempt: u32,
     },
     ReduceDone {
         job: JobId,
         task: TaskId,
         node: NodeId,
+        /// Attempt epoch, as for [`Event::MapDone`] (reduces have no
+        /// speculative copies; only crash kills advance the epoch).
+        attempt: u32,
     },
     /// A granted vCPU hot-plug completed; launch the delayed local task.
     HotplugDone {
@@ -38,6 +49,10 @@ pub enum Event {
         to: NodeId,
         task: TaskRef,
     },
+    /// Fail-stop crash of a physical machine (from the failure trace).
+    PmFailure(PmId),
+    /// The crashed PM rejoins with empty VMs and no HDFS blocks.
+    PmRecovery(PmId),
 }
 
 /// All mutable simulation state.
@@ -72,7 +87,13 @@ pub struct World {
     /// for its whole duration (no re-fairing mid-flight; see
     /// `cluster::topology` docs). Always 0 on the flat topology.
     cross_rack_flows: u32,
+    /// Dedicated failure/straggler RNG stream (`seed ^ FAILURE_STREAM_TAG`,
+    /// never the main sim RNG): with the failure model off it is never
+    /// drawn from, so the main stream — and the whole run — stays
+    /// byte-identical to the no-failure seed.
+    failure_rng: Rng,
     // metrics
+    fail_stats: FailureStats,
     records: Vec<JobRecord>,
     trace_log: Option<TraceLog>,
     heartbeats: u64,
@@ -98,6 +119,16 @@ impl World {
                 Event::JobArrival(i as u32),
             );
         }
+        // Crash/recover timeline from the dedicated failure stream —
+        // empty (zero events scheduled) unless the model injects crashes.
+        for fe in failure_trace(&cfg.failures, cfg.seed, cfg.pms) {
+            let ev = if fe.crash {
+                Event::PmFailure(PmId(fe.pm as u32))
+            } else {
+                Event::PmRecovery(PmId(fe.pm as u32))
+            };
+            queue.schedule_at(SimTime::from_secs_f64(fe.at_s), ev);
+        }
         let exec = match cfg.exec {
             ExecMode::Real => Some(ExecEngine::new(cfg.seed)),
             ExecMode::Synthetic => None,
@@ -119,6 +150,8 @@ impl World {
             action_buf: Vec::new(),
             exec,
             cross_rack_flows: 0,
+            failure_rng: Rng::new(mix64(cfg.seed ^ FAILURE_STREAM_TAG)),
+            fail_stats: FailureStats::default(),
             records: Vec::new(),
             trace_log: None,
             heartbeats: 0,
@@ -270,13 +303,18 @@ impl World {
                 self.action_buf = actions;
             }
             Event::Heartbeat(node) => {
-                self.heartbeats += 1;
-                let mut actions = std::mem::take(&mut self.action_buf);
-                actions.clear();
-                scheduler.on_heartbeat(&self.view(), node, predictor, &mut actions);
-                self.apply_actions(&actions);
-                self.action_buf = actions;
-                self.match_reconfigs();
+                // A dead TaskTracker sends no heartbeats, but its timer
+                // keeps ticking so the cadence resumes unchanged on
+                // recovery (zero drift in the surviving nodes' schedule).
+                if self.cluster.node_alive(node) {
+                    self.heartbeats += 1;
+                    let mut actions = std::mem::take(&mut self.action_buf);
+                    actions.clear();
+                    scheduler.on_heartbeat(&self.view(), node, predictor, &mut actions);
+                    self.apply_actions(&actions);
+                    self.action_buf = actions;
+                    self.match_reconfigs();
+                }
                 // Recurring heartbeat while work remains.
                 if !self.all_done() {
                     self.queue.schedule_in(
@@ -285,29 +323,79 @@ impl World {
                     );
                 }
             }
-            Event::MapDone { job, task, node } => {
+            Event::MapDone { job, task, node, attempt } => {
                 let now = self.now();
-                if let crate::mapreduce::TaskState::Running { started, tier, .. } =
-                    *self.jobs[job.idx()].map_state(task)
-                {
+                let js = &self.jobs[job.idx()];
+                let spec = js.spec_of(task);
+                let running = js.map_state(task).is_running();
+                // Epoch check (see [`Event::MapDone`]): during a race the
+                // primary's epoch is exactly one below the spec's (the
+                // spec launch advanced it); otherwise the current epoch
+                // *is* the primary's.
+                let spec_won = running && spec.is_some_and(|s| s.attempt == attempt);
+                let primary_done = running
+                    && match spec {
+                        Some(s) => attempt + 1 == s.attempt,
+                        None => attempt == js.map_attempt(task),
+                    };
+                if !spec_won && !primary_done {
+                    return; // stale completion from a killed attempt
+                }
+                if spec_won {
+                    // First-finisher wins: the backup beat the primary.
+                    // Kill the loser — free its slot and retire its
+                    // in-flight fetch; its completion event is now stale.
+                    let s = spec.expect("spec_won without spec");
+                    let (loser_node, loser_tier) =
+                        self.jobs[job.idx()].mark_map_spec_finished(task, now);
                     if let Some(tl) = &mut self.trace_log {
                         tl.record_span(TaskSpan {
                             job,
                             kind: crate::mapreduce::TaskKind::Map,
                             task: task.0,
                             node,
-                            start: started,
+                            start: s.started,
                             end: now,
-                            tier,
+                            tier: s.tier,
                         });
                     }
-                    // The task's cross-rack fetch has left the shared core.
-                    if tier == LocalityTier::Remote && self.cfg.topology.is_racked() {
-                        debug_assert!(self.cross_rack_flows > 0);
-                        self.cross_rack_flows = self.cross_rack_flows.saturating_sub(1);
+                    self.end_remote_flow(s.tier);
+                    self.end_remote_flow(loser_tier);
+                    let vm = self.cluster.vm_mut(loser_node);
+                    debug_assert!(vm.busy_map > 0);
+                    vm.busy_map -= 1;
+                    self.fail_stats.speculative_wins += 1;
+                    self.fail_stats.speculative_kills += 1;
+                } else {
+                    if let Some(s) = spec {
+                        // Primary finished first: kill the still-running
+                        // backup copy and free its slot.
+                        self.jobs[job.idx()].take_spec(task);
+                        self.end_remote_flow(s.tier);
+                        let vm = self.cluster.vm_mut(s.node);
+                        debug_assert!(vm.busy_map > 0);
+                        vm.busy_map -= 1;
+                        self.fail_stats.speculative_kills += 1;
                     }
+                    if let TaskState::Running { started, tier, .. } =
+                        *self.jobs[job.idx()].map_state(task)
+                    {
+                        if let Some(tl) = &mut self.trace_log {
+                            tl.record_span(TaskSpan {
+                                job,
+                                kind: crate::mapreduce::TaskKind::Map,
+                                task: task.0,
+                                node,
+                                start: started,
+                                end: now,
+                                tier,
+                            });
+                        }
+                        // The task's cross-rack fetch has left the shared core.
+                        self.end_remote_flow(tier);
+                    }
+                    self.jobs[job.idx()].mark_map_finished(task, now);
                 }
-                self.jobs[job.idx()].mark_map_finished(task, now);
                 let vm = self.cluster.vm_mut(node);
                 debug_assert!(vm.busy_map > 0);
                 vm.busy_map -= 1;
@@ -322,10 +410,16 @@ impl World {
                 self.action_buf = actions;
                 self.match_reconfigs();
             }
-            Event::ReduceDone { job, task, node } => {
+            Event::ReduceDone { job, task, node, attempt } => {
                 let now = self.now();
+                {
+                    let js = &self.jobs[job.idx()];
+                    if !js.reduce_state(task).is_running() || attempt != js.reduce_attempt(task) {
+                        return; // stale completion from a crash-killed attempt
+                    }
+                }
                 if let Some(tl) = &mut self.trace_log {
-                    if let crate::mapreduce::TaskState::Running { started, .. } =
+                    if let TaskState::Running { started, .. } =
                         *self.jobs[job.idx()].reduce_state(task)
                     {
                         tl.record_span(TaskSpan {
@@ -361,11 +455,28 @@ impl World {
                 self.match_reconfigs();
             }
             Event::HotplugDone { from, to, task } => {
+                // The target PM died while the core was in flight: the
+                // crash reset already reclaimed every core, and the
+                // awaiting task (if any) went back to pending with the
+                // queue purge. Nothing to deliver.
+                if !self.cluster.node_alive(to) {
+                    return;
+                }
                 // The released core was unplugged at grant time; now it
                 // arrives at the target VM and the delayed task launches.
-                self.cluster
-                    .plug_spare_core(to)
-                    .expect("hot-plug grant lost its spare core");
+                if let Err(e) = self.cluster.plug_spare_core(to) {
+                    // Only a crash between grant and delivery can void the
+                    // spare (the reset snaps allocations back to base).
+                    assert!(
+                        self.cfg.failures.crashes(),
+                        "hot-plug grant lost its spare core: {e:?}"
+                    );
+                    let js = &mut self.jobs[task.job.idx()];
+                    if js.map_state(task.id).is_awaiting() {
+                        js.mark_map_await_cancelled(task.id);
+                    }
+                    return;
+                }
                 if let Some(tl) = &mut self.trace_log {
                     let at = self.queue.now();
                     tl.record_hotplug(HotplugMark { at, from, to });
@@ -381,6 +492,117 @@ impl World {
                     // any future local task or be re-released).
                 }
             }
+            Event::PmFailure(pm) => self.handle_pm_failure(pm),
+            Event::PmRecovery(pm) => {
+                // The machine rejoins with base-allocation VMs, empty map/
+                // reduce slots and *no* HDFS blocks (its replicas were
+                // re-replicated away at crash time; it refills only via
+                // future job placements). The still-ticking heartbeat
+                // timers pick it back up within one interval.
+                if !self.cluster.pm_alive(pm) {
+                    self.cluster.recover_pm(pm);
+                }
+            }
+        }
+    }
+
+    /// Fail-stop loss of a PM and everything on it (see
+    /// `docs/FAILURE_MODEL.md` for the exact semantics):
+    ///
+    /// 1. running map attempts on its VMs are killed — or survive via a
+    ///    live speculative copy on another machine (promotion);
+    /// 2. speculative copies on its VMs are dropped;
+    /// 3. running reduces on its VMs go back to pending;
+    /// 4. un-shuffled map *outputs* it held (job still in its map phase)
+    ///    go back to pending for re-execution;
+    /// 5. its reconfiguration queues are purged (awaiting tasks cancel);
+    /// 6. its VMs snap back to base allocation with zeroed slots;
+    /// 7. every HDFS replica it held is re-replicated rack-aware onto the
+    ///    surviving nodes (blocks losing their last replica are counted
+    ///    lost and restored from the source dataset).
+    fn handle_pm_failure(&mut self, pm: PmId) {
+        if !self.cluster.pm_alive(pm) {
+            return; // the trace alternates crash/recover; stay safe
+        }
+        self.fail_stats.pm_crashes += 1;
+        for ji in 0..self.jobs.len() {
+            if self.jobs[ji].is_done() {
+                continue;
+            }
+            for ti in 0..self.jobs[ji].total_maps() {
+                let t = TaskId(ti);
+                match *self.jobs[ji].map_state(t) {
+                    TaskState::Running { node, tier, .. } => {
+                        if let Some(s) = self.jobs[ji].spec_of(t) {
+                            if self.cluster.pm_of(s.node) == pm {
+                                // Dead backup copy: drop it. Its slot is
+                                // reclaimed by the crash reset below.
+                                self.jobs[ji].take_spec(t);
+                                self.end_remote_flow(s.tier);
+                                self.fail_stats.speculative_kills += 1;
+                            }
+                        }
+                        if self.cluster.pm_of(node) == pm {
+                            self.end_remote_flow(tier);
+                            if self.jobs[ji].spec_of(t).is_some() {
+                                // A live backup survives on another
+                                // machine: it becomes the new primary.
+                                self.jobs[ji].promote_spec(t);
+                            } else {
+                                self.jobs[ji].mark_map_killed(t);
+                            }
+                        }
+                    }
+                    TaskState::Finished { node, .. } => {
+                        // Un-shuffled map output dies with its
+                        // TaskTracker; once the map phase completes the
+                        // output counts as durable (documented
+                        // simplification — reduces never stall mid-phase).
+                        if self.cluster.pm_of(node) == pm && !self.jobs[ji].map_finished() {
+                            self.jobs[ji].mark_map_output_lost(t);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            for ti in 0..self.jobs[ji].total_reduces() {
+                let t = TaskId(ti);
+                if let TaskState::Running { node, .. } = *self.jobs[ji].reduce_state(t) {
+                    if self.cluster.pm_of(node) == pm {
+                        self.jobs[ji].mark_reduce_killed(t);
+                    }
+                }
+            }
+        }
+        // Reconfiguration queues: assigns targeting the dead PM revert to
+        // pending; its registered releases are void. In-flight hot-plug
+        // grants are guarded at `HotplugDone`.
+        for tref in self.cm.purge_pm(pm) {
+            let js = &mut self.jobs[tref.job.idx()];
+            if js.map_state(tref.id).is_awaiting() {
+                js.mark_map_await_cancelled(tref.id);
+            }
+        }
+        self.cluster.crash_pm(pm);
+        // Rack-aware re-replication of every block the dead VMs held,
+        // onto the post-crash set of alive nodes.
+        let n = self.cluster.num_nodes();
+        let racks: Vec<u32> = (0..n).map(|i| self.cluster.rack_of(NodeId(i as u32))).collect();
+        let alive: Vec<bool> = (0..n).map(|i| self.cluster.node_alive(NodeId(i as u32))).collect();
+        let vms = self.cluster.pm(pm).vms.clone();
+        for node in vms {
+            let (relocated, lost) = self.nn.fail_node(node, &racks, &alive, &mut self.failure_rng);
+            self.fail_stats.blocks_relocated += relocated;
+            self.fail_stats.blocks_lost += lost;
+        }
+    }
+
+    /// Retire a map attempt's input fetch from the shared cross-rack core
+    /// (no-op for local tiers and on the flat topology).
+    fn end_remote_flow(&mut self, tier: LocalityTier) {
+        if tier == LocalityTier::Remote && self.cfg.topology.is_racked() {
+            debug_assert!(self.cross_rack_flows > 0);
+            self.cross_rack_flows = self.cross_rack_flows.saturating_sub(1);
         }
     }
 
@@ -395,6 +617,18 @@ impl World {
                         "scheduler overfilled map slots on {node:?}"
                     );
                     self.launch_map(job, task, node, tier);
+                }
+                Action::LaunchSpeculativeMap { job, task, node } => {
+                    assert!(
+                        self.cluster.vm(node).free_map_slots() > 0,
+                        "scheduler overfilled map slots on {node:?}"
+                    );
+                    let js = &self.jobs[job.idx()];
+                    debug_assert!(
+                        js.map_state(task).is_running() && js.spec_of(task).is_none(),
+                        "speculative launch on a non-running or already-backed map"
+                    );
+                    self.launch_spec_map(job, task, node);
                 }
                 Action::LaunchReduce { job, task, node } => {
                     assert!(
@@ -472,24 +706,14 @@ impl World {
         }
     }
 
-    pub(crate) fn launch_map(
-        &mut self,
-        job: JobId,
-        task: TaskId,
-        node: NodeId,
-        tier: LocalityTier,
-    ) {
-        let now = self.now();
-        let js = &mut self.jobs[job.idx()];
-        js.mark_map_launched(task, node, tier, now);
-        self.cluster.vm_mut(node).busy_map += 1;
-        let block_mb = js.block_mb[task.0 as usize];
-        // Tiered input fetch: local disk scan, rack-local NIC read, or a
-        // contended share of the topology's cross-rack core. On the flat
-        // topology the remote tier reads at full NIC speed — the seed
-        // model, byte for byte.
+    /// Tiered input-fetch bandwidth for a map launch: local disk scan,
+    /// rack-local NIC read, or a contended share of the topology's
+    /// cross-rack core (the new flow is counted). On the flat topology
+    /// the remote tier reads at full NIC speed — the seed model, byte
+    /// for byte.
+    fn map_io_mbps(&mut self, tier: LocalityTier) -> f64 {
         let topo = self.cfg.topology;
-        let io_mbps = match tier {
+        match tier {
             LocalityTier::NodeLocal => self.cfg.disk_mbps,
             LocalityTier::RackLocal => topo.rack_mbps(self.cfg.net_mbps),
             LocalityTier::Remote => {
@@ -500,20 +724,64 @@ impl World {
                     self.cfg.net_mbps
                 }
             }
-        };
+        }
+    }
+
+    pub(crate) fn launch_map(
+        &mut self,
+        job: JobId,
+        task: TaskId,
+        node: NodeId,
+        tier: LocalityTier,
+    ) {
+        let now = self.now();
+        let attempt = self.jobs[job.idx()].mark_map_launched(task, node, tier, now);
+        if attempt > 1 {
+            // Epoch 1 is the first execution; anything later re-runs work
+            // a crash destroyed (killed attempt or lost output).
+            self.fail_stats.reexecuted_tasks += 1;
+        }
+        self.cluster.vm_mut(node).busy_map += 1;
+        let block_mb = self.jobs[job.idx()].block_mb[task.0 as usize];
+        let io_mbps = self.map_io_mbps(tier);
         // Heterogeneity: a task on a speed-s machine takes nominal/s time.
+        // The straggler multiplier draws from the dedicated failure
+        // stream only (1.0, zero draws, with stragglers off).
         let speed = self.cluster.vm(node).speed;
-        let secs = self.costs[job.idx()].map_secs_at(block_mb, io_mbps, &mut self.rng) / speed;
+        let secs = self.costs[job.idx()].map_secs_at(block_mb, io_mbps, &mut self.rng) / speed
+            * straggler_multiplier(&self.cfg.failures, &mut self.failure_rng);
         self.queue.schedule_in(
             SimTime::from_secs_f64(secs),
-            Event::MapDone { job, task, node },
+            Event::MapDone { job, task, node, attempt },
+        );
+    }
+
+    /// Launch a speculative backup copy of running map `task` on `node`
+    /// (the LATE race: whichever attempt's `MapDone` arrives first wins;
+    /// the loser's completion is stale by epoch).
+    fn launch_spec_map(&mut self, job: JobId, task: TaskId, node: NodeId) {
+        let now = self.now();
+        let tier = self.jobs[job.idx()].map_tier(task, node, &self.cluster);
+        let attempt = self.jobs[job.idx()].begin_spec_map(task, node, tier, now);
+        self.cluster.vm_mut(node).busy_map += 1;
+        self.fail_stats.speculative_launches += 1;
+        let block_mb = self.jobs[job.idx()].block_mb[task.0 as usize];
+        let io_mbps = self.map_io_mbps(tier);
+        let speed = self.cluster.vm(node).speed;
+        let secs = self.costs[job.idx()].map_secs_at(block_mb, io_mbps, &mut self.rng) / speed
+            * straggler_multiplier(&self.cfg.failures, &mut self.failure_rng);
+        self.queue.schedule_in(
+            SimTime::from_secs_f64(secs),
+            Event::MapDone { job, task, node, attempt },
         );
     }
 
     fn launch_reduce(&mut self, job: JobId, task: TaskId, node: NodeId) {
         let now = self.now();
-        let js = &mut self.jobs[job.idx()];
-        js.mark_reduce_launched(task, node, now);
+        let attempt = self.jobs[job.idx()].mark_reduce_launched(task, node, now);
+        if attempt > 1 {
+            self.fail_stats.reexecuted_tasks += 1;
+        }
         self.cluster.vm_mut(node).busy_reduce += 1;
         // Shuffle volume: measured in real mode; in synthetic mode the
         // job-wide sum was computed once at JobArrival (identical fold,
@@ -531,10 +799,11 @@ impl World {
             js.total_maps(),
             js.total_reduces(),
             &mut self.rng,
-        ) / speed;
+        ) / speed
+            * straggler_multiplier(&self.cfg.failures, &mut self.failure_rng);
         self.queue.schedule_in(
             SimTime::from_secs_f64(secs),
-            Event::ReduceDone { job, task, node },
+            Event::ReduceDone { job, task, node, attempt },
         );
     }
 
@@ -581,6 +850,7 @@ impl World {
             heartbeats: self.heartbeats,
             events: self.queue.processed(),
             predictor_calls: self.predictor_calls_estimate,
+            failures: self.fail_stats,
             wall_s: 0.0,
         }
     }

@@ -1,6 +1,7 @@
 //! Sweep aggregation: group scenario results by grid cell (scheduler x
-//! mix x PMs x profile x topology x arrival x scale), fold the seed
-//! replicates into summary statistics, and render the JSON/CSV artifacts.
+//! mix x PMs x profile x topology x arrival x scale x failure model),
+//! fold the seed replicates into summary statistics, and render the
+//! JSON/CSV artifacts.
 //!
 //! Everything here is deterministic: groups are keyed through a `BTreeMap`
 //! (sorted iteration), statistics fold results in scenario-index order,
@@ -28,6 +29,8 @@ pub struct GroupStats {
     pub topology: String,
     /// Arrival-pattern label (`steady`, `burst`, `steady-x2`, ...).
     pub arrival: String,
+    /// Failure-model label (`off`, `crash-low-spec`, ...).
+    pub failures: String,
     pub scale: f64,
     /// Seed replicates folded into this cell.
     pub seeds: usize,
@@ -55,14 +58,24 @@ pub struct GroupStats {
     pub mean_makespan_s: f64,
     /// Total vCPU hot-plugs across replicates.
     pub hotplugs: u64,
+    /// PM crashes injected across replicates.
+    pub pm_crashes: u64,
+    /// Speculative map copies launched across replicates.
+    pub spec_launches: u64,
+    /// Speculation races won by the backup copy.
+    pub spec_wins: u64,
+    /// Attempts killed by speculation resolution (wasted work).
+    pub spec_kills: u64,
+    /// Task launches that re-ran crash-destroyed work.
+    pub reexecuted_tasks: u64,
 }
 
 /// Fold `results` into per-cell statistics, sorted by (scheduler, mix,
-/// pms, profile, topology, arrival, scale).
+/// pms, profile, topology, arrival, failures, scale).
 pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
     // Key through the f64 bit pattern: scales come verbatim from the grid
     // axis, so identical cells have identical bits.
-    type CellKey = (String, String, usize, String, String, String, u64);
+    type CellKey = (String, String, usize, String, String, String, String, u64);
     let mut cells: BTreeMap<CellKey, Vec<usize>> = BTreeMap::new();
     for (i, r) in results.iter().enumerate() {
         let key = (
@@ -72,13 +85,15 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             r.scenario.profile.name().to_string(),
             r.scenario.topology.label(),
             r.scenario.arrival.label(),
+            r.scenario.failures.label(),
             r.scenario.scale.to_bits(),
         );
         cells.entry(key).or_default().push(i);
     }
 
     let mut out = Vec::with_capacity(cells.len());
-    for ((scheduler, mix, pms, profile, topology, arrival, scale_bits), members) in cells {
+    for ((scheduler, mix, pms, profile, topology, arrival, failures, scale_bits), members) in cells
+    {
         let mut completion = Summary::new();
         let mut throughput = Summary::new();
         let mut locality = Summary::new();
@@ -89,6 +104,11 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
         let mut pooled = Percentiles::new();
         let mut hotplugs = 0u64;
         let mut total_jobs = 0usize;
+        let mut pm_crashes = 0u64;
+        let mut spec_launches = 0u64;
+        let mut spec_wins = 0u64;
+        let mut spec_kills = 0u64;
+        let mut reexecuted_tasks = 0u64;
         for &i in &members {
             let rep = &results[i].report;
             completion.add(rep.mean_completion_s());
@@ -99,6 +119,11 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             miss.add(rep.miss_rate());
             makespan.add(rep.makespan_s);
             hotplugs += rep.hotplugs;
+            pm_crashes += rep.failures.pm_crashes;
+            spec_launches += rep.failures.speculative_launches;
+            spec_wins += rep.failures.speculative_wins;
+            spec_kills += rep.failures.speculative_kills;
+            reexecuted_tasks += rep.failures.reexecuted_tasks;
             total_jobs += rep.completed_jobs();
             for j in &rep.jobs {
                 pooled.add(j.completion_s);
@@ -111,6 +136,7 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             profile,
             topology,
             arrival,
+            failures,
             scale: f64::from_bits(scale_bits),
             seeds: members.len(),
             total_jobs,
@@ -127,6 +153,11 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             mean_miss_rate: miss.mean(),
             mean_makespan_s: makespan.mean(),
             hotplugs,
+            pm_crashes,
+            spec_launches,
+            spec_wins,
+            spec_kills,
+            reexecuted_tasks,
         });
     }
     out
@@ -179,6 +210,10 @@ pub fn sweep_json(
             "arrivals",
             grid.arrivals.iter().map(|a| a.label()).collect::<Vec<_>>(),
         )
+        .set(
+            "failures",
+            grid.failures.iter().map(|f| f.label()).collect::<Vec<_>>(),
+        )
         .set("scales", grid.scales.clone())
         .set("seed_replicates", grid.seed_replicates)
         .set("jobs_per_scenario", grid.jobs_per_scenario)
@@ -201,6 +236,7 @@ pub fn sweep_json(
                 .set("profile", r.scenario.profile.name())
                 .set("topology", r.scenario.topology.label())
                 .set("arrival", r.scenario.arrival.label())
+                .set("failures", r.scenario.failures.label())
                 .set("scale", r.scenario.scale)
                 .set("replicate", r.scenario.replicate)
                 .set("stream_seed", format!("{:#018x}", r.scenario.stream_seed))
@@ -213,6 +249,11 @@ pub fn sweep_json(
                 .set("remote_pct", rep.remote_pct())
                 .set("miss_rate", rep.miss_rate())
                 .set("hotplugs", rep.hotplugs)
+                .set("pm_crashes", rep.failures.pm_crashes)
+                .set("spec_launches", rep.failures.speculative_launches)
+                .set("spec_wins", rep.failures.speculative_wins)
+                .set("spec_kills", rep.failures.speculative_kills)
+                .set("reexecuted_tasks", rep.failures.reexecuted_tasks)
                 .set("events", rep.events),
         );
     }
@@ -227,6 +268,7 @@ pub fn sweep_json(
                 .set("profile", g.profile.as_str())
                 .set("topology", g.topology.as_str())
                 .set("arrival", g.arrival.as_str())
+                .set("failures", g.failures.as_str())
                 .set("scale", g.scale)
                 .set("seeds", g.seeds)
                 .set("total_jobs", g.total_jobs)
@@ -242,7 +284,12 @@ pub fn sweep_json(
                 .set("mean_remote_pct", g.mean_remote_pct)
                 .set("mean_miss_rate", g.mean_miss_rate)
                 .set("mean_makespan_s", g.mean_makespan_s)
-                .set("hotplugs", g.hotplugs),
+                .set("hotplugs", g.hotplugs)
+                .set("pm_crashes", g.pm_crashes)
+                .set("spec_launches", g.spec_launches)
+                .set("spec_wins", g.spec_wins)
+                .set("spec_kills", g.spec_kills)
+                .set("reexecuted_tasks", g.reexecuted_tasks),
         );
     }
 
@@ -255,22 +302,24 @@ pub fn sweep_json(
 /// Aggregates as CSV (one row per grid cell).
 pub fn aggregates_csv(groups: &[GroupStats]) -> String {
     let mut out = String::from(
-        "scheduler,mix,pms,profile,topology,arrival,scale,seeds,total_jobs,\
-         mean_completion_s,std_completion_s,p50_completion_s,p99_completion_s,\
-         mean_throughput_jph,std_throughput_jph,mean_locality_pct,\
-         std_locality_pct,mean_rack_pct,mean_remote_pct,mean_miss_rate,\
-         mean_makespan_s,hotplugs\n",
+        "scheduler,mix,pms,profile,topology,arrival,failures,scale,seeds,\
+         total_jobs,mean_completion_s,std_completion_s,p50_completion_s,\
+         p99_completion_s,mean_throughput_jph,std_throughput_jph,\
+         mean_locality_pct,std_locality_pct,mean_rack_pct,mean_remote_pct,\
+         mean_miss_rate,mean_makespan_s,hotplugs,pm_crashes,spec_launches,\
+         spec_wins,spec_kills,reexecuted_tasks\n",
     );
     for g in groups {
         let _ = writeln!(
             out,
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             g.scheduler,
             g.mix,
             g.pms,
             g.profile,
             g.topology,
             g.arrival,
+            g.failures,
             g.scale,
             g.seeds,
             g.total_jobs,
@@ -286,7 +335,12 @@ pub fn aggregates_csv(groups: &[GroupStats]) -> String {
             g.mean_remote_pct,
             g.mean_miss_rate,
             g.mean_makespan_s,
-            g.hotplugs
+            g.hotplugs,
+            g.pm_crashes,
+            g.spec_launches,
+            g.spec_wins,
+            g.spec_kills,
+            g.reexecuted_tasks
         );
     }
     out

@@ -1,7 +1,7 @@
 //! Declarative scenario grids: the cartesian product of scheduler kind x
 //! job mix x PM count x PM heterogeneity profile x network topology x
-//! arrival pattern x input scale x seed replicate, expanded into a flat,
-//! deterministically ordered scenario list.
+//! arrival pattern x input scale x failure model x seed replicate,
+//! expanded into a flat, deterministically ordered scenario list.
 //!
 //! Each scenario derives its RNG stream seed from `(grid_seed,
 //! scenario_index)` via [`crate::util::rng::derive_stream_seed`], so the
@@ -13,7 +13,7 @@
 //! resolved scenario, so unchanged cells are still reused.
 
 use crate::cluster::Topology;
-use crate::config::{PmProfile, SimConfig};
+use crate::config::{FailureModel, PmProfile, SimConfig};
 use crate::scheduler::SchedulerKind;
 use crate::util::rng::derive_stream_seed;
 use crate::util::Rng;
@@ -68,6 +68,10 @@ pub struct ScenarioGrid {
     pub arrivals: Vec<Arrival>,
     /// Axis: MB of simulated input per paper-GB (100 = fast, 1024 = full).
     pub scales: Vec<f64>,
+    /// Axis: failure-injection model (crashes/stragglers/speculation).
+    /// Defaults to the single [`FailureModel::off`] point, which keeps
+    /// every run byte-identical to the failure-free simulator.
+    pub failures: Vec<FailureModel>,
     /// Axis: seed replicate ids (only their count and position matter; the
     /// actual RNG stream comes from `(grid_seed, scenario_index)`).
     pub seed_replicates: usize,
@@ -95,6 +99,7 @@ impl ScenarioGrid {
             topologies: vec![Topology::Flat],
             arrivals: vec![Arrival::STEADY],
             scales: vec![100.0],
+            failures: vec![FailureModel::off()],
             seed_replicates: 10,
             jobs_per_scenario: 15,
             mean_gap_s: 5.0,
@@ -123,6 +128,7 @@ impl ScenarioGrid {
             topologies: vec![Topology::Racks(8)],
             arrivals: vec![Arrival::STEADY],
             scales: vec![100.0],
+            failures: vec![FailureModel::off()],
             seed_replicates: 1,
             jobs_per_scenario: 2000,
             mean_gap_s: 0.5,
@@ -143,6 +149,7 @@ impl ScenarioGrid {
             topologies: vec![Topology::Flat],
             arrivals: vec![Arrival::STEADY],
             scales: vec![32.0],
+            failures: vec![FailureModel::off()],
             seed_replicates: 2,
             jobs_per_scenario: 5,
             mean_gap_s: 5.0,
@@ -160,6 +167,7 @@ impl ScenarioGrid {
             * self.topologies.len()
             * self.arrivals.len()
             * self.scales.len()
+            * self.failures.len()
             * self.seed_replicates
     }
 
@@ -179,23 +187,26 @@ impl ScenarioGrid {
                         for &topology in &self.topologies {
                             for &arrival in &self.arrivals {
                                 for &scale in &self.scales {
-                                    for replicate in 0..self.seed_replicates {
-                                        let index = out.len();
-                                        out.push(Scenario {
-                                            index,
-                                            scheduler,
-                                            mix,
-                                            pms,
-                                            profile,
-                                            topology,
-                                            arrival,
-                                            scale,
-                                            replicate,
-                                            stream_seed: derive_stream_seed(
-                                                self.grid_seed,
-                                                index as u64,
-                                            ),
-                                        });
+                                    for &failures in &self.failures {
+                                        for replicate in 0..self.seed_replicates {
+                                            let index = out.len();
+                                            out.push(Scenario {
+                                                index,
+                                                scheduler,
+                                                mix,
+                                                pms,
+                                                profile,
+                                                topology,
+                                                arrival,
+                                                scale,
+                                                failures,
+                                                replicate,
+                                                stream_seed: derive_stream_seed(
+                                                    self.grid_seed,
+                                                    index as u64,
+                                                ),
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -220,6 +231,8 @@ pub struct Scenario {
     pub topology: Topology,
     pub arrival: Arrival,
     pub scale: f64,
+    /// Failure-injection model applied to this cell.
+    pub failures: FailureModel,
     /// Seed replicate number within the cell (for grouping/aggregation).
     pub replicate: usize,
     /// Derived RNG stream seed (`derive_stream_seed(grid_seed, index)`).
@@ -236,6 +249,7 @@ impl Scenario {
         cfg.pms = self.pms;
         cfg.pm_profile = self.profile;
         cfg.topology = self.topology;
+        cfg.failures = self.failures;
         cfg.seed = self.stream_seed;
         cfg
     }
@@ -333,6 +347,33 @@ mod tests {
         cfg.validate().unwrap();
         assert_eq!(cfg.topology, Topology::Racks(2));
         assert_eq!(cfg.node_racks().iter().filter(|&&r| r == 1).count(), cfg.nodes() / 2);
+    }
+
+    #[test]
+    fn failures_axis_multiplies_the_grid() {
+        let mut g = ScenarioGrid::quick();
+        g.failures = vec![
+            FailureModel::off(),
+            FailureModel::crash_low(),
+            FailureModel::crash_low().with_speculation(),
+        ];
+        assert_eq!(g.len(), ScenarioGrid::quick().len() * 3);
+        let scenarios = g.scenarios();
+        assert_eq!(scenarios.len(), g.len());
+        for fm in &g.failures {
+            assert!(scenarios.iter().any(|s| s.failures == *fm));
+        }
+        // The model lands in the scenario's SimConfig verbatim.
+        let sc = scenarios
+            .iter()
+            .find(|s| s.failures == FailureModel::crash_low())
+            .unwrap();
+        let cfg = sc.sim_config();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.failures, FailureModel::crash_low());
+        // The default point stays failure-free.
+        let off = scenarios.iter().find(|s| !s.failures.enabled()).unwrap();
+        assert!(!off.sim_config().failures.enabled());
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
 use crate::mapreduce::JobId;
-use crate::metrics::{JobRecord, RunMetrics};
+use crate::metrics::{FailureStats, JobRecord, RunMetrics};
 use crate::sim::SimTime;
 use crate::workloads::JobType;
 
@@ -29,8 +29,10 @@ use super::grid::{Scenario, ScenarioGrid};
 
 /// Journal format version tag; bump on any line-format change so stale
 /// journals are skipped instead of mis-parsed. (v2: tiered locality —
-/// per-job `local,rack,remote` counts replaced `local,nonlocal`.)
-const VERSION: &str = "v2";
+/// per-job `local,rack,remote` counts replaced `local,nonlocal`. v3:
+/// failure/speculation counters appended after `predictor_calls`, and the
+/// failure-model label joined the content hash.)
+const VERSION: &str = "v3";
 
 /// FNV-1a 64-bit over a byte string (stable across platforms/runs).
 fn fnv64(bytes: &[u8]) -> u64 {
@@ -51,7 +53,7 @@ fn fnv64(bytes: &[u8]) -> u64 {
 /// README's resumable-sweeps section.)
 pub fn scenario_key(grid: &ScenarioGrid, sc: &Scenario) -> u64 {
     let canon = format!(
-        "{}|{}|{}|{}|{:016x}|{}|{}|{}|{}|{}|{:016x}|{:016x}|{:016x}|{:016x}",
+        "{}|{}|{}|{}|{:016x}|{}|{}|{}|{}|{}|{}|{:016x}|{:016x}|{:016x}|{:016x}",
         env!("CARGO_PKG_VERSION"),
         sc.scheduler.name(),
         sc.mix.name(),
@@ -60,6 +62,7 @@ pub fn scenario_key(grid: &ScenarioGrid, sc: &Scenario) -> u64 {
         sc.profile.name(),
         sc.topology.label(),
         sc.arrival.label(),
+        sc.failures.label(),
         sc.replicate,
         grid.jobs_per_scenario,
         sc.stream_seed,
@@ -154,14 +157,22 @@ fn render_line(key: u64, r: &RunMetrics) -> String {
     // The explicit job count plus the terminal "ok" sentinel reject lines
     // truncated by a mid-write kill even when the cut lands exactly on a
     // record boundary (every field before the sentinel would still parse).
+    let f = &r.failures;
     format!(
-        "{VERSION}\t{key:016x}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{jobs}\tok\n",
+        "{VERSION}\t{key:016x}\t{}\t{}\t{}\t{}\t{}\t{}\t{},{},{},{},{},{},{}\t{}\t{jobs}\tok\n",
         r.scheduler,
         r.makespan_s,
         r.hotplugs,
         r.heartbeats,
         r.events,
         r.predictor_calls,
+        f.pm_crashes,
+        f.speculative_launches,
+        f.speculative_wins,
+        f.speculative_kills,
+        f.reexecuted_tasks,
+        f.blocks_relocated,
+        f.blocks_lost,
         r.jobs.len()
     )
 }
@@ -193,6 +204,7 @@ fn parse_line(line: &str) -> Option<(u64, RunMetrics)> {
     let heartbeats: u64 = parts.next()?.parse().ok()?;
     let events: u64 = parts.next()?.parse().ok()?;
     let predictor_calls: u64 = parts.next()?.parse().ok()?;
+    let failures = parse_failures(parts.next()?)?;
     let njobs: usize = parts.next()?.parse().ok()?;
     let jobs_field = parts.next()?;
     if parts.next()? != "ok" || parts.next().is_some() {
@@ -217,11 +229,28 @@ fn parse_line(line: &str) -> Option<(u64, RunMetrics)> {
             heartbeats,
             events,
             predictor_calls,
+            failures,
             // Host wall-clock is deliberately not journaled (artifacts
             // exclude it; see harness::agg docs).
             wall_s: 0.0,
         },
     ))
+}
+
+fn parse_failures(s: &str) -> Option<FailureStats> {
+    let f: Vec<&str> = s.split(',').collect();
+    if f.len() != 7 {
+        return None;
+    }
+    Some(FailureStats {
+        pm_crashes: f[0].parse().ok()?,
+        speculative_launches: f[1].parse().ok()?,
+        speculative_wins: f[2].parse().ok()?,
+        speculative_kills: f[3].parse().ok()?,
+        reexecuted_tasks: f[4].parse().ok()?,
+        blocks_relocated: f[5].parse().ok()?,
+        blocks_lost: f[6].parse().ok()?,
+    })
 }
 
 fn parse_job(rec: &str) -> Option<JobRecord> {
@@ -293,6 +322,7 @@ mod tests {
         assert_eq!(parsed.scheduler, report.scheduler);
         assert_eq!(parsed.makespan_s.to_bits(), report.makespan_s.to_bits());
         assert_eq!(parsed.events, report.events);
+        assert_eq!(parsed.failures, report.failures);
         assert_eq!(parsed.jobs.len(), report.jobs.len());
         for (a, b) in parsed.jobs.iter().zip(&report.jobs) {
             assert_eq!(a.id, b.id);
@@ -323,7 +353,8 @@ mod tests {
         {
             use std::io::Write as _;
             let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
-            f.write_all(b"v2\tdeadbeef\tfair\t12.5").unwrap(); // truncated early
+            f.write_all(b"v3\tdeadbeef\tfair\t12.5").unwrap(); // truncated early
+            f.write_all(b"\nv2\tdeadbeef\tfair\t12.5\tok\n").unwrap(); // stale version
             f.write_all(b"\nnot a journal line\n").unwrap();
             let full = render_line(0xfeed_f00d, &report);
             let boundary = full.rfind(';').expect("multi-job line");
@@ -357,6 +388,14 @@ mod tests {
             let mut racked = sc.clone();
             racked.topology = crate::cluster::Topology::Racks(2);
             assert_ne!(scenario_key(&g, sc), scenario_key(&g, &racked));
+        }
+        // The failure-model axis enters the content hash too: results
+        // simulated without failures must never be replayed for a cell
+        // that injects them (and vice versa).
+        for sc in &scenarios {
+            let mut failing = sc.clone();
+            failing.failures = crate::config::FailureModel::crash_low();
+            assert_ne!(scenario_key(&g, sc), scenario_key(&g, &failing));
         }
         // ...but the key is position-independent content: the same
         // resolved scenario hashes identically regardless of grid object.

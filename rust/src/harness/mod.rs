@@ -6,16 +6,16 @@
 //! The paper's headline comparison (§5) is one cell of a much larger
 //! design space — scheduler x workload mix x cluster size x **PM
 //! heterogeneity profile** x **network topology** x **arrival pattern** x
-//! input scale x seed. This module turns the repo from a one-shot figure
-//! reproducer into a grid-evaluation engine:
+//! input scale x **failure model** x seed. This module turns the repo
+//! from a one-shot figure reproducer into a grid-evaluation engine:
 //!
 //! * [`grid`] — [`ScenarioGrid`] declares the axes; expansion assigns each
 //!   scenario a dense index and derives its RNG stream from
 //!   `(grid_seed, scenario_index)`;
 //! * [`preset`] — named grids (`fig4-throughput`, `fig5-locality`,
-//!   `fig6-deadline-miss`) that pin the axes to reproduce each paper
-//!   figure and emit a baseline-vs-candidate comparison table tracking
-//!   the paper's 12% throughput-gain headline;
+//!   `fig6-deadline-miss`, `fig7-failures`) that pin the axes to
+//!   reproduce each paper figure and emit a baseline-vs-candidate
+//!   comparison table tracking the paper's 12% throughput-gain headline;
 //! * [`runner`] — [`run_sweep`] executes scenarios as pure
 //!   `(SimConfig, JobTrace, SchedulerKind) -> Report` functions across N
 //!   worker threads; [`run_sweep_resumable`] consults the journal first

@@ -12,6 +12,7 @@
 //! | `fig4-throughput`    | jobs/hour            | profile ∈ {uniform, split-2x, long-tail} |
 //! | `fig5-locality`      | map locality %       | profile ∈ {uniform, long-tail} × topology ∈ {flat, racks-4} × arrival ∈ {steady, burst} |
 //! | `fig6-deadline-miss` | deadline-miss rate   | profile ∈ {uniform, split-2x} × arrival ∈ {steady, steady-x2, burst} |
+//! | `fig7-failures`      | deadline-miss rate   | failures ∈ {off, crash-low, crash-low-spec, crash-high, crash-high-spec} |
 //!
 //! `fig5-locality` sweeps the network-topology axis because that is the
 //! figure the three-tier locality split (node/rack/remote %) belongs to:
@@ -23,7 +24,7 @@
 //! as a first-class metric.
 
 use crate::cluster::Topology;
-use crate::config::PmProfile;
+use crate::config::{FailureModel, PmProfile};
 use crate::scheduler::SchedulerKind;
 use crate::workloads::trace::Arrival;
 
@@ -102,10 +103,11 @@ pub struct Preset {
 }
 
 /// Every preset name, for help text and error messages.
-pub const PRESET_NAMES: [&str; 4] = [
+pub const PRESET_NAMES: [&str; 5] = [
     "fig4-throughput",
     "fig5-locality",
     "fig6-deadline-miss",
+    "fig7-failures",
     "stress",
 ];
 
@@ -120,6 +122,7 @@ pub fn preset(name: &str) -> Option<(ScenarioGrid, Preset)> {
         topologies: vec![Topology::Flat],
         arrivals: vec![Arrival::STEADY],
         scales: vec![100.0],
+        failures: vec![FailureModel::off()],
         seed_replicates: 5,
         jobs_per_scenario: 15,
         mean_gap_s: 5.0,
@@ -188,6 +191,29 @@ pub fn preset(name: &str) -> Option<(ScenarioGrid, Preset)> {
                 },
             ))
         }
+        "fig7-failures" => {
+            let mut g = base(name);
+            g.failures = vec![
+                FailureModel::off(),
+                FailureModel::crash_low(),
+                FailureModel::crash_low().with_speculation(),
+                FailureModel::crash_high(),
+                FailureModel::crash_high().with_speculation(),
+            ];
+            Some((
+                g,
+                Preset {
+                    name: "fig7-failures",
+                    describes: "deadline-miss rate vs PM failure rate, with \
+                                and without speculative execution (see \
+                                docs/FAILURE_MODEL.md)",
+                    metric: HeadlineMetric::MissRatePct,
+                    baseline: SchedulerKind::Fair,
+                    candidate: SchedulerKind::DeadlineVc,
+                    paper_gain: None,
+                },
+            ))
+        }
         "stress" => Some((
             ScenarioGrid::stress(),
             Preset {
@@ -215,6 +241,7 @@ pub struct ComparisonRow {
     pub profile: String,
     pub topology: String,
     pub arrival: String,
+    pub failures: String,
     pub scale: f64,
     pub baseline: f64,
     pub candidate: f64,
@@ -227,7 +254,7 @@ pub struct ComparisonRow {
 pub fn compare_cells(groups: &[GroupStats], preset: &Preset) -> Vec<ComparisonRow> {
     use std::collections::BTreeMap;
     // Key: everything but the scheduler axis.
-    type CellKey = (String, usize, String, String, String, u64);
+    type CellKey = (String, usize, String, String, String, String, u64);
     let mut cells: BTreeMap<CellKey, (Option<f64>, Option<f64>)> = BTreeMap::new();
     for g in groups {
         let key = (
@@ -236,6 +263,7 @@ pub fn compare_cells(groups: &[GroupStats], preset: &Preset) -> Vec<ComparisonRo
             g.profile.clone(),
             g.topology.clone(),
             g.arrival.clone(),
+            g.failures.clone(),
             g.scale.to_bits(),
         );
         let entry = cells.entry(key).or_insert((None, None));
@@ -248,7 +276,7 @@ pub fn compare_cells(groups: &[GroupStats], preset: &Preset) -> Vec<ComparisonRo
     cells
         .into_iter()
         .filter_map(
-            |((mix, pms, profile, topology, arrival, scale_bits), (b, c))| {
+            |((mix, pms, profile, topology, arrival, failures, scale_bits), (b, c))| {
                 let (baseline, candidate) = (b?, c?);
                 Some(ComparisonRow {
                     mix,
@@ -256,6 +284,7 @@ pub fn compare_cells(groups: &[GroupStats], preset: &Preset) -> Vec<ComparisonRo
                     profile,
                     topology,
                     arrival,
+                    failures,
                     scale: f64::from_bits(scale_bits),
                     baseline,
                     candidate,
@@ -288,6 +317,7 @@ pub fn comparison_json(preset: &Preset, rows: &[ComparisonRow]) -> crate::util::
                 .set("profile", r.profile.as_str())
                 .set("topology", r.topology.as_str())
                 .set("arrival", r.arrival.as_str())
+                .set("failures", r.failures.as_str())
                 .set("scale", r.scale)
                 .set(preset.baseline.name(), r.baseline)
                 .set(preset.candidate.name(), r.candidate)
@@ -353,6 +383,25 @@ mod tests {
         for name in ["fig4-throughput", "fig6-deadline-miss"] {
             let (g, _) = preset(name).unwrap();
             assert_eq!(g.topologies, vec![Topology::Flat]);
+        }
+    }
+
+    #[test]
+    fn fig7_sweeps_the_failure_axis() {
+        let (grid, p) = preset("fig7-failures").unwrap();
+        assert_eq!(grid.failures.len(), 5);
+        assert!(grid.failures.contains(&FailureModel::off()));
+        assert!(grid
+            .failures
+            .iter()
+            .any(|f| f.crashes() && f.speculation));
+        assert_eq!(p.metric, HeadlineMetric::MissRatePct);
+        // 2 schedulers x 1 mix x 5 failure models x 5 seeds.
+        assert_eq!(grid.len(), 50);
+        // The other presets stay failure-free (byte-identical runs).
+        for name in ["fig4-throughput", "fig5-locality", "fig6-deadline-miss"] {
+            let (g, _) = preset(name).unwrap();
+            assert_eq!(g.failures, vec![FailureModel::off()]);
         }
     }
 

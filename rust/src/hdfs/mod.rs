@@ -144,6 +144,63 @@ impl NameNode {
         idx
     }
 
+    /// A DataNode died: drop its replicas from every block and re-replicate
+    /// each affected block onto an *alive* unchosen node (`alive[i]` is
+    /// node `i`'s liveness), preferring the dead replica's rack-placement
+    /// role — off the first replica's rack when possible, matching the
+    /// rack-aware write policy. A block whose replicas are all lost is
+    /// counted in the returned `(relocated, lost)`; it is restored from
+    /// the (durable) source data onto fresh nodes, so reads never block,
+    /// but the loss is reported to the metrics.
+    ///
+    /// Draws from `rng` only for blocks that actually held a replica on
+    /// `node` — callers pass the dedicated failure RNG stream, never the
+    /// workload stream.
+    pub fn fail_node(
+        &mut self,
+        node: NodeId,
+        node_racks: &[u32],
+        alive: &[bool],
+        rng: &mut Rng,
+    ) -> (u64, u64) {
+        let n = node_racks.len();
+        let mut relocated = 0u64;
+        let mut lost = 0u64;
+        // Deterministic iteration: files in id order.
+        let mut ids: Vec<FileId> = self.files.keys().copied().collect();
+        ids.sort();
+        for fid in ids {
+            let blocks = self.files.get_mut(&fid).unwrap();
+            for b in blocks {
+                let Some(pos) = b.replicas.iter().position(|&r| r == node) else {
+                    continue;
+                };
+                b.replicas.remove(pos);
+                if b.replicas.is_empty() {
+                    lost += 1;
+                }
+                // Re-replicate onto an alive, unchosen node: prefer a rack
+                // other than the (new) first replica's, falling back to any
+                // alive unchosen node (mirrors the write-path fallbacks).
+                let first_rack = b.replicas.first().map(|r| node_racks[r.idx()]);
+                let keep = |i: usize, off_rack: bool| {
+                    alive[i]
+                        && !b.replicas.contains(&NodeId(i as u32))
+                        && (!off_rack || first_rack.map_or(true, |fr| node_racks[i] != fr))
+                };
+                let mut cands: Vec<usize> = (0..n).filter(|&i| keep(i, true)).collect();
+                if cands.is_empty() {
+                    cands = (0..n).filter(|&i| keep(i, false)).collect();
+                }
+                if let Some(&c) = cands.get(rng.below(cands.len().max(1) as u64) as usize) {
+                    b.replicas.push(NodeId(c as u32));
+                    relocated += 1;
+                }
+            }
+        }
+        (relocated, lost)
+    }
+
     /// Fraction of (block, node) pairs that are replicas — diagnostic used
     /// by the locality_study example.
     pub fn replica_density(&self, file: FileId, num_nodes: usize) -> f64 {
@@ -345,6 +402,64 @@ mod tests {
             ids.sort_unstable();
             ids.dedup();
             assert_eq!(ids.len(), 4);
+        }
+    }
+
+    #[test]
+    fn fail_node_rereplicates_onto_alive_nodes() {
+        let racks: Vec<u32> = (0..10).map(|i| (i / 5) as u32).collect();
+        let mut nn = NameNode::new();
+        let mut rng = Rng::new(23);
+        let f = nn.create_file_placed(64.0 * 40.0, 64.0, 3, &racks, &mut rng);
+        let dead = NodeId(2);
+        let mut alive = vec![true; 10];
+        alive[dead.idx()] = false;
+        let affected = nn
+            .blocks(f)
+            .iter()
+            .filter(|b| b.replicas.contains(&dead))
+            .count() as u64;
+        assert!(affected > 0, "seed produced no replicas on node 2");
+        let mut frng = Rng::new(99);
+        let (relocated, lost) = nn.fail_node(dead, &racks, &alive, &mut frng);
+        assert_eq!(relocated, affected);
+        assert_eq!(lost, 0, "3-way replication survives one death");
+        for b in nn.blocks(f) {
+            assert_eq!(b.replicas.len(), 3, "replication restored");
+            assert!(!b.replicas.contains(&dead), "dead replica dropped");
+            let mut ids: Vec<u32> = b.replicas.iter().map(|n| n.0).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), 3, "replicas stay distinct");
+        }
+        // Untouched nodes' data unaffected: the index still inverts.
+        let idx = nn.locality_index(f, 10);
+        assert!(idx[dead.idx()].is_empty());
+    }
+
+    #[test]
+    fn fail_node_total_loss_counts_and_restores() {
+        // Replication 1: killing a block's only node loses it; the
+        // restore-from-source policy still re-replicates so reads and
+        // re-executed maps never block.
+        let mut nn = NameNode::new();
+        let mut rng = Rng::new(7);
+        let f = nn.create_file(256.0, 64.0, 1, 4, &mut rng);
+        let dead = nn.blocks(f)[0].replicas[0];
+        let mut alive = vec![true; 4];
+        alive[dead.idx()] = false;
+        let had = nn
+            .blocks(f)
+            .iter()
+            .filter(|b| b.replicas.contains(&dead))
+            .count() as u64;
+        let mut frng = Rng::new(5);
+        let (relocated, lost) = nn.fail_node(dead, &[0; 4], &alive, &mut frng);
+        assert_eq!(lost, had);
+        assert_eq!(relocated, had);
+        for b in nn.blocks(f) {
+            assert_eq!(b.replicas.len(), 1);
+            assert!(!b.replicas.contains(&dead));
         }
     }
 

@@ -13,10 +13,12 @@
 //!   --pms N --scale MB_PER_GB --jobs N --xla (use the PJRT predictor)
 //!   --json (machine-readable output)
 //! Sweep flags: --grid <default|quick|stress> --preset <fig4-throughput|
-//!   fig5-locality|fig6-deadline-miss|stress> --threads N --seeds N --mix M
-//!   --profile <uniform|split-2x|long-tail>[,..] --topology
-//!   <flat|racks-N|fat-tree-N>[,..] --arrival
-//!   <steady|burst[-xRATE]>[,..] --fresh (ignore the journal)
+//!   fig5-locality|fig6-deadline-miss|fig7-failures|stress> --threads N
+//!   --seeds N --mix M --profile <uniform|split-2x|long-tail>[,..]
+//!   --topology <flat|racks-N|fat-tree-N>[,..] --arrival
+//!   <steady|burst[-xRATE]>[,..] --failures
+//!   <off|stragglers[-spec]|crash-low[-spec]|crash-high[-spec]>[,..]
+//!   --fresh (ignore the journal)
 //!   --out DIR (artifact directory, default results/)
 
 use vcsched::config::SimConfig;
@@ -231,7 +233,7 @@ fn cmd_throughput(args: &Args) {
 /// interrupt/resume cycles (see `harness` docs).
 fn cmd_sweep(args: &Args) {
     use vcsched::cluster::Topology;
-    use vcsched::config::PmProfile;
+    use vcsched::config::{FailureModel, PmProfile};
     use vcsched::harness::{
         aggregate, aggregates_csv, compare_cells, comparison_json, figure_preset,
         run_sweep_resumable, sweep_json, JobMix, Journal, ScenarioGrid, PRESET_NAMES,
@@ -304,6 +306,14 @@ fn cmd_sweep(args: &Args) {
             })
             .collect();
     }
+    if let Some(names) = args.get("failures") {
+        grid.failures = FailureModel::parse_list(names).unwrap_or_else(|| {
+            panic!(
+                "unknown failure model in {names:?} (expected one of {:?})",
+                FailureModel::NAMES
+            )
+        });
+    }
 
     let default_threads = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -312,8 +322,8 @@ fn cmd_sweep(args: &Args) {
 
     println!(
         "sweep {:?}: {} scenarios ({} schedulers x {} mixes x {} PM counts x \
-         {} profiles x {} topologies x {} arrivals x {} scales x {} seeds), \
-         {} jobs each, {threads} threads",
+         {} profiles x {} topologies x {} arrivals x {} scales x {} failure \
+         models x {} seeds), {} jobs each, {threads} threads",
         grid.name,
         grid.len(),
         grid.schedulers.len(),
@@ -323,6 +333,7 @@ fn cmd_sweep(args: &Args) {
         grid.topologies.len(),
         grid.arrivals.len(),
         grid.scales.len(),
+        grid.failures.len(),
         grid.seed_replicates,
         grid.jobs_per_scenario,
     );
@@ -348,8 +359,8 @@ fn cmd_sweep(args: &Args) {
     let groups = aggregate(&results);
 
     let mut t = Table::new(&[
-        "scheduler", "mix", "pms", "profile", "topology", "arrival", "mean_ct", "p50",
-        "p99", "thpt/h", "node/rack/remote", "misses",
+        "scheduler", "mix", "pms", "profile", "topology", "arrival", "failures",
+        "mean_ct", "p50", "p99", "thpt/h", "node/rack/remote", "misses", "spec l/w/k",
     ]);
     for g in &groups {
         t.row(&[
@@ -359,6 +370,7 @@ fn cmd_sweep(args: &Args) {
             g.profile.clone(),
             g.topology.clone(),
             g.arrival.clone(),
+            g.failures.clone(),
             format!("{:.1}±{:.1}s", g.mean_completion_s, g.std_completion_s),
             format!("{:.1}s", g.p50_completion_s),
             format!("{:.1}s", g.p99_completion_s),
@@ -368,6 +380,7 @@ fn cmd_sweep(args: &Args) {
                 g.mean_locality_pct, g.mean_rack_pct, g.mean_remote_pct
             ),
             format!("{:.0}%", g.mean_miss_rate * 100.0),
+            format!("{}/{}/{}", g.spec_launches, g.spec_wins, g.spec_kills),
         ]);
     }
     t.print();
@@ -432,6 +445,7 @@ fn print_comparison(p: &vcsched::harness::Preset, rows: &[vcsched::harness::Comp
         "profile",
         "topology",
         "arrival",
+        "failures",
         p.baseline.name(),
         p.candidate.name(),
         "gain",
@@ -442,6 +456,7 @@ fn print_comparison(p: &vcsched::harness::Preset, rows: &[vcsched::harness::Comp
             r.profile.clone(),
             r.topology.clone(),
             r.arrival.clone(),
+            r.failures.clone(),
             format!("{:.2}", r.baseline),
             format!("{:.2}", r.candidate),
             format!("{:+.1}{unit}", r.gain),
@@ -569,9 +584,12 @@ fn print_help() {
          flags: --sched K --a K --b K --seed N --pms N --jobs N --runs N\n\
          \x20      --scale MB_PER_GB --xla --json\n\
          sweep: --grid <default|quick|stress> --preset <fig4-throughput|fig5-locality|\n\
-         \x20      fig6-deadline-miss|stress> --threads N --seeds N --mix <mixed|TYPE>\n\
-         \x20      --sched K[,K..] --profile <uniform|split-2x|long-tail>[,..]\n\
+         \x20      fig6-deadline-miss|fig7-failures|stress> --threads N --seeds N\n\
+         \x20      --mix <mixed|TYPE> --sched K[,K..]\n\
+         \x20      --profile <uniform|split-2x|long-tail>[,..]\n\
          \x20      --topology <flat|racks-N|fat-tree-N>[,..]\n\
-         \x20      --arrival <steady|burst[-xRATE]>[,..] --fresh --out DIR"
+         \x20      --arrival <steady|burst[-xRATE]>[,..]\n\
+         \x20      --failures <off|stragglers[-spec]|crash-low[-spec]|crash-high[-spec]>[,..]\n\
+         \x20      --fresh --out DIR"
     );
 }

@@ -7,9 +7,55 @@
 //! Timing is deterministic given the RNG stream (multiplicative lognormal-
 //! ish jitter from `SimConfig::jitter_std`).
 
-use crate::config::SimConfig;
+use crate::config::{FailureModel, SimConfig};
 use crate::util::Rng;
 use crate::workloads::JobSpec;
+
+/// Heavy-tailed straggler slowdown multiplier for one task launch.
+///
+/// With probability `fm.straggler_prob` the task is a straggler and its
+/// duration multiplies by a Pareto(`straggler_alpha`) draw clamped to
+/// `straggler_cap`; otherwise the multiplier is exactly `1.0`. When
+/// stragglers are off (`straggler_prob <= 0`) the function returns without
+/// touching the RNG at all — this is what keeps `--failures off` runs
+/// byte-identical to the pre-failure simulator.
+///
+/// Sampling is deterministic in the RNG stream:
+///
+/// ```
+/// use vcsched::config::FailureModel;
+/// use vcsched::mapreduce::straggler_multiplier;
+/// use vcsched::util::Rng;
+///
+/// let fm = FailureModel::stragglers();
+/// let draw = |seed| {
+///     let mut rng = Rng::new(seed);
+///     (0..100).map(|_| straggler_multiplier(&fm, &mut rng)).collect::<Vec<f64>>()
+/// };
+/// assert_eq!(draw(7), draw(7)); // same seed, same multipliers
+///
+/// let mut rng = Rng::new(7);
+/// for _ in 0..1000 {
+///     let m = straggler_multiplier(&fm, &mut rng);
+///     assert!(m >= 1.0 && m <= fm.straggler_cap);
+/// }
+///
+/// // Disabled stragglers consume zero RNG draws.
+/// let (mut a, mut b) = (Rng::new(3), Rng::new(3));
+/// assert_eq!(straggler_multiplier(&FailureModel::off(), &mut a), 1.0);
+/// assert_eq!(a.next_u64(), b.next_u64());
+/// ```
+pub fn straggler_multiplier(fm: &FailureModel, rng: &mut Rng) -> f64 {
+    if fm.straggler_prob <= 0.0 {
+        return 1.0;
+    }
+    if !rng.chance(fm.straggler_prob) {
+        return 1.0;
+    }
+    // Pareto with x_m = 1: inverse-CDF on a (0, 1] uniform.
+    let u = 1.0 - rng.f64();
+    u.powf(-1.0 / fm.straggler_alpha).min(fm.straggler_cap)
+}
 
 /// Hadoop's `mapred.reduce.parallel.copies` default: each reducer fetches
 /// from this many mappers concurrently during the copy phase.
@@ -212,6 +258,34 @@ mod tests {
             let t = c.map_secs(64.0, true, &mut rng);
             assert!(t >= base * 0.6 - 1e-9 && t <= base * 1.8 + 1e-9);
         }
+    }
+
+    #[test]
+    fn straggler_multiplier_distribution_sane() {
+        let fm = crate::config::FailureModel {
+            straggler_prob: 1.0, // always a straggler
+            straggler_alpha: 1.5,
+            straggler_cap: 8.0,
+            ..crate::config::FailureModel::off()
+        };
+        let mut rng = Rng::new(11);
+        let mut above_one = 0usize;
+        for _ in 0..500 {
+            let m = straggler_multiplier(&fm, &mut rng);
+            assert!((1.0..=8.0).contains(&m));
+            if m > 1.0 {
+                above_one += 1;
+            }
+        }
+        // A Pareto draw is > 1 almost surely.
+        assert!(above_one > 450);
+        // prob < 1 stragglers are rarer but still slow.
+        let fm = crate::config::FailureModel::stragglers();
+        let mut rng = Rng::new(12);
+        let slow = (0..2000)
+            .filter(|_| straggler_multiplier(&fm, &mut rng) > 1.0)
+            .count();
+        assert!(slow > 50 && slow < 500, "got {slow} stragglers of 2000");
     }
 
     #[test]

@@ -31,7 +31,7 @@ use crate::sim::SimTime;
 use crate::util::Rng;
 use crate::workloads::JobSpec;
 
-use super::task::{TaskId, TaskRef, TaskState};
+use super::task::{SpecAttempt, TaskId, TaskRef, TaskState};
 
 /// Job index in submission order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -96,6 +96,20 @@ pub struct JobState {
     pending_reduce_count: u32,
     running_reduce_count: u32,
     finished_reduce_count: u32,
+
+    /// Per-task attempt epochs, incremented on every (re)launch. A
+    /// `MapDone`/`ReduceDone` whose attempt doesn't match the current
+    /// epoch (primary or live spec) is stale — the attempt was killed by
+    /// a PM crash or lost a speculation race — and the coordinator drops
+    /// it. With failures off each task launches exactly once, every
+    /// event matches, and behavior is identical to the pre-epoch code.
+    map_attempt: Vec<u32>,
+    reduce_attempt: Vec<u32>,
+    /// Live speculative (backup) copies — maps only, at most one per
+    /// task, only while the primary is Running.
+    specs: Vec<Option<SpecAttempt>>,
+    /// Count of live spec copies (cheap queries + invariants).
+    spec_live: u32,
 
     /// Tiered locality accounting (finished map tasks only): node-local,
     /// rack-local and off-rack counts. `rack_maps` is always 0 under the
@@ -170,6 +184,10 @@ impl JobState {
             replicas,
             maps: vec![TaskState::Pending; n_maps],
             reduces: vec![TaskState::Pending; n_reduces],
+            map_attempt: vec![0; n_maps],
+            reduce_attempt: vec![0; n_reduces],
+            specs: vec![None; n_maps],
+            spec_live: 0,
             local_cursors: vec![Cell::new(0); locality.len()],
             rack_cursors: vec![Cell::new(0); rack_locality.len()],
             map_cursor: Cell::new(0),
@@ -386,9 +404,9 @@ impl JobState {
             .map(move |(i, _)| TaskId((start + i) as u32))
     }
 
-    /// All pending reduce tasks, in index order (cursor-accelerated; the
-    /// reduce cursor is strictly monotone — reduces never return to
-    /// Pending).
+    /// All pending reduce tasks, in index order (cursor-accelerated). The
+    /// reduce cursor is monotone except when a PM crash kills a running
+    /// reduce ([`Self::mark_reduce_killed`] rolls it back).
     pub fn pending_reduces_iter(&self) -> impl Iterator<Item = TaskId> + '_ {
         let start = Self::advance_dense_cursor(&self.reduce_cursor, &self.reduces);
         self.reduces[start..]
@@ -502,14 +520,16 @@ impl JobState {
         self.awaiting_map_count += 1;
     }
 
-    /// Pending/Awaiting -> Running.
+    /// Pending/Awaiting -> Running. Returns the new attempt epoch (the
+    /// coordinator stamps it on the completion event so stale completions
+    /// from killed attempts are droppable).
     pub fn mark_map_launched(
         &mut self,
         t: TaskId,
         node: NodeId,
         tier: LocalityTier,
         now: SimTime,
-    ) {
+    ) -> u32 {
         let s = &mut self.maps[t.0 as usize];
         match *s {
             TaskState::Pending => self.pending_map_count -= 1,
@@ -522,6 +542,8 @@ impl JobState {
             tier,
         };
         self.running_map_count += 1;
+        self.map_attempt[t.0 as usize] += 1;
+        self.map_attempt[t.0 as usize]
     }
 
     /// Running -> Finished; flips to ReducePhase when the last map lands.
@@ -557,7 +579,7 @@ impl JobState {
         }
     }
 
-    pub fn mark_reduce_launched(&mut self, t: TaskId, node: NodeId, now: SimTime) {
+    pub fn mark_reduce_launched(&mut self, t: TaskId, node: NodeId, now: SimTime) -> u32 {
         let s = &mut self.reduces[t.0 as usize];
         debug_assert!(s.is_pending(), "launching reduce {t:?} twice");
         *s = TaskState::Running {
@@ -567,6 +589,8 @@ impl JobState {
         };
         self.pending_reduce_count -= 1;
         self.running_reduce_count += 1;
+        self.reduce_attempt[t.0 as usize] += 1;
+        self.reduce_attempt[t.0 as usize]
     }
 
     pub fn mark_reduce_finished(&mut self, t: TaskId, now: SimTime) {
@@ -591,6 +615,169 @@ impl JobState {
         }
     }
 
+    // ---- failure / speculation transitions ----
+
+    /// Current primary attempt epoch of map task `t`.
+    pub fn map_attempt(&self, t: TaskId) -> u32 {
+        self.map_attempt[t.0 as usize]
+    }
+
+    /// Current attempt epoch of reduce task `t`.
+    pub fn reduce_attempt(&self, t: TaskId) -> u32 {
+        self.reduce_attempt[t.0 as usize]
+    }
+
+    /// The live speculative copy of map task `t`, if any.
+    pub fn spec_of(&self, t: TaskId) -> Option<SpecAttempt> {
+        self.specs[t.0 as usize]
+    }
+
+    /// Number of live speculative copies across the job.
+    pub fn live_specs(&self) -> u32 {
+        self.spec_live
+    }
+
+    /// Launch a speculative (backup) copy of a *running* map. Returns the
+    /// spec's attempt epoch. Task-state counters don't move — the task is
+    /// still one Running task; the spec only occupies an extra slot.
+    pub fn begin_spec_map(
+        &mut self,
+        t: TaskId,
+        node: NodeId,
+        tier: LocalityTier,
+        now: SimTime,
+    ) -> u32 {
+        debug_assert!(self.maps[t.0 as usize].is_running(), "spec on non-running map {t:?}");
+        debug_assert!(self.specs[t.0 as usize].is_none(), "double spec on map {t:?}");
+        self.map_attempt[t.0 as usize] += 1;
+        let attempt = self.map_attempt[t.0 as usize];
+        self.specs[t.0 as usize] = Some(SpecAttempt {
+            attempt,
+            node,
+            started: now,
+            tier,
+        });
+        self.spec_live += 1;
+        attempt
+    }
+
+    /// Remove and return the live spec copy of `t` (the primary won the
+    /// race, or the spec's node died). The caller frees the spec's slot.
+    pub fn take_spec(&mut self, t: TaskId) -> Option<SpecAttempt> {
+        let s = self.specs[t.0 as usize].take();
+        if s.is_some() {
+            self.spec_live -= 1;
+        }
+        s
+    }
+
+    /// The spec copy finished first: Running -> Finished with the *spec's*
+    /// node/tier/start. Returns the losing primary's `(node, tier)` so the
+    /// coordinator can free its slot. The spec becomes the finished
+    /// attempt; the primary's in-flight completion is now stale.
+    pub fn mark_map_spec_finished(&mut self, t: TaskId, now: SimTime) -> (NodeId, LocalityTier) {
+        let spec = self.take_spec(t).expect("spec finish without live spec");
+        let s = &mut self.maps[t.0 as usize];
+        let TaskState::Running { node, tier, .. } = *s else {
+            panic!("spec finish on non-running map {t:?}");
+        };
+        *s = TaskState::Finished {
+            node: spec.node,
+            started: spec.started,
+            finished: now,
+            tier: spec.tier,
+        };
+        self.running_map_count -= 1;
+        self.finished_map_count += 1;
+        match spec.tier {
+            LocalityTier::NodeLocal => self.local_maps += 1,
+            LocalityTier::RackLocal => self.rack_maps += 1,
+            LocalityTier::Remote => self.remote_maps += 1,
+        }
+        // The winner's epoch becomes the task's finished attempt.
+        self.map_attempt[t.0 as usize] = spec.attempt;
+        self.stats.record_map(crate::predictor::TaskSample {
+            duration_s: (now - spec.started).as_secs_f64(),
+        });
+        if self.map_finished() && self.phase == JobPhase::MapPhase {
+            self.phase = JobPhase::ReducePhase;
+            self.map_phase_finished_at = Some(now);
+        }
+        (node, tier)
+    }
+
+    /// A crashed PM killed the running primary of map `t`. If a live spec
+    /// copy survives the caller should promote it instead
+    /// ([`Self::promote_spec`]). Running -> Pending; the epoch advances on
+    /// the next launch, so the dead attempt's completion event is stale.
+    /// Returns the dead attempt's `(node, tier)`.
+    pub fn mark_map_killed(&mut self, t: TaskId) -> (NodeId, LocalityTier) {
+        let s = &mut self.maps[t.0 as usize];
+        let TaskState::Running { node, tier, .. } = *s else {
+            panic!("killing non-running map {t:?}");
+        };
+        *s = TaskState::Pending;
+        self.running_map_count -= 1;
+        self.pending_map_count += 1;
+        self.rollback_cursors(t.0);
+        (node, tier)
+    }
+
+    /// The primary died but a spec copy survives: the spec becomes the new
+    /// primary (task stays Running, no re-execution needed). Returns the
+    /// promoted attempt.
+    pub fn promote_spec(&mut self, t: TaskId) -> SpecAttempt {
+        let spec = self.take_spec(t).expect("promoting without live spec");
+        let s = &mut self.maps[t.0 as usize];
+        debug_assert!(s.is_running(), "promoting spec of non-running map {t:?}");
+        *s = TaskState::Running {
+            node: spec.node,
+            started: spec.started,
+            tier: spec.tier,
+        };
+        self.map_attempt[t.0 as usize] = spec.attempt;
+        spec
+    }
+
+    /// A crashed PM held the *output* of finished map `t` while the job is
+    /// still in its map phase (Hadoop loses un-shuffled map output with
+    /// the TaskTracker): Finished -> Pending for re-execution. Undoes the
+    /// tier accounting; the recorded duration sample stays (it measured a
+    /// real execution).
+    pub fn mark_map_output_lost(&mut self, t: TaskId) {
+        debug_assert_eq!(self.phase, JobPhase::MapPhase, "output loss after map phase");
+        let s = &mut self.maps[t.0 as usize];
+        let TaskState::Finished { tier, .. } = *s else {
+            panic!("output loss on non-finished map {t:?}");
+        };
+        *s = TaskState::Pending;
+        self.finished_map_count -= 1;
+        self.pending_map_count += 1;
+        match tier {
+            LocalityTier::NodeLocal => self.local_maps -= 1,
+            LocalityTier::RackLocal => self.rack_maps -= 1,
+            LocalityTier::Remote => self.remote_maps -= 1,
+        }
+        self.rollback_cursors(t.0);
+    }
+
+    /// A crashed PM killed running reduce `t`: Running -> Pending. This is
+    /// the one transition that rolls the reduce cursor back (reduces are
+    /// otherwise strictly monotone). Returns the dead attempt's node.
+    pub fn mark_reduce_killed(&mut self, t: TaskId) -> NodeId {
+        let s = &mut self.reduces[t.0 as usize];
+        let TaskState::Running { node, .. } = *s else {
+            panic!("killing non-running reduce {t:?}");
+        };
+        *s = TaskState::Pending;
+        self.running_reduce_count -= 1;
+        self.pending_reduce_count += 1;
+        if t.0 < self.reduce_cursor.get() {
+            self.reduce_cursor.set(t.0);
+        }
+        node
+    }
+
     /// Sanity invariant for the property tests.
     pub fn check_invariants(&self) -> Result<(), String> {
         let m = self.pending_map_count
@@ -610,6 +797,18 @@ impl JobState {
         }
         if self.local_maps + self.rack_maps + self.remote_maps != self.finished_map_count {
             return Err(format!("job {:?}: locality accounting broken", self.id));
+        }
+        let live = self.specs.iter().filter(|s| s.is_some()).count() as u32;
+        if live != self.spec_live {
+            return Err(format!("job {:?}: spec_live {} != {live}", self.id, self.spec_live));
+        }
+        for (i, spec) in self.specs.iter().enumerate() {
+            if spec.is_some() && !self.maps[i].is_running() {
+                return Err(format!(
+                    "job {:?}: spec copy of non-running map {i}",
+                    self.id
+                ));
+            }
         }
         // Cursor invariant: nothing before a pending cursor is pending
         // (otherwise the indexed iterators would silently skip tasks).

@@ -11,9 +11,9 @@ mod cost;
 mod job;
 mod task;
 
-pub use cost::TaskCost;
+pub use cost::{straggler_multiplier, TaskCost};
 pub use job::{JobId, JobPhase, JobState};
-pub use task::{TaskId, TaskKind, TaskRef, TaskState};
+pub use task::{SpecAttempt, TaskId, TaskKind, TaskRef, TaskState};
 
 #[cfg(test)]
 mod tests {

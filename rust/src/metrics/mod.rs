@@ -49,6 +49,29 @@ impl JobRecord {
     }
 }
 
+/// Failure-injection and speculation counters for one run. All zero with
+/// the failure model off; the report emits them regardless so the JSON/
+/// CSV schema is identical across configurations.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FailureStats {
+    /// Fail-stop PM crashes delivered from the failure trace.
+    pub pm_crashes: u64,
+    /// Speculative (backup) map copies launched.
+    pub speculative_launches: u64,
+    /// Races the backup copy won (primary killed at spec completion).
+    pub speculative_wins: u64,
+    /// Attempts killed by speculation resolution or crashes of the backup
+    /// — `speculative_launches - speculative_wins`-ish is pure waste.
+    pub speculative_kills: u64,
+    /// Map/reduce launches that re-ran work a crash destroyed (killed
+    /// running attempts and lost un-shuffled map outputs).
+    pub reexecuted_tasks: u64,
+    /// HDFS replicas re-replicated off dead nodes.
+    pub blocks_relocated: u64,
+    /// Blocks that lost their last replica (restored from source).
+    pub blocks_lost: u64,
+}
+
 /// Aggregated results of one simulation run.
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
@@ -59,6 +82,8 @@ pub struct RunMetrics {
     pub heartbeats: u64,
     pub events: u64,
     pub predictor_calls: u64,
+    /// Failure-injection counters (all zero with the model off).
+    pub failures: FailureStats,
     /// Wall-clock seconds the simulation took to run (host time).
     pub wall_s: f64,
 }
@@ -193,6 +218,13 @@ impl RunMetrics {
             .set("heartbeats", self.heartbeats)
             .set("events", self.events)
             .set("predictor_calls", self.predictor_calls)
+            .set("pm_crashes", self.failures.pm_crashes)
+            .set("speculative_launches", self.failures.speculative_launches)
+            .set("speculative_wins", self.failures.speculative_wins)
+            .set("speculative_kills", self.failures.speculative_kills)
+            .set("reexecuted_tasks", self.failures.reexecuted_tasks)
+            .set("blocks_relocated", self.failures.blocks_relocated)
+            .set("blocks_lost", self.failures.blocks_lost)
             .set("jobs", jobs)
     }
 }

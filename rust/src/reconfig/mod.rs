@@ -94,6 +94,11 @@ impl ConfigManager {
         let mut out = Vec::new();
         for (pm_idx, mm) in self.mms.iter_mut().enumerate() {
             let pm = PmId(pm_idx as u32);
+            // A dead PM's MM is unreachable; its queues were purged at
+            // crash time and anything enqueued since waits for recovery.
+            if !cluster.pm_alive(pm) {
+                continue;
+            }
             while !mm.assign_q.is_empty() && !mm.release_q.is_empty() {
                 // Drop stale releases first.
                 let Some(&from) = mm.release_q.front() else { break };
@@ -116,6 +121,15 @@ impl ConfigManager {
         for mm in &mut self.mms {
             mm.assign_q.retain(|(_, t)| *t != task);
         }
+    }
+
+    /// A PM crashed: drop its MM's queues wholesale (the MM dies with the
+    /// machine). Returns the tasks whose queued assigns were dropped, so
+    /// the coordinator can put them back to Pending.
+    pub fn purge_pm(&mut self, pm: PmId) -> Vec<TaskRef> {
+        let mm = &mut self.mms[pm.idx()];
+        mm.release_q.clear();
+        mm.assign_q.drain(..).map(|(_, t)| t).collect()
     }
 
     /// Total queued assigns across the cluster (diagnostics).
@@ -223,6 +237,27 @@ mod tests {
         assert_eq!(grants.len(), 2);
         let pms: Vec<u32> = grants.iter().map(|g| g.pm.0).collect();
         assert_eq!(pms, vec![0, 2]);
+    }
+
+    #[test]
+    fn purge_pm_drops_queues_and_returns_tasks() {
+        let (mut c, mut cm) = setup();
+        cm.enqueue_assign(PmId(0), NodeId(1), task(0));
+        cm.enqueue_assign(PmId(0), NodeId(0), task(1));
+        cm.enqueue_release(PmId(0), NodeId(0));
+        cm.enqueue_assign(PmId(1), NodeId(3), task(2)); // other PM untouched
+        let dropped = cm.purge_pm(PmId(0));
+        assert_eq!(dropped, vec![task(0), task(1)]);
+        assert_eq!(cm.aq_depth(PmId(0)), 0);
+        assert_eq!(cm.rq_depth(PmId(0)), 0);
+        assert_eq!(cm.aq_depth(PmId(1)), 1);
+        // Dead PMs never match even with both queues filled.
+        cm.enqueue_assign(PmId(0), NodeId(1), task(3));
+        cm.enqueue_release(PmId(0), NodeId(0));
+        c.crash_pm(PmId(0));
+        assert!(cm.match_queues(&c).is_empty());
+        c.recover_pm(PmId(0));
+        assert_eq!(cm.match_queues(&c).len(), 1);
     }
 
     #[test]

@@ -33,8 +33,8 @@ use crate::sim::SimTime;
 
 use super::edf::EdfKeys;
 use super::{
-    next_unclaimed_any, next_unclaimed_local, next_unclaimed_rack, Action, ClaimLedger,
-    EdfScheduler, SchedView, Scheduler, SchedulerKind,
+    next_unclaimed_any, next_unclaimed_local, next_unclaimed_rack, speculative_fill, Action,
+    ClaimLedger, EdfScheduler, SchedView, Scheduler, SchedulerKind,
 };
 
 /// Tunable policy knobs — every mechanism of the proposed scheduler can
@@ -482,6 +482,8 @@ impl Scheduler for DeadlineVcScheduler {
         {
             out.push(Action::RegisterRelease { node });
         }
+
+        speculative_fill(view, node, out);
     }
 }
 

@@ -17,7 +17,10 @@
 use crate::cluster::{LocalityTier, NodeId};
 use crate::predictor::Predictor;
 
-use super::{greedy_fill, Action, ClaimLedger, FairScheduler, SchedView, Scheduler, SchedulerKind};
+use super::{
+    greedy_fill, speculative_fill, Action, ClaimLedger, FairScheduler, SchedView, Scheduler,
+    SchedulerKind,
+};
 
 #[derive(Debug)]
 pub struct DelayScheduler {
@@ -108,6 +111,7 @@ impl Scheduler for DelayScheduler {
                 self.skipped[job.id.idx()] += 1;
             }
         }
+        speculative_fill(view, node, out);
     }
 }
 

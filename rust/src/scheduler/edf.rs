@@ -9,7 +9,7 @@ use crate::mapreduce::JobId;
 use crate::predictor::Predictor;
 use crate::sim::SimTime;
 
-use super::{greedy_fill, Action, ClaimLedger, SchedView, Scheduler, SchedulerKind};
+use super::{greedy_fill, speculative_fill, Action, ClaimLedger, SchedView, Scheduler, SchedulerKind};
 
 /// Pooled `(deadline, submitted, id, index)` sort keys for
 /// [`EdfScheduler::edf_order_into`] — `id` is unique, so sorting the
@@ -71,6 +71,7 @@ impl Scheduler for EdfScheduler {
     ) {
         Self::edf_order_into(view, &mut self.keys, &mut self.order);
         greedy_fill(view, node, &self.order, &mut self.claims, |_| LocalityTier::Remote, out);
+        speculative_fill(view, node, out);
     }
 }
 

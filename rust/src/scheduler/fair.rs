@@ -11,7 +11,7 @@ use crate::cluster::{LocalityTier, NodeId};
 use crate::mapreduce::JobState;
 use crate::predictor::Predictor;
 
-use super::{greedy_fill, Action, ClaimLedger, SchedView, Scheduler, SchedulerKind};
+use super::{greedy_fill, speculative_fill, Action, ClaimLedger, SchedView, Scheduler, SchedulerKind};
 
 #[derive(Debug, Default)]
 pub struct FairScheduler {
@@ -75,6 +75,7 @@ impl Scheduler for FairScheduler {
     ) {
         Self::fair_order_into(view, &mut self.order);
         greedy_fill(view, node, &self.order, &mut self.claims, |_| LocalityTier::Remote, out);
+        speculative_fill(view, node, out);
     }
 }
 

@@ -5,7 +5,7 @@
 use crate::cluster::{LocalityTier, NodeId};
 use crate::predictor::Predictor;
 
-use super::{greedy_fill, Action, ClaimLedger, SchedView, Scheduler, SchedulerKind};
+use super::{greedy_fill, speculative_fill, Action, ClaimLedger, SchedView, Scheduler, SchedulerKind};
 
 #[derive(Debug, Default)]
 pub struct FifoScheduler {
@@ -36,6 +36,7 @@ impl Scheduler for FifoScheduler {
         self.order.clear();
         self.order.extend((0..view.jobs.len()).filter(|&i| !view.jobs[i].is_done()));
         greedy_fill(view, node, &self.order, &mut self.claims, |_| LocalityTier::Remote, out);
+        speculative_fill(view, node, out);
     }
 }
 

@@ -162,6 +162,17 @@ pub enum Action {
         map_slots: u32,
         reduce_slots: u32,
     },
+    /// Launch a speculative (backup) copy of *running* map `task` on
+    /// `node` (LATE-style; only valid when the failure model enables
+    /// speculation, the task has no live spec copy yet, and `node` differs
+    /// from the primary's node). First finisher wins; the coordinator
+    /// kills the loser. Emitted by the shared [`speculative_fill`] pass,
+    /// so every scheduler speculates under the same policy.
+    LaunchSpeculativeMap {
+        job: JobId,
+        task: TaskId,
+        node: NodeId,
+    },
 }
 
 /// The scheduler interface (see module docs for the protocol). Callbacks
@@ -392,6 +403,75 @@ pub(crate) fn greedy_fill(
             });
             free_reduce -= 1;
         }
+    }
+}
+
+/// Shared LATE-style speculation pass, appended to the end of **every**
+/// scheduler's heartbeat (indexed and reference alike — it uses only plain
+/// scans, no cursors or ledgers, so both paths stay action-identical).
+///
+/// Policy (see `docs/FAILURE_MODEL.md`):
+/// * only when the failure model enables speculation;
+/// * at most **one** speculative launch per node-heartbeat;
+/// * a job is eligible only when it has no pending or awaiting maps (spare
+///   capacity would otherwise serve real work first) and at least
+///   `spec_min_finished` finished maps (the duration estimate is warm);
+/// * a running map is a straggler when its elapsed time exceeds
+///   `spec_slowdown ×` the job's observed mean map duration, it has no
+///   live spec copy yet, and its primary runs on a *different* node;
+/// * among stragglers, pick the longest-running (ties: lowest job, then
+///   lowest task id — strict `>` keeps the pick deterministic).
+///
+/// With speculation off this returns immediately, emitting nothing.
+pub(crate) fn speculative_fill(view: &SchedView, node: NodeId, out: &mut Vec<Action>) {
+    let fm = &view.cfg.failures;
+    if !fm.speculation {
+        return;
+    }
+    // Slots already promised to this node earlier in this heartbeat.
+    let promised = out
+        .iter()
+        .filter(|a| {
+            matches!(a,
+                Action::LaunchMap { node: n, .. }
+                | Action::LaunchSpeculativeMap { node: n, .. } if *n == node)
+        })
+        .count() as u32;
+    let vm = view.cluster.vm(node);
+    if vm.free_map_slots() <= promised {
+        return;
+    }
+    let mut best: Option<(f64, JobId, TaskId)> = None;
+    for job in view.active_jobs() {
+        if job.pending_maps() > 0
+            || job.awaiting_maps() > 0
+            || job.running_maps() == 0
+            || job.completed_maps() < fm.spec_min_finished
+        {
+            continue;
+        }
+        let threshold = fm.spec_slowdown * job.stats.t_map();
+        for ti in 0..job.total_maps() {
+            let t = TaskId(ti);
+            let crate::mapreduce::TaskState::Running { node: pnode, started, .. } =
+                *job.map_state(t)
+            else {
+                continue;
+            };
+            if pnode == node || job.spec_of(t).is_some() {
+                continue;
+            }
+            let elapsed = (view.now - started).as_secs_f64();
+            if elapsed <= threshold {
+                continue;
+            }
+            if best.map_or(true, |(e, _, _)| elapsed > e) {
+                best = Some((elapsed, job.id, t));
+            }
+        }
+    }
+    if let Some((_, job, task)) = best {
+        out.push(Action::LaunchSpeculativeMap { job, task, node });
     }
 }
 

@@ -37,8 +37,8 @@ use crate::sim::SimTime;
 
 use super::deadline_vc::{choose_target_with, job_demand};
 use super::{
-    Action, DeadlineVcScheduler, DvcTuning, EdfScheduler, FairScheduler, SchedView, Scheduler,
-    SchedulerKind,
+    speculative_fill, Action, DeadlineVcScheduler, DvcTuning, EdfScheduler, FairScheduler,
+    SchedView, Scheduler, SchedulerKind,
 };
 
 /// Build the naive reference implementation of `kind` (same policy, seed
@@ -174,6 +174,9 @@ impl Scheduler for NaiveGreedy {
         out.extend(greedy_fill_scan(view, node, &order, |_| {
             LocalityTier::Remote
         }));
+        // The LATE pass is shared with the indexed schedulers verbatim:
+        // it uses only plain scans, so it is honest reference code too.
+        speculative_fill(view, node, out);
     }
 }
 
@@ -220,6 +223,7 @@ impl Scheduler for NaiveDelay {
             }
         }
         out.extend(actions);
+        speculative_fill(view, node, out);
     }
 }
 
@@ -467,6 +471,7 @@ impl Scheduler for NaiveDeadlineVc {
         }
 
         out.extend(actions);
+        speculative_fill(view, node, out);
     }
 }
 

@@ -3,7 +3,8 @@
 //! (rate-multiplied Poisson plus a bursty regime).
 
 use super::{JobSpec, JobType, ALL_JOB_TYPES};
-use crate::config::SimConfig;
+use crate::config::{FailureModel, SimConfig};
+use crate::util::rng::mix64;
 use crate::util::Rng;
 
 /// Jobs per burst under [`ArrivalRegime::Burst`].
@@ -250,6 +251,62 @@ impl JobTrace {
     }
 }
 
+/// One PM crash or recovery in a pre-generated failure trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureEvent {
+    /// Absolute simulated time, seconds.
+    pub at_s: f64,
+    /// Physical machine index.
+    pub pm: usize,
+    /// `true` = the PM crashes at `at_s`; `false` = it recovers.
+    pub crash: bool,
+}
+
+/// Seed-stream tag for the failure trace (and the coordinator's failure
+/// RNG): keeps failure randomness fully separate from the workload and
+/// jitter streams, so turning crashes on never perturbs task durations.
+pub const FAILURE_STREAM_TAG: u64 = 0xfa11_0c0d_e5ee_d001;
+
+/// Pre-generate the PM crash/recover timeline for one scenario.
+///
+/// Each PM alternates exponential up-times (mean `fm.pm_mtbf_s`) and
+/// exponential down-times (mean `fm.pm_repair_s`), starting alive at t=0.
+/// Crashes are generated until `fm.trace_horizon_s`; every generated crash
+/// is always paired with its recovery even when the recovery lands past
+/// the horizon, so no PM stays dead forever. Events are sorted by
+/// `(time, pm)` — a total, reproducible order.
+///
+/// The RNG stream is derived from `seed` via a dedicated tag, NOT from the
+/// simulation's main RNG: with crashes off this function returns an empty
+/// vec without consuming any randomness, preserving byte-identity.
+pub fn failure_trace(fm: &FailureModel, seed: u64, pms: usize) -> Vec<FailureEvent> {
+    if !fm.crashes() {
+        return Vec::new();
+    }
+    let mut rng = Rng::new(mix64(seed ^ FAILURE_STREAM_TAG));
+    let mut out = Vec::new();
+    for pm in 0..pms {
+        let mut t = 0.0f64;
+        loop {
+            t += rng.exp(fm.pm_mtbf_s);
+            if t >= fm.trace_horizon_s {
+                break;
+            }
+            out.push(FailureEvent { at_s: t, pm, crash: true });
+            t += rng.exp(fm.pm_repair_s).max(1.0);
+            out.push(FailureEvent { at_s: t, pm, crash: false });
+        }
+    }
+    out.sort_by(|a, b| {
+        a.at_s
+            .partial_cmp(&b.at_s)
+            .unwrap()
+            .then(a.pm.cmp(&b.pm))
+            .then(a.crash.cmp(&b.crash))
+    });
+    out
+}
+
 /// Crude ideal-parallelism completion estimate used only to draw sane
 /// deadlines for generated traces (NOT the paper's predictor).
 ///
@@ -413,6 +470,41 @@ mod tests {
         let huge = gaps.iter().filter(|&&g| g > 20.0).count();
         assert!(tiny > gaps.len() / 2, "only {tiny} intra-burst gaps");
         assert!(huge > 20, "only {huge} inter-burst gaps");
+    }
+
+    #[test]
+    fn failure_trace_off_is_empty_and_free() {
+        assert!(failure_trace(&FailureModel::off(), 42, 20).is_empty());
+        assert!(failure_trace(&FailureModel::stragglers(), 42, 20).is_empty());
+    }
+
+    #[test]
+    fn failure_trace_well_formed() {
+        let fm = FailureModel::crash_high();
+        let tr = failure_trace(&fm, 7, 20);
+        assert!(!tr.is_empty());
+        // Deterministic.
+        assert_eq!(tr, failure_trace(&fm, 7, 20));
+        // Different seeds diverge.
+        assert_ne!(tr, failure_trace(&fm, 8, 20));
+        // Sorted by time.
+        assert!(tr.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+        // Per PM: strictly alternating crash/recover starting with a
+        // crash, times strictly increasing, every crash paired.
+        for pm in 0..20 {
+            let mine: Vec<_> = tr.iter().filter(|e| e.pm == pm).collect();
+            assert_eq!(mine.len() % 2, 0, "pm {pm} has an unpaired event");
+            let mut last = 0.0;
+            for (i, e) in mine.iter().enumerate() {
+                assert_eq!(e.crash, i % 2 == 0, "pm {pm} event {i} out of order");
+                assert!(e.at_s > last);
+                last = e.at_s;
+            }
+            // Crashes only within the horizon (recoveries may overflow).
+            for e in mine.iter().filter(|e| e.crash) {
+                assert!(e.at_s < fm.trace_horizon_s);
+            }
+        }
     }
 
     #[test]

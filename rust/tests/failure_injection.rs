@@ -1,0 +1,225 @@
+//! Failure-injection and speculative-execution tests: the edge cases the
+//! coordinator's attempt-epoch machinery exists for (crashes racing task
+//! completions, last-replica loss, speculation racing the primary copy),
+//! plus the two contracts every failure feature must respect —
+//!
+//! 1. `--failures off` is byte-identical to the failure-free simulator
+//!    (zero extra events, zero extra RNG draws), and
+//! 2. failure-injected runs stay bitwise deterministic at any worker
+//!    thread count (the failure RNG is its own seeded stream).
+
+use vcsched::config::{FailureModel, SimConfig};
+use vcsched::coordinator::{run_simulation, Report};
+use vcsched::harness::{aggregate, aggregates_csv, run_sweep, sweep_json, ScenarioGrid};
+use vcsched::scheduler::SchedulerKind;
+use vcsched::workloads::trace::JobTrace;
+use vcsched::workloads::{JobSpec, JobType};
+
+fn run(cfg: &SimConfig, kind: SchedulerKind, jobs: Vec<JobSpec>) -> Report {
+    run_simulation(cfg, kind, &JobTrace::new(jobs))
+}
+
+/// A job trace long enough that crashes land mid-flight: several
+/// deadline jobs arriving over a few minutes.
+fn crash_prone_jobs(n: usize) -> Vec<JobSpec> {
+    (0..n)
+        .map(|i| {
+            JobSpec::new(JobType::WordCount, 512.0)
+                .at(i as f64 * 30.0)
+                .with_deadline(1800.0)
+        })
+        .collect()
+}
+
+#[test]
+fn failures_off_is_byte_identical_to_default() {
+    // The default SimConfig already carries FailureModel::off(); setting
+    // it explicitly must not change a single bit of the report — the
+    // failure RNG stream is never drawn and no failure events exist.
+    let base = SimConfig::small();
+    let mut explicit = base.clone();
+    explicit.failures = FailureModel::off();
+    for kind in SchedulerKind::ALL {
+        let a = run(&base, kind, crash_prone_jobs(6));
+        let b = run(&explicit, kind, crash_prone_jobs(6));
+        assert_eq!(
+            a.to_json().render(),
+            b.to_json().render(),
+            "{}: --failures off must replay the seed path bit-for-bit",
+            kind.name()
+        );
+        assert_eq!(a.failures, Default::default(), "no counters without a model");
+    }
+}
+
+#[test]
+fn crashes_reexecute_lost_work_and_jobs_still_finish() {
+    // MTBF far below the run length: every PM crashes several times, so
+    // crashes inevitably land while maps/reduces are running and while
+    // MapDone events are already in the queue (the completion-vs-crash
+    // race the attempt-epoch guard resolves). Everything must still
+    // complete, with re-execution visible in the counters.
+    let mut cfg = SimConfig::small();
+    cfg.failures = FailureModel {
+        pm_mtbf_s: 300.0,
+        pm_repair_s: 60.0,
+        trace_horizon_s: 4.0 * 3600.0,
+        ..FailureModel::off()
+    };
+    cfg.validate().unwrap();
+    for kind in [SchedulerKind::Fair, SchedulerKind::DeadlineVc] {
+        let r = run(&cfg, kind, crash_prone_jobs(8));
+        assert_eq!(r.completed_jobs(), 8, "{}: crashes must not lose jobs", kind.name());
+        assert!(r.failures.pm_crashes > 0, "{}: MTBF 300s must crash", kind.name());
+        assert!(
+            r.failures.reexecuted_tasks > 0,
+            "{}: killed attempts must re-run (got {:?})",
+            kind.name(),
+            r.failures
+        );
+        // No speculation in this model: the spec counters stay zero.
+        assert_eq!(r.failures.speculative_launches, 0);
+        assert_eq!(r.failures.speculative_wins, 0);
+    }
+}
+
+#[test]
+fn last_replica_loss_is_rereplicated_and_survivable() {
+    // Replication 1 + guaranteed crashes: any crashed PM that holds
+    // blocks takes their *only* replica down, forcing the restore-from-
+    // source path. Jobs must still complete and the loss must be counted.
+    let mut cfg = SimConfig::small();
+    cfg.replication = 1;
+    cfg.failures = FailureModel {
+        pm_mtbf_s: 240.0,
+        pm_repair_s: 60.0,
+        trace_horizon_s: 4.0 * 3600.0,
+        ..FailureModel::off()
+    };
+    cfg.validate().unwrap();
+    let r = run(&cfg, SchedulerKind::DeadlineVc, crash_prone_jobs(8));
+    assert_eq!(r.completed_jobs(), 8, "replica loss must not lose jobs");
+    assert!(r.failures.pm_crashes > 0);
+    assert!(
+        r.failures.blocks_lost > 0,
+        "replication 1 + crashes must hit the last-replica path ({:?})",
+        r.failures
+    );
+
+    // With the paper's replication 3 on the same trace, re-replication
+    // should carry most blocks without touching the source.
+    let mut cfg3 = cfg.clone();
+    cfg3.replication = 3;
+    let r3 = run(&cfg3, SchedulerKind::DeadlineVc, crash_prone_jobs(8));
+    assert_eq!(r3.completed_jobs(), 8);
+    assert!(
+        r3.failures.blocks_relocated > 0,
+        "replication 3 must re-replicate off dead nodes ({:?})",
+        r3.failures
+    );
+}
+
+#[test]
+fn speculation_races_resolve_exactly_once() {
+    // Heavy stragglers + speculation: backup copies race their primaries
+    // in both directions (spec wins some, primary wins some — both land
+    // as MapDone events that may share a timestamp). The accounting must
+    // balance: every race kills exactly one loser, so kills never exceed
+    // launches, wins never exceed kills, and no task double-completes
+    // (completed_jobs and per-job map counts stay exact).
+    let mut cfg = SimConfig::small();
+    cfg.failures = FailureModel {
+        straggler_prob: 0.30,
+        straggler_alpha: 1.1,
+        straggler_cap: 10.0,
+        speculation: true,
+        spec_slowdown: 1.2,
+        spec_min_finished: 1,
+        ..FailureModel::off()
+    };
+    cfg.validate().unwrap();
+    for kind in SchedulerKind::ALL {
+        let r = run(&cfg, kind, crash_prone_jobs(8));
+        assert_eq!(r.completed_jobs(), 8, "{}", kind.name());
+        let f = &r.failures;
+        assert!(
+            f.speculative_launches > 0,
+            "{}: 30% stragglers at 1.2x trigger must speculate ({f:?})",
+            kind.name()
+        );
+        assert!(f.speculative_wins <= f.speculative_kills, "{}: {f:?}", kind.name());
+        assert!(f.speculative_kills <= f.speculative_launches, "{}: {f:?}", kind.name());
+        // No crashes in this model.
+        assert_eq!(f.pm_crashes, 0);
+        assert_eq!(f.reexecuted_tasks, 0);
+        for j in &r.jobs {
+            assert_eq!(
+                j.local_maps + j.rack_maps + j.remote_maps,
+                j.maps,
+                "{}: a speculation race must record exactly one finish per map",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn crashes_plus_speculation_compose() {
+    // The full fig7 regime: crashes, stragglers and speculation at once.
+    // Crashes can kill primaries (promoting the spec), kill specs, and
+    // land on the same heartbeat as a completion — composing all epoch
+    // paths. The run must converge with exact job accounting.
+    let mut cfg = SimConfig::small();
+    cfg.failures = FailureModel::crash_high().with_speculation();
+    cfg.validate().unwrap();
+    for kind in [SchedulerKind::Fair, SchedulerKind::DeadlineVc] {
+        let r = run(&cfg, kind, crash_prone_jobs(10));
+        assert_eq!(r.completed_jobs(), 10, "{}", kind.name());
+        assert!(r.failures.pm_crashes > 0, "{}", kind.name());
+        for j in &r.jobs {
+            assert_eq!(j.local_maps + j.rack_maps + j.remote_maps, j.maps);
+        }
+    }
+}
+
+#[test]
+fn failure_runs_are_deterministic_and_repeatable() {
+    // Same config, same trace -> bitwise-identical report, failure
+    // counters included: the failure RNG is a pure function of cfg.seed.
+    let mut cfg = SimConfig::small();
+    cfg.failures = FailureModel::crash_high().with_speculation();
+    let a = run(&cfg, SchedulerKind::DeadlineVc, crash_prone_jobs(8));
+    let b = run(&cfg, SchedulerKind::DeadlineVc, crash_prone_jobs(8));
+    assert_eq!(a.to_json().render(), b.to_json().render());
+    assert_eq!(a.failures, b.failures);
+}
+
+#[test]
+fn failure_sweep_is_thread_count_invariant() {
+    // The sweep determinism contract extends to the failures axis: the
+    // aggregated JSON/CSV artifacts are byte-identical at 1 and 2 worker
+    // threads even with crashes and speculation injected.
+    let mut g = ScenarioGrid::quick();
+    g.jobs_per_scenario = 3;
+    g.scales = vec![16.0];
+    g.mixes.truncate(1);
+    g.failures = vec![
+        FailureModel::off(),
+        FailureModel::crash_low(),
+        FailureModel::crash_low().with_speculation(),
+    ];
+    let render = |threads: usize| {
+        let results = run_sweep(&g, threads);
+        let groups = aggregate(&results);
+        (
+            sweep_json(&g, &results, &groups).render(),
+            aggregates_csv(&groups),
+        )
+    };
+    let (json1, csv1) = render(1);
+    let (json2, csv2) = render(2);
+    assert_eq!(json1, json2, "sweep JSON must not depend on thread count");
+    assert_eq!(csv1, csv2, "sweep CSV must not depend on thread count");
+    assert!(json1.contains("\"failures\":"));
+    assert!(csv1.contains(",crash-low,") || csv1.contains(",crash-low\n"));
+}
