@@ -15,6 +15,14 @@
 //! full 2000-job scenario is `SIMCORE_JOBS=2000`, where the naive
 //! baseline's O(jobs × tasks) heartbeats and O(jobs)-per-event `all_done`
 //! scans bite hardest).
+//!
+//! `SIMCORE_XL=1` additionally runs the `stress-xl` cell (2000 PMs /
+//! 4000 nodes / 16-pod fat-tree, 50k jobs; `SIMCORE_XL_JOBS` truncates)
+//! through the indexed loop only — the naive reference would take hours
+//! there, which is the point — and **hard-asserts** a wall-clock and
+//! peak-RSS budget per scheduler. The budgets are deliberately loose
+//! (shared-runner noise) but an O(jobs) regression in the per-event path
+//! blows through them by an order of magnitude.
 
 use std::time::Instant;
 
@@ -24,6 +32,106 @@ use vcsched::predictor::NativePredictor;
 use vcsched::scheduler::reference::build_reference;
 use vcsched::util::benchkit::Table;
 use vcsched::util::json::Json;
+
+/// Peak resident set size of this process in MiB (`VmHWM` from
+/// `/proc/self/status`); 0.0 where procfs is unavailable (non-Linux).
+fn peak_rss_mib() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+/// The stress-xl scaling guard: run each scheduler's cell through the
+/// indexed loop under a hard wall-clock + peak-RSS budget and return the
+/// JSON points. Budgets scale linearly with the truncated job count so
+/// the CI smoke (`SIMCORE_XL_JOBS=60`) and the full 50k-job run assert
+/// the same per-job envelope.
+fn run_xl() -> Json {
+    let grid_full = ScenarioGrid::stress_xl();
+    let jobs: usize = std::env::var("SIMCORE_XL_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(grid_full.jobs_per_scenario);
+    let mut grid = grid_full;
+    grid.jobs_per_scenario = jobs;
+    // Per-job envelope: 12 ms wall and 40 KiB resident per job, plus a
+    // fixed floor for the 4000-node cluster itself. At 50k jobs that is
+    // a 600 s / ~2 GiB ceiling; the indexed loop runs far under it, an
+    // O(jobs)-per-event regression far over.
+    let wall_budget_s = 30.0 + jobs as f64 * 0.012;
+    let rss_budget_mib = 512.0 + jobs as f64 * 40.0 / 1024.0;
+    println!(
+        "\nsimcore-xl: stress-xl scenario ({} PMs, {}, {jobs} jobs) — budgets: \
+         {wall_budget_s:.0}s wall, {rss_budget_mib:.0} MiB peak RSS",
+        grid.pm_counts[0],
+        grid.topologies[0].label(),
+    );
+
+    let mut t = Table::new(&["scheduler", "events", "wall", "ev/s", "peak rss"]);
+    let mut points = Json::arr();
+    for sc in &grid.scenarios() {
+        let cfg = sc.sim_config();
+        let trace = sc.job_trace(&grid, &cfg);
+        let mut sched = sc.scheduler.build(&cfg);
+        let mut pred = NativePredictor::new();
+        let mut world = World::new(cfg, trace);
+        let t0 = Instant::now();
+        world.run(sched.as_mut(), &mut pred);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let m = world.into_metrics(sc.scheduler.name());
+        let rss_mib = peak_rss_mib();
+        let eps = m.events as f64 / wall_s.max(1e-9);
+        t.row(&[
+            sc.scheduler.name().to_string(),
+            m.events.to_string(),
+            format!("{wall_s:.3}s"),
+            format!("{eps:.0}"),
+            format!("{rss_mib:.0} MiB"),
+        ]);
+        points = points.push(
+            Json::obj()
+                .set("scheduler", sc.scheduler.name())
+                .set("jobs", jobs)
+                .set("events", m.events)
+                .set("wall_s", wall_s)
+                .set("events_per_sec", eps)
+                .set("peak_rss_mib", rss_mib)
+                .set("wall_budget_s", wall_budget_s)
+                .set("rss_budget_mib", rss_budget_mib),
+        );
+        // Hard gates: the whole point of the xl cell.
+        assert!(
+            wall_s <= wall_budget_s,
+            "{}: stress-xl wall clock {wall_s:.1}s exceeds the {wall_budget_s:.0}s \
+             budget — a per-event cost grew with job count",
+            sc.scheduler.name()
+        );
+        assert!(
+            rss_mib <= rss_budget_mib,
+            "{}: stress-xl peak RSS {rss_mib:.0} MiB exceeds the {rss_budget_mib:.0} \
+             MiB budget",
+            sc.scheduler.name()
+        );
+    }
+    t.print();
+    Json::obj()
+        .set("jobs", jobs)
+        .set("wall_budget_s", wall_budget_s)
+        .set("rss_budget_mib", rss_budget_mib)
+        .set("points", points)
+}
 
 fn main() {
     let jobs: usize = std::env::var("SIMCORE_JOBS")
@@ -129,15 +237,26 @@ fn main() {
     }
     t.print();
 
-    let doc = Json::obj()
+    // The xl scaling guard is opt-in (SIMCORE_XL=1): the full 50k-job
+    // cell is a minutes-long run; CI smokes it with SIMCORE_XL_JOBS=60.
+    let xl = if std::env::var("SIMCORE_XL").as_deref() == Ok("1") {
+        Some(run_xl())
+    } else {
+        None
+    };
+
+    let mut doc = Json::obj()
         .set("bench", "simcore")
         .set("scenario", "stress")
         .set("pms", grid.pm_counts[0])
         .set("topology", grid.topologies[0].label().as_str())
         .set("jobs", jobs)
         .set("headline_speedup", headline_speedup)
-        .set("points", points)
-        .render();
+        .set("points", points);
+    if let Some(xl) = xl {
+        doc = doc.set("stress_xl", xl);
+    }
+    let doc = doc.render();
     let out = vcsched::util::repo_path("BENCH_simcore.json");
     std::fs::write(&out, doc).expect("write BENCH_simcore.json");
     println!("\nwrote {}", out.display());

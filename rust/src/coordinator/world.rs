@@ -80,6 +80,16 @@ pub struct World {
     inter_mb: Vec<f64>,
     /// Pooled scheduler action buffer, cleared and reused on every event.
     action_buf: Vec<Action>,
+    /// Jobs mutated since the last scheduler callback, in mutation order
+    /// (deduplicated via `dirty_flags`). Flushed as `on_job_updated`
+    /// notifications immediately before every scheduler callback, so a
+    /// scheduler's persistent indexes always see the current job state
+    /// without scanning the job table. Over-notification is part of the
+    /// callback contract — sites mark liberally.
+    dirty: Vec<JobId>,
+    dirty_flags: Vec<bool>,
+    /// `on_sim_start` has been delivered (first `handle` call).
+    started: bool,
     exec: Option<ExecEngine>,
     /// Cross-rack map-input fetches currently in flight — the load on the
     /// topology's shared core link. A fetch starting while `f` flows are
@@ -148,6 +158,9 @@ impl World {
             naive_all_done: false,
             inter_mb: Vec::new(),
             action_buf: Vec::new(),
+            dirty: Vec::new(),
+            dirty_flags: Vec::new(),
+            started: false,
             exec,
             cross_rack_flows: 0,
             failure_rng: Rng::new(mix64(cfg.seed ^ FAILURE_STREAM_TAG)),
@@ -256,12 +269,55 @@ impl World {
         );
     }
 
+    /// Record that `job`'s scheduler-visible state changed (task counts,
+    /// phase, allocation, …) so the next [`Self::flush_dirty`] re-syncs
+    /// the scheduler's persistent indexes for it.
+    fn mark_dirty(&mut self, job: JobId) {
+        let j = job.idx();
+        if self.dirty_flags.len() <= j {
+            self.dirty_flags.resize(self.jobs.len().max(j + 1), false);
+        }
+        if !self.dirty_flags[j] {
+            self.dirty_flags[j] = true;
+            self.dirty.push(job);
+        }
+    }
+
+    /// Deliver one `on_job_updated` per job mutated since the previous
+    /// scheduler callback, in mutation order. Called immediately before
+    /// every scheduler callback: the scheduler thereby observes every
+    /// state change exactly once, without ever scanning the job table.
+    fn flush_dirty(&mut self, scheduler: &mut dyn Scheduler) {
+        if self.dirty.is_empty() {
+            return;
+        }
+        let dirty = std::mem::take(&mut self.dirty);
+        for &j in &dirty {
+            self.dirty_flags[j.idx()] = false;
+        }
+        {
+            let view = self.view();
+            for &j in &dirty {
+                scheduler.on_job_updated(&view, j);
+            }
+        }
+        // Hand the drained buffer back to the pool.
+        self.dirty = dirty;
+        self.dirty.clear();
+    }
+
     fn handle(
         &mut self,
         ev: Event,
         scheduler: &mut dyn Scheduler,
         predictor: &mut dyn Predictor,
     ) {
+        if !self.started {
+            // First event of this World: let the scheduler drop any
+            // persistent state carried over from a previous run.
+            self.started = true;
+            scheduler.on_sim_start(&self.view());
+        }
         match ev {
             Event::JobArrival(idx) => {
                 let spec = self.pending_specs[idx as usize].clone();
@@ -297,6 +353,7 @@ impl World {
                 }
                 let mut actions = std::mem::take(&mut self.action_buf);
                 actions.clear();
+                self.flush_dirty(scheduler);
                 scheduler.on_job_added(&self.view(), id, predictor, &mut actions);
                 self.predictor_calls_estimate += 1;
                 self.apply_actions(&actions);
@@ -310,6 +367,7 @@ impl World {
                     self.heartbeats += 1;
                     let mut actions = std::mem::take(&mut self.action_buf);
                     actions.clear();
+                    self.flush_dirty(scheduler);
                     scheduler.on_heartbeat(&self.view(), node, predictor, &mut actions);
                     self.apply_actions(&actions);
                     self.action_buf = actions;
@@ -402,8 +460,10 @@ impl World {
                 if let Some(exec) = &mut self.exec {
                     exec.run_map_task(job, task, &self.jobs[job.idx()]);
                 }
+                self.mark_dirty(job);
                 let mut actions = std::mem::take(&mut self.action_buf);
                 actions.clear();
+                self.flush_dirty(scheduler);
                 scheduler.on_task_finished(&self.view(), job, predictor, &mut actions);
                 self.predictor_calls_estimate += 1;
                 self.apply_actions(&actions);
@@ -446,8 +506,10 @@ impl World {
                     self.done_jobs += 1;
                     self.record_job(job);
                 }
+                self.mark_dirty(job);
                 let mut actions = std::mem::take(&mut self.action_buf);
                 actions.clear();
+                self.flush_dirty(scheduler);
                 scheduler.on_task_finished(&self.view(), job, predictor, &mut actions);
                 self.predictor_calls_estimate += 1;
                 self.apply_actions(&actions);
@@ -474,6 +536,7 @@ impl World {
                     let js = &mut self.jobs[task.job.idx()];
                     if js.map_state(task.id).is_awaiting() {
                         js.mark_map_await_cancelled(task.id);
+                        self.mark_dirty(task.job);
                     }
                     return;
                 }
@@ -529,6 +592,9 @@ impl World {
             if self.jobs[ji].is_done() {
                 continue;
             }
+            // Any live job may lose attempts, outputs or awaits below;
+            // over-notifying the unaffected ones is harmless.
+            self.mark_dirty(JobId(ji as u32));
             for ti in 0..self.jobs[ji].total_maps() {
                 let t = TaskId(ti);
                 match *self.jobs[ji].map_state(t) {
@@ -581,6 +647,7 @@ impl World {
             let js = &mut self.jobs[tref.job.idx()];
             if js.map_state(tref.id).is_awaiting() {
                 js.mark_map_await_cancelled(tref.id);
+                self.mark_dirty(tref.job);
             }
         }
         self.cluster.crash_pm(pm);
@@ -650,6 +717,7 @@ impl World {
                     let js = &mut self.jobs[job.idx()];
                     debug_assert!(js.map_is_local(task, target));
                     js.mark_map_awaiting(task, target);
+                    self.mark_dirty(job);
                     let tref = TaskRef::map(job, task.0);
                     self.cm
                         .enqueue_assign(self.cluster.pm_of(target), target, tref);
@@ -663,6 +731,7 @@ impl World {
                     let tref = TaskRef::map(job, task.0);
                     self.cm.cancel_task(tref);
                     self.jobs[job.idx()].mark_map_await_cancelled(task);
+                    self.mark_dirty(job);
                 }
                 Action::SetAlloc {
                     job,
@@ -672,6 +741,7 @@ impl World {
                     let js = &mut self.jobs[job.idx()];
                     js.alloc_map_slots = map_slots;
                     js.alloc_reduce_slots = reduce_slots;
+                    self.mark_dirty(job);
                 }
             }
         }
@@ -700,6 +770,7 @@ impl World {
                     let js = &mut self.jobs[g.task.job.idx()];
                     if js.map_state(g.task.id).is_awaiting() {
                         js.mark_map_await_cancelled(g.task.id);
+                        self.mark_dirty(g.task.job);
                     }
                 }
             }
@@ -736,6 +807,7 @@ impl World {
     ) {
         let now = self.now();
         let attempt = self.jobs[job.idx()].mark_map_launched(task, node, tier, now);
+        self.mark_dirty(job);
         if attempt > 1 {
             // Epoch 1 is the first execution; anything later re-runs work
             // a crash destroyed (killed attempt or lost output).
@@ -763,6 +835,7 @@ impl World {
         let now = self.now();
         let tier = self.jobs[job.idx()].map_tier(task, node, &self.cluster);
         let attempt = self.jobs[job.idx()].begin_spec_map(task, node, tier, now);
+        self.mark_dirty(job);
         self.cluster.vm_mut(node).busy_map += 1;
         self.fail_stats.speculative_launches += 1;
         let block_mb = self.jobs[job.idx()].block_mb[task.0 as usize];
@@ -779,6 +852,7 @@ impl World {
     fn launch_reduce(&mut self, job: JobId, task: TaskId, node: NodeId) {
         let now = self.now();
         let attempt = self.jobs[job.idx()].mark_reduce_launched(task, node, now);
+        self.mark_dirty(job);
         if attempt > 1 {
             self.fail_stats.reexecuted_tasks += 1;
         }

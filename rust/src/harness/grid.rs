@@ -137,6 +137,34 @@ impl ScenarioGrid {
         }
     }
 
+    /// The extra-large stress grid (`--grid stress-xl`, `--preset
+    /// stress-xl`, `benches/simcore.rs` under `SIMCORE_XL=1`): one
+    /// scenario per scheduler at datacenter scale — 2000 PMs (4000
+    /// nodes) on a 16-pod fat-tree and 50,000 Poisson jobs at a 0.1 s
+    /// mean gap. Everything per-event must be O(log jobs) or better for
+    /// this to finish inside the bench budget: the persistent scheduling
+    /// indexes, the delta Eq. 10 reallocation, the claim ledger, the
+    /// heartbeat slot overlay. CI smokes a truncated cell (`--jobs 60`);
+    /// the full cell runs under the bench's wall-clock/RSS budget.
+    pub fn stress_xl() -> Self {
+        Self {
+            name: "stress-xl".to_string(),
+            schedulers: vec![SchedulerKind::Fair, SchedulerKind::DeadlineVc],
+            mixes: vec![JobMix::Mixed],
+            pm_counts: vec![2000],
+            profiles: vec![PmProfile::Uniform],
+            topologies: vec![Topology::FatTree(16)],
+            arrivals: vec![Arrival::STEADY],
+            scales: vec![100.0],
+            failures: vec![FailureModel::off()],
+            seed_replicates: 1,
+            jobs_per_scenario: 50_000,
+            mean_gap_s: 0.1,
+            deadline_factor: (1.6, 3.0),
+            grid_seed: 42,
+        }
+    }
+
     /// A small smoke grid for tests and the scaling bench: 2 schedulers x
     /// 2 mixes x small cluster x 2 seed replicates = 8 quick scenarios.
     pub fn quick() -> Self {

@@ -103,12 +103,13 @@ pub struct Preset {
 }
 
 /// Every preset name, for help text and error messages.
-pub const PRESET_NAMES: [&str; 5] = [
+pub const PRESET_NAMES: [&str; 6] = [
     "fig4-throughput",
     "fig5-locality",
     "fig6-deadline-miss",
     "fig7-failures",
     "stress",
+    "stress-xl",
 ];
 
 /// Resolve a preset by name into its pinned grid and comparison spec.
@@ -222,6 +223,20 @@ pub fn preset(name: &str) -> Option<(ScenarioGrid, Preset)> {
                             saturating jobs per scheduler (fair vs \
                             deadline_vc throughput; events/sec guard — see \
                             benches/simcore.rs)",
+                metric: HeadlineMetric::ThroughputJph,
+                baseline: SchedulerKind::Fair,
+                candidate: SchedulerKind::DeadlineVc,
+                paper_gain: None,
+            },
+        )),
+        "stress-xl" => Some((
+            ScenarioGrid::stress_xl(),
+            Preset {
+                name: "stress-xl",
+                describes: "datacenter-scale stress: 2000 PMs x 16-pod \
+                            fat-tree x 50k saturating jobs per scheduler \
+                            (persistent-index / delta-alloc scaling guard — \
+                            see benches/simcore.rs, SIMCORE_XL=1)",
                 metric: HeadlineMetric::ThroughputJph,
                 baseline: SchedulerKind::Fair,
                 candidate: SchedulerKind::DeadlineVc,

@@ -12,8 +12,8 @@
 //! Common flags: --sched <fifo|fair|delay|edf|deadline_vc> --seed N
 //!   --pms N --scale MB_PER_GB --jobs N --xla (use the PJRT predictor)
 //!   --json (machine-readable output)
-//! Sweep flags: --grid <default|quick|stress> --preset <fig4-throughput|
-//!   fig5-locality|fig6-deadline-miss|fig7-failures|stress> --threads N
+//! Sweep flags: --grid <default|quick|stress|stress-xl> --preset <fig4-throughput|
+//!   fig5-locality|fig6-deadline-miss|fig7-failures|stress|stress-xl> --threads N
 //!   --seeds N --mix M --profile <uniform|split-2x|long-tail>[,..]
 //!   --topology <flat|racks-N|fat-tree-N>[,..] --arrival
 //!   <steady|burst[-xRATE]>[,..] --failures
@@ -251,7 +251,10 @@ fn cmd_sweep(args: &Args) {
             "default" => ScenarioGrid::default_grid(),
             "quick" => ScenarioGrid::quick(),
             "stress" => ScenarioGrid::stress(),
-            other => panic!("unknown grid {other:?} (expected default|quick|stress)"),
+            "stress-xl" => ScenarioGrid::stress_xl(),
+            other => {
+                panic!("unknown grid {other:?} (expected default|quick|stress|stress-xl)")
+            }
         };
         (g, None)
     };
@@ -583,8 +586,9 @@ fn print_help() {
          usage: vcsched <simulate|compare|fig2|fig3|table2|throughput|sweep|gantt|export> [flags]\n\
          flags: --sched K --a K --b K --seed N --pms N --jobs N --runs N\n\
          \x20      --scale MB_PER_GB --xla --json\n\
-         sweep: --grid <default|quick|stress> --preset <fig4-throughput|fig5-locality|\n\
-         \x20      fig6-deadline-miss|fig7-failures|stress> --threads N --seeds N\n\
+         sweep: --grid <default|quick|stress|stress-xl> --preset <fig4-throughput|\n\
+         \x20      fig5-locality|fig6-deadline-miss|fig7-failures|stress|stress-xl>\n\
+         \x20      --threads N --seeds N\n\
          \x20      --mix <mixed|TYPE> --sched K[,K..]\n\
          \x20      --profile <uniform|split-2x|long-tail>[,..]\n\
          \x20      --topology <flat|racks-N|fat-tree-N>[,..]\n\

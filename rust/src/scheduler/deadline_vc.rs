@@ -24,17 +24,40 @@
 //! `(n_m, n_r)` come from the Resource Predictor (Eq. 10) and are
 //! recomputed after every task completion (Alg. 2 l.17-20) over the
 //! *remaining* work and *remaining* deadline.
+//!
+//! # Delta reallocation
+//!
+//! The naive Alg. 2 loop re-solves Eq. 10 for **every** active deadlined
+//! job on every arrival/completion — O(jobs) per event, the last
+//! per-event O(jobs) cost in the simulator. Here the recompute set is
+//! instead: the triggering job, jobs whose demand inputs changed since
+//! the last event (`on_job_updated` dirt), and jobs whose *next-change
+//! bound* expired. The bound exploits the closed form of Eq. 10: with
+//! demand inputs fixed, `n_m = ceil(√A(√A+√B) / C)` only grows as the
+//! remaining deadline `C = D_rem − K` shrinks, so the next output change
+//! happens exactly when the remaining deadline crosses
+//! `K + √A(√A+√B)/n_m` (and symmetrically for `n_r`, and `K` itself for
+//! the infeasibility transition). Bounds sit in a lazy min-heap with a
+//! conservative 2 ms margin — recomputing early is always harmless
+//! because unchanged allocations are **suppressed** (no `SetAlloc`
+//! emitted), which keeps the world's stored `alloc_*` bit-identical to
+//! the naive full recompute at every event. The differential tests
+//! compare action streams modulo that suppression and reports bit for
+//! bit.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use crate::cluster::NodeId;
 use crate::config::SimConfig;
 use crate::mapreduce::{JobId, JobState, TaskId};
-use crate::predictor::{JobDemand, Predictor};
+use crate::predictor::{abc, JobDemand, Predictor, SlotDemand};
 use crate::sim::SimTime;
 
 use super::edf::EdfKeys;
 use super::{
     next_unclaimed_any, next_unclaimed_local, next_unclaimed_rack, speculative_fill, Action,
-    ClaimLedger, EdfScheduler, SchedView, Scheduler, SchedulerKind,
+    ClaimLedger, EdfScheduler, OrderIndex, SchedView, Scheduler, SchedulerKind,
 };
 
 /// Tunable policy knobs — every mechanism of the proposed scheduler can
@@ -69,6 +92,73 @@ impl Default for DvcTuning {
     }
 }
 
+/// The persistent scheduling-order key: cold jobs first (`false < true`),
+/// then EDF `(deadline, submitted)`; `JobId` breaks remaining ties inside
+/// the index. Reproduces [`DeadlineVcScheduler::job_order`]'s stable
+/// cold-first partition of the EDF sort exactly.
+pub(crate) type DvcKey = (bool, SimTime, SimTime);
+
+pub(crate) fn dvc_key(job: &JobState) -> DvcKey {
+    (
+        !job.cold(),
+        job.deadline_at().unwrap_or(SimTime(u64::MAX)),
+        job.submitted,
+    )
+}
+
+fn active_key(job: &JobState) -> Option<DvcKey> {
+    if job.is_done() {
+        None
+    } else {
+        Some(dvc_key(job))
+    }
+}
+
+/// Generation-stamped per-node used-slot overlay for one heartbeat: the
+/// free-map-slot ledger is `vm.free_map_slots() − used(n)`, so starting a
+/// round is an O(1) generation bump instead of the former O(nodes)
+/// rebuild of a dense free vector.
+#[derive(Debug, Default)]
+struct SlotOverlay {
+    gen: u64,
+    stamps: Vec<u64>,
+    used: Vec<u32>,
+}
+
+impl SlotOverlay {
+    fn begin(&mut self, nodes: usize) {
+        self.gen += 1;
+        if self.stamps.len() < nodes {
+            self.stamps.resize(nodes, 0);
+            self.used.resize(nodes, 0);
+        }
+    }
+
+    fn used(&self, i: usize) -> u32 {
+        if self.stamps[i] == self.gen {
+            self.used[i]
+        } else {
+            0
+        }
+    }
+
+    fn take(&mut self, i: usize) {
+        if self.stamps[i] != self.gen {
+            self.stamps[i] = self.gen;
+            self.used[i] = 0;
+        }
+        self.used[i] += 1;
+    }
+}
+
+/// Free map slots on `n` right now, net of this heartbeat's claims.
+fn free_at(view: &SchedView, overlay: &SlotOverlay, n: NodeId) -> u32 {
+    view.cluster
+        .vm(n)
+        .free_map_slots()
+        .saturating_sub(overlay.used(n.idx()))
+}
+
 #[derive(Debug)]
 pub struct DeadlineVcScheduler {
     pub tuning: DvcTuning,
@@ -85,13 +175,22 @@ pub struct DeadlineVcScheduler {
     /// Clamp predictor answers to the cluster's physical slot totals.
     max_map_slots: u32,
     max_reduce_slots: u32,
+    // ---- persistent scheduling order ----
+    index: OrderIndex<DvcKey>,
+    covered: usize,
+    // ---- delta Eq. 10 state ----
+    /// Jobs whose demand inputs changed since the last alloc event.
+    dirty_list: Vec<JobId>,
+    dirty_flag: Vec<bool>,
+    /// Lazy min-heap of next-change bounds; an entry is live iff it
+    /// matches `bound_of` for its job.
+    bound_heap: BinaryHeap<(Reverse<SimTime>, JobId)>,
+    bound_of: Vec<Option<SimTime>>,
+    /// Pooled candidate job indices for one recompute.
+    cand: Vec<u32>,
     // ---- pooled per-event buffers (allocation-free at steady state) ----
     claims: ClaimLedger,
-    keys: EdfKeys,
-    order: Vec<usize>,
-    order_tmp: Vec<usize>,
-    /// Per-node free-map-slot ledger for the current heartbeat.
-    free: Vec<u32>,
+    overlay: SlotOverlay,
     alloc_ids: Vec<JobId>,
     alloc_demands: Vec<JobDemand>,
 }
@@ -139,6 +238,55 @@ pub(crate) fn choose_target_with(
         })
 }
 
+/// Earliest future instant at which `job`'s *clamped* Eq. 10 output
+/// could differ from the value just computed, assuming its demand inputs
+/// stay fixed (any input change re-queues the job via `on_job_updated`).
+/// `None` means the output can never change again without an input
+/// change (infeasible, or pinned at the `(max, max)` clamp).
+fn next_change_bound(
+    job: &JobState,
+    d: &JobDemand,
+    s: SlotDemand,
+    m_out: u32,
+    r_out: u32,
+    max_m: u32,
+    max_r: u32,
+) -> Option<SimTime> {
+    if s.infeasible {
+        // C only shrinks with time: infeasible stays infeasible and the
+        // stored (max, max) never moves.
+        return None;
+    }
+    if m_out == max_m && r_out == max_r {
+        // Both components already pinned at the clamp; the infeasibility
+        // transition would emit the same (max, max).
+        return None;
+    }
+    let deadline_at = job.deadline_at()?;
+    let (a, b, _) = abc(d);
+    let (a, b) = (a.max(0.0), b.max(0.0));
+    let k = d.map_tasks * d.reduce_tasks * d.t_shuffle;
+    let (ra, rb) = (a.sqrt(), b.sqrt());
+    let sum = ra + rb;
+    // The output changes when the remaining deadline drops below the
+    // largest of these thresholds (C = remaining − K):
+    let mut r_thresh = k; // infeasibility: C reaches 0
+    if a > 0.0 && m_out < max_m {
+        // ceil(ra·sum / C) increments when C < ra·sum / n_m.
+        r_thresh = r_thresh.max(k + ra * sum / f64::from(s.map_slots.max(1)));
+    }
+    if b > 0.0 && r_out < max_r {
+        r_thresh = r_thresh.max(k + rb * sum / f64::from(s.reduce_slots.max(1)));
+    }
+    // Conservative margin (2 ms ≫ the f64 rounding of the inversion):
+    // waking early costs one suppressed recompute; waking late would let
+    // the stored allocation diverge from the naive full recompute.
+    let thresh_ms = (r_thresh * 1000.0).ceil().max(0.0) as u64;
+    Some(SimTime(
+        deadline_at.0.saturating_sub(thresh_ms).saturating_sub(2),
+    ))
+}
+
 impl DeadlineVcScheduler {
     pub fn new(cfg: &SimConfig) -> Self {
         Self::with_tuning(cfg, DvcTuning::default())
@@ -153,39 +301,112 @@ impl DeadlineVcScheduler {
             max_map_slots: cfg.total_map_slots(),
             max_reduce_slots: cfg.total_reduce_slots(),
             tuning,
+            index: OrderIndex::new(),
+            covered: 0,
+            dirty_list: Vec::new(),
+            dirty_flag: Vec::new(),
+            bound_heap: BinaryHeap::new(),
+            bound_of: Vec::new(),
+            cand: Vec::new(),
             claims: ClaimLedger::new(),
-            keys: Vec::new(),
-            order: Vec::new(),
-            order_tmp: Vec::new(),
-            free: Vec::new(),
+            overlay: SlotOverlay::default(),
             alloc_ids: Vec::new(),
             alloc_demands: Vec::new(),
         }
     }
 
-    /// Recompute `(n_m, n_r)` for every active deadlined job — one batched
-    /// predictor call (one PJRT execution on the XLA backend). This runs
-    /// on every job arrival and task completion, so the id/demand staging
-    /// buffers are pooled on the scheduler.
+    fn reset(&mut self) {
+        self.index.clear();
+        self.covered = 0;
+        self.dirty_list.clear();
+        self.dirty_flag.clear();
+        self.bound_heap.clear();
+        self.bound_of.clear();
+        self.awaiting_since.clear();
+    }
+
+    /// Absorb jobs that arrived since the last callback; drop all state
+    /// when the world shrank (scheduler reuse across Worlds).
+    fn sync(&mut self, view: &SchedView) {
+        if self.covered > view.jobs.len() {
+            self.reset();
+        }
+        if self.dirty_flag.len() < view.jobs.len() {
+            self.dirty_flag.resize(view.jobs.len(), false);
+            self.bound_of.resize(view.jobs.len(), None);
+        }
+        for job in &view.jobs[self.covered..] {
+            self.index.set_key(job.id, active_key(job));
+        }
+        self.covered = view.jobs.len();
+    }
+
+    /// Delta Eq. 10 (see module docs): recompute `(n_m, n_r)` only for
+    /// the triggering job, dirty jobs, and jobs whose next-change bound
+    /// expired — in ascending job order, matching the naive full sweep —
+    /// and emit `SetAlloc` only when the clamped value actually moved.
     fn recompute_allocs(
         &mut self,
         view: &SchedView,
+        trigger: JobId,
         predictor: &mut dyn Predictor,
         out: &mut Vec<Action>,
     ) {
+        self.sync(view);
+        let now = view.now;
+        self.cand.clear();
+        if trigger.idx() < view.jobs.len() {
+            self.cand.push(trigger.0);
+        }
+        for j in self.dirty_list.drain(..) {
+            if let Some(f) = self.dirty_flag.get_mut(j.idx()) {
+                *f = false;
+            }
+            self.cand.push(j.0);
+        }
+        while let Some(&(Reverse(t), j)) = self.bound_heap.peek() {
+            if t > now {
+                break;
+            }
+            self.bound_heap.pop();
+            // Live entry (not superseded by a later re-bound)?
+            if self.bound_of.get(j.idx()).copied().flatten() == Some(t) {
+                self.bound_of[j.idx()] = None;
+                self.cand.push(j.0);
+            }
+        }
+        self.cand.sort_unstable();
+        self.cand.dedup();
+
         self.alloc_ids.clear();
         self.alloc_demands.clear();
-        for job in view.active_jobs() {
-            if let Some(d) = job_demand(job, view.now) {
-                self.alloc_ids.push(job.id);
-                self.alloc_demands.push(d);
+        for &ji in &self.cand {
+            let Some(job) = view.jobs.get(ji as usize) else {
+                continue;
+            };
+            if job.is_done() {
+                self.bound_of[ji as usize] = None;
+                continue;
             }
+            let Some(d) = job_demand(job, now) else {
+                self.bound_of[ji as usize] = None;
+                continue;
+            };
+            self.alloc_ids.push(job.id);
+            self.alloc_demands.push(d);
         }
         if self.alloc_demands.is_empty() {
             return;
         }
+        // Same batched predictor entry point as the naive sweep: Eq. 10
+        // is a pure per-entry map, so a smaller batch yields bit-equal
+        // per-job answers.
         let solved = predictor.solve_slots(&self.alloc_demands);
-        for (&job, s) in self.alloc_ids.iter().zip(solved) {
+        for i in 0..self.alloc_ids.len() {
+            let jid = self.alloc_ids[i];
+            let s = solved[i];
+            let d = self.alloc_demands[i];
+            let job = &view.jobs[jid.idx()];
             // An infeasible deadline gets the full cluster: minimize
             // lateness (the paper leaves this case unspecified).
             let (m, r) = if s.infeasible {
@@ -196,11 +417,24 @@ impl DeadlineVcScheduler {
                     s.reduce_slots.min(self.max_reduce_slots).max(1),
                 )
             };
-            out.push(Action::SetAlloc {
-                job,
-                map_slots: m,
-                reduce_slots: r,
-            });
+            if (m, r) != (job.alloc_map_slots, job.alloc_reduce_slots) {
+                out.push(Action::SetAlloc {
+                    job: jid,
+                    map_slots: m,
+                    reduce_slots: r,
+                });
+            }
+            self.bound_of[jid.idx()] =
+                match next_change_bound(job, &d, s, m, r, self.max_map_slots, self.max_reduce_slots)
+                {
+                    Some(t) => {
+                        // Liveness: never re-arm in the past.
+                        let t = t.max(SimTime(now.0 + 1));
+                        self.bound_heap.push((Reverse(t), jid));
+                        Some(t)
+                    }
+                    None => None,
+                };
         }
     }
 
@@ -212,7 +446,8 @@ impl DeadlineVcScheduler {
 
     /// EDF order with cold jobs first (oldest cold job leads), built in
     /// pooled buffers. The cold partition is stable (== the seed's stable
-    /// sort by `!cold()`).
+    /// sort by `!cold()`). Retained as the from-scratch oracle for the
+    /// persistent index (naive reference, property tests).
     fn job_order_into(
         view: &SchedView,
         keys: &mut EdfKeys,
@@ -261,26 +496,55 @@ impl Scheduler for DeadlineVcScheduler {
         SchedulerKind::DeadlineVc
     }
 
+    fn on_sim_start(&mut self, _view: &SchedView) {
+        self.reset();
+    }
+
+    fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
+        self.sync(view);
+        let j = job.idx();
+        self.index.set_key(job, active_key(&view.jobs[j]));
+        if !self.dirty_flag[j] {
+            self.dirty_flag[j] = true;
+            self.dirty_list.push(job);
+        }
+    }
+
+    fn check_index(&self, view: &SchedView) -> Result<(), String> {
+        let mut expect: Vec<(DvcKey, JobId)> =
+            view.active_jobs().map(|j| (dvc_key(j), j.id)).collect();
+        expect.sort_unstable();
+        self.index.check_matches(&expect)?;
+        for (got, &ji) in self.index.iter().zip(&Self::job_order(view)) {
+            if got.idx() != ji {
+                return Err(format!(
+                    "index order diverges from job_order: {got:?} vs index {ji}"
+                ));
+            }
+        }
+        self.claims.check_against(view.jobs)
+    }
+
     /// Alg. 2 lines 1-2: initial allocation from priors.
     fn on_job_added(
         &mut self,
         view: &SchedView,
-        _job: JobId,
+        job: JobId,
         predictor: &mut dyn Predictor,
         out: &mut Vec<Action>,
     ) {
-        self.recompute_allocs(view, predictor, out);
+        self.recompute_allocs(view, job, predictor, out);
     }
 
     /// Alg. 2 lines 17-20.
     fn on_task_finished(
         &mut self,
         view: &SchedView,
-        _job: JobId,
+        job: JobId,
         predictor: &mut dyn Predictor,
         out: &mut Vec<Action>,
     ) {
-        self.recompute_allocs(view, predictor, out);
+        self.recompute_allocs(view, job, predictor, out);
     }
 
     fn on_heartbeat(
@@ -290,19 +554,13 @@ impl Scheduler for DeadlineVcScheduler {
         _predictor: &mut dyn Predictor,
         out: &mut Vec<Action>,
     ) {
+        self.sync(view);
         self.expire_awaiting(view, out);
-        Self::job_order_into(view, &mut self.keys, &mut self.order, &mut self.order_tmp);
         // One claim generation spans the whole heartbeat (both passes and
-        // the reduce phase).
+        // the reduce phase); the slot overlay likewise.
         self.claims.begin(view.jobs);
+        self.overlay.begin(view.cluster.num_nodes());
 
-        // Slot ledger for this heartbeat: free map slots per node, so
-        // direct-local routing to other nodes (Alg. 1 l.13) never
-        // overfills a VM within one scheduling round.
-        self.free.clear();
-        for i in 0..view.cluster.num_nodes() {
-            self.free.push(view.cluster.vm(NodeId(i as u32)).free_map_slots());
-        }
         let mut free_reduce = view.cluster.vm(node).free_reduce_slots();
         // Rack-aware tie-break for the non-local pick: among tasks with no
         // replica on `n`, prefer one with a replica in n's *rack* — if it
@@ -315,8 +573,8 @@ impl Scheduler for DeadlineVcScheduler {
         // placement loop below.
         let Self {
             ref mut claims,
-            ref order,
-            ref mut free,
+            ref index,
+            ref mut overlay,
             ref mut awaiting_since,
             ..
         } = *self;
@@ -326,7 +584,7 @@ impl Scheduler for DeadlineVcScheduler {
         let mut routed = 0u32;
         let max_routed = tuning.max_routed;
 
-        // Two passes over the EDF order:
+        // Two passes over the persistent EDF-cold-first index:
         //   pass 0 — guaranteed allocations (Alg. 2 caps enforced);
         //   pass 1 — spare capacity, work-conserving: same locality
         //            mechanism, caps ignored; remote fallback only for
@@ -338,16 +596,16 @@ impl Scheduler for DeadlineVcScheduler {
         for pass in 0..passes {
             // Each job drains under strict EDF priority: the earliest-
             // deadline job takes every placement it can before the next
-            // job is considered. (O(jobs + launches); the naive restart-
-            // from-top scan was ~40% of the scheduler profile.)
-            'jobs: for &ji in order {
-                let job = &view.jobs[ji];
+            // job is considered; the walk aborts as soon as nothing can
+            // place anywhere, so a saturated cluster visits O(1) jobs.
+            'jobs: for jid in index.iter() {
+                let job = &view.jobs[jid.idx()];
                 if job.is_done() || job.map_finished() {
                     continue;
                 }
                 loop {
                     // Global exhaustion: nothing can place anywhere.
-                    if free[node.idx()] == 0 && routed >= max_routed {
+                    if free_at(view, overlay, node) == 0 && routed >= max_routed {
                         break 'jobs;
                     }
                     if pass == 0 {
@@ -358,11 +616,11 @@ impl Scheduler for DeadlineVcScheduler {
                         }
                     }
                     // Alg. 1 lines 1-2: local task on the heartbeating node.
-                    if free[node.idx()] > 0 {
+                    if free_at(view, overlay, node) > 0 {
                         if let Some(t) = next_unclaimed_local(job, node, claims) {
                             claims.claim_map(job.id, t);
                             out.push(Action::LaunchMap { job: job.id, task: t, node });
-                            free[node.idx()] -= 1;
+                            overlay.take(node.idx());
                             continue;
                         }
                     }
@@ -374,7 +632,7 @@ impl Scheduler for DeadlineVcScheduler {
                     // (free[n] == 0) keep the block-order pick: a
                     // rack-near preference there could select an
                     // unroutable task and skip a routable one.
-                    let rack_pick = if racked && free[node.idx()] > 0 {
+                    let rack_pick = if racked && free_at(view, overlay, node) > 0 {
                         next_unclaimed_rack(job, my_rack, claims)
                     } else {
                         None
@@ -385,20 +643,20 @@ impl Scheduler for DeadlineVcScheduler {
                     };
                     let Some(target) = choose_target_with(tuning, view, job, t) else {
                         // No replica registered (degenerate input): remote.
-                        if free[node.idx()] > 0 {
+                        if free_at(view, overlay, node) > 0 {
                             claims.claim_map(job.id, t);
                             out.push(Action::LaunchMap { job: job.id, task: t, node });
-                            free[node.idx()] -= 1;
+                            overlay.take(node.idx());
                             continue;
                         }
                         break;
                     };
                     // Target has spare capacity: immediate *data-local*
                     // launch on it (Alg. 1 line 13).
-                    if free[target.idx()] > 0 && routed < max_routed {
+                    if free_at(view, overlay, target) > 0 && routed < max_routed {
                         claims.claim_map(job.id, t);
                         out.push(Action::LaunchMap { job: job.id, task: t, node: target });
-                        free[target.idx()] -= 1;
+                        overlay.take(target.idx());
                         routed += 1;
                         continue;
                     }
@@ -415,7 +673,7 @@ impl Scheduler for DeadlineVcScheduler {
                     if pass == 0
                         && release_ready
                         && !released_this_hb
-                        && free[node.idx()] > 0
+                        && free_at(view, overlay, node) > 0
                         && view.cluster.vm(node).can_release_core()
                     {
                         claims.claim_map(job.id, t);
@@ -427,7 +685,7 @@ impl Scheduler for DeadlineVcScheduler {
                             release_from: node,
                         });
                         released_this_hb = true;
-                        free[node.idx()] -= 1; // that core is now pledged
+                        overlay.take(node.idx()); // that core is now pledged
                         continue;
                     }
                     // No data-local placement available now: launch
@@ -436,10 +694,10 @@ impl Scheduler for DeadlineVcScheduler {
                     // (The claim counts toward `maps_claimed` in either
                     // pass, but the Alg. 2 cap only reads it in pass 0 —
                     // same accounting the seed's `extra_sched` map kept.)
-                    if free[node.idx()] > 0 {
+                    if free_at(view, overlay, node) > 0 {
                         claims.claim_map(job.id, t);
                         out.push(Action::LaunchMap { job: job.id, task: t, node });
-                        free[node.idx()] -= 1;
+                        overlay.take(node.idx());
                         continue;
                     }
                     break;
@@ -449,8 +707,8 @@ impl Scheduler for DeadlineVcScheduler {
 
         // ---- reduce phase (Alg. 2 lines 10-14 + spare pass) ----
         for pass in 0..passes {
-            for &ji in order {
-                let job = &view.jobs[ji];
+            for jid in index.iter() {
+                let job = &view.jobs[jid.idx()];
                 if job.is_done() || !job.map_finished() {
                     continue;
                 }
@@ -476,7 +734,7 @@ impl Scheduler for DeadlineVcScheduler {
         // free core after both passes has no runnable local work, so its
         // core is offered to co-resident VMs. This is what seeds the RQ
         // that makes release-gated awaits fire at all.
-        if free[node.idx()] > 0
+        if free_at(view, overlay, node) > 0
             && !released_this_hb
             && view.cluster.vm(node).can_release_core()
         {
@@ -505,6 +763,18 @@ mod tests {
         let view = w.view();
         let order = DeadlineVcScheduler::job_order(&view);
         assert_eq!(view.jobs[order[0]].id.0, 1, "cold job first despite later deadline");
+    }
+
+    #[test]
+    fn index_matches_job_order() {
+        let mut w = TestWorld::two_jobs_with_deadlines(300.0, 900.0);
+        w.warm_up_job(0);
+        let mut s = sched(&w);
+        let view = w.view();
+        for job in view.jobs {
+            s.on_job_updated(&view, job.id);
+        }
+        s.check_index(&view).unwrap();
     }
 
     #[test]
@@ -636,5 +906,43 @@ mod tests {
                 .any(|a| matches!(a, Action::CancelAwait { .. })),
             "expired await must be cancelled: {actions:?}"
         );
+    }
+
+    /// The delta recompute path must agree with a straight full solve at
+    /// the same instant whenever it does recompute a job.
+    #[test]
+    fn delta_alloc_matches_full_solve_on_trigger() {
+        let mut w = TestWorld::two_jobs_with_deadlines(300.0, 900.0);
+        w.warm_up_job(0);
+        w.warm_up_job(1);
+        let mut s = sched(&w);
+        let view = w.view();
+        let mut pred = crate::predictor::NativePredictor::new();
+        let mut out = Vec::new();
+        for job in view.jobs {
+            s.on_job_added(&view, job.id, &mut pred, &mut out);
+        }
+        // Every job got an initial allocation (stored value is u32::MAX).
+        for job in view.jobs {
+            let d = job_demand(job, view.now).unwrap();
+            let solved = crate::predictor::NativePredictor::solve_one(&d);
+            let expect = if solved.infeasible {
+                (s.max_map_slots, s.max_reduce_slots)
+            } else {
+                (
+                    solved.map_slots.min(s.max_map_slots).max(1),
+                    solved.reduce_slots.min(s.max_reduce_slots).max(1),
+                )
+            };
+            assert!(
+                out.iter().any(|a| matches!(
+                    a,
+                    Action::SetAlloc { job: j, map_slots, reduce_slots }
+                        if *j == job.id && (*map_slots, *reduce_slots) == expect
+                )),
+                "job {:?}: expected SetAlloc {expect:?} in {out:?}",
+                job.id
+            );
+        }
     }
 }

@@ -10,28 +10,42 @@
 //! heartbeats, and only unlocks *off-rack* tasks after `2 * patience`.
 //! On the flat topology there is no rack tier, so the single threshold
 //! degenerates to the original local-then-remote behaviour (byte-
-//! identical to the seed). One skip counter per job is kept; any map
-//! launch for the job resets it (a simplification of the paper's
-//! per-level timers that keeps the state machine one integer).
+//! identical to the seed).
+//!
+//! The per-job skip counters are **virtual**: the naive scheme walks
+//! every active job after every heartbeat to increment-or-reset an
+//! integer, an O(jobs)-per-heartbeat tail. Instead we keep one global
+//! heartbeat counter `hb` and a per-job base `base[j]`, with
+//! `skipped(j) = hb - base[j]` (and 0 whenever the job has no pending
+//! maps). A map launch rebases the job to `hb + 1` (counting restarts
+//! after this heartbeat) and a pending-maps 0→>0 transition — delivered
+//! via `on_job_updated` — rebases it to `hb`, which together reproduce
+//! the increment/reset walk exactly while touching only jobs that
+//! launched or changed.
 
 use crate::cluster::{LocalityTier, NodeId};
+use crate::mapreduce::{JobId, JobState};
 use crate::predictor::Predictor;
 
+use super::fair::{fair_key, FairKey};
 use super::{
-    greedy_fill, speculative_fill, Action, ClaimLedger, FairScheduler, SchedView, Scheduler,
+    greedy_fill, speculative_fill, Action, ClaimLedger, OrderIndex, SchedView, Scheduler,
     SchedulerKind,
 };
 
 #[derive(Debug)]
 pub struct DelayScheduler {
     patience: u32,
-    /// Heartbeats each job has been skipped for lack of a local task,
-    /// indexed by job (dense — jobs are numbered in arrival order; absent
-    /// == 0, the `HashMap` semantics of the seed without its per-entry
-    /// allocation and hashing).
-    skipped: Vec<u32>,
-    /// Pooled job-order and claim buffers (reused every heartbeat).
-    order: Vec<usize>,
+    /// Completed heartbeat callbacks (the virtual clock).
+    hb: u64,
+    /// Per-job skip base: `skipped(j) = hb - base[j]` while pending > 0.
+    base: Vec<u64>,
+    /// Whether the job had pending maps at its last notification — the
+    /// 0→>0 transition (crash re-pend, lost map output) must restart the
+    /// skip count at zero, like the naive walk's reset-on-empty.
+    had_pending: Vec<bool>,
+    index: OrderIndex<FairKey>,
+    covered: usize,
     claims: ClaimLedger,
 }
 
@@ -39,8 +53,11 @@ impl DelayScheduler {
     pub fn new(patience: u32) -> Self {
         Self {
             patience,
-            skipped: Vec::new(),
-            order: Vec::new(),
+            hb: 0,
+            base: Vec::new(),
+            had_pending: Vec::new(),
+            index: OrderIndex::new(),
+            covered: 0,
             claims: ClaimLedger::new(),
         }
     }
@@ -65,11 +82,88 @@ impl DelayScheduler {
             LocalityTier::NodeLocal
         }
     }
+
+    /// The virtual skip counter, equal to what the naive per-heartbeat
+    /// increment/reset walk would hold for `job` right now.
+    fn skipped_for(&self, job: &JobState) -> u32 {
+        if job.pending_maps() == 0 {
+            return 0;
+        }
+        self.hb
+            .saturating_sub(self.base[job.id.idx()])
+            .min(u64::from(u32::MAX)) as u32
+    }
+
+    fn sync(&mut self, view: &SchedView) {
+        if self.covered > view.jobs.len() {
+            self.index.clear();
+            self.base.clear();
+            self.had_pending.clear();
+            self.covered = 0;
+        }
+        if self.base.len() < view.jobs.len() {
+            self.base.resize(view.jobs.len(), 0);
+            self.had_pending.resize(view.jobs.len(), false);
+        }
+        for job in &view.jobs[self.covered..] {
+            let j = job.id.idx();
+            self.base[j] = self.hb;
+            self.had_pending[j] = job.pending_maps() > 0;
+            self.index.set_key(job.id, active_key(job));
+        }
+        self.covered = view.jobs.len();
+    }
+}
+
+fn active_key(job: &JobState) -> Option<FairKey> {
+    if job.is_done() {
+        None
+    } else {
+        Some(fair_key(job))
+    }
 }
 
 impl Scheduler for DelayScheduler {
     fn kind(&self) -> SchedulerKind {
         SchedulerKind::Delay
+    }
+
+    fn on_sim_start(&mut self, _view: &SchedView) {
+        self.index.clear();
+        self.base.clear();
+        self.had_pending.clear();
+        self.covered = 0;
+        self.hb = 0;
+    }
+
+    fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
+        self.sync(view);
+        let j = job.idx();
+        let js = &view.jobs[j];
+        let pending = js.pending_maps() > 0;
+        if pending && !self.had_pending[j] {
+            self.base[j] = self.hb;
+        }
+        self.had_pending[j] = pending;
+        self.index.set_key(job, active_key(js));
+    }
+
+    fn check_index(&self, view: &SchedView) -> Result<(), String> {
+        let mut expect: Vec<(FairKey, JobId)> =
+            view.active_jobs().map(|j| (fair_key(j), j.id)).collect();
+        expect.sort_unstable();
+        self.index.check_matches(&expect)?;
+        self.claims.check_against(view.jobs)
+    }
+
+    fn on_job_added(
+        &mut self,
+        view: &SchedView,
+        _job: JobId,
+        _predictor: &mut dyn Predictor,
+        _out: &mut Vec<Action>,
+    ) {
+        self.sync(view);
     }
 
     fn on_heartbeat(
@@ -79,38 +173,47 @@ impl Scheduler for DelayScheduler {
         _predictor: &mut dyn Predictor,
         out: &mut Vec<Action>,
     ) {
-        FairScheduler::fair_order_into(view, &mut self.order);
-        if self.skipped.len() < view.jobs.len() {
-            self.skipped.resize(view.jobs.len(), 0);
-        }
-        // A job degrades one locality tier per exhausted patience window.
-        let skipped = &self.skipped;
-        let patience = self.patience;
+        self.sync(view);
         let racked = view.cluster.topology().is_racked();
-        greedy_fill(
-            view,
-            node,
-            &self.order,
-            &mut self.claims,
-            |job| Self::tier_cap(patience, skipped[job.id.idx()], racked),
-            out,
-        );
-        // Update skip counters: jobs with pending maps that got nothing
-        // local on this heartbeat accumulate patience; a map launch
-        // resets it (Zaharia et al. §4.1). greedy_fill claims every map
-        // it launches in this generation, so "did this job get a map
-        // launch" is an O(1) ledger lookup, not a rescan of the
-        // appended actions.
-        for &ji in &self.order {
-            let job = &view.jobs[ji];
-            if job.pending_maps() == 0 {
-                self.skipped[job.id.idx()] = 0;
-            } else if self.claims.maps_claimed(job.id) > 0 {
-                self.skipped[job.id.idx()] = 0;
-            } else {
-                self.skipped[job.id.idx()] += 1;
+        let patience = self.patience;
+        let start = out.len();
+        {
+            let Self {
+                ref index,
+                ref mut claims,
+                ref base,
+                hb,
+                ..
+            } = *self;
+            // A job degrades one locality tier per exhausted patience
+            // window; skipped() inlined here against the borrowed fields.
+            greedy_fill(
+                view,
+                node,
+                index.iter().map(|j| j.idx()),
+                claims,
+                |job| {
+                    let skipped = if job.pending_maps() == 0 {
+                        0
+                    } else {
+                        hb.saturating_sub(base[job.id.idx()])
+                            .min(u64::from(u32::MAX)) as u32
+                    };
+                    Self::tier_cap(patience, skipped, racked)
+                },
+                out,
+            );
+        }
+        // Rebase every job that launched a map this heartbeat: its skip
+        // count restarts after this round (`hb + 1`), exactly the naive
+        // walk's reset-to-zero. Jobs that were skipped need no touch —
+        // their virtual count grows with `hb`. O(actions), not O(jobs).
+        for a in &out[start..] {
+            if let Action::LaunchMap { job, .. } = a {
+                self.base[job.idx()] = self.hb + 1;
             }
         }
+        self.hb += 1;
         speculative_fill(view, node, out);
     }
 }
@@ -172,6 +275,20 @@ mod tests {
         let node = w.node_with_local_for(0);
         let a = w.heartbeat_with(&mut s, node);
         assert!(a.iter().any(|x| matches!(x, Action::LaunchMap { .. })));
-        assert_eq!(s.skipped.first().copied().unwrap_or(0), 0);
+        assert_eq!(s.skipped_for(&w.view_jobs()[0]), 0);
+    }
+
+    #[test]
+    fn virtual_counter_accumulates_without_launch() {
+        let mut w = TestWorld::one_job_no_local_on(NodeId(0));
+        let mut s = DelayScheduler::new(10);
+        for expect in 0..3u32 {
+            assert_eq!(
+                s.hb as u32, expect,
+                "one heartbeat callback per driven heartbeat"
+            );
+            let _ = w.heartbeat_with(&mut s, NodeId(0));
+            assert_eq!(s.skipped_for(&w.view_jobs()[0]), expect + 1);
+        }
     }
 }

@@ -3,27 +3,45 @@
 //! This isolates the paper's *job ordering* from its reconfiguration
 //! mechanism — the ablation between EDF and DeadlineVc measures what the
 //! hot-plug machinery itself buys.
+//!
+//! The EDF key `(deadline, submitted)` is *static* per job, so the
+//! persistent [`OrderIndex`] is written once at arrival and only ever
+//! touched again to drop finished jobs — the per-heartbeat sort (and its
+//! pooled key cache) is gone entirely.
 
 use crate::cluster::{LocalityTier, NodeId};
-use crate::mapreduce::JobId;
+use crate::mapreduce::{JobId, JobState};
 use crate::predictor::Predictor;
 use crate::sim::SimTime;
 
-use super::{greedy_fill, speculative_fill, Action, ClaimLedger, SchedView, Scheduler, SchedulerKind};
+use super::{
+    greedy_fill, speculative_fill, Action, ClaimLedger, OrderIndex, SchedView, Scheduler,
+    SchedulerKind,
+};
 
 /// Pooled `(deadline, submitted, id, index)` sort keys for
 /// [`EdfScheduler::edf_order_into`] — `id` is unique, so sorting the
 /// precomputed tuples unstably reproduces the stable
-/// sort-by-cached-key order without allocating a key cache per heartbeat
-/// (deadline_at() does float math; evaluating it inside the comparator
-/// was ~10% of the scheduler profile).
+/// sort-by-cached-key order without allocating a key cache per heartbeat.
+/// Retained for the from-scratch oracle and the DeadlineVc reference.
 pub(crate) type EdfKeys = Vec<(SimTime, SimTime, JobId, u32)>;
+
+/// The persistent EDF ranking key: absolute deadline (best-effort jobs
+/// sort last via `u64::MAX`), then submission time; `JobId` breaks the
+/// remaining ties inside the index.
+pub(crate) type EdfKey = (SimTime, SimTime);
+
+pub(crate) fn edf_key(job: &JobState) -> EdfKey {
+    (
+        job.deadline_at().unwrap_or(SimTime(u64::MAX)),
+        job.submitted,
+    )
+}
 
 #[derive(Debug, Default)]
 pub struct EdfScheduler {
-    /// Pooled key/order/claim buffers (reused every heartbeat).
-    keys: EdfKeys,
-    order: Vec<usize>,
+    index: OrderIndex<EdfKey>,
+    covered: usize,
     claims: ClaimLedger,
 }
 
@@ -34,6 +52,7 @@ impl EdfScheduler {
 
     /// Deadline order into `order` (pooled): earliest absolute deadline
     /// first; best-effort jobs after all deadlined jobs, oldest first.
+    /// Retained as the from-scratch oracle for the persistent index.
     pub(crate) fn edf_order_into(view: &SchedView, keys: &mut EdfKeys, order: &mut Vec<usize>) {
         keys.clear();
         for (i, j) in view.jobs.iter().enumerate() {
@@ -55,11 +74,65 @@ impl EdfScheduler {
         Self::edf_order_into(view, &mut keys, &mut order);
         order
     }
+
+    fn sync(&mut self, view: &SchedView) {
+        if self.covered > view.jobs.len() {
+            self.index.clear();
+            self.covered = 0;
+        }
+        for job in &view.jobs[self.covered..] {
+            self.index.set_key(job.id, active_key(job));
+        }
+        self.covered = view.jobs.len();
+    }
+}
+
+fn active_key(job: &JobState) -> Option<EdfKey> {
+    if job.is_done() {
+        None
+    } else {
+        Some(edf_key(job))
+    }
 }
 
 impl Scheduler for EdfScheduler {
     fn kind(&self) -> SchedulerKind {
         SchedulerKind::Edf
+    }
+
+    fn on_sim_start(&mut self, _view: &SchedView) {
+        self.index.clear();
+        self.covered = 0;
+    }
+
+    fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
+        self.sync(view);
+        self.index.set_key(job, active_key(&view.jobs[job.idx()]));
+    }
+
+    fn check_index(&self, view: &SchedView) -> Result<(), String> {
+        let mut expect: Vec<(EdfKey, JobId)> =
+            view.active_jobs().map(|j| (edf_key(j), j.id)).collect();
+        expect.sort_unstable();
+        self.index.check_matches(&expect)?;
+        for (got, &ji) in self.index.iter().zip(&Self::edf_order(view)) {
+            if got.idx() != ji {
+                return Err(format!(
+                    "index order diverges from edf_order: {got:?} vs index {ji}"
+                ));
+            }
+        }
+        self.claims.check_against(view.jobs)
+    }
+
+    fn on_job_added(
+        &mut self,
+        view: &SchedView,
+        _job: JobId,
+        _predictor: &mut dyn Predictor,
+        _out: &mut Vec<Action>,
+    ) {
+        self.sync(view);
     }
 
     fn on_heartbeat(
@@ -69,8 +142,20 @@ impl Scheduler for EdfScheduler {
         _predictor: &mut dyn Predictor,
         out: &mut Vec<Action>,
     ) {
-        Self::edf_order_into(view, &mut self.keys, &mut self.order);
-        greedy_fill(view, node, &self.order, &mut self.claims, |_| LocalityTier::Remote, out);
+        self.sync(view);
+        let Self {
+            ref index,
+            ref mut claims,
+            ..
+        } = *self;
+        greedy_fill(
+            view,
+            node,
+            index.iter().map(|j| j.idx()),
+            claims,
+            |_| LocalityTier::Remote,
+            out,
+        );
         speculative_fill(view, node, out);
     }
 }
@@ -98,5 +183,16 @@ mod tests {
         let order = EdfScheduler::edf_order(&view);
         // job 1 has the deadline, job 0 is best-effort.
         assert_eq!(view.jobs[order[0]].id.0, 1);
+    }
+
+    #[test]
+    fn index_matches_edf_sort() {
+        let w = TestWorld::two_jobs_with_deadlines(900.0, 300.0);
+        let mut s = EdfScheduler::new();
+        let view = w.view();
+        for job in view.jobs {
+            s.on_job_updated(&view, job.id);
+        }
+        s.check_index(&view).unwrap();
     }
 }

@@ -6,17 +6,39 @@
 //! most-starved job gets the slot), with submission time breaking ties.
 //! Map tasks prefer node-local blocks but fall back to remote immediately
 //! (locality patience is the Delay variant, `delay.rs`).
+//!
+//! The ranking is kept as a persistent [`OrderIndex`] keyed on
+//! [`fair_key`] and re-keyed only when a job's running-task count
+//! changes (`on_job_updated`): the fair share is a *positive constant*
+//! within a heartbeat, so dividing the integer running counts by it is
+//! strictly monotone and the deficit sort's order is exactly the key
+//! order `(running, submitted, id)` — no per-heartbeat sort needed.
 
 use crate::cluster::{LocalityTier, NodeId};
-use crate::mapreduce::JobState;
+use crate::mapreduce::{JobId, JobState};
 use crate::predictor::Predictor;
+use crate::sim::SimTime;
 
-use super::{greedy_fill, speculative_fill, Action, ClaimLedger, SchedView, Scheduler, SchedulerKind};
+use super::{
+    greedy_fill, speculative_fill, Action, ClaimLedger, OrderIndex, SchedView, Scheduler,
+    SchedulerKind,
+};
+
+/// The persistent fair-ranking key; ties beyond it break on `JobId`
+/// inside the index, matching the naive comparator's final tie-break.
+pub(crate) type FairKey = (u32, SimTime);
+
+/// Deficit rank of `job` as an exact integer key: running tasks, then
+/// submission time. See the module docs for why this orders identically
+/// to the floating-point deficit sort.
+pub(crate) fn fair_key(job: &JobState) -> FairKey {
+    (job.running_maps() + job.running_reduces(), job.submitted)
+}
 
 #[derive(Debug, Default)]
 pub struct FairScheduler {
-    /// Pooled job-order and claim buffers (reused every heartbeat).
-    order: Vec<usize>,
+    index: OrderIndex<FairKey>,
+    covered: usize,
     claims: ClaimLedger,
 }
 
@@ -28,7 +50,8 @@ impl FairScheduler {
     /// Rank active jobs most-starved-first into `order` (pooled). The
     /// comparator's final `id` tie-break makes it a total order, so the
     /// in-place unstable sort yields exactly the stable sort's result
-    /// without its temporary buffer.
+    /// without its temporary buffer. Retained as the from-scratch oracle
+    /// for the persistent index (naive references, property tests).
     pub(crate) fn fair_order_into(view: &SchedView, order: &mut Vec<usize>) {
         order.clear();
         order.extend((0..view.jobs.len()).filter(|&i| !view.jobs[i].is_done()));
@@ -54,6 +77,25 @@ impl FairScheduler {
         Self::fair_order_into(view, &mut order);
         order
     }
+
+    fn sync(&mut self, view: &SchedView) {
+        if self.covered > view.jobs.len() {
+            self.index.clear();
+            self.covered = 0;
+        }
+        for job in &view.jobs[self.covered..] {
+            self.index.set_key(job.id, active_key(job));
+        }
+        self.covered = view.jobs.len();
+    }
+}
+
+fn active_key(job: &JobState) -> Option<FairKey> {
+    if job.is_done() {
+        None
+    } else {
+        Some(fair_key(job))
+    }
 }
 
 fn deficit(job: &JobState, share: f64) -> f64 {
@@ -66,6 +108,42 @@ impl Scheduler for FairScheduler {
         SchedulerKind::Fair
     }
 
+    fn on_sim_start(&mut self, _view: &SchedView) {
+        self.index.clear();
+        self.covered = 0;
+    }
+
+    fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
+        self.sync(view);
+        self.index.set_key(job, active_key(&view.jobs[job.idx()]));
+    }
+
+    fn check_index(&self, view: &SchedView) -> Result<(), String> {
+        let mut expect: Vec<(FairKey, JobId)> =
+            view.active_jobs().map(|j| (fair_key(j), j.id)).collect();
+        expect.sort_unstable();
+        self.index.check_matches(&expect)?;
+        // The key order must reproduce the retained deficit sort exactly.
+        for (got, &ji) in self.index.iter().zip(&Self::fair_order(view)) {
+            if got.idx() != ji {
+                return Err(format!(
+                    "index order diverges from fair_order at job {got:?} vs index {ji}"
+                ));
+            }
+        }
+        self.claims.check_against(view.jobs)
+    }
+
+    fn on_job_added(
+        &mut self,
+        view: &SchedView,
+        _job: JobId,
+        _predictor: &mut dyn Predictor,
+        _out: &mut Vec<Action>,
+    ) {
+        self.sync(view);
+    }
+
     fn on_heartbeat(
         &mut self,
         view: &SchedView,
@@ -73,8 +151,20 @@ impl Scheduler for FairScheduler {
         _predictor: &mut dyn Predictor,
         out: &mut Vec<Action>,
     ) {
-        Self::fair_order_into(view, &mut self.order);
-        greedy_fill(view, node, &self.order, &mut self.claims, |_| LocalityTier::Remote, out);
+        self.sync(view);
+        let Self {
+            ref index,
+            ref mut claims,
+            ..
+        } = *self;
+        greedy_fill(
+            view,
+            node,
+            index.iter().map(|j| j.idx()),
+            claims,
+            |_| LocalityTier::Remote,
+            out,
+        );
         speculative_fill(view, node, out);
     }
 }
@@ -100,6 +190,20 @@ mod tests {
         let view = w.view();
         let order = FairScheduler::fair_order(&view);
         assert_eq!(view.jobs[order[0]].id.0, 0);
+    }
+
+    #[test]
+    fn index_order_matches_fair_sort() {
+        let mut w = TestWorld::two_jobs();
+        w.force_running_maps(0, 3);
+        let mut s = FairScheduler::new();
+        let view = w.view();
+        for job in view.jobs {
+            s.on_job_updated(&view, job.id);
+        }
+        s.check_index(&view).unwrap();
+        let order: Vec<usize> = s.index.iter().map(|j| j.idx()).collect();
+        assert_eq!(order, FairScheduler::fair_order(&view));
     }
 
     #[test]

@@ -3,14 +3,22 @@
 //! (node-local map preferred, else any).
 
 use crate::cluster::{LocalityTier, NodeId};
+use crate::mapreduce::JobId;
 use crate::predictor::Predictor;
 
-use super::{greedy_fill, speculative_fill, Action, ClaimLedger, SchedView, Scheduler, SchedulerKind};
+use super::{
+    greedy_fill, speculative_fill, Action, ClaimLedger, OrderIndex, SchedView, Scheduler,
+    SchedulerKind,
+};
 
+/// Submission order == JobId order, so the persistent index needs no key
+/// at all: a `BTreeSet<((), JobId)>` of active jobs, pruned as jobs
+/// finish. The heartbeat walks it lazily and stops once the node is full.
 #[derive(Debug, Default)]
 pub struct FifoScheduler {
-    /// Pooled job-order and claim buffers (reused every heartbeat).
-    order: Vec<usize>,
+    index: OrderIndex<()>,
+    /// Jobs already inserted into the index (high-water mark).
+    covered: usize,
     claims: ClaimLedger,
 }
 
@@ -18,11 +26,52 @@ impl FifoScheduler {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Insert jobs that arrived since the last callback and drop stale
+    /// state when the world shrank (scheduler reuse across Worlds).
+    fn sync(&mut self, view: &SchedView) {
+        if self.covered > view.jobs.len() {
+            self.index.clear();
+            self.covered = 0;
+        }
+        for job in &view.jobs[self.covered..] {
+            self.index
+                .set_key(job.id, if job.is_done() { None } else { Some(()) });
+        }
+        self.covered = view.jobs.len();
+    }
 }
 
 impl Scheduler for FifoScheduler {
     fn kind(&self) -> SchedulerKind {
         SchedulerKind::Fifo
+    }
+
+    fn on_sim_start(&mut self, _view: &SchedView) {
+        self.index.clear();
+        self.covered = 0;
+    }
+
+    fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
+        self.sync(view);
+        let done = view.jobs[job.idx()].is_done();
+        self.index.set_key(job, if done { None } else { Some(()) });
+    }
+
+    fn check_index(&self, view: &SchedView) -> Result<(), String> {
+        let expect: Vec<((), JobId)> = view.active_jobs().map(|j| ((), j.id)).collect();
+        self.index.check_matches(&expect)?;
+        self.claims.check_against(view.jobs)
+    }
+
+    fn on_job_added(
+        &mut self,
+        view: &SchedView,
+        _job: JobId,
+        _predictor: &mut dyn Predictor,
+        _out: &mut Vec<Action>,
+    ) {
+        self.sync(view);
     }
 
     fn on_heartbeat(
@@ -32,10 +81,20 @@ impl Scheduler for FifoScheduler {
         _predictor: &mut dyn Predictor,
         out: &mut Vec<Action>,
     ) {
-        // Submission order == JobId order == index order.
-        self.order.clear();
-        self.order.extend((0..view.jobs.len()).filter(|&i| !view.jobs[i].is_done()));
-        greedy_fill(view, node, &self.order, &mut self.claims, |_| LocalityTier::Remote, out);
+        self.sync(view);
+        let Self {
+            ref index,
+            ref mut claims,
+            ..
+        } = *self;
+        greedy_fill(
+            view,
+            node,
+            index.iter().map(|j| j.idx()),
+            claims,
+            |_| LocalityTier::Remote,
+            out,
+        );
         speculative_fill(view, node, out);
     }
 }

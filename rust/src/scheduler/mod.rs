@@ -19,7 +19,13 @@
 //! * within-heartbeat claims live in a generation-stamped `ClaimLedger`
 //!   instead of a per-heartbeat `HashSet<(JobId, TaskId)>`: bumping the
 //!   generation clears every claim in O(1), and the per-job reduce cursor
-//!   replaces the O(claimed²) `pending_reduces_iter().nth(skip)` pattern.
+//!   replaces the O(claimed²) `pending_reduces_iter().nth(skip)` pattern;
+//! * the scheduling order is a persistent [`OrderIndex`] (a `BTreeSet`
+//!   keyed per policy) maintained across heartbeats via
+//!   [`Scheduler::on_job_updated`] notifications from the coordinator —
+//!   a heartbeat walks the index lazily and [`greedy_fill`] exits once
+//!   the node is saturated, so re-keying is O(log jobs) per *changed*
+//!   job instead of an O(jobs·log jobs) sort per heartbeat.
 //!
 //! The pre-index implementations are retained verbatim in [`reference`]
 //! for differential testing and the `benches/simcore.rs` baseline.
@@ -186,6 +192,28 @@ pub trait Scheduler {
         self.kind().name()
     }
 
+    /// First event of a `World` run. A scheduler instance may be reused
+    /// across Worlds (job numbering restarts at zero), so persistent
+    /// ordered indexes must drop state carried over from a previous run
+    /// here. Stateless and reference schedulers ignore it.
+    fn on_sim_start(&mut self, _view: &SchedView) {}
+
+    /// A job's scheduling-relevant state changed since the last callback
+    /// (task launched / finished / killed / re-pended, stats or
+    /// allocation updated). The coordinator batches these notifications
+    /// and flushes the batch immediately before the next scheduler
+    /// callback, so a persistent index only re-keys jobs that actually
+    /// changed. Over-notification is always safe; the reference
+    /// schedulers (which re-sort from scratch) ignore it.
+    fn on_job_updated(&mut self, _view: &SchedView, _job: JobId) {}
+
+    /// Debug-only: verify any internal persistent index against a
+    /// from-scratch recomputation. Called by the property tests after
+    /// every event; production code never calls it.
+    fn check_index(&self, _view: &SchedView) -> Result<(), String> {
+        Ok(())
+    }
+
     /// A new job appeared (Alg. 2 line 1-2).
     fn on_job_added(
         &mut self,
@@ -334,6 +362,121 @@ impl ClaimLedger {
         self.reduce_count_gen[j] = self.gen;
         Some(t)
     }
+
+    /// Debug-only consistency check (property tests): the stamped claims
+    /// of the *current* generation must agree with both the cached counts
+    /// and the job state they were applied to. Valid after the claimed
+    /// actions have been applied and only under a failure-free config
+    /// (a PM crash re-pends Running maps without bumping the generation).
+    pub fn check_against(&self, jobs: &[JobState]) -> Result<(), String> {
+        for (j, job) in jobs.iter().enumerate().take(self.covered) {
+            let stamps = &self.map_stamps[j];
+            let mut stamped = 0u32;
+            for (ti, &s) in stamps.iter().enumerate().take(job.total_maps() as usize) {
+                if s != self.gen {
+                    continue;
+                }
+                stamped += 1;
+                if job.map_state(TaskId(ti as u32)).is_pending() {
+                    return Err(format!(
+                        "job {j}: map {ti} claimed this round but still Pending"
+                    ));
+                }
+            }
+            if stamped != self.maps_claimed(job.id) {
+                return Err(format!(
+                    "job {j}: {} map stamps vs cached count {}",
+                    stamped,
+                    self.maps_claimed(job.id)
+                ));
+            }
+            let claimed_r = self.reduces_claimed(job.id);
+            let live_r = job.running_reduces() + job.completed_reduces();
+            if claimed_r > live_r {
+                return Err(format!(
+                    "job {j}: {claimed_r} reduces claimed this round but only \
+                     {live_r} running/completed"
+                ));
+            }
+            if self.reduce_from_gen[j] == self.gen && self.reduce_from[j] > job.total_reduces() {
+                return Err(format!(
+                    "job {j}: reduce cursor {} past total {}",
+                    self.reduce_from[j],
+                    job.total_reduces()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A persistent scheduling-order index: the jobs the scheduler would
+/// consider, kept sorted by a per-policy key across heartbeats instead of
+/// re-sorted per heartbeat. `set_key` is O(log jobs) and touches the tree
+/// only when the key actually changed; iteration yields jobs in exactly
+/// the order the retained naive sort would produce (ties broken by
+/// `JobId`, which every naive comparator also ends on).
+#[derive(Debug, Default)]
+pub(crate) struct OrderIndex<K: Ord + Copy> {
+    set: std::collections::BTreeSet<(K, JobId)>,
+    key_of: Vec<Option<K>>,
+}
+
+impl<K: Ord + Copy> OrderIndex<K> {
+    pub(crate) fn new() -> Self {
+        Self {
+            set: std::collections::BTreeSet::new(),
+            key_of: Vec::new(),
+        }
+    }
+
+    pub(crate) fn clear(&mut self) {
+        self.set.clear();
+        self.key_of.clear();
+    }
+
+    /// Insert, move or remove `job`. `None` removes (job done). No-op —
+    /// and no tree touch — when the key is unchanged.
+    pub(crate) fn set_key(&mut self, job: JobId, key: Option<K>) {
+        let j = job.idx();
+        if self.key_of.len() <= j {
+            self.key_of.resize(j + 1, None);
+        }
+        if self.key_of[j] == key {
+            return;
+        }
+        if let Some(old) = self.key_of[j].take() {
+            self.set.remove(&(old, job));
+        }
+        if let Some(k) = key {
+            self.set.insert((k, job));
+        }
+        self.key_of[j] = key;
+    }
+
+    /// Jobs in key order (the scheduling order). Lazy — callers that
+    /// early-exit once slots are exhausted never visit the tail.
+    pub(crate) fn iter(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.set.iter().map(|&(_, j)| j)
+    }
+
+    /// Debug-only: assert the index holds exactly `expect` (job, key)
+    /// pairs in the same order a from-scratch sort would produce.
+    pub(crate) fn check_matches(&self, expect: &[(K, JobId)]) -> Result<(), String> {
+        if self.set.len() != expect.len() {
+            return Err(format!(
+                "index has {} entries, from-scratch sort has {}",
+                self.set.len(),
+                expect.len()
+            ));
+        }
+        for (got, want) in self.set.iter().zip(expect) {
+            if got != want {
+                return Err(format!("index entry {:?} != expected {:?}", got.1, want.1));
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Shared helper: launch as many tasks as `node` has free slots, scanning
@@ -348,7 +491,7 @@ impl ClaimLedger {
 pub(crate) fn greedy_fill(
     view: &SchedView,
     node: NodeId,
-    job_order: &[usize],
+    job_order: impl IntoIterator<Item = usize>,
     claims: &mut ClaimLedger,
     max_tier_for: impl Fn(&JobState) -> LocalityTier,
     out: &mut Vec<Action>,
@@ -360,7 +503,15 @@ pub(crate) fn greedy_fill(
     let mut free_map = vm.free_map_slots();
     let mut free_reduce = vm.free_reduce_slots();
 
-    for &ji in job_order {
+    for ji in job_order {
+        // Early exit once the node is saturated: no later job can launch
+        // anything, so the visit count per heartbeat is bounded by the
+        // slots filled, not the number of active jobs. (The naive
+        // reference scans the full order; the skipped tail emits nothing
+        // there either, so the action streams stay identical.)
+        if free_map == 0 && free_reduce == 0 {
+            break;
+        }
         let job = &view.jobs[ji];
         if job.is_done() {
             continue;

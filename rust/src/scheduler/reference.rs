@@ -506,6 +506,20 @@ impl Scheduler for Recording {
         self.inner.kind()
     }
 
+    // The maintenance hooks must be forwarded, not defaulted: swallowing
+    // them would starve a wrapped indexed scheduler of its notifications.
+    fn on_sim_start(&mut self, view: &SchedView) {
+        self.inner.on_sim_start(view);
+    }
+
+    fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
+        self.inner.on_job_updated(view, job);
+    }
+
+    fn check_index(&self, view: &SchedView) -> Result<(), String> {
+        self.inner.check_index(view)
+    }
+
     fn on_job_added(
         &mut self,
         view: &SchedView,

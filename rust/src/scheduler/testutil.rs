@@ -199,8 +199,21 @@ impl TestWorld {
 
     // ---- scheduler drivers ----
 
+    /// Deliver an `on_job_updated` for every job, standing in for the
+    /// coordinator's dirty-flush: TestWorld mutates job state directly
+    /// (`force_running_maps`, `set_alloc`, …), so persistent scheduler
+    /// indexes must be re-synced before each driven heartbeat.
+    /// Over-notification is part of the callback's contract.
+    fn notify_all(&self, s: &mut dyn Scheduler) {
+        let view = self.world.view();
+        for job in view.jobs {
+            s.on_job_updated(&view, job.id);
+        }
+    }
+
     /// Fire one heartbeat; return actions WITHOUT applying them.
     pub fn heartbeat_with(&mut self, s: &mut dyn Scheduler, node: NodeId) -> Vec<Action> {
+        self.notify_all(s);
         let mut p = NativePredictor::new();
         let mut out = Vec::new();
         s.on_heartbeat(&self.world.view(), node, &mut p, &mut out);
@@ -209,6 +222,7 @@ impl TestWorld {
 
     /// Fire one heartbeat and apply the actions (plus queue matching).
     pub fn heartbeat_and_apply(&mut self, s: &mut dyn Scheduler, node: NodeId) -> Vec<Action> {
+        self.notify_all(s);
         let mut p = NativePredictor::new();
         let mut out = Vec::new();
         s.on_heartbeat(&self.world.view(), node, &mut p, &mut out);

@@ -6,10 +6,21 @@
 //! perf work touch the hottest code in the repo without moving a single
 //! simulated outcome.
 //!
-//! Matrix: every `SchedulerKind` × {flat, racks-4} × 3 seeds.
+//! Matrix: every `SchedulerKind` × {flat, racks-4} × 3 seeds, plus a
+//! failure-injection sweep (`stragglers-spec`, `crash-low`) that drives
+//! the crash/recovery, straggler and speculation paths through the same
+//! bitwise comparison.
+//!
+//! One normalization is applied to both action streams before comparing:
+//! no-op `SetAlloc`s (re-announcing a job's current allocation) are
+//! dropped. The naive Eq. 10 sweep re-emits every active deadlined job's
+//! allocation at each alloc event; the delta path only emits changes.
+//! Both are applied by the coordinator via idempotent stores, so the
+//! normalized streams — and everything downstream of them — must still
+//! match action for action.
 
 use vcsched::cluster::Topology;
-use vcsched::config::SimConfig;
+use vcsched::config::{FailureModel, SimConfig};
 use vcsched::coordinator::World;
 use vcsched::predictor::NativePredictor;
 use vcsched::scheduler::reference::{build_reference, Recording};
@@ -32,6 +43,75 @@ fn run_recorded(
     (rec.into_log(), report)
 }
 
+/// Drop no-op `SetAlloc`s: actions that restate a job's already-stored
+/// allocation. Mirrors the coordinator's store (`JobState::alloc_*`
+/// starts at `u32::MAX`/`u32::MAX`, so a job's *first* alloc is always a
+/// real change and survives). Every other action kind passes through in
+/// order.
+fn normalize_allocs(log: Vec<Action>) -> Vec<Action> {
+    let mut stored: Vec<(u32, u32)> = Vec::new();
+    log.into_iter()
+        .filter(|a| {
+            let Action::SetAlloc { job, map_slots, reduce_slots } = *a else {
+                return true;
+            };
+            if stored.len() <= job.idx() {
+                stored.resize(job.idx() + 1, (u32::MAX, u32::MAX));
+            }
+            if stored[job.idx()] == (map_slots, reduce_slots) {
+                return false;
+            }
+            stored[job.idx()] = (map_slots, reduce_slots);
+            true
+        })
+        .collect()
+}
+
+/// The wholesale comparison shared by the failure-free matrix and the
+/// failure-injection sweep: normalized action streams equal action for
+/// action, reports bitwise equal.
+fn assert_runs_identical(label: &str, cfg: &SimConfig, kind: SchedulerKind, trace: &JobTrace) {
+    let (log_a, rep_a) = run_recorded(cfg, kind.build(cfg), trace);
+    let (log_b, rep_b) = run_recorded(cfg, build_reference(kind, cfg), trace);
+
+    // The action streams are compared wholesale: every launch, await,
+    // cancel, release and (effective) alloc, in emission order.
+    let log_a = normalize_allocs(log_a);
+    let log_b = normalize_allocs(log_b);
+    assert_eq!(
+        log_a.len(),
+        log_b.len(),
+        "{label}: action stream lengths diverge"
+    );
+    for (i, (a, b)) in log_a.iter().zip(&log_b).enumerate() {
+        assert_eq!(a, b, "{label}: action {i} diverges");
+    }
+
+    // Reports must be bitwise equal (wall_s is host time and is set by
+    // the caller, not here).
+    assert_eq!(rep_a.events, rep_b.events, "{label}: events");
+    assert_eq!(rep_a.hotplugs, rep_b.hotplugs, "{label}: hotplugs");
+    assert_eq!(rep_a.heartbeats, rep_b.heartbeats, "{label}: heartbeats");
+    assert_eq!(
+        rep_a.makespan_s.to_bits(),
+        rep_b.makespan_s.to_bits(),
+        "{label}: makespan"
+    );
+    assert_eq!(rep_a.jobs.len(), rep_b.jobs.len(), "{label}: job count");
+    for (x, y) in rep_a.jobs.iter().zip(&rep_b.jobs) {
+        assert_eq!(
+            x.completion_s.to_bits(),
+            y.completion_s.to_bits(),
+            "{label}: job {:?} completion",
+            x.id
+        );
+        assert_eq!(x.local_maps, y.local_maps, "{label}: job {:?}", x.id);
+        assert_eq!(x.rack_maps, y.rack_maps, "{label}: job {:?}", x.id);
+        assert_eq!(x.remote_maps, y.remote_maps, "{label}: job {:?}", x.id);
+        assert_eq!(x.met_deadline, y.met_deadline, "{label}: job {:?}", x.id);
+    }
+}
+
 #[test]
 fn indexed_path_matches_naive_reference_exactly() {
     for kind in SchedulerKind::ALL {
@@ -44,44 +124,33 @@ fn indexed_path_matches_naive_reference_exactly() {
                 };
                 let trace = JobTrace::poisson(&cfg, 10, 4.0, 1.6..3.0, seed);
                 let label = format!("{} / {} / seed {seed}", kind.name(), topology.label());
+                assert_runs_identical(&label, &cfg, kind, &trace);
+            }
+        }
+    }
+}
 
-                let (log_a, rep_a) = run_recorded(&cfg, kind.build(&cfg), &trace);
-                let (log_b, rep_b) = run_recorded(&cfg, build_reference(kind, &cfg), &trace);
-
-                // The action streams are compared wholesale: every launch,
-                // await, cancel, release and alloc, in emission order.
-                assert_eq!(
-                    log_a.len(),
-                    log_b.len(),
-                    "{label}: action stream lengths diverge"
-                );
-                for (i, (a, b)) in log_a.iter().zip(&log_b).enumerate() {
-                    assert_eq!(a, b, "{label}: action {i} diverges");
-                }
-
-                // Reports must be bitwise equal (wall_s is host time and
-                // is set by the caller, not here).
-                assert_eq!(rep_a.events, rep_b.events, "{label}: events");
-                assert_eq!(rep_a.hotplugs, rep_b.hotplugs, "{label}: hotplugs");
-                assert_eq!(rep_a.heartbeats, rep_b.heartbeats, "{label}: heartbeats");
-                assert_eq!(
-                    rep_a.makespan_s.to_bits(),
-                    rep_b.makespan_s.to_bits(),
-                    "{label}: makespan"
-                );
-                assert_eq!(rep_a.jobs.len(), rep_b.jobs.len(), "{label}: job count");
-                for (x, y) in rep_a.jobs.iter().zip(&rep_b.jobs) {
-                    assert_eq!(
-                        x.completion_s.to_bits(),
-                        y.completion_s.to_bits(),
-                        "{label}: job {:?} completion",
-                        x.id
-                    );
-                    assert_eq!(x.local_maps, y.local_maps, "{label}: job {:?}", x.id);
-                    assert_eq!(x.rack_maps, y.rack_maps, "{label}: job {:?}", x.id);
-                    assert_eq!(x.remote_maps, y.remote_maps, "{label}: job {:?}", x.id);
-                    assert_eq!(x.met_deadline, y.met_deadline, "{label}: job {:?}", x.id);
-                }
+/// Failure injection exercises paths the failure-free matrix never
+/// reaches — PM crashes rewinding running tasks to Pending (with the
+/// job-update notification that must reach a persistent index),
+/// straggler slowdowns, speculative launches and kills. The indexed
+/// schedulers must stay bitwise-identical to the naive reference through
+/// all of them. (`crash-low` also covers hotplug churn from repair
+/// events.)
+#[test]
+fn indexed_path_matches_naive_under_failure_injection() {
+    for kind in SchedulerKind::ALL {
+        for failures in ["stragglers-spec", "crash-low"] {
+            for seed in [5u64, 77] {
+                let cfg = SimConfig {
+                    topology: Topology::Racks(4),
+                    seed,
+                    failures: FailureModel::from_name(failures).unwrap(),
+                    ..SimConfig::paper()
+                };
+                let trace = JobTrace::poisson(&cfg, 10, 4.0, 1.6..3.0, seed);
+                let label = format!("{} / {failures} / seed {seed}", kind.name());
+                assert_runs_identical(&label, &cfg, kind, &trace);
             }
         }
     }

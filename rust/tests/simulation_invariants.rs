@@ -70,6 +70,58 @@ fn invariants_hold_after_every_event() {
     });
 }
 
+/// The incremental-scheduling property: after **every** event, each
+/// scheduler's persistent ordered index must agree with a from-scratch
+/// sort of the live job list, and the claim ledger's per-job claim
+/// counts must agree with coordinator job state (`check_index` verifies
+/// both). Job-update notifications are delivered for *all* jobs before
+/// checking — over-notification is always safe, and it settles the dirt
+/// the event's own actions produced (the coordinator flushes that dirt
+/// lazily, before the *next* scheduler callback).
+///
+/// Failure-free configs only: `ClaimLedger::check_against` counts
+/// launches minus completions, which crash-rewinds legitimately skew
+/// (the differential failure sweep covers those paths).
+#[test]
+fn ordered_index_matches_full_sort_after_every_event() {
+    use vcsched::cluster::Topology;
+    use vcsched::mapreduce::JobId;
+    prop::check(20, |rng| {
+        let topology = [
+            Topology::Flat,
+            Topology::Racks(2),
+            Topology::Racks(4),
+            Topology::FatTree(2),
+        ][rng.below(4) as usize];
+        let cfg = SimConfig {
+            seed: rng.next_u64(),
+            topology,
+            ..SimConfig::small()
+        };
+        let trace = random_trace(rng, &cfg);
+        let kind = SchedulerKind::ALL[rng.below(5) as usize];
+        let mut sched = kind.build(&cfg);
+        let mut pred = NativePredictor::new();
+        let mut world = World::new(cfg, trace);
+        let mut steps = 0u64;
+        while world.step_one(sched.as_mut(), &mut pred) {
+            steps += 1;
+            {
+                let view = world.view();
+                for i in 0..view.jobs.len() {
+                    sched.on_job_updated(&view, JobId(i as u32));
+                }
+                sched.check_index(&view).unwrap_or_else(|e| {
+                    panic!("[{} / {}] step {steps}: {e}", kind.name(), topology.label())
+                });
+            }
+            if steps > 2_000_000 {
+                panic!("[{}] runaway simulation", kind.name());
+            }
+        }
+    });
+}
+
 /// Total vCPUs across the cluster is conserved by reconfiguration: the sum
 /// at the end equals the sum at the start (hot-plug moves, never creates).
 #[test]

@@ -1,0 +1,88 @@
+//! Golden-report regression test for the `stress` preset (truncated to a
+//! test-sized job count): the rendered run reports must be **bitwise
+//! stable across commits**, pinned by an FNV-1a hash checked into the
+//! tree, and the indexed schedulers must render **bitwise-identical**
+//! reports to the naive reference implementations on the same cells.
+//!
+//! The golden file starts life containing the word `bootstrap`; the
+//! first run pins the real hash in place (commit the updated file). Any
+//! later mismatch means a change moved a simulated outcome on the
+//! stress scenario — if that is intentional (a policy change, not an
+//! indexing/perf change), re-bootstrap by writing `bootstrap` into
+//! `tests/golden/stress_report.hash` and re-running.
+
+use vcsched::coordinator::World;
+use vcsched::harness::ScenarioGrid;
+use vcsched::predictor::NativePredictor;
+use vcsched::scheduler::reference::build_reference;
+
+/// FNV-1a 64-bit (stable across platforms/runs — same construction as
+/// the sweep journal's content hash).
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/stress_report.hash");
+
+/// Jobs per stress cell, truncated from the preset's 2000 so the test
+/// fits `cargo test` runtime. The golden hash is pinned to this count.
+const JOBS: usize = 40;
+
+#[test]
+fn stress_preset_reports_are_bitwise_stable() {
+    let mut grid = ScenarioGrid::stress();
+    grid.jobs_per_scenario = JOBS;
+
+    let mut rendered = String::new();
+    for sc in &grid.scenarios() {
+        let cfg = sc.sim_config();
+        let trace = sc.job_trace(&grid, &cfg);
+        let name = sc.scheduler.name();
+
+        let mut sched = sc.scheduler.build(&cfg);
+        let mut pred = NativePredictor::new();
+        let mut world = World::new(cfg.clone(), trace.clone());
+        world.run(sched.as_mut(), &mut pred);
+        let indexed = world.into_metrics(name).to_json().render();
+
+        let mut sched = build_reference(sc.scheduler, &cfg);
+        let mut pred = NativePredictor::new();
+        let mut world = World::new(cfg.clone(), trace.clone());
+        world.run(sched.as_mut(), &mut pred);
+        let reference = world.into_metrics(name).to_json().render();
+
+        // Indexed and naive-reference reports must render byte-identical
+        // on every stress cell — the tentpole contract at stress scale.
+        assert_eq!(
+            indexed, reference,
+            "{name}: indexed report diverged from the naive reference on the stress preset"
+        );
+        rendered.push_str(&indexed);
+        rendered.push('\n');
+    }
+
+    let hash = format!("{:016x}", fnv64(rendered.as_bytes()));
+    let golden = std::fs::read_to_string(GOLDEN)
+        .unwrap_or_else(|e| panic!("missing golden file {GOLDEN}: {e}"))
+        .trim()
+        .to_string();
+    if golden == "bootstrap" {
+        // First run on this tree: pin the hash in place. The updated
+        // file must be committed for the pin to take effect.
+        std::fs::write(GOLDEN, format!("{hash}\n")).expect("pin golden hash");
+        eprintln!(
+            "stress golden bootstrapped: pinned {hash} — commit tests/golden/stress_report.hash"
+        );
+        return;
+    }
+    assert_eq!(
+        golden, hash,
+        "stress preset report hash drifted from the pinned golden — a change moved \
+         a simulated outcome ({JOBS}-job stress cells); see tests/golden/stress_report.hash"
+    );
+}
