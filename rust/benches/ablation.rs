@@ -118,7 +118,7 @@ fn main() {
         let spec = JobSpec::new(jt, 1500.0).with_deadline(1e6);
         let trace1 = JobTrace::new(vec![spec.clone()]);
         let r = run_simulation(&cfg, SchedulerKind::Fifo, &trace1);
-        let actual = r.jobs[0].completion_s;
+        let actual = r.job_records()[0].completion_s;
         // Forecast with the cost model's nominal times and the full
         // cluster's slots (what FIFO effectively grants a lone job).
         let d = vcsched::predictor::demand_from_spec(&cfg, &spec);

@@ -23,6 +23,15 @@
 //! peak-RSS budget per scheduler. The budgets are deliberately loose
 //! (shared-runner noise) but an O(jobs) regression in the per-event path
 //! blows through them by an order of magnitude.
+//!
+//! `SIMCORE_1M=1` runs the `stress-1m` cell (1,000,000 Poisson jobs
+//! streamed through deadline_vc with `stream_metrics` on;
+//! `SIMCORE_1M_JOBS` truncates) and **hard-asserts a flat peak-RSS
+//! budget that does not scale with the job count** — arrivals are pulled
+//! lazily, completed jobs are retired, and metrics fold into
+//! constant-memory accumulators, so memory is bounded by the active job
+//! window. It runs *first* so the `VmHWM` reading is not inflated by the
+//! other cells.
 
 use std::time::Instant;
 
@@ -35,6 +44,8 @@ use vcsched::util::json::Json;
 
 /// Peak resident set size of this process in MiB (`VmHWM` from
 /// `/proc/self/status`); 0.0 where procfs is unavailable (non-Linux).
+/// Process-wide high-water mark: monotone across cells in one run, so
+/// per-cell readings reflect the largest cell executed so far.
 fn peak_rss_mib() -> f64 {
     let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
         return 0.0;
@@ -133,7 +144,100 @@ fn run_xl() -> Json {
         .set("points", points)
 }
 
+/// The million-job streaming memory guard (`SIMCORE_1M=1`): run the
+/// `stress-1m` cell through the streaming source path and hard-assert a
+/// **constant** peak-RSS budget. Unlike `run_xl`'s per-job envelope, the
+/// budget here deliberately does NOT scale with the job count — that flat
+/// line is the contract: memory is bounded by the active job window, so
+/// 20k jobs (the CI smoke, `SIMCORE_1M_JOBS=20000`) and the full
+/// 1,000,000-job run assert the identical ceiling.
+fn run_1m() -> Json {
+    let grid_full = ScenarioGrid::stress_1m();
+    let jobs: usize = std::env::var("SIMCORE_1M_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(grid_full.jobs_per_scenario);
+    let mut grid = grid_full;
+    grid.jobs_per_scenario = jobs;
+    // Job-count-independent: the active window on this cluster stays in
+    // the hundreds of jobs, and the streaming accumulators are O(1).
+    let rss_budget_mib = 512.0;
+    println!(
+        "simcore-1m: stress-1m scenario ({} PMs, {}, {jobs} jobs, streaming) — \
+         budget: {rss_budget_mib:.0} MiB peak RSS, independent of job count",
+        grid.pm_counts[0],
+        grid.topologies[0].label(),
+    );
+
+    let mut t = Table::new(&["scheduler", "jobs", "events", "wall", "ev/s", "peak rss"]);
+    let mut points = Json::arr();
+    for sc in &grid.scenarios() {
+        let cfg = sc.sim_config();
+        let source = sc.job_source(&grid, &cfg).expect("stress-1m job source");
+        let mut sched = sc.scheduler.build(&cfg);
+        let mut pred = NativePredictor::new();
+        let mut world = World::from_source(cfg, source);
+        let t0 = Instant::now();
+        world.run(sched.as_mut(), &mut pred);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let m = world.into_metrics(sc.scheduler.name());
+        let agg = m
+            .stream_agg()
+            .expect("stress-1m runs with stream_metrics on");
+        assert_eq!(
+            agg.completed as usize, jobs,
+            "{}: streamed run must complete every job",
+            sc.scheduler.name()
+        );
+        let rss_mib = peak_rss_mib();
+        let eps = m.events as f64 / wall_s.max(1e-9);
+        t.row(&[
+            sc.scheduler.name().to_string(),
+            jobs.to_string(),
+            m.events.to_string(),
+            format!("{wall_s:.3}s"),
+            format!("{eps:.0}"),
+            format!("{rss_mib:.0} MiB"),
+        ]);
+        points = points.push(
+            Json::obj()
+                .set("scheduler", sc.scheduler.name())
+                .set("jobs", jobs)
+                .set("completed", agg.completed)
+                .set("events", m.events)
+                .set("wall_s", wall_s)
+                .set("events_per_sec", eps)
+                .set("p50_completion_s", agg.sketch.pct(50.0))
+                .set("p99_completion_s", agg.sketch.pct(99.0))
+                .set("peak_rss_mib", rss_mib)
+                .set("rss_budget_mib", rss_budget_mib),
+        );
+        // The hard gate: bounded memory, no matter how long the trace.
+        assert!(
+            rss_mib <= rss_budget_mib,
+            "{}: stress-1m peak RSS {rss_mib:.0} MiB exceeds the flat \
+             {rss_budget_mib:.0} MiB budget — per-job state is leaking past \
+             the retirement window",
+            sc.scheduler.name()
+        );
+    }
+    t.print();
+    Json::obj()
+        .set("jobs", jobs)
+        .set("rss_budget_mib", rss_budget_mib)
+        .set("points", points)
+}
+
 fn main() {
+    // The 1m memory guard runs FIRST: VmHWM is a process-wide high-water
+    // mark, so the flat-RSS assertion must see a heap untouched by the
+    // larger materialized cells below.
+    let m1 = if std::env::var("SIMCORE_1M").as_deref() == Ok("1") {
+        Some(run_1m())
+    } else {
+        None
+    };
+
     let jobs: usize = std::env::var("SIMCORE_JOBS")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -156,6 +260,7 @@ fn main() {
         "ev/s indexed",
         "ev/s reference",
         "speedup",
+        "peak rss",
     ]);
     let mut points = Json::arr();
     let mut headline_speedup = 0.0f64;
@@ -196,8 +301,12 @@ fn main() {
             reference.makespan_s.to_bits(),
             "{name}: makespan diverged from the reference implementation"
         );
-        assert_eq!(indexed.jobs.len(), reference.jobs.len(), "{name}: job count");
-        for (a, b) in indexed.jobs.iter().zip(&reference.jobs) {
+        assert_eq!(
+            indexed.job_records().len(),
+            reference.job_records().len(),
+            "{name}: job count"
+        );
+        for (a, b) in indexed.job_records().iter().zip(reference.job_records()) {
             assert_eq!(
                 a.completion_s.to_bits(),
                 b.completion_s.to_bits(),
@@ -212,6 +321,9 @@ fn main() {
         let eps = indexed.events as f64 / indexed_s.max(1e-9);
         let baseline_eps = reference.events as f64 / reference_s.max(1e-9);
         let speedup = eps / baseline_eps.max(1e-9);
+        // Recorded, not asserted (the hard RSS gates live in the xl/1m
+        // cells); process-peak semantics, see `peak_rss_mib`.
+        let rss_mib = peak_rss_mib();
         if sc.scheduler == vcsched::scheduler::SchedulerKind::DeadlineVc {
             headline_speedup = speedup;
         }
@@ -223,6 +335,7 @@ fn main() {
             format!("{eps:.0}"),
             format!("{baseline_eps:.0}"),
             format!("x{speedup:.2}"),
+            format!("{rss_mib:.0} MiB"),
         ]);
         points = points.push(
             Json::obj()
@@ -232,7 +345,8 @@ fn main() {
                 .set("reference_wall_s", reference_s)
                 .set("events_per_sec", eps)
                 .set("baseline_events_per_sec", baseline_eps)
-                .set("speedup", speedup),
+                .set("speedup", speedup)
+                .set("peak_rss_mib", rss_mib),
         );
     }
     t.print();
@@ -255,6 +369,9 @@ fn main() {
         .set("points", points);
     if let Some(xl) = xl {
         doc = doc.set("stress_xl", xl);
+    }
+    if let Some(m1) = m1 {
+        doc = doc.set("stress_1m", m1);
     }
     let doc = doc.render();
     let out = vcsched::util::repo_path("BENCH_simcore.json");

@@ -363,6 +363,16 @@ pub struct SimConfig {
     /// byte-identical to the pre-failure simulator).
     pub failures: FailureModel,
 
+    // ---- metrics ----
+    /// Streaming-metrics mode: fold every finished job into constant-
+    /// memory accumulators (Welford mean/std + quantile sketch) instead of
+    /// storing a [`crate::metrics::JobRecord`] per job, and let the
+    /// coordinator retire completed jobs' state so peak memory is bounded
+    /// by the *active* job window, not the trace length. Off (the exact
+    /// per-job path, byte-identical to previous releases) by default;
+    /// requires `failures` off and [`ExecMode::Synthetic`].
+    pub stream_metrics: bool,
+
     // ---- misc ----
     pub seed: u64,
 }
@@ -390,6 +400,7 @@ impl SimConfig {
             prior_map_s: 20.0,
             prior_shuffle_s: 0.05,
             failures: FailureModel::off(),
+            stream_metrics: false,
             seed: 42,
         }
     }
@@ -505,6 +516,13 @@ impl SimConfig {
             return Err("heartbeat interval must be positive".into());
         }
         self.failures.validate()?;
+        if self.stream_metrics && (self.failures.enabled() || self.exec != ExecMode::Synthetic) {
+            return Err(
+                "stream_metrics requires failures off and synthetic execution (completed \
+                 jobs are retired; crash re-execution and real-exec state need them kept)"
+                    .into(),
+            );
+        }
         Ok(())
     }
 }

@@ -22,10 +22,30 @@ use crate::config::SimConfig;
 use crate::metrics::RunMetrics;
 use crate::predictor::{NativePredictor, Predictor};
 use crate::scheduler::SchedulerKind;
-use crate::workloads::trace::JobTrace;
+use crate::workloads::trace::{JobTrace, TraceSource};
 
 /// Result of one simulation run.
 pub type Report = RunMetrics;
+
+/// Run a streaming [`TraceSource`] under `kind`: jobs are pulled on
+/// demand (see [`World::from_source`]), so trace length never bounds
+/// memory. With a [`TraceSource::from_trace`] source this is bit-identical
+/// to [`run_simulation_with`] on the equivalent materialized trace.
+pub fn run_simulation_source(
+    cfg: &SimConfig,
+    kind: SchedulerKind,
+    source: TraceSource,
+    predictor: &mut dyn Predictor,
+) -> Report {
+    cfg.validate().expect("invalid SimConfig");
+    let t0 = std::time::Instant::now();
+    let mut scheduler = kind.build(cfg);
+    let mut world = World::from_source(cfg.clone(), source);
+    world.run(scheduler.as_mut(), predictor);
+    let mut report = world.into_metrics(kind.name());
+    report.wall_s = t0.elapsed().as_secs_f64();
+    report
+}
 
 /// Run `trace` under `kind` with the native (pure-Rust) predictor.
 pub fn run_simulation(cfg: &SimConfig, kind: SchedulerKind, trace: &JobTrace) -> Report {

@@ -4,14 +4,16 @@ use crate::cluster::{Cluster, LocalityTier, NodeId, PmId};
 use crate::config::{ExecMode, SimConfig};
 use crate::hdfs::NameNode;
 use crate::mapreduce::{straggler_multiplier, JobId, JobState, TaskCost, TaskId, TaskRef, TaskState};
-use crate::metrics::{FailureStats, HotplugMark, JobRecord, RunMetrics, TaskSpan, TraceLog};
+use crate::metrics::{
+    FailureStats, HotplugMark, JobRecord, RunMetrics, StreamAgg, TaskSpan, TraceLog,
+};
 use crate::predictor::Predictor;
 use crate::reconfig::ConfigManager;
 use crate::scheduler::{Action, SchedView, Scheduler};
 use crate::sim::{EventQueue, SimTime};
 use crate::util::rng::mix64;
 use crate::util::Rng;
-use crate::workloads::trace::{failure_trace, JobTrace, FAILURE_STREAM_TAG};
+use crate::workloads::trace::{failure_trace, JobTrace, TraceSource, FAILURE_STREAM_TAG};
 use crate::workloads::JobSpec;
 
 use super::exec_engine::ExecEngine;
@@ -19,7 +21,12 @@ use super::exec_engine::ExecEngine;
 /// Discrete events driving the simulation.
 #[derive(Clone, Copy, Debug)]
 pub enum Event {
-    /// Submission of trace job `idx`.
+    /// Submission of the `idx`-th arrival. Specs are *pulled* from the
+    /// trace source one at a time: only the next pending arrival is ever
+    /// scheduled, and handling it pulls + schedules the one after. The
+    /// pop order is nonetheless bit-identical to scheduling every arrival
+    /// up front, because all arrival sequence numbers come from one band
+    /// reserved at construction (see `EventQueue::reserve_seqs`).
     JobArrival(u32),
     /// TaskTracker heartbeat (recurs every `heartbeat_s`).
     Heartbeat(NodeId),
@@ -60,13 +67,29 @@ pub struct World {
     pub cfg: SimConfig,
     pub cluster: Cluster,
     pub nn: NameNode,
+    /// Live job window: `jobs[0]` is the job with id `jobs_base`. Outside
+    /// streaming mode the window is the full job table (`jobs_base == 0`,
+    /// nothing is ever retired).
     pub jobs: Vec<JobState>,
     costs: Vec<TaskCost>,
     pub cm: ConfigManager,
     queue: EventQueue<Event>,
     rng: Rng,
-    pending_specs: Vec<JobSpec>,
+    /// Streaming job source; arrivals are pulled one at a time.
+    source: TraceSource,
+    /// The spec of the next scheduled (not yet handled) arrival.
+    next_spec: Option<JobSpec>,
+    /// First sequence number of the band reserved for arrival events:
+    /// arrival `i` is scheduled with seq `arrival_band + i`, reproducing
+    /// the upfront-scheduling pop order exactly.
+    arrival_band: u64,
     arrived: usize,
+    /// Job id of `jobs[0]` — jobs below this were retired after
+    /// completing (streaming mode only; see [`World::maybe_compact`]).
+    jobs_base: usize,
+    /// Length of the contiguous done prefix of `jobs` (the compaction
+    /// candidate). Advanced on each job-done transition, O(1) amortized.
+    done_prefix: usize,
     /// Jobs that reached `JobPhase::Done` — kept in lockstep with the per-
     /// job transitions so [`World::all_done`] is O(1) per event instead of
     /// an O(jobs) scan (the scan is retained behind
@@ -105,6 +128,9 @@ pub struct World {
     // metrics
     fail_stats: FailureStats,
     records: Vec<JobRecord>,
+    /// Constant-memory metric accumulators (`cfg.stream_metrics`); when
+    /// set, completed jobs fold into this instead of pushing a record.
+    stream: Option<StreamAgg>,
     trace_log: Option<TraceLog>,
     heartbeats: u64,
     predictor_calls_estimate: u64,
@@ -113,7 +139,20 @@ pub struct World {
 }
 
 impl World {
+    /// Width of the reserved arrival sequence band — caps a run at 2^32
+    /// arrivals, the range of `Event::JobArrival`'s index anyway.
+    const ARRIVAL_SEQ_BAND: u64 = 1 << 32;
+
     pub fn new(cfg: SimConfig, trace: JobTrace) -> Self {
+        Self::from_source(cfg, TraceSource::from_trace(trace))
+    }
+
+    /// Build a world driven by a streaming [`TraceSource`]: only the next
+    /// pending arrival is materialized at any time, so trace length never
+    /// bounds memory. With a [`TraceSource::from_trace`] source this is
+    /// bit-identical to the old eager constructor (same RNG streams, same
+    /// event pop order via the reserved arrival seq band).
+    pub fn from_source(cfg: SimConfig, mut source: TraceSource) -> Self {
         let cluster = Cluster::build(&cfg);
         let cm = ConfigManager::new(cfg.pms);
         let mut queue = EventQueue::new();
@@ -123,10 +162,15 @@ impl World {
             let offset = hb_ms * n as u64 / cfg.nodes() as u64;
             queue.schedule_at(SimTime::from_millis(offset), Event::Heartbeat(NodeId(n as u32)));
         }
-        for (i, spec) in trace.jobs.iter().enumerate() {
-            queue.schedule_at(
+        // Reserve the arrival seq band exactly where the upfront loop
+        // used to schedule, then pull + schedule only the first arrival.
+        let arrival_band = queue.reserve_seqs(Self::ARRIVAL_SEQ_BAND);
+        let next_spec = source.next_job();
+        if let Some(spec) = &next_spec {
+            queue.schedule_at_with_seq(
                 SimTime::from_secs_f64(spec.submit_s),
-                Event::JobArrival(i as u32),
+                arrival_band,
+                Event::JobArrival(0),
             );
         }
         // Crash/recover timeline from the dedicated failure stream —
@@ -144,6 +188,11 @@ impl World {
             ExecMode::Synthetic => None,
         };
         let rng = Rng::new(cfg.seed);
+        let stream = if cfg.stream_metrics {
+            Some(StreamAgg::new())
+        } else {
+            None
+        };
         Self {
             cluster,
             nn: NameNode::new(),
@@ -152,8 +201,12 @@ impl World {
             cm,
             queue,
             rng,
-            pending_specs: trace.jobs,
+            source,
+            next_spec,
+            arrival_band,
             arrived: 0,
+            jobs_base: 0,
+            done_prefix: 0,
             done_jobs: 0,
             naive_all_done: false,
             inter_mb: Vec::new(),
@@ -166,6 +219,7 @@ impl World {
             failure_rng: Rng::new(mix64(cfg.seed ^ FAILURE_STREAM_TAG)),
             fail_stats: FailureStats::default(),
             records: Vec::new(),
+            stream,
             trace_log: None,
             heartbeats: 0,
             predictor_calls_estimate: 0,
@@ -184,20 +238,27 @@ impl World {
         self.queue.advance_to(self.queue.now() + dt);
     }
 
-    /// Every trace job arrived and finished. Checked after *every* event,
-    /// so it runs off the `done_jobs` counter (O(1)) rather than scanning
-    /// the job table — at stress scale the seed's `iter().all(is_done)`
-    /// scan alone was O(jobs) × O(events) of the whole run.
+    /// Every trace job arrived and finished. The source is exhausted
+    /// exactly when no next arrival is staged (`next_spec` is `None`).
+    /// Checked after *every* event, so it runs off the `done_jobs` counter
+    /// (O(1)) rather than scanning the job table — at stress scale the
+    /// seed's `iter().all(is_done)` scan alone was O(jobs) × O(events) of
+    /// the whole run.
     fn all_done(&self) -> bool {
         if self.naive_all_done {
-            return self.arrived == self.pending_specs.len()
-                && self.jobs.iter().all(|j| j.is_done());
+            return self.next_spec.is_none() && self.jobs.iter().all(|j| j.is_done());
         }
         debug_assert_eq!(
-            self.done_jobs,
+            self.done_jobs - self.jobs_base,
             self.jobs.iter().filter(|j| j.is_done()).count()
         );
-        self.arrived == self.pending_specs.len() && self.done_jobs == self.jobs.len()
+        self.next_spec.is_none() && self.done_jobs == self.arrived
+    }
+
+    /// Window index of `id` into [`World::jobs`] (see `jobs_base`).
+    #[inline]
+    fn slot(&self, id: JobId) -> usize {
+        id.idx() - self.jobs_base
     }
 
     /// Opt back into the seed's O(jobs)-per-event `all_done` scan — the
@@ -212,6 +273,7 @@ impl World {
             cfg: &self.cfg,
             cluster: &self.cluster,
             jobs: &self.jobs,
+            jobs_base: self.jobs_base,
             cm: &self.cm,
             now: self.queue.now(),
         }
@@ -227,9 +289,11 @@ impl World {
         self.trace_log.as_ref()
     }
 
-    /// Number of jobs in the driving trace (arrived or not).
+    /// Number of jobs in the driving trace (arrived or not). For file
+    /// sources the total is only known at EOF, so this reports the
+    /// arrivals seen so far.
     pub fn trace_len(&self) -> usize {
-        self.pending_specs.len()
+        self.source.total_hint().unwrap_or(self.arrived)
     }
 
     /// Process exactly one event; false when the queue is empty.
@@ -273,7 +337,7 @@ impl World {
     /// phase, allocation, …) so the next [`Self::flush_dirty`] re-syncs
     /// the scheduler's persistent indexes for it.
     fn mark_dirty(&mut self, job: JobId) {
-        let j = job.idx();
+        let j = self.slot(job);
         if self.dirty_flags.len() <= j {
             self.dirty_flags.resize(self.jobs.len().max(j + 1), false);
         }
@@ -293,7 +357,8 @@ impl World {
         }
         let dirty = std::mem::take(&mut self.dirty);
         for &j in &dirty {
-            self.dirty_flags[j.idx()] = false;
+            let s = self.slot(j);
+            self.dirty_flags[s] = false;
         }
         {
             let view = self.view();
@@ -320,10 +385,24 @@ impl World {
         }
         match ev {
             Event::JobArrival(idx) => {
-                let spec = self.pending_specs[idx as usize].clone();
+                debug_assert_eq!(idx as usize, self.arrived, "arrivals handled in order");
+                let spec = self.next_spec.take().expect("arrival event without staged spec");
                 self.arrived += 1;
+                // Pull + schedule the next arrival immediately: its seq
+                // comes from the reserved band, so even a same-timestamp
+                // successor pops in exactly the upfront-scheduling order.
+                if let Some(next) = self.source.next_job() {
+                    debug_assert!(next.submit_s >= spec.submit_s, "trace not sorted");
+                    let seq = self.arrival_band + self.arrived as u64;
+                    self.queue.schedule_at_with_seq(
+                        SimTime::from_secs_f64(next.submit_s),
+                        seq,
+                        Event::JobArrival(self.arrived as u32),
+                    );
+                    self.next_spec = Some(next);
+                }
                 let now = self.now();
-                let id = JobId(self.jobs.len() as u32);
+                let id = JobId((self.jobs_base + self.jobs.len()) as u32);
                 let cost = TaskCost::new(&self.cfg, &spec);
                 let mut job = JobState::create(
                     id,
@@ -349,7 +428,7 @@ impl World {
                 // Cache the job-wide shuffle volume for launch_reduce.
                 self.inter_mb.push(inter_mb);
                 if let Some(exec) = &mut self.exec {
-                    exec.register_job(id, &self.jobs[id.idx()]);
+                    exec.register_job(id, self.jobs.last().expect("just pushed"));
                 }
                 let mut actions = std::mem::take(&mut self.action_buf);
                 actions.clear();
@@ -382,8 +461,12 @@ impl World {
                 }
             }
             Event::MapDone { job, task, node, attempt } => {
+                if job.idx() < self.jobs_base {
+                    return; // job already retired (streaming reclaim)
+                }
                 let now = self.now();
-                let js = &self.jobs[job.idx()];
+                let s = self.slot(job);
+                let js = &self.jobs[s];
                 let spec = js.spec_of(task);
                 let running = js.map_state(task).is_running();
                 // Epoch check (see [`Event::MapDone`]): during a race the
@@ -403,21 +486,21 @@ impl World {
                     // First-finisher wins: the backup beat the primary.
                     // Kill the loser — free its slot and retire its
                     // in-flight fetch; its completion event is now stale.
-                    let s = spec.expect("spec_won without spec");
+                    let sp = spec.expect("spec_won without spec");
                     let (loser_node, loser_tier) =
-                        self.jobs[job.idx()].mark_map_spec_finished(task, now);
+                        self.jobs[s].mark_map_spec_finished(task, now);
                     if let Some(tl) = &mut self.trace_log {
                         tl.record_span(TaskSpan {
                             job,
                             kind: crate::mapreduce::TaskKind::Map,
                             task: task.0,
                             node,
-                            start: s.started,
+                            start: sp.started,
                             end: now,
-                            tier: s.tier,
+                            tier: sp.tier,
                         });
                     }
-                    self.end_remote_flow(s.tier);
+                    self.end_remote_flow(sp.tier);
                     self.end_remote_flow(loser_tier);
                     let vm = self.cluster.vm_mut(loser_node);
                     debug_assert!(vm.busy_map > 0);
@@ -425,18 +508,18 @@ impl World {
                     self.fail_stats.speculative_wins += 1;
                     self.fail_stats.speculative_kills += 1;
                 } else {
-                    if let Some(s) = spec {
+                    if let Some(sp) = spec {
                         // Primary finished first: kill the still-running
                         // backup copy and free its slot.
-                        self.jobs[job.idx()].take_spec(task);
-                        self.end_remote_flow(s.tier);
-                        let vm = self.cluster.vm_mut(s.node);
+                        self.jobs[s].take_spec(task);
+                        self.end_remote_flow(sp.tier);
+                        let vm = self.cluster.vm_mut(sp.node);
                         debug_assert!(vm.busy_map > 0);
                         vm.busy_map -= 1;
                         self.fail_stats.speculative_kills += 1;
                     }
                     if let TaskState::Running { started, tier, .. } =
-                        *self.jobs[job.idx()].map_state(task)
+                        *self.jobs[s].map_state(task)
                     {
                         if let Some(tl) = &mut self.trace_log {
                             tl.record_span(TaskSpan {
@@ -452,13 +535,13 @@ impl World {
                         // The task's cross-rack fetch has left the shared core.
                         self.end_remote_flow(tier);
                     }
-                    self.jobs[job.idx()].mark_map_finished(task, now);
+                    self.jobs[s].mark_map_finished(task, now);
                 }
                 let vm = self.cluster.vm_mut(node);
                 debug_assert!(vm.busy_map > 0);
                 vm.busy_map -= 1;
                 if let Some(exec) = &mut self.exec {
-                    exec.run_map_task(job, task, &self.jobs[job.idx()]);
+                    exec.run_map_task(job, task, &self.jobs[s]);
                 }
                 self.mark_dirty(job);
                 let mut actions = std::mem::take(&mut self.action_buf);
@@ -471,16 +554,20 @@ impl World {
                 self.match_reconfigs();
             }
             Event::ReduceDone { job, task, node, attempt } => {
+                if job.idx() < self.jobs_base {
+                    return; // job already retired (streaming reclaim)
+                }
                 let now = self.now();
+                let s = self.slot(job);
                 {
-                    let js = &self.jobs[job.idx()];
+                    let js = &self.jobs[s];
                     if !js.reduce_state(task).is_running() || attempt != js.reduce_attempt(task) {
                         return; // stale completion from a crash-killed attempt
                     }
                 }
                 if let Some(tl) = &mut self.trace_log {
                     if let TaskState::Running { started, .. } =
-                        *self.jobs[job.idx()].reduce_state(task)
+                        *self.jobs[s].reduce_state(task)
                     {
                         tl.record_span(TaskSpan {
                             job,
@@ -493,18 +580,23 @@ impl World {
                         });
                     }
                 }
-                self.jobs[job.idx()].mark_reduce_finished(task, now);
+                self.jobs[s].mark_reduce_finished(task, now);
                 let vm = self.cluster.vm_mut(node);
                 debug_assert!(vm.busy_reduce > 0);
                 vm.busy_reduce -= 1;
                 if let Some(exec) = &mut self.exec {
-                    exec.run_reduce_task(job, task, &self.jobs[job.idx()]);
+                    exec.run_reduce_task(job, task, &self.jobs[s]);
                 }
-                if self.jobs[job.idx()].is_done() {
+                if self.jobs[s].is_done() {
                     // The only transition into `JobPhase::Done` — keep the
                     // O(1) `all_done` counter in lockstep.
                     self.done_jobs += 1;
                     self.record_job(job);
+                    while self.done_prefix < self.jobs.len()
+                        && self.jobs[self.done_prefix].is_done()
+                    {
+                        self.done_prefix += 1;
+                    }
                 }
                 self.mark_dirty(job);
                 let mut actions = std::mem::take(&mut self.action_buf);
@@ -515,8 +607,12 @@ impl World {
                 self.apply_actions(&actions);
                 self.action_buf = actions;
                 self.match_reconfigs();
+                self.maybe_compact();
             }
             Event::HotplugDone { from, to, task } => {
+                if task.job.idx() < self.jobs_base {
+                    return; // job already retired (streaming reclaim)
+                }
                 // The target PM died while the core was in flight: the
                 // crash reset already reclaimed every core, and the
                 // awaiting task (if any) went back to pending with the
@@ -533,7 +629,8 @@ impl World {
                         self.cfg.failures.crashes(),
                         "hot-plug grant lost its spare core: {e:?}"
                     );
-                    let js = &mut self.jobs[task.job.idx()];
+                    let s = self.slot(task.job);
+                    let js = &mut self.jobs[s];
                     if js.map_state(task.id).is_awaiting() {
                         js.mark_map_await_cancelled(task.id);
                         self.mark_dirty(task.job);
@@ -545,7 +642,7 @@ impl World {
                     tl.record_hotplug(HotplugMark { at, from, to });
                 }
                 let job = task.job;
-                let js = &self.jobs[job.idx()];
+                let js = &self.jobs[self.slot(job)];
                 let tid = task.id;
                 if js.map_state(tid).is_awaiting() {
                     self.launch_map(job, tid, to, LocalityTier::NodeLocal);
@@ -593,8 +690,10 @@ impl World {
                 continue;
             }
             // Any live job may lose attempts, outputs or awaits below;
-            // over-notifying the unaffected ones is harmless.
-            self.mark_dirty(JobId(ji as u32));
+            // over-notifying the unaffected ones is harmless. (`ji` is a
+            // window slot; ids are offset by the retired-jobs base, which
+            // is always 0 here — failures exclude streaming mode.)
+            self.mark_dirty(JobId((self.jobs_base + ji) as u32));
             for ti in 0..self.jobs[ji].total_maps() {
                 let t = TaskId(ti);
                 match *self.jobs[ji].map_state(t) {
@@ -644,7 +743,8 @@ impl World {
         // pending; its registered releases are void. In-flight hot-plug
         // grants are guarded at `HotplugDone`.
         for tref in self.cm.purge_pm(pm) {
-            let js = &mut self.jobs[tref.job.idx()];
+            let s = self.slot(tref.job);
+            let js = &mut self.jobs[s];
             if js.map_state(tref.id).is_awaiting() {
                 js.mark_map_await_cancelled(tref.id);
                 self.mark_dirty(tref.job);
@@ -678,7 +778,7 @@ impl World {
         for &a in actions {
             match a {
                 Action::LaunchMap { job, task, node } => {
-                    let tier = self.jobs[job.idx()].map_tier(task, node, &self.cluster);
+                    let tier = self.jobs[self.slot(job)].map_tier(task, node, &self.cluster);
                     assert!(
                         self.cluster.vm(node).free_map_slots() > 0,
                         "scheduler overfilled map slots on {node:?}"
@@ -690,7 +790,7 @@ impl World {
                         self.cluster.vm(node).free_map_slots() > 0,
                         "scheduler overfilled map slots on {node:?}"
                     );
-                    let js = &self.jobs[job.idx()];
+                    let js = &self.jobs[self.slot(job)];
                     debug_assert!(
                         js.map_state(task).is_running() && js.spec_of(task).is_none(),
                         "speculative launch on a non-running or already-backed map"
@@ -703,7 +803,7 @@ impl World {
                         "scheduler overfilled reduce slots on {node:?}"
                     );
                     assert!(
-                        self.jobs[job.idx()].map_finished(),
+                        self.jobs[self.slot(job)].map_finished(),
                         "reduce launched before map phase finished"
                     );
                     self.launch_reduce(job, task, node);
@@ -714,7 +814,8 @@ impl World {
                     target,
                     release_from,
                 } => {
-                    let js = &mut self.jobs[job.idx()];
+                    let s = self.slot(job);
+                    let js = &mut self.jobs[s];
                     debug_assert!(js.map_is_local(task, target));
                     js.mark_map_awaiting(task, target);
                     self.mark_dirty(job);
@@ -730,7 +831,8 @@ impl World {
                 Action::CancelAwait { job, task } => {
                     let tref = TaskRef::map(job, task.0);
                     self.cm.cancel_task(tref);
-                    self.jobs[job.idx()].mark_map_await_cancelled(task);
+                    let s = self.slot(job);
+                    self.jobs[s].mark_map_await_cancelled(task);
                     self.mark_dirty(job);
                 }
                 Action::SetAlloc {
@@ -738,7 +840,8 @@ impl World {
                     map_slots,
                     reduce_slots,
                 } => {
-                    let js = &mut self.jobs[job.idx()];
+                    let s = self.slot(job);
+                    let js = &mut self.jobs[s];
                     js.alloc_map_slots = map_slots;
                     js.alloc_reduce_slots = reduce_slots;
                     self.mark_dirty(job);
@@ -767,7 +870,8 @@ impl World {
                     // Release went stale between match and apply (shouldn't
                     // happen — match checks can_release — but stay safe):
                     // put the task back to pending.
-                    let js = &mut self.jobs[g.task.job.idx()];
+                    let s = self.slot(g.task.job);
+                    let js = &mut self.jobs[s];
                     if js.map_state(g.task.id).is_awaiting() {
                         js.mark_map_await_cancelled(g.task.id);
                         self.mark_dirty(g.task.job);
@@ -806,7 +910,8 @@ impl World {
         tier: LocalityTier,
     ) {
         let now = self.now();
-        let attempt = self.jobs[job.idx()].mark_map_launched(task, node, tier, now);
+        let s = self.slot(job);
+        let attempt = self.jobs[s].mark_map_launched(task, node, tier, now);
         self.mark_dirty(job);
         if attempt > 1 {
             // Epoch 1 is the first execution; anything later re-runs work
@@ -814,13 +919,13 @@ impl World {
             self.fail_stats.reexecuted_tasks += 1;
         }
         self.cluster.vm_mut(node).busy_map += 1;
-        let block_mb = self.jobs[job.idx()].block_mb[task.0 as usize];
+        let block_mb = self.jobs[s].block_mb[task.0 as usize];
         let io_mbps = self.map_io_mbps(tier);
         // Heterogeneity: a task on a speed-s machine takes nominal/s time.
         // The straggler multiplier draws from the dedicated failure
         // stream only (1.0, zero draws, with stragglers off).
         let speed = self.cluster.vm(node).speed;
-        let secs = self.costs[job.idx()].map_secs_at(block_mb, io_mbps, &mut self.rng) / speed
+        let secs = self.costs[s].map_secs_at(block_mb, io_mbps, &mut self.rng) / speed
             * straggler_multiplier(&self.cfg.failures, &mut self.failure_rng);
         self.queue.schedule_in(
             SimTime::from_secs_f64(secs),
@@ -833,15 +938,16 @@ impl World {
     /// the loser's completion is stale by epoch).
     fn launch_spec_map(&mut self, job: JobId, task: TaskId, node: NodeId) {
         let now = self.now();
-        let tier = self.jobs[job.idx()].map_tier(task, node, &self.cluster);
-        let attempt = self.jobs[job.idx()].begin_spec_map(task, node, tier, now);
+        let s = self.slot(job);
+        let tier = self.jobs[s].map_tier(task, node, &self.cluster);
+        let attempt = self.jobs[s].begin_spec_map(task, node, tier, now);
         self.mark_dirty(job);
         self.cluster.vm_mut(node).busy_map += 1;
         self.fail_stats.speculative_launches += 1;
-        let block_mb = self.jobs[job.idx()].block_mb[task.0 as usize];
+        let block_mb = self.jobs[s].block_mb[task.0 as usize];
         let io_mbps = self.map_io_mbps(tier);
         let speed = self.cluster.vm(node).speed;
-        let secs = self.costs[job.idx()].map_secs_at(block_mb, io_mbps, &mut self.rng) / speed
+        let secs = self.costs[s].map_secs_at(block_mb, io_mbps, &mut self.rng) / speed
             * straggler_multiplier(&self.cfg.failures, &mut self.failure_rng);
         self.queue.schedule_in(
             SimTime::from_secs_f64(secs),
@@ -851,7 +957,8 @@ impl World {
 
     fn launch_reduce(&mut self, job: JobId, task: TaskId, node: NodeId) {
         let now = self.now();
-        let attempt = self.jobs[job.idx()].mark_reduce_launched(task, node, now);
+        let s = self.slot(job);
+        let attempt = self.jobs[s].mark_reduce_launched(task, node, now);
         self.mark_dirty(job);
         if attempt > 1 {
             self.fail_stats.reexecuted_tasks += 1;
@@ -864,11 +971,11 @@ impl World {
         let inter_mb = if let Some(exec) = &self.exec {
             exec.intermediate_mb(job)
         } else {
-            self.inter_mb[job.idx()]
+            self.inter_mb[s]
         };
-        let js = &self.jobs[job.idx()];
+        let js = &self.jobs[s];
         let speed = self.cluster.vm(node).speed;
-        let secs = self.costs[job.idx()].reduce_secs(
+        let secs = self.costs[s].reduce_secs(
             inter_mb,
             js.total_maps(),
             js.total_reduces(),
@@ -881,10 +988,42 @@ impl World {
         );
     }
 
+    /// Reclaim the done prefix of the job window (streaming mode only):
+    /// retire jobs — releasing their HDFS input files — and advance
+    /// `jobs_base`. Triggered only when the prefix is both non-trivial
+    /// and at least half the window, so total compaction work stays
+    /// O(jobs) over a run and window capacity tracks ~2× the live jobs.
+    /// Every retired job already delivered its final `on_job_updated`
+    /// (job-done flushes before this runs), so scheduler window state
+    /// drops the same prefix on its next sync.
+    fn maybe_compact(&mut self) {
+        if self.stream.is_none() {
+            return;
+        }
+        let k = self.done_prefix;
+        if k < 64 || k * 2 < self.jobs.len() {
+            return;
+        }
+        for js in &self.jobs[..k] {
+            self.nn.release_file(js.input_file);
+        }
+        self.jobs.drain(..k);
+        self.costs.drain(..k);
+        self.inter_mb.drain(..k);
+        let kd = k.min(self.dirty_flags.len());
+        debug_assert!(
+            self.dirty_flags[..kd].iter().all(|f| !f),
+            "retired a job with a pending dirty notification"
+        );
+        self.dirty_flags.drain(..kd);
+        self.jobs_base += k;
+        self.done_prefix = 0;
+    }
+
     fn record_job(&mut self, job: JobId) {
-        let js = &self.jobs[job.idx()];
+        let js = &self.jobs[self.slot(job)];
         let completion = js.completion_time().expect("job done");
-        self.records.push(JobRecord {
+        let rec = JobRecord {
             id: js.id,
             job_type: js.spec.job_type,
             input_mb: js.spec.input_mb,
@@ -902,7 +1041,11 @@ impl World {
             remote_maps: js.remote_maps,
             maps: js.total_maps(),
             reduces: js.total_reduces(),
-        });
+        };
+        match &mut self.stream {
+            Some(agg) => agg.observe(&rec),
+            None => self.records.push(rec),
+        }
     }
 
     /// Access the real-exec engine (E2E verification).
@@ -911,14 +1054,18 @@ impl World {
     }
 
     pub fn into_metrics(self, scheduler: &str) -> RunMetrics {
-        let makespan_s = self
-            .records
-            .iter()
-            .map(|r| r.finished.as_secs_f64())
-            .fold(0.0f64, f64::max);
+        let makespan_s = match &self.stream {
+            Some(agg) => agg.max_finished_s,
+            None => self
+                .records
+                .iter()
+                .map(|r| r.finished.as_secs_f64())
+                .fold(0.0f64, f64::max),
+        };
         RunMetrics {
             scheduler: scheduler.to_string(),
             jobs: self.records,
+            stream: self.stream,
             makespan_s,
             hotplugs: self.cm.hotplugs,
             heartbeats: self.heartbeats,

@@ -12,9 +12,9 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 use crate::util::json::Json;
-use crate::util::stats::{Percentiles, Summary};
+use crate::util::stats::{Percentiles, QuantileSketch, Summary};
 
-use super::grid::ScenarioGrid;
+use super::grid::{ScenarioGrid, Workload};
 use super::runner::ScenarioResult;
 
 /// Aggregated statistics of one grid cell across its seed replicates.
@@ -31,6 +31,8 @@ pub struct GroupStats {
     pub arrival: String,
     /// Failure-model label (`off`, `crash-low-spec`, ...).
     pub failures: String,
+    /// Workload label (`gen` or `trace:<file>`).
+    pub workload: String,
     pub scale: f64,
     /// Seed replicates folded into this cell.
     pub seeds: usize,
@@ -75,7 +77,7 @@ pub struct GroupStats {
 pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
     // Key through the f64 bit pattern: scales come verbatim from the grid
     // axis, so identical cells have identical bits.
-    type CellKey = (String, String, usize, String, String, String, String, u64);
+    type CellKey = (String, String, usize, String, String, String, String, String, u64);
     let mut cells: BTreeMap<CellKey, Vec<usize>> = BTreeMap::new();
     for (i, r) in results.iter().enumerate() {
         let key = (
@@ -86,13 +88,17 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             r.scenario.topology.label(),
             r.scenario.arrival.label(),
             r.scenario.failures.label(),
+            r.scenario.workload.label(),
             r.scenario.scale.to_bits(),
         );
         cells.entry(key).or_default().push(i);
     }
 
     let mut out = Vec::with_capacity(cells.len());
-    for ((scheduler, mix, pms, profile, topology, arrival, failures, scale_bits), members) in cells
+    for (
+        (scheduler, mix, pms, profile, topology, arrival, failures, workload, scale_bits),
+        members,
+    ) in cells
     {
         let mut completion = Summary::new();
         let mut throughput = Summary::new();
@@ -102,6 +108,13 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
         let mut miss = Summary::new();
         let mut makespan = Summary::new();
         let mut pooled = Percentiles::new();
+        // Streamed replicates carry a quantile sketch instead of per-job
+        // records. The sketch is mergeable across replicates; when any
+        // member streamed, the cell's pooled percentiles come from the
+        // merged sketch (exact members fold in alongside). All-exact
+        // cells keep the exact pooled path, byte for byte.
+        let mut pooled_sketch = QuantileSketch::new();
+        let mut any_stream = false;
         let mut hotplugs = 0u64;
         let mut total_jobs = 0usize;
         let mut pm_crashes = 0u64;
@@ -125,10 +138,21 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             spec_kills += rep.failures.speculative_kills;
             reexecuted_tasks += rep.failures.reexecuted_tasks;
             total_jobs += rep.completed_jobs();
-            for j in &rep.jobs {
-                pooled.add(j.completion_s);
+            if let Some(agg) = rep.stream_agg() {
+                any_stream = true;
+                pooled_sketch.merge(&agg.sketch);
+            } else {
+                for j in rep.job_records() {
+                    pooled.add(j.completion_s);
+                    pooled_sketch.add(j.completion_s);
+                }
             }
         }
+        let (p50, p99) = if any_stream {
+            (pooled_sketch.pct(50.0), pooled_sketch.pct(99.0))
+        } else {
+            (pooled.pct(50.0), pooled.pct(99.0))
+        };
         out.push(GroupStats {
             scheduler,
             mix,
@@ -137,13 +161,14 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             topology,
             arrival,
             failures,
+            workload,
             scale: f64::from_bits(scale_bits),
             seeds: members.len(),
             total_jobs,
             mean_completion_s: completion.mean(),
             std_completion_s: completion.std(),
-            p50_completion_s: pooled.pct(50.0),
-            p99_completion_s: pooled.pct(99.0),
+            p50_completion_s: p50,
+            p99_completion_s: p99,
             mean_throughput_jph: throughput.mean(),
             std_throughput_jph: throughput.std(),
             mean_locality_pct: locality.mean(),
@@ -213,7 +238,19 @@ pub fn sweep_json(
         .set(
             "failures",
             grid.failures.iter().map(|f| f.label()).collect::<Vec<_>>(),
-        )
+        );
+    // The workload axis and the streaming switch are echoed only off
+    // their defaults, so pre-axis sweep artifacts stay byte-identical.
+    if grid.workloads != vec![Workload::Generated] {
+        grid_obj = grid_obj.set(
+            "workloads",
+            grid.workloads.iter().map(|w| w.label()).collect::<Vec<_>>(),
+        );
+    }
+    if grid.stream_metrics {
+        grid_obj = grid_obj.set("stream_metrics", true);
+    }
+    grid_obj = grid_obj
         .set("scales", grid.scales.clone())
         .set("seed_replicates", grid.seed_replicates)
         .set("jobs_per_scenario", grid.jobs_per_scenario)
@@ -227,17 +264,23 @@ pub fn sweep_json(
     let mut rows = Json::arr();
     for r in results {
         let rep = &r.report;
+        let mut row = Json::obj()
+            .set("index", r.scenario.index)
+            .set("scheduler", r.scenario.scheduler.name())
+            .set("mix", r.scenario.mix.name())
+            .set("pms", r.scenario.pms)
+            .set("profile", r.scenario.profile.name())
+            .set("topology", r.scenario.topology.label())
+            .set("arrival", r.scenario.arrival.label())
+            .set("failures", r.scenario.failures.label());
+        if r.scenario.workload != Workload::Generated {
+            row = row.set("workload", r.scenario.workload.label());
+        }
+        if rep.stream_agg().is_some() {
+            row = row.set("streamed", true);
+        }
         rows = rows.push(
-            Json::obj()
-                .set("index", r.scenario.index)
-                .set("scheduler", r.scenario.scheduler.name())
-                .set("mix", r.scenario.mix.name())
-                .set("pms", r.scenario.pms)
-                .set("profile", r.scenario.profile.name())
-                .set("topology", r.scenario.topology.label())
-                .set("arrival", r.scenario.arrival.label())
-                .set("failures", r.scenario.failures.label())
-                .set("scale", r.scenario.scale)
+            row.set("scale", r.scenario.scale)
                 .set("replicate", r.scenario.replicate)
                 .set("stream_seed", format!("{:#018x}", r.scenario.stream_seed))
                 .set("jobs", rep.completed_jobs())
@@ -260,16 +303,19 @@ pub fn sweep_json(
 
     let mut aggs = Json::arr();
     for g in groups {
+        let mut agg = Json::obj()
+            .set("scheduler", g.scheduler.as_str())
+            .set("mix", g.mix.as_str())
+            .set("pms", g.pms)
+            .set("profile", g.profile.as_str())
+            .set("topology", g.topology.as_str())
+            .set("arrival", g.arrival.as_str())
+            .set("failures", g.failures.as_str());
+        if g.workload != "gen" {
+            agg = agg.set("workload", g.workload.as_str());
+        }
         aggs = aggs.push(
-            Json::obj()
-                .set("scheduler", g.scheduler.as_str())
-                .set("mix", g.mix.as_str())
-                .set("pms", g.pms)
-                .set("profile", g.profile.as_str())
-                .set("topology", g.topology.as_str())
-                .set("arrival", g.arrival.as_str())
-                .set("failures", g.failures.as_str())
-                .set("scale", g.scale)
+            agg.set("scale", g.scale)
                 .set("seeds", g.seeds)
                 .set("total_jobs", g.total_jobs)
                 .set("mean_completion_s", g.mean_completion_s)

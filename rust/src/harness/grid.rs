@@ -17,7 +17,7 @@ use crate::config::{FailureModel, PmProfile, SimConfig};
 use crate::scheduler::SchedulerKind;
 use crate::util::rng::derive_stream_seed;
 use crate::util::Rng;
-use crate::workloads::trace::{ideal_completion_estimate, Arrival, JobTrace};
+use crate::workloads::trace::{ideal_completion_estimate, Arrival, JobTrace, TraceSource};
 use crate::workloads::{JobSpec, JobType, ALL_JOB_TYPES};
 
 /// What kind of jobs one scenario submits.
@@ -47,6 +47,40 @@ impl JobMix {
     }
 }
 
+/// Where one scenario's jobs come from.
+///
+/// `Generated` draws the trace from the scenario's derived stream seed
+/// (the classic path — [`JobMix`] decides the shape). `TraceFile` replays
+/// a plain-text trace file (see `docs/TRACE_FORMAT.md`) **streamed line
+/// by line**, so trace length never bounds memory.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// Synthesize the trace from the scenario seed (the default).
+    Generated,
+    /// Replay the job trace at this path (`--workload trace:<file>`).
+    TraceFile(String),
+}
+
+impl Workload {
+    /// Stable label carried into artifacts and journal keys.
+    pub fn label(&self) -> String {
+        match self {
+            Workload::Generated => "gen".to_string(),
+            Workload::TraceFile(p) => format!("trace:{p}"),
+        }
+    }
+
+    /// Parse a `--workload` operand: `gen` or `trace:<file>`.
+    pub fn from_label(s: &str) -> Option<Workload> {
+        if s == "gen" {
+            return Some(Workload::Generated);
+        }
+        s.strip_prefix("trace:")
+            .filter(|p| !p.is_empty())
+            .map(|p| Workload::TraceFile(p.to_string()))
+    }
+}
+
 /// The declarative grid: every combination of the axis vectors becomes one
 /// scenario per seed replicate. Axis vectors are public so callers apply
 /// per-axis overrides before expansion (`vcsched sweep --pms 10 ...`).
@@ -72,6 +106,15 @@ pub struct ScenarioGrid {
     /// Defaults to the single [`FailureModel::off`] point, which keeps
     /// every run byte-identical to the failure-free simulator.
     pub failures: Vec<FailureModel>,
+    /// Axis: job source (seed-generated or a replayed trace file).
+    /// Defaults to the single [`Workload::Generated`] point, which keeps
+    /// every artifact byte-identical to pre-axis releases.
+    pub workloads: Vec<Workload>,
+    /// Run every cell with constant-memory streaming metrics
+    /// ([`SimConfig::stream_metrics`]): Welford + quantile-sketch
+    /// accumulators instead of per-job records, completed jobs retired.
+    /// Off by default (the exact per-job path).
+    pub stream_metrics: bool,
     /// Axis: seed replicate ids (only their count and position matter; the
     /// actual RNG stream comes from `(grid_seed, scenario_index)`).
     pub seed_replicates: usize,
@@ -100,6 +143,8 @@ impl ScenarioGrid {
             arrivals: vec![Arrival::STEADY],
             scales: vec![100.0],
             failures: vec![FailureModel::off()],
+            workloads: vec![Workload::Generated],
+            stream_metrics: false,
             seed_replicates: 10,
             jobs_per_scenario: 15,
             mean_gap_s: 5.0,
@@ -129,6 +174,8 @@ impl ScenarioGrid {
             arrivals: vec![Arrival::STEADY],
             scales: vec![100.0],
             failures: vec![FailureModel::off()],
+            workloads: vec![Workload::Generated],
+            stream_metrics: false,
             seed_replicates: 1,
             jobs_per_scenario: 2000,
             mean_gap_s: 0.5,
@@ -157,9 +204,39 @@ impl ScenarioGrid {
             arrivals: vec![Arrival::STEADY],
             scales: vec![100.0],
             failures: vec![FailureModel::off()],
+            workloads: vec![Workload::Generated],
+            stream_metrics: false,
             seed_replicates: 1,
             jobs_per_scenario: 50_000,
             mean_gap_s: 0.1,
+            deadline_factor: (1.6, 3.0),
+            grid_seed: 42,
+        }
+    }
+
+    /// The million-job streaming grid (`--grid stress-1m`, `--preset
+    /// stress-1m`, `benches/simcore.rs` under `SIMCORE_1M=1`): one
+    /// DeadlineVc scenario submitting 1,000,000 Poisson jobs to the
+    /// stress cluster with `stream_metrics` on. Arrivals are pulled
+    /// lazily from the generator and completed jobs are retired, so peak
+    /// memory is bounded by the *active* job window — the bench asserts
+    /// a flat RSS budget that does not scale with the job count.
+    pub fn stress_1m() -> Self {
+        Self {
+            name: "stress-1m".to_string(),
+            schedulers: vec![SchedulerKind::DeadlineVc],
+            mixes: vec![JobMix::Mixed],
+            pm_counts: vec![200],
+            profiles: vec![PmProfile::Uniform],
+            topologies: vec![Topology::Racks(8)],
+            arrivals: vec![Arrival::STEADY],
+            scales: vec![100.0],
+            failures: vec![FailureModel::off()],
+            workloads: vec![Workload::Generated],
+            stream_metrics: true,
+            seed_replicates: 1,
+            jobs_per_scenario: 1_000_000,
+            mean_gap_s: 2.0,
             deadline_factor: (1.6, 3.0),
             grid_seed: 42,
         }
@@ -178,6 +255,8 @@ impl ScenarioGrid {
             arrivals: vec![Arrival::STEADY],
             scales: vec![32.0],
             failures: vec![FailureModel::off()],
+            workloads: vec![Workload::Generated],
+            stream_metrics: false,
             seed_replicates: 2,
             jobs_per_scenario: 5,
             mean_gap_s: 5.0,
@@ -196,6 +275,7 @@ impl ScenarioGrid {
             * self.arrivals.len()
             * self.scales.len()
             * self.failures.len()
+            * self.workloads.len()
             * self.seed_replicates
     }
 
@@ -216,24 +296,28 @@ impl ScenarioGrid {
                             for &arrival in &self.arrivals {
                                 for &scale in &self.scales {
                                     for &failures in &self.failures {
-                                        for replicate in 0..self.seed_replicates {
-                                            let index = out.len();
-                                            out.push(Scenario {
-                                                index,
-                                                scheduler,
-                                                mix,
-                                                pms,
-                                                profile,
-                                                topology,
-                                                arrival,
-                                                scale,
-                                                failures,
-                                                replicate,
-                                                stream_seed: derive_stream_seed(
-                                                    self.grid_seed,
-                                                    index as u64,
-                                                ),
-                                            });
+                                        for workload in &self.workloads {
+                                            for replicate in 0..self.seed_replicates {
+                                                let index = out.len();
+                                                out.push(Scenario {
+                                                    index,
+                                                    scheduler,
+                                                    mix,
+                                                    pms,
+                                                    profile,
+                                                    topology,
+                                                    arrival,
+                                                    scale,
+                                                    failures,
+                                                    workload: workload.clone(),
+                                                    stream_metrics: self.stream_metrics,
+                                                    replicate,
+                                                    stream_seed: derive_stream_seed(
+                                                        self.grid_seed,
+                                                        index as u64,
+                                                    ),
+                                                });
+                                            }
                                         }
                                     }
                                 }
@@ -261,6 +345,10 @@ pub struct Scenario {
     pub scale: f64,
     /// Failure-injection model applied to this cell.
     pub failures: FailureModel,
+    /// Job source for this cell (generated or a replayed trace file).
+    pub workload: Workload,
+    /// Whether this cell runs with streaming (constant-memory) metrics.
+    pub stream_metrics: bool,
     /// Seed replicate number within the cell (for grouping/aggregation).
     pub replicate: usize,
     /// Derived RNG stream seed (`derive_stream_seed(grid_seed, index)`).
@@ -278,6 +366,7 @@ impl Scenario {
         cfg.pm_profile = self.profile;
         cfg.topology = self.topology;
         cfg.failures = self.failures;
+        cfg.stream_metrics = self.stream_metrics;
         cfg.seed = self.stream_seed;
         cfg
     }
@@ -286,6 +375,11 @@ impl Scenario {
     /// scenario (grid parameters + derived stream seed). Submission times
     /// come from the scenario's [`Arrival`] axis point.
     pub fn job_trace(&self, grid: &ScenarioGrid, cfg: &SimConfig) -> JobTrace {
+        if let Workload::TraceFile(path) = &self.workload {
+            return TraceSource::from_file(path)
+                .unwrap_or_else(|e| panic!("scenario {}: {e}", self.index))
+                .materialize();
+        }
         let n = grid.jobs_per_scenario;
         let (flo, fhi) = grid.deadline_factor;
         match self.mix {
@@ -312,6 +406,33 @@ impl Scenario {
                 }
                 JobTrace::new(jobs)
             }
+        }
+    }
+
+    /// The streaming job source for this scenario. `Generated` + `Mixed`
+    /// uses the lazy Poisson generator (same RNG stream as [`job_trace`],
+    /// bit-identical specs, O(1) memory); `Generated` + `Single` falls
+    /// back to the materialized trace (shape needs the full size ladder);
+    /// `TraceFile` streams the file line by line.
+    ///
+    /// [`job_trace`]: Scenario::job_trace
+    pub fn job_source(&self, grid: &ScenarioGrid, cfg: &SimConfig) -> Result<TraceSource, String> {
+        match &self.workload {
+            Workload::TraceFile(path) => TraceSource::from_file(path),
+            Workload::Generated => match self.mix {
+                JobMix::Mixed => {
+                    let (flo, fhi) = grid.deadline_factor;
+                    Ok(TraceSource::poisson_arrivals(
+                        cfg,
+                        grid.jobs_per_scenario,
+                        grid.mean_gap_s,
+                        self.arrival,
+                        flo..fhi,
+                        self.stream_seed,
+                    ))
+                }
+                JobMix::Single(_) => Ok(TraceSource::from_trace(self.job_trace(grid, cfg))),
+            },
         }
     }
 }
@@ -447,6 +568,67 @@ mod tests {
                 assert_eq!(x.deadline_s, y.deadline_s);
             }
         }
+    }
+
+    #[test]
+    fn workload_labels_roundtrip() {
+        assert_eq!(Workload::from_label("gen"), Some(Workload::Generated));
+        assert_eq!(
+            Workload::from_label("trace:traces/day1.txt"),
+            Some(Workload::TraceFile("traces/day1.txt".to_string()))
+        );
+        assert_eq!(Workload::from_label("trace:"), None);
+        assert_eq!(Workload::from_label("bogus"), None);
+        for w in [Workload::Generated, Workload::TraceFile("a/b.txt".into())] {
+            assert_eq!(Workload::from_label(&w.label()), Some(w.clone()));
+        }
+    }
+
+    #[test]
+    fn workload_axis_multiplies_the_grid() {
+        let mut g = ScenarioGrid::quick();
+        g.workloads = vec![
+            Workload::Generated,
+            Workload::TraceFile("traces/day1.txt".to_string()),
+        ];
+        assert_eq!(g.len(), ScenarioGrid::quick().len() * 2);
+        let scenarios = g.scenarios();
+        assert_eq!(scenarios.len(), g.len());
+        for w in &g.workloads {
+            assert!(scenarios.iter().any(|s| s.workload == *w));
+        }
+    }
+
+    #[test]
+    fn job_source_streams_the_same_mixed_trace() {
+        // Generated + Mixed: the lazy source must materialize to exactly
+        // the trace `job_trace` builds — same RNG stream, same specs.
+        let g = ScenarioGrid::quick();
+        for sc in g.scenarios().into_iter().filter(|s| s.mix == JobMix::Mixed) {
+            let cfg = sc.sim_config();
+            let eager = sc.job_trace(&g, &cfg);
+            let lazy = sc.job_source(&g, &cfg).unwrap().materialize();
+            assert_eq!(eager.len(), lazy.len());
+            for (a, b) in eager.jobs.iter().zip(&lazy.jobs) {
+                assert_eq!(a.job_type, b.job_type);
+                assert_eq!(a.input_mb.to_bits(), b.input_mb.to_bits());
+                assert_eq!(a.submit_s.to_bits(), b.submit_s.to_bits());
+                assert_eq!(a.deadline_s.map(f64::to_bits), b.deadline_s.map(f64::to_bits));
+            }
+        }
+    }
+
+    #[test]
+    fn stress_1m_grid_is_streaming_and_valid() {
+        let g = ScenarioGrid::stress_1m();
+        assert_eq!(g.len(), 1);
+        assert!(g.stream_metrics);
+        assert_eq!(g.jobs_per_scenario, 1_000_000);
+        let sc = &g.scenarios()[0];
+        assert!(sc.stream_metrics);
+        let cfg = sc.sim_config();
+        cfg.validate().unwrap();
+        assert!(cfg.stream_metrics);
     }
 
     #[test]

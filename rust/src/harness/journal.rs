@@ -21,8 +21,9 @@ use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
 use crate::mapreduce::JobId;
-use crate::metrics::{FailureStats, JobRecord, RunMetrics};
+use crate::metrics::{FailureStats, JobRecord, RunMetrics, StreamAgg};
 use crate::sim::SimTime;
+use crate::util::stats::{QuantileSketch, Summary};
 use crate::workloads::JobType;
 
 use super::grid::{Scenario, ScenarioGrid};
@@ -31,8 +32,10 @@ use super::grid::{Scenario, ScenarioGrid};
 /// journals are skipped instead of mis-parsed. (v2: tiered locality —
 /// per-job `local,rack,remote` counts replaced `local,nonlocal`. v3:
 /// failure/speculation counters appended after `predictor_calls`, and the
-/// failure-model label joined the content hash.)
-const VERSION: &str = "v3";
+/// failure-model label joined the content hash. v4: the workload and
+/// stream-metrics axes joined the content hash, and streamed runs journal
+/// their constant-memory accumulators as a `@`-prefixed jobs field.)
+const VERSION: &str = "v4";
 
 /// FNV-1a 64-bit over a byte string (stable across platforms/runs).
 fn fnv64(bytes: &[u8]) -> u64 {
@@ -53,7 +56,7 @@ fn fnv64(bytes: &[u8]) -> u64 {
 /// README's resumable-sweeps section.)
 pub fn scenario_key(grid: &ScenarioGrid, sc: &Scenario) -> u64 {
     let canon = format!(
-        "{}|{}|{}|{}|{:016x}|{}|{}|{}|{}|{}|{}|{:016x}|{:016x}|{:016x}|{:016x}",
+        "{}|{}|{}|{}|{:016x}|{}|{}|{}|{}|{}|{}|{:016x}|{:016x}|{:016x}|{:016x}|{}|{}",
         env!("CARGO_PKG_VERSION"),
         sc.scheduler.name(),
         sc.mix.name(),
@@ -69,6 +72,8 @@ pub fn scenario_key(grid: &ScenarioGrid, sc: &Scenario) -> u64 {
         grid.mean_gap_s.to_bits(),
         grid.deadline_factor.0.to_bits(),
         grid.deadline_factor.1.to_bits(),
+        sc.workload.label(),
+        sc.stream_metrics,
     );
     fnv64(canon.as_bytes())
 }
@@ -131,6 +136,9 @@ impl Journal {
 
 fn render_line(key: u64, r: &RunMetrics) -> String {
     let mut jobs = String::new();
+    if let Some(agg) = r.stream_agg() {
+        jobs = render_stream(agg);
+    }
     for (i, j) in r.jobs.iter().enumerate() {
         if i > 0 {
             jobs.push(';');
@@ -177,6 +185,67 @@ fn render_line(key: u64, r: &RunMetrics) -> String {
     )
 }
 
+/// Streamed runs journal the accumulators, not per-job records: a `@`-
+/// prefixed jobs field carrying the raw Welford moments (`{}` emits the
+/// shortest string that parses back to the identical f64 bits, so the
+/// summary round-trips exactly), the encoded quantile sketch, and the
+/// integer tier/deadline counters. The explicit job count on a streamed
+/// line is 0.
+fn render_stream(a: &StreamAgg) -> String {
+    let c = &a.completion;
+    format!(
+        "@{}|{},{},{},{},{},{}|{}|{},{},{},{},{},{}",
+        a.completed,
+        c.count(),
+        c.mean(),
+        c.m2(),
+        c.min(),
+        c.max(),
+        c.sum(),
+        a.sketch.encode(),
+        a.local_maps,
+        a.rack_maps,
+        a.remote_maps,
+        a.deadlined,
+        a.missed,
+        a.max_finished_s,
+    )
+}
+
+fn parse_stream(s: &str) -> Option<StreamAgg> {
+    let body = s.strip_prefix('@')?;
+    let mut parts = body.split('|');
+    let completed: u64 = parts.next()?.parse().ok()?;
+    let sf: Vec<&str> = parts.next()?.split(',').collect();
+    if sf.len() != 6 {
+        return None;
+    }
+    let completion = Summary::from_raw(
+        sf[0].parse().ok()?,
+        sf[1].parse().ok()?,
+        sf[2].parse().ok()?,
+        sf[3].parse().ok()?,
+        sf[4].parse().ok()?,
+        sf[5].parse().ok()?,
+    );
+    let sketch = QuantileSketch::decode(parts.next()?)?;
+    let cf: Vec<&str> = parts.next()?.split(',').collect();
+    if cf.len() != 6 || parts.next().is_some() {
+        return None;
+    }
+    Some(StreamAgg {
+        completed,
+        completion,
+        sketch,
+        local_maps: cf[0].parse().ok()?,
+        rack_maps: cf[1].parse().ok()?,
+        remote_maps: cf[2].parse().ok()?,
+        deadlined: cf[3].parse().ok()?,
+        missed: cf[4].parse().ok()?,
+        max_finished_s: cf[5].parse().ok()?,
+    })
+}
+
 fn opt_f64(v: Option<f64>) -> String {
     match v {
         Some(x) => format!("{x}"),
@@ -211,7 +280,13 @@ fn parse_line(line: &str) -> Option<(u64, RunMetrics)> {
         return None; // truncated mid-write or trailing garbage
     }
     let mut jobs = Vec::new();
-    if !jobs_field.is_empty() {
+    let mut stream = None;
+    if jobs_field.starts_with('@') {
+        if njobs != 0 {
+            return None; // streamed lines carry no per-job records
+        }
+        stream = Some(parse_stream(jobs_field)?);
+    } else if !jobs_field.is_empty() {
         for rec in jobs_field.split(';') {
             jobs.push(parse_job(rec)?);
         }
@@ -224,6 +299,7 @@ fn parse_line(line: &str) -> Option<(u64, RunMetrics)> {
         RunMetrics {
             scheduler,
             jobs,
+            stream,
             makespan_s,
             hotplugs,
             heartbeats,
@@ -353,8 +429,8 @@ mod tests {
         {
             use std::io::Write as _;
             let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
-            f.write_all(b"v3\tdeadbeef\tfair\t12.5").unwrap(); // truncated early
-            f.write_all(b"\nv2\tdeadbeef\tfair\t12.5\tok\n").unwrap(); // stale version
+            f.write_all(b"v4\tdeadbeef\tfair\t12.5").unwrap(); // truncated early
+            f.write_all(b"\nv3\tdeadbeef\tfair\t12.5\tok\n").unwrap(); // stale version
             f.write_all(b"\nnot a journal line\n").unwrap();
             let full = render_line(0xfeed_f00d, &report);
             let boundary = full.rfind(';').expect("multi-job line");
@@ -366,6 +442,44 @@ mod tests {
         assert!(loaded.contains_key(&key));
         j.clear().unwrap();
         assert!(j.load().is_empty());
+    }
+
+    #[test]
+    fn streamed_report_roundtrips_exactly() {
+        // A streaming-mode report journals its accumulators; parsing the
+        // line back must restore every derived metric bit for bit.
+        let mut g = ScenarioGrid::quick();
+        g.jobs_per_scenario = 6;
+        g.stream_metrics = true;
+        let sc = g.scenarios().remove(0);
+        let key = scenario_key(&g, &sc);
+        let report = run_scenario(&g, &sc).report;
+        let agg = report.stream_agg().expect("stream_metrics run must stream");
+        assert!(report.job_records().is_empty());
+
+        let line = render_line(key, &report);
+        let (k2, parsed) = parse_line(line.trim_end()).expect("parse back");
+        assert_eq!(k2, key);
+        let pagg = parsed.stream_agg().expect("streamed flag survives");
+        assert_eq!(pagg.completed, agg.completed);
+        assert_eq!(pagg.completion.count(), agg.completion.count());
+        assert_eq!(pagg.completion.mean().to_bits(), agg.completion.mean().to_bits());
+        assert_eq!(pagg.completion.m2().to_bits(), agg.completion.m2().to_bits());
+        assert_eq!(
+            (pagg.local_maps, pagg.rack_maps, pagg.remote_maps),
+            (agg.local_maps, agg.rack_maps, agg.remote_maps)
+        );
+        assert_eq!((pagg.deadlined, pagg.missed), (agg.deadlined, agg.missed));
+        assert_eq!(pagg.max_finished_s.to_bits(), agg.max_finished_s.to_bits());
+        assert_eq!(pagg.sketch.encode(), agg.sketch.encode());
+        // Everything the artifacts derive matches too.
+        assert_eq!(parsed.completed_jobs(), report.completed_jobs());
+        assert_eq!(
+            parsed.mean_completion_s().to_bits(),
+            report.mean_completion_s().to_bits()
+        );
+        assert_eq!(parsed.miss_rate().to_bits(), report.miss_rate().to_bits());
+        assert_eq!(parsed.to_json().render(), report.to_json().render());
     }
 
     #[test]
@@ -396,6 +510,17 @@ mod tests {
             let mut failing = sc.clone();
             failing.failures = crate::config::FailureModel::crash_low();
             assert_ne!(scenario_key(&g, sc), scenario_key(&g, &failing));
+        }
+        // The workload and streaming axes enter the content hash: a
+        // trace-replay or streamed cell must never replay generated/exact
+        // journaled numbers (and vice versa).
+        for sc in &scenarios {
+            let mut traced = sc.clone();
+            traced.workload = crate::harness::Workload::TraceFile("t.txt".to_string());
+            assert_ne!(scenario_key(&g, sc), scenario_key(&g, &traced));
+            let mut streamed = sc.clone();
+            streamed.stream_metrics = true;
+            assert_ne!(scenario_key(&g, sc), scenario_key(&g, &streamed));
         }
         // ...but the key is position-independent content: the same
         // resolved scenario hashes identically regardless of grid object.

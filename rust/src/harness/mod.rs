@@ -11,7 +11,9 @@
 //!
 //! * [`grid`] — [`ScenarioGrid`] declares the axes; expansion assigns each
 //!   scenario a dense index and derives its RNG stream from
-//!   `(grid_seed, scenario_index)`;
+//!   `(grid_seed, scenario_index)`; the [`Workload`] axis swaps the
+//!   seed-generated trace for a streamed trace-file replay, and
+//!   `stream_metrics` switches cells to constant-memory accumulators;
 //! * [`preset`] — named grids (`fig4-throughput`, `fig5-locality`,
 //!   `fig6-deadline-miss`, `fig7-failures`) that pin the axes to
 //!   reproduce each paper figure and emit a baseline-vs-candidate
@@ -79,7 +81,7 @@ pub mod preset;
 pub mod runner;
 
 pub use agg::{aggregate, aggregates_csv, sweep_json, GroupStats};
-pub use grid::{JobMix, Scenario, ScenarioGrid};
+pub use grid::{JobMix, Scenario, ScenarioGrid, Workload};
 pub use journal::{scenario_key, Journal};
 pub use preset::{
     compare_cells, comparison_json, headline_gain, preset as figure_preset, ComparisonRow,

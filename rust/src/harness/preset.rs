@@ -29,7 +29,7 @@ use crate::scheduler::SchedulerKind;
 use crate::workloads::trace::Arrival;
 
 use super::agg::GroupStats;
-use super::grid::{JobMix, ScenarioGrid};
+use super::grid::{JobMix, ScenarioGrid, Workload};
 
 /// The per-cell metric a preset's comparison table is about.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -103,13 +103,14 @@ pub struct Preset {
 }
 
 /// Every preset name, for help text and error messages.
-pub const PRESET_NAMES: [&str; 6] = [
+pub const PRESET_NAMES: [&str; 7] = [
     "fig4-throughput",
     "fig5-locality",
     "fig6-deadline-miss",
     "fig7-failures",
     "stress",
     "stress-xl",
+    "stress-1m",
 ];
 
 /// Resolve a preset by name into its pinned grid and comparison spec.
@@ -124,6 +125,8 @@ pub fn preset(name: &str) -> Option<(ScenarioGrid, Preset)> {
         arrivals: vec![Arrival::STEADY],
         scales: vec![100.0],
         failures: vec![FailureModel::off()],
+        workloads: vec![Workload::Generated],
+        stream_metrics: false,
         seed_replicates: 5,
         jobs_per_scenario: 15,
         mean_gap_s: 5.0,
@@ -243,6 +246,23 @@ pub fn preset(name: &str) -> Option<(ScenarioGrid, Preset)> {
                 paper_gain: None,
             },
         )),
+        // A single-scheduler memory guard, not a comparison: baseline ==
+        // candidate, so the comparison table is empty by construction and
+        // the artifact carries the aggregate row only.
+        "stress-1m" => Some((
+            ScenarioGrid::stress_1m(),
+            Preset {
+                name: "stress-1m",
+                describes: "million-job streaming stress: 1M Poisson jobs \
+                            through deadline_vc with constant-memory \
+                            accumulators and retired job state (flat-RSS \
+                            guard — see benches/simcore.rs, SIMCORE_1M=1)",
+                metric: HeadlineMetric::ThroughputJph,
+                baseline: SchedulerKind::DeadlineVc,
+                candidate: SchedulerKind::DeadlineVc,
+                paper_gain: None,
+            },
+        )),
         _ => None,
     }
 }
@@ -257,6 +277,9 @@ pub struct ComparisonRow {
     pub topology: String,
     pub arrival: String,
     pub failures: String,
+    /// Workload label (`gen` or `trace:<file>`); a comparison axis only
+    /// when the grid sweeps trace replays against generated traffic.
+    pub workload: String,
     pub scale: f64,
     pub baseline: f64,
     pub candidate: f64,
@@ -269,7 +292,7 @@ pub struct ComparisonRow {
 pub fn compare_cells(groups: &[GroupStats], preset: &Preset) -> Vec<ComparisonRow> {
     use std::collections::BTreeMap;
     // Key: everything but the scheduler axis.
-    type CellKey = (String, usize, String, String, String, String, u64);
+    type CellKey = (String, usize, String, String, String, String, String, u64);
     let mut cells: BTreeMap<CellKey, (Option<f64>, Option<f64>)> = BTreeMap::new();
     for g in groups {
         let key = (
@@ -279,6 +302,7 @@ pub fn compare_cells(groups: &[GroupStats], preset: &Preset) -> Vec<ComparisonRo
             g.topology.clone(),
             g.arrival.clone(),
             g.failures.clone(),
+            g.workload.clone(),
             g.scale.to_bits(),
         );
         let entry = cells.entry(key).or_insert((None, None));
@@ -291,7 +315,7 @@ pub fn compare_cells(groups: &[GroupStats], preset: &Preset) -> Vec<ComparisonRo
     cells
         .into_iter()
         .filter_map(
-            |((mix, pms, profile, topology, arrival, failures, scale_bits), (b, c))| {
+            |((mix, pms, profile, topology, arrival, failures, workload, scale_bits), (b, c))| {
                 let (baseline, candidate) = (b?, c?);
                 Some(ComparisonRow {
                     mix,
@@ -300,6 +324,7 @@ pub fn compare_cells(groups: &[GroupStats], preset: &Preset) -> Vec<ComparisonRo
                     topology,
                     arrival,
                     failures,
+                    workload,
                     scale: f64::from_bits(scale_bits),
                     baseline,
                     candidate,
@@ -325,15 +350,20 @@ pub fn comparison_json(preset: &Preset, rows: &[ComparisonRow]) -> crate::util::
     use crate::util::json::Json;
     let mut arr = Json::arr();
     for r in rows {
+        let mut cell = Json::obj()
+            .set("mix", r.mix.as_str())
+            .set("pms", r.pms)
+            .set("profile", r.profile.as_str())
+            .set("topology", r.topology.as_str())
+            .set("arrival", r.arrival.as_str())
+            .set("failures", r.failures.as_str());
+        // Emitted only off the default point so pre-axis artifacts stay
+        // byte-identical.
+        if r.workload != "gen" {
+            cell = cell.set("workload", r.workload.as_str());
+        }
         arr = arr.push(
-            Json::obj()
-                .set("mix", r.mix.as_str())
-                .set("pms", r.pms)
-                .set("profile", r.profile.as_str())
-                .set("topology", r.topology.as_str())
-                .set("arrival", r.arrival.as_str())
-                .set("failures", r.failures.as_str())
-                .set("scale", r.scale)
+            cell.set("scale", r.scale)
                 .set(preset.baseline.name(), r.baseline)
                 .set(preset.candidate.name(), r.candidate)
                 .set("gain", r.gain),

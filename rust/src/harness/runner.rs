@@ -31,14 +31,27 @@ pub struct ScenarioResult {
     pub report: RunMetrics,
 }
 
-/// Run one scenario. Pure: the result depends only on `(grid, scenario)`.
+/// Run one scenario. Pure: the result depends only on `(grid, scenario)`
+/// (a trace-file workload folds the file contents into that input).
+///
+/// Jobs come from the scenario's streaming [`TraceSource`] — for the
+/// default generated-mixed workload this draws the identical RNG stream
+/// the materialized `job_trace` path drew, so reports are byte-identical
+/// to pre-streaming releases; for trace files and million-job cells it
+/// keeps memory independent of trace length.
+///
+/// [`TraceSource`]: crate::workloads::trace::TraceSource
 pub fn run_scenario(grid: &ScenarioGrid, scenario: &Scenario) -> ScenarioResult {
     let cfg = scenario.sim_config();
     cfg.validate().unwrap_or_else(|e| {
         panic!("scenario {} has an invalid config: {e}", scenario.index)
     });
-    let trace = scenario.job_trace(grid, &cfg);
-    let report = coordinator::run_simulation(&cfg, scenario.scheduler, &trace);
+    let source = scenario.job_source(grid, &cfg).unwrap_or_else(|e| {
+        panic!("scenario {}: workload source failed: {e}", scenario.index)
+    });
+    let mut predictor = crate::predictor::NativePredictor::new();
+    let report =
+        coordinator::run_simulation_source(&cfg, scenario.scheduler, source, &mut predictor);
     ScenarioResult {
         scenario: scenario.clone(),
         report,

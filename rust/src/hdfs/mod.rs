@@ -144,6 +144,15 @@ impl NameNode {
         idx
     }
 
+    /// Drop a file's metadata entirely (the job that read it retired and
+    /// its window slot was reclaimed — see the coordinator's streaming
+    /// mode). [`NameNode::blocks`] on a released file returns the empty
+    /// slice, same as for a never-created id. Releasing an unknown file
+    /// is a no-op.
+    pub fn release_file(&mut self, file: FileId) {
+        self.files.remove(&file);
+    }
+
     /// A DataNode died: drop its replicas from every block and re-replicate
     /// each affected block onto an *alive* unchosen node (`alive[i]` is
     /// node `i`'s liveness), preferring the dead replica's rack-placement

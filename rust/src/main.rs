@@ -12,12 +12,17 @@
 //! Common flags: --sched <fifo|fair|delay|edf|deadline_vc> --seed N
 //!   --pms N --scale MB_PER_GB --jobs N --xla (use the PJRT predictor)
 //!   --json (machine-readable output)
-//! Sweep flags: --grid <default|quick|stress|stress-xl> --preset <fig4-throughput|
-//!   fig5-locality|fig6-deadline-miss|fig7-failures|stress|stress-xl> --threads N
+//!   --workload <gen|trace:FILE> (replay a trace file, streamed — see
+//!   docs/TRACE_FORMAT.md) --stream (constant-memory metrics)
+//!   --trace-out FILE (write the workload as a replayable trace file)
+//! Sweep flags: --grid <default|quick|stress|stress-xl|stress-1m> --preset
+//!   <fig4-throughput|fig5-locality|fig6-deadline-miss|fig7-failures|
+//!   stress|stress-xl|stress-1m> --threads N
 //!   --seeds N --mix M --profile <uniform|split-2x|long-tail>[,..]
 //!   --topology <flat|racks-N|fat-tree-N>[,..] --arrival
 //!   <steady|burst[-xRATE]>[,..] --failures
 //!   <off|stragglers[-spec]|crash-low[-spec]|crash-high[-spec]>[,..]
+//!   --workload <gen|trace:FILE>[,..] --stream
 //!   --fresh (ignore the journal)
 //!   --out DIR (artifact directory, default results/)
 
@@ -95,12 +100,36 @@ fn report_line(r: &Report) {
 }
 
 fn cmd_simulate(args: &Args) {
-    let cfg = cfg_from(args);
+    use vcsched::harness::Workload;
+    use vcsched::workloads::trace::{write_trace_file, TraceSource};
+    let mut cfg = cfg_from(args);
+    if args.flag("stream") {
+        cfg.stream_metrics = true;
+        cfg.validate().expect("invalid config");
+    }
     let kind = sched_from(args, SchedulerKind::DeadlineVc);
     let n = args.get_usize("jobs", 25);
-    let trace = JobTrace::poisson(&cfg, n, 5.0, 1.6..3.0, cfg.seed);
+    let mut source = match args.get("workload") {
+        Some(label) => match Workload::from_label(label) {
+            Some(Workload::TraceFile(path)) => TraceSource::from_file(&path)
+                .unwrap_or_else(|e| panic!("--workload {label:?}: {e}")),
+            Some(Workload::Generated) => {
+                TraceSource::from_trace(JobTrace::poisson(&cfg, n, 5.0, 1.6..3.0, cfg.seed))
+            }
+            None => panic!("unknown workload {label:?} (expected gen or trace:FILE)"),
+        },
+        None => TraceSource::from_trace(JobTrace::poisson(&cfg, n, 5.0, 1.6..3.0, cfg.seed)),
+    };
+    if let Some(path) = args.get("trace-out") {
+        // Persist the workload as a replayable trace file; the written
+        // file replays byte-identically (docs/TRACE_FORMAT.md).
+        let trace = source.materialize();
+        write_trace_file(std::path::Path::new(path), &trace.jobs)
+            .unwrap_or_else(|e| panic!("--trace-out {path}: {e}"));
+        source = TraceSource::from_trace(trace);
+    }
     let mut p = predictor_from(args);
-    let r = coordinator::run_simulation_with(&cfg, kind, &trace, p.as_mut());
+    let r = coordinator::run_simulation_source(&cfg, kind, source, p.as_mut());
     if args.flag("json") {
         println!("{}", r.to_json().render());
     } else {
@@ -236,7 +265,7 @@ fn cmd_sweep(args: &Args) {
     use vcsched::config::{FailureModel, PmProfile};
     use vcsched::harness::{
         aggregate, aggregates_csv, compare_cells, comparison_json, figure_preset,
-        run_sweep_resumable, sweep_json, JobMix, Journal, ScenarioGrid, PRESET_NAMES,
+        run_sweep_resumable, sweep_json, JobMix, Journal, ScenarioGrid, Workload, PRESET_NAMES,
     };
     use vcsched::workloads::trace::Arrival;
 
@@ -252,8 +281,11 @@ fn cmd_sweep(args: &Args) {
             "quick" => ScenarioGrid::quick(),
             "stress" => ScenarioGrid::stress(),
             "stress-xl" => ScenarioGrid::stress_xl(),
+            "stress-1m" => ScenarioGrid::stress_1m(),
             other => {
-                panic!("unknown grid {other:?} (expected default|quick|stress|stress-xl)")
+                panic!(
+                    "unknown grid {other:?} (expected default|quick|stress|stress-xl|stress-1m)"
+                )
             }
         };
         (g, None)
@@ -317,6 +349,19 @@ fn cmd_sweep(args: &Args) {
             )
         });
     }
+    if let Some(labels) = args.get("workload") {
+        grid.workloads = labels
+            .split(',')
+            .map(|w| {
+                Workload::from_label(w.trim()).unwrap_or_else(|| {
+                    panic!("unknown workload {w:?} (expected gen or trace:FILE)")
+                })
+            })
+            .collect();
+    }
+    if args.flag("stream") {
+        grid.stream_metrics = true;
+    }
 
     let default_threads = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -326,7 +371,7 @@ fn cmd_sweep(args: &Args) {
     println!(
         "sweep {:?}: {} scenarios ({} schedulers x {} mixes x {} PM counts x \
          {} profiles x {} topologies x {} arrivals x {} scales x {} failure \
-         models x {} seeds), {} jobs each, {threads} threads",
+         models x {} workloads x {} seeds), {} jobs each, {threads} threads{}",
         grid.name,
         grid.len(),
         grid.schedulers.len(),
@@ -337,8 +382,10 @@ fn cmd_sweep(args: &Args) {
         grid.arrivals.len(),
         grid.scales.len(),
         grid.failures.len(),
+        grid.workloads.len(),
         grid.seed_replicates,
         grid.jobs_per_scenario,
+        if grid.stream_metrics { ", streaming metrics" } else { "" },
     );
 
     let out = std::path::PathBuf::from(args.get_str("out", "results"));
@@ -586,14 +633,19 @@ fn print_help() {
          usage: vcsched <simulate|compare|fig2|fig3|table2|throughput|sweep|gantt|export> [flags]\n\
          flags: --sched K --a K --b K --seed N --pms N --jobs N --runs N\n\
          \x20      --scale MB_PER_GB --xla --json\n\
-         sweep: --grid <default|quick|stress|stress-xl> --preset <fig4-throughput|\n\
-         \x20      fig5-locality|fig6-deadline-miss|fig7-failures|stress|stress-xl>\n\
+         \x20      --workload <gen|trace:FILE> --stream --trace-out FILE\n\
+         \x20      (simulate: replay a trace file / constant-memory metrics /\n\
+         \x20      write the workload as a replayable trace)\n\
+         sweep: --grid <default|quick|stress|stress-xl|stress-1m> --preset\n\
+         \x20      <fig4-throughput|fig5-locality|fig6-deadline-miss|\n\
+         \x20      fig7-failures|stress|stress-xl|stress-1m>\n\
          \x20      --threads N --seeds N\n\
          \x20      --mix <mixed|TYPE> --sched K[,K..]\n\
          \x20      --profile <uniform|split-2x|long-tail>[,..]\n\
          \x20      --topology <flat|racks-N|fat-tree-N>[,..]\n\
          \x20      --arrival <steady|burst[-xRATE]>[,..]\n\
          \x20      --failures <off|stragglers[-spec]|crash-low[-spec]|crash-high[-spec]>[,..]\n\
+         \x20      --workload <gen|trace:FILE>[,..] --stream\n\
          \x20      --fresh --out DIR"
     );
 }

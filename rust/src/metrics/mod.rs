@@ -7,7 +7,7 @@ pub use trace_log::{HotplugMark, TaskSpan, TraceLog};
 use crate::mapreduce::JobId;
 use crate::sim::SimTime;
 use crate::util::json::Json;
-use crate::util::stats::Summary;
+use crate::util::stats::{QuantileSketch, Summary};
 use crate::workloads::JobType;
 
 /// Final record for one completed job.
@@ -72,11 +72,128 @@ pub struct FailureStats {
     pub blocks_lost: u64,
 }
 
+/// Constant-memory aggregate over completed jobs: the streaming-mode
+/// replacement for storing one [`JobRecord`] per job. Every derived
+/// metric [`RunMetrics`] reports comes from these accumulators — Welford
+/// mean/std, a mergeable quantile sketch for p50/p99, and integer tier/
+/// deadline counters — folded in job-completion order, so on the same
+/// run the scalar aggregates are bit-identical to the exact per-record
+/// path (pinned by the streaming differential test).
+#[derive(Clone, Debug)]
+pub struct StreamAgg {
+    pub completed: u64,
+    /// Completion-time accumulator (mean/std/min/max, Welford).
+    pub completion: Summary,
+    /// Completion-time quantile sketch (p50/p99 at ~0.5% relative error).
+    pub sketch: QuantileSketch,
+    pub local_maps: u64,
+    pub rack_maps: u64,
+    pub remote_maps: u64,
+    /// Jobs that carried a deadline.
+    pub deadlined: u64,
+    /// Deadlined jobs that missed.
+    pub missed: u64,
+    /// Latest job finish time (the makespan fold).
+    pub max_finished_s: f64,
+}
+
+impl StreamAgg {
+    pub fn new() -> Self {
+        Self {
+            completed: 0,
+            completion: Summary::new(),
+            sketch: QuantileSketch::new(),
+            local_maps: 0,
+            rack_maps: 0,
+            remote_maps: 0,
+            deadlined: 0,
+            missed: 0,
+            max_finished_s: 0.0,
+        }
+    }
+
+    /// Fold one completed job in (the streaming `record_job` path).
+    pub fn observe(&mut self, r: &JobRecord) {
+        self.completed += 1;
+        self.completion.add(r.completion_s);
+        self.sketch.add(r.completion_s);
+        self.local_maps += r.local_maps as u64;
+        self.rack_maps += r.rack_maps as u64;
+        self.remote_maps += r.remote_maps as u64;
+        if let Some(met) = r.met_deadline {
+            self.deadlined += 1;
+            if !met {
+                self.missed += 1;
+            }
+        }
+        self.max_finished_s = self.max_finished_s.max(r.finished.as_secs_f64());
+    }
+
+    /// Aggregate an exact record set (the small-scale differential
+    /// oracle: same fold, same order, same accumulators).
+    pub fn from_records(records: &[JobRecord]) -> Self {
+        let mut agg = Self::new();
+        for r in records {
+            agg.observe(r);
+        }
+        agg
+    }
+
+    /// Merge another run's aggregate in (cross-scenario pooling).
+    pub fn merge(&mut self, other: &StreamAgg) {
+        self.completed += other.completed;
+        self.completion.merge(&other.completion);
+        self.sketch.merge(&other.sketch);
+        self.local_maps += other.local_maps;
+        self.rack_maps += other.rack_maps;
+        self.remote_maps += other.remote_maps;
+        self.deadlined += other.deadlined;
+        self.missed += other.missed;
+        self.max_finished_s = self.max_finished_s.max(other.max_finished_s);
+    }
+
+    fn total_maps_finished(&self) -> u64 {
+        self.local_maps + self.rack_maps + self.remote_maps
+    }
+
+    fn tier_pct(&self, count: u64) -> f64 {
+        let total = self.total_maps_finished();
+        if total == 0 {
+            0.0
+        } else {
+            100.0 * count as f64 / total as f64
+        }
+    }
+
+    fn miss_rate(&self) -> f64 {
+        if self.deadlined == 0 {
+            0.0
+        } else {
+            self.missed as f64 / self.deadlined as f64
+        }
+    }
+}
+
+impl Default for StreamAgg {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Aggregated results of one simulation run.
+///
+/// Two storage modes behind one API: the exact path keeps a
+/// [`JobRecord`] per job (accessible via [`RunMetrics::job_records`]);
+/// the streaming path (`SimConfig::stream_metrics`) keeps only a
+/// [`StreamAgg`], so memory never scales with trace length. All derived
+/// metrics work in both modes; per-job lookups return `None`/empty in
+/// streaming mode.
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
     pub scheduler: String,
-    pub jobs: Vec<JobRecord>,
+    pub(crate) jobs: Vec<JobRecord>,
+    /// `Some` iff the run streamed (then `jobs` is empty).
+    pub(crate) stream: Option<StreamAgg>,
     pub makespan_s: f64,
     pub hotplugs: u64,
     pub heartbeats: u64,
@@ -89,8 +206,32 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
+    /// Exact per-job records — empty when the run streamed (check
+    /// [`RunMetrics::stream_agg`]).
+    pub fn job_records(&self) -> &[JobRecord] {
+        &self.jobs
+    }
+
+    /// The streaming aggregate, when this run streamed.
+    pub fn stream_agg(&self) -> Option<&StreamAgg> {
+        self.stream.as_ref()
+    }
+
+    /// Build an exact-mode result from parts (tests and tools outside
+    /// the crate; the coordinator fills the fields directly).
+    pub fn from_records(scheduler: &str, jobs: Vec<JobRecord>) -> Self {
+        Self {
+            scheduler: scheduler.to_string(),
+            jobs,
+            ..Default::default()
+        }
+    }
+
     pub fn completed_jobs(&self) -> usize {
-        self.jobs.len()
+        match &self.stream {
+            Some(s) => s.completed as usize,
+            None => self.jobs.len(),
+        }
     }
 
     /// Jobs per simulated hour (the paper's headline "throughput of jobs").
@@ -98,11 +239,14 @@ impl RunMetrics {
         if self.makespan_s <= 0.0 {
             0.0
         } else {
-            self.jobs.len() as f64 / (self.makespan_s / 3600.0)
+            self.completed_jobs() as f64 / (self.makespan_s / 3600.0)
         }
     }
 
     pub fn mean_completion_s(&self) -> f64 {
+        if let Some(s) = &self.stream {
+            return s.completion.mean();
+        }
         let mut s = Summary::new();
         for j in &self.jobs {
             s.add(j.completion_s);
@@ -111,13 +255,23 @@ impl RunMetrics {
     }
 
     fn total_maps_finished(&self) -> u64 {
+        if let Some(s) = &self.stream {
+            return s.total_maps_finished();
+        }
         self.jobs
             .iter()
             .map(|j| (j.local_maps + j.rack_maps + j.remote_maps) as u64)
             .sum()
     }
 
-    fn tier_pct(&self, count: impl Fn(&JobRecord) -> u32) -> f64 {
+    fn tier_pct(
+        &self,
+        count: impl Fn(&JobRecord) -> u32,
+        streamed: impl Fn(&StreamAgg) -> u64,
+    ) -> f64 {
+        if let Some(s) = &self.stream {
+            return s.tier_pct(streamed(s));
+        }
         let total = self.total_maps_finished();
         if total == 0 {
             0.0
@@ -131,22 +285,25 @@ impl RunMetrics {
     /// locality metric; see [`RunMetrics::rack_pct`] /
     /// [`RunMetrics::remote_pct`] for the other two tiers).
     pub fn locality_pct(&self) -> f64 {
-        self.tier_pct(|j| j.local_maps)
+        self.tier_pct(|j| j.local_maps, |s| s.local_maps)
     }
 
     /// Cluster-wide *rack-local* map percentage (0 on flat topologies).
     pub fn rack_pct(&self) -> f64 {
-        self.tier_pct(|j| j.rack_maps)
+        self.tier_pct(|j| j.rack_maps, |s| s.rack_maps)
     }
 
     /// Cluster-wide *off-rack* map percentage. The three tier percentages
     /// sum to 100 (when any map finished).
     pub fn remote_pct(&self) -> f64 {
-        self.tier_pct(|j| j.remote_maps)
+        self.tier_pct(|j| j.remote_maps, |s| s.remote_maps)
     }
 
     /// Deadline miss rate over jobs that had deadlines.
     pub fn miss_rate(&self) -> f64 {
+        if let Some(s) = &self.stream {
+            return s.miss_rate();
+        }
         let with_deadline: Vec<_> = self
             .jobs
             .iter()
@@ -206,7 +363,7 @@ impl RunMetrics {
                     .set("remote_maps", j.remote_maps as u64),
             );
         }
-        Json::obj()
+        let mut out = Json::obj()
             .set("scheduler", self.scheduler.as_str())
             .set("makespan_s", self.makespan_s)
             .set("throughput_jobs_per_hour", self.throughput_jobs_per_hour())
@@ -224,8 +381,19 @@ impl RunMetrics {
             .set("speculative_kills", self.failures.speculative_kills)
             .set("reexecuted_tasks", self.failures.reexecuted_tasks)
             .set("blocks_relocated", self.failures.blocks_relocated)
-            .set("blocks_lost", self.failures.blocks_lost)
-            .set("jobs", jobs)
+            .set("blocks_lost", self.failures.blocks_lost);
+        if let Some(s) = &self.stream {
+            // Streaming runs carry no per-job array; emit the aggregate
+            // figures the array would otherwise let a reader derive.
+            out = out
+                .set("completed_jobs", s.completed)
+                .set("mean_completion_s", s.completion.mean())
+                .set("std_completion_s", s.completion.std())
+                .set("p50_completion_s", s.sketch.pct(50.0))
+                .set("p99_completion_s", s.sketch.pct(99.0))
+                .set("streamed", true);
+        }
+        out.set("jobs", jobs)
     }
 }
 
@@ -334,6 +502,46 @@ mod tests {
         let s = m.to_json().render();
         assert!(s.contains("\"scheduler\":\"fair\""));
         assert!(s.contains("\"met_deadline\":true"));
+    }
+
+    #[test]
+    fn stream_agg_matches_exact() {
+        let records = vec![
+            record_tiered(JobType::Grep, 10.0, 4, 3, 1, Some(true)),
+            record_tiered(JobType::Sort, 20.0, 2, 4, 2, Some(false)),
+            record_tiered(JobType::WordCount, 30.0, 1, 0, 5, None),
+        ];
+        let exact = RunMetrics {
+            jobs: records.clone(),
+            makespan_s: 100.0,
+            ..Default::default()
+        };
+        let streamed = RunMetrics {
+            stream: Some(StreamAgg::from_records(&records)),
+            makespan_s: 100.0,
+            ..Default::default()
+        };
+        assert_eq!(exact.completed_jobs(), streamed.completed_jobs());
+        let pairs = [
+            (
+                exact.throughput_jobs_per_hour(),
+                streamed.throughput_jobs_per_hour(),
+            ),
+            (exact.mean_completion_s(), streamed.mean_completion_s()),
+            (exact.locality_pct(), streamed.locality_pct()),
+            (exact.rack_pct(), streamed.rack_pct()),
+            (exact.remote_pct(), streamed.remote_pct()),
+            (exact.miss_rate(), streamed.miss_rate()),
+        ];
+        for (a, b) in pairs {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let s = streamed.to_json().render();
+        assert!(s.contains("\"streamed\":true"));
+        assert!(s.contains("\"completed_jobs\":3"));
+        assert!(s.contains("\"jobs\":[]"));
+        // Exact mode emits no streaming keys (byte-stable schema).
+        assert!(!exact.to_json().render().contains("\"streamed\""));
     }
 
     #[test]

@@ -178,6 +178,9 @@ pub struct DeadlineVcScheduler {
     // ---- persistent scheduling order ----
     index: OrderIndex<DvcKey>,
     covered: usize,
+    /// Job id of slot 0 in `dirty_flag`/`bound_of` — tracks the view's
+    /// `jobs_base` so retired jobs cost no per-job state.
+    win_base: usize,
     // ---- delta Eq. 10 state ----
     /// Jobs whose demand inputs changed since the last alloc event.
     dirty_list: Vec<JobId>,
@@ -303,6 +306,7 @@ impl DeadlineVcScheduler {
             tuning,
             index: OrderIndex::new(),
             covered: 0,
+            win_base: 0,
             dirty_list: Vec::new(),
             dirty_flag: Vec::new(),
             bound_heap: BinaryHeap::new(),
@@ -318,6 +322,7 @@ impl DeadlineVcScheduler {
     fn reset(&mut self) {
         self.index.clear();
         self.covered = 0;
+        self.win_base = 0;
         self.dirty_list.clear();
         self.dirty_flag.clear();
         self.bound_heap.clear();
@@ -328,17 +333,28 @@ impl DeadlineVcScheduler {
     /// Absorb jobs that arrived since the last callback; drop all state
     /// when the world shrank (scheduler reuse across Worlds).
     fn sync(&mut self, view: &SchedView) {
-        if self.covered > view.jobs.len() {
+        let total = view.total_jobs();
+        if self.covered > total {
             self.reset();
+        }
+        self.index.set_base(view.jobs_base);
+        if view.jobs_base > self.win_base {
+            // Retired jobs are done: their dirty flags are moot and their
+            // bound-heap entries go dead (the pop-side liveness check
+            // skips ids below the window).
+            let k = (view.jobs_base - self.win_base).min(self.dirty_flag.len());
+            self.dirty_flag.drain(..k);
+            self.bound_of.drain(..k);
+            self.win_base = view.jobs_base;
         }
         if self.dirty_flag.len() < view.jobs.len() {
             self.dirty_flag.resize(view.jobs.len(), false);
             self.bound_of.resize(view.jobs.len(), None);
         }
-        for job in &view.jobs[self.covered..] {
+        for job in &view.jobs[self.covered.max(view.jobs_base) - view.jobs_base..] {
             self.index.set_key(job.id, active_key(job));
         }
-        self.covered = view.jobs.len();
+        self.covered = total;
     }
 
     /// Delta Eq. 10 (see module docs): recompute `(n_m, n_r)` only for
@@ -355,11 +371,16 @@ impl DeadlineVcScheduler {
         self.sync(view);
         let now = view.now;
         self.cand.clear();
-        if trigger.idx() < view.jobs.len() {
+        if view.job_get(trigger).is_some() {
             self.cand.push(trigger.0);
         }
         for j in self.dirty_list.drain(..) {
-            if let Some(f) = self.dirty_flag.get_mut(j.idx()) {
+            // Retired ids (done jobs dropped from the window) have
+            // nothing left to recompute.
+            let Some(slot) = j.idx().checked_sub(self.win_base) else {
+                continue;
+            };
+            if let Some(f) = self.dirty_flag.get_mut(slot) {
                 *f = false;
             }
             self.cand.push(j.0);
@@ -369,9 +390,13 @@ impl DeadlineVcScheduler {
                 break;
             }
             self.bound_heap.pop();
-            // Live entry (not superseded by a later re-bound)?
-            if self.bound_of.get(j.idx()).copied().flatten() == Some(t) {
-                self.bound_of[j.idx()] = None;
+            // Live entry (not superseded by a later re-bound, not below
+            // the retired-jobs window floor)?
+            let slot = j.idx().checked_sub(self.win_base);
+            let live =
+                slot.and_then(|s| self.bound_of.get(s).copied().flatten()) == Some(t);
+            if live {
+                self.bound_of[j.idx() - self.win_base] = None;
                 self.cand.push(j.0);
             }
         }
@@ -381,15 +406,18 @@ impl DeadlineVcScheduler {
         self.alloc_ids.clear();
         self.alloc_demands.clear();
         for &ji in &self.cand {
-            let Some(job) = view.jobs.get(ji as usize) else {
+            let Some(slot) = (ji as usize).checked_sub(self.win_base) else {
+                continue;
+            };
+            let Some(job) = view.jobs.get(slot) else {
                 continue;
             };
             if job.is_done() {
-                self.bound_of[ji as usize] = None;
+                self.bound_of[slot] = None;
                 continue;
             }
             let Some(d) = job_demand(job, now) else {
-                self.bound_of[ji as usize] = None;
+                self.bound_of[slot] = None;
                 continue;
             };
             self.alloc_ids.push(job.id);
@@ -406,7 +434,7 @@ impl DeadlineVcScheduler {
             let jid = self.alloc_ids[i];
             let s = solved[i];
             let d = self.alloc_demands[i];
-            let job = &view.jobs[jid.idx()];
+            let job = &view.jobs[view.slot(jid)];
             // An infeasible deadline gets the full cluster: minimize
             // lateness (the paper leaves this case unspecified).
             let (m, r) = if s.infeasible {
@@ -424,7 +452,7 @@ impl DeadlineVcScheduler {
                     reduce_slots: r,
                 });
             }
-            self.bound_of[jid.idx()] =
+            self.bound_of[view.slot(jid)] =
                 match next_change_bound(job, &d, s, m, r, self.max_map_slots, self.max_reduce_slots)
                 {
                     Some(t) => {
@@ -474,7 +502,10 @@ impl DeadlineVcScheduler {
         let now = view.now;
         let timeout = self.reconfig_timeout;
         self.awaiting_since.retain(|&(job, task, since)| {
-            let js = &view.jobs[job.idx()];
+            // A retired job is done: no awaiting tasks can remain for it.
+            let Some(js) = view.job_get(job) else {
+                return false;
+            };
             let state = js.map_state(TaskId(task));
             if !state.is_awaiting() {
                 return false; // launched or cancelled elsewhere
@@ -502,7 +533,7 @@ impl Scheduler for DeadlineVcScheduler {
 
     fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
         self.sync(view);
-        let j = job.idx();
+        let j = view.slot(job);
         self.index.set_key(job, active_key(&view.jobs[j]));
         if !self.dirty_flag[j] {
             self.dirty_flag[j] = true;
@@ -516,7 +547,7 @@ impl Scheduler for DeadlineVcScheduler {
         expect.sort_unstable();
         self.index.check_matches(&expect)?;
         for (got, &ji) in self.index.iter().zip(&Self::job_order(view)) {
-            if got.idx() != ji {
+            if view.slot(got) != ji {
                 return Err(format!(
                     "index order diverges from job_order: {got:?} vs index {ji}"
                 ));
@@ -558,7 +589,7 @@ impl Scheduler for DeadlineVcScheduler {
         self.expire_awaiting(view, out);
         // One claim generation spans the whole heartbeat (both passes and
         // the reduce phase); the slot overlay likewise.
-        self.claims.begin(view.jobs);
+        self.claims.begin(view.jobs_base, view.jobs);
         self.overlay.begin(view.cluster.num_nodes());
 
         let mut free_reduce = view.cluster.vm(node).free_reduce_slots();
@@ -599,7 +630,7 @@ impl Scheduler for DeadlineVcScheduler {
             // job is considered; the walk aborts as soon as nothing can
             // place anywhere, so a saturated cluster visits O(1) jobs.
             'jobs: for jid in index.iter() {
-                let job = &view.jobs[jid.idx()];
+                let job = &view.jobs[view.slot(jid)];
                 if job.is_done() || job.map_finished() {
                     continue;
                 }
@@ -708,7 +739,7 @@ impl Scheduler for DeadlineVcScheduler {
         // ---- reduce phase (Alg. 2 lines 10-14 + spare pass) ----
         for pass in 0..passes {
             for jid in index.iter() {
-                let job = &view.jobs[jid.idx()];
+                let job = &view.jobs[view.slot(jid)];
                 if job.is_done() || !job.map_finished() {
                     continue;
                 }

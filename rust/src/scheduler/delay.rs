@@ -46,6 +46,9 @@ pub struct DelayScheduler {
     had_pending: Vec<bool>,
     index: OrderIndex<FairKey>,
     covered: usize,
+    /// Job id of slot 0 in `base`/`had_pending` — tracks the view's
+    /// `jobs_base` so retired jobs cost no counter memory.
+    win_base: usize,
     claims: ClaimLedger,
 }
 
@@ -58,6 +61,7 @@ impl DelayScheduler {
             had_pending: Vec::new(),
             index: OrderIndex::new(),
             covered: 0,
+            win_base: 0,
             claims: ClaimLedger::new(),
         }
     }
@@ -90,28 +94,37 @@ impl DelayScheduler {
             return 0;
         }
         self.hb
-            .saturating_sub(self.base[job.id.idx()])
+            .saturating_sub(self.base[job.id.idx() - self.win_base])
             .min(u64::from(u32::MAX)) as u32
     }
 
     fn sync(&mut self, view: &SchedView) {
-        if self.covered > view.jobs.len() {
+        let total = view.total_jobs();
+        if self.covered > total {
             self.index.clear();
             self.base.clear();
             self.had_pending.clear();
             self.covered = 0;
+            self.win_base = 0;
+        }
+        self.index.set_base(view.jobs_base);
+        if view.jobs_base > self.win_base {
+            let k = (view.jobs_base - self.win_base).min(self.base.len());
+            self.base.drain(..k);
+            self.had_pending.drain(..k);
+            self.win_base = view.jobs_base;
         }
         if self.base.len() < view.jobs.len() {
             self.base.resize(view.jobs.len(), 0);
             self.had_pending.resize(view.jobs.len(), false);
         }
-        for job in &view.jobs[self.covered..] {
-            let j = job.id.idx();
+        for job in &view.jobs[self.covered.max(view.jobs_base) - view.jobs_base..] {
+            let j = job.id.idx() - self.win_base;
             self.base[j] = self.hb;
             self.had_pending[j] = job.pending_maps() > 0;
             self.index.set_key(job.id, active_key(job));
         }
-        self.covered = view.jobs.len();
+        self.covered = total;
     }
 }
 
@@ -133,12 +146,13 @@ impl Scheduler for DelayScheduler {
         self.base.clear();
         self.had_pending.clear();
         self.covered = 0;
+        self.win_base = 0;
         self.hb = 0;
     }
 
     fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
         self.sync(view);
-        let j = job.idx();
+        let j = view.slot(job);
         let js = &view.jobs[j];
         let pending = js.pending_maps() > 0;
         if pending && !self.had_pending[j] {
@@ -182,6 +196,7 @@ impl Scheduler for DelayScheduler {
                 ref index,
                 ref mut claims,
                 ref base,
+                win_base,
                 hb,
                 ..
             } = *self;
@@ -190,13 +205,13 @@ impl Scheduler for DelayScheduler {
             greedy_fill(
                 view,
                 node,
-                index.iter().map(|j| j.idx()),
+                index.iter().map(|j| view.slot(j)),
                 claims,
                 |job| {
                     let skipped = if job.pending_maps() == 0 {
                         0
                     } else {
-                        hb.saturating_sub(base[job.id.idx()])
+                        hb.saturating_sub(base[job.id.idx() - win_base])
                             .min(u64::from(u32::MAX)) as u32
                     };
                     Self::tier_cap(patience, skipped, racked)
@@ -210,7 +225,7 @@ impl Scheduler for DelayScheduler {
         // their virtual count grows with `hb`. O(actions), not O(jobs).
         for a in &out[start..] {
             if let Action::LaunchMap { job, .. } = a {
-                self.base[job.idx()] = self.hb + 1;
+                self.base[job.idx() - self.win_base] = self.hb + 1;
             }
         }
         self.hb += 1;

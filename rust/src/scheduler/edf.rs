@@ -76,14 +76,16 @@ impl EdfScheduler {
     }
 
     fn sync(&mut self, view: &SchedView) {
-        if self.covered > view.jobs.len() {
+        let total = view.total_jobs();
+        if self.covered > total {
             self.index.clear();
             self.covered = 0;
         }
-        for job in &view.jobs[self.covered..] {
+        self.index.set_base(view.jobs_base);
+        for job in &view.jobs[self.covered.max(view.jobs_base) - view.jobs_base..] {
             self.index.set_key(job.id, active_key(job));
         }
-        self.covered = view.jobs.len();
+        self.covered = total;
     }
 }
 
@@ -107,7 +109,7 @@ impl Scheduler for EdfScheduler {
 
     fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
         self.sync(view);
-        self.index.set_key(job, active_key(&view.jobs[job.idx()]));
+        self.index.set_key(job, active_key(view.job(job)));
     }
 
     fn check_index(&self, view: &SchedView) -> Result<(), String> {
@@ -116,7 +118,7 @@ impl Scheduler for EdfScheduler {
         expect.sort_unstable();
         self.index.check_matches(&expect)?;
         for (got, &ji) in self.index.iter().zip(&Self::edf_order(view)) {
-            if got.idx() != ji {
+            if view.slot(got) != ji {
                 return Err(format!(
                     "index order diverges from edf_order: {got:?} vs index {ji}"
                 ));
@@ -151,7 +153,7 @@ impl Scheduler for EdfScheduler {
         greedy_fill(
             view,
             node,
-            index.iter().map(|j| j.idx()),
+            index.iter().map(|j| view.slot(j)),
             claims,
             |_| LocalityTier::Remote,
             out,

@@ -79,14 +79,16 @@ impl FairScheduler {
     }
 
     fn sync(&mut self, view: &SchedView) {
-        if self.covered > view.jobs.len() {
+        let total = view.total_jobs();
+        if self.covered > total {
             self.index.clear();
             self.covered = 0;
         }
-        for job in &view.jobs[self.covered..] {
+        self.index.set_base(view.jobs_base);
+        for job in &view.jobs[self.covered.max(view.jobs_base) - view.jobs_base..] {
             self.index.set_key(job.id, active_key(job));
         }
-        self.covered = view.jobs.len();
+        self.covered = total;
     }
 }
 
@@ -115,7 +117,7 @@ impl Scheduler for FairScheduler {
 
     fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
         self.sync(view);
-        self.index.set_key(job, active_key(&view.jobs[job.idx()]));
+        self.index.set_key(job, active_key(view.job(job)));
     }
 
     fn check_index(&self, view: &SchedView) -> Result<(), String> {
@@ -125,7 +127,7 @@ impl Scheduler for FairScheduler {
         self.index.check_matches(&expect)?;
         // The key order must reproduce the retained deficit sort exactly.
         for (got, &ji) in self.index.iter().zip(&Self::fair_order(view)) {
-            if got.idx() != ji {
+            if view.slot(got) != ji {
                 return Err(format!(
                     "index order diverges from fair_order at job {got:?} vs index {ji}"
                 ));
@@ -160,7 +162,7 @@ impl Scheduler for FairScheduler {
         greedy_fill(
             view,
             node,
-            index.iter().map(|j| j.idx()),
+            index.iter().map(|j| view.slot(j)),
             claims,
             |_| LocalityTier::Remote,
             out,

@@ -27,18 +27,22 @@ impl FifoScheduler {
         Self::default()
     }
 
-    /// Insert jobs that arrived since the last callback and drop stale
-    /// state when the world shrank (scheduler reuse across Worlds).
+    /// Insert jobs that arrived since the last callback (`covered` counts
+    /// *absolute* job ids, so the window base never double-inserts) and
+    /// drop stale state when the world shrank (scheduler reuse across
+    /// Worlds).
     fn sync(&mut self, view: &SchedView) {
-        if self.covered > view.jobs.len() {
+        let total = view.total_jobs();
+        if self.covered > total {
             self.index.clear();
             self.covered = 0;
         }
-        for job in &view.jobs[self.covered..] {
+        self.index.set_base(view.jobs_base);
+        for job in &view.jobs[self.covered.max(view.jobs_base) - view.jobs_base..] {
             self.index
                 .set_key(job.id, if job.is_done() { None } else { Some(()) });
         }
-        self.covered = view.jobs.len();
+        self.covered = total;
     }
 }
 
@@ -54,7 +58,7 @@ impl Scheduler for FifoScheduler {
 
     fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
         self.sync(view);
-        let done = view.jobs[job.idx()].is_done();
+        let done = view.job(job).is_done();
         self.index.set_key(job, if done { None } else { Some(()) });
     }
 
@@ -90,7 +94,7 @@ impl Scheduler for FifoScheduler {
         greedy_fill(
             view,
             node,
-            index.iter().map(|j| j.idx()),
+            index.iter().map(|j| view.slot(j)),
             claims,
             |_| LocalityTier::Remote,
             out,

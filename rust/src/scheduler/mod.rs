@@ -115,10 +115,20 @@ impl SchedulerKind {
 }
 
 /// Immutable world snapshot handed to schedulers.
+///
+/// `jobs` is a **window**: under streaming metrics the coordinator
+/// retires completed jobs from the front of its job table, so
+/// `jobs[0]` is the job with id `jobs_base`, not id 0. All policy
+/// state keyed by job id must translate through [`SchedView::slot`]
+/// (or the [`OrderIndex`]/[`ClaimLedger`] helpers, which do it
+/// internally). Outside streaming mode `jobs_base` is always 0 and the
+/// window is the complete job table.
 pub struct SchedView<'a> {
     pub cfg: &'a SimConfig,
     pub cluster: &'a Cluster,
     pub jobs: &'a [JobState],
+    /// Id of `jobs[0]` — jobs below this were retired (all done).
+    pub jobs_base: usize,
     pub cm: &'a ConfigManager,
     pub now: SimTime,
 }
@@ -127,6 +137,32 @@ impl SchedView<'_> {
     /// Indices of jobs that still have work (not Done).
     pub fn active_jobs(&self) -> impl Iterator<Item = &JobState> {
         self.jobs.iter().filter(|j| !j.is_done())
+    }
+
+    /// Window index of `id` into [`SchedView::jobs`]. Panics (underflow)
+    /// on a retired id — retired jobs are done and schedulers are never
+    /// handed their ids.
+    pub fn slot(&self, id: JobId) -> usize {
+        id.idx() - self.jobs_base
+    }
+
+    /// The job's current state (see [`SchedView::slot`]).
+    pub fn job(&self, id: JobId) -> &JobState {
+        &self.jobs[self.slot(id)]
+    }
+
+    /// Like [`SchedView::job`] but `None` for retired or out-of-range
+    /// ids — for state that may lag retirement (await ledgers, bound
+    /// heaps).
+    pub fn job_get(&self, id: JobId) -> Option<&JobState> {
+        id.idx()
+            .checked_sub(self.jobs_base)
+            .and_then(|s| self.jobs.get(s))
+    }
+
+    /// Jobs ever arrived: retired prefix + current window.
+    pub fn total_jobs(&self) -> usize {
+        self.jobs_base + self.jobs.len()
     }
 }
 
@@ -258,9 +294,13 @@ pub trait Scheduler {
 #[derive(Debug, Default)]
 pub(crate) struct ClaimLedger {
     gen: u64,
-    /// Jobs already sized (high-water mark): a job's task count is fixed
-    /// at creation and the job list is append-only, so `begin` only ever
-    /// sizes the new suffix.
+    /// Job id of slot 0 in the per-job arrays below — tracks the view's
+    /// `jobs_base` so retired jobs cost no memory (the tentpole
+    /// job-count-independence claim covers scheduler state too).
+    base: usize,
+    /// Absolute job-id high-water mark of sized slots: slots for ids in
+    /// `base..covered` exist and are task-sized. The job list is
+    /// append-only, so `begin` only ever sizes the new suffix.
     covered: usize,
     /// `[job][map task]` claim stamps; claimed iff `== gen`.
     map_stamps: Vec<Vec<u64>>,
@@ -282,28 +322,55 @@ impl ClaimLedger {
     }
 
     /// Start a scheduling round: invalidate all claims (the O(1)
-    /// generation bump) and size the tables for jobs that arrived since
-    /// the last round — only the new suffix is touched, so the whole call
-    /// is O(1) when no job arrived.
-    pub(crate) fn begin(&mut self, jobs: &[JobState]) {
+    /// generation bump), drop slots for jobs the view retired, and size
+    /// the tables for jobs that arrived since the last round — only the
+    /// changed prefix/suffix is touched, so the whole call is O(1) when
+    /// the window didn't move.
+    pub(crate) fn begin(&mut self, base: usize, jobs: &[JobState]) {
         self.gen += 1;
-        if jobs.len() > self.covered {
-            self.map_stamps.resize_with(jobs.len(), Vec::new);
-            self.map_count.resize(jobs.len(), 0);
-            self.map_count_gen.resize(jobs.len(), 0);
-            self.reduce_from.resize(jobs.len(), 0);
-            self.reduce_from_gen.resize(jobs.len(), 0);
-            self.reduce_count.resize(jobs.len(), 0);
-            self.reduce_count_gen.resize(jobs.len(), 0);
-            for (j, job) in jobs.iter().enumerate().skip(self.covered) {
+        if base < self.base {
+            // Job numbering restarted (scheduler reuse across Worlds):
+            // every slot is stale, start over.
+            self.map_stamps.clear();
+            self.map_count.clear();
+            self.map_count_gen.clear();
+            self.reduce_from.clear();
+            self.reduce_from_gen.clear();
+            self.reduce_count.clear();
+            self.reduce_count_gen.clear();
+            self.base = base;
+            self.covered = base;
+        } else if base > self.base {
+            let k = (base - self.base).min(self.map_stamps.len());
+            self.map_stamps.drain(..k);
+            self.map_count.drain(..k);
+            self.map_count_gen.drain(..k);
+            self.reduce_from.drain(..k);
+            self.reduce_from_gen.drain(..k);
+            self.reduce_count.drain(..k);
+            self.reduce_count_gen.drain(..k);
+            self.base = base;
+            self.covered = self.covered.max(base);
+        }
+        let total = base + jobs.len();
+        if total > self.covered {
+            let w = jobs.len();
+            self.map_stamps.resize_with(w, Vec::new);
+            self.map_count.resize(w, 0);
+            self.map_count_gen.resize(w, 0);
+            self.reduce_from.resize(w, 0);
+            self.reduce_from_gen.resize(w, 0);
+            self.reduce_count.resize(w, 0);
+            self.reduce_count_gen.resize(w, 0);
+            for (j, job) in jobs.iter().enumerate().skip(self.covered - base) {
                 self.map_stamps[j].resize(job.total_maps() as usize, 0);
             }
-            self.covered = jobs.len();
+            self.covered = total;
         }
     }
 
     pub(crate) fn claim_map(&mut self, job: JobId, t: TaskId) {
-        let j = job.idx();
+        let j = job.idx() - self.base;
         let count = self.maps_claimed(job) + 1;
         let stamps = &mut self.map_stamps[j];
         if stamps.len() <= t.0 as usize {
@@ -319,14 +386,14 @@ impl ClaimLedger {
     }
 
     pub(crate) fn map_claimed(&self, job: JobId, t: TaskId) -> bool {
-        self.map_stamps[job.idx()]
+        self.map_stamps[job.idx() - self.base]
             .get(t.0 as usize)
             .is_some_and(|&s| s == self.gen)
     }
 
     /// Maps claimed for `job` this round.
     pub(crate) fn maps_claimed(&self, job: JobId) -> u32 {
-        let j = job.idx();
+        let j = job.idx() - self.base;
         if self.map_count_gen[j] == self.gen {
             self.map_count[j]
         } else {
@@ -336,7 +403,7 @@ impl ClaimLedger {
 
     /// Reduces claimed for `job` this round.
     pub(crate) fn reduces_claimed(&self, job: JobId) -> u32 {
-        let j = job.idx();
+        let j = job.idx() - self.base;
         if self.reduce_count_gen[j] == self.gen {
             self.reduce_count[j]
         } else {
@@ -349,7 +416,7 @@ impl ClaimLedger {
     /// ones" is exactly "start after the last claim" — each call is O(1)
     /// amortized where `nth(claimed)` rescanned the array from the front.
     pub(crate) fn claim_next_reduce(&mut self, job: &JobState) -> Option<TaskId> {
-        let j = job.id.idx();
+        let j = job.id.idx() - self.base;
         let from = if self.reduce_from_gen[j] == self.gen {
             self.reduce_from[j]
         } else {
@@ -369,7 +436,10 @@ impl ClaimLedger {
     /// actions have been applied and only under a failure-free config
     /// (a PM crash re-pends Running maps without bumping the generation).
     pub fn check_against(&self, jobs: &[JobState]) -> Result<(), String> {
-        for (j, job) in jobs.iter().enumerate().take(self.covered) {
+        for (j, job) in jobs.iter().enumerate() {
+            if j >= self.map_stamps.len() {
+                break;
+            }
             let stamps = &self.map_stamps[j];
             let mut stamped = 0u32;
             for (ti, &s) in stamps.iter().enumerate().take(job.total_maps() as usize) {
@@ -419,7 +489,11 @@ impl ClaimLedger {
 #[derive(Debug, Default)]
 pub(crate) struct OrderIndex<K: Ord + Copy> {
     set: std::collections::BTreeSet<(K, JobId)>,
+    /// Window of cached keys: slot 0 holds job id `base`. Retired jobs
+    /// (always key-`None`) are dropped via [`OrderIndex::set_base`] so
+    /// the cache tracks the live window, not the full job history.
     key_of: Vec<Option<K>>,
+    base: usize,
 }
 
 impl<K: Ord + Copy> OrderIndex<K> {
@@ -427,18 +501,34 @@ impl<K: Ord + Copy> OrderIndex<K> {
         Self {
             set: std::collections::BTreeSet::new(),
             key_of: Vec::new(),
+            base: 0,
         }
     }
 
     pub(crate) fn clear(&mut self) {
         self.set.clear();
         self.key_of.clear();
+        self.base = 0;
+    }
+
+    /// Advance the window floor to the view's `jobs_base`, dropping the
+    /// retired prefix. Retired jobs are done, so their cached keys must
+    /// already be `None` (the coordinator delivers the final
+    /// `on_job_updated` before retiring).
+    pub(crate) fn set_base(&mut self, base: usize) {
+        if base <= self.base {
+            return;
+        }
+        let k = (base - self.base).min(self.key_of.len());
+        debug_assert!(self.key_of[..k].iter().all(Option::is_none));
+        self.key_of.drain(..k);
+        self.base = base;
     }
 
     /// Insert, move or remove `job`. `None` removes (job done). No-op —
     /// and no tree touch — when the key is unchanged.
     pub(crate) fn set_key(&mut self, job: JobId, key: Option<K>) {
-        let j = job.idx();
+        let j = job.idx() - self.base;
         if self.key_of.len() <= j {
             self.key_of.resize(j + 1, None);
         }
@@ -496,7 +586,7 @@ pub(crate) fn greedy_fill(
     max_tier_for: impl Fn(&JobState) -> LocalityTier,
     out: &mut Vec<Action>,
 ) {
-    claims.begin(view.jobs);
+    claims.begin(view.jobs_base, view.jobs);
     let vm = view.cluster.vm(node);
     let rack = view.cluster.rack_of(node);
     let racked = view.cluster.topology().is_racked();

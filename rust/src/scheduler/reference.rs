@@ -288,7 +288,10 @@ impl NaiveDeadlineVc {
         let now = view.now;
         let timeout = self.reconfig_timeout;
         self.awaiting_since.retain(|&(job, task, since)| {
-            let js = &view.jobs[job.idx()];
+            // A retired job is done: no awaiting tasks can remain for it.
+            let Some(js) = view.job_get(job) else {
+                return false;
+            };
             if !js.map_state(TaskId(task)).is_awaiting() {
                 return false;
             }

@@ -78,6 +78,32 @@ impl<E> EventQueue<E> {
         self.schedule_at(self.now + delay, ev);
     }
 
+    /// Reserve a contiguous band of `len` sequence numbers and return the
+    /// first. The insertion counter jumps past the band, so events later
+    /// scheduled with [`Self::schedule_at_with_seq`] inside the band sort
+    /// *before* (at equal timestamps) everything scheduled after the
+    /// reservation — regardless of actual insertion time. This lets a
+    /// caller that materializes events lazily (one outstanding at a time)
+    /// reproduce the exact tie-break order of a caller that scheduled
+    /// them all up front.
+    pub fn reserve_seqs(&mut self, len: u64) -> u64 {
+        let base = self.seq + 1;
+        self.seq += len;
+        base
+    }
+
+    /// Schedule `ev` at absolute time `at` with an explicit sequence
+    /// number from a band previously obtained via [`Self::reserve_seqs`].
+    /// The caller is responsible for using each reserved seq at most once
+    /// (duplicates would still pop deterministically, but the band
+    /// contract is one event per seq).
+    pub fn schedule_at_with_seq(&mut self, at: SimTime, seq: u64, ev: E) {
+        debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
+        debug_assert!(seq <= self.seq, "seq {seq} outside any reserved band");
+        let at = at.max(self.now);
+        self.heap.push(Reverse(Entry { at, seq, ev }));
+    }
+
     /// Force the clock forward to `t` without popping (used by tests to
     /// exercise timeout paths). Events scheduled before `t` still pop in
     /// order but with their original timestamps clamped monotonically.
@@ -135,6 +161,26 @@ mod tests {
         }
         let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
         assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reserved_band_reproduces_upfront_tie_order() {
+        // Up-front: two "static" events at t=5, then a "dynamic" one.
+        let mut up = EventQueue::new();
+        up.schedule_at(SimTime::from_millis(5), "a");
+        up.schedule_at(SimTime::from_millis(5), "b");
+        up.schedule_at(SimTime::from_millis(5), "dyn");
+        let up_order: Vec<&str> = std::iter::from_fn(|| up.pop().map(|(_, e)| e)).collect();
+
+        // Lazy: reserve the band first, schedule the dynamic event, then
+        // fill the band out of insertion order — pops must match.
+        let mut lazy = EventQueue::new();
+        let band = lazy.reserve_seqs(2);
+        lazy.schedule_at(SimTime::from_millis(5), "dyn");
+        lazy.schedule_at_with_seq(SimTime::from_millis(5), band + 1, "b");
+        lazy.schedule_at_with_seq(SimTime::from_millis(5), band, "a");
+        let lazy_order: Vec<&str> = std::iter::from_fn(|| lazy.pop().map(|(_, e)| e)).collect();
+        assert_eq!(up_order, lazy_order);
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Summary statistics for metrics and the bench harness.
 
+use std::collections::BTreeMap;
+
 /// Online mean/min/max/count accumulator (Welford variance).
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
@@ -66,6 +68,163 @@ impl Summary {
         } else {
             self.max
         }
+    }
+
+    /// Raw second central moment (Welford `M2`), for serialization.
+    pub fn m2(&self) -> f64 {
+        self.m2
+    }
+
+    /// Rebuild a summary from its raw serialized fields (the inverse of
+    /// reading `count`/`mean`/`m2`/`min`/`max`/`sum`). `n == 0` yields a
+    /// fresh empty summary regardless of the other fields.
+    pub fn from_raw(n: u64, mean: f64, m2: f64, min: f64, max: f64, sum: f64) -> Self {
+        if n == 0 {
+            return Self::new();
+        }
+        Self {
+            n,
+            mean,
+            m2,
+            min,
+            max,
+            sum,
+        }
+    }
+
+    /// Merge another summary into this one (Chan et al. parallel
+    /// variance). Merging an empty summary is a no-op.
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let n = n1 + n2;
+        let delta = other.mean - self.mean;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Mergeable streaming quantile sketch over positive values, DDSketch
+/// style: logarithmic buckets with relative accuracy `(γ-1)/(γ+1)`
+/// (≈0.5% at the default γ = 1.01). Memory is bounded by the *value
+/// range* (one bucket per γ-factor), never by the number of inserts —
+/// the constant-memory replacement for [`Percentiles`] at streaming
+/// scale. Values ≤ `MIN_VALUE` (including zero) collapse into a single
+/// underflow bucket reported as 0.0.
+#[derive(Clone, Debug, Default)]
+pub struct QuantileSketch {
+    /// Bucket index → count; bucket `i` covers `(γ^(i-1), γ^i]`.
+    buckets: BTreeMap<i32, u64>,
+    /// Count of values ≤ MIN_VALUE (reported as 0.0).
+    zeros: u64,
+    count: u64,
+}
+
+impl QuantileSketch {
+    /// Relative-accuracy parameter: bucket `i` covers `(γ^(i-1), γ^i]`.
+    pub const GAMMA: f64 = 1.01;
+    /// Values at or below this are indistinguishable from zero.
+    pub const MIN_VALUE: f64 = 1e-9;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_index(x: f64) -> i32 {
+        (x.ln() / Self::GAMMA.ln()).ceil() as i32
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        if !x.is_finite() || x <= Self::MIN_VALUE {
+            self.zeros += 1;
+            return;
+        }
+        *self.buckets.entry(Self::bucket_index(x)).or_insert(0) += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Quantile estimate for `p` in [0, 100], using the same nearest-rank
+    /// convention as [`Percentiles::pct`] so the two agree to within the
+    /// sketch's relative accuracy on identical data.
+    pub fn pct(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * (self.count as f64 - 1.0)).round() as u64;
+        if rank < self.zeros {
+            return 0.0;
+        }
+        let mut cum = self.zeros;
+        for (&i, &c) in &self.buckets {
+            cum += c;
+            if cum > rank {
+                // Midpoint of the bucket's value range, in relative terms.
+                return 2.0 * Self::GAMMA.powi(i) / (Self::GAMMA + 1.0);
+            }
+        }
+        // rank == count-1 fell off the end by rounding; return the top
+        // bucket's estimate.
+        let (&i, _) = self.buckets.iter().next_back().expect("non-empty sketch");
+        2.0 * Self::GAMMA.powi(i) / (Self::GAMMA + 1.0)
+    }
+
+    /// Merge another sketch into this one (exact: bucket-wise addition).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        for (&i, &c) in &other.buckets {
+            *self.buckets.entry(i).or_insert(0) += c;
+        }
+        self.zeros += other.zeros;
+        self.count += other.count;
+    }
+
+    /// Serialize as `zeros` plus `idx:count` pairs in ascending index
+    /// order (deterministic; the journal's content-hashable encoding).
+    pub fn encode(&self) -> String {
+        let mut s = format!("{}", self.zeros);
+        for (&i, &c) in &self.buckets {
+            s.push(' ');
+            s.push_str(&format!("{i}:{c}"));
+        }
+        s
+    }
+
+    /// Inverse of [`Self::encode`]; `None` on any malformed field.
+    pub fn decode(s: &str) -> Option<Self> {
+        let mut parts = s.split_whitespace();
+        let zeros: u64 = parts.next()?.parse().ok()?;
+        let mut buckets = BTreeMap::new();
+        let mut count = zeros;
+        for p in parts {
+            let (i, c) = p.split_once(':')?;
+            let i: i32 = i.parse().ok()?;
+            let c: u64 = c.parse().ok()?;
+            count += c;
+            buckets.insert(i, c);
+        }
+        Some(Self {
+            buckets,
+            zeros,
+            count,
+        })
     }
 }
 
@@ -135,6 +294,88 @@ mod tests {
         let s = Summary::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.min(), 0.0);
+    }
+
+    #[test]
+    fn summary_merge_matches_sequential() {
+        let xs: Vec<f64> = (0..64).map(|i| (i as f64 * 0.73).sin().abs() * 40.0 + 1.0).collect();
+        let mut whole = Summary::new();
+        for &x in &xs {
+            whole.add(x);
+        }
+        let (mut a, mut b) = (Summary::new(), Summary::new());
+        for &x in &xs[..20] {
+            a.add(x);
+        }
+        for &x in &xs[20..] {
+            b.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.std() - whole.std()).abs() < 1e-9);
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+    }
+
+    #[test]
+    fn summary_from_raw_round_trips() {
+        let mut s = Summary::new();
+        for x in [3.0, 1.5, 9.25] {
+            s.add(x);
+        }
+        let r = Summary::from_raw(s.count(), s.mean(), s.m2(), s.min(), s.max(), s.sum());
+        assert_eq!(r.count(), s.count());
+        assert_eq!(r.mean().to_bits(), s.mean().to_bits());
+        assert_eq!(r.std().to_bits(), s.std().to_bits());
+        assert_eq!(Summary::from_raw(0, 0.0, 0.0, 0.0, 0.0, 0.0).mean(), 0.0);
+    }
+
+    #[test]
+    fn sketch_tracks_exact_percentiles() {
+        let mut sk = QuantileSketch::new();
+        let mut ex = Percentiles::new();
+        let mut state = 0x9e37_79b9_7f4a_7c15u64;
+        for _ in 0..5000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let x = 1.0 + (state >> 11) as f64 / (1u64 << 53) as f64 * 900.0;
+            sk.add(x);
+            ex.add(x);
+        }
+        for p in [50.0, 90.0, 99.0] {
+            let exact = ex.pct(p);
+            let approx = sk.pct(p);
+            assert!(
+                (approx - exact).abs() / exact <= 0.01,
+                "p{p}: sketch {approx} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_merge_and_codec() {
+        let (mut a, mut b) = (QuantileSketch::new(), QuantileSketch::new());
+        let mut whole = QuantileSketch::new();
+        for i in 0..200 {
+            let x = 0.5 + i as f64;
+            if i % 2 == 0 {
+                a.add(x);
+            } else {
+                b.add(x);
+            }
+            whole.add(x);
+        }
+        a.add(0.0);
+        whole.add(0.0);
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        for p in [10.0, 50.0, 99.0] {
+            assert_eq!(a.pct(p).to_bits(), whole.pct(p).to_bits());
+        }
+        let decoded = QuantileSketch::decode(&a.encode()).expect("codec");
+        assert_eq!(decoded.count(), a.count());
+        assert_eq!(decoded.encode(), a.encode());
+        assert_eq!(decoded.pct(75.0).to_bits(), a.pct(75.0).to_bits());
     }
 
     #[test]

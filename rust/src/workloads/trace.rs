@@ -251,6 +251,317 @@ impl JobTrace {
     }
 }
 
+/// A streaming source of job submissions: the coordinator pulls one
+/// [`JobSpec`] at a time (in non-decreasing `submit_s` order) instead of
+/// iterating a materialized `Vec`, so trace length never bounds memory.
+///
+/// Three backends:
+/// * [`TraceSource::from_trace`] wraps an existing [`JobTrace`] — the
+///   compatibility path for hand-built traces (fig2/table2/ladders);
+/// * [`TraceSource::poisson_arrivals`] generates the sweep harness's
+///   Poisson/burst workload lazily, drawing each job from the *same* RNG
+///   stream as the eager [`JobTrace::poisson_arrivals`] so the produced
+///   specs are bit-identical (pinned by a unit test below);
+/// * [`TraceSource::from_file`] replays a plain-text trace file, one job
+///   per line (`submit_s,job_type,input_mb,reducers,deadline_s` — see
+///   `docs/TRACE_FORMAT.md`), reading line by line.
+#[derive(Debug)]
+pub enum TraceSource {
+    Materialized { jobs: Vec<JobSpec>, next: usize },
+    Generated(Box<PoissonGen>),
+    File(Box<FileSource>),
+}
+
+impl TraceSource {
+    /// Wrap a materialized trace (already sorted by [`JobTrace::new`]).
+    pub fn from_trace(trace: JobTrace) -> Self {
+        TraceSource::Materialized {
+            jobs: trace.jobs,
+            next: 0,
+        }
+    }
+
+    /// Lazy equivalent of [`JobTrace::poisson_arrivals`]: same arguments,
+    /// same RNG stream, bit-identical specs, O(1) memory.
+    pub fn poisson_arrivals(
+        cfg: &SimConfig,
+        n: usize,
+        base_gap_s: f64,
+        arrival: Arrival,
+        deadline_factor: std::ops::Range<f64>,
+        seed: u64,
+    ) -> Self {
+        TraceSource::Generated(Box::new(PoissonGen::new(
+            cfg,
+            n,
+            base_gap_s,
+            arrival,
+            deadline_factor,
+            seed,
+        )))
+    }
+
+    /// Open a plain-text trace file for streaming replay. Errors on
+    /// open/metadata problems; per-line format errors surface (with file
+    /// and line number) when the offending line is pulled.
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        Ok(TraceSource::File(Box::new(FileSource::open(path)?)))
+    }
+
+    /// Pull the next job; `None` once the source is exhausted.
+    pub fn next_job(&mut self) -> Option<JobSpec> {
+        match self {
+            TraceSource::Materialized { jobs, next } => {
+                let spec = jobs.get(*next).cloned()?;
+                *next += 1;
+                Some(spec)
+            }
+            TraceSource::Generated(g) => g.next_job(),
+            TraceSource::File(f) => f.next_job(),
+        }
+    }
+
+    /// Total number of jobs when known up front (`None` for file sources,
+    /// which only learn their length at EOF).
+    pub fn total_hint(&self) -> Option<usize> {
+        match self {
+            TraceSource::Materialized { jobs, .. } => Some(jobs.len()),
+            TraceSource::Generated(g) => Some(g.n),
+            TraceSource::File(_) => None,
+        }
+    }
+
+    /// Drain into a materialized [`JobTrace`] (tests, small-scale tools).
+    pub fn materialize(mut self) -> JobTrace {
+        let mut jobs = Vec::new();
+        while let Some(s) = self.next_job() {
+            jobs.push(s);
+        }
+        JobTrace::new(jobs)
+    }
+}
+
+/// Lazy generator behind [`TraceSource::poisson_arrivals`].
+///
+/// The eager constructor draws in two passes over one RNG stream: first
+/// *all* submission times ([`Arrival::times`] — exactly one `exp` draw
+/// per job after the first), then per-job attributes. Replaying that
+/// stream lazily therefore needs two cursors into the same stream: the
+/// times cursor starts at the stream head, the attributes cursor starts
+/// `n-1` draws in (fast-forwarded once at construction). Each pull
+/// advances both — O(1) memory, and the produced specs are bit-identical
+/// to the eager path.
+#[derive(Debug)]
+pub struct PoissonGen {
+    cfg: SimConfig,
+    arrival: Arrival,
+    base_gap_s: f64,
+    deadline_factor: std::ops::Range<f64>,
+    rng_times: Rng,
+    rng_attrs: Rng,
+    n: usize,
+    i: usize,
+    t: f64,
+}
+
+impl PoissonGen {
+    fn new(
+        cfg: &SimConfig,
+        n: usize,
+        base_gap_s: f64,
+        arrival: Arrival,
+        deadline_factor: std::ops::Range<f64>,
+        seed: u64,
+    ) -> Self {
+        let rng_times = Rng::new(seed ^ 0x7ace);
+        let mut rng_attrs = rng_times.clone();
+        // `Arrival::times(n, ..)` consumes exactly one `next_u64` per
+        // `exp` draw, `n - 1` draws total; the attribute pass starts
+        // right after them.
+        for _ in 1..n {
+            rng_attrs.next_u64();
+        }
+        Self {
+            cfg: cfg.clone(),
+            arrival,
+            base_gap_s,
+            deadline_factor,
+            rng_times,
+            rng_attrs,
+            n,
+            i: 0,
+            t: 0.0,
+        }
+    }
+
+    fn next_job(&mut self) -> Option<JobSpec> {
+        if self.i >= self.n {
+            return None;
+        }
+        // Submission time: the same per-index mean selection as
+        // `Arrival::times`, one draw per job after the first.
+        if self.i > 0 {
+            let gap = self.base_gap_s / self.arrival.rate;
+            let mean = match self.arrival.regime {
+                ArrivalRegime::Steady => gap,
+                ArrivalRegime::Burst => {
+                    if self.i % BURST_SIZE == 0 {
+                        gap * (BURST_SIZE as f64
+                            - BURST_INTRA_FRACTION * (BURST_SIZE - 1) as f64)
+                    } else {
+                        gap * BURST_INTRA_FRACTION
+                    }
+                }
+            };
+            self.t += self.rng_times.exp(mean);
+        }
+        // Attributes: the same draws, in the same order, as the eager
+        // constructor's per-job loop body.
+        let jt = ALL_JOB_TYPES[self.rng_attrs.below(ALL_JOB_TYPES.len() as u64) as usize];
+        let input_mb = self.rng_attrs.range_f64(16.0, 96.0) * self.cfg.block_mb;
+        let mut spec = JobSpec::new(jt, input_mb).at(self.t);
+        let est = ideal_completion_estimate(&self.cfg, &spec);
+        let f = self
+            .rng_attrs
+            .range_f64(self.deadline_factor.start, self.deadline_factor.end);
+        spec = spec.with_deadline(est * f);
+        self.i += 1;
+        Some(spec)
+    }
+}
+
+/// Streaming reader behind [`TraceSource::from_file`]; see
+/// `docs/TRACE_FORMAT.md` for the line format.
+#[derive(Debug)]
+pub struct FileSource {
+    path: String,
+    lines: std::io::Lines<std::io::BufReader<std::fs::File>>,
+    line_no: usize,
+    last_submit: f64,
+}
+
+impl FileSource {
+    fn open(path: &str) -> Result<Self, String> {
+        use std::io::BufRead;
+        let file =
+            std::fs::File::open(path).map_err(|e| format!("open trace file {path}: {e}"))?;
+        Ok(Self {
+            path: path.to_string(),
+            lines: std::io::BufReader::new(file).lines(),
+            line_no: 0,
+            last_submit: 0.0,
+        })
+    }
+
+    fn next_job(&mut self) -> Option<JobSpec> {
+        loop {
+            let line = match self.lines.next()? {
+                Ok(l) => l,
+                Err(e) => panic!("{}:{}: read error: {e}", self.path, self.line_no + 1),
+            };
+            self.line_no += 1;
+            let s = line.trim();
+            if s.is_empty() || s.starts_with('#') {
+                continue;
+            }
+            let spec = match parse_trace_line(s) {
+                Ok(spec) => spec,
+                Err(e) => panic!("{}:{}: {e}: {s:?}", self.path, self.line_no),
+            };
+            assert!(
+                spec.submit_s >= self.last_submit,
+                "{}:{}: submit times must be non-decreasing ({} < {})",
+                self.path,
+                self.line_no,
+                spec.submit_s,
+                self.last_submit
+            );
+            self.last_submit = spec.submit_s;
+            return Some(spec);
+        }
+    }
+}
+
+/// Parse one trace-file line:
+/// `submit_s,job_type,input_mb,reducers,deadline_s` with `-` for a
+/// best-effort (absent) deadline; extra trailing fields are ignored for
+/// forward compatibility. See `docs/TRACE_FORMAT.md`.
+pub fn parse_trace_line(s: &str) -> Result<JobSpec, String> {
+    let mut fields = s.split(',').map(str::trim);
+    let mut next = |name: &str| fields.next().ok_or_else(|| format!("missing {name}"));
+    let submit_s: f64 = next("submit_s")?
+        .parse()
+        .map_err(|_| "bad submit_s".to_string())?;
+    let ty_name = next("job_type")?;
+    let job_type =
+        JobType::from_name(ty_name).ok_or_else(|| format!("unknown job_type {ty_name:?}"))?;
+    let input_mb: f64 = next("input_mb")?
+        .parse()
+        .map_err(|_| "bad input_mb".to_string())?;
+    let reducers: u32 = next("reducers")?
+        .parse()
+        .map_err(|_| "bad reducers".to_string())?;
+    let deadline = next("deadline_s")?;
+    let deadline_s = if deadline == "-" {
+        None
+    } else {
+        Some(
+            deadline
+                .parse::<f64>()
+                .map_err(|_| "bad deadline_s".to_string())?,
+        )
+    };
+    if !(submit_s.is_finite() && submit_s >= 0.0) {
+        return Err("submit_s must be finite and >= 0".into());
+    }
+    if !(input_mb.is_finite() && input_mb > 0.0) {
+        return Err("input_mb must be finite and > 0".into());
+    }
+    if reducers == 0 {
+        return Err("reducers must be >= 1".into());
+    }
+    if let Some(d) = deadline_s {
+        if !(d.is_finite() && d > 0.0) {
+            return Err("deadline_s must be finite and > 0".into());
+        }
+    }
+    let mut spec = JobSpec::new(job_type, input_mb).at(submit_s);
+    spec.reducers = reducers;
+    spec.deadline_s = deadline_s;
+    Ok(spec)
+}
+
+/// Render one job as a trace-file line — the exact inverse of
+/// [`parse_trace_line`]: `{}`-formatted floats print the shortest
+/// representation that parses back to the identical bits, so a written
+/// trace replays byte-identically.
+pub fn render_trace_line(spec: &JobSpec) -> String {
+    let deadline = match spec.deadline_s {
+        Some(d) => format!("{d}"),
+        None => "-".to_string(),
+    };
+    format!(
+        "{},{},{},{},{}",
+        spec.submit_s,
+        spec.job_type.name(),
+        spec.input_mb,
+        spec.reducers,
+        deadline
+    )
+}
+
+/// Write a full trace file (header comment + one line per job) for
+/// [`TraceSource::from_file`] replay.
+pub fn write_trace_file(path: &std::path::Path, jobs: &[JobSpec]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(out, "# vcsched job trace: submit_s,job_type,input_mb,reducers,deadline_s")?;
+    for spec in jobs {
+        writeln!(out, "{}", render_trace_line(spec))?;
+    }
+    out.flush()
+}
+
 /// One PM crash or recovery in a pre-generated failure trace.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FailureEvent {
@@ -505,6 +816,119 @@ mod tests {
                 assert!(e.at_s < fm.trace_horizon_s);
             }
         }
+    }
+
+    #[test]
+    fn lazy_generator_is_bit_identical_to_eager_constructor() {
+        // The streaming-source contract: TraceSource::poisson_arrivals
+        // must draw the exact RNG sequence of JobTrace::poisson_arrivals,
+        // so small-scale artifacts stay byte-identical when the
+        // coordinator pulls jobs lazily. Pinned across seeds, regimes
+        // and job counts (including the n=0 and n=1 edges).
+        let cfg = SimConfig::paper();
+        for seed in [1u64, 7, 42, 1234] {
+            for arrival in [Arrival::STEADY, Arrival::steady(2.0), Arrival::burst(1.5)] {
+                for n in [0usize, 1, 2, 37] {
+                    let eager =
+                        JobTrace::poisson_arrivals(&cfg, n, 5.0, arrival, 1.6..3.0, seed);
+                    let lazy =
+                        TraceSource::poisson_arrivals(&cfg, n, 5.0, arrival, 1.6..3.0, seed)
+                            .materialize();
+                    assert_eq!(eager.len(), lazy.len());
+                    for (a, b) in eager.jobs.iter().zip(&lazy.jobs) {
+                        assert_eq!(a.job_type, b.job_type);
+                        assert_eq!(a.input_mb.to_bits(), b.input_mb.to_bits());
+                        assert_eq!(a.reducers, b.reducers);
+                        assert_eq!(a.submit_s.to_bits(), b.submit_s.to_bits());
+                        assert_eq!(
+                            a.deadline_s.map(f64::to_bits),
+                            b.deadline_s.map(f64::to_bits)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trace_source_from_trace_streams_in_order() {
+        let cfg = SimConfig::paper();
+        let trace = JobTrace::paper_mix(&cfg, 3);
+        let mut src = TraceSource::from_trace(trace.clone());
+        assert_eq!(src.total_hint(), Some(trace.len()));
+        let mut n = 0;
+        while let Some(spec) = src.next_job() {
+            assert_eq!(spec.submit_s.to_bits(), trace.jobs[n].submit_s.to_bits());
+            n += 1;
+        }
+        assert_eq!(n, trace.len());
+        assert!(src.next_job().is_none(), "exhausted source stays exhausted");
+    }
+
+    #[test]
+    fn trace_line_codec_round_trips_bitwise() {
+        let cfg = SimConfig::paper();
+        let trace = JobTrace::poisson_arrivals(&cfg, 25, 5.0, Arrival::burst(2.0), 1.6..3.0, 9);
+        for spec in &trace.jobs {
+            let line = render_trace_line(spec);
+            let back = parse_trace_line(&line).expect("rendered line parses");
+            assert_eq!(back.job_type, spec.job_type);
+            assert_eq!(back.submit_s.to_bits(), spec.submit_s.to_bits());
+            assert_eq!(back.input_mb.to_bits(), spec.input_mb.to_bits());
+            assert_eq!(back.reducers, spec.reducers);
+            assert_eq!(
+                back.deadline_s.map(f64::to_bits),
+                spec.deadline_s.map(f64::to_bits)
+            );
+        }
+        // Best-effort deadline renders as '-'.
+        let spec = JobSpec::new(JobType::Grep, 640.0).at(1.5);
+        let line = render_trace_line(&spec);
+        assert!(line.ends_with(",-"), "{line}");
+        assert_eq!(parse_trace_line(&line).unwrap().deadline_s, None);
+    }
+
+    #[test]
+    fn trace_line_parser_rejects_malformed_input() {
+        assert!(parse_trace_line("0,wordcount,640,4,100").is_ok());
+        // Extra trailing fields are ignored (forward compatibility).
+        assert!(parse_trace_line("0,wordcount,640,4,100,extra").is_ok());
+        for bad in [
+            "",
+            "0",
+            "x,wordcount,640,4,100",
+            "0,warpdrive,640,4,100",
+            "0,wordcount,-5,4,100",
+            "0,wordcount,640,0,100",
+            "0,wordcount,640,4,0",
+            "-1,wordcount,640,4,100",
+        ] {
+            assert!(parse_trace_line(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn file_source_replays_written_trace() {
+        let cfg = SimConfig::paper();
+        let trace = JobTrace::poisson_arrivals(&cfg, 15, 5.0, Arrival::STEADY, 1.6..3.0, 21);
+        let dir = std::env::temp_dir();
+        let path = dir.join("vcsched_trace_roundtrip_unit.txt");
+        write_trace_file(&path, &trace.jobs).expect("write trace");
+        let src = TraceSource::from_file(path.to_str().unwrap()).expect("open trace");
+        assert_eq!(src.total_hint(), None);
+        let replay = src.materialize();
+        assert_eq!(replay.len(), trace.len());
+        for (a, b) in trace.jobs.iter().zip(&replay.jobs) {
+            assert_eq!(a.job_type, b.job_type);
+            assert_eq!(a.submit_s.to_bits(), b.submit_s.to_bits());
+            assert_eq!(a.input_mb.to_bits(), b.input_mb.to_bits());
+            assert_eq!(a.reducers, b.reducers);
+            assert_eq!(
+                a.deadline_s.map(f64::to_bits),
+                b.deadline_s.map(f64::to_bits)
+            );
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -101,7 +101,7 @@ fn simulation_identical_under_both_backends() {
     let b = run_simulation_with(&cfg, SchedulerKind::DeadlineVc, &trace, &mut xp);
     assert_eq!(a.completed_jobs(), b.completed_jobs());
     assert_eq!(a.hotplugs, b.hotplugs, "reconfiguration paths diverged");
-    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+    for (x, y) in a.job_records().iter().zip(b.job_records()) {
         assert_eq!(
             x.completion_s, y.completion_s,
             "job {} diverged between predictor backends",

@@ -97,8 +97,12 @@ fn assert_runs_identical(label: &str, cfg: &SimConfig, kind: SchedulerKind, trac
         rep_b.makespan_s.to_bits(),
         "{label}: makespan"
     );
-    assert_eq!(rep_a.jobs.len(), rep_b.jobs.len(), "{label}: job count");
-    for (x, y) in rep_a.jobs.iter().zip(&rep_b.jobs) {
+    assert_eq!(
+        rep_a.job_records().len(),
+        rep_b.job_records().len(),
+        "{label}: job count"
+    );
+    for (x, y) in rep_a.job_records().iter().zip(rep_b.job_records()) {
         assert_eq!(
             x.completion_s.to_bits(),
             y.completion_s.to_bits(),
@@ -193,7 +197,7 @@ fn scheduler_reuse_across_worlds_matches_fresh_instance() {
             kind.name()
         );
         assert_eq!(rep_reused.events, rep_fresh.events, "{}", kind.name());
-        for (x, y) in rep_reused.jobs.iter().zip(&rep_fresh.jobs) {
+        for (x, y) in rep_reused.job_records().iter().zip(rep_fresh.job_records()) {
             assert_eq!(x.completion_s.to_bits(), y.completion_s.to_bits(), "{}", kind.name());
         }
     }

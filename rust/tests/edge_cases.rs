@@ -42,7 +42,7 @@ fn job_smaller_than_one_block() {
         vec![JobSpec::new(JobType::Grep, 1.0).with_deadline(600.0)],
     );
     assert_eq!(r.completed_jobs(), 1);
-    assert_eq!(r.jobs[0].maps, 1, "tail-only input is one map task");
+    assert_eq!(r.job_records()[0].maps, 1, "tail-only input is one map task");
 }
 
 #[test]
@@ -56,7 +56,7 @@ fn impossible_deadline_still_completes() {
             vec![JobSpec::new(JobType::Sort, 640.0).with_deadline(1.0)],
         );
         assert_eq!(r.completed_jobs(), 1, "{}", kind.name());
-        assert_eq!(r.jobs[0].met_deadline, Some(false));
+        assert_eq!(r.job_records()[0].met_deadline, Some(false));
         assert!((r.miss_rate() - 1.0).abs() < 1e-9);
     }
 }
@@ -112,7 +112,7 @@ fn hotplug_storm_conserves_cores() {
     assert_eq!(r.completed_jobs(), 12);
     // Invariants were checked after every event inside the run (debug
     // asserts in apply_actions); here we sanity-check the metrics side.
-    for j in &r.jobs {
+    for j in r.job_records() {
         assert_eq!(j.local_maps + j.rack_maps + j.remote_maps, j.maps);
     }
 }
@@ -137,7 +137,7 @@ fn one_pm_per_rack_still_completes() {
             ],
         );
         assert_eq!(r.completed_jobs(), 2, "{}", kind.name());
-        for j in &r.jobs {
+        for j in r.job_records() {
             assert_eq!(j.local_maps + j.rack_maps + j.remote_maps, j.maps);
         }
     }
@@ -153,8 +153,8 @@ fn huge_job_many_waves() {
         vec![JobSpec::new(JobType::Sort, 160.0 * 64.0).with_deadline(1e5)],
     );
     assert_eq!(r.completed_jobs(), 1);
-    assert_eq!(r.jobs[0].maps, 160);
-    assert_eq!(r.jobs[0].met_deadline, Some(true));
+    assert_eq!(r.job_records()[0].maps, 160);
+    assert_eq!(r.job_records()[0].met_deadline, Some(true));
 }
 
 #[test]
@@ -168,8 +168,8 @@ fn simultaneous_arrivals_deterministic_order() {
     ];
     let a = run(&cfg, SchedulerKind::DeadlineVc, jobs.clone());
     let b = run(&cfg, SchedulerKind::DeadlineVc, jobs);
-    let ca: Vec<f64> = a.jobs.iter().map(|j| j.completion_s).collect();
-    let cb: Vec<f64> = b.jobs.iter().map(|j| j.completion_s).collect();
+    let ca: Vec<f64> = a.job_records().iter().map(|j| j.completion_s).collect();
+    let cb: Vec<f64> = b.job_records().iter().map(|j| j.completion_s).collect();
     assert_eq!(ca, cb);
 }
 
@@ -184,7 +184,7 @@ fn no_jitter_is_fully_deterministic_across_schedulers() {
         let a = run(&cfg, kind, jobs.clone());
         let b = run(&cfg, kind, jobs.clone());
         assert_eq!(
-            a.jobs[0].completion_s, b.jobs[0].completion_s,
+            a.job_records()[0].completion_s, b.job_records()[0].completion_s,
             "{}",
             kind.name()
         );

@@ -152,7 +152,7 @@ fn speculation_races_resolve_exactly_once() {
         // No crashes in this model.
         assert_eq!(f.pm_crashes, 0);
         assert_eq!(f.reexecuted_tasks, 0);
-        for j in &r.jobs {
+        for j in r.job_records() {
             assert_eq!(
                 j.local_maps + j.rack_maps + j.remote_maps,
                 j.maps,
@@ -176,7 +176,7 @@ fn crashes_plus_speculation_compose() {
         let r = run(&cfg, kind, crash_prone_jobs(10));
         assert_eq!(r.completed_jobs(), 10, "{}", kind.name());
         assert!(r.failures.pm_crashes > 0, "{}", kind.name());
-        for j in &r.jobs {
+        for j in r.job_records() {
             assert_eq!(j.local_maps + j.rack_maps + j.remote_maps, j.maps);
         }
     }

@@ -179,8 +179,8 @@ fn determinism_across_full_runs() {
         assert_eq!(a.makespan_s, b.makespan_s);
         assert_eq!(a.hotplugs, b.hotplugs);
         assert_eq!(a.events, b.events);
-        let ca: Vec<f64> = a.jobs.iter().map(|j| j.completion_s).collect();
-        let cb: Vec<f64> = b.jobs.iter().map(|j| j.completion_s).collect();
+        let ca: Vec<f64> = a.job_records().iter().map(|j| j.completion_s).collect();
+        let cb: Vec<f64> = b.job_records().iter().map(|j| j.completion_s).collect();
         assert_eq!(ca, cb);
     });
 }
@@ -199,7 +199,7 @@ fn full_replication_gives_full_locality() {
     ]);
     let r = vcsched::coordinator::run_simulation(&cfg, SchedulerKind::DeadlineVc, &trace);
     assert_eq!(r.locality_pct(), 100.0);
-    for j in &r.jobs {
+    for j in r.job_records() {
         assert_eq!(j.local_maps + j.rack_maps + j.remote_maps, j.maps);
     }
 }
@@ -217,7 +217,7 @@ fn tier_accounting_consistent_across_topologies() {
         let trace = JobTrace::poisson(&cfg, 6, 3.0, 1.6..3.0, 17);
         for kind in SchedulerKind::ALL {
             let r = vcsched::coordinator::run_simulation(&cfg, kind, &trace);
-            for j in &r.jobs {
+            for j in r.job_records() {
                 assert_eq!(j.local_maps + j.rack_maps + j.remote_maps, j.maps);
                 if !topology.is_racked() {
                     assert_eq!(j.rack_maps, 0, "flat run grew a rack tier");

@@ -1,0 +1,202 @@
+//! Streaming-metrics differential oracle: a run with
+//! `SimConfig::stream_metrics` on keeps only constant-memory accumulators
+//! (Welford summary + quantile sketch) instead of one `JobRecord` per
+//! job, and must be **observationally identical** to the exact path on
+//! everything the exact path can check —
+//!
+//! * every scalar aggregate (makespan, counters, mean, locality tiers,
+//!   miss rate) bit-for-bit, because the streaming fold sees the same
+//!   records in the same completion order;
+//! * p50/p99 within the sketch's documented relative error (< 1%);
+//!
+//! plus the trace-file round trip: a generated trace written with
+//! `write_trace_file` and replayed through `--workload trace:<file>`
+//! machinery produces a byte-identical report.
+
+use vcsched::config::SimConfig;
+use vcsched::coordinator::{run_simulation, run_simulation_source, Report};
+use vcsched::metrics::StreamAgg;
+use vcsched::predictor::NativePredictor;
+use vcsched::scheduler::SchedulerKind;
+use vcsched::util::stats::Percentiles;
+use vcsched::util::Rng;
+use vcsched::workloads::trace::{write_trace_file, Arrival, JobTrace, TraceSource};
+
+fn run_streaming(cfg: &SimConfig, kind: SchedulerKind, trace: &JobTrace) -> Report {
+    let mut cfg = cfg.clone();
+    cfg.stream_metrics = true;
+    let mut pred = NativePredictor::new();
+    run_simulation_source(&cfg, kind, TraceSource::from_trace(trace.clone()), &mut pred)
+}
+
+fn rel_err(approx: f64, exact: f64) -> f64 {
+    (approx - exact).abs() / exact
+}
+
+/// The tentpole contract, pinned at a scale large enough that the sketch
+/// holds many buckets and p99 sits in the tail: streaming mode changes
+/// *storage*, never *results*.
+#[test]
+fn streaming_run_matches_exact_oracle() {
+    let cfg = SimConfig::small();
+    for seed in [11u64, 42] {
+        for kind in [SchedulerKind::Fair, SchedulerKind::DeadlineVc] {
+            let cfg = SimConfig { seed, ..cfg.clone() };
+            let trace = JobTrace::poisson(&cfg, 200, 2.0, 1.6..3.0, seed);
+            let exact = run_simulation(&cfg, kind, &trace);
+            let streamed = run_streaming(&cfg, kind, &trace);
+            let label = format!("{} / seed {seed}", kind.name());
+
+            // Storage modes are as advertised.
+            assert_eq!(exact.job_records().len(), 200, "{label}");
+            assert!(exact.stream_agg().is_none(), "{label}");
+            assert!(streamed.job_records().is_empty(), "{label}");
+            let agg = streamed.stream_agg().expect("streamed run carries an aggregate");
+
+            // The simulation itself is untouched by the metrics mode...
+            assert_eq!(exact.makespan_s.to_bits(), streamed.makespan_s.to_bits(), "{label}");
+            assert_eq!(exact.events, streamed.events, "{label}");
+            assert_eq!(exact.hotplugs, streamed.hotplugs, "{label}");
+            assert_eq!(exact.heartbeats, streamed.heartbeats, "{label}");
+            assert_eq!(exact.completed_jobs(), streamed.completed_jobs(), "{label}");
+
+            // ...and every derived scalar folds to the identical bits.
+            for (a, b) in [
+                (exact.mean_completion_s(), streamed.mean_completion_s()),
+                (exact.locality_pct(), streamed.locality_pct()),
+                (exact.rack_pct(), streamed.rack_pct()),
+                (exact.remote_pct(), streamed.remote_pct()),
+                (exact.miss_rate(), streamed.miss_rate()),
+                (
+                    exact.throughput_jobs_per_hour(),
+                    streamed.throughput_jobs_per_hour(),
+                ),
+            ] {
+                assert_eq!(a.to_bits(), b.to_bits(), "{label}");
+            }
+
+            // The streamed aggregate equals the oracle fold over the exact
+            // records — same accumulators, same completion order — down to
+            // the serialized sketch.
+            let oracle = StreamAgg::from_records(exact.job_records());
+            assert_eq!(agg.completed, oracle.completed, "{label}");
+            assert_eq!(agg.completion.count(), oracle.completion.count(), "{label}");
+            assert_eq!(
+                agg.completion.mean().to_bits(),
+                oracle.completion.mean().to_bits(),
+                "{label}"
+            );
+            assert_eq!(
+                agg.completion.m2().to_bits(),
+                oracle.completion.m2().to_bits(),
+                "{label}"
+            );
+            assert_eq!(agg.completion.min().to_bits(), oracle.completion.min().to_bits(), "{label}");
+            assert_eq!(agg.completion.max().to_bits(), oracle.completion.max().to_bits(), "{label}");
+            assert_eq!((agg.local_maps, agg.rack_maps, agg.remote_maps),
+                (oracle.local_maps, oracle.rack_maps, oracle.remote_maps), "{label}");
+            assert_eq!((agg.deadlined, agg.missed), (oracle.deadlined, oracle.missed), "{label}");
+            assert_eq!(
+                agg.max_finished_s.to_bits(),
+                oracle.max_finished_s.to_bits(),
+                "{label}"
+            );
+            assert_eq!(agg.sketch.encode(), oracle.sketch.encode(), "{label}");
+
+            // Quantiles: sketch vs exact nearest-rank, within the
+            // documented < 1% relative error.
+            let mut exact_pct = Percentiles::new();
+            for j in exact.job_records() {
+                exact_pct.add(j.completion_s);
+            }
+            for p in [50.0, 90.0, 99.0] {
+                let e = exact_pct.pct(p);
+                let s = agg.sketch.pct(p);
+                assert!(
+                    rel_err(s, e) < 0.01,
+                    "{label}: p{p} sketch {s} vs exact {e} ({:.3}% off)",
+                    100.0 * rel_err(s, e)
+                );
+            }
+        }
+    }
+}
+
+/// The sketch's accuracy contract on raw samples, independent of the
+/// simulator: nearest-rank agreement with the exact percentile to < 1%
+/// relative error across seeds and sample shapes.
+#[test]
+fn sketch_quantiles_track_exact_within_one_percent() {
+    use vcsched::util::stats::QuantileSketch;
+    for seed in [1u64, 7, 19, 303] {
+        let mut rng = Rng::new(seed);
+        let mut sketch = QuantileSketch::new();
+        let mut exact = Percentiles::new();
+        for i in 0..5000 {
+            // Heavy-tailed mix: mostly exponential, occasional 50x
+            // outliers — the completion-time shape p99 exists for.
+            let mut x = rng.exp(120.0) + 1.0;
+            if i % 97 == 0 {
+                x *= 50.0;
+            }
+            sketch.add(x);
+            exact.add(x);
+        }
+        for p in [10.0, 50.0, 90.0, 99.0, 99.9] {
+            let e = exact.pct(p);
+            let s = sketch.pct(p);
+            assert!(
+                rel_err(s, e) < 0.01,
+                "seed {seed}: p{p} sketch {s} vs exact {e}"
+            );
+        }
+    }
+}
+
+/// Round trip: generate a trace, write it with [`write_trace_file`],
+/// replay it through the streaming file source — the report must be
+/// byte-identical to running the in-memory generator output directly.
+#[test]
+fn generated_trace_replayed_from_file_is_byte_identical() {
+    let cfg = SimConfig::small();
+    let trace = JobTrace::poisson_arrivals(&cfg, 30, 4.0, Arrival::burst(1.5), 1.6..3.0, 7);
+    let path = std::env::temp_dir()
+        .join(format!("vcsched-replay-{}.trace", std::process::id()));
+    write_trace_file(&path, &trace.jobs).expect("write trace file");
+    for kind in [SchedulerKind::Fifo, SchedulerKind::Fair, SchedulerKind::DeadlineVc] {
+        let direct = run_simulation(&cfg, kind, &trace);
+        let mut pred = NativePredictor::new();
+        let source = TraceSource::from_file(path.to_str().unwrap()).expect("open trace");
+        let replayed = run_simulation_source(&cfg, kind, source, &mut pred);
+        assert_eq!(
+            direct.to_json().render(),
+            replayed.to_json().render(),
+            "{}: file replay diverged from the generator",
+            kind.name()
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The committed example trace (`tests/data/example_trace.txt`, the one
+/// CI sweeps over) stays parseable and replays deterministically.
+#[test]
+fn committed_example_trace_replays_deterministically() {
+    let path = format!(
+        "{}/tests/data/example_trace.txt",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    let cfg = SimConfig::small();
+    let run = || {
+        let mut pred = NativePredictor::new();
+        let source = TraceSource::from_file(&path).expect("committed trace opens");
+        run_simulation_source(&cfg, SchedulerKind::DeadlineVc, source, &mut pred)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.completed_jobs(), 8, "example trace holds 8 jobs");
+    assert_eq!(a.to_json().render(), b.to_json().render());
+    // The file exercises the full line grammar: a best-effort job (no
+    // deadline) must be present and must not count toward miss rate.
+    assert!(a.job_records().iter().any(|j| j.deadline_s.is_none()));
+}

@@ -8,9 +8,10 @@ use vcsched::cluster::Topology;
 use vcsched::config::PmProfile;
 use vcsched::harness::{
     aggregate, aggregates_csv, run_scenarios_with, run_sweep, run_sweep_resumable,
-    scenario_key, sweep_json, Journal, ScenarioGrid,
+    scenario_key, sweep_json, Journal, ScenarioGrid, Workload,
 };
-use vcsched::workloads::trace::Arrival;
+use vcsched::workloads::trace::{write_trace_file, Arrival};
+use vcsched::workloads::{JobSpec, JobType};
 
 /// Small grid that still exercises the heterogeneity, topology and
 /// arrival axes: 2 schedulers x 1 mix x 2 profiles x 2 topologies x
@@ -135,6 +136,54 @@ fn extending_the_topology_axis_reuses_unchanged_cells() {
     assert_eq!(json_a, json_b);
     assert_eq!(csv_a, csv_b);
     j.clear().unwrap();
+}
+
+#[test]
+fn extending_the_workload_axis_reuses_unchanged_cells() {
+    // A generated-only sweep completes; adding a trace-file workload to
+    // the axis must (a) reuse at least the leading generated block,
+    // (b) never replay a generated cell's numbers for a trace cell (the
+    // content hash folds in the workload label), and (c) match a fresh
+    // full run of the extended grid byte for byte.
+    let trace_path = std::env::temp_dir().join(format!(
+        "vcsched-resume-{}-workload.trace",
+        std::process::id()
+    ));
+    write_trace_file(
+        &trace_path,
+        &[
+            JobSpec::new(JobType::Grep, 256.0).with_deadline(600.0),
+            JobSpec::new(JobType::WordCount, 512.0).at(5.0).with_deadline(900.0),
+            JobSpec::new(JobType::Sort, 384.0).at(10.0),
+        ],
+    )
+    .expect("write workload trace");
+
+    let gen_only = grid();
+    let j = tmp_journal("workload-extend");
+    let (_r, reused0) = run_sweep_resumable(&gen_only, 2, &j);
+    assert_eq!(reused0, 0);
+
+    let mut extended = grid();
+    extended.workloads = vec![
+        Workload::Generated,
+        Workload::TraceFile(trace_path.to_str().unwrap().to_string()),
+    ];
+    let (resumed, reused) = run_sweep_resumable(&extended, 2, &j);
+    assert!(reused > 0, "no generated cell reused after workload extension");
+    assert!(
+        reused <= extended.len() / 2,
+        "trace cells must not replay generated results (reused {reused})"
+    );
+    let fresh = run_sweep(&extended, 2);
+    let (json_a, csv_a) = artifacts(&extended, &resumed);
+    let (json_b, csv_b) = artifacts(&extended, &fresh);
+    assert_eq!(json_a, json_b);
+    assert_eq!(csv_a, csv_b);
+    // The trace cells actually surfaced in the artifacts.
+    assert!(json_a.contains("\"workload\":"));
+    j.clear().unwrap();
+    let _ = std::fs::remove_file(&trace_path);
 }
 
 #[test]
