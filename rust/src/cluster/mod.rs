@@ -50,6 +50,7 @@ pub mod topology;
 pub use topology::{LocalityTier, Topology};
 
 use crate::config::SimConfig;
+use crate::util::codec::{Dec, Enc};
 
 /// Physical machine index.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -364,6 +365,53 @@ impl Cluster {
         self.vm_mut(from).vcpus -= 1;
         debug_assert!(self.check_invariants().is_ok());
         Ok(())
+    }
+
+    /// Snapshot encoding of the *mutable* cluster state. The static layout
+    /// (core counts, speeds, racks, VM placement) is a pure function of
+    /// [`SimConfig`], so snapshots store only what `build` cannot rebuild:
+    /// per-PM liveness and per-VM vCPU / busy-slot counters, in id order.
+    pub(crate) fn encode_state(&self, e: &mut Enc) {
+        e.usize(self.pms.len());
+        for pm in &self.pms {
+            e.bool(pm.alive);
+        }
+        e.usize(self.vms.len());
+        for vm in &self.vms {
+            e.u32(vm.vcpus);
+            e.u32(vm.busy_map);
+            e.u32(vm.busy_reduce);
+        }
+    }
+
+    /// Overlay snapshot state from [`Self::encode_state`] onto a cluster
+    /// freshly built from the *same* config.
+    pub(crate) fn restore_state(&mut self, d: &mut Dec) -> Result<(), String> {
+        let n_pms = d.usize()?;
+        if n_pms != self.pms.len() {
+            return Err(format!(
+                "snapshot has {} PMs, config builds {}",
+                n_pms,
+                self.pms.len()
+            ));
+        }
+        for pm in &mut self.pms {
+            pm.alive = d.bool()?;
+        }
+        let n_vms = d.usize()?;
+        if n_vms != self.vms.len() {
+            return Err(format!(
+                "snapshot has {} VMs, config builds {}",
+                n_vms,
+                self.vms.len()
+            ));
+        }
+        for vm in &mut self.vms {
+            vm.vcpus = d.u32()?;
+            vm.busy_map = d.u32()?;
+            vm.busy_reduce = d.u32()?;
+        }
+        self.check_invariants()
     }
 
     /// Invariants the property tests assert after every mutation:

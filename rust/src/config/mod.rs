@@ -478,6 +478,50 @@ impl SimConfig {
         self.nodes() as u32 * self.reduce_slots
     }
 
+    /// Stable 64-bit fingerprint over every configuration field, including
+    /// the seed. Snapshots embed it so a resume against a *different*
+    /// configuration (which could never reproduce the original run) is
+    /// rejected up front instead of silently diverging. Enum fields encode
+    /// through their stable axis labels, floats through their exact bit
+    /// patterns (`docs/EVENT_LOG.md`).
+    pub fn fingerprint(&self) -> u64 {
+        use crate::util::codec::{fnv1a64, Enc};
+        let mut e = Enc::new();
+        e.usize(self.pms);
+        e.u32(self.cores_per_pm);
+        e.str(self.pm_profile.name());
+        e.str(&self.topology.label());
+        e.usize(self.vms_per_pm);
+        e.u32(self.base_vcpus);
+        e.u32(self.reduce_slots);
+        e.u64(self.hotplug_ms);
+        e.f64(self.block_mb);
+        e.usize(self.replication);
+        e.f64(self.net_mbps);
+        e.f64(self.disk_mbps);
+        e.f64(self.heartbeat_s);
+        e.f64(self.jitter_std);
+        e.u8(match self.exec {
+            ExecMode::Synthetic => 0,
+            ExecMode::Real => 1,
+        });
+        e.u32(self.delay_heartbeats);
+        e.f64(self.prior_map_s);
+        e.f64(self.prior_shuffle_s);
+        e.f64(self.failures.pm_mtbf_s);
+        e.f64(self.failures.pm_repair_s);
+        e.f64(self.failures.trace_horizon_s);
+        e.f64(self.failures.straggler_prob);
+        e.f64(self.failures.straggler_alpha);
+        e.f64(self.failures.straggler_cap);
+        e.bool(self.failures.speculation);
+        e.f64(self.failures.spec_slowdown);
+        e.u32(self.failures.spec_min_finished);
+        e.bool(self.stream_metrics);
+        e.u64(self.seed);
+        fnv1a64(e.bytes())
+    }
+
     /// Validate invariants; returns a human-readable complaint.
     pub fn validate(&self) -> Result<(), String> {
         if self.pms == 0 || self.vms_per_pm == 0 {
@@ -691,6 +735,23 @@ mod tests {
         assert_eq!(v[0], FailureModel::off());
         assert!(v[1].speculation);
         assert!(FailureModel::parse_list("off,nope").is_none());
+    }
+
+    #[test]
+    fn fingerprint_stable_and_field_sensitive() {
+        let a = SimConfig::paper();
+        assert_eq!(a.fingerprint(), SimConfig::paper().fingerprint());
+        let variants = [
+            SimConfig { seed: 43, ..SimConfig::paper() },
+            SimConfig { pms: 21, ..SimConfig::paper() },
+            SimConfig { topology: Topology::Racks(4), ..SimConfig::paper() },
+            SimConfig { failures: FailureModel::crash_low(), ..SimConfig::paper() },
+            SimConfig { stream_metrics: true, ..SimConfig::paper() },
+            SimConfig { heartbeat_s: 2.0, ..SimConfig::paper() },
+        ];
+        for v in &variants {
+            assert_ne!(a.fingerprint(), v.fingerprint());
+        }
     }
 
     #[test]

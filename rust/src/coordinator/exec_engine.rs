@@ -5,6 +5,15 @@
 //! and keeps the partitioned intermediate data so the distributed output
 //! can be verified against a serial reference. Timing stays simulated;
 //! the *bytes* are real.
+//!
+//! **Not snapshotable**: the engine holds host-side corpus blocks and
+//! partitioned intermediate pairs — megabytes of derived data that the
+//! snapshot format (docs/EVENT_LOG.md) deliberately excludes.
+//! [`crate::coordinator::World::snapshot`] therefore refuses to encode a
+//! world running in real mode; snapshot/resume is a synthetic-mode
+//! feature. (Everything here is deterministic from `seed` + the event
+//! order, so a resumed world could in principle regenerate it, but no
+//! caller needs that and the replay cost would be the full run anyway.)
 
 use std::collections::HashMap;
 

@@ -16,7 +16,7 @@ mod exec_engine;
 mod world;
 
 pub use exec_engine::ExecEngine;
-pub use world::{Event, World};
+pub use world::{encode_event_log, Event, LogEntry, World};
 
 use crate::config::SimConfig;
 use crate::metrics::RunMetrics;

@@ -3,23 +3,32 @@
 use crate::cluster::{Cluster, LocalityTier, NodeId, PmId};
 use crate::config::{ExecMode, SimConfig};
 use crate::hdfs::NameNode;
-use crate::mapreduce::{straggler_multiplier, JobId, JobState, TaskCost, TaskId, TaskRef, TaskState};
+use crate::mapreduce::{
+    dec_task_ref, dec_time, decode_job_spec, enc_task_ref, enc_time, encode_job_spec,
+    straggler_multiplier, JobId, JobState, TaskCost, TaskId, TaskRef, TaskState,
+};
 use crate::metrics::{
     FailureStats, HotplugMark, JobRecord, RunMetrics, StreamAgg, TaskSpan, TraceLog,
 };
 use crate::predictor::Predictor;
 use crate::reconfig::ConfigManager;
-use crate::scheduler::{Action, SchedView, Scheduler};
+use crate::scheduler::{Action, SchedView, Scheduler, SchedulerKind};
 use crate::sim::{EventQueue, SimTime};
+use crate::util::codec::{fnv1a64, Dec, Enc};
 use crate::util::rng::mix64;
+use crate::util::stats::QuantileSketch;
+use crate::util::stats::Summary;
 use crate::util::Rng;
 use crate::workloads::trace::{failure_trace, JobTrace, TraceSource, FAILURE_STREAM_TAG};
-use crate::workloads::JobSpec;
+use crate::workloads::{JobSpec, ALL_JOB_TYPES};
 
 use super::exec_engine::ExecEngine;
 
-/// Discrete events driving the simulation.
-#[derive(Clone, Copy, Debug)]
+/// Discrete events driving the simulation. Every state transition enters
+/// the world through exactly one of these; [`World::reduce`] applies it
+/// and reports which scheduler decision point (if any) it hit, so live
+/// runs, snapshots and log replay all share one transition function.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Event {
     /// Submission of the `idx`-th arrival. Specs are *pulled* from the
     /// trace source one at a time: only the next pending arrival is ever
@@ -60,6 +69,161 @@ pub enum Event {
     PmFailure(PmId),
     /// The crashed PM rejoins with empty VMs and no HDFS blocks.
     PmRecovery(PmId),
+}
+
+/// Scheduler decision point hit by a reduced event: which callback the
+/// coordinator must invoke (against the post-reduce view) to obtain the
+/// event's actions. `None` marks pure infrastructure transitions — stale
+/// completions, hot-plug deliveries, failure events, heartbeats of dead
+/// nodes — which never consult the scheduler and so never enter the
+/// decision log.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Decision {
+    None,
+    JobAdded(JobId),
+    Heartbeat(NodeId),
+    TaskFinished(JobId),
+}
+
+/// One entry of the decision log: an event that hit a scheduler callback,
+/// paired with the actions the scheduler returned for it. Events reducing
+/// to no decision are not logged — [`World::replay_to`] re-derives their
+/// effects from the deterministic reduce step, so the log pins exactly
+/// (and only) the policy's choices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogEntry {
+    pub event: Event,
+    pub actions: Vec<Action>,
+}
+
+/// Event wire format (snapshot queue section + encoded decision logs).
+pub(crate) fn enc_event(e: &mut Enc, ev: Event) {
+    match ev {
+        Event::JobArrival(idx) => {
+            e.u8(0);
+            e.u32(idx);
+        }
+        Event::Heartbeat(node) => {
+            e.u8(1);
+            e.u32(node.0);
+        }
+        Event::MapDone { job, task, node, attempt } => {
+            e.u8(2);
+            e.u32(job.0);
+            e.u32(task.0);
+            e.u32(node.0);
+            e.u32(attempt);
+        }
+        Event::ReduceDone { job, task, node, attempt } => {
+            e.u8(3);
+            e.u32(job.0);
+            e.u32(task.0);
+            e.u32(node.0);
+            e.u32(attempt);
+        }
+        Event::HotplugDone { from, to, task } => {
+            e.u8(4);
+            e.u32(from.0);
+            e.u32(to.0);
+            enc_task_ref(e, task);
+        }
+        Event::PmFailure(pm) => {
+            e.u8(5);
+            e.u32(pm.0);
+        }
+        Event::PmRecovery(pm) => {
+            e.u8(6);
+            e.u32(pm.0);
+        }
+    }
+}
+
+/// Inverse of [`enc_event`].
+pub(crate) fn dec_event(d: &mut Dec) -> Result<Event, String> {
+    Ok(match d.u8()? {
+        0 => Event::JobArrival(d.u32()?),
+        1 => Event::Heartbeat(NodeId(d.u32()?)),
+        2 => Event::MapDone {
+            job: JobId(d.u32()?),
+            task: TaskId(d.u32()?),
+            node: NodeId(d.u32()?),
+            attempt: d.u32()?,
+        },
+        3 => Event::ReduceDone {
+            job: JobId(d.u32()?),
+            task: TaskId(d.u32()?),
+            node: NodeId(d.u32()?),
+            attempt: d.u32()?,
+        },
+        4 => Event::HotplugDone {
+            from: NodeId(d.u32()?),
+            to: NodeId(d.u32()?),
+            task: dec_task_ref(d)?,
+        },
+        5 => Event::PmFailure(PmId(d.u32()?)),
+        6 => Event::PmRecovery(PmId(d.u32()?)),
+        b => return Err(format!("invalid event tag {b}")),
+    })
+}
+
+fn enc_action(e: &mut Enc, a: Action) {
+    match a {
+        Action::LaunchMap { job, task, node } => {
+            e.u8(0);
+            e.u32(job.0);
+            e.u32(task.0);
+            e.u32(node.0);
+        }
+        Action::LaunchSpeculativeMap { job, task, node } => {
+            e.u8(1);
+            e.u32(job.0);
+            e.u32(task.0);
+            e.u32(node.0);
+        }
+        Action::LaunchReduce { job, task, node } => {
+            e.u8(2);
+            e.u32(job.0);
+            e.u32(task.0);
+            e.u32(node.0);
+        }
+        Action::AwaitReconfig { job, task, target, release_from } => {
+            e.u8(3);
+            e.u32(job.0);
+            e.u32(task.0);
+            e.u32(target.0);
+            e.u32(release_from.0);
+        }
+        Action::RegisterRelease { node } => {
+            e.u8(4);
+            e.u32(node.0);
+        }
+        Action::CancelAwait { job, task } => {
+            e.u8(5);
+            e.u32(job.0);
+            e.u32(task.0);
+        }
+        Action::SetAlloc { job, map_slots, reduce_slots } => {
+            e.u8(6);
+            e.u32(job.0);
+            e.u32(map_slots);
+            e.u32(reduce_slots);
+        }
+    }
+}
+
+/// Canonical byte encoding of a decision log — the artifact golden-hash
+/// tests and differential comparisons pin (`docs/EVENT_LOG.md`).
+pub fn encode_event_log(log: &[LogEntry]) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.usize(log.len());
+    for entry in log {
+        enc_event(&mut e, entry.event);
+        e.usize(entry.actions.len());
+        for &a in &entry.actions {
+            enc_action(&mut e, a);
+        }
+    }
+    e.into_bytes()
 }
 
 /// All mutable simulation state.
@@ -132,6 +296,9 @@ pub struct World {
     /// set, completed jobs fold into this instead of pushing a record.
     stream: Option<StreamAgg>,
     trace_log: Option<TraceLog>,
+    /// Decision log (see [`LogEntry`]); captured only when enabled via
+    /// [`World::enable_event_log`] — the hot path pays one branch.
+    event_log: Option<Vec<LogEntry>>,
     heartbeats: u64,
     predictor_calls_estimate: u64,
     /// Hard stop: no trace should need more than this many sim-days.
@@ -221,6 +388,7 @@ impl World {
             records: Vec::new(),
             stream,
             trace_log: None,
+            event_log: None,
             heartbeats: 0,
             predictor_calls_estimate: 0,
             max_sim_time: SimTime::from_secs_f64(30.0 * 24.0 * 3600.0),
@@ -289,11 +457,30 @@ impl World {
         self.trace_log.as_ref()
     }
 
+    /// Capture the decision log: every event that reaches a scheduler
+    /// callback, with the actions it returned (see [`LogEntry`]).
+    pub fn enable_event_log(&mut self) {
+        self.event_log = Some(Vec::new());
+    }
+
+    /// Take the captured decision log (empty if never enabled).
+    pub fn take_event_log(&mut self) -> Vec<LogEntry> {
+        self.event_log.take().unwrap_or_default()
+    }
+
     /// Number of jobs in the driving trace (arrived or not). For file
     /// sources the total is only known at EOF, so this reports the
     /// arrivals seen so far.
     pub fn trace_len(&self) -> usize {
         self.source.total_hint().unwrap_or(self.arrived)
+    }
+
+    /// True once every arrived job has finished and no arrivals remain —
+    /// the stop boundary [`Self::run`] uses. Public so external drivers
+    /// (the CLI's snapshot loop) halt at the identical event, keeping
+    /// their reports byte-equal to [`Self::run`]'s.
+    pub fn done(&self) -> bool {
+        self.all_done()
     }
 
     /// Process exactly one event; false when the queue is empty.
@@ -371,6 +558,10 @@ impl World {
         self.dirty.clear();
     }
 
+    /// Process one event: pure state transition ([`Self::reduce`]), then
+    /// the scheduler callback the transition demanded (if any), then the
+    /// event's post-effects. Replay substitutes logged actions for the
+    /// callback and is otherwise this exact sequence.
     fn handle(
         &mut self,
         ev: Event,
@@ -383,6 +574,87 @@ impl World {
             self.started = true;
             scheduler.on_sim_start(&self.view());
         }
+        let decision = self.reduce(ev);
+        if decision != Decision::None {
+            let mut actions = std::mem::take(&mut self.action_buf);
+            actions.clear();
+            self.flush_dirty(scheduler);
+            match decision {
+                Decision::JobAdded(id) => {
+                    scheduler.on_job_added(&self.view(), id, predictor, &mut actions);
+                    self.predictor_calls_estimate += 1;
+                }
+                Decision::Heartbeat(node) => {
+                    scheduler.on_heartbeat(&self.view(), node, predictor, &mut actions);
+                }
+                Decision::TaskFinished(job) => {
+                    scheduler.on_task_finished(&self.view(), job, predictor, &mut actions);
+                    self.predictor_calls_estimate += 1;
+                }
+                Decision::None => unreachable!(),
+            }
+            self.apply_actions(&actions);
+            if let Some(log) = &mut self.event_log {
+                log.push(LogEntry { event: ev, actions: actions.clone() });
+            }
+            self.action_buf = actions;
+        }
+        self.post_effects(ev, decision);
+    }
+
+    /// Effects an event applies *after* its scheduler callback: follow-up
+    /// reconfiguration matching, streaming compaction, and the recurring
+    /// heartbeat. Keyed purely on `(event kind, decision ran?)`, so live
+    /// runs and log replay share it verbatim.
+    fn post_effects(&mut self, ev: Event, decision: Decision) {
+        match ev {
+            Event::Heartbeat(node) => {
+                if decision != Decision::None {
+                    self.match_reconfigs();
+                }
+                // Recurring heartbeat while work remains — even for dead
+                // nodes, whose timers keep ticking (see `reduce`).
+                if !self.all_done() {
+                    self.queue.schedule_in(
+                        SimTime::from_secs_f64(self.cfg.heartbeat_s),
+                        Event::Heartbeat(node),
+                    );
+                }
+            }
+            Event::MapDone { .. } => {
+                if decision != Decision::None {
+                    self.match_reconfigs();
+                }
+            }
+            Event::ReduceDone { .. } => {
+                if decision != Decision::None {
+                    self.match_reconfigs();
+                    self.maybe_compact();
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// What [`Self::flush_dirty`] does to *world* state when there is no
+    /// scheduler to notify (log replay): drain the dirty queue and reset
+    /// its flags, leaving the same post-flush state behind.
+    fn clear_dirty(&mut self) {
+        let dirty = std::mem::take(&mut self.dirty);
+        for &j in &dirty {
+            let s = self.slot(j);
+            self.dirty_flags[s] = false;
+        }
+        self.dirty = dirty;
+        self.dirty.clear();
+    }
+
+    /// The pure(-state) transition step: apply `ev` to the world — job
+    /// tables, cluster, HDFS, RNG streams, future completion events — and
+    /// report which scheduler decision point it hit. No scheduler code
+    /// runs in here; `handle` dispatches on the returned [`Decision`] and
+    /// [`Self::replay_to`] applies logged actions instead.
+    fn reduce(&mut self, ev: Event) -> Decision {
         match ev {
             Event::JobArrival(idx) => {
                 debug_assert_eq!(idx as usize, self.arrived, "arrivals handled in order");
@@ -430,39 +702,23 @@ impl World {
                 if let Some(exec) = &mut self.exec {
                     exec.register_job(id, self.jobs.last().expect("just pushed"));
                 }
-                let mut actions = std::mem::take(&mut self.action_buf);
-                actions.clear();
-                self.flush_dirty(scheduler);
-                scheduler.on_job_added(&self.view(), id, predictor, &mut actions);
-                self.predictor_calls_estimate += 1;
-                self.apply_actions(&actions);
-                self.action_buf = actions;
+                Decision::JobAdded(id)
             }
             Event::Heartbeat(node) => {
                 // A dead TaskTracker sends no heartbeats, but its timer
                 // keeps ticking so the cadence resumes unchanged on
-                // recovery (zero drift in the surviving nodes' schedule).
+                // recovery (zero drift in the surviving nodes' schedule);
+                // post-effects reschedule the timer either way.
                 if self.cluster.node_alive(node) {
                     self.heartbeats += 1;
-                    let mut actions = std::mem::take(&mut self.action_buf);
-                    actions.clear();
-                    self.flush_dirty(scheduler);
-                    scheduler.on_heartbeat(&self.view(), node, predictor, &mut actions);
-                    self.apply_actions(&actions);
-                    self.action_buf = actions;
-                    self.match_reconfigs();
-                }
-                // Recurring heartbeat while work remains.
-                if !self.all_done() {
-                    self.queue.schedule_in(
-                        SimTime::from_secs_f64(self.cfg.heartbeat_s),
-                        Event::Heartbeat(node),
-                    );
+                    Decision::Heartbeat(node)
+                } else {
+                    Decision::None
                 }
             }
             Event::MapDone { job, task, node, attempt } => {
                 if job.idx() < self.jobs_base {
-                    return; // job already retired (streaming reclaim)
+                    return Decision::None; // job already retired (streaming reclaim)
                 }
                 let now = self.now();
                 let s = self.slot(job);
@@ -480,7 +736,7 @@ impl World {
                         None => attempt == js.map_attempt(task),
                     };
                 if !spec_won && !primary_done {
-                    return; // stale completion from a killed attempt
+                    return Decision::None; // stale completion from a killed attempt
                 }
                 if spec_won {
                     // First-finisher wins: the backup beat the primary.
@@ -544,25 +800,18 @@ impl World {
                     exec.run_map_task(job, task, &self.jobs[s]);
                 }
                 self.mark_dirty(job);
-                let mut actions = std::mem::take(&mut self.action_buf);
-                actions.clear();
-                self.flush_dirty(scheduler);
-                scheduler.on_task_finished(&self.view(), job, predictor, &mut actions);
-                self.predictor_calls_estimate += 1;
-                self.apply_actions(&actions);
-                self.action_buf = actions;
-                self.match_reconfigs();
+                Decision::TaskFinished(job)
             }
             Event::ReduceDone { job, task, node, attempt } => {
                 if job.idx() < self.jobs_base {
-                    return; // job already retired (streaming reclaim)
+                    return Decision::None; // job already retired (streaming reclaim)
                 }
                 let now = self.now();
                 let s = self.slot(job);
                 {
                     let js = &self.jobs[s];
                     if !js.reduce_state(task).is_running() || attempt != js.reduce_attempt(task) {
-                        return; // stale completion from a crash-killed attempt
+                        return Decision::None; // stale completion from a crash-killed attempt
                     }
                 }
                 if let Some(tl) = &mut self.trace_log {
@@ -599,26 +848,18 @@ impl World {
                     }
                 }
                 self.mark_dirty(job);
-                let mut actions = std::mem::take(&mut self.action_buf);
-                actions.clear();
-                self.flush_dirty(scheduler);
-                scheduler.on_task_finished(&self.view(), job, predictor, &mut actions);
-                self.predictor_calls_estimate += 1;
-                self.apply_actions(&actions);
-                self.action_buf = actions;
-                self.match_reconfigs();
-                self.maybe_compact();
+                Decision::TaskFinished(job)
             }
             Event::HotplugDone { from, to, task } => {
                 if task.job.idx() < self.jobs_base {
-                    return; // job already retired (streaming reclaim)
+                    return Decision::None; // job already retired (streaming reclaim)
                 }
                 // The target PM died while the core was in flight: the
                 // crash reset already reclaimed every core, and the
                 // awaiting task (if any) went back to pending with the
                 // queue purge. Nothing to deliver.
                 if !self.cluster.node_alive(to) {
-                    return;
+                    return Decision::None;
                 }
                 // The released core was unplugged at grant time; now it
                 // arrives at the target VM and the delayed task launches.
@@ -635,7 +876,7 @@ impl World {
                         js.mark_map_await_cancelled(task.id);
                         self.mark_dirty(task.job);
                     }
-                    return;
+                    return Decision::None;
                 }
                 if let Some(tl) = &mut self.trace_log {
                     let at = self.queue.now();
@@ -651,8 +892,12 @@ impl World {
                     // core simply stays with the target VM (it can host
                     // any future local task or be re-released).
                 }
+                Decision::None
             }
-            Event::PmFailure(pm) => self.handle_pm_failure(pm),
+            Event::PmFailure(pm) => {
+                self.handle_pm_failure(pm);
+                Decision::None
+            }
             Event::PmRecovery(pm) => {
                 // The machine rejoins with base-allocation VMs, empty map/
                 // reduce slots and *no* HDFS blocks (its replicas were
@@ -662,6 +907,7 @@ impl World {
                 if !self.cluster.pm_alive(pm) {
                     self.cluster.recover_pm(pm);
                 }
+                Decision::None
             }
         }
     }
@@ -1053,6 +1299,347 @@ impl World {
         self.exec.as_ref()
     }
 
+    // ---- snapshot / resume / replay ------------------------------------
+
+    /// Snapshot container magic.
+    const SNAP_MAGIC: [u8; 4] = *b"VCSS";
+    /// Bump on any incompatible encoding change (`docs/EVENT_LOG.md`).
+    const SNAP_VERSION: u8 = 1;
+
+    /// Serialize the full world + `scheduler` policy state at the current
+    /// event boundary. Layout: magic, version, config fingerprint, world
+    /// section, scheduler kind + state, FNV-1a checksum trailer
+    /// (`docs/EVENT_LOG.md`). Errors on worlds holding host-side state a
+    /// snapshot cannot carry (real exec engine, in-progress captures).
+    pub fn snapshot(&self, scheduler: &dyn Scheduler) -> Result<Vec<u8>, String> {
+        if self.exec.is_some() {
+            return Err(
+                "snapshot requires synthetic exec mode (real mode holds host-side engine state)"
+                    .into(),
+            );
+        }
+        if self.trace_log.is_some() {
+            return Err("snapshot while capturing a task trace is not supported".into());
+        }
+        if self.event_log.is_some() {
+            return Err("snapshot while capturing a decision log is not supported".into());
+        }
+        let mut e = Enc::new();
+        e.raw(&Self::SNAP_MAGIC);
+        e.u8(Self::SNAP_VERSION);
+        e.u64(self.cfg.fingerprint());
+        self.encode_world_state(&mut e);
+        let kind = scheduler.kind();
+        let tag = SchedulerKind::ALL
+            .iter()
+            .position(|&k| k == kind)
+            .expect("scheduler kind in ALL") as u8;
+        e.u8(tag);
+        scheduler.encode_state(&mut e);
+        let sum = fnv1a64(e.bytes());
+        e.u64(sum);
+        Ok(e.into_bytes())
+    }
+
+    /// Restore a world and its scheduler from [`Self::snapshot`] bytes.
+    /// `cfg` must be the snapshot's own config (fingerprint-checked) and
+    /// `source` a fresh instance of the same trace source; the source is
+    /// fast-forwarded to the snapshot's arrival cursor and cross-checked
+    /// against the staged next spec, so a diverging trace is an error,
+    /// not silent skew.
+    pub fn resume(
+        cfg: SimConfig,
+        source: TraceSource,
+        bytes: &[u8],
+    ) -> Result<(Self, Box<dyn Scheduler>), String> {
+        if bytes.len() < Self::SNAP_MAGIC.len() + 1 + 8 + 8 {
+            return Err("snapshot too short".into());
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let mut td = Dec::new(tail);
+        let want = td.u64()?;
+        td.finish()?;
+        let got = fnv1a64(body);
+        if got != want {
+            return Err(format!(
+                "snapshot checksum mismatch: stored {want:#018x}, computed {got:#018x}"
+            ));
+        }
+        let mut d = Dec::new(body);
+        let magic = [d.u8()?, d.u8()?, d.u8()?, d.u8()?];
+        if magic != Self::SNAP_MAGIC {
+            return Err("not a vcsched snapshot (bad magic)".into());
+        }
+        let version = d.u8()?;
+        if version != Self::SNAP_VERSION {
+            return Err(format!(
+                "unsupported snapshot version {version} (expected {})",
+                Self::SNAP_VERSION
+            ));
+        }
+        let fp = d.u64()?;
+        if fp != cfg.fingerprint() {
+            return Err(
+                "snapshot was taken under a different SimConfig (fingerprint mismatch)".into(),
+            );
+        }
+        let mut w = World::from_source(cfg, source);
+        if w.exec.is_some() {
+            return Err("resume requires synthetic exec mode".into());
+        }
+        w.decode_world_state(&mut d)?;
+        let tag = d.u8()? as usize;
+        let kind = *SchedulerKind::ALL
+            .get(tag)
+            .ok_or_else(|| format!("invalid scheduler kind tag {tag}"))?;
+        let mut scheduler = kind.build(&w.cfg);
+        scheduler.restore_state(&mut d, &w.view())?;
+        d.finish()?;
+        Ok((w, scheduler))
+    }
+
+    /// FNV-1a hash over the canonical world-state encoding — the replay
+    /// determinism witness (`replay_to(n)` twice must agree here).
+    pub fn state_hash(&self) -> u64 {
+        let mut e = Enc::new();
+        self.encode_world_state(&mut e);
+        fnv1a64(e.bytes())
+    }
+
+    /// Time-travel debugging: rebuild the world as it stood after the
+    /// first `n` logged decisions by re-running the reduce step against a
+    /// fresh source, substituting the logged actions for the scheduler.
+    /// `n` clamps to the full log; replay panics if the log disagrees
+    /// with the reduced event stream (wrong source or corrupted log).
+    pub fn replay_to(cfg: SimConfig, source: TraceSource, log: &[LogEntry], n: usize) -> Self {
+        let n = n.min(log.len());
+        let mut w = World::from_source(cfg, source);
+        // No scheduler to reset; the flag only gates on_sim_start.
+        w.started = true;
+        let mut i = 0;
+        while i < n {
+            let Some((_, ev)) = w.queue.pop() else { break };
+            let decision = w.reduce(ev);
+            if decision != Decision::None {
+                let entry = &log[i];
+                assert_eq!(
+                    entry.event, ev,
+                    "replay divergence at decision {i}: log vs live event"
+                );
+                w.clear_dirty();
+                if !matches!(decision, Decision::Heartbeat(_)) {
+                    w.predictor_calls_estimate += 1;
+                }
+                w.apply_actions(&entry.actions);
+                i += 1;
+            }
+            w.post_effects(ev, decision);
+        }
+        w
+    }
+
+    /// Encode every field of simulator state a snapshot carries —
+    /// everything except the rebuildable cost tables and host-side
+    /// engines — in struct declaration order.
+    fn encode_world_state(&self, e: &mut Enc) {
+        // Event queue: cursors + pending entries in pop order.
+        let (now, seq, popped) = self.queue.cursors();
+        enc_time(e, now);
+        e.u64(seq);
+        e.u64(popped);
+        let entries = self.queue.entries_sorted();
+        e.usize(entries.len());
+        for (at, eseq, ev) in entries {
+            enc_time(e, at);
+            e.u64(eseq);
+            enc_event(e, *ev);
+        }
+        // RNG streams (xoshiro256** state words).
+        for wd in self.rng.state() {
+            e.u64(wd);
+        }
+        for wd in self.failure_rng.state() {
+            e.u64(wd);
+        }
+        match &self.next_spec {
+            None => e.bool(false),
+            Some(s) => {
+                e.bool(true);
+                encode_job_spec(e, s);
+            }
+        }
+        e.u64(self.arrival_band);
+        e.usize(self.arrived);
+        e.usize(self.jobs_base);
+        e.usize(self.done_prefix);
+        e.usize(self.done_jobs);
+        e.bool(self.naive_all_done);
+        self.cluster.encode_state(e);
+        self.nn.encode_state(e);
+        e.usize(self.jobs.len());
+        for j in &self.jobs {
+            j.encode(e);
+        }
+        e.usize(self.inter_mb.len());
+        for &mb in &self.inter_mb {
+            e.f64(mb);
+        }
+        self.cm.encode_state(e);
+        e.usize(self.dirty.len());
+        for &j in &self.dirty {
+            e.u32(j.0);
+        }
+        e.usize(self.dirty_flags.len());
+        for &f in &self.dirty_flags {
+            e.bool(f);
+        }
+        e.bool(self.started);
+        e.u32(self.cross_rack_flows);
+        enc_fail_stats(e, &self.fail_stats);
+        e.u64(self.heartbeats);
+        e.u64(self.predictor_calls_estimate);
+        e.usize(self.records.len());
+        for r in &self.records {
+            enc_job_record(e, r);
+        }
+        match &self.stream {
+            None => e.bool(false),
+            Some(agg) => {
+                e.bool(true);
+                enc_stream_agg(e, agg);
+            }
+        }
+    }
+
+    /// Inverse of [`Self::encode_world_state`], applied over a freshly
+    /// constructed world (same config + fresh trace source).
+    fn decode_world_state(&mut self, d: &mut Dec) -> Result<(), String> {
+        let now = dec_time(d)?;
+        let seq = d.u64()?;
+        let popped = d.u64()?;
+        // Min entry wire size: at (8) + seq (8) + smallest event (5).
+        let n_entries = d.len(21)?;
+        let mut entries = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let at = dec_time(d)?;
+            let eseq = d.u64()?;
+            let ev = dec_event(d)?;
+            entries.push((at, eseq, ev));
+        }
+        self.queue = EventQueue::restore(now, seq, popped, entries);
+        let mut rs = [0u64; 4];
+        for wd in &mut rs {
+            *wd = d.u64()?;
+        }
+        self.rng = Rng::from_state(rs);
+        let mut fs = [0u64; 4];
+        for wd in &mut fs {
+            *wd = d.u64()?;
+        }
+        self.failure_rng = Rng::from_state(fs);
+        let stored_next = if d.bool()? {
+            Some(decode_job_spec(d)?)
+        } else {
+            None
+        };
+        let arrival_band = d.u64()?;
+        if arrival_band != self.arrival_band {
+            return Err(format!(
+                "arrival seq band mismatch: snapshot {arrival_band}, rebuilt {}",
+                self.arrival_band
+            ));
+        }
+        let arrived = d.usize()?;
+        // Fast-forward the fresh trace source to the snapshot's cursor:
+        // construction pulled the first spec; each handled arrival pulled
+        // one more. The final staged spec must match the snapshot's, so a
+        // wrong or nondeterministic source fails loudly here.
+        let mut cur = self.next_spec.take();
+        for _ in 0..arrived {
+            cur = self.source.next_job();
+        }
+        match (&cur, &stored_next) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                let (mut ea, mut eb) = (Enc::new(), Enc::new());
+                encode_job_spec(&mut ea, a);
+                encode_job_spec(&mut eb, b);
+                if ea.bytes() != eb.bytes() {
+                    return Err(
+                        "trace source diverged from snapshot (staged arrival differs)".into()
+                    );
+                }
+            }
+            _ => {
+                return Err("trace source diverged from snapshot (arrival count)".into());
+            }
+        }
+        self.next_spec = cur;
+        self.arrived = arrived;
+        self.jobs_base = d.usize()?;
+        self.done_prefix = d.usize()?;
+        self.done_jobs = d.usize()?;
+        self.naive_all_done = d.bool()?;
+        self.cluster.restore_state(d)?;
+        self.nn = NameNode::decode_state(d)?;
+        let n_jobs = d.len(32)?;
+        let mut jobs = Vec::with_capacity(n_jobs);
+        for _ in 0..n_jobs {
+            jobs.push(JobState::decode(d)?);
+        }
+        // The cost tables are pure functions of (cfg, spec): rebuild.
+        self.costs = jobs
+            .iter()
+            .map(|j| TaskCost::new(&self.cfg, &j.spec))
+            .collect();
+        self.jobs = jobs;
+        let n_inter = d.len(8)?;
+        if n_inter != self.jobs.len() {
+            return Err(format!(
+                "inter_mb table length {n_inter} != {} jobs",
+                self.jobs.len()
+            ));
+        }
+        let mut inter = Vec::with_capacity(n_inter);
+        for _ in 0..n_inter {
+            inter.push(d.f64()?);
+        }
+        self.inter_mb = inter;
+        self.cm = ConfigManager::decode_state(d)?;
+        let n_dirty = d.len(4)?;
+        let mut dirty = Vec::with_capacity(n_dirty);
+        for _ in 0..n_dirty {
+            dirty.push(JobId(d.u32()?));
+        }
+        self.dirty = dirty;
+        let n_flags = d.len(1)?;
+        let mut flags = Vec::with_capacity(n_flags);
+        for _ in 0..n_flags {
+            flags.push(d.bool()?);
+        }
+        self.dirty_flags = flags;
+        self.started = d.bool()?;
+        self.cross_rack_flows = d.u32()?;
+        self.fail_stats = dec_fail_stats(d)?;
+        self.heartbeats = d.u64()?;
+        self.predictor_calls_estimate = d.u64()?;
+        let n_rec = d.len(67)?;
+        let mut records = Vec::with_capacity(n_rec);
+        for _ in 0..n_rec {
+            records.push(dec_job_record(d)?);
+        }
+        self.records = records;
+        self.stream = if d.bool()? {
+            Some(dec_stream_agg(d)?)
+        } else {
+            None
+        };
+        if self.stream.is_some() != self.cfg.stream_metrics {
+            return Err("snapshot streaming mode disagrees with config".into());
+        }
+        Ok(())
+    }
+
     pub fn into_metrics(self, scheduler: &str) -> RunMetrics {
         let makespan_s = match &self.stream {
             Some(agg) => agg.max_finished_s,
@@ -1075,4 +1662,128 @@ impl World {
             wall_s: 0.0,
         }
     }
+}
+
+fn enc_fail_stats(e: &mut Enc, f: &FailureStats) {
+    e.u64(f.pm_crashes);
+    e.u64(f.speculative_launches);
+    e.u64(f.speculative_wins);
+    e.u64(f.speculative_kills);
+    e.u64(f.reexecuted_tasks);
+    e.u64(f.blocks_relocated);
+    e.u64(f.blocks_lost);
+}
+
+fn dec_fail_stats(d: &mut Dec) -> Result<FailureStats, String> {
+    Ok(FailureStats {
+        pm_crashes: d.u64()?,
+        speculative_launches: d.u64()?,
+        speculative_wins: d.u64()?,
+        speculative_kills: d.u64()?,
+        reexecuted_tasks: d.u64()?,
+        blocks_relocated: d.u64()?,
+        blocks_lost: d.u64()?,
+    })
+}
+
+fn enc_job_record(e: &mut Enc, r: &JobRecord) {
+    e.u32(r.id.0);
+    let tag = ALL_JOB_TYPES
+        .iter()
+        .position(|&t| t == r.job_type)
+        .expect("job type in ALL") as u8;
+    e.u8(tag);
+    e.f64(r.input_mb);
+    enc_time(e, r.submitted);
+    enc_time(e, r.finished);
+    e.f64(r.completion_s);
+    e.f64(r.map_phase_s);
+    match r.deadline_s {
+        None => e.bool(false),
+        Some(dl) => {
+            e.bool(true);
+            e.f64(dl);
+        }
+    }
+    e.u8(match r.met_deadline {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    });
+    e.u32(r.local_maps);
+    e.u32(r.rack_maps);
+    e.u32(r.remote_maps);
+    e.u32(r.maps);
+    e.u32(r.reduces);
+}
+
+fn dec_job_record(d: &mut Dec) -> Result<JobRecord, String> {
+    let id = JobId(d.u32()?);
+    let tag = d.u8()? as usize;
+    let job_type = *ALL_JOB_TYPES
+        .get(tag)
+        .ok_or_else(|| format!("invalid job-type tag {tag}"))?;
+    Ok(JobRecord {
+        id,
+        job_type,
+        input_mb: d.f64()?,
+        submitted: dec_time(d)?,
+        finished: dec_time(d)?,
+        completion_s: d.f64()?,
+        map_phase_s: d.f64()?,
+        deadline_s: if d.bool()? { Some(d.f64()?) } else { None },
+        met_deadline: match d.u8()? {
+            0 => None,
+            1 => Some(false),
+            2 => Some(true),
+            b => return Err(format!("invalid met-deadline tag {b}")),
+        },
+        local_maps: d.u32()?,
+        rack_maps: d.u32()?,
+        remote_maps: d.u32()?,
+        maps: d.u32()?,
+        reduces: d.u32()?,
+    })
+}
+
+fn enc_stream_agg(e: &mut Enc, a: &StreamAgg) {
+    e.u64(a.completed);
+    e.u64(a.completion.count());
+    e.f64(a.completion.mean());
+    e.f64(a.completion.m2());
+    e.f64(a.completion.min());
+    e.f64(a.completion.max());
+    e.f64(a.completion.sum());
+    e.str(&a.sketch.encode());
+    e.u64(a.local_maps);
+    e.u64(a.rack_maps);
+    e.u64(a.remote_maps);
+    e.u64(a.deadlined);
+    e.u64(a.missed);
+    e.f64(a.max_finished_s);
+}
+
+fn dec_stream_agg(d: &mut Dec) -> Result<StreamAgg, String> {
+    let completed = d.u64()?;
+    let n = d.u64()?;
+    let mean = d.f64()?;
+    let m2 = d.f64()?;
+    let min = d.f64()?;
+    let max = d.f64()?;
+    let sum = d.f64()?;
+    let completion = Summary::from_raw(n, mean, m2, min, max, sum);
+    let sketch_s = d.str()?;
+    let sketch =
+        QuantileSketch::decode(&sketch_s).ok_or_else(|| "malformed quantile sketch".to_string())?;
+    Ok(StreamAgg {
+        completed,
+        completion,
+        sketch,
+        local_maps: d.u64()?,
+        rack_maps: d.u64()?,
+        remote_maps: d.u64()?,
+        deadlined: d.u64()?,
+        missed: d.u64()?,
+        max_finished_s: d.f64()?,
+    })
 }

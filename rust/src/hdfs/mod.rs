@@ -18,6 +18,7 @@
 use std::collections::HashMap;
 
 use crate::cluster::NodeId;
+use crate::util::codec::{Dec, Enc};
 use crate::util::Rng;
 
 /// A stored file (one MapReduce job input or output).
@@ -208,6 +209,60 @@ impl NameNode {
             }
         }
         (relocated, lost)
+    }
+
+    /// Snapshot encoding of the full NameNode state. Files are written in
+    /// `FileId` order (the `HashMap` iteration order is not canonical), so
+    /// equal metadata always encodes to equal bytes.
+    pub(crate) fn encode_state(&self, e: &mut Enc) {
+        e.u32(self.next_file);
+        let mut ids: Vec<FileId> = self.files.keys().copied().collect();
+        ids.sort();
+        e.usize(ids.len());
+        for fid in ids {
+            e.u32(fid.0);
+            let blocks = &self.files[&fid];
+            e.usize(blocks.len());
+            for b in blocks {
+                debug_assert_eq!(b.id.file, fid);
+                e.u32(b.id.index);
+                e.f64(b.size_mb);
+                e.usize(b.replicas.len());
+                for r in &b.replicas {
+                    e.u32(r.0);
+                }
+            }
+        }
+    }
+
+    /// Rebuild a NameNode from [`Self::encode_state`] bytes.
+    pub(crate) fn decode_state(d: &mut Dec) -> Result<Self, String> {
+        let next_file = d.u32()?;
+        let n_files = d.len(9)?;
+        let mut files = HashMap::with_capacity(n_files);
+        for _ in 0..n_files {
+            let fid = FileId(d.u32()?);
+            let n_blocks = d.len(16)?;
+            let mut blocks = Vec::with_capacity(n_blocks);
+            for _ in 0..n_blocks {
+                let index = d.u32()?;
+                let size_mb = d.f64()?;
+                let n_reps = d.len(4)?;
+                let mut replicas = Vec::with_capacity(n_reps);
+                for _ in 0..n_reps {
+                    replicas.push(NodeId(d.u32()?));
+                }
+                blocks.push(BlockInfo {
+                    id: BlockId { file: fid, index },
+                    size_mb,
+                    replicas,
+                });
+            }
+            if files.insert(fid, blocks).is_some() {
+                return Err(format!("duplicate file {} in snapshot", fid.0));
+            }
+        }
+        Ok(Self { files, next_file })
     }
 
     /// Fraction of (block, node) pairs that are replicas — diagnostic used

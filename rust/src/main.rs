@@ -15,6 +15,11 @@
 //!   --workload <gen|trace:FILE> (replay a trace file, streamed — see
 //!   docs/TRACE_FORMAT.md) --stream (constant-memory metrics)
 //!   --trace-out FILE (write the workload as a replayable trace file)
+//! Snapshot flags (simulate; see docs/EVENT_LOG.md):
+//!   --snapshot-every N --snapshot-out FILE (write a resumable snapshot
+//!   every N events) --snapshot-exit (stop after the first snapshot)
+//!   --resume-from FILE (continue a snapshotted run to completion)
+//!   --replay-to N (time-travel: rebuild state after logged decision N)
 //! Sweep flags: --grid <default|quick|stress|stress-xl|stress-1m> --preset
 //!   <fig4-throughput|fig5-locality|fig6-deadline-miss|fig7-failures|
 //!   stress|stress-xl|stress-1m> --threads N
@@ -27,10 +32,10 @@
 //!   --out DIR (artifact directory, default results/)
 
 use vcsched::config::SimConfig;
-use vcsched::coordinator::{self, Report};
+use vcsched::coordinator::{self, Report, World};
 use vcsched::predictor::{NativePredictor, Predictor};
 use vcsched::runtime::XlaPredictor;
-use vcsched::scheduler::SchedulerKind;
+use vcsched::scheduler::{Scheduler, SchedulerKind};
 use vcsched::util::args::Args;
 use vcsched::util::benchkit::Table;
 use vcsched::workloads::trace::JobTrace;
@@ -129,12 +134,122 @@ fn cmd_simulate(args: &Args) {
         source = TraceSource::from_trace(trace);
     }
     let mut p = predictor_from(args);
-    let r = coordinator::run_simulation_source(&cfg, kind, source, p.as_mut());
+    let snapshot_every = args.get_usize("snapshot-every", 0);
+    let snapshot_out = args.get("snapshot-out");
+    let snapshot_exit = args.flag("snapshot-exit");
+    if snapshot_every > 0 && snapshot_out.is_none() {
+        panic!("--snapshot-every requires --snapshot-out FILE");
+    }
+
+    let r = if let Some(path) = args.get("resume-from") {
+        // Resume a snapshotted run (docs/EVENT_LOG.md). The snapshot
+        // carries the scheduler (kind + state), so --sched is ignored;
+        // the workload flags must rebuild the original trace source.
+        let bytes =
+            std::fs::read(path).unwrap_or_else(|e| panic!("--resume-from {path}: {e}"));
+        let t0 = std::time::Instant::now();
+        let (mut world, mut sched) = World::resume(cfg.clone(), source, &bytes)
+            .unwrap_or_else(|e| panic!("--resume-from {path}: {e}"));
+        if !run_stepping(
+            &mut world,
+            sched.as_mut(),
+            p.as_mut(),
+            snapshot_every,
+            snapshot_out,
+            snapshot_exit,
+        ) {
+            return;
+        }
+        let mut r = world.into_metrics(sched.kind().name());
+        r.wall_s = t0.elapsed().as_secs_f64();
+        r
+    } else if let Some(nstr) = args.get("replay-to") {
+        // Time-travel debugging: run once with the decision log on, then
+        // deterministically rebuild the state right after decision N.
+        let n: usize = nstr
+            .parse()
+            .unwrap_or_else(|_| panic!("--replay-to wants usize, got {nstr:?}"));
+        let trace = source.materialize();
+        let t0 = std::time::Instant::now();
+        let mut sched = kind.build(&cfg);
+        let mut world = World::new(cfg.clone(), trace.clone());
+        world.enable_event_log();
+        world.run(sched.as_mut(), p.as_mut());
+        let log = world.take_event_log();
+        let replayed = World::replay_to(cfg.clone(), TraceSource::from_trace(trace), &log, n);
+        println!(
+            "replay to {} of {} logged decisions: t={:.1}s state_hash={:016x}",
+            n.min(log.len()),
+            log.len(),
+            replayed.now().as_secs_f64(),
+            replayed.state_hash()
+        );
+        let mut r = world.into_metrics(kind.name());
+        r.wall_s = t0.elapsed().as_secs_f64();
+        r
+    } else if snapshot_every > 0 {
+        let t0 = std::time::Instant::now();
+        let mut sched = kind.build(&cfg);
+        let mut world = World::from_source(cfg.clone(), source);
+        if !run_stepping(
+            &mut world,
+            sched.as_mut(),
+            p.as_mut(),
+            snapshot_every,
+            snapshot_out,
+            snapshot_exit,
+        ) {
+            return;
+        }
+        let mut r = world.into_metrics(kind.name());
+        r.wall_s = t0.elapsed().as_secs_f64();
+        r
+    } else {
+        coordinator::run_simulation_source(&cfg, kind, source, p.as_mut())
+    };
     if args.flag("json") {
         println!("{}", r.to_json().render());
     } else {
         report_line(&r);
     }
+}
+
+/// Step `world` to completion at the same stop boundary as [`World::run`]
+/// (so the report stays byte-equal to a plain run), writing a snapshot to
+/// `out` every `every` events when `every > 0`. Returns false when
+/// `exit_after` ended the run at the first snapshot — the world is
+/// mid-run, so no report should be printed.
+fn run_stepping(
+    world: &mut World,
+    sched: &mut dyn Scheduler,
+    pred: &mut dyn Predictor,
+    every: usize,
+    out: Option<&str>,
+    exit_after: bool,
+) -> bool {
+    let mut events = 0usize;
+    // `!done()` first: a world resumed from a snapshot taken at the very
+    // event that finished the run must process nothing further, exactly
+    // like `World::run` (which breaks right after that event).
+    while !world.done() && world.step_one(sched, pred) {
+        events += 1;
+        if every > 0 && events % every == 0 {
+            let path = out.expect("--snapshot-every requires --snapshot-out FILE");
+            let bytes = world
+                .snapshot(sched)
+                .unwrap_or_else(|e| panic!("snapshot: {e}"));
+            std::fs::write(path, &bytes)
+                .unwrap_or_else(|e| panic!("--snapshot-out {path}: {e}"));
+            if exit_after {
+                println!(
+                    "snapshot after {events} events -> {path} ({} bytes)",
+                    bytes.len()
+                );
+                return false;
+            }
+        }
+    }
+    true
 }
 
 fn cmd_compare(args: &Args) {
@@ -529,7 +644,6 @@ fn print_comparison(p: &vcsched::harness::Preset, rows: &[vcsched::harness::Comp
 }
 
 fn cmd_gantt(args: &Args) {
-    use vcsched::coordinator::World;
     let cfg = cfg_from(args);
     let kind = sched_from(args, SchedulerKind::DeadlineVc);
     let n = args.get_usize("jobs", 8);
@@ -636,6 +750,10 @@ fn print_help() {
          \x20      --workload <gen|trace:FILE> --stream --trace-out FILE\n\
          \x20      (simulate: replay a trace file / constant-memory metrics /\n\
          \x20      write the workload as a replayable trace)\n\
+         \x20      --snapshot-every N --snapshot-out FILE --snapshot-exit\n\
+         \x20      --resume-from FILE --replay-to N\n\
+         \x20      (simulate: resumable snapshots + time-travel replay —\n\
+         \x20      see docs/EVENT_LOG.md)\n\
          sweep: --grid <default|quick|stress|stress-xl|stress-1m> --preset\n\
          \x20      <fig4-throughput|fig5-locality|fig6-deadline-miss|\n\
          \x20      fig7-failures|stress|stress-xl|stress-1m>\n\

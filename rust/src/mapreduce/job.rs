@@ -28,8 +28,9 @@ use crate::config::SimConfig;
 use crate::hdfs::{FileId, NameNode};
 use crate::predictor::JobStats;
 use crate::sim::SimTime;
+use crate::util::codec::{Dec, Enc};
 use crate::util::Rng;
-use crate::workloads::JobSpec;
+use crate::workloads::{JobSpec, JobType, ALL_JOB_TYPES};
 
 use super::task::{SpecAttempt, TaskId, TaskRef, TaskState};
 
@@ -850,5 +851,387 @@ impl JobState {
 
     pub fn reduce_ref(&self, t: TaskId) -> TaskRef {
         TaskRef::reduce(self.id, t.0)
+    }
+}
+
+// ---- snapshot codec (docs/EVENT_LOG.md) ----
+//
+// Every field is serialized, including the derived locality/replica
+// indexes and the lazily-pruned cursors: rebuilding them would be
+// possible (they are functions of NameNode state), but carrying them
+// verbatim keeps the restored `JobState` *bit-identical* to the
+// original, which is what the snapshot/resume byte-identity tests pin.
+
+pub(crate) fn enc_time(e: &mut Enc, t: SimTime) {
+    e.u64(t.0);
+}
+
+pub(crate) fn dec_time(d: &mut Dec) -> Result<SimTime, String> {
+    Ok(SimTime(d.u64()?))
+}
+
+pub(crate) fn enc_opt_time(e: &mut Enc, t: Option<SimTime>) {
+    match t {
+        None => e.bool(false),
+        Some(t) => {
+            e.bool(true);
+            enc_time(e, t);
+        }
+    }
+}
+
+pub(crate) fn dec_opt_time(d: &mut Dec) -> Result<Option<SimTime>, String> {
+    Ok(if d.bool()? { Some(dec_time(d)?) } else { None })
+}
+
+pub(crate) fn enc_tier(e: &mut Enc, t: LocalityTier) {
+    e.u8(match t {
+        LocalityTier::NodeLocal => 0,
+        LocalityTier::RackLocal => 1,
+        LocalityTier::Remote => 2,
+    });
+}
+
+pub(crate) fn dec_tier(d: &mut Dec) -> Result<LocalityTier, String> {
+    Ok(match d.u8()? {
+        0 => LocalityTier::NodeLocal,
+        1 => LocalityTier::RackLocal,
+        2 => LocalityTier::Remote,
+        b => return Err(format!("invalid locality tier tag {b}")),
+    })
+}
+
+fn enc_task_state(e: &mut Enc, s: &TaskState) {
+    match *s {
+        TaskState::Pending => e.u8(0),
+        TaskState::AwaitingReconfig { target } => {
+            e.u8(1);
+            e.u32(target.0);
+        }
+        TaskState::Running {
+            node,
+            started,
+            tier,
+        } => {
+            e.u8(2);
+            e.u32(node.0);
+            enc_time(e, started);
+            enc_tier(e, tier);
+        }
+        TaskState::Finished {
+            node,
+            started,
+            finished,
+            tier,
+        } => {
+            e.u8(3);
+            e.u32(node.0);
+            enc_time(e, started);
+            enc_time(e, finished);
+            enc_tier(e, tier);
+        }
+    }
+}
+
+fn dec_task_state(d: &mut Dec) -> Result<TaskState, String> {
+    Ok(match d.u8()? {
+        0 => TaskState::Pending,
+        1 => TaskState::AwaitingReconfig {
+            target: NodeId(d.u32()?),
+        },
+        2 => TaskState::Running {
+            node: NodeId(d.u32()?),
+            started: dec_time(d)?,
+            tier: dec_tier(d)?,
+        },
+        3 => TaskState::Finished {
+            node: NodeId(d.u32()?),
+            started: dec_time(d)?,
+            finished: dec_time(d)?,
+            tier: dec_tier(d)?,
+        },
+        b => return Err(format!("invalid task-state tag {b}")),
+    })
+}
+
+fn enc_u32_list(e: &mut Enc, v: &[u32]) {
+    e.usize(v.len());
+    for &x in v {
+        e.u32(x);
+    }
+}
+
+fn dec_u32_list(d: &mut Dec) -> Result<Vec<u32>, String> {
+    let n = d.len(4)?;
+    (0..n).map(|_| d.u32()).collect()
+}
+
+fn enc_nested_u32(e: &mut Enc, v: &[Vec<u32>]) {
+    e.usize(v.len());
+    for list in v {
+        enc_u32_list(e, list);
+    }
+}
+
+fn dec_nested_u32(d: &mut Dec) -> Result<Vec<Vec<u32>>, String> {
+    let n = d.len(8)?;
+    (0..n).map(|_| dec_u32_list(d)).collect()
+}
+
+fn job_type_tag(t: JobType) -> u8 {
+    match t {
+        JobType::WordCount => 0,
+        JobType::Sort => 1,
+        JobType::Grep => 2,
+        JobType::PermutationGenerator => 3,
+        JobType::InvertedIndex => 4,
+    }
+}
+
+pub(crate) fn encode_job_spec(e: &mut Enc, s: &JobSpec) {
+    e.u8(job_type_tag(s.job_type));
+    e.f64(s.input_mb);
+    e.u32(s.reducers);
+    match s.deadline_s {
+        None => e.bool(false),
+        Some(dl) => {
+            e.bool(true);
+            e.f64(dl);
+        }
+    }
+    e.f64(s.submit_s);
+}
+
+pub(crate) fn decode_job_spec(d: &mut Dec) -> Result<JobSpec, String> {
+    let tag = d.u8()? as usize;
+    let job_type = *ALL_JOB_TYPES
+        .get(tag)
+        .ok_or_else(|| format!("invalid job-type tag {tag}"))?;
+    debug_assert_eq!(job_type_tag(job_type) as usize, tag);
+    let input_mb = d.f64()?;
+    let reducers = d.u32()?;
+    let deadline_s = if d.bool()? { Some(d.f64()?) } else { None };
+    let submit_s = d.f64()?;
+    Ok(JobSpec {
+        job_type,
+        input_mb,
+        reducers,
+        deadline_s,
+        submit_s,
+    })
+}
+
+fn enc_spec_attempt(e: &mut Enc, s: &SpecAttempt) {
+    e.u32(s.attempt);
+    e.u32(s.node.0);
+    enc_time(e, s.started);
+    enc_tier(e, s.tier);
+}
+
+fn dec_spec_attempt(d: &mut Dec) -> Result<SpecAttempt, String> {
+    Ok(SpecAttempt {
+        attempt: d.u32()?,
+        node: NodeId(d.u32()?),
+        started: dec_time(d)?,
+        tier: dec_tier(d)?,
+    })
+}
+
+impl JobState {
+    /// Serialize the full job state, field for field, in declaration order.
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.u32(self.id.0);
+        encode_job_spec(e, &self.spec);
+        e.u32(self.input_file.0);
+        enc_time(e, self.submitted);
+        e.u8(match self.phase {
+            JobPhase::MapPhase => 0,
+            JobPhase::ReducePhase => 1,
+            JobPhase::Done => 2,
+        });
+        e.usize(self.maps.len());
+        for s in &self.maps {
+            enc_task_state(e, s);
+        }
+        e.usize(self.reduces.len());
+        for s in &self.reduces {
+            enc_task_state(e, s);
+        }
+        enc_nested_u32(e, &self.locality);
+        enc_nested_u32(e, &self.rack_locality);
+        e.usize(self.replicas.len());
+        for reps in &self.replicas {
+            e.usize(reps.len());
+            for n in reps {
+                e.u32(n.0);
+            }
+        }
+        e.usize(self.block_mb.len());
+        for &mb in &self.block_mb {
+            e.f64(mb);
+        }
+        e.usize(self.local_cursors.len());
+        for c in &self.local_cursors {
+            e.u32(c.get());
+        }
+        e.usize(self.rack_cursors.len());
+        for c in &self.rack_cursors {
+            e.u32(c.get());
+        }
+        e.u32(self.map_cursor.get());
+        e.u32(self.reduce_cursor.get());
+        e.u32(self.pending_map_count);
+        e.u32(self.running_map_count);
+        e.u32(self.finished_map_count);
+        e.u32(self.awaiting_map_count);
+        e.u32(self.pending_reduce_count);
+        e.u32(self.running_reduce_count);
+        e.u32(self.finished_reduce_count);
+        enc_u32_list(e, &self.map_attempt);
+        enc_u32_list(e, &self.reduce_attempt);
+        e.usize(self.specs.len());
+        for s in &self.specs {
+            match s {
+                None => e.bool(false),
+                Some(sp) => {
+                    e.bool(true);
+                    enc_spec_attempt(e, sp);
+                }
+            }
+        }
+        e.u32(self.spec_live);
+        e.u32(self.local_maps);
+        e.u32(self.rack_maps);
+        e.u32(self.remote_maps);
+        let (mc, ms, rc, rs, sc, ss, pm, ps) = self.stats.raw();
+        e.u64(mc);
+        e.f64(ms);
+        e.u64(rc);
+        e.f64(rs);
+        e.u64(sc);
+        e.f64(ss);
+        e.f64(pm);
+        e.f64(ps);
+        e.u32(self.alloc_map_slots);
+        e.u32(self.alloc_reduce_slots);
+        enc_opt_time(e, self.finished_at);
+        enc_opt_time(e, self.map_phase_finished_at);
+    }
+
+    /// Inverse of [`Self::encode`]; bit-identical round trip.
+    pub(crate) fn decode(d: &mut Dec) -> Result<Self, String> {
+        let id = JobId(d.u32()?);
+        let spec = decode_job_spec(d)?;
+        let input_file = FileId(d.u32()?);
+        let submitted = dec_time(d)?;
+        let phase = match d.u8()? {
+            0 => JobPhase::MapPhase,
+            1 => JobPhase::ReducePhase,
+            2 => JobPhase::Done,
+            b => return Err(format!("invalid job-phase tag {b}")),
+        };
+        let n_maps = d.len(1)?;
+        let maps: Vec<TaskState> = (0..n_maps)
+            .map(|_| dec_task_state(d))
+            .collect::<Result<_, _>>()?;
+        let n_reduces = d.len(1)?;
+        let reduces: Vec<TaskState> = (0..n_reduces)
+            .map(|_| dec_task_state(d))
+            .collect::<Result<_, _>>()?;
+        let locality = dec_nested_u32(d)?;
+        let rack_locality = dec_nested_u32(d)?;
+        let n_rep = d.len(8)?;
+        let replicas: Vec<Vec<NodeId>> = (0..n_rep)
+            .map(|_| {
+                let k = d.len(4)?;
+                (0..k).map(|_| Ok(NodeId(d.u32()?))).collect()
+            })
+            .collect::<Result<_, String>>()?;
+        let n_blocks = d.len(8)?;
+        let block_mb: Vec<f64> = (0..n_blocks).map(|_| d.f64()).collect::<Result<_, _>>()?;
+        let n_lc = d.len(4)?;
+        let local_cursors: Vec<Cell<u32>> = (0..n_lc)
+            .map(|_| Ok(Cell::new(d.u32()?)))
+            .collect::<Result<_, String>>()?;
+        let n_rc = d.len(4)?;
+        let rack_cursors: Vec<Cell<u32>> = (0..n_rc)
+            .map(|_| Ok(Cell::new(d.u32()?)))
+            .collect::<Result<_, String>>()?;
+        let map_cursor = Cell::new(d.u32()?);
+        let reduce_cursor = Cell::new(d.u32()?);
+        let pending_map_count = d.u32()?;
+        let running_map_count = d.u32()?;
+        let finished_map_count = d.u32()?;
+        let awaiting_map_count = d.u32()?;
+        let pending_reduce_count = d.u32()?;
+        let running_reduce_count = d.u32()?;
+        let finished_reduce_count = d.u32()?;
+        let map_attempt = dec_u32_list(d)?;
+        let reduce_attempt = dec_u32_list(d)?;
+        let n_specs = d.len(1)?;
+        let specs: Vec<Option<SpecAttempt>> = (0..n_specs)
+            .map(|_| {
+                Ok(if d.bool()? {
+                    Some(dec_spec_attempt(d)?)
+                } else {
+                    None
+                })
+            })
+            .collect::<Result<_, String>>()?;
+        let spec_live = d.u32()?;
+        let local_maps = d.u32()?;
+        let rack_maps = d.u32()?;
+        let remote_maps = d.u32()?;
+        let mc = d.u64()?;
+        let ms = d.f64()?;
+        let rc = d.u64()?;
+        let rs = d.f64()?;
+        let sc = d.u64()?;
+        let ss = d.f64()?;
+        let pm = d.f64()?;
+        let ps = d.f64()?;
+        let stats = JobStats::from_raw(mc, ms, rc, rs, sc, ss, pm, ps);
+        let alloc_map_slots = d.u32()?;
+        let alloc_reduce_slots = d.u32()?;
+        let finished_at = dec_opt_time(d)?;
+        let map_phase_finished_at = dec_opt_time(d)?;
+        let job = Self {
+            id,
+            spec,
+            input_file,
+            submitted,
+            phase,
+            maps,
+            reduces,
+            locality,
+            rack_locality,
+            replicas,
+            block_mb,
+            local_cursors,
+            rack_cursors,
+            map_cursor,
+            reduce_cursor,
+            pending_map_count,
+            running_map_count,
+            finished_map_count,
+            awaiting_map_count,
+            pending_reduce_count,
+            running_reduce_count,
+            finished_reduce_count,
+            map_attempt,
+            reduce_attempt,
+            specs,
+            spec_live,
+            local_maps,
+            rack_maps,
+            remote_maps,
+            stats,
+            alloc_map_slots,
+            alloc_reduce_slots,
+            finished_at,
+            map_phase_finished_at,
+        };
+        job.check_invariants()?;
+        Ok(job)
     }
 }

@@ -13,7 +13,11 @@ mod task;
 
 pub use cost::{straggler_multiplier, TaskCost};
 pub use job::{JobId, JobPhase, JobState};
+pub(crate) use job::{
+    dec_opt_time, dec_time, decode_job_spec, enc_opt_time, enc_time, encode_job_spec,
+};
 pub use task::{SpecAttempt, TaskId, TaskKind, TaskRef, TaskState};
+pub(crate) use task::{dec_task_ref, enc_task_ref};
 
 #[cfg(test)]
 mod tests {

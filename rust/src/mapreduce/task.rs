@@ -2,6 +2,7 @@
 
 use crate::cluster::{LocalityTier, NodeId};
 use crate::sim::SimTime;
+use crate::util::codec::{Dec, Enc};
 
 use super::JobId;
 
@@ -39,6 +40,27 @@ impl TaskRef {
             id: TaskId(id),
         }
     }
+}
+
+/// Snapshot codec for [`TaskRef`] (job, kind tag, id).
+pub(crate) fn enc_task_ref(e: &mut Enc, t: TaskRef) {
+    e.u32(t.job.0);
+    e.u8(match t.kind {
+        TaskKind::Map => 0,
+        TaskKind::Reduce => 1,
+    });
+    e.u32(t.id.0);
+}
+
+pub(crate) fn dec_task_ref(d: &mut Dec) -> Result<TaskRef, String> {
+    let job = JobId(d.u32()?);
+    let kind = match d.u8()? {
+        0 => TaskKind::Map,
+        1 => TaskKind::Reduce,
+        k => return Err(format!("bad TaskKind tag {k}")),
+    };
+    let id = TaskId(d.u32()?);
+    Ok(TaskRef { job, kind, id })
 }
 
 /// Lifecycle of a single task.

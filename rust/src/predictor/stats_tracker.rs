@@ -90,6 +90,47 @@ impl JobStats {
     pub fn completed_reduces(&self) -> u64 {
         self.reduce_count
     }
+
+    /// Raw accumulator state for snapshot encoding, in field order:
+    /// `(map_count, map_sum, reduce_count, reduce_sum, shuffle_count,
+    /// shuffle_sum, prior_map_s, prior_shuffle_s)`.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn raw(&self) -> (u64, f64, u64, f64, u64, f64, f64, f64) {
+        (
+            self.map_count,
+            self.map_sum,
+            self.reduce_count,
+            self.reduce_sum,
+            self.shuffle_count,
+            self.shuffle_sum,
+            self.prior_map_s,
+            self.prior_shuffle_s,
+        )
+    }
+
+    /// Rebuild from a [`Self::raw`] capture (snapshot decoding).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_raw(
+        map_count: u64,
+        map_sum: f64,
+        reduce_count: u64,
+        reduce_sum: f64,
+        shuffle_count: u64,
+        shuffle_sum: f64,
+        prior_map_s: f64,
+        prior_shuffle_s: f64,
+    ) -> Self {
+        Self {
+            map_count,
+            map_sum,
+            reduce_count,
+            reduce_sum,
+            shuffle_count,
+            shuffle_sum,
+            prior_map_s,
+            prior_shuffle_s,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -15,7 +15,8 @@
 use std::collections::VecDeque;
 
 use crate::cluster::{Cluster, NodeId, PmId};
-use crate::mapreduce::TaskRef;
+use crate::mapreduce::{dec_task_ref, enc_task_ref, TaskRef};
+use crate::util::codec::{Dec, Enc};
 
 /// A granted reconfiguration: move one core `from` -> `to` (same PM) and
 /// then launch `task` on `to`.
@@ -135,6 +136,46 @@ impl ConfigManager {
     /// Total queued assigns across the cluster (diagnostics).
     pub fn total_pending_assigns(&self) -> usize {
         self.mms.iter().map(|m| m.aq_len()).sum()
+    }
+
+    /// Snapshot encoding: per-MM queues in PM order (queue order matters —
+    /// matching is FIFO) plus the grant counter.
+    pub(crate) fn encode_state(&self, e: &mut Enc) {
+        e.usize(self.mms.len());
+        for mm in &self.mms {
+            e.usize(mm.assign_q.len());
+            for &(vm, task) in &mm.assign_q {
+                e.u32(vm.0);
+                enc_task_ref(e, task);
+            }
+            e.usize(mm.release_q.len());
+            for &vm in &mm.release_q {
+                e.u32(vm.0);
+            }
+        }
+        e.u64(self.hotplugs);
+    }
+
+    /// Rebuild from [`Self::encode_state`] bytes.
+    pub(crate) fn decode_state(d: &mut Dec) -> Result<Self, String> {
+        let n_mms = d.len(16)?;
+        let mut mms = Vec::with_capacity(n_mms);
+        for _ in 0..n_mms {
+            let mut mm = MachineManager::default();
+            let n_aq = d.len(13)?;
+            for _ in 0..n_aq {
+                let vm = NodeId(d.u32()?);
+                let task = dec_task_ref(d)?;
+                mm.assign_q.push_back((vm, task));
+            }
+            let n_rq = d.len(4)?;
+            for _ in 0..n_rq {
+                mm.release_q.push_back(NodeId(d.u32()?));
+            }
+            mms.push(mm);
+        }
+        let hotplugs = d.u64()?;
+        Ok(Self { mms, hotplugs })
     }
 }
 

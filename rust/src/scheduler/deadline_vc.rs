@@ -53,6 +53,7 @@ use crate::config::SimConfig;
 use crate::mapreduce::{JobId, JobState, TaskId};
 use crate::predictor::{abc, JobDemand, Predictor, SlotDemand};
 use crate::sim::SimTime;
+use crate::util::codec::{Dec, Enc};
 
 use super::edf::EdfKeys;
 use super::{
@@ -773,6 +774,107 @@ impl Scheduler for DeadlineVcScheduler {
         }
 
         speculative_fill(view, node, out);
+    }
+
+    /// Snapshots carry everything the view cannot reproduce: the await
+    /// ledger (entry order drives the deterministic CancelAwait emission),
+    /// the delta-Eq.10 dirty set, the next-change bounds, and the tuning
+    /// knobs. Derived state is rebuilt on restore — the EDF-cold-first
+    /// index from the restored jobs, the bound heap from the live
+    /// `bound_of` entries (dead heap entries are ignored by the pop-side
+    /// liveness check, so heap-vs-rebuilt ordering differences are
+    /// unobservable), and `reconfig_timeout` from the tuning.
+    fn encode_state(&self, e: &mut Enc) {
+        e.f64(self.tuning.w_rq);
+        e.f64(self.tuning.w_aq);
+        e.bool(self.tuning.await_requires_release);
+        e.u32(self.tuning.max_routed);
+        e.bool(self.tuning.spare_pass);
+        e.f64(self.tuning.timeout_heartbeats);
+        e.usize(self.awaiting_since.len());
+        for &(job, task, since) in &self.awaiting_since {
+            e.u32(job.0);
+            e.u32(task);
+            e.u64(since.0);
+        }
+        e.usize(self.covered);
+        e.usize(self.win_base);
+        e.usize(self.dirty_list.len());
+        for &j in &self.dirty_list {
+            e.u32(j.0);
+        }
+        e.usize(self.dirty_flag.len());
+        for &f in &self.dirty_flag {
+            e.bool(f);
+        }
+        e.usize(self.bound_of.len());
+        for &b in &self.bound_of {
+            match b {
+                Some(t) => {
+                    e.bool(true);
+                    e.u64(t.0);
+                }
+                None => e.bool(false),
+            }
+        }
+    }
+
+    fn restore_state(&mut self, d: &mut Dec, view: &SchedView) -> Result<(), String> {
+        self.tuning = DvcTuning {
+            w_rq: d.f64()?,
+            w_aq: d.f64()?,
+            await_requires_release: d.bool()?,
+            max_routed: d.u32()?,
+            spare_pass: d.bool()?,
+            timeout_heartbeats: d.f64()?,
+        };
+        self.reconfig_timeout =
+            SimTime::from_secs_f64(view.cfg.heartbeat_s * self.tuning.timeout_heartbeats);
+        let n = d.len(16)?;
+        self.awaiting_since.clear();
+        for _ in 0..n {
+            let job = JobId(d.u32()?);
+            let task = d.u32()?;
+            let since = SimTime(d.u64()?);
+            self.awaiting_since.push((job, task, since));
+        }
+        self.covered = d.usize()?;
+        self.win_base = d.usize()?;
+        if self.win_base != view.jobs_base {
+            return Err(format!(
+                "deadline_vc snapshot window base {} != view jobs_base {}",
+                self.win_base, view.jobs_base
+            ));
+        }
+        let n = d.len(4)?;
+        self.dirty_list = (0..n)
+            .map(|_| d.u32().map(JobId))
+            .collect::<Result<_, _>>()?;
+        let n = d.len(1)?;
+        self.dirty_flag = (0..n).map(|_| d.bool()).collect::<Result<_, _>>()?;
+        let n = d.len(1)?;
+        self.bound_of.clear();
+        self.bound_heap.clear();
+        for slot in 0..n {
+            let b = if d.bool()? {
+                Some(SimTime(d.u64()?))
+            } else {
+                None
+            };
+            if let Some(t) = b {
+                self.bound_heap
+                    .push((Reverse(t), JobId((self.win_base + slot) as u32)));
+            }
+            self.bound_of.push(b);
+        }
+        self.index.clear();
+        self.index.set_base(view.jobs_base);
+        for job in view.jobs {
+            if job.id.idx() < self.covered {
+                self.index.set_key(job.id, active_key(job));
+            }
+        }
+        Ok(())
     }
 }
 

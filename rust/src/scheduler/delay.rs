@@ -26,6 +26,7 @@
 use crate::cluster::{LocalityTier, NodeId};
 use crate::mapreduce::{JobId, JobState};
 use crate::predictor::Predictor;
+use crate::util::codec::{Dec, Enc};
 
 use super::fair::{fair_key, FairKey};
 use super::{
@@ -230,6 +231,49 @@ impl Scheduler for DelayScheduler {
         }
         self.hb += 1;
         speculative_fill(view, node, out);
+    }
+
+    /// Delay's skip counters are history, not a function of the view: a
+    /// freshly built scheduler would grant every waiting job a full new
+    /// patience window. Snapshots therefore carry the virtual clock and
+    /// the per-job bases; the fair-key index is derived state and is
+    /// rebuilt from the restored view instead.
+    fn encode_state(&self, e: &mut Enc) {
+        e.u64(self.hb);
+        e.usize(self.covered);
+        e.usize(self.win_base);
+        e.usize(self.base.len());
+        for &b in &self.base {
+            e.u64(b);
+        }
+        e.usize(self.had_pending.len());
+        for &p in &self.had_pending {
+            e.bool(p);
+        }
+    }
+
+    fn restore_state(&mut self, d: &mut Dec, view: &SchedView) -> Result<(), String> {
+        self.hb = d.u64()?;
+        self.covered = d.usize()?;
+        self.win_base = d.usize()?;
+        if self.win_base != view.jobs_base {
+            return Err(format!(
+                "delay snapshot window base {} != view jobs_base {}",
+                self.win_base, view.jobs_base
+            ));
+        }
+        let n = d.len(8)?;
+        self.base = (0..n).map(|_| d.u64()).collect::<Result<_, _>>()?;
+        let n = d.len(1)?;
+        self.had_pending = (0..n).map(|_| d.bool()).collect::<Result<_, _>>()?;
+        self.index.clear();
+        self.index.set_base(view.jobs_base);
+        for job in view.jobs {
+            if job.id.idx() < self.covered {
+                self.index.set_key(job.id, active_key(job));
+            }
+        }
+        Ok(())
     }
 }
 

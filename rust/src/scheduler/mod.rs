@@ -51,6 +51,7 @@ use crate::mapreduce::{JobId, JobState, TaskId};
 use crate::predictor::Predictor;
 use crate::reconfig::ConfigManager;
 use crate::sim::SimTime;
+use crate::util::codec::{Dec, Enc};
 
 /// Which scheduler to run (CLI/bench selector).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -277,6 +278,22 @@ pub trait Scheduler {
         _predictor: &mut dyn Predictor,
         _out: &mut Vec<Action>,
     ) {
+    }
+
+    /// Serialize policy state into a snapshot. The default writes nothing:
+    /// fifo/fair/edf keep only an [`OrderIndex`] whose keys are pure
+    /// functions of the view, and their heartbeat-side sync pass rebuilds
+    /// it lazily — a freshly built instance is behavior-identical after
+    /// resume. Schedulers with state the view cannot reproduce (delay's
+    /// per-job wait counters, deadline_vc's award ledger) override both
+    /// this and [`Scheduler::restore_state`].
+    fn encode_state(&self, _enc: &mut Enc) {}
+
+    /// Restore policy state written by [`Scheduler::encode_state`] on a
+    /// scheduler of the same kind, with `view` reflecting the restored
+    /// world (used to rebuild derived indexes). Default: nothing to do.
+    fn restore_state(&mut self, _dec: &mut Dec, _view: &SchedView) -> Result<(), String> {
+        Ok(())
     }
 }
 

@@ -15,8 +15,11 @@
 //!
 //! * `tests/differential_reference.rs` can run both implementations over
 //!   the full scheduler × topology × seed matrix and assert **identical
-//!   action streams and bitwise-equal reports** (the optimization changes
-//!   no simulated outcome, only wall time);
+//!   event logs and bitwise-equal reports** — the coordinator's
+//!   event-sourced log ([`crate::coordinator::LogEntry`]) captures every
+//!   scheduler-visible event together with the actions it emitted, so
+//!   the comparison needs no bespoke recording probe (the optimization
+//!   changes no simulated outcome, only wall time);
 //! * `benches/simcore.rs` can report events/sec of the indexed loop
 //!   against this baseline on the `stress` scenario and write the ratio
 //!   into `BENCH_simcore.json`.
@@ -475,87 +478,5 @@ impl Scheduler for NaiveDeadlineVc {
 
         out.extend(actions);
         speculative_fill(view, node, out);
-    }
-}
-
-/// Records every action a wrapped scheduler emits, in emission order —
-/// the probe the differential tests compare indexed-vs-reference action
-/// streams with.
-pub struct Recording {
-    inner: Box<dyn Scheduler>,
-    log: Vec<Action>,
-}
-
-impl Recording {
-    pub fn new(inner: Box<dyn Scheduler>) -> Self {
-        Self {
-            inner,
-            log: Vec::new(),
-        }
-    }
-
-    /// The recorded action stream.
-    pub fn log(&self) -> &[Action] {
-        &self.log
-    }
-
-    pub fn into_log(self) -> Vec<Action> {
-        self.log
-    }
-}
-
-impl Scheduler for Recording {
-    fn kind(&self) -> SchedulerKind {
-        self.inner.kind()
-    }
-
-    // The maintenance hooks must be forwarded, not defaulted: swallowing
-    // them would starve a wrapped indexed scheduler of its notifications.
-    fn on_sim_start(&mut self, view: &SchedView) {
-        self.inner.on_sim_start(view);
-    }
-
-    fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
-        self.inner.on_job_updated(view, job);
-    }
-
-    fn check_index(&self, view: &SchedView) -> Result<(), String> {
-        self.inner.check_index(view)
-    }
-
-    fn on_job_added(
-        &mut self,
-        view: &SchedView,
-        job: JobId,
-        predictor: &mut dyn Predictor,
-        out: &mut Vec<Action>,
-    ) {
-        let start = out.len();
-        self.inner.on_job_added(view, job, predictor, out);
-        self.log.extend_from_slice(&out[start..]);
-    }
-
-    fn on_heartbeat(
-        &mut self,
-        view: &SchedView,
-        node: NodeId,
-        predictor: &mut dyn Predictor,
-        out: &mut Vec<Action>,
-    ) {
-        let start = out.len();
-        self.inner.on_heartbeat(view, node, predictor, out);
-        self.log.extend_from_slice(&out[start..]);
-    }
-
-    fn on_task_finished(
-        &mut self,
-        view: &SchedView,
-        job: JobId,
-        predictor: &mut dyn Predictor,
-        out: &mut Vec<Action>,
-    ) {
-        let start = out.len();
-        self.inner.on_task_finished(view, job, predictor, out);
-        self.log.extend_from_slice(&out[start..]);
     }
 }

@@ -129,6 +129,46 @@ impl<E> EventQueue<E> {
     pub fn len(&self) -> usize {
         self.heap.len()
     }
+
+    /// The non-structural cursors `(now, seq, popped)` for snapshot
+    /// encoding. `seq` must be restored exactly — reserved bands and the
+    /// tie-break order of future insertions depend on it — and `popped`
+    /// feeds the `events` metric, which the byte-identity contract covers.
+    pub fn cursors(&self) -> (SimTime, u64, u64) {
+        (self.now, self.seq, self.popped)
+    }
+
+    /// Pending entries as `(at, seq, ev)` in pop order. The heap's internal
+    /// layout is not canonical (it depends on insertion history), so
+    /// snapshots serialize this sorted view; rebuilding from it via
+    /// [`Self::restore`] is behavior-identical because pops only ever see
+    /// the `(at, seq)` order.
+    pub fn entries_sorted(&self) -> Vec<(SimTime, u64, &E)> {
+        let mut v: Vec<(SimTime, u64, &E)> = self
+            .heap
+            .iter()
+            .map(|Reverse(e)| (e.at, e.seq, &e.ev))
+            .collect();
+        v.sort_unstable_by_key(|&(at, seq, _)| (at, seq));
+        v
+    }
+
+    /// Rebuild a queue from snapshot state: cursors from
+    /// [`Self::cursors`] plus the pending entries from
+    /// [`Self::entries_sorted`].
+    pub fn restore(now: SimTime, seq: u64, popped: u64, entries: Vec<(SimTime, u64, E)>) -> Self {
+        let mut heap = BinaryHeap::with_capacity(entries.len());
+        for (at, eseq, ev) in entries {
+            debug_assert!(at >= now && eseq <= seq);
+            heap.push(Reverse(Entry { at, seq: eseq, ev }));
+        }
+        Self {
+            heap,
+            seq,
+            now,
+            popped,
+        }
+    }
 }
 
 impl<E> Default for EventQueue<E> {
@@ -181,6 +221,36 @@ mod tests {
         lazy.schedule_at_with_seq(SimTime::from_millis(5), band, "a");
         let lazy_order: Vec<&str> = std::iter::from_fn(|| lazy.pop().map(|(_, e)| e)).collect();
         assert_eq!(up_order, lazy_order);
+    }
+
+    #[test]
+    fn restore_reproduces_pop_order_and_cursors() {
+        let mut q = EventQueue::new();
+        for i in 0..50u64 {
+            q.schedule_at(SimTime::from_millis(100 - i), i);
+        }
+        q.pop();
+        q.pop();
+        let (now, seq, popped) = q.cursors();
+        let entries: Vec<(SimTime, u64, u64)> = q
+            .entries_sorted()
+            .into_iter()
+            .map(|(at, s, &ev)| (at, s, ev))
+            .collect();
+        let mut r = EventQueue::restore(now, seq, popped, entries);
+        assert_eq!(r.cursors(), q.cursors());
+        loop {
+            let (a, b) = (q.pop(), r.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+        assert_eq!(r.processed(), q.processed());
+        // New insertions continue the same seq stream.
+        q.schedule_at(SimTime::from_millis(200), 999);
+        r.schedule_at(SimTime::from_millis(200), 999);
+        assert_eq!(q.pop(), r.pop());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 pub mod args;
 pub mod benchkit;
+pub mod codec;
 pub mod json;
 pub mod logger;
 pub mod rng;

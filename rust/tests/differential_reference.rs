@@ -1,90 +1,111 @@
 //! Differential property test: the indexed schedulers (cursor-pruned
 //! pending lists, generation-stamped claim ledger, pooled buffers) must
 //! be **observationally identical** to the retained naive-scan reference
-//! implementations (`vcsched::scheduler::reference`) — same action
-//! stream, same report, bit for bit. This is the contract that lets the
-//! perf work touch the hottest code in the repo without moving a single
+//! implementations (`vcsched::scheduler::reference`) — same event log,
+//! same report, bit for bit. This is the contract that lets the perf
+//! work touch the hottest code in the repo without moving a single
 //! simulated outcome.
+//!
+//! The comparison rides the coordinator's event-sourced log: with
+//! `World::enable_event_log()` every scheduler-visible event is captured
+//! as a `LogEntry { event, actions }`, so two runs are compared log
+//! entry by log entry — the event that fired *and* the actions the
+//! scheduler answered with. This replaced a bespoke `Recording` trait
+//! wrapper; the log is produced by the coordinator itself, so the test
+//! can't miss actions a wrapper forgot to forward.
 //!
 //! Matrix: every `SchedulerKind` × {flat, racks-4} × 3 seeds, plus a
 //! failure-injection sweep (`stragglers-spec`, `crash-low`) that drives
 //! the crash/recovery, straggler and speculation paths through the same
 //! bitwise comparison.
 //!
-//! One normalization is applied to both action streams before comparing:
-//! no-op `SetAlloc`s (re-announcing a job's current allocation) are
-//! dropped. The naive Eq. 10 sweep re-emits every active deadlined job's
+//! One normalization is applied to both logs before comparing: no-op
+//! `SetAlloc`s (re-announcing a job's current allocation) are dropped.
+//! The naive Eq. 10 sweep re-emits every active deadlined job's
 //! allocation at each alloc event; the delta path only emits changes.
 //! Both are applied by the coordinator via idempotent stores, so the
-//! normalized streams — and everything downstream of them — must still
-//! match action for action.
+//! normalized logs — and everything downstream of them — must still
+//! match entry for entry.
 
 use vcsched::cluster::Topology;
 use vcsched::config::{FailureModel, SimConfig};
-use vcsched::coordinator::World;
+use vcsched::coordinator::{LogEntry, World};
 use vcsched::predictor::NativePredictor;
-use vcsched::scheduler::reference::{build_reference, Recording};
+use vcsched::scheduler::reference::build_reference;
 use vcsched::scheduler::{Action, Scheduler, SchedulerKind};
 use vcsched::workloads::trace::JobTrace;
 
-/// Run `trace` under a recording wrapper; return the full action stream
-/// and the run report.
-fn run_recorded(
+/// Run `trace` with the event log enabled; return the full event log and
+/// the run report.
+fn run_logged(
     cfg: &SimConfig,
-    sched: Box<dyn Scheduler>,
+    mut sched: Box<dyn Scheduler>,
     trace: &JobTrace,
-) -> (Vec<Action>, vcsched::coordinator::Report) {
+) -> (Vec<LogEntry>, vcsched::coordinator::Report) {
     let name = sched.kind().name();
-    let mut rec = Recording::new(sched);
     let mut pred = NativePredictor::new();
     let mut world = World::new(cfg.clone(), trace.clone());
-    world.run(&mut rec, &mut pred);
+    world.enable_event_log();
+    world.run(sched.as_mut(), &mut pred);
+    let log = world.take_event_log();
     let report = world.into_metrics(name);
-    (rec.into_log(), report)
+    (log, report)
 }
 
 /// Drop no-op `SetAlloc`s: actions that restate a job's already-stored
 /// allocation. Mirrors the coordinator's store (`JobState::alloc_*`
 /// starts at `u32::MAX`/`u32::MAX`, so a job's *first* alloc is always a
-/// real change and survives). Every other action kind passes through in
-/// order.
-fn normalize_allocs(log: Vec<Action>) -> Vec<Action> {
+/// real change and survives). Every other action kind — and every log
+/// entry, even one left with no actions — passes through in order.
+fn normalize_allocs(log: Vec<LogEntry>) -> Vec<LogEntry> {
     let mut stored: Vec<(u32, u32)> = Vec::new();
     log.into_iter()
-        .filter(|a| {
-            let Action::SetAlloc { job, map_slots, reduce_slots } = *a else {
-                return true;
-            };
-            if stored.len() <= job.idx() {
-                stored.resize(job.idx() + 1, (u32::MAX, u32::MAX));
+        .map(|entry| {
+            let actions = entry
+                .actions
+                .into_iter()
+                .filter(|a| {
+                    let Action::SetAlloc { job, map_slots, reduce_slots } = *a else {
+                        return true;
+                    };
+                    if stored.len() <= job.idx() {
+                        stored.resize(job.idx() + 1, (u32::MAX, u32::MAX));
+                    }
+                    if stored[job.idx()] == (map_slots, reduce_slots) {
+                        return false;
+                    }
+                    stored[job.idx()] = (map_slots, reduce_slots);
+                    true
+                })
+                .collect();
+            LogEntry {
+                event: entry.event,
+                actions,
             }
-            if stored[job.idx()] == (map_slots, reduce_slots) {
-                return false;
-            }
-            stored[job.idx()] = (map_slots, reduce_slots);
-            true
         })
         .collect()
 }
 
 /// The wholesale comparison shared by the failure-free matrix and the
-/// failure-injection sweep: normalized action streams equal action for
-/// action, reports bitwise equal.
+/// failure-injection sweep: normalized event logs equal entry for entry,
+/// reports bitwise equal.
 fn assert_runs_identical(label: &str, cfg: &SimConfig, kind: SchedulerKind, trace: &JobTrace) {
-    let (log_a, rep_a) = run_recorded(cfg, kind.build(cfg), trace);
-    let (log_b, rep_b) = run_recorded(cfg, build_reference(kind, cfg), trace);
+    let (log_a, rep_a) = run_logged(cfg, kind.build(cfg), trace);
+    let (log_b, rep_b) = run_logged(cfg, build_reference(kind, cfg), trace);
 
-    // The action streams are compared wholesale: every launch, await,
-    // cancel, release and (effective) alloc, in emission order.
+    // The event logs are compared wholesale: every scheduler-visible
+    // event, with every launch, await, cancel, release and (effective)
+    // alloc it produced, in emission order.
     let log_a = normalize_allocs(log_a);
     let log_b = normalize_allocs(log_b);
     assert_eq!(
         log_a.len(),
         log_b.len(),
-        "{label}: action stream lengths diverge"
+        "{label}: event log lengths diverge"
     );
     for (i, (a, b)) in log_a.iter().zip(&log_b).enumerate() {
-        assert_eq!(a, b, "{label}: action {i} diverges");
+        assert_eq!(a.event, b.event, "{label}: log entry {i} event diverges");
+        assert_eq!(a, b, "{label}: log entry {i} actions diverge");
     }
 
     // Reports must be bitwise equal (wall_s is host time and is set by

@@ -1,0 +1,193 @@
+//! Event-sourcing property suite: the snapshot/resume and replay
+//! machinery (`World::snapshot` / `World::resume` / `World::replay_to`,
+//! docs/EVENT_LOG.md) must be **lossless**. Across random seeds ×
+//! schedulers × topologies × failure presets:
+//!
+//! * snapshot at event k → resume → run to completion renders a report
+//!   **byte-identical** to the uninterrupted run's;
+//! * replay-to-N twice yields identical canonical state hashes, and a
+//!   full replay lands bit-for-bit on the straight run's final state;
+//! * a corrupted snapshot, a mismatched config, or a world holding
+//!   host-side capture state is rejected up front, never silently skewed.
+
+use vcsched::cluster::Topology;
+use vcsched::config::{FailureModel, SimConfig};
+use vcsched::coordinator::World;
+use vcsched::predictor::NativePredictor;
+use vcsched::scheduler::SchedulerKind;
+use vcsched::workloads::trace::{JobTrace, TraceSource};
+
+/// Uninterrupted run → rendered report. `wall_s` is never set on this
+/// path, so the render is fully deterministic.
+fn straight_report(cfg: &SimConfig, kind: SchedulerKind, trace: &JobTrace) -> String {
+    let mut sched = kind.build(cfg);
+    let mut pred = NativePredictor::new();
+    let mut world = World::new(cfg.clone(), trace.clone());
+    world.run(sched.as_mut(), &mut pred);
+    world.into_metrics(kind.name()).to_json().render()
+}
+
+/// Step a fresh run to event `k` and snapshot at that boundary; `None`
+/// when the run finishes in fewer than `k` events.
+fn snapshot_at(
+    cfg: &SimConfig,
+    kind: SchedulerKind,
+    trace: &JobTrace,
+    k: usize,
+) -> Option<Vec<u8>> {
+    let mut sched = kind.build(cfg);
+    let mut pred = NativePredictor::new();
+    let mut world = World::new(cfg.clone(), trace.clone());
+    let mut events = 0usize;
+    while !world.done() && world.step_one(sched.as_mut(), &mut pred) {
+        events += 1;
+        if events == k {
+            return Some(world.snapshot(sched.as_ref()).expect("snapshot"));
+        }
+    }
+    None
+}
+
+/// Resume from snapshot bytes and run to the same stop boundary
+/// `World::run` uses; return the rendered report.
+fn resumed_report(cfg: &SimConfig, trace: &JobTrace, bytes: &[u8]) -> String {
+    let (mut world, mut sched) =
+        World::resume(cfg.clone(), TraceSource::from_trace(trace.clone()), bytes)
+            .expect("resume");
+    let mut pred = NativePredictor::new();
+    while !world.done() && world.step_one(sched.as_mut(), &mut pred) {}
+    let name = sched.kind().name();
+    world.into_metrics(name).to_json().render()
+}
+
+/// The headline property: interrupting a run at *any* event boundary and
+/// resuming from the snapshot must not move a single output byte —
+/// across every scheduler, flat and racked topologies, and the failure
+/// presets that drive crash-rewind, straggler and speculation state
+/// through the codec.
+#[test]
+fn snapshot_resume_is_byte_identical_across_matrix() {
+    for kind in SchedulerKind::ALL {
+        for (topology, failures) in [
+            (Topology::Flat, "off"),
+            (Topology::Racks(4), "off"),
+            (Topology::Racks(4), "crash-low"),
+            (Topology::Flat, "stragglers-spec"),
+        ] {
+            for seed in [11u64, 99] {
+                let cfg = SimConfig {
+                    topology,
+                    seed,
+                    failures: FailureModel::from_name(failures).unwrap(),
+                    ..SimConfig::paper()
+                };
+                let trace = JobTrace::poisson(&cfg, 8, 4.0, 1.6..3.0, seed);
+                let straight = straight_report(&cfg, kind, &trace);
+                for k in [1usize, 57, 400] {
+                    let Some(bytes) = snapshot_at(&cfg, kind, &trace, k) else {
+                        continue;
+                    };
+                    let resumed = resumed_report(&cfg, &trace, &bytes);
+                    assert_eq!(
+                        straight,
+                        resumed,
+                        "{} / {} / {failures} / seed {seed}: resume from event {k} \
+                         diverged from the straight run",
+                        kind.name(),
+                        topology.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Replay is a pure function of (config, trace, log, n): replaying to
+/// the same N twice gives identical canonical state hashes, and a full
+/// replay reconstructs the straight run's final state bit for bit — the
+/// time-travel-debugging contract.
+#[test]
+fn replay_to_n_is_deterministic_and_full_replay_lands_on_final_state() {
+    for kind in [SchedulerKind::Fifo, SchedulerKind::DeadlineVc] {
+        for seed in [7u64, 21] {
+            let cfg = SimConfig {
+                topology: Topology::Racks(4),
+                seed,
+                ..SimConfig::paper()
+            };
+            let trace = JobTrace::poisson(&cfg, 8, 4.0, 1.6..3.0, seed);
+            let mut sched = kind.build(&cfg);
+            let mut pred = NativePredictor::new();
+            let mut world = World::new(cfg.clone(), trace.clone());
+            world.enable_event_log();
+            world.run(sched.as_mut(), &mut pred);
+            let log = world.take_event_log();
+            let final_hash = world.state_hash();
+            assert!(!log.is_empty(), "{}: empty decision log", kind.name());
+
+            let replay = |n: usize| {
+                World::replay_to(cfg.clone(), TraceSource::from_trace(trace.clone()), &log, n)
+            };
+            for n in [0usize, 1, log.len() / 2, log.len()] {
+                assert_eq!(
+                    replay(n).state_hash(),
+                    replay(n).state_hash(),
+                    "{} / seed {seed}: replay to {n} is nondeterministic",
+                    kind.name()
+                );
+            }
+            assert_eq!(
+                replay(log.len()).state_hash(),
+                final_hash,
+                "{} / seed {seed}: full replay missed the straight run's final state",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// Integrity gates: a flipped byte fails the checksum, a different
+/// config fails the fingerprint, and capture modes (decision log, task
+/// trace) refuse to snapshot rather than lying about restorability.
+#[test]
+fn snapshot_rejects_corruption_capture_modes_and_config_skew() {
+    let cfg = SimConfig::small();
+    let trace = JobTrace::poisson(&cfg, 3, 3.0, 1.6..3.0, 5);
+    let kind = SchedulerKind::Fifo;
+    let mut sched = kind.build(&cfg);
+    let mut pred = NativePredictor::new();
+    let mut world = World::new(cfg.clone(), trace.clone());
+    for _ in 0..5 {
+        assert!(world.step_one(sched.as_mut(), &mut pred));
+    }
+    let bytes = world.snapshot(sched.as_ref()).expect("snapshot");
+
+    // The valid snapshot round-trips.
+    World::resume(cfg.clone(), TraceSource::from_trace(trace.clone()), &bytes)
+        .expect("clean resume");
+
+    // One flipped byte -> checksum mismatch (verified before any field).
+    let mut bad = bytes.clone();
+    bad[10] ^= 1;
+    let err = World::resume(cfg.clone(), TraceSource::from_trace(trace.clone()), &bad)
+        .expect_err("corrupted snapshot accepted");
+    assert!(err.contains("checksum"), "unexpected error: {err}");
+
+    // A different config (here: seed, which the fingerprint covers)
+    // -> fingerprint mismatch.
+    let other = SimConfig {
+        seed: cfg.seed + 1,
+        ..cfg.clone()
+    };
+    let err = World::resume(other, TraceSource::from_trace(trace.clone()), &bytes)
+        .expect_err("config-skewed snapshot accepted");
+    assert!(err.contains("fingerprint"), "unexpected error: {err}");
+
+    // Capture modes hold host-side state the snapshot cannot carry.
+    let mut logging = World::new(cfg.clone(), trace.clone());
+    logging.enable_event_log();
+    assert!(logging.snapshot(sched.as_ref()).is_err());
+    let mut tracing = World::new(cfg.clone(), trace);
+    tracing.enable_trace();
+    assert!(tracing.snapshot(sched.as_ref()).is_err());
+}

@@ -1,0 +1,89 @@
+//! Golden event-log regression test for the `stress` preset (truncated
+//! to the same test-sized job count as `tests/stress_golden.rs`): the
+//! **encoded decision log** — every scheduler-visible event with the
+//! actions it produced, in the wire format of
+//! `vcsched::coordinator::encode_event_log` (docs/EVENT_LOG.md) — must
+//! be bitwise stable across commits, pinned by an FNV-1a hash checked
+//! into the tree.
+//!
+//! Where `stress_report.hash` pins the *outcomes* (the rendered
+//! reports), this pins the *causal record* that produced them: a change
+//! can shuffle scheduler decisions while leaving aggregate metrics
+//! unchanged, and this hash catches exactly that.
+//!
+//! The golden file starts life containing the word `bootstrap`; the
+//! first run pins the real hash in place (commit the updated file). Any
+//! later mismatch means a change moved a scheduling decision or the log
+//! encoding itself on the stress scenario — if intentional (a policy
+//! change or a documented encoding bump), re-bootstrap by writing
+//! `bootstrap` into `tests/golden/stress_eventlog.hash` and re-running.
+
+use vcsched::coordinator::{encode_event_log, World};
+use vcsched::harness::ScenarioGrid;
+use vcsched::predictor::NativePredictor;
+
+/// FNV-1a 64-bit (same construction as the sweep journal's content
+/// hash and the snapshot checksum trailer).
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+const GOLDEN: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/tests/golden/stress_eventlog.hash"
+);
+
+/// Jobs per stress cell, matching `tests/stress_golden.rs` so the two
+/// goldens pin the same truncated scenario set.
+const JOBS: usize = 40;
+
+#[test]
+fn stress_preset_event_logs_are_bitwise_stable() {
+    let mut grid = ScenarioGrid::stress();
+    grid.jobs_per_scenario = JOBS;
+
+    let mut encoded = Vec::new();
+    for sc in &grid.scenarios() {
+        let cfg = sc.sim_config();
+        let trace = sc.job_trace(&grid, &cfg);
+        let mut sched = sc.scheduler.build(&cfg);
+        let mut pred = NativePredictor::new();
+        let mut world = World::new(cfg, trace);
+        world.enable_event_log();
+        world.run(sched.as_mut(), &mut pred);
+        let log = world.take_event_log();
+        assert!(
+            !log.is_empty(),
+            "{}: stress cell produced an empty decision log",
+            sc.scheduler.name()
+        );
+        encoded.extend_from_slice(&encode_event_log(&log));
+    }
+
+    let hash = format!("{:016x}", fnv64(&encoded));
+    let golden = std::fs::read_to_string(GOLDEN)
+        .unwrap_or_else(|e| panic!("missing golden file {GOLDEN}: {e}"))
+        .trim()
+        .to_string();
+    if golden == "bootstrap" {
+        // First run on this tree: pin the hash in place. The updated
+        // file must be committed for the pin to take effect.
+        std::fs::write(GOLDEN, format!("{hash}\n")).expect("pin golden hash");
+        eprintln!(
+            "eventlog golden bootstrapped: pinned {hash} — commit \
+             tests/golden/stress_eventlog.hash"
+        );
+        return;
+    }
+    assert_eq!(
+        golden, hash,
+        "stress preset event-log hash drifted from the pinned golden — a change moved \
+         a scheduling decision or the log encoding ({JOBS}-job stress cells); see \
+         tests/golden/stress_eventlog.hash"
+    );
+}

@@ -122,6 +122,79 @@ fn ordered_index_matches_full_sort_after_every_event() {
     });
 }
 
+/// The snapshot/resume restore path must hand every scheduler a coherent
+/// persistent index: resume from a mid-run snapshot, then assert
+/// `check_index` (OrderIndex vs a from-scratch sort, ClaimLedger counts
+/// vs coordinator job state, SlotOverlay generations) immediately after
+/// restore and again after every remaining event. Failure-free configs
+/// only, for the same reason as the index property above.
+#[test]
+fn index_coherent_after_snapshot_resume() {
+    use vcsched::cluster::Topology;
+    use vcsched::mapreduce::JobId;
+    use vcsched::workloads::trace::TraceSource;
+    prop::check(10, |rng| {
+        let topology = [
+            Topology::Flat,
+            Topology::Racks(2),
+            Topology::Racks(4),
+            Topology::FatTree(2),
+        ][rng.below(4) as usize];
+        let cfg = SimConfig {
+            seed: rng.next_u64(),
+            topology,
+            ..SimConfig::small()
+        };
+        let trace = random_trace(rng, &cfg);
+        let kind = SchedulerKind::ALL[rng.below(5) as usize];
+        let k = 1 + rng.below(200) as usize;
+
+        // Run to event k and snapshot there.
+        let mut sched = kind.build(&cfg);
+        let mut pred = NativePredictor::new();
+        let mut world = World::new(cfg.clone(), trace.clone());
+        let mut events = 0usize;
+        let mut snap = None;
+        while !world.done() && world.step_one(sched.as_mut(), &mut pred) {
+            events += 1;
+            if events == k {
+                snap = Some(world.snapshot(sched.as_ref()).unwrap());
+                break;
+            }
+        }
+        // Short run finished before k events: nothing to resume.
+        let Some(bytes) = snap else { return };
+
+        let (mut world, mut sched) =
+            World::resume(cfg.clone(), TraceSource::from_trace(trace.clone()), &bytes)
+                .unwrap_or_else(|e| panic!("[{} / {}] resume: {e}", kind.name(), topology.label()));
+        let mut pred = NativePredictor::new();
+        let mut steps = 0u64;
+        loop {
+            {
+                let view = world.view();
+                for i in 0..view.jobs.len() {
+                    sched.on_job_updated(&view, JobId(i as u32));
+                }
+                sched.check_index(&view).unwrap_or_else(|e| {
+                    panic!(
+                        "[{} / {}] {steps} events after resume from {k}: {e}",
+                        kind.name(),
+                        topology.label()
+                    )
+                });
+            }
+            if world.done() || !world.step_one(sched.as_mut(), &mut pred) {
+                break;
+            }
+            steps += 1;
+            if steps > 2_000_000 {
+                panic!("[{}] runaway resumed simulation", kind.name());
+            }
+        }
+    });
+}
+
 /// Total vCPUs across the cluster is conserved by reconfiguration: the sum
 /// at the end equals the sum at the start (hot-plug moves, never creates).
 #[test]
