@@ -105,10 +105,25 @@ impl PmProfile {
 ///   `straggler_cap`) slowdown multiplier
 ///   ([`crate::mapreduce::straggler_multiplier`]).
 /// * **Speculation** — LATE-style speculative re-execution of straggling
-///   maps: once a job has `spec_min_finished` finished maps, a running map
-///   whose elapsed time exceeds `spec_slowdown ×` the job's observed mean
-///   map duration is eligible for a backup copy on an idle slot. First
-///   finisher wins; the coordinator kills the loser.
+///   maps *and reduces*: once a job has `spec_min_finished` finished tasks
+///   of the phase, a running task whose elapsed time exceeds
+///   `spec_slowdown ×` the job's observed mean task duration is eligible
+///   for a backup copy on an idle slot. First finisher wins; the
+///   coordinator kills the loser.
+///
+/// Plus two *reactive-policy* switches (no injection of their own; they
+/// change how schedulers respond to the crash signal):
+///
+/// * **Blacklisting** (`blacklist`) — a PM that crashed
+///   [`crate::scheduler`]'s `BLACKLIST_K` times within its rolling window
+///   is skipped for new launches until the window clears.
+/// * **Re-planning** (`replan`) — deadline_vc recomputes Eq. 10 slot
+///   demand against the live (post-crash) slot supply instead of the
+///   static cluster capacity.
+///
+/// `rack_correlated` switches the crash generator from independent per-PM
+/// exponentials to whole-rack outages (every PM of a rack fails and
+/// recovers together; `pm_mtbf_s`/`pm_repair_s` then apply per rack).
 ///
 /// Named presets form the `--failures` sweep axis:
 ///
@@ -150,11 +165,20 @@ pub struct FailureModel {
     pub spec_slowdown: f64,
     /// Minimum finished maps in a job before it may speculate.
     pub spec_min_finished: u32,
+    /// Whole-rack correlated outages instead of independent PM crashes
+    /// (`pm_mtbf_s`/`pm_repair_s` apply per rack).
+    pub rack_correlated: bool,
+    /// Reactive policy: deprioritize repeatedly-crashing PMs for new
+    /// launches (see `scheduler::BlacklistPolicy`).
+    pub blacklist: bool,
+    /// Reactive policy: deadline_vc recomputes Eq. 10 demand against the
+    /// live slot supply after crashes.
+    pub replan: bool,
 }
 
 impl FailureModel {
     /// The named presets, in sweep-axis order.
-    pub const NAMES: [&'static str; 7] = [
+    pub const NAMES: [&'static str; 10] = [
         "off",
         "stragglers",
         "stragglers-spec",
@@ -162,6 +186,9 @@ impl FailureModel {
         "crash-low-spec",
         "crash-high",
         "crash-high-spec",
+        "rack-outage",
+        "rack-outage-blacklist",
+        "rack-outage-replan",
     ];
 
     /// No failures at all — the seed-identical default.
@@ -176,6 +203,9 @@ impl FailureModel {
             speculation: false,
             spec_slowdown: 1.8,
             spec_min_finished: 3,
+            rack_correlated: false,
+            blacklist: false,
+            replan: false,
         }
     }
 
@@ -209,9 +239,35 @@ impl FailureModel {
         }
     }
 
+    /// Correlated whole-rack outages, *pure* crash signal: no stragglers,
+    /// no speculation. Purity keeps a generated rack-outage timeline and
+    /// its recorded trace-file replay byte-identical (nothing else draws
+    /// from the failure stream between crash events).
+    pub fn rack_outage() -> Self {
+        Self {
+            pm_mtbf_s: 2400.0,
+            pm_repair_s: 240.0,
+            trace_horizon_s: 6.0 * 3600.0,
+            rack_correlated: true,
+            ..Self::off()
+        }
+    }
+
     /// The same model with speculation switched on.
     pub fn with_speculation(mut self) -> Self {
         self.speculation = true;
+        self
+    }
+
+    /// The same model with PM blacklisting switched on.
+    pub fn with_blacklist(mut self) -> Self {
+        self.blacklist = true;
+        self
+    }
+
+    /// The same model with deadline re-planning switched on.
+    pub fn with_replan(mut self) -> Self {
+        self.replan = true;
         self
     }
 
@@ -224,6 +280,9 @@ impl FailureModel {
             "crash-low-spec" => Self::crash_low().with_speculation(),
             "crash-high" => Self::crash_high(),
             "crash-high-spec" => Self::crash_high().with_speculation(),
+            "rack-outage" => Self::rack_outage(),
+            "rack-outage-blacklist" => Self::rack_outage().with_blacklist(),
+            "rack-outage-replan" => Self::rack_outage().with_replan(),
             _ => return None,
         })
     }
@@ -245,7 +304,7 @@ impl FailureModel {
             }
         }
         format!(
-            "custom-mtbf{}-rep{}-hz{}-p{}-a{}-cap{}-spec{}-sl{}-mf{}",
+            "custom-mtbf{}-rep{}-hz{}-p{}-a{}-cap{}-spec{}-sl{}-mf{}-rack{}-bl{}-rp{}",
             self.pm_mtbf_s,
             self.pm_repair_s,
             self.trace_horizon_s,
@@ -255,6 +314,9 @@ impl FailureModel {
             self.speculation as u8,
             self.spec_slowdown,
             self.spec_min_finished,
+            self.rack_correlated as u8,
+            self.blacklist as u8,
+            self.replan as u8,
         )
     }
 
@@ -284,6 +346,9 @@ impl FailureModel {
         }
         if self.speculation && (self.spec_slowdown < 1.0 || self.spec_min_finished == 0) {
             return Err("speculation needs spec_slowdown >= 1 and spec_min_finished >= 1".into());
+        }
+        if self.rack_correlated && !self.crashes() {
+            return Err("rack-correlated outages need pm_mtbf_s > 0".into());
         }
         Ok(())
     }
@@ -362,6 +427,11 @@ pub struct SimConfig {
     /// Failure-injection model (default: [`FailureModel::off`], which is
     /// byte-identical to the pre-failure simulator).
     pub failures: FailureModel,
+    /// Replay the crash/recover timeline from this recorded trace file
+    /// (`docs/FAILURE_MODEL.md` grammar) instead of generating it from
+    /// `failures`. The model's straggler/speculation/policy knobs still
+    /// apply; its crash generator is bypassed.
+    pub failure_trace: Option<String>,
 
     // ---- metrics ----
     /// Streaming-metrics mode: fold every finished job into constant-
@@ -400,6 +470,7 @@ impl SimConfig {
             prior_map_s: 20.0,
             prior_shuffle_s: 0.05,
             failures: FailureModel::off(),
+            failure_trace: None,
             stream_metrics: false,
             seed: 42,
         }
@@ -478,6 +549,12 @@ impl SimConfig {
         self.nodes() as u32 * self.reduce_slots
     }
 
+    /// Can this run see PM crashes — from the model's generator *or* a
+    /// replayed failure-trace file?
+    pub fn injects_crashes(&self) -> bool {
+        self.failures.crashes() || self.failure_trace.is_some()
+    }
+
     /// Stable 64-bit fingerprint over every configuration field, including
     /// the seed. Snapshots embed it so a resume against a *different*
     /// configuration (which could never reproduce the original run) is
@@ -517,6 +594,16 @@ impl SimConfig {
         e.bool(self.failures.speculation);
         e.f64(self.failures.spec_slowdown);
         e.u32(self.failures.spec_min_finished);
+        e.bool(self.failures.rack_correlated);
+        e.bool(self.failures.blacklist);
+        e.bool(self.failures.replan);
+        match &self.failure_trace {
+            None => e.bool(false),
+            Some(path) => {
+                e.bool(true);
+                e.str(path);
+            }
+        }
         e.bool(self.stream_metrics);
         e.u64(self.seed);
         fnv1a64(e.bytes())
@@ -560,7 +647,21 @@ impl SimConfig {
             return Err("heartbeat interval must be positive".into());
         }
         self.failures.validate()?;
-        if self.stream_metrics && (self.failures.enabled() || self.exec != ExecMode::Synthetic) {
+        if let Some(path) = &self.failure_trace {
+            if path.is_empty() {
+                return Err("failure_trace path must be non-empty".into());
+            }
+            if self.failures.crashes() {
+                return Err(
+                    "failure_trace replaces the crash generator; set pm_mtbf_s = 0".into(),
+                );
+            }
+        }
+        if self.stream_metrics
+            && (self.failures.enabled()
+                || self.failure_trace.is_some()
+                || self.exec != ExecMode::Synthetic)
+        {
             return Err(
                 "stream_metrics requires failures off and synthetic execution (completed \
                  jobs are retired; crash re-execution and real-exec state need them kept)"
@@ -720,12 +821,49 @@ mod tests {
     fn failure_validation_catches_bad_models() {
         let bad = FailureModel { pm_mtbf_s: 100.0, pm_repair_s: 0.0, ..FailureModel::off() };
         assert!(SimConfig { failures: bad, ..SimConfig::paper() }.validate().is_err());
+        // The silent-zero-crashes footgun: MTBF set but the horizon left
+        // at 0 would generate an empty timeline — rejected, not ignored.
+        let bad = FailureModel {
+            pm_mtbf_s: 100.0,
+            pm_repair_s: 60.0,
+            trace_horizon_s: 0.0,
+            ..FailureModel::off()
+        };
+        assert!(SimConfig { failures: bad, ..SimConfig::paper() }.validate().is_err());
         let bad = FailureModel { straggler_prob: 1.5, ..FailureModel::off() };
         assert!(SimConfig { failures: bad, ..SimConfig::paper() }.validate().is_err());
         let bad = FailureModel { speculation: true, spec_slowdown: 0.5, ..FailureModel::off() };
         assert!(SimConfig { failures: bad, ..SimConfig::paper() }.validate().is_err());
+        // Rack-correlated outages without a crash generator are vacuous.
+        let bad = FailureModel { rack_correlated: true, ..FailureModel::off() };
+        assert!(SimConfig { failures: bad, ..SimConfig::paper() }.validate().is_err());
         let custom = FailureModel { pm_mtbf_s: 777.0, ..FailureModel::crash_low() };
         assert!(custom.label().starts_with("custom-"));
+        let custom = FailureModel { blacklist: true, ..FailureModel::rack_outage() };
+        assert_eq!(custom.label(), "rack-outage-blacklist");
+    }
+
+    #[test]
+    fn failure_trace_file_validation() {
+        let mut c = SimConfig::paper();
+        c.failure_trace = Some("f.trace".into());
+        c.validate().unwrap();
+        assert!(c.injects_crashes());
+        assert!(!c.failures.crashes());
+        // Policy flags compose with a replayed trace.
+        c.failures.blacklist = true;
+        c.validate().unwrap();
+        // ... but a second crash source does not.
+        c.failures = FailureModel::crash_low();
+        assert!(c.validate().is_err());
+        c.failures = FailureModel::off();
+        c.failure_trace = Some(String::new());
+        assert!(c.validate().is_err());
+        // Trace replay keeps jobs alive for re-execution: no streaming.
+        let mut c = SimConfig::paper();
+        c.failure_trace = Some("f.trace".into());
+        c.stream_metrics = true;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -746,6 +884,16 @@ mod tests {
             SimConfig { pms: 21, ..SimConfig::paper() },
             SimConfig { topology: Topology::Racks(4), ..SimConfig::paper() },
             SimConfig { failures: FailureModel::crash_low(), ..SimConfig::paper() },
+            SimConfig { failures: FailureModel::rack_outage(), ..SimConfig::paper() },
+            SimConfig {
+                failures: FailureModel::rack_outage().with_blacklist(),
+                ..SimConfig::paper()
+            },
+            SimConfig {
+                failures: FailureModel::rack_outage().with_replan(),
+                ..SimConfig::paper()
+            },
+            SimConfig { failure_trace: Some("f.trace".into()), ..SimConfig::paper() },
             SimConfig { stream_metrics: true, ..SimConfig::paper() },
             SimConfig { heartbeat_s: 2.0, ..SimConfig::paper() },
         ];

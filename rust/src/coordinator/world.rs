@@ -19,7 +19,9 @@ use crate::util::rng::mix64;
 use crate::util::stats::QuantileSketch;
 use crate::util::stats::Summary;
 use crate::util::Rng;
-use crate::workloads::trace::{failure_trace, JobTrace, TraceSource, FAILURE_STREAM_TAG};
+use crate::workloads::trace::{
+    failure_trace, read_failure_trace_file, JobTrace, TraceSource, FAILURE_STREAM_TAG,
+};
 use crate::workloads::{JobSpec, ALL_JOB_TYPES};
 
 use super::exec_engine::ExecEngine;
@@ -55,8 +57,8 @@ pub enum Event {
         job: JobId,
         task: TaskId,
         node: NodeId,
-        /// Attempt epoch, as for [`Event::MapDone`] (reduces have no
-        /// speculative copies; only crash kills advance the epoch).
+        /// Attempt epoch, as for [`Event::MapDone`]: stale when the
+        /// attempt was crash-killed or lost the reduce speculation race.
         attempt: u32,
     },
     /// A granted vCPU hot-plug completed; launch the delayed local task.
@@ -208,6 +210,12 @@ fn enc_action(e: &mut Enc, a: Action) {
             e.u32(map_slots);
             e.u32(reduce_slots);
         }
+        Action::LaunchSpeculativeReduce { job, task, node } => {
+            e.u8(7);
+            e.u32(job.0);
+            e.u32(task.0);
+            e.u32(node.0);
+        }
     }
 }
 
@@ -340,9 +348,17 @@ impl World {
                 Event::JobArrival(0),
             );
         }
-        // Crash/recover timeline from the dedicated failure stream —
-        // empty (zero events scheduled) unless the model injects crashes.
-        for fe in failure_trace(&cfg.failures, cfg.seed, cfg.pms) {
+        // Crash/recover timeline: replayed from a recorded trace file
+        // when one is configured, else generated from the dedicated
+        // failure stream — empty (zero events scheduled) unless the
+        // model injects crashes.
+        let pm_racks: Vec<u32> = (0..cfg.pms).map(|p| cfg.pm_rack(p)).collect();
+        let failure_events = match &cfg.failure_trace {
+            Some(path) => read_failure_trace_file(path, &pm_racks)
+                .unwrap_or_else(|e| panic!("failure trace {path}: {e}")),
+            None => failure_trace(&cfg.failures, cfg.seed, &pm_racks),
+        };
+        for fe in failure_events {
             let ev = if fe.crash {
                 Event::PmFailure(PmId(fe.pm as u32))
             } else {
@@ -574,6 +590,15 @@ impl World {
             self.started = true;
             scheduler.on_sim_start(&self.view());
         }
+        // Failure events reduce to `Decision::None` (never logged); the
+        // scheduler's policy hooks fire separately, and only when the
+        // event takes effect — the generated trace alternates strictly,
+        // but replayed trace files may repeat a state.
+        let failure_hook = match ev {
+            Event::PmFailure(pm) if self.cluster.pm_alive(pm) => Some((pm, true)),
+            Event::PmRecovery(pm) if !self.cluster.pm_alive(pm) => Some((pm, false)),
+            _ => None,
+        };
         let decision = self.reduce(ev);
         if decision != Decision::None {
             let mut actions = std::mem::take(&mut self.action_buf);
@@ -598,6 +623,14 @@ impl World {
                 log.push(LogEntry { event: ev, actions: actions.clone() });
             }
             self.action_buf = actions;
+        }
+        // Notification-only: no actions may be emitted here, so replay
+        // (which has no scheduler) stays equivalent — the next heartbeat
+        // acts on the updated policy state through logged actions.
+        match failure_hook {
+            Some((pm, true)) => scheduler.on_pm_failure(&self.view(), pm),
+            Some((pm, false)) => scheduler.on_pm_recovery(&self.view(), pm),
+            None => {}
         }
         self.post_effects(ev, decision);
     }
@@ -808,28 +841,67 @@ impl World {
                 }
                 let now = self.now();
                 let s = self.slot(job);
-                {
-                    let js = &self.jobs[s];
-                    if !js.reduce_state(task).is_running() || attempt != js.reduce_attempt(task) {
-                        return Decision::None; // stale completion from a crash-killed attempt
-                    }
+                let js = &self.jobs[s];
+                let spec = js.reduce_spec_of(task);
+                let running = js.reduce_state(task).is_running();
+                // Epoch check mirrors [`Event::MapDone`]: during a race
+                // the primary's epoch is exactly one below the spec's.
+                let spec_won = running && spec.is_some_and(|sp| sp.attempt == attempt);
+                let primary_done = running
+                    && match spec {
+                        Some(sp) => attempt + 1 == sp.attempt,
+                        None => attempt == js.reduce_attempt(task),
+                    };
+                if !spec_won && !primary_done {
+                    return Decision::None; // stale completion from a killed attempt
                 }
-                if let Some(tl) = &mut self.trace_log {
-                    if let TaskState::Running { started, .. } =
-                        *self.jobs[s].reduce_state(task)
-                    {
+                if spec_won {
+                    // First-finisher wins: the backup beat the primary.
+                    let sp = spec.expect("spec_won without spec");
+                    let loser_node = self.jobs[s].mark_reduce_spec_finished(task, now);
+                    if let Some(tl) = &mut self.trace_log {
                         tl.record_span(TaskSpan {
                             job,
                             kind: crate::mapreduce::TaskKind::Reduce,
                             task: task.0,
                             node,
-                            start: started,
+                            start: sp.started,
                             end: now,
                             tier: LocalityTier::Remote,
                         });
                     }
+                    let vm = self.cluster.vm_mut(loser_node);
+                    debug_assert!(vm.busy_reduce > 0);
+                    vm.busy_reduce -= 1;
+                    self.fail_stats.speculative_reduce_wins += 1;
+                    self.fail_stats.speculative_reduce_kills += 1;
+                } else {
+                    if let Some(sp) = spec {
+                        // Primary finished first: kill the still-running
+                        // backup copy and free its slot.
+                        self.jobs[s].take_reduce_spec(task);
+                        let vm = self.cluster.vm_mut(sp.node);
+                        debug_assert!(vm.busy_reduce > 0);
+                        vm.busy_reduce -= 1;
+                        self.fail_stats.speculative_reduce_kills += 1;
+                    }
+                    if let Some(tl) = &mut self.trace_log {
+                        if let TaskState::Running { started, .. } =
+                            *self.jobs[s].reduce_state(task)
+                        {
+                            tl.record_span(TaskSpan {
+                                job,
+                                kind: crate::mapreduce::TaskKind::Reduce,
+                                task: task.0,
+                                node,
+                                start: started,
+                                end: now,
+                                tier: LocalityTier::Remote,
+                            });
+                        }
+                    }
+                    self.jobs[s].mark_reduce_finished(task, now);
                 }
-                self.jobs[s].mark_reduce_finished(task, now);
                 let vm = self.cluster.vm_mut(node);
                 debug_assert!(vm.busy_reduce > 0);
                 vm.busy_reduce -= 1;
@@ -867,7 +939,7 @@ impl World {
                     // Only a crash between grant and delivery can void the
                     // spare (the reset snaps allocations back to base).
                     assert!(
-                        self.cfg.failures.crashes(),
+                        self.cfg.injects_crashes(),
                         "hot-plug grant lost its spare core: {e:?}"
                     );
                     let s = self.slot(task.job);
@@ -917,8 +989,9 @@ impl World {
     ///
     /// 1. running map attempts on its VMs are killed — or survive via a
     ///    live speculative copy on another machine (promotion);
-    /// 2. speculative copies on its VMs are dropped;
-    /// 3. running reduces on its VMs go back to pending;
+    /// 2. speculative copies (map and reduce) on its VMs are dropped;
+    /// 3. running reduces on its VMs go back to pending — or survive via
+    ///    a live speculative copy on another machine (promotion);
     /// 4. un-shuffled map *outputs* it held (job still in its map phase)
     ///    go back to pending for re-execution;
     /// 5. its reconfiguration queues are purged (awaiting tasks cancel);
@@ -979,8 +1052,22 @@ impl World {
             for ti in 0..self.jobs[ji].total_reduces() {
                 let t = TaskId(ti);
                 if let TaskState::Running { node, .. } = *self.jobs[ji].reduce_state(t) {
+                    if let Some(sp) = self.jobs[ji].reduce_spec_of(t) {
+                        if self.cluster.pm_of(sp.node) == pm {
+                            // Dead backup copy: drop it. Its slot is
+                            // reclaimed by the crash reset below.
+                            self.jobs[ji].take_reduce_spec(t);
+                            self.fail_stats.speculative_reduce_kills += 1;
+                        }
+                    }
                     if self.cluster.pm_of(node) == pm {
-                        self.jobs[ji].mark_reduce_killed(t);
+                        if self.jobs[ji].reduce_spec_of(t).is_some() {
+                            // A live backup survives on another
+                            // machine: it becomes the new primary.
+                            self.jobs[ji].promote_reduce_spec(t);
+                        } else {
+                            self.jobs[ji].mark_reduce_killed(t);
+                        }
                     }
                 }
             }
@@ -1053,6 +1140,19 @@ impl World {
                         "reduce launched before map phase finished"
                     );
                     self.launch_reduce(job, task, node);
+                }
+                Action::LaunchSpeculativeReduce { job, task, node } => {
+                    assert!(
+                        self.cluster.vm(node).free_reduce_slots() > 0,
+                        "scheduler overfilled reduce slots on {node:?}"
+                    );
+                    let js = &self.jobs[self.slot(job)];
+                    debug_assert!(
+                        js.reduce_state(task).is_running()
+                            && js.reduce_spec_of(task).is_none(),
+                        "speculative launch on a non-running or already-backed reduce"
+                    );
+                    self.launch_spec_reduce(job, task, node);
                 }
                 Action::AwaitReconfig {
                     job,
@@ -1234,6 +1334,37 @@ impl World {
         );
     }
 
+    /// Launch a speculative backup copy of running reduce `task` on
+    /// `node` (same LATE race as [`Self::launch_spec_map`]). Reduces
+    /// shuffle from every mapper regardless of placement, so there is no
+    /// locality tier and no cross-rack flow accounting.
+    fn launch_spec_reduce(&mut self, job: JobId, task: TaskId, node: NodeId) {
+        let now = self.now();
+        let s = self.slot(job);
+        let attempt = self.jobs[s].begin_spec_reduce(task, node, now);
+        self.mark_dirty(job);
+        self.cluster.vm_mut(node).busy_reduce += 1;
+        self.fail_stats.speculative_reduce_launches += 1;
+        let inter_mb = if let Some(exec) = &self.exec {
+            exec.intermediate_mb(job)
+        } else {
+            self.inter_mb[s]
+        };
+        let js = &self.jobs[s];
+        let speed = self.cluster.vm(node).speed;
+        let secs = self.costs[s].reduce_secs(
+            inter_mb,
+            js.total_maps(),
+            js.total_reduces(),
+            &mut self.rng,
+        ) / speed
+            * straggler_multiplier(&self.cfg.failures, &mut self.failure_rng);
+        self.queue.schedule_in(
+            SimTime::from_secs_f64(secs),
+            Event::ReduceDone { job, task, node, attempt },
+        );
+    }
+
     /// Reclaim the done prefix of the job window (streaming mode only):
     /// retire jobs — releasing their HDFS input files — and advance
     /// `jobs_base`. Triggered only when the prefix is both non-trivial
@@ -1304,7 +1435,9 @@ impl World {
     /// Snapshot container magic.
     const SNAP_MAGIC: [u8; 4] = *b"VCSS";
     /// Bump on any incompatible encoding change (`docs/EVENT_LOG.md`).
-    const SNAP_VERSION: u8 = 1;
+    /// v2: reduce-side speculation (per-job reduce spec list, three more
+    /// failure counters) + failure-reactive scheduler policy state.
+    const SNAP_VERSION: u8 = 2;
 
     /// Serialize the full world + `scheduler` policy state at the current
     /// event boundary. Layout: magic, version, config fingerprint, world
@@ -1669,6 +1802,9 @@ fn enc_fail_stats(e: &mut Enc, f: &FailureStats) {
     e.u64(f.speculative_launches);
     e.u64(f.speculative_wins);
     e.u64(f.speculative_kills);
+    e.u64(f.speculative_reduce_launches);
+    e.u64(f.speculative_reduce_wins);
+    e.u64(f.speculative_reduce_kills);
     e.u64(f.reexecuted_tasks);
     e.u64(f.blocks_relocated);
     e.u64(f.blocks_lost);
@@ -1680,6 +1816,9 @@ fn dec_fail_stats(d: &mut Dec) -> Result<FailureStats, String> {
         speculative_launches: d.u64()?,
         speculative_wins: d.u64()?,
         speculative_kills: d.u64()?,
+        speculative_reduce_launches: d.u64()?,
+        speculative_reduce_wins: d.u64()?,
+        speculative_reduce_kills: d.u64()?,
         reexecuted_tasks: d.u64()?,
         blocks_relocated: d.u64()?,
         blocks_lost: d.u64()?,

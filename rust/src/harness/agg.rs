@@ -68,8 +68,23 @@ pub struct GroupStats {
     pub spec_wins: u64,
     /// Attempts killed by speculation resolution (wasted work).
     pub spec_kills: u64,
+    /// Speculative reduce copies launched across replicates.
+    pub spec_reduce_launches: u64,
+    /// Reduce-speculation races won by the backup copy.
+    pub spec_reduce_wins: u64,
+    /// Reduce attempts killed by speculation resolution.
+    pub spec_reduce_kills: u64,
     /// Task launches that re-ran crash-destroyed work.
     pub reexecuted_tasks: u64,
+}
+
+impl GroupStats {
+    /// Did any replicate in this cell speculate a reduce? Artifacts emit
+    /// the `spec_reduce_*` columns/keys only when true, keeping
+    /// map-only-speculation and failure-free artifacts byte-identical.
+    pub fn any_reduce_spec(&self) -> bool {
+        self.spec_reduce_launches != 0 || self.spec_reduce_wins != 0 || self.spec_reduce_kills != 0
+    }
 }
 
 /// Fold `results` into per-cell statistics, sorted by (scheduler, mix,
@@ -121,6 +136,9 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
         let mut spec_launches = 0u64;
         let mut spec_wins = 0u64;
         let mut spec_kills = 0u64;
+        let mut spec_reduce_launches = 0u64;
+        let mut spec_reduce_wins = 0u64;
+        let mut spec_reduce_kills = 0u64;
         let mut reexecuted_tasks = 0u64;
         for &i in &members {
             let rep = &results[i].report;
@@ -136,6 +154,9 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             spec_launches += rep.failures.speculative_launches;
             spec_wins += rep.failures.speculative_wins;
             spec_kills += rep.failures.speculative_kills;
+            spec_reduce_launches += rep.failures.speculative_reduce_launches;
+            spec_reduce_wins += rep.failures.speculative_reduce_wins;
+            spec_reduce_kills += rep.failures.speculative_reduce_kills;
             reexecuted_tasks += rep.failures.reexecuted_tasks;
             total_jobs += rep.completed_jobs();
             if let Some(agg) = rep.stream_agg() {
@@ -182,6 +203,9 @@ pub fn aggregate(results: &[ScenarioResult]) -> Vec<GroupStats> {
             spec_launches,
             spec_wins,
             spec_kills,
+            spec_reduce_launches,
+            spec_reduce_wins,
+            spec_reduce_kills,
             reexecuted_tasks,
         });
     }
@@ -279,24 +303,37 @@ pub fn sweep_json(
         if rep.stream_agg().is_some() {
             row = row.set("streamed", true);
         }
+        row = row
+            .set("scale", r.scenario.scale)
+            .set("replicate", r.scenario.replicate)
+            .set("stream_seed", format!("{:#018x}", r.scenario.stream_seed))
+            .set("jobs", rep.completed_jobs())
+            .set("makespan_s", rep.makespan_s)
+            .set("mean_completion_s", rep.mean_completion_s())
+            .set("throughput_jobs_per_hour", rep.throughput_jobs_per_hour())
+            .set("locality_pct", rep.locality_pct())
+            .set("rack_pct", rep.rack_pct())
+            .set("remote_pct", rep.remote_pct())
+            .set("miss_rate", rep.miss_rate())
+            .set("hotplugs", rep.hotplugs)
+            .set("pm_crashes", rep.failures.pm_crashes)
+            .set("spec_launches", rep.failures.speculative_launches)
+            .set("spec_wins", rep.failures.speculative_wins)
+            .set("spec_kills", rep.failures.speculative_kills);
+        // Reduce-speculation counters appear only when the replicate
+        // actually speculated a reduce, so earlier artifacts stay
+        // byte-identical.
+        if rep.failures.any_reduce_spec() {
+            row = row
+                .set(
+                    "spec_reduce_launches",
+                    rep.failures.speculative_reduce_launches,
+                )
+                .set("spec_reduce_wins", rep.failures.speculative_reduce_wins)
+                .set("spec_reduce_kills", rep.failures.speculative_reduce_kills);
+        }
         rows = rows.push(
-            row.set("scale", r.scenario.scale)
-                .set("replicate", r.scenario.replicate)
-                .set("stream_seed", format!("{:#018x}", r.scenario.stream_seed))
-                .set("jobs", rep.completed_jobs())
-                .set("makespan_s", rep.makespan_s)
-                .set("mean_completion_s", rep.mean_completion_s())
-                .set("throughput_jobs_per_hour", rep.throughput_jobs_per_hour())
-                .set("locality_pct", rep.locality_pct())
-                .set("rack_pct", rep.rack_pct())
-                .set("remote_pct", rep.remote_pct())
-                .set("miss_rate", rep.miss_rate())
-                .set("hotplugs", rep.hotplugs)
-                .set("pm_crashes", rep.failures.pm_crashes)
-                .set("spec_launches", rep.failures.speculative_launches)
-                .set("spec_wins", rep.failures.speculative_wins)
-                .set("spec_kills", rep.failures.speculative_kills)
-                .set("reexecuted_tasks", rep.failures.reexecuted_tasks)
+            row.set("reexecuted_tasks", rep.failures.reexecuted_tasks)
                 .set("events", rep.events),
         );
     }
@@ -314,29 +351,34 @@ pub fn sweep_json(
         if g.workload != "gen" {
             agg = agg.set("workload", g.workload.as_str());
         }
-        aggs = aggs.push(
-            agg.set("scale", g.scale)
-                .set("seeds", g.seeds)
-                .set("total_jobs", g.total_jobs)
-                .set("mean_completion_s", g.mean_completion_s)
-                .set("std_completion_s", g.std_completion_s)
-                .set("p50_completion_s", g.p50_completion_s)
-                .set("p99_completion_s", g.p99_completion_s)
-                .set("mean_throughput_jph", g.mean_throughput_jph)
-                .set("std_throughput_jph", g.std_throughput_jph)
-                .set("mean_locality_pct", g.mean_locality_pct)
-                .set("std_locality_pct", g.std_locality_pct)
-                .set("mean_rack_pct", g.mean_rack_pct)
-                .set("mean_remote_pct", g.mean_remote_pct)
-                .set("mean_miss_rate", g.mean_miss_rate)
-                .set("mean_makespan_s", g.mean_makespan_s)
-                .set("hotplugs", g.hotplugs)
-                .set("pm_crashes", g.pm_crashes)
-                .set("spec_launches", g.spec_launches)
-                .set("spec_wins", g.spec_wins)
-                .set("spec_kills", g.spec_kills)
-                .set("reexecuted_tasks", g.reexecuted_tasks),
-        );
+        agg = agg
+            .set("scale", g.scale)
+            .set("seeds", g.seeds)
+            .set("total_jobs", g.total_jobs)
+            .set("mean_completion_s", g.mean_completion_s)
+            .set("std_completion_s", g.std_completion_s)
+            .set("p50_completion_s", g.p50_completion_s)
+            .set("p99_completion_s", g.p99_completion_s)
+            .set("mean_throughput_jph", g.mean_throughput_jph)
+            .set("std_throughput_jph", g.std_throughput_jph)
+            .set("mean_locality_pct", g.mean_locality_pct)
+            .set("std_locality_pct", g.std_locality_pct)
+            .set("mean_rack_pct", g.mean_rack_pct)
+            .set("mean_remote_pct", g.mean_remote_pct)
+            .set("mean_miss_rate", g.mean_miss_rate)
+            .set("mean_makespan_s", g.mean_makespan_s)
+            .set("hotplugs", g.hotplugs)
+            .set("pm_crashes", g.pm_crashes)
+            .set("spec_launches", g.spec_launches)
+            .set("spec_wins", g.spec_wins)
+            .set("spec_kills", g.spec_kills);
+        if g.any_reduce_spec() {
+            agg = agg
+                .set("spec_reduce_launches", g.spec_reduce_launches)
+                .set("spec_reduce_wins", g.spec_reduce_wins)
+                .set("spec_reduce_kills", g.spec_reduce_kills);
+        }
+        aggs = aggs.push(agg.set("reexecuted_tasks", g.reexecuted_tasks));
     }
 
     Json::obj()
@@ -345,20 +387,27 @@ pub fn sweep_json(
         .set("aggregates", aggs)
 }
 
-/// Aggregates as CSV (one row per grid cell).
+/// Aggregates as CSV (one row per grid cell). The `spec_reduce_*` columns
+/// appear only when some cell actually speculated a reduce, so the CSV of
+/// failure-free (and map-only-speculation) sweeps stays byte-identical.
 pub fn aggregates_csv(groups: &[GroupStats]) -> String {
+    let reduce_spec = groups.iter().any(GroupStats::any_reduce_spec);
     let mut out = String::from(
         "scheduler,mix,pms,profile,topology,arrival,failures,scale,seeds,\
          total_jobs,mean_completion_s,std_completion_s,p50_completion_s,\
          p99_completion_s,mean_throughput_jph,std_throughput_jph,\
          mean_locality_pct,std_locality_pct,mean_rack_pct,mean_remote_pct,\
          mean_miss_rate,mean_makespan_s,hotplugs,pm_crashes,spec_launches,\
-         spec_wins,spec_kills,reexecuted_tasks\n",
+         spec_wins,spec_kills,",
     );
+    if reduce_spec {
+        out.push_str("spec_reduce_launches,spec_reduce_wins,spec_reduce_kills,");
+    }
+    out.push_str("reexecuted_tasks\n");
     for g in groups {
-        let _ = writeln!(
+        let _ = write!(
             out,
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},",
             g.scheduler,
             g.mix,
             g.pms,
@@ -385,9 +434,16 @@ pub fn aggregates_csv(groups: &[GroupStats]) -> String {
             g.pm_crashes,
             g.spec_launches,
             g.spec_wins,
-            g.spec_kills,
-            g.reexecuted_tasks
+            g.spec_kills
         );
+        if reduce_spec {
+            let _ = write!(
+                out,
+                "{},{},{},",
+                g.spec_reduce_launches, g.spec_reduce_wins, g.spec_reduce_kills
+            );
+        }
+        let _ = writeln!(out, "{}", g.reexecuted_tasks);
     }
     out
 }

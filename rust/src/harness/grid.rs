@@ -81,6 +81,68 @@ impl Workload {
     }
 }
 
+/// Where one scenario's PM failures come from: a named generator preset
+/// (the [`FailureModel`] axis point) or a replayed failure-trace file
+/// (`--failures trace:<file>`, see `docs/FAILURE_MODEL.md` for the line
+/// grammar). A trace-file cell runs with the generator off — the file
+/// *is* the failure schedule — so straggler and speculation knobs stay at
+/// their defaults there.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FailureSpec {
+    /// Apply this failure model (generator presets; the default axis).
+    Preset(FailureModel),
+    /// Replay the failure trace at this path.
+    TraceFile(String),
+}
+
+impl FailureSpec {
+    /// The failure-free default point.
+    pub fn off() -> FailureSpec {
+        FailureSpec::Preset(FailureModel::off())
+    }
+
+    /// The failure model this cell's `SimConfig` carries ([`FailureModel::off`]
+    /// for trace-file replay — the file replaces the generator).
+    pub fn model(&self) -> FailureModel {
+        match self {
+            FailureSpec::Preset(m) => *m,
+            FailureSpec::TraceFile(_) => FailureModel::off(),
+        }
+    }
+
+    /// The failure-trace path, when this cell replays a file.
+    pub fn trace_file(&self) -> Option<&str> {
+        match self {
+            FailureSpec::Preset(_) => None,
+            FailureSpec::TraceFile(p) => Some(p),
+        }
+    }
+
+    /// Stable label carried into artifacts and journal keys.
+    pub fn label(&self) -> String {
+        match self {
+            FailureSpec::Preset(m) => m.label(),
+            FailureSpec::TraceFile(p) => format!("trace:{p}"),
+        }
+    }
+
+    /// Parse one `--failures` operand: a preset name or `trace:<file>`.
+    pub fn from_label(s: &str) -> Option<FailureSpec> {
+        if let Some(p) = s.strip_prefix("trace:") {
+            return (!p.is_empty()).then(|| FailureSpec::TraceFile(p.to_string()));
+        }
+        FailureModel::from_name(s).map(FailureSpec::Preset)
+    }
+
+    /// Parse a comma-separated `--failures` axis override. `None` if any
+    /// entry is unknown.
+    pub fn parse_list(s: &str) -> Option<Vec<FailureSpec>> {
+        s.split(',')
+            .map(|part| FailureSpec::from_label(part.trim()))
+            .collect()
+    }
+}
+
 /// The declarative grid: every combination of the axis vectors becomes one
 /// scenario per seed replicate. Axis vectors are public so callers apply
 /// per-axis overrides before expansion (`vcsched sweep --pms 10 ...`).
@@ -102,10 +164,10 @@ pub struct ScenarioGrid {
     pub arrivals: Vec<Arrival>,
     /// Axis: MB of simulated input per paper-GB (100 = fast, 1024 = full).
     pub scales: Vec<f64>,
-    /// Axis: failure-injection model (crashes/stragglers/speculation).
-    /// Defaults to the single [`FailureModel::off`] point, which keeps
+    /// Axis: failure injection (generator preset or replayed trace file).
+    /// Defaults to the single [`FailureSpec::off`] point, which keeps
     /// every run byte-identical to the failure-free simulator.
-    pub failures: Vec<FailureModel>,
+    pub failures: Vec<FailureSpec>,
     /// Axis: job source (seed-generated or a replayed trace file).
     /// Defaults to the single [`Workload::Generated`] point, which keeps
     /// every artifact byte-identical to pre-axis releases.
@@ -142,7 +204,7 @@ impl ScenarioGrid {
             topologies: vec![Topology::Flat],
             arrivals: vec![Arrival::STEADY],
             scales: vec![100.0],
-            failures: vec![FailureModel::off()],
+            failures: vec![FailureSpec::off()],
             workloads: vec![Workload::Generated],
             stream_metrics: false,
             seed_replicates: 10,
@@ -173,7 +235,7 @@ impl ScenarioGrid {
             topologies: vec![Topology::Racks(8)],
             arrivals: vec![Arrival::STEADY],
             scales: vec![100.0],
-            failures: vec![FailureModel::off()],
+            failures: vec![FailureSpec::off()],
             workloads: vec![Workload::Generated],
             stream_metrics: false,
             seed_replicates: 1,
@@ -203,7 +265,7 @@ impl ScenarioGrid {
             topologies: vec![Topology::FatTree(16)],
             arrivals: vec![Arrival::STEADY],
             scales: vec![100.0],
-            failures: vec![FailureModel::off()],
+            failures: vec![FailureSpec::off()],
             workloads: vec![Workload::Generated],
             stream_metrics: false,
             seed_replicates: 1,
@@ -231,7 +293,7 @@ impl ScenarioGrid {
             topologies: vec![Topology::Racks(8)],
             arrivals: vec![Arrival::STEADY],
             scales: vec![100.0],
-            failures: vec![FailureModel::off()],
+            failures: vec![FailureSpec::off()],
             workloads: vec![Workload::Generated],
             stream_metrics: true,
             seed_replicates: 1,
@@ -254,7 +316,7 @@ impl ScenarioGrid {
             topologies: vec![Topology::Flat],
             arrivals: vec![Arrival::STEADY],
             scales: vec![32.0],
-            failures: vec![FailureModel::off()],
+            failures: vec![FailureSpec::off()],
             workloads: vec![Workload::Generated],
             stream_metrics: false,
             seed_replicates: 2,
@@ -295,7 +357,7 @@ impl ScenarioGrid {
                         for &topology in &self.topologies {
                             for &arrival in &self.arrivals {
                                 for &scale in &self.scales {
-                                    for &failures in &self.failures {
+                                    for failures in &self.failures {
                                         for workload in &self.workloads {
                                             for replicate in 0..self.seed_replicates {
                                                 let index = out.len();
@@ -308,7 +370,7 @@ impl ScenarioGrid {
                                                     topology,
                                                     arrival,
                                                     scale,
-                                                    failures,
+                                                    failures: failures.clone(),
                                                     workload: workload.clone(),
                                                     stream_metrics: self.stream_metrics,
                                                     replicate,
@@ -343,8 +405,8 @@ pub struct Scenario {
     pub topology: Topology,
     pub arrival: Arrival,
     pub scale: f64,
-    /// Failure-injection model applied to this cell.
-    pub failures: FailureModel,
+    /// Failure injection applied to this cell (preset or trace file).
+    pub failures: FailureSpec,
     /// Job source for this cell (generated or a replayed trace file).
     pub workload: Workload,
     /// Whether this cell runs with streaming (constant-memory) metrics.
@@ -365,7 +427,8 @@ impl Scenario {
         cfg.pms = self.pms;
         cfg.pm_profile = self.profile;
         cfg.topology = self.topology;
-        cfg.failures = self.failures;
+        cfg.failures = self.failures.model();
+        cfg.failure_trace = self.failures.trace_file().map(str::to_string);
         cfg.stream_metrics = self.stream_metrics;
         cfg.seed = self.stream_seed;
         cfg
@@ -502,9 +565,9 @@ mod tests {
     fn failures_axis_multiplies_the_grid() {
         let mut g = ScenarioGrid::quick();
         g.failures = vec![
-            FailureModel::off(),
-            FailureModel::crash_low(),
-            FailureModel::crash_low().with_speculation(),
+            FailureSpec::off(),
+            FailureSpec::Preset(FailureModel::crash_low()),
+            FailureSpec::Preset(FailureModel::crash_low().with_speculation()),
         ];
         assert_eq!(g.len(), ScenarioGrid::quick().len() * 3);
         let scenarios = g.scenarios();
@@ -515,14 +578,62 @@ mod tests {
         // The model lands in the scenario's SimConfig verbatim.
         let sc = scenarios
             .iter()
-            .find(|s| s.failures == FailureModel::crash_low())
+            .find(|s| s.failures == FailureSpec::Preset(FailureModel::crash_low()))
             .unwrap();
         let cfg = sc.sim_config();
         cfg.validate().unwrap();
         assert_eq!(cfg.failures, FailureModel::crash_low());
+        assert_eq!(cfg.failure_trace, None);
         // The default point stays failure-free.
-        let off = scenarios.iter().find(|s| !s.failures.enabled()).unwrap();
+        let off = scenarios
+            .iter()
+            .find(|s| !s.failures.model().enabled())
+            .unwrap();
         assert!(!off.sim_config().failures.enabled());
+    }
+
+    #[test]
+    fn failure_spec_labels_roundtrip_and_land_in_config() {
+        assert_eq!(FailureSpec::from_label("off"), Some(FailureSpec::off()));
+        assert_eq!(
+            FailureSpec::from_label("rack-outage-blacklist"),
+            Some(FailureSpec::Preset(
+                FailureModel::rack_outage().with_blacklist()
+            ))
+        );
+        assert_eq!(
+            FailureSpec::from_label("trace:traces/outage.txt"),
+            Some(FailureSpec::TraceFile("traces/outage.txt".to_string()))
+        );
+        assert_eq!(FailureSpec::from_label("trace:"), None);
+        assert_eq!(FailureSpec::from_label("bogus"), None);
+        for f in [
+            FailureSpec::off(),
+            FailureSpec::Preset(FailureModel::crash_high().with_speculation()),
+            FailureSpec::TraceFile("a/b.txt".into()),
+        ] {
+            assert_eq!(FailureSpec::from_label(&f.label()), Some(f.clone()));
+        }
+        assert_eq!(
+            FailureSpec::parse_list("off, crash-low, trace:x.txt"),
+            Some(vec![
+                FailureSpec::off(),
+                FailureSpec::Preset(FailureModel::crash_low()),
+                FailureSpec::TraceFile("x.txt".to_string()),
+            ])
+        );
+        assert_eq!(FailureSpec::parse_list("off,bogus"), None);
+
+        // A trace-file cell carries the path in SimConfig and keeps the
+        // generator off.
+        let mut g = ScenarioGrid::quick();
+        g.failures = vec![FailureSpec::TraceFile("traces/outage.txt".into())];
+        let sc = &g.scenarios()[0];
+        let cfg = sc.sim_config();
+        assert_eq!(cfg.failure_trace.as_deref(), Some("traces/outage.txt"));
+        assert!(!cfg.failures.crashes());
+        assert!(cfg.injects_crashes());
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -34,8 +34,11 @@ use super::grid::{Scenario, ScenarioGrid};
 /// failure/speculation counters appended after `predictor_calls`, and the
 /// failure-model label joined the content hash. v4: the workload and
 /// stream-metrics axes joined the content hash, and streamed runs journal
-/// their constant-memory accumulators as a `@`-prefixed jobs field.)
-const VERSION: &str = "v4";
+/// their constant-memory accumulators as a `@`-prefixed jobs field. v5:
+/// reduce-speculation counters appended to the failure-counter field —
+/// 7 counters became 10 — and the failures axis label may now name a
+/// replayed trace file, `trace:<path>`.)
+const VERSION: &str = "v5";
 
 /// FNV-1a 64-bit over a byte string (stable across platforms/runs).
 fn fnv64(bytes: &[u8]) -> u64 {
@@ -167,7 +170,7 @@ fn render_line(key: u64, r: &RunMetrics) -> String {
     // record boundary (every field before the sentinel would still parse).
     let f = &r.failures;
     format!(
-        "{VERSION}\t{key:016x}\t{}\t{}\t{}\t{}\t{}\t{}\t{},{},{},{},{},{},{}\t{}\t{jobs}\tok\n",
+        "{VERSION}\t{key:016x}\t{}\t{}\t{}\t{}\t{}\t{}\t{},{},{},{},{},{},{},{},{},{}\t{}\t{jobs}\tok\n",
         r.scheduler,
         r.makespan_s,
         r.hotplugs,
@@ -178,6 +181,9 @@ fn render_line(key: u64, r: &RunMetrics) -> String {
         f.speculative_launches,
         f.speculative_wins,
         f.speculative_kills,
+        f.speculative_reduce_launches,
+        f.speculative_reduce_wins,
+        f.speculative_reduce_kills,
         f.reexecuted_tasks,
         f.blocks_relocated,
         f.blocks_lost,
@@ -315,7 +321,7 @@ fn parse_line(line: &str) -> Option<(u64, RunMetrics)> {
 
 fn parse_failures(s: &str) -> Option<FailureStats> {
     let f: Vec<&str> = s.split(',').collect();
-    if f.len() != 7 {
+    if f.len() != 10 {
         return None;
     }
     Some(FailureStats {
@@ -323,9 +329,12 @@ fn parse_failures(s: &str) -> Option<FailureStats> {
         speculative_launches: f[1].parse().ok()?,
         speculative_wins: f[2].parse().ok()?,
         speculative_kills: f[3].parse().ok()?,
-        reexecuted_tasks: f[4].parse().ok()?,
-        blocks_relocated: f[5].parse().ok()?,
-        blocks_lost: f[6].parse().ok()?,
+        speculative_reduce_launches: f[4].parse().ok()?,
+        speculative_reduce_wins: f[5].parse().ok()?,
+        speculative_reduce_kills: f[6].parse().ok()?,
+        reexecuted_tasks: f[7].parse().ok()?,
+        blocks_relocated: f[8].parse().ok()?,
+        blocks_lost: f[9].parse().ok()?,
     })
 }
 
@@ -429,8 +438,8 @@ mod tests {
         {
             use std::io::Write as _;
             let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
-            f.write_all(b"v4\tdeadbeef\tfair\t12.5").unwrap(); // truncated early
-            f.write_all(b"\nv3\tdeadbeef\tfair\t12.5\tok\n").unwrap(); // stale version
+            f.write_all(b"v5\tdeadbeef\tfair\t12.5").unwrap(); // truncated early
+            f.write_all(b"\nv4\tdeadbeef\tfair\t12.5\tok\n").unwrap(); // stale version
             f.write_all(b"\nnot a journal line\n").unwrap();
             let full = render_line(0xfeed_f00d, &report);
             let boundary = full.rfind(';').expect("multi-job line");
@@ -508,8 +517,13 @@ mod tests {
         // that injects them (and vice versa).
         for sc in &scenarios {
             let mut failing = sc.clone();
-            failing.failures = crate::config::FailureModel::crash_low();
+            failing.failures =
+                crate::harness::FailureSpec::Preset(crate::config::FailureModel::crash_low());
             assert_ne!(scenario_key(&g, sc), scenario_key(&g, &failing));
+            let mut traced = sc.clone();
+            traced.failures = crate::harness::FailureSpec::TraceFile("f.txt".to_string());
+            assert_ne!(scenario_key(&g, sc), scenario_key(&g, &traced));
+            assert_ne!(scenario_key(&g, &failing), scenario_key(&g, &traced));
         }
         // The workload and streaming axes enter the content hash: a
         // trace-replay or streamed cell must never replay generated/exact

@@ -81,7 +81,7 @@ pub mod preset;
 pub mod runner;
 
 pub use agg::{aggregate, aggregates_csv, sweep_json, GroupStats};
-pub use grid::{JobMix, Scenario, ScenarioGrid, Workload};
+pub use grid::{FailureSpec, JobMix, Scenario, ScenarioGrid, Workload};
 pub use journal::{scenario_key, Journal};
 pub use preset::{
     compare_cells, comparison_json, headline_gain, preset as figure_preset, ComparisonRow,

@@ -12,7 +12,7 @@
 //! | `fig4-throughput`    | jobs/hour            | profile ∈ {uniform, split-2x, long-tail} |
 //! | `fig5-locality`      | map locality %       | profile ∈ {uniform, long-tail} × topology ∈ {flat, racks-4} × arrival ∈ {steady, burst} |
 //! | `fig6-deadline-miss` | deadline-miss rate   | profile ∈ {uniform, split-2x} × arrival ∈ {steady, steady-x2, burst} |
-//! | `fig7-failures`      | deadline-miss rate   | failures ∈ {off, crash-low, crash-low-spec, crash-high, crash-high-spec} |
+//! | `fig7-failures`      | deadline-miss rate   | failures ∈ {off, crash-low[-spec], crash-high[-spec], rack-outage[-blacklist\|-replan]} |
 //!
 //! `fig5-locality` sweeps the network-topology axis because that is the
 //! figure the three-tier locality split (node/rack/remote %) belongs to:
@@ -29,7 +29,7 @@ use crate::scheduler::SchedulerKind;
 use crate::workloads::trace::Arrival;
 
 use super::agg::GroupStats;
-use super::grid::{JobMix, ScenarioGrid, Workload};
+use super::grid::{FailureSpec, JobMix, ScenarioGrid, Workload};
 
 /// The per-cell metric a preset's comparison table is about.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -124,7 +124,7 @@ pub fn preset(name: &str) -> Option<(ScenarioGrid, Preset)> {
         topologies: vec![Topology::Flat],
         arrivals: vec![Arrival::STEADY],
         scales: vec![100.0],
-        failures: vec![FailureModel::off()],
+        failures: vec![FailureSpec::off()],
         workloads: vec![Workload::Generated],
         stream_metrics: false,
         seed_replicates: 5,
@@ -198,18 +198,25 @@ pub fn preset(name: &str) -> Option<(ScenarioGrid, Preset)> {
         "fig7-failures" => {
             let mut g = base(name);
             g.failures = vec![
-                FailureModel::off(),
-                FailureModel::crash_low(),
-                FailureModel::crash_low().with_speculation(),
-                FailureModel::crash_high(),
-                FailureModel::crash_high().with_speculation(),
+                FailureSpec::off(),
+                FailureSpec::Preset(FailureModel::crash_low()),
+                FailureSpec::Preset(FailureModel::crash_low().with_speculation()),
+                FailureSpec::Preset(FailureModel::crash_high()),
+                FailureSpec::Preset(FailureModel::crash_high().with_speculation()),
+                FailureSpec::Preset(FailureModel::rack_outage()),
+                FailureSpec::Preset(FailureModel::rack_outage().with_blacklist()),
+                FailureSpec::Preset(FailureModel::rack_outage().with_replan()),
             ];
+            // Rack-correlated outages need racks to correlate over.
+            g.topologies = vec![Topology::Racks(4)];
             Some((
                 g,
                 Preset {
                     name: "fig7-failures",
-                    describes: "deadline-miss rate vs PM failure rate, with \
-                                and without speculative execution (see \
+                    describes: "deadline-miss rate vs PM failure rate: lone \
+                                crashes with/without speculation, plus \
+                                rack-correlated outages with/without \
+                                blacklisting and deadline re-planning (see \
                                 docs/FAILURE_MODEL.md)",
                     metric: HeadlineMetric::MissRatePct,
                     baseline: SchedulerKind::Fair,
@@ -434,19 +441,31 @@ mod tests {
     #[test]
     fn fig7_sweeps_the_failure_axis() {
         let (grid, p) = preset("fig7-failures").unwrap();
-        assert_eq!(grid.failures.len(), 5);
-        assert!(grid.failures.contains(&FailureModel::off()));
+        assert_eq!(grid.failures.len(), 8);
+        assert!(grid.failures.contains(&FailureSpec::off()));
         assert!(grid
             .failures
             .iter()
-            .any(|f| f.crashes() && f.speculation));
+            .any(|f| f.model().crashes() && f.model().speculation));
+        // The reactive-policy cells: rack outages with blacklisting and
+        // with deadline re-planning.
+        assert!(grid
+            .failures
+            .iter()
+            .any(|f| f.model().rack_correlated && f.model().blacklist));
+        assert!(grid
+            .failures
+            .iter()
+            .any(|f| f.model().rack_correlated && f.model().replan));
+        // Rack-correlated cells need a racked topology to correlate over.
+        assert_eq!(grid.topologies, vec![Topology::Racks(4)]);
         assert_eq!(p.metric, HeadlineMetric::MissRatePct);
-        // 2 schedulers x 1 mix x 5 failure models x 5 seeds.
-        assert_eq!(grid.len(), 50);
+        // 2 schedulers x 1 mix x 8 failure specs x 5 seeds.
+        assert_eq!(grid.len(), 80);
         // The other presets stay failure-free (byte-identical runs).
         for name in ["fig4-throughput", "fig5-locality", "fig6-deadline-miss"] {
             let (g, _) = preset(name).unwrap();
-            assert_eq!(g.failures, vec![FailureModel::off()]);
+            assert_eq!(g.failures, vec![FailureSpec::off()]);
         }
     }
 

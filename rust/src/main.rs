@@ -15,6 +15,10 @@
 //!   --workload <gen|trace:FILE> (replay a trace file, streamed — see
 //!   docs/TRACE_FORMAT.md) --stream (constant-memory metrics)
 //!   --trace-out FILE (write the workload as a replayable trace file)
+//!   --failures <PRESET|trace:FILE> (inject PM crashes from a named model
+//!   or a failure-trace file; docs/FAILURE_MODEL.md)
+//!   --failure-trace-out FILE (write the run's crash/recover timeline as
+//!   a replayable failure-trace file)
 //! Snapshot flags (simulate; see docs/EVENT_LOG.md):
 //!   --snapshot-every N --snapshot-out FILE (write a resumable snapshot
 //!   every N events) --snapshot-exit (stop after the first snapshot)
@@ -26,7 +30,8 @@
 //!   --seeds N --mix M --profile <uniform|split-2x|long-tail>[,..]
 //!   --topology <flat|racks-N|fat-tree-N>[,..] --arrival
 //!   <steady|burst[-xRATE]>[,..] --failures
-//!   <off|stragglers[-spec]|crash-low[-spec]|crash-high[-spec]>[,..]
+//!   <off|stragglers[-spec]|crash-low[-spec]|crash-high[-spec]|
+//!   rack-outage[-blacklist|-replan]|trace:FILE>[,..]
 //!   --workload <gen|trace:FILE>[,..] --stream
 //!   --fresh (ignore the journal)
 //!   --out DIR (artifact directory, default results/)
@@ -105,12 +110,41 @@ fn report_line(r: &Report) {
 }
 
 fn cmd_simulate(args: &Args) {
-    use vcsched::harness::Workload;
-    use vcsched::workloads::trace::{write_trace_file, TraceSource};
+    use vcsched::config::FailureModel;
+    use vcsched::harness::{FailureSpec, Workload};
+    use vcsched::workloads::trace::{
+        failure_trace, read_failure_trace_file, write_failure_trace_file, write_trace_file,
+        TraceSource,
+    };
     let mut cfg = cfg_from(args);
     if args.flag("stream") {
         cfg.stream_metrics = true;
-        cfg.validate().expect("invalid config");
+    }
+    if let Some(label) = args.get("failures") {
+        let spec = FailureSpec::from_label(label).unwrap_or_else(|| {
+            panic!(
+                "unknown failures {label:?} (expected one of {:?} or trace:FILE)",
+                FailureModel::NAMES
+            )
+        });
+        cfg.failures = spec.model();
+        cfg.failure_trace = spec.trace_file().map(str::to_string);
+    }
+    cfg.validate().expect("invalid config");
+    if let Some(path) = args.get("failure-trace-out") {
+        // Persist the run's crash/recover timeline as a replayable
+        // failure-trace file. Replaying the written file (--failures
+        // trace:FILE) reproduces the run byte-identically, and re-writing
+        // from the replay reproduces the file byte-identically
+        // (docs/FAILURE_MODEL.md).
+        let pm_racks: Vec<u32> = (0..cfg.pms).map(|p| cfg.pm_rack(p)).collect();
+        let events = match &cfg.failure_trace {
+            Some(src) => read_failure_trace_file(src, &pm_racks)
+                .unwrap_or_else(|e| panic!("--failures trace:{src}: {e}")),
+            None => failure_trace(&cfg.failures, cfg.seed, &pm_racks),
+        };
+        write_failure_trace_file(std::path::Path::new(path), &events)
+            .unwrap_or_else(|e| panic!("--failure-trace-out {path}: {e}"));
     }
     let kind = sched_from(args, SchedulerKind::DeadlineVc);
     let n = args.get_usize("jobs", 25);
@@ -380,7 +414,8 @@ fn cmd_sweep(args: &Args) {
     use vcsched::config::{FailureModel, PmProfile};
     use vcsched::harness::{
         aggregate, aggregates_csv, compare_cells, comparison_json, figure_preset,
-        run_sweep_resumable, sweep_json, JobMix, Journal, ScenarioGrid, Workload, PRESET_NAMES,
+        run_sweep_resumable, sweep_json, FailureSpec, JobMix, Journal, ScenarioGrid, Workload,
+        PRESET_NAMES,
     };
     use vcsched::workloads::trace::Arrival;
 
@@ -457,9 +492,9 @@ fn cmd_sweep(args: &Args) {
             .collect();
     }
     if let Some(names) = args.get("failures") {
-        grid.failures = FailureModel::parse_list(names).unwrap_or_else(|| {
+        grid.failures = FailureSpec::parse_list(names).unwrap_or_else(|| {
             panic!(
-                "unknown failure model in {names:?} (expected one of {:?})",
+                "unknown failure spec in {names:?} (expected one of {:?} or trace:FILE)",
                 FailureModel::NAMES
             )
         });
@@ -750,6 +785,9 @@ fn print_help() {
          \x20      --workload <gen|trace:FILE> --stream --trace-out FILE\n\
          \x20      (simulate: replay a trace file / constant-memory metrics /\n\
          \x20      write the workload as a replayable trace)\n\
+         \x20      --failures <PRESET|trace:FILE> --failure-trace-out FILE\n\
+         \x20      (simulate: inject PM crashes / write the crash timeline\n\
+         \x20      as a replayable failure trace — see docs/FAILURE_MODEL.md)\n\
          \x20      --snapshot-every N --snapshot-out FILE --snapshot-exit\n\
          \x20      --resume-from FILE --replay-to N\n\
          \x20      (simulate: resumable snapshots + time-travel replay —\n\
@@ -762,7 +800,8 @@ fn print_help() {
          \x20      --profile <uniform|split-2x|long-tail>[,..]\n\
          \x20      --topology <flat|racks-N|fat-tree-N>[,..]\n\
          \x20      --arrival <steady|burst[-xRATE]>[,..]\n\
-         \x20      --failures <off|stragglers[-spec]|crash-low[-spec]|crash-high[-spec]>[,..]\n\
+         \x20      --failures <off|stragglers[-spec]|crash-low[-spec]|\n\
+         \x20      crash-high[-spec]|rack-outage[-blacklist|-replan]|trace:FILE>[,..]\n\
          \x20      --workload <gen|trace:FILE>[,..] --stream\n\
          \x20      --fresh --out DIR"
     );

@@ -106,10 +106,13 @@ pub struct JobState {
     /// event matches, and behavior is identical to the pre-epoch code.
     map_attempt: Vec<u32>,
     reduce_attempt: Vec<u32>,
-    /// Live speculative (backup) copies — maps only, at most one per
-    /// task, only while the primary is Running.
+    /// Live speculative (backup) map copies — at most one per task, only
+    /// while the primary is Running.
     specs: Vec<Option<SpecAttempt>>,
-    /// Count of live spec copies (cheap queries + invariants).
+    /// Live speculative reduce copies (same one-per-task rule).
+    reduce_specs: Vec<Option<SpecAttempt>>,
+    /// Count of live spec copies, map and reduce together (cheap queries
+    /// + invariants).
     spec_live: u32,
 
     /// Tiered locality accounting (finished map tasks only): node-local,
@@ -188,6 +191,7 @@ impl JobState {
             map_attempt: vec![0; n_maps],
             reduce_attempt: vec![0; n_reduces],
             specs: vec![None; n_maps],
+            reduce_specs: vec![None; n_reduces],
             spec_live: 0,
             local_cursors: vec![Cell::new(0); locality.len()],
             rack_cursors: vec![Cell::new(0); rack_locality.len()],
@@ -740,6 +744,93 @@ impl JobState {
         spec
     }
 
+    /// The live speculative copy of reduce task `t`, if any.
+    pub fn reduce_spec_of(&self, t: TaskId) -> Option<SpecAttempt> {
+        self.reduce_specs[t.0 as usize]
+    }
+
+    /// Launch a speculative (backup) copy of a *running* reduce. Returns
+    /// the spec's attempt epoch. Mirrors [`Self::begin_spec_map`]: task
+    /// counters don't move, the spec only occupies an extra reduce slot.
+    pub fn begin_spec_reduce(&mut self, t: TaskId, node: NodeId, now: SimTime) -> u32 {
+        debug_assert!(
+            self.reduces[t.0 as usize].is_running(),
+            "spec on non-running reduce {t:?}"
+        );
+        debug_assert!(
+            self.reduce_specs[t.0 as usize].is_none(),
+            "double spec on reduce {t:?}"
+        );
+        self.reduce_attempt[t.0 as usize] += 1;
+        let attempt = self.reduce_attempt[t.0 as usize];
+        self.reduce_specs[t.0 as usize] = Some(SpecAttempt {
+            attempt,
+            node,
+            started: now,
+            tier: LocalityTier::Remote,
+        });
+        self.spec_live += 1;
+        attempt
+    }
+
+    /// Remove and return the live spec copy of reduce `t` (the primary won
+    /// the race, or the spec's node died). The caller frees the slot.
+    pub fn take_reduce_spec(&mut self, t: TaskId) -> Option<SpecAttempt> {
+        let s = self.reduce_specs[t.0 as usize].take();
+        if s.is_some() {
+            self.spec_live -= 1;
+        }
+        s
+    }
+
+    /// The spec copy of reduce `t` finished first: Running -> Finished
+    /// with the spec's node/start. Returns the losing primary's node so
+    /// the coordinator can free its slot.
+    pub fn mark_reduce_spec_finished(&mut self, t: TaskId, now: SimTime) -> NodeId {
+        let spec = self
+            .take_reduce_spec(t)
+            .expect("spec finish without live reduce spec");
+        let s = &mut self.reduces[t.0 as usize];
+        let TaskState::Running { node, .. } = *s else {
+            panic!("spec finish on non-running reduce {t:?}");
+        };
+        *s = TaskState::Finished {
+            node: spec.node,
+            started: spec.started,
+            finished: now,
+            tier: LocalityTier::Remote,
+        };
+        self.running_reduce_count -= 1;
+        self.finished_reduce_count += 1;
+        // The winner's epoch becomes the task's finished attempt.
+        self.reduce_attempt[t.0 as usize] = spec.attempt;
+        self.stats.record_reduce(crate::predictor::TaskSample {
+            duration_s: (now - spec.started).as_secs_f64(),
+        });
+        if self.finished_reduce_count == self.total_reduces() {
+            self.phase = JobPhase::Done;
+            self.finished_at = Some(now);
+        }
+        node
+    }
+
+    /// The primary reduce died but a spec copy survives: the spec becomes
+    /// the new primary (task stays Running, no re-execution needed).
+    pub fn promote_reduce_spec(&mut self, t: TaskId) -> SpecAttempt {
+        let spec = self
+            .take_reduce_spec(t)
+            .expect("promoting without live reduce spec");
+        let s = &mut self.reduces[t.0 as usize];
+        debug_assert!(s.is_running(), "promoting spec of non-running reduce {t:?}");
+        *s = TaskState::Running {
+            node: spec.node,
+            started: spec.started,
+            tier: LocalityTier::Remote,
+        };
+        self.reduce_attempt[t.0 as usize] = spec.attempt;
+        spec
+    }
+
     /// A crashed PM held the *output* of finished map `t` while the job is
     /// still in its map phase (Hadoop loses un-shuffled map output with
     /// the TaskTracker): Finished -> Pending for re-execution. Undoes the
@@ -762,9 +853,11 @@ impl JobState {
         self.rollback_cursors(t.0);
     }
 
-    /// A crashed PM killed running reduce `t`: Running -> Pending. This is
-    /// the one transition that rolls the reduce cursor back (reduces are
-    /// otherwise strictly monotone). Returns the dead attempt's node.
+    /// A crashed PM killed running reduce `t`: Running -> Pending. If a
+    /// live spec copy survives the caller should promote it instead
+    /// ([`Self::promote_reduce_spec`]). This is the one transition that
+    /// rolls the reduce cursor back (reduces are otherwise strictly
+    /// monotone). Returns the dead attempt's node.
     pub fn mark_reduce_killed(&mut self, t: TaskId) -> NodeId {
         let s = &mut self.reduces[t.0 as usize];
         let TaskState::Running { node, .. } = *s else {
@@ -799,7 +892,12 @@ impl JobState {
         if self.local_maps + self.rack_maps + self.remote_maps != self.finished_map_count {
             return Err(format!("job {:?}: locality accounting broken", self.id));
         }
-        let live = self.specs.iter().filter(|s| s.is_some()).count() as u32;
+        let live = self
+            .specs
+            .iter()
+            .chain(&self.reduce_specs)
+            .filter(|s| s.is_some())
+            .count() as u32;
         if live != self.spec_live {
             return Err(format!("job {:?}: spec_live {} != {live}", self.id, self.spec_live));
         }
@@ -807,6 +905,14 @@ impl JobState {
             if spec.is_some() && !self.maps[i].is_running() {
                 return Err(format!(
                     "job {:?}: spec copy of non-running map {i}",
+                    self.id
+                ));
+            }
+        }
+        for (i, spec) in self.reduce_specs.iter().enumerate() {
+            if spec.is_some() && !self.reduces[i].is_running() {
+                return Err(format!(
+                    "job {:?}: spec copy of non-running reduce {i}",
                     self.id
                 ));
             }
@@ -1037,6 +1143,32 @@ fn dec_spec_attempt(d: &mut Dec) -> Result<SpecAttempt, String> {
     })
 }
 
+fn enc_spec_list(e: &mut Enc, v: &[Option<SpecAttempt>]) {
+    e.usize(v.len());
+    for s in v {
+        match s {
+            None => e.bool(false),
+            Some(sp) => {
+                e.bool(true);
+                enc_spec_attempt(e, sp);
+            }
+        }
+    }
+}
+
+fn dec_spec_list(d: &mut Dec) -> Result<Vec<Option<SpecAttempt>>, String> {
+    let n = d.len(1)?;
+    (0..n)
+        .map(|_| {
+            Ok(if d.bool()? {
+                Some(dec_spec_attempt(d)?)
+            } else {
+                None
+            })
+        })
+        .collect()
+}
+
 impl JobState {
     /// Serialize the full job state, field for field, in declaration order.
     pub(crate) fn encode(&self, e: &mut Enc) {
@@ -1089,16 +1221,8 @@ impl JobState {
         e.u32(self.finished_reduce_count);
         enc_u32_list(e, &self.map_attempt);
         enc_u32_list(e, &self.reduce_attempt);
-        e.usize(self.specs.len());
-        for s in &self.specs {
-            match s {
-                None => e.bool(false),
-                Some(sp) => {
-                    e.bool(true);
-                    enc_spec_attempt(e, sp);
-                }
-            }
-        }
+        enc_spec_list(e, &self.specs);
+        enc_spec_list(e, &self.reduce_specs);
         e.u32(self.spec_live);
         e.u32(self.local_maps);
         e.u32(self.rack_maps);
@@ -1168,16 +1292,8 @@ impl JobState {
         let finished_reduce_count = d.u32()?;
         let map_attempt = dec_u32_list(d)?;
         let reduce_attempt = dec_u32_list(d)?;
-        let n_specs = d.len(1)?;
-        let specs: Vec<Option<SpecAttempt>> = (0..n_specs)
-            .map(|_| {
-                Ok(if d.bool()? {
-                    Some(dec_spec_attempt(d)?)
-                } else {
-                    None
-                })
-            })
-            .collect::<Result<_, String>>()?;
+        let specs = dec_spec_list(d)?;
+        let reduce_specs = dec_spec_list(d)?;
         let spec_live = d.u32()?;
         let local_maps = d.u32()?;
         let rack_maps = d.u32()?;
@@ -1221,6 +1337,7 @@ impl JobState {
             map_attempt,
             reduce_attempt,
             specs,
+            reduce_specs,
             spec_live,
             local_maps,
             rack_maps,

@@ -86,14 +86,15 @@ pub enum TaskState {
     },
 }
 
-/// A live speculative (backup) copy of a running map task — LATE-style
-/// speculation, at most one per task. The primary and the spec copy race;
-/// the coordinator keeps whichever `MapDone` arrives first and kills the
-/// other (first-finisher wins, kill-the-loser).
+/// A live speculative (backup) copy of a running map or reduce task —
+/// LATE-style speculation, at most one per task. The primary and the spec
+/// copy race; the coordinator keeps whichever completion (`MapDone` /
+/// `ReduceDone`) arrives first and kills the other (first-finisher wins,
+/// kill-the-loser).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SpecAttempt {
     /// Attempt id (shares the per-task attempt counter with primaries, so
-    /// stale `MapDone` events from killed attempts are droppable).
+    /// stale completion events from killed attempts are droppable).
     pub attempt: u32,
     pub node: NodeId,
     pub started: SimTime,

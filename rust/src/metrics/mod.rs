@@ -50,8 +50,10 @@ impl JobRecord {
 }
 
 /// Failure-injection and speculation counters for one run. All zero with
-/// the failure model off; the report emits them regardless so the JSON/
-/// CSV schema is identical across configurations.
+/// the failure model off; the report emits the original seven regardless
+/// so the JSON/CSV schema is identical across configurations (the
+/// reduce-speculation trio is emitted only when nonzero — see
+/// [`FailureStats::any_reduce_spec`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FailureStats {
     /// Fail-stop PM crashes delivered from the failure trace.
@@ -70,6 +72,24 @@ pub struct FailureStats {
     pub blocks_relocated: u64,
     /// Blocks that lost their last replica (restored from source).
     pub blocks_lost: u64,
+    /// Speculative (backup) reduce copies launched.
+    pub speculative_reduce_launches: u64,
+    /// Reduce races the backup copy won.
+    pub speculative_reduce_wins: u64,
+    /// Reduce attempts killed by speculation resolution or crashes of the
+    /// backup.
+    pub speculative_reduce_kills: u64,
+}
+
+impl FailureStats {
+    /// Any reduce-side speculation activity? The JSON report only emits
+    /// the `speculative_reduce_*` keys when this is true, keeping the
+    /// schema (and the golden byte pins) of non-speculating runs stable.
+    pub fn any_reduce_spec(&self) -> bool {
+        self.speculative_reduce_launches != 0
+            || self.speculative_reduce_wins != 0
+            || self.speculative_reduce_kills != 0
+    }
 }
 
 /// Constant-memory aggregate over completed jobs: the streaming-mode
@@ -382,6 +402,23 @@ impl RunMetrics {
             .set("reexecuted_tasks", self.failures.reexecuted_tasks)
             .set("blocks_relocated", self.failures.blocks_relocated)
             .set("blocks_lost", self.failures.blocks_lost);
+        if self.failures.any_reduce_spec() {
+            // Conditional: absent on runs without reduce speculation so
+            // pre-existing artifacts stay byte-identical.
+            out = out
+                .set(
+                    "speculative_reduce_launches",
+                    self.failures.speculative_reduce_launches,
+                )
+                .set(
+                    "speculative_reduce_wins",
+                    self.failures.speculative_reduce_wins,
+                )
+                .set(
+                    "speculative_reduce_kills",
+                    self.failures.speculative_reduce_kills,
+                );
+        }
         if let Some(s) = &self.stream {
             // Streaming runs carry no per-job array; emit the aggregate
             // figures the array would otherwise let a reader derive.

@@ -48,7 +48,7 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::cluster::NodeId;
+use crate::cluster::{NodeId, PmId};
 use crate::config::SimConfig;
 use crate::mapreduce::{JobId, JobState, TaskId};
 use crate::predictor::{abc, JobDemand, Predictor, SlotDemand};
@@ -58,7 +58,7 @@ use crate::util::codec::{Dec, Enc};
 use super::edf::EdfKeys;
 use super::{
     next_unclaimed_any, next_unclaimed_local, next_unclaimed_rack, speculative_fill, Action,
-    ClaimLedger, EdfScheduler, OrderIndex, SchedView, Scheduler, SchedulerKind,
+    BlacklistPolicy, ClaimLedger, EdfScheduler, OrderIndex, SchedView, Scheduler, SchedulerKind,
 };
 
 /// Tunable policy knobs — every mechanism of the proposed scheduler can
@@ -176,6 +176,20 @@ pub struct DeadlineVcScheduler {
     /// Clamp predictor answers to the cluster's physical slot totals.
     max_map_slots: u32,
     max_reduce_slots: u32,
+    // ---- failure-reactive re-planning (Eq. 10 against live supply) ----
+    /// Re-plan on PM failure/recovery (`FailureModel::replan`): the Eq. 10
+    /// clamp tracks the *live* slot supply instead of the configured
+    /// total, so a shrunken cluster re-solves every deadline against what
+    /// it can actually deliver (and relaxes again on recovery).
+    replan: bool,
+    /// Slots contributed by one PM (homogeneous VM placement).
+    pm_map_slots: u32,
+    pm_reduce_slots: u32,
+    /// Current live supply; equal to `max_*` while every PM is up (and
+    /// always, when `replan` is off).
+    live_map_slots: u32,
+    live_reduce_slots: u32,
+    blacklist: BlacklistPolicy,
     // ---- persistent scheduling order ----
     index: OrderIndex<DvcKey>,
     covered: usize,
@@ -304,6 +318,12 @@ impl DeadlineVcScheduler {
             awaiting_since: Vec::new(),
             max_map_slots: cfg.total_map_slots(),
             max_reduce_slots: cfg.total_reduce_slots(),
+            replan: cfg.failures.replan,
+            pm_map_slots: cfg.vms_per_pm as u32 * cfg.base_vcpus,
+            pm_reduce_slots: cfg.vms_per_pm as u32 * cfg.reduce_slots,
+            live_map_slots: cfg.total_map_slots(),
+            live_reduce_slots: cfg.total_reduce_slots(),
+            blacklist: BlacklistPolicy::new(cfg),
             tuning,
             index: OrderIndex::new(),
             covered: 0,
@@ -329,6 +349,30 @@ impl DeadlineVcScheduler {
         self.bound_heap.clear();
         self.bound_of.clear();
         self.awaiting_since.clear();
+        self.live_map_slots = self.max_map_slots;
+        self.live_reduce_slots = self.max_reduce_slots;
+        self.blacklist.reset();
+    }
+
+    /// The Eq. 10 clamp ceiling: live supply under re-planning, the
+    /// configured totals otherwise (live == max while replan is off). The
+    /// `.max(1)` keeps a fully dark cluster from clamping a demand to 0.
+    fn caps(&self) -> (u32, u32) {
+        (self.live_map_slots.max(1), self.live_reduce_slots.max(1))
+    }
+
+    /// Supply changed (re-plan): every active deadlined job's clamped
+    /// Eq. 10 answer may have moved, so mark them all dirty — the next
+    /// alloc event recomputes exactly what the naive full sweep would.
+    fn mark_all_dirty(&mut self, view: &SchedView) {
+        self.sync(view);
+        for job in view.active_jobs() {
+            let j = view.slot(job.id);
+            if !self.dirty_flag[j] {
+                self.dirty_flag[j] = true;
+                self.dirty_list.push(job.id);
+            }
+        }
     }
 
     /// Absorb jobs that arrived since the last callback; drop all state
@@ -431,20 +475,18 @@ impl DeadlineVcScheduler {
         // is a pure per-entry map, so a smaller batch yields bit-equal
         // per-job answers.
         let solved = predictor.solve_slots(&self.alloc_demands);
+        let (cap_m, cap_r) = self.caps();
         for i in 0..self.alloc_ids.len() {
             let jid = self.alloc_ids[i];
             let s = solved[i];
             let d = self.alloc_demands[i];
             let job = &view.jobs[view.slot(jid)];
-            // An infeasible deadline gets the full cluster: minimize
-            // lateness (the paper leaves this case unspecified).
+            // An infeasible deadline gets the full (live) cluster:
+            // minimize lateness (the paper leaves this case unspecified).
             let (m, r) = if s.infeasible {
-                (self.max_map_slots, self.max_reduce_slots)
+                (cap_m, cap_r)
             } else {
-                (
-                    s.map_slots.min(self.max_map_slots).max(1),
-                    s.reduce_slots.min(self.max_reduce_slots).max(1),
-                )
+                (s.map_slots.min(cap_m).max(1), s.reduce_slots.min(cap_r).max(1))
             };
             if (m, r) != (job.alloc_map_slots, job.alloc_reduce_slots) {
                 out.push(Action::SetAlloc {
@@ -454,7 +496,7 @@ impl DeadlineVcScheduler {
                 });
             }
             self.bound_of[view.slot(jid)] =
-                match next_change_bound(job, &d, s, m, r, self.max_map_slots, self.max_reduce_slots)
+                match next_change_bound(job, &d, s, m, r, cap_m, cap_r)
                 {
                     Some(t) => {
                         // Liveness: never re-arm in the past.
@@ -528,8 +570,32 @@ impl Scheduler for DeadlineVcScheduler {
         SchedulerKind::DeadlineVc
     }
 
-    fn on_sim_start(&mut self, _view: &SchedView) {
+    fn on_sim_start(&mut self, view: &SchedView) {
         self.reset();
+        // Re-derive the cfg-dependent policy switches from the view's
+        // config (scheduler reuse across Worlds), like the greedy
+        // schedulers do for their blacklists.
+        self.replan = view.cfg.failures.replan;
+        self.blacklist = BlacklistPolicy::new(view.cfg);
+    }
+
+    fn on_pm_failure(&mut self, view: &SchedView, pm: PmId) {
+        self.blacklist.on_pm_failure(pm, view.now);
+        if self.replan {
+            self.live_map_slots = self.live_map_slots.saturating_sub(self.pm_map_slots);
+            self.live_reduce_slots = self.live_reduce_slots.saturating_sub(self.pm_reduce_slots);
+            self.mark_all_dirty(view);
+        }
+    }
+
+    fn on_pm_recovery(&mut self, view: &SchedView, _pm: PmId) {
+        if self.replan {
+            self.live_map_slots =
+                (self.live_map_slots + self.pm_map_slots).min(self.max_map_slots);
+            self.live_reduce_slots =
+                (self.live_reduce_slots + self.pm_reduce_slots).min(self.max_reduce_slots);
+            self.mark_all_dirty(view);
+        }
     }
 
     fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
@@ -588,6 +654,12 @@ impl Scheduler for DeadlineVcScheduler {
     ) {
         self.sync(view);
         self.expire_awaiting(view, out);
+        // Failure-reactive gate: a blacklisted node still expires its
+        // await ledger (pure bookkeeping) but launches nothing new — no
+        // maps, reduces, awaits, releases or spec copies.
+        if self.blacklist.blocks_node(view, node) {
+            return;
+        }
         // One claim generation spans the whole heartbeat (both passes and
         // the reduce phase); the slot overlay likewise.
         self.claims.begin(view.jobs_base, view.jobs);
@@ -608,6 +680,7 @@ impl Scheduler for DeadlineVcScheduler {
             ref index,
             ref mut overlay,
             ref mut awaiting_since,
+            ref blacklist,
             ..
         } = *self;
         let mut released_this_hb = false;
@@ -683,6 +756,19 @@ impl Scheduler for DeadlineVcScheduler {
                         }
                         break;
                     };
+                    // Never route new work onto a blacklisted PM: skip the
+                    // data-local routing and the delayed await and fall
+                    // through to a remote launch on the (non-blacklisted)
+                    // heartbeating node instead.
+                    if blacklist.blocks_node(view, target) {
+                        if free_at(view, overlay, node) > 0 {
+                            claims.claim_map(job.id, t);
+                            out.push(Action::LaunchMap { job: job.id, task: t, node });
+                            overlay.take(node.idx());
+                            continue;
+                        }
+                        break;
+                    }
                     // Target has spare capacity: immediate *data-local*
                     // launch on it (Alg. 1 line 13).
                     if free_at(view, overlay, target) > 0 && routed < max_routed {
@@ -778,8 +864,9 @@ impl Scheduler for DeadlineVcScheduler {
 
     /// Snapshots carry everything the view cannot reproduce: the await
     /// ledger (entry order drives the deterministic CancelAwait emission),
-    /// the delta-Eq.10 dirty set, the next-change bounds, and the tuning
-    /// knobs. Derived state is rebuilt on restore — the EDF-cold-first
+    /// the delta-Eq.10 dirty set, the next-change bounds, the tuning
+    /// knobs, the live slot supply (re-planning) and the blacklist crash
+    /// ledger. Derived state is rebuilt on restore — the EDF-cold-first
     /// index from the restored jobs, the bound heap from the live
     /// `bound_of` entries (dead heap entries are ignored by the pop-side
     /// liveness check, so heap-vs-rebuilt ordering differences are
@@ -817,6 +904,10 @@ impl Scheduler for DeadlineVcScheduler {
                 None => e.bool(false),
             }
         }
+        e.bool(self.replan);
+        e.u32(self.live_map_slots);
+        e.u32(self.live_reduce_slots);
+        self.blacklist.encode(e);
     }
 
     fn restore_state(&mut self, d: &mut Dec, view: &SchedView) -> Result<(), String> {
@@ -874,7 +965,10 @@ impl Scheduler for DeadlineVcScheduler {
                 self.index.set_key(job.id, active_key(job));
             }
         }
-        Ok(())
+        self.replan = d.bool()?;
+        self.live_map_slots = d.u32()?;
+        self.live_reduce_slots = d.u32()?;
+        self.blacklist.decode(d)
     }
 }
 

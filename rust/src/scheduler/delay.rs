@@ -23,15 +23,15 @@
 //! the increment/reset walk exactly while touching only jobs that
 //! launched or changed.
 
-use crate::cluster::{LocalityTier, NodeId};
+use crate::cluster::{LocalityTier, NodeId, PmId};
 use crate::mapreduce::{JobId, JobState};
 use crate::predictor::Predictor;
 use crate::util::codec::{Dec, Enc};
 
 use super::fair::{fair_key, FairKey};
 use super::{
-    greedy_fill, speculative_fill, Action, ClaimLedger, OrderIndex, SchedView, Scheduler,
-    SchedulerKind,
+    greedy_fill, speculative_fill, Action, BlacklistPolicy, ClaimLedger, OrderIndex, SchedView,
+    Scheduler, SchedulerKind,
 };
 
 #[derive(Debug)]
@@ -51,6 +51,7 @@ pub struct DelayScheduler {
     /// `jobs_base` so retired jobs cost no counter memory.
     win_base: usize,
     claims: ClaimLedger,
+    blacklist: BlacklistPolicy,
 }
 
 impl DelayScheduler {
@@ -64,6 +65,7 @@ impl DelayScheduler {
             covered: 0,
             win_base: 0,
             claims: ClaimLedger::new(),
+            blacklist: BlacklistPolicy::default(),
         }
     }
 
@@ -142,13 +144,14 @@ impl Scheduler for DelayScheduler {
         SchedulerKind::Delay
     }
 
-    fn on_sim_start(&mut self, _view: &SchedView) {
+    fn on_sim_start(&mut self, view: &SchedView) {
         self.index.clear();
         self.base.clear();
         self.had_pending.clear();
         self.covered = 0;
         self.win_base = 0;
         self.hb = 0;
+        self.blacklist = BlacklistPolicy::new(view.cfg);
     }
 
     fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
@@ -189,6 +192,13 @@ impl Scheduler for DelayScheduler {
         out: &mut Vec<Action>,
     ) {
         self.sync(view);
+        // Blacklisted heartbeats launch nothing and do not advance the
+        // virtual clock: the node offered no slot anyone could use, so
+        // waiting jobs burn no patience on it (mirrored in the naive
+        // reference, which early-returns before its skip walk).
+        if self.blacklist.blocks_node(view, node) {
+            return;
+        }
         let racked = view.cluster.topology().is_racked();
         let patience = self.patience;
         let start = out.len();
@@ -233,6 +243,10 @@ impl Scheduler for DelayScheduler {
         speculative_fill(view, node, out);
     }
 
+    fn on_pm_failure(&mut self, view: &SchedView, pm: PmId) {
+        self.blacklist.on_pm_failure(pm, view.now);
+    }
+
     /// Delay's skip counters are history, not a function of the view: a
     /// freshly built scheduler would grant every waiting job a full new
     /// patience window. Snapshots therefore carry the virtual clock and
@@ -250,6 +264,7 @@ impl Scheduler for DelayScheduler {
         for &p in &self.had_pending {
             e.bool(p);
         }
+        self.blacklist.encode(e);
     }
 
     fn restore_state(&mut self, d: &mut Dec, view: &SchedView) -> Result<(), String> {
@@ -273,7 +288,7 @@ impl Scheduler for DelayScheduler {
                 self.index.set_key(job.id, active_key(job));
             }
         }
-        Ok(())
+        self.blacklist.decode(d)
     }
 }
 

@@ -9,14 +9,15 @@
 //! touched again to drop finished jobs — the per-heartbeat sort (and its
 //! pooled key cache) is gone entirely.
 
-use crate::cluster::{LocalityTier, NodeId};
+use crate::cluster::{LocalityTier, NodeId, PmId};
 use crate::mapreduce::{JobId, JobState};
 use crate::predictor::Predictor;
 use crate::sim::SimTime;
+use crate::util::codec::{Dec, Enc};
 
 use super::{
-    greedy_fill, speculative_fill, Action, ClaimLedger, OrderIndex, SchedView, Scheduler,
-    SchedulerKind,
+    greedy_fill, speculative_fill, Action, BlacklistPolicy, ClaimLedger, OrderIndex, SchedView,
+    Scheduler, SchedulerKind,
 };
 
 /// Pooled `(deadline, submitted, id, index)` sort keys for
@@ -43,6 +44,7 @@ pub struct EdfScheduler {
     index: OrderIndex<EdfKey>,
     covered: usize,
     claims: ClaimLedger,
+    blacklist: BlacklistPolicy,
 }
 
 impl EdfScheduler {
@@ -102,9 +104,10 @@ impl Scheduler for EdfScheduler {
         SchedulerKind::Edf
     }
 
-    fn on_sim_start(&mut self, _view: &SchedView) {
+    fn on_sim_start(&mut self, view: &SchedView) {
         self.index.clear();
         self.covered = 0;
+        self.blacklist = BlacklistPolicy::new(view.cfg);
     }
 
     fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
@@ -145,6 +148,9 @@ impl Scheduler for EdfScheduler {
         out: &mut Vec<Action>,
     ) {
         self.sync(view);
+        if self.blacklist.blocks_node(view, node) {
+            return;
+        }
         let Self {
             ref index,
             ref mut claims,
@@ -159,6 +165,18 @@ impl Scheduler for EdfScheduler {
             out,
         );
         speculative_fill(view, node, out);
+    }
+
+    fn on_pm_failure(&mut self, view: &SchedView, pm: PmId) {
+        self.blacklist.on_pm_failure(pm, view.now);
+    }
+
+    fn encode_state(&self, enc: &mut Enc) {
+        self.blacklist.encode(enc);
+    }
+
+    fn restore_state(&mut self, dec: &mut Dec, _view: &SchedView) -> Result<(), String> {
+        self.blacklist.decode(dec)
     }
 }
 

@@ -14,14 +14,15 @@
 //! strictly monotone and the deficit sort's order is exactly the key
 //! order `(running, submitted, id)` — no per-heartbeat sort needed.
 
-use crate::cluster::{LocalityTier, NodeId};
+use crate::cluster::{LocalityTier, NodeId, PmId};
 use crate::mapreduce::{JobId, JobState};
 use crate::predictor::Predictor;
 use crate::sim::SimTime;
+use crate::util::codec::{Dec, Enc};
 
 use super::{
-    greedy_fill, speculative_fill, Action, ClaimLedger, OrderIndex, SchedView, Scheduler,
-    SchedulerKind,
+    greedy_fill, speculative_fill, Action, BlacklistPolicy, ClaimLedger, OrderIndex, SchedView,
+    Scheduler, SchedulerKind,
 };
 
 /// The persistent fair-ranking key; ties beyond it break on `JobId`
@@ -40,6 +41,7 @@ pub struct FairScheduler {
     index: OrderIndex<FairKey>,
     covered: usize,
     claims: ClaimLedger,
+    blacklist: BlacklistPolicy,
 }
 
 impl FairScheduler {
@@ -110,9 +112,10 @@ impl Scheduler for FairScheduler {
         SchedulerKind::Fair
     }
 
-    fn on_sim_start(&mut self, _view: &SchedView) {
+    fn on_sim_start(&mut self, view: &SchedView) {
         self.index.clear();
         self.covered = 0;
+        self.blacklist = BlacklistPolicy::new(view.cfg);
     }
 
     fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
@@ -154,6 +157,9 @@ impl Scheduler for FairScheduler {
         out: &mut Vec<Action>,
     ) {
         self.sync(view);
+        if self.blacklist.blocks_node(view, node) {
+            return;
+        }
         let Self {
             ref index,
             ref mut claims,
@@ -168,6 +174,18 @@ impl Scheduler for FairScheduler {
             out,
         );
         speculative_fill(view, node, out);
+    }
+
+    fn on_pm_failure(&mut self, view: &SchedView, pm: PmId) {
+        self.blacklist.on_pm_failure(pm, view.now);
+    }
+
+    fn encode_state(&self, enc: &mut Enc) {
+        self.blacklist.encode(enc);
+    }
+
+    fn restore_state(&mut self, dec: &mut Dec, _view: &SchedView) -> Result<(), String> {
+        self.blacklist.decode(dec)
     }
 }
 

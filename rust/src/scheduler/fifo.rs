@@ -2,13 +2,14 @@
 //! heartbeat the oldest unfinished job fills the node's free slots
 //! (node-local map preferred, else any).
 
-use crate::cluster::{LocalityTier, NodeId};
+use crate::cluster::{LocalityTier, NodeId, PmId};
 use crate::mapreduce::JobId;
 use crate::predictor::Predictor;
+use crate::util::codec::{Dec, Enc};
 
 use super::{
-    greedy_fill, speculative_fill, Action, ClaimLedger, OrderIndex, SchedView, Scheduler,
-    SchedulerKind,
+    greedy_fill, speculative_fill, Action, BlacklistPolicy, ClaimLedger, OrderIndex, SchedView,
+    Scheduler, SchedulerKind,
 };
 
 /// Submission order == JobId order, so the persistent index needs no key
@@ -20,6 +21,7 @@ pub struct FifoScheduler {
     /// Jobs already inserted into the index (high-water mark).
     covered: usize,
     claims: ClaimLedger,
+    blacklist: BlacklistPolicy,
 }
 
 impl FifoScheduler {
@@ -51,9 +53,10 @@ impl Scheduler for FifoScheduler {
         SchedulerKind::Fifo
     }
 
-    fn on_sim_start(&mut self, _view: &SchedView) {
+    fn on_sim_start(&mut self, view: &SchedView) {
         self.index.clear();
         self.covered = 0;
+        self.blacklist = BlacklistPolicy::new(view.cfg);
     }
 
     fn on_job_updated(&mut self, view: &SchedView, job: JobId) {
@@ -86,6 +89,9 @@ impl Scheduler for FifoScheduler {
         out: &mut Vec<Action>,
     ) {
         self.sync(view);
+        if self.blacklist.blocks_node(view, node) {
+            return;
+        }
         let Self {
             ref index,
             ref mut claims,
@@ -100,6 +106,18 @@ impl Scheduler for FifoScheduler {
             out,
         );
         speculative_fill(view, node, out);
+    }
+
+    fn on_pm_failure(&mut self, view: &SchedView, pm: PmId) {
+        self.blacklist.on_pm_failure(pm, view.now);
+    }
+
+    fn encode_state(&self, enc: &mut Enc) {
+        self.blacklist.encode(enc);
+    }
+
+    fn restore_state(&mut self, dec: &mut Dec, _view: &SchedView) -> Result<(), String> {
+        self.blacklist.decode(dec)
     }
 }
 

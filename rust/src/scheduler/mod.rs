@@ -45,7 +45,7 @@ pub use edf::EdfScheduler;
 pub use fair::FairScheduler;
 pub use fifo::FifoScheduler;
 
-use crate::cluster::{Cluster, LocalityTier, NodeId};
+use crate::cluster::{Cluster, LocalityTier, NodeId, PmId};
 use crate::config::SimConfig;
 use crate::mapreduce::{JobId, JobState, TaskId};
 use crate::predictor::Predictor;
@@ -216,6 +216,14 @@ pub enum Action {
         task: TaskId,
         node: NodeId,
     },
+    /// Launch a speculative (backup) copy of *running* reduce `task` on
+    /// `node` — the reduce-side mirror of [`Action::LaunchSpeculativeMap`]
+    /// (same LATE trigger rules, same first-finisher-wins resolution).
+    LaunchSpeculativeReduce {
+        job: JobId,
+        task: TaskId,
+        node: NodeId,
+    },
 }
 
 /// The scheduler interface (see module docs for the protocol). Callbacks
@@ -279,6 +287,17 @@ pub trait Scheduler {
         _out: &mut Vec<Action>,
     ) {
     }
+
+    /// PM `pm` just crashed (notification only — `PmFailure` reduces to
+    /// `Decision::None`, so no actions may be emitted here; the next
+    /// heartbeat acts on the updated policy state). Drives the
+    /// [`BlacklistPolicy`] and deadline_vc's live-slot re-planning.
+    /// Replay-safe: replays apply logged heartbeat actions directly, so
+    /// scheduler-side state needs no reconstruction there.
+    fn on_pm_failure(&mut self, _view: &SchedView, _pm: PmId) {}
+
+    /// PM `pm` came back (same notification-only contract).
+    fn on_pm_recovery(&mut self, _view: &SchedView, _pm: PmId) {}
 
     /// Serialize policy state into a snapshot. The default writes nothing:
     /// fifo/fair/edf keep only an [`OrderIndex`] whose keys are pure
@@ -586,6 +605,102 @@ impl<K: Ord + Copy> OrderIndex<K> {
     }
 }
 
+/// A PM is blacklisted once it crashes this many times inside the window.
+pub(crate) const BLACKLIST_K: usize = 2;
+/// Trailing window (seconds) over which crashes count toward the
+/// blacklist; a blacklisted PM "proves itself" by simply staying up until
+/// enough of its crash history ages out.
+pub(crate) const BLACKLIST_WINDOW_S: f64 = 3600.0;
+
+/// Failure-reactive launch gate shared by every scheduler (indexed and
+/// naive reference alike): a PM that crashed [`BLACKLIST_K`]+ times
+/// within the trailing [`BLACKLIST_WINDOW_S`] is *blacklisted* —
+/// heartbeats from its VMs launch nothing new (no maps, reduces, spec
+/// copies, awaits or releases) and deadline_vc stops routing work to its
+/// nodes, until the crash history ages out. Enabled per-config
+/// (`FailureModel::blacklist`); disabled it is a guaranteed no-op, so
+/// failure-free runs stay byte-identical.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct BlacklistPolicy {
+    enabled: bool,
+    /// Crash instants per PM, pruned to the window on insert (queries are
+    /// `&self` and re-filter, so pruning is memoization only).
+    crashes: Vec<Vec<SimTime>>,
+}
+
+impl BlacklistPolicy {
+    pub(crate) fn new(cfg: &SimConfig) -> Self {
+        Self {
+            enabled: cfg.failures.blacklist,
+            crashes: Vec::new(),
+        }
+    }
+
+    fn window() -> SimTime {
+        SimTime::from_secs_f64(BLACKLIST_WINDOW_S)
+    }
+
+    /// Record a crash of `pm` at `now` (no-op when disabled).
+    pub(crate) fn on_pm_failure(&mut self, pm: PmId, now: SimTime) {
+        if !self.enabled {
+            return;
+        }
+        if self.crashes.len() <= pm.idx() {
+            self.crashes.resize_with(pm.idx() + 1, Vec::new);
+        }
+        let list = &mut self.crashes[pm.idx()];
+        list.retain(|&t| now.saturating_sub(t) <= Self::window());
+        list.push(now);
+    }
+
+    /// Is `pm` currently blacklisted?
+    pub(crate) fn blocks_pm(&self, pm: PmId, now: SimTime) -> bool {
+        self.enabled
+            && self.crashes.get(pm.idx()).is_some_and(|list| {
+                list.iter()
+                    .filter(|&&t| now.saturating_sub(t) <= Self::window())
+                    .count()
+                    >= BLACKLIST_K
+            })
+    }
+
+    /// Is `node`'s PM currently blacklisted?
+    pub(crate) fn blocks_node(&self, view: &SchedView, node: NodeId) -> bool {
+        self.enabled && self.blocks_pm(view.cluster.pm_of(node), view.now)
+    }
+
+    /// Drop state carried over from a previous run (scheduler reuse
+    /// across Worlds; called from `on_sim_start`).
+    pub(crate) fn reset(&mut self) {
+        self.crashes.clear();
+    }
+
+    /// Snapshot codec — the crash ledger is policy state the view cannot
+    /// reproduce, so every scheduler's `encode_state` carries it.
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        e.bool(self.enabled);
+        e.usize(self.crashes.len());
+        for list in &self.crashes {
+            e.usize(list.len());
+            for &t in list {
+                e.u64(t.0);
+            }
+        }
+    }
+
+    pub(crate) fn decode(&mut self, d: &mut Dec) -> Result<(), String> {
+        self.enabled = d.bool()?;
+        let n = d.len(8)?;
+        self.crashes = (0..n)
+            .map(|_| {
+                let k = d.len(8)?;
+                (0..k).map(|_| Ok(SimTime(d.u64()?))).collect()
+            })
+            .collect::<Result<_, String>>()?;
+        Ok(())
+    }
+}
+
 /// Shared helper: launch as many tasks as `node` has free slots, scanning
 /// `job_order` (indices into `view.jobs`). Used by the FIFO/Fair/Delay/EDF
 /// baselines — pick the best-tier pending map the job's cap admits
@@ -668,15 +783,20 @@ pub(crate) fn greedy_fill(
 /// scheduler's heartbeat (indexed and reference alike — it uses only plain
 /// scans, no cursors or ledgers, so both paths stay action-identical).
 ///
-/// Policy (see `docs/FAILURE_MODEL.md`):
+/// Policy (see `docs/FAILURE_MODEL.md`), applied independently to the map
+/// and reduce sides (each with its own one-per-heartbeat budget):
 /// * only when the failure model enables speculation;
-/// * at most **one** speculative launch per node-heartbeat;
-/// * a job is eligible only when it has no pending or awaiting maps (spare
-///   capacity would otherwise serve real work first) and at least
+/// * at most **one** speculative map and **one** speculative reduce
+///   launch per node-heartbeat;
+/// * a job is map-eligible only when it has no pending or awaiting maps
+///   (spare capacity would otherwise serve real work first) and at least
 ///   `spec_min_finished` finished maps (the duration estimate is warm);
-/// * a running map is a straggler when its elapsed time exceeds
-///   `spec_slowdown ×` the job's observed mean map duration, it has no
-///   live spec copy yet, and its primary runs on a *different* node;
+///   reduce-eligible symmetrically: map phase done, no pending reduces,
+///   `spec_min_finished`+ finished reduces;
+/// * a running task is a straggler when its elapsed time exceeds
+///   `spec_slowdown ×` the job's observed mean duration for its phase, it
+///   has no live spec copy yet, and its primary runs on a *different*
+///   node;
 /// * among stragglers, pick the longest-running (ties: lowest job, then
 ///   lowest task id — strict `>` keeps the pick deterministic).
 ///
@@ -686,6 +806,8 @@ pub(crate) fn speculative_fill(view: &SchedView, node: NodeId, out: &mut Vec<Act
     if !fm.speculation {
         return;
     }
+    let vm = view.cluster.vm(node);
+    // ---- map side ----
     // Slots already promised to this node earlier in this heartbeat.
     let promised = out
         .iter()
@@ -695,41 +817,82 @@ pub(crate) fn speculative_fill(view: &SchedView, node: NodeId, out: &mut Vec<Act
                 | Action::LaunchSpeculativeMap { node: n, .. } if *n == node)
         })
         .count() as u32;
-    let vm = view.cluster.vm(node);
-    if vm.free_map_slots() <= promised {
-        return;
-    }
-    let mut best: Option<(f64, JobId, TaskId)> = None;
-    for job in view.active_jobs() {
-        if job.pending_maps() > 0
-            || job.awaiting_maps() > 0
-            || job.running_maps() == 0
-            || job.completed_maps() < fm.spec_min_finished
-        {
-            continue;
-        }
-        let threshold = fm.spec_slowdown * job.stats.t_map();
-        for ti in 0..job.total_maps() {
-            let t = TaskId(ti);
-            let crate::mapreduce::TaskState::Running { node: pnode, started, .. } =
-                *job.map_state(t)
-            else {
-                continue;
-            };
-            if pnode == node || job.spec_of(t).is_some() {
+    if vm.free_map_slots() > promised {
+        let mut best: Option<(f64, JobId, TaskId)> = None;
+        for job in view.active_jobs() {
+            if job.pending_maps() > 0
+                || job.awaiting_maps() > 0
+                || job.running_maps() == 0
+                || job.completed_maps() < fm.spec_min_finished
+            {
                 continue;
             }
-            let elapsed = (view.now - started).as_secs_f64();
-            if elapsed <= threshold {
-                continue;
-            }
-            if best.map_or(true, |(e, _, _)| elapsed > e) {
-                best = Some((elapsed, job.id, t));
+            let threshold = fm.spec_slowdown * job.stats.t_map();
+            for ti in 0..job.total_maps() {
+                let t = TaskId(ti);
+                let crate::mapreduce::TaskState::Running { node: pnode, started, .. } =
+                    *job.map_state(t)
+                else {
+                    continue;
+                };
+                if pnode == node || job.spec_of(t).is_some() {
+                    continue;
+                }
+                let elapsed = (view.now - started).as_secs_f64();
+                if elapsed <= threshold {
+                    continue;
+                }
+                if best.map_or(true, |(e, _, _)| elapsed > e) {
+                    best = Some((elapsed, job.id, t));
+                }
             }
         }
+        if let Some((_, job, task)) = best {
+            out.push(Action::LaunchSpeculativeMap { job, task, node });
+        }
     }
-    if let Some((_, job, task)) = best {
-        out.push(Action::LaunchSpeculativeMap { job, task, node });
+    // ---- reduce side (same trigger rules, its own budget) ----
+    let promised_r = out
+        .iter()
+        .filter(|a| {
+            matches!(a,
+                Action::LaunchReduce { node: n, .. }
+                | Action::LaunchSpeculativeReduce { node: n, .. } if *n == node)
+        })
+        .count() as u32;
+    if vm.free_reduce_slots() > promised_r {
+        let mut best: Option<(f64, JobId, TaskId)> = None;
+        for job in view.active_jobs() {
+            if !job.map_finished()
+                || job.pending_reduces() > 0
+                || job.running_reduces() == 0
+                || job.completed_reduces() < fm.spec_min_finished
+            {
+                continue;
+            }
+            let threshold = fm.spec_slowdown * job.stats.t_reduce();
+            for ti in 0..job.total_reduces() {
+                let t = TaskId(ti);
+                let crate::mapreduce::TaskState::Running { node: pnode, started, .. } =
+                    *job.reduce_state(t)
+                else {
+                    continue;
+                };
+                if pnode == node || job.reduce_spec_of(t).is_some() {
+                    continue;
+                }
+                let elapsed = (view.now - started).as_secs_f64();
+                if elapsed <= threshold {
+                    continue;
+                }
+                if best.map_or(true, |(e, _, _)| elapsed > e) {
+                    best = Some((elapsed, job.id, t));
+                }
+            }
+        }
+        if let Some((_, job, task)) = best {
+            out.push(Action::LaunchSpeculativeReduce { job, task, node });
+        }
     }
 }
 
@@ -795,5 +958,50 @@ mod tests {
             assert_eq!(s.kind(), k);
             assert_eq!(s.name(), k.name());
         }
+    }
+
+    #[test]
+    fn blacklist_trips_at_k_crashes_and_ages_out() {
+        let mut cfg = SimConfig::small();
+        cfg.failures.blacklist = true;
+        let mut b = BlacklistPolicy::new(&cfg);
+        let pm = PmId(3);
+        let t = SimTime::from_secs_f64;
+        b.on_pm_failure(pm, t(100.0));
+        assert!(!b.blocks_pm(pm, t(100.0)), "one crash is not a pattern");
+        b.on_pm_failure(pm, t(500.0));
+        assert!(b.blocks_pm(pm, t(500.0)), "K=2 crashes in window trip it");
+        // Only the crashed PM is blocked.
+        assert!(!b.blocks_pm(PmId(0), t(500.0)));
+        // The first crash ages out of the 3600s window; one in-window
+        // crash remains, so the PM has proven itself back in.
+        assert!(b.blocks_pm(pm, t(3700.0)));
+        assert!(!b.blocks_pm(pm, t(3701.0)));
+    }
+
+    #[test]
+    fn blacklist_disabled_is_inert_and_state_roundtrips() {
+        let cfg = SimConfig::small();
+        assert!(!cfg.failures.blacklist);
+        let mut off = BlacklistPolicy::new(&cfg);
+        let t = SimTime::from_secs_f64;
+        off.on_pm_failure(PmId(1), t(10.0));
+        off.on_pm_failure(PmId(1), t(20.0));
+        assert!(!off.blocks_pm(PmId(1), t(20.0)), "disabled never blocks");
+
+        let mut cfg_on = cfg.clone();
+        cfg_on.failures.blacklist = true;
+        let mut on = BlacklistPolicy::new(&cfg_on);
+        on.on_pm_failure(PmId(2), t(10.0));
+        on.on_pm_failure(PmId(2), t(20.0));
+        let mut e = Enc::new();
+        on.encode(&mut e);
+        let bytes = e.into_bytes();
+        let mut back = BlacklistPolicy::default();
+        back.decode(&mut Dec::new(&bytes)).unwrap();
+        assert!(back.blocks_pm(PmId(2), t(20.0)), "codec carries the ledger");
+        assert!(!back.blocks_pm(PmId(0), t(20.0)));
+        on.reset();
+        assert!(!on.blocks_pm(PmId(2), t(20.0)), "reset drops crash history");
     }
 }

@@ -32,7 +32,7 @@
 
 use std::collections::{HashMap, HashSet};
 
-use crate::cluster::{LocalityTier, NodeId};
+use crate::cluster::{LocalityTier, NodeId, PmId};
 use crate::config::SimConfig;
 use crate::mapreduce::{JobId, JobState, TaskId};
 use crate::predictor::Predictor;
@@ -40,8 +40,8 @@ use crate::sim::SimTime;
 
 use super::deadline_vc::{choose_target_with, job_demand};
 use super::{
-    speculative_fill, Action, DeadlineVcScheduler, DvcTuning, EdfScheduler, FairScheduler,
-    SchedView, Scheduler, SchedulerKind,
+    speculative_fill, Action, BlacklistPolicy, DeadlineVcScheduler, DvcTuning, EdfScheduler,
+    FairScheduler, SchedView, Scheduler, SchedulerKind,
 };
 
 /// Build the naive reference implementation of `kind` (same policy, seed
@@ -49,12 +49,14 @@ use super::{
 /// runs.
 pub fn build_reference(kind: SchedulerKind, cfg: &SimConfig) -> Box<dyn Scheduler> {
     match kind {
-        SchedulerKind::Fifo | SchedulerKind::Fair | SchedulerKind::Edf => {
-            Box::new(NaiveGreedy { kind })
-        }
+        SchedulerKind::Fifo | SchedulerKind::Fair | SchedulerKind::Edf => Box::new(NaiveGreedy {
+            kind,
+            blacklist: BlacklistPolicy::new(cfg),
+        }),
         SchedulerKind::Delay => Box::new(NaiveDelay {
             patience: cfg.delay_heartbeats,
             skipped: HashMap::new(),
+            blacklist: BlacklistPolicy::new(cfg),
         }),
         SchedulerKind::DeadlineVc => Box::new(NaiveDeadlineVc::new(cfg)),
     }
@@ -152,11 +154,20 @@ fn greedy_fill_scan(
 /// are not what the index optimizes), naive greedy fill.
 struct NaiveGreedy {
     kind: SchedulerKind,
+    blacklist: BlacklistPolicy,
 }
 
 impl Scheduler for NaiveGreedy {
     fn kind(&self) -> SchedulerKind {
         self.kind
+    }
+
+    fn on_sim_start(&mut self, view: &SchedView) {
+        self.blacklist = BlacklistPolicy::new(view.cfg);
+    }
+
+    fn on_pm_failure(&mut self, view: &SchedView, pm: PmId) {
+        self.blacklist.on_pm_failure(pm, view.now);
     }
 
     fn on_heartbeat(
@@ -166,6 +177,9 @@ impl Scheduler for NaiveGreedy {
         _predictor: &mut dyn Predictor,
         out: &mut Vec<Action>,
     ) {
+        if self.blacklist.blocks_node(view, node) {
+            return;
+        }
         let order: Vec<usize> = match self.kind {
             SchedulerKind::Fifo => (0..view.jobs.len())
                 .filter(|&i| !view.jobs[i].is_done())
@@ -188,11 +202,21 @@ impl Scheduler for NaiveGreedy {
 struct NaiveDelay {
     patience: u32,
     skipped: HashMap<JobId, u32>,
+    blacklist: BlacklistPolicy,
 }
 
 impl Scheduler for NaiveDelay {
     fn kind(&self) -> SchedulerKind {
         SchedulerKind::Delay
+    }
+
+    fn on_sim_start(&mut self, view: &SchedView) {
+        self.skipped.clear();
+        self.blacklist = BlacklistPolicy::new(view.cfg);
+    }
+
+    fn on_pm_failure(&mut self, view: &SchedView, pm: PmId) {
+        self.blacklist.on_pm_failure(pm, view.now);
     }
 
     fn on_heartbeat(
@@ -202,6 +226,13 @@ impl Scheduler for NaiveDelay {
         _predictor: &mut dyn Predictor,
         out: &mut Vec<Action>,
     ) {
+        // Blacklisted heartbeats launch nothing and skip the patience
+        // walk — waiting jobs burn no patience on a node that offered no
+        // usable slot (mirrors the indexed scheduler's frozen virtual
+        // clock).
+        if self.blacklist.blocks_node(view, node) {
+            return;
+        }
         let order = FairScheduler::fair_order(view);
         let skipped = &self.skipped;
         let patience = self.patience;
@@ -239,6 +270,14 @@ struct NaiveDeadlineVc {
     awaiting_since: Vec<(JobId, u32, SimTime)>,
     max_map_slots: u32,
     max_reduce_slots: u32,
+    // Failure-reactive state, mirroring `DeadlineVcScheduler` (the naive
+    // full sweep needs no dirty set — it recomputes every job anyway).
+    replan: bool,
+    pm_map_slots: u32,
+    pm_reduce_slots: u32,
+    live_map_slots: u32,
+    live_reduce_slots: u32,
+    blacklist: BlacklistPolicy,
 }
 
 impl NaiveDeadlineVc {
@@ -249,8 +288,18 @@ impl NaiveDeadlineVc {
             awaiting_since: Vec::new(),
             max_map_slots: cfg.total_map_slots(),
             max_reduce_slots: cfg.total_reduce_slots(),
+            replan: cfg.failures.replan,
+            pm_map_slots: cfg.vms_per_pm as u32 * cfg.base_vcpus,
+            pm_reduce_slots: cfg.vms_per_pm as u32 * cfg.reduce_slots,
+            live_map_slots: cfg.total_map_slots(),
+            live_reduce_slots: cfg.total_reduce_slots(),
+            blacklist: BlacklistPolicy::new(cfg),
             tuning,
         }
+    }
+
+    fn caps(&self) -> (u32, u32) {
+        (self.live_map_slots.max(1), self.live_reduce_slots.max(1))
     }
 
     fn recompute_allocs(&self, view: &SchedView, predictor: &mut dyn Predictor) -> Vec<Action> {
@@ -266,16 +315,14 @@ impl NaiveDeadlineVc {
             return Vec::new();
         }
         let solved = predictor.solve_slots(&demands);
+        let (cap_m, cap_r) = self.caps();
         ids.iter()
             .zip(solved)
             .map(|(&job, s)| {
                 let (m, r) = if s.infeasible {
-                    (self.max_map_slots, self.max_reduce_slots)
+                    (cap_m, cap_r)
                 } else {
-                    (
-                        s.map_slots.min(self.max_map_slots).max(1),
-                        s.reduce_slots.min(self.max_reduce_slots).max(1),
-                    )
+                    (s.map_slots.min(cap_m).max(1), s.reduce_slots.min(cap_r).max(1))
                 };
                 Action::SetAlloc {
                     job,
@@ -316,6 +363,31 @@ impl Scheduler for NaiveDeadlineVc {
         SchedulerKind::DeadlineVc
     }
 
+    fn on_sim_start(&mut self, view: &SchedView) {
+        self.awaiting_since.clear();
+        self.live_map_slots = self.max_map_slots;
+        self.live_reduce_slots = self.max_reduce_slots;
+        self.replan = view.cfg.failures.replan;
+        self.blacklist = BlacklistPolicy::new(view.cfg);
+    }
+
+    fn on_pm_failure(&mut self, view: &SchedView, pm: PmId) {
+        self.blacklist.on_pm_failure(pm, view.now);
+        if self.replan {
+            self.live_map_slots = self.live_map_slots.saturating_sub(self.pm_map_slots);
+            self.live_reduce_slots = self.live_reduce_slots.saturating_sub(self.pm_reduce_slots);
+        }
+    }
+
+    fn on_pm_recovery(&mut self, _view: &SchedView, _pm: PmId) {
+        if self.replan {
+            self.live_map_slots =
+                (self.live_map_slots + self.pm_map_slots).min(self.max_map_slots);
+            self.live_reduce_slots =
+                (self.live_reduce_slots + self.pm_reduce_slots).min(self.max_reduce_slots);
+        }
+    }
+
     fn on_job_added(
         &mut self,
         view: &SchedView,
@@ -344,6 +416,12 @@ impl Scheduler for NaiveDeadlineVc {
         out: &mut Vec<Action>,
     ) {
         let mut actions = self.expire_awaiting(view);
+        // Failure-reactive gate, after the await-ledger bookkeeping (the
+        // indexed scheduler does the same).
+        if self.blacklist.blocks_node(view, node) {
+            out.extend(actions);
+            return;
+        }
         let order = DeadlineVcScheduler::job_order(view);
 
         let mut free: Vec<u32> = (0..view.cluster.num_nodes())
@@ -404,6 +482,18 @@ impl Scheduler for NaiveDeadlineVc {
                         }
                         break;
                     };
+                    if self.blacklist.blocks_node(view, target) {
+                        // Blacklisted target PM: no routing, no await —
+                        // remote launch on the heartbeating node instead.
+                        if free[node.idx()] > 0 {
+                            claimed.insert((job.id, t));
+                            *extra_sched.entry(job.id).or_insert(0) += 1;
+                            actions.push(Action::LaunchMap { job: job.id, task: t, node });
+                            free[node.idx()] -= 1;
+                            continue;
+                        }
+                        break;
+                    }
                     if free[target.idx()] > 0 && routed < max_routed {
                         claimed.insert((job.id, t));
                         *extra_sched.entry(job.id).or_insert(0) += 1;

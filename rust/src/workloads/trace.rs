@@ -579,33 +579,61 @@ pub struct FailureEvent {
 pub const FAILURE_STREAM_TAG: u64 = 0xfa11_0c0d_e5ee_d001;
 
 /// Pre-generate the PM crash/recover timeline for one scenario.
+/// `pm_racks[pm]` is each PM's rack (see [`SimConfig::pm_rack`]); its
+/// length is the PM count.
 ///
-/// Each PM alternates exponential up-times (mean `fm.pm_mtbf_s`) and
-/// exponential down-times (mean `fm.pm_repair_s`), starting alive at t=0.
-/// Crashes are generated until `fm.trace_horizon_s`; every generated crash
-/// is always paired with its recovery even when the recovery lands past
-/// the horizon, so no PM stays dead forever. Events are sorted by
-/// `(time, pm)` — a total, reproducible order.
+/// Independent mode (the default): each PM alternates exponential
+/// up-times (mean `fm.pm_mtbf_s`) and exponential down-times (mean
+/// `fm.pm_repair_s`), starting alive at t=0. With `fm.rack_correlated`
+/// the same alternation is drawn once per *rack* (ascending rack id) and
+/// every member PM crashes/recovers together at the identical
+/// timestamps. Crashes are generated until `fm.trace_horizon_s`; every
+/// generated crash is always paired with its recovery even when the
+/// recovery lands past the horizon, so no PM stays dead forever. Events
+/// are sorted by `(time, pm)` — a total, reproducible order.
 ///
 /// The RNG stream is derived from `seed` via a dedicated tag, NOT from the
 /// simulation's main RNG: with crashes off this function returns an empty
 /// vec without consuming any randomness, preserving byte-identity.
-pub fn failure_trace(fm: &FailureModel, seed: u64, pms: usize) -> Vec<FailureEvent> {
+pub fn failure_trace(fm: &FailureModel, seed: u64, pm_racks: &[u32]) -> Vec<FailureEvent> {
     if !fm.crashes() {
         return Vec::new();
     }
     let mut rng = Rng::new(mix64(seed ^ FAILURE_STREAM_TAG));
     let mut out = Vec::new();
-    for pm in 0..pms {
-        let mut t = 0.0f64;
-        loop {
-            t += rng.exp(fm.pm_mtbf_s);
-            if t >= fm.trace_horizon_s {
-                break;
+    if fm.rack_correlated {
+        let mut racks: Vec<u32> = pm_racks.to_vec();
+        racks.sort_unstable();
+        racks.dedup();
+        for rack in racks {
+            let mut t = 0.0f64;
+            loop {
+                t += rng.exp(fm.pm_mtbf_s);
+                if t >= fm.trace_horizon_s {
+                    break;
+                }
+                let up = t + rng.exp(fm.pm_repair_s).max(1.0);
+                for (pm, &r) in pm_racks.iter().enumerate() {
+                    if r == rack {
+                        out.push(FailureEvent { at_s: t, pm, crash: true });
+                        out.push(FailureEvent { at_s: up, pm, crash: false });
+                    }
+                }
+                t = up;
             }
-            out.push(FailureEvent { at_s: t, pm, crash: true });
-            t += rng.exp(fm.pm_repair_s).max(1.0);
-            out.push(FailureEvent { at_s: t, pm, crash: false });
+        }
+    } else {
+        for pm in 0..pm_racks.len() {
+            let mut t = 0.0f64;
+            loop {
+                t += rng.exp(fm.pm_mtbf_s);
+                if t >= fm.trace_horizon_s {
+                    break;
+                }
+                out.push(FailureEvent { at_s: t, pm, crash: true });
+                t += rng.exp(fm.pm_repair_s).max(1.0);
+                out.push(FailureEvent { at_s: t, pm, crash: false });
+            }
         }
     }
     out.sort_by(|a, b| {
@@ -616,6 +644,157 @@ pub fn failure_trace(fm: &FailureModel, seed: u64, pms: usize) -> Vec<FailureEve
             .then(a.crash.cmp(&b.crash))
     });
     out
+}
+
+/// Target of one failure-trace line: a single PM or a whole rack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureTarget {
+    Pm(usize),
+    Rack(u32),
+}
+
+/// One parsed failure-trace line: a crash/repair interval.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureSpan {
+    /// Crash time, seconds.
+    pub fail_s: f64,
+    /// Recovery time, seconds (strictly after `fail_s`).
+    pub recover_s: f64,
+    pub target: FailureTarget,
+}
+
+/// Parse one failure-trace line: `fail_s,recover_s,pm:<id>` or
+/// `fail_s,recover_s,rack:<id>` (`docs/FAILURE_MODEL.md`). Extra trailing
+/// fields are ignored for forward compatibility.
+pub fn parse_failure_trace_line(s: &str) -> Result<FailureSpan, String> {
+    let mut fields = s.split(',').map(str::trim);
+    let mut next = |name: &str| fields.next().ok_or_else(|| format!("missing {name}"));
+    let fail_s: f64 = next("fail_s")?
+        .parse()
+        .map_err(|_| "bad fail_s".to_string())?;
+    let recover_s: f64 = next("recover_s")?
+        .parse()
+        .map_err(|_| "bad recover_s".to_string())?;
+    let target_s = next("target")?;
+    let target = match target_s.split_once(':') {
+        Some(("pm", id)) => {
+            FailureTarget::Pm(id.parse().map_err(|_| "bad pm id".to_string())?)
+        }
+        Some(("rack", id)) => {
+            FailureTarget::Rack(id.parse().map_err(|_| "bad rack id".to_string())?)
+        }
+        _ => return Err(format!("target must be pm:<id> or rack:<id>, got {target_s:?}")),
+    };
+    if !(fail_s.is_finite() && fail_s >= 0.0) {
+        return Err("fail_s must be finite and >= 0".into());
+    }
+    if !(recover_s.is_finite() && recover_s > fail_s) {
+        return Err("recover_s must be finite and > fail_s".into());
+    }
+    Ok(FailureSpan { fail_s, recover_s, target })
+}
+
+/// Render one failure-trace line — the exact inverse of
+/// [`parse_failure_trace_line`] (`{}`-formatted floats round-trip
+/// bitwise, as for job-trace lines).
+pub fn render_failure_trace_line(span: &FailureSpan) -> String {
+    let target = match span.target {
+        FailureTarget::Pm(id) => format!("pm:{id}"),
+        FailureTarget::Rack(id) => format!("rack:{id}"),
+    };
+    format!("{},{},{}", span.fail_s, span.recover_s, target)
+}
+
+/// Write a crash/recover timeline as a failure-trace file: one
+/// `fail_s,recover_s,pm:<id>` line per crash/recovery pair, sorted by
+/// `(fail_s, pm)`. The inverse [`read_failure_trace_file`] reproduces the
+/// event list byte-identically (the canonical-sort round-trip is pinned
+/// by a unit test and the CI `cmp` smoke).
+pub fn write_failure_trace_file(
+    path: &std::path::Path,
+    events: &[FailureEvent],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    // Pair each PM's alternating crash/recover sequence back into spans.
+    let mut open: std::collections::HashMap<usize, f64> = std::collections::HashMap::new();
+    let mut spans: Vec<(f64, usize, f64)> = Vec::with_capacity(events.len() / 2);
+    for e in events {
+        if e.crash {
+            let prev = open.insert(e.pm, e.at_s);
+            assert!(prev.is_none(), "pm {} crashed twice without recovering", e.pm);
+        } else {
+            let fail_s = open
+                .remove(&e.pm)
+                .unwrap_or_else(|| panic!("pm {} recovered without crashing", e.pm));
+            spans.push((fail_s, e.pm, e.at_s));
+        }
+    }
+    assert!(open.is_empty(), "unpaired crash events");
+    spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(out, "# vcsched failure trace: fail_s,recover_s,pm|rack:<id>")?;
+    for (fail_s, pm, recover_s) in spans {
+        let span = FailureSpan {
+            fail_s,
+            recover_s,
+            target: FailureTarget::Pm(pm),
+        };
+        writeln!(out, "{}", render_failure_trace_line(&span))?;
+    }
+    out.flush()
+}
+
+/// Read a failure-trace file back into the canonical crash/recover event
+/// list: `rack:<id>` lines expand to every member PM (per `pm_racks`),
+/// ids are range-checked, and the result is sorted exactly like
+/// [`failure_trace`] output.
+pub fn read_failure_trace_file(path: &str, pm_racks: &[u32]) -> Result<Vec<FailureEvent>, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("open failure trace {path}: {e}"))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let s = line.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let span = parse_failure_trace_line(s).map_err(|e| format!("line {}: {e}", i + 1))?;
+        let pms: Vec<usize> = match span.target {
+            FailureTarget::Pm(pm) => {
+                if pm >= pm_racks.len() {
+                    return Err(format!(
+                        "line {}: pm {pm} out of range (cluster has {})",
+                        i + 1,
+                        pm_racks.len()
+                    ));
+                }
+                vec![pm]
+            }
+            FailureTarget::Rack(rack) => {
+                let members: Vec<usize> = pm_racks
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &r)| r == rack)
+                    .map(|(pm, _)| pm)
+                    .collect();
+                if members.is_empty() {
+                    return Err(format!("line {}: rack {rack} has no PMs", i + 1));
+                }
+                members
+            }
+        };
+        for pm in pms {
+            out.push(FailureEvent { at_s: span.fail_s, pm, crash: true });
+            out.push(FailureEvent { at_s: span.recover_s, pm, crash: false });
+        }
+    }
+    out.sort_by(|a, b| {
+        a.at_s
+            .partial_cmp(&b.at_s)
+            .unwrap()
+            .then(a.pm.cmp(&b.pm))
+            .then(a.crash.cmp(&b.crash))
+    });
+    Ok(out)
 }
 
 /// Crude ideal-parallelism completion estimate used only to draw sane
@@ -783,21 +962,26 @@ mod tests {
         assert!(huge > 20, "only {huge} inter-burst gaps");
     }
 
+    /// Rack layout of a 20-PM cluster in test helpers below.
+    fn racks20(n_racks: u32) -> Vec<u32> {
+        (0..20u32).map(|p| p % n_racks).collect()
+    }
+
     #[test]
     fn failure_trace_off_is_empty_and_free() {
-        assert!(failure_trace(&FailureModel::off(), 42, 20).is_empty());
-        assert!(failure_trace(&FailureModel::stragglers(), 42, 20).is_empty());
+        assert!(failure_trace(&FailureModel::off(), 42, &racks20(1)).is_empty());
+        assert!(failure_trace(&FailureModel::stragglers(), 42, &racks20(1)).is_empty());
     }
 
     #[test]
     fn failure_trace_well_formed() {
         let fm = FailureModel::crash_high();
-        let tr = failure_trace(&fm, 7, 20);
+        let tr = failure_trace(&fm, 7, &racks20(1));
         assert!(!tr.is_empty());
         // Deterministic.
-        assert_eq!(tr, failure_trace(&fm, 7, 20));
+        assert_eq!(tr, failure_trace(&fm, 7, &racks20(1)));
         // Different seeds diverge.
-        assert_ne!(tr, failure_trace(&fm, 8, 20));
+        assert_ne!(tr, failure_trace(&fm, 8, &racks20(1)));
         // Sorted by time.
         assert!(tr.windows(2).all(|w| w[0].at_s <= w[1].at_s));
         // Per PM: strictly alternating crash/recover starting with a
@@ -816,6 +1000,97 @@ mod tests {
                 assert!(e.at_s < fm.trace_horizon_s);
             }
         }
+    }
+
+    #[test]
+    fn rack_outage_crashes_whole_racks_together() {
+        let racks = racks20(4);
+        let fm = FailureModel::rack_outage();
+        let tr = failure_trace(&fm, 11, &racks);
+        assert!(!tr.is_empty());
+        assert_eq!(tr, failure_trace(&fm, 11, &racks));
+        // Every event timestamp is shared by exactly the 5 PMs of one
+        // rack: group by (time, crash) and check rack membership.
+        use std::collections::HashMap;
+        let mut groups: HashMap<(u64, bool), Vec<usize>> = HashMap::new();
+        for e in &tr {
+            groups.entry((e.at_s.to_bits(), e.crash)).or_default().push(e.pm);
+        }
+        for ((_, _), pms) in groups {
+            assert_eq!(pms.len(), 5, "rack outage must cover the whole rack");
+            let rack = racks[pms[0]];
+            assert!(pms.iter().all(|&p| racks[p] == rack));
+        }
+        // Per-PM sequences still alternate crash/recover.
+        for pm in 0..20 {
+            let mine: Vec<_> = tr.iter().filter(|e| e.pm == pm).collect();
+            for (i, e) in mine.iter().enumerate() {
+                assert_eq!(e.crash, i % 2 == 0, "pm {pm} event {i} out of order");
+            }
+        }
+    }
+
+    #[test]
+    fn failure_trace_file_round_trips_byte_identically() {
+        for (fm, racks) in [
+            (FailureModel::rack_outage(), racks20(4)),
+            (FailureModel::crash_low(), racks20(1)),
+        ] {
+            let tr = failure_trace(&fm, 33, &racks);
+            assert!(!tr.is_empty());
+            let dir = std::env::temp_dir();
+            let path = dir.join(format!("vcsched_failure_trace_rt_{}.txt", fm.label()));
+            write_failure_trace_file(&path, &tr).expect("write failure trace");
+            let back =
+                read_failure_trace_file(path.to_str().unwrap(), &racks).expect("read back");
+            assert_eq!(tr.len(), back.len());
+            for (a, b) in tr.iter().zip(&back) {
+                assert_eq!(a.at_s.to_bits(), b.at_s.to_bits());
+                assert_eq!(a.pm, b.pm);
+                assert_eq!(a.crash, b.crash);
+            }
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn failure_trace_line_codec_and_rack_expansion() {
+        let span = parse_failure_trace_line("10.5,70,rack:2").unwrap();
+        assert_eq!(span.target, FailureTarget::Rack(2));
+        assert_eq!(render_failure_trace_line(&span), "10.5,70,rack:2");
+        let span = parse_failure_trace_line("0, 60, pm:7, extra").unwrap();
+        assert_eq!(span.target, FailureTarget::Pm(7));
+        for bad in [
+            "",
+            "10",
+            "10,70",
+            "x,70,pm:1",
+            "10,x,pm:1",
+            "10,70,node:1",
+            "10,70,pm:x",
+            "70,10,pm:1",  // recover before fail
+            "10,10,pm:1",  // zero-length outage
+            "-1,70,pm:1",
+        ] {
+            assert!(parse_failure_trace_line(bad).is_err(), "accepted {bad:?}");
+        }
+        // rack: expands to every member PM; out-of-range ids reject.
+        let dir = std::env::temp_dir();
+        let path = dir.join("vcsched_failure_trace_rack_unit.txt");
+        std::fs::write(&path, "# comment\n5,65,rack:1\n100,160,pm:0\n").unwrap();
+        let racks = vec![0u32, 1, 0, 1];
+        let evs = read_failure_trace_file(path.to_str().unwrap(), &racks).unwrap();
+        // rack 1 = PMs 1 and 3 -> 2 crash + 2 recover, plus pm 0's pair.
+        assert_eq!(evs.len(), 6);
+        assert_eq!(
+            evs.iter().filter(|e| e.crash).map(|e| e.pm).collect::<Vec<_>>(),
+            vec![1, 3, 0]
+        );
+        std::fs::write(&path, "5,65,pm:9\n").unwrap();
+        assert!(read_failure_trace_file(path.to_str().unwrap(), &racks).is_err());
+        std::fs::write(&path, "5,65,rack:7\n").unwrap();
+        assert!(read_failure_trace_file(path.to_str().unwrap(), &racks).is_err());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -15,9 +15,11 @@
 //! can't miss actions a wrapper forgot to forward.
 //!
 //! Matrix: every `SchedulerKind` × {flat, racks-4} × 3 seeds, plus a
-//! failure-injection sweep (`stragglers-spec`, `crash-low`) that drives
-//! the crash/recovery, straggler and speculation paths through the same
-//! bitwise comparison.
+//! failure-injection sweep (`stragglers-spec`, `crash-low`,
+//! `crash-high-spec`, rack outages with blacklisting and with deadline
+//! re-planning) that drives the crash/recovery, straggler,
+//! map-and-reduce speculation, blacklist and re-planning paths through
+//! the same bitwise comparison.
 //!
 //! One normalization is applied to both logs before comparing: no-op
 //! `SetAlloc`s (re-announcing a job's current allocation) are dropped.
@@ -158,23 +160,45 @@ fn indexed_path_matches_naive_reference_exactly() {
 /// Failure injection exercises paths the failure-free matrix never
 /// reaches — PM crashes rewinding running tasks to Pending (with the
 /// job-update notification that must reach a persistent index),
-/// straggler slowdowns, speculative launches and kills. The indexed
-/// schedulers must stay bitwise-identical to the naive reference through
-/// all of them. (`crash-low` also covers hotplug churn from repair
-/// events.)
+/// straggler slowdowns, speculative map *and reduce* launches and kills,
+/// blacklist filtering and deadline re-planning. The indexed schedulers
+/// must stay bitwise-identical to the naive reference through all of
+/// them. (`crash-low` also covers hotplug churn from repair events; the
+/// outage cells use an aggressive per-rack MTBF so whole-rack crashes —
+/// and with them the blacklist ledger and the shrunken live-slot supply —
+/// actually land inside a 10-job run.)
 #[test]
 fn indexed_path_matches_naive_under_failure_injection() {
+    let outage = FailureModel {
+        rack_correlated: true,
+        pm_mtbf_s: 300.0,
+        pm_repair_s: 60.0,
+        trace_horizon_s: 4.0 * 3600.0,
+        ..FailureModel::off()
+    };
     for kind in SchedulerKind::ALL {
-        for failures in ["stragglers-spec", "crash-low"] {
+        for (label, failures) in [
+            (
+                "stragglers-spec",
+                FailureModel::from_name("stragglers-spec").unwrap(),
+            ),
+            ("crash-low", FailureModel::crash_low()),
+            (
+                "crash-high-spec",
+                FailureModel::crash_high().with_speculation(),
+            ),
+            ("outage-blacklist", outage.with_blacklist()),
+            ("outage-replan", outage.with_replan()),
+        ] {
             for seed in [5u64, 77] {
                 let cfg = SimConfig {
                     topology: Topology::Racks(4),
                     seed,
-                    failures: FailureModel::from_name(failures).unwrap(),
+                    failures,
                     ..SimConfig::paper()
                 };
                 let trace = JobTrace::poisson(&cfg, 10, 4.0, 1.6..3.0, seed);
-                let label = format!("{} / {failures} / seed {seed}", kind.name());
+                let label = format!("{} / {label} / seed {seed}", kind.name());
                 assert_runs_identical(&label, &cfg, kind, &trace);
             }
         }

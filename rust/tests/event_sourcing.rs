@@ -1,7 +1,9 @@
 //! Event-sourcing property suite: the snapshot/resume and replay
 //! machinery (`World::snapshot` / `World::resume` / `World::replay_to`,
 //! docs/EVENT_LOG.md) must be **lossless**. Across random seeds ×
-//! schedulers × topologies × failure presets:
+//! schedulers × topologies × failure models (independent crashes,
+//! rack-correlated outages with blacklisting / re-planning, and
+//! trace-file replay):
 //!
 //! * snapshot at event k → resume → run to completion renders a report
 //!   **byte-identical** to the uninterrupted run's;
@@ -67,18 +69,38 @@ fn resumed_report(cfg: &SimConfig, trace: &JobTrace, bytes: &[u8]) -> String {
 /// through the codec.
 #[test]
 fn snapshot_resume_is_byte_identical_across_matrix() {
+    // Aggressive rack-correlated outages: crashes land well before the
+    // snapshot points, so the blacklist crash ledger and deadline_vc's
+    // shrunken live-slot supply genuinely travel through the codec.
+    let outage = FailureModel {
+        rack_correlated: true,
+        pm_mtbf_s: 300.0,
+        pm_repair_s: 60.0,
+        trace_horizon_s: 4.0 * 3600.0,
+        ..FailureModel::off()
+    };
     for kind in SchedulerKind::ALL {
-        for (topology, failures) in [
-            (Topology::Flat, "off"),
-            (Topology::Racks(4), "off"),
-            (Topology::Racks(4), "crash-low"),
-            (Topology::Flat, "stragglers-spec"),
+        for (topology, label, failures) in [
+            (Topology::Flat, "off", FailureModel::off()),
+            (Topology::Racks(4), "off", FailureModel::off()),
+            (Topology::Racks(4), "crash-low", FailureModel::crash_low()),
+            (
+                Topology::Flat,
+                "stragglers-spec",
+                FailureModel::from_name("stragglers-spec").unwrap(),
+            ),
+            (
+                Topology::Racks(4),
+                "outage-blacklist",
+                outage.with_blacklist(),
+            ),
+            (Topology::Racks(4), "outage-replan", outage.with_replan()),
         ] {
             for seed in [11u64, 99] {
                 let cfg = SimConfig {
                     topology,
                     seed,
-                    failures: FailureModel::from_name(failures).unwrap(),
+                    failures,
                     ..SimConfig::paper()
                 };
                 let trace = JobTrace::poisson(&cfg, 8, 4.0, 1.6..3.0, seed);
@@ -91,7 +113,7 @@ fn snapshot_resume_is_byte_identical_across_matrix() {
                     assert_eq!(
                         straight,
                         resumed,
-                        "{} / {} / {failures} / seed {seed}: resume from event {k} \
+                        "{} / {} / {label} / seed {seed}: resume from event {k} \
                          diverged from the straight run",
                         kind.name(),
                         topology.label()
@@ -100,6 +122,60 @@ fn snapshot_resume_is_byte_identical_across_matrix() {
             }
         }
     }
+}
+
+/// Snapshot/resume under a **failure trace file** (`cfg.failure_trace`):
+/// the replayed crash schedule is part of the config fingerprint's world,
+/// so resuming mid-outage must reproduce the straight run byte for byte.
+#[test]
+fn snapshot_resume_is_byte_identical_under_failure_trace_file() {
+    use vcsched::workloads::trace::{failure_trace, write_failure_trace_file};
+
+    let outage = FailureModel {
+        rack_correlated: true,
+        pm_mtbf_s: 300.0,
+        pm_repair_s: 60.0,
+        trace_horizon_s: 4.0 * 3600.0,
+        ..FailureModel::off()
+    };
+    let gen_cfg = SimConfig {
+        topology: Topology::Racks(4),
+        seed: 23,
+        failures: outage,
+        ..SimConfig::paper()
+    };
+    let pm_racks: Vec<u32> = (0..gen_cfg.pms).map(|p| gen_cfg.pm_rack(p)).collect();
+    let events = failure_trace(&gen_cfg.failures, gen_cfg.seed, &pm_racks);
+    assert!(!events.is_empty(), "outage generator produced no events");
+    let path = std::env::temp_dir().join(format!(
+        "vcsched-event-sourcing-trace-{}.trace",
+        std::process::id()
+    ));
+    write_failure_trace_file(&path, &events).expect("write failure trace");
+
+    let cfg = SimConfig {
+        failures: FailureModel::off(),
+        failure_trace: Some(path.to_string_lossy().into_owned()),
+        ..gen_cfg
+    };
+    cfg.validate().expect("trace-replay config");
+    for kind in [SchedulerKind::Fair, SchedulerKind::DeadlineVc] {
+        let trace = JobTrace::poisson(&cfg, 8, 4.0, 1.6..3.0, cfg.seed);
+        let straight = straight_report(&cfg, kind, &trace);
+        for k in [1usize, 57, 400] {
+            let Some(bytes) = snapshot_at(&cfg, kind, &trace, k) else {
+                continue;
+            };
+            let resumed = resumed_report(&cfg, &trace, &bytes);
+            assert_eq!(
+                straight,
+                resumed,
+                "{} / trace-file replay: resume from event {k} diverged",
+                kind.name()
+            );
+        }
+    }
+    let _ = std::fs::remove_file(&path);
 }
 
 /// Replay is a pure function of (config, trace, log, n): replaying to

@@ -10,7 +10,7 @@
 
 use vcsched::config::{FailureModel, SimConfig};
 use vcsched::coordinator::{run_simulation, Report};
-use vcsched::harness::{aggregate, aggregates_csv, run_sweep, sweep_json, ScenarioGrid};
+use vcsched::harness::{aggregate, aggregates_csv, run_sweep, sweep_json, FailureSpec, ScenarioGrid};
 use vcsched::scheduler::SchedulerKind;
 use vcsched::workloads::trace::JobTrace;
 use vcsched::workloads::{JobSpec, JobType};
@@ -204,9 +204,9 @@ fn failure_sweep_is_thread_count_invariant() {
     g.scales = vec![16.0];
     g.mixes.truncate(1);
     g.failures = vec![
-        FailureModel::off(),
-        FailureModel::crash_low(),
-        FailureModel::crash_low().with_speculation(),
+        FailureSpec::off(),
+        FailureSpec::Preset(FailureModel::crash_low()),
+        FailureSpec::Preset(FailureModel::crash_low().with_speculation()),
     ];
     let render = |threads: usize| {
         let results = run_sweep(&g, threads);
@@ -222,4 +222,174 @@ fn failure_sweep_is_thread_count_invariant() {
     assert_eq!(csv1, csv2, "sweep CSV must not depend on thread count");
     assert!(json1.contains("\"failures\":"));
     assert!(csv1.contains(",crash-low,") || csv1.contains(",crash-low\n"));
+}
+
+#[test]
+fn reduce_speculation_races_resolve_exactly_once() {
+    // Reduce-side LATE: every job carries >= 4 reducers, so with heavy
+    // stragglers and spec_min_finished 1 some running reduce falls behind
+    // a finished sibling by the slowdown factor and gets a backup copy.
+    // The same exactly-once accounting as the map side must hold.
+    let mut cfg = SimConfig::small();
+    cfg.failures = FailureModel {
+        straggler_prob: 0.30,
+        straggler_alpha: 1.1,
+        straggler_cap: 10.0,
+        speculation: true,
+        spec_slowdown: 1.2,
+        spec_min_finished: 1,
+        ..FailureModel::off()
+    };
+    cfg.validate().unwrap();
+    for kind in SchedulerKind::ALL {
+        let r = run(&cfg, kind, crash_prone_jobs(8));
+        assert_eq!(r.completed_jobs(), 8, "{}", kind.name());
+        let f = &r.failures;
+        assert!(
+            f.speculative_reduce_launches > 0,
+            "{}: 30% stragglers across >=32 reduces must speculate ({f:?})",
+            kind.name()
+        );
+        assert!(
+            f.speculative_reduce_wins <= f.speculative_reduce_kills,
+            "{}: every won race kills the loser ({f:?})",
+            kind.name()
+        );
+        assert!(
+            f.speculative_reduce_kills <= f.speculative_reduce_launches,
+            "{}: {f:?}",
+            kind.name()
+        );
+        for j in r.job_records() {
+            assert_eq!(
+                j.local_maps + j.rack_maps + j.remote_maps,
+                j.maps,
+                "{}: reduce races must not disturb map accounting",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// A rack-correlated outage model aggressive enough that outages are
+/// guaranteed to land inside a short run's makespan (the shipping
+/// `rack-outage` preset uses a gentler per-rack MTBF).
+fn frequent_rack_outages() -> FailureModel {
+    FailureModel {
+        rack_correlated: true,
+        pm_mtbf_s: 300.0,
+        pm_repair_s: 60.0,
+        trace_horizon_s: 4.0 * 3600.0,
+        ..FailureModel::off()
+    }
+}
+
+#[test]
+fn rack_outage_crashes_whole_racks_and_jobs_survive() {
+    // Rack-correlated injection takes entire racks down together; the
+    // crash counter lands in whole-rack multiples and every job still
+    // finishes through re-execution.
+    let mut cfg = SimConfig::small();
+    cfg.topology = vcsched::cluster::Topology::Racks(2);
+    cfg.failures = frequent_rack_outages();
+    cfg.validate().unwrap();
+    // small(): 4 PMs over 2 racks (pm % rack) = 2 PMs per rack.
+    let pms_per_rack = (cfg.pms / 2) as u64;
+    for kind in [SchedulerKind::Fair, SchedulerKind::DeadlineVc] {
+        let r = run(&cfg, kind, crash_prone_jobs(8));
+        assert_eq!(r.completed_jobs(), 8, "{}", kind.name());
+        assert!(r.failures.pm_crashes > 0, "{}: outages must land", kind.name());
+        assert_eq!(
+            r.failures.pm_crashes % pms_per_rack,
+            0,
+            "{}: rack-correlated crashes come in whole racks ({:?})",
+            kind.name(),
+            r.failures
+        );
+    }
+}
+
+#[test]
+fn blacklist_and_replan_survive_outages_and_stay_inert_without_crashes() {
+    // With rack outages on, the reactive policies must keep every job
+    // finishing (they only re-route/re-plan, never drop work), bitwise
+    // deterministically. The 300s-MTBF model re-crashes racks well inside
+    // the 3600s blacklist window, so the K=2 trigger genuinely fires.
+    let mut cfg = SimConfig::small();
+    cfg.topology = vcsched::cluster::Topology::Racks(2);
+    for fm in [
+        frequent_rack_outages().with_blacklist(),
+        frequent_rack_outages().with_replan(),
+    ] {
+        cfg.failures = fm;
+        cfg.validate().unwrap();
+        for kind in SchedulerKind::ALL {
+            let r = run(&cfg, kind, crash_prone_jobs(8));
+            assert_eq!(
+                r.completed_jobs(),
+                8,
+                "{} under {}: reactive policies must not lose jobs",
+                kind.name(),
+                fm.label()
+            );
+            let r2 = run(&cfg, kind, crash_prone_jobs(8));
+            assert_eq!(r.to_json().render(), r2.to_json().render());
+        }
+    }
+
+    // Without crashes the policy flags are guaranteed no-ops: the ledger
+    // stays empty and live supply never shrinks, so the report is
+    // byte-identical to the plain failure-free run.
+    let base = SimConfig::small();
+    let mut flagged = base.clone();
+    flagged.failures.blacklist = true;
+    flagged.failures.replan = true;
+    flagged.validate().unwrap();
+    for kind in SchedulerKind::ALL {
+        let a = run(&base, kind, crash_prone_jobs(6));
+        let b = run(&flagged, kind, crash_prone_jobs(6));
+        assert_eq!(
+            a.to_json().render(),
+            b.to_json().render(),
+            "{}: blacklist/replan without crashes must change nothing",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn failure_trace_replay_reproduces_the_generator_run() {
+    // Round-trip contract: write the generator's crash timeline to a
+    // file, replay it via cfg.failure_trace, and the whole report is
+    // byte-identical — the file *is* the failure schedule.
+    use vcsched::workloads::trace::{failure_trace, write_failure_trace_file};
+    let mut gen_cfg = SimConfig::small();
+    gen_cfg.topology = vcsched::cluster::Topology::Racks(2);
+    gen_cfg.failures = frequent_rack_outages();
+    gen_cfg.validate().unwrap();
+
+    let pm_racks: Vec<u32> = (0..gen_cfg.pms).map(|p| gen_cfg.pm_rack(p)).collect();
+    let events = failure_trace(&gen_cfg.failures, gen_cfg.seed, &pm_racks);
+    assert!(!events.is_empty(), "rack-outage must generate crashes");
+    let path = std::env::temp_dir().join(format!(
+        "vcsched-failure-replay-{}.trace",
+        std::process::id()
+    ));
+    write_failure_trace_file(&path, &events).unwrap();
+
+    let mut replay_cfg = gen_cfg.clone();
+    replay_cfg.failures = FailureModel::off();
+    replay_cfg.failure_trace = Some(path.to_str().unwrap().to_string());
+    replay_cfg.validate().unwrap();
+    for kind in [SchedulerKind::Fair, SchedulerKind::DeadlineVc] {
+        let a = run(&gen_cfg, kind, crash_prone_jobs(8));
+        let b = run(&replay_cfg, kind, crash_prone_jobs(8));
+        assert_eq!(
+            a.to_json().render(),
+            b.to_json().render(),
+            "{}: trace replay must reproduce the generator bit-for-bit",
+            kind.name()
+        );
+    }
+    let _ = std::fs::remove_file(&path);
 }
